@@ -1,0 +1,124 @@
+//! END-TO-END driver: the full three-layer stack on a real small workload.
+//!
+//! Trains ℓ1-regularized logistic regression AND ℓ2-SVM on the dense
+//! gisette-analog (600 × 500, ~99% dense, correlated features — the
+//! paper's hardest regime for parallel CD) with PCDN where every bundle's
+//! numerics run through the AOT pipeline:
+//!
+//!   L1 Pallas kernels → L2 JAX graphs → `make artifacts` (HLO text)
+//!   → rust PJRT runtime (this binary) → bundle steps + Armijo probes.
+//!
+//! Logs the loss curve, cross-checks the final objective against the
+//! native f64 solver, and writes `bench_out/e2e_loss_curve.csv`. The run is
+//! recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pjrt_train
+//! ```
+
+use pcdn::coordinator::metrics::Table;
+use pcdn::data::registry;
+use pcdn::loss::Objective;
+use pcdn::runtime::{dense_trainer::train_dense_pjrt, PjrtRuntime};
+use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+
+fn main() -> anyhow::Result<()> {
+    let dir = PjrtRuntime::default_dir();
+    let rt = PjrtRuntime::cpu(&dir).map_err(|e| {
+        anyhow::anyhow!("{e:#}\nhint: run `make artifacts` first")
+    })?;
+    println!(
+        "PJRT runtime up: platform = cpu, {} artifacts from {}",
+        rt.manifest.entries.len(),
+        dir.display()
+    );
+
+    let analog = registry::by_name("gisette").expect("registry dataset");
+    let train = analog.train();
+    let test = analog.test();
+    println!(
+        "dataset {}: {} × {} ({:.1}% dense), the paper's correlated-dense regime",
+        train.name,
+        train.samples(),
+        train.features(),
+        (1.0 - train.sparsity()) * 100.0
+    );
+
+    let mut curve = Table::new(
+        "e2e loss curve (three-layer PJRT path)",
+        &["objective_fn", "outer_iter", "sim_secs", "objective", "nnz", "test_acc"],
+    );
+
+    for (obj, c, p) in [
+        (Objective::Logistic, analog.c_logistic, 20),
+        (Objective::L2Svm, analog.c_svm, 15),
+    ] {
+        println!("\n=== {obj:?} (c = {c}, P = {p} — paper Table 3 P*) ===");
+        let opts = TrainOptions {
+            c,
+            bundle_size: p,
+            stop: StopRule::SubgradRel(1e-3),
+            max_outer: 120,
+            trace_every: 1,
+            eval_test: Some(std::sync::Arc::new(test.clone())),
+            ..TrainOptions::default()
+        };
+        let r = train_dense_pjrt(&rt, &train, obj, &opts)?;
+        for tp in &r.trace {
+            curve.push(vec![
+                format!("{obj:?}").into(),
+                tp.outer_iter.into(),
+                tp.secs.into(),
+                tp.objective.into(),
+                tp.nnz.into(),
+                tp.accuracy
+                    .map(pcdn::coordinator::metrics::Cell::from)
+                    .unwrap_or(pcdn::coordinator::metrics::Cell::Empty),
+            ]);
+        }
+        // Print a compact loss curve.
+        let stride = (r.trace.len() / 10).max(1);
+        for tp in r.trace.iter().step_by(stride) {
+            println!(
+                "  outer {:>4}  F = {:>12.6}  nnz = {:>4}  acc = {}",
+                tp.outer_iter,
+                tp.objective,
+                tp.nnz,
+                tp.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default()
+            );
+        }
+        println!(
+            "  PJRT path : F = {:.6}, nnz = {}, {} outer iters, {} probes, {:.2}s, converged = {}",
+            r.final_objective,
+            r.model_nnz(),
+            r.outer_iters,
+            r.ls_steps,
+            r.wall_secs,
+            r.converged
+        );
+
+        // Cross-check: native f64 PCDN must land on the same optimum.
+        let native = Pcdn::new().train(&train, obj, &opts);
+        let rel = (r.final_objective - native.final_objective).abs()
+            / native.final_objective.max(1e-12);
+        println!(
+            "  native f64: F = {:.6}  (relative gap {rel:.2e})",
+            native.final_objective
+        );
+        assert!(
+            rel < 5e-3,
+            "three-layer path diverged from native solver: {rel}"
+        );
+        assert!(r.converged, "PJRT path did not converge");
+        println!(
+            "  test accuracy: pjrt = {:.4}, native = {:.4}",
+            test.accuracy(&r.w),
+            test.accuracy(&native.w)
+        );
+    }
+
+    curve.write_csv("bench_out", "e2e_loss_curve")?;
+    println!("\nloss curves written to bench_out/e2e_loss_curve.csv");
+    println!("e2e OK: all three layers compose (Pallas → JAX → HLO → PJRT → rust)");
+    Ok(())
+}

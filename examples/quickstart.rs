@@ -1,0 +1,54 @@
+//! Quickstart: train ℓ1-regularized logistic regression with PCDN on the
+//! a9a analog dataset and report objective, sparsity, and test accuracy.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use pcdn::data::registry;
+use pcdn::loss::Objective;
+use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+
+fn main() {
+    // 1. Get a dataset. The registry ships seeded synthetic analogs of the
+    //    paper's six LIBSVM benchmarks (DESIGN.md §3); swap in
+    //    `pcdn::data::libsvm::read_file("path", None)` for real data.
+    let analog = registry::by_name("a9a").expect("registry dataset");
+    let train = analog.train();
+    let test = analog.test();
+    println!(
+        "dataset {}: {} samples × {} features, {:.1}% sparse",
+        train.name,
+        train.samples(),
+        train.features(),
+        train.sparsity() * 100.0
+    );
+
+    // 2. Configure PCDN: bundle size P is the parallelism knob; the paper
+    //    uses P* = 123 for a9a logistic (Table 3).
+    let opts = TrainOptions {
+        c: analog.c_logistic,
+        bundle_size: 123,
+        stop: StopRule::SubgradRel(1e-4),
+        max_outer: 500,
+        ..TrainOptions::default()
+    };
+
+    // 3. Train.
+    let result = Pcdn::new().train(&train, Objective::Logistic, &opts);
+    println!(
+        "PCDN: F(w) = {:.6}, ||w||_0 = {}/{}, outer iters = {}, \
+         line-search steps = {}, {:.2}s",
+        result.final_objective,
+        result.model_nnz(),
+        train.features(),
+        result.outer_iters,
+        result.ls_steps,
+        result.wall_secs
+    );
+    assert!(result.converged, "did not converge — try more iterations");
+
+    // 4. Evaluate.
+    println!("train accuracy = {:.4}", train.accuracy(&result.w));
+    println!("test  accuracy = {:.4}", test.accuracy(&result.w));
+}

@@ -1,0 +1,132 @@
+//! Scaling study: how PCDN behaves as bundle size, core count, and data
+//! size grow (paper §5.4 + Fig. 2). Prints compact tables; the bench
+//! harness (`cargo bench --bench figures`) produces the full CSVs.
+//!
+//! ```sh
+//! cargo run --release --example scaling [-- --dataset real-sim]
+//! ```
+
+use pcdn::coordinator::experiments::{reference_fstar, ExpOptions};
+use pcdn::data::registry;
+use pcdn::loss::Objective;
+use pcdn::parallel::sim::{self, SimParams};
+use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+use pcdn::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("scaling", "PCDN scaling study")
+        .opt("dataset", Some("a9a"), "registry analog name")
+        .opt("eps", Some("1e-3"), "relative function-value accuracy");
+    let args = cli.parse();
+    let name = args.get("dataset").unwrap();
+    let eps = args.f64("eps").unwrap();
+
+    let analog = registry::by_name(name).expect("unknown analog");
+    let train = analog.train();
+    let exp = ExpOptions::default();
+    let fstar = reference_fstar(&train, Objective::Logistic, analog.c_logistic, &exp);
+    println!(
+        "dataset {}: {} × {}, F* = {:.6}, target ε = {eps}",
+        train.name,
+        train.samples(),
+        train.features(),
+        fstar
+    );
+
+    // --- 1. bundle-size scaling (Fig. 2 / Eq. 19) -----------------------
+    println!("\nbundle-size scaling (23 modeled threads):");
+    println!("{:>6} {:>12} {:>12} {:>14} {:>10}", "P", "inner iters", "E[q_t]", "sim time (s)", "wall (s)");
+    let n = train.features();
+    let mut p = 1usize;
+    let mut recorded = None;
+    while p <= n {
+        let opts = TrainOptions {
+            c: analog.c_logistic,
+            bundle_size: p,
+            stop: StopRule::RelFuncDiff { fstar, eps },
+            max_outer: 2000,
+            record_iters: true,
+            ..TrainOptions::default()
+        };
+        let r = Pcdn::new().train(&train, Objective::Logistic, &opts);
+        let sim_t = sim::total_time(
+            &r.iter_records,
+            &SimParams {
+                n_threads: 23,
+                barrier_secs: 2e-6,
+            },
+        );
+        println!(
+            "{:>6} {:>12} {:>12.2} {:>14.4} {:>10.3}",
+            p,
+            r.inner_iters,
+            r.ls_steps as f64 / r.inner_iters.max(1) as f64,
+            sim_t,
+            r.wall_secs
+        );
+        if p * 4 > n && recorded.is_none() {
+            recorded = Some(r);
+        }
+        p *= 4;
+    }
+
+    // --- 2. core-count scaling (Fig. 6) ---------------------------------
+    let r = recorded.expect("at least one recorded run");
+    println!("\ncore-count scaling (replaying the P = {} run):", r.iter_records.first().map(|x| x.bundle_size).unwrap_or(0));
+    println!("{:>8} {:>14} {:>10}", "threads", "sim time (s)", "speedup");
+    let t1 = sim::total_time(
+        &r.iter_records,
+        &SimParams {
+            n_threads: 1,
+            barrier_secs: 2e-6,
+        },
+    );
+    for nt in [1usize, 2, 4, 8, 16, 23] {
+        let t = sim::total_time(
+            &r.iter_records,
+            &SimParams {
+                n_threads: nt,
+                barrier_secs: 2e-6,
+            },
+        );
+        println!("{:>8} {:>14.4} {:>10.2}", nt, t, t1 / t.max(1e-12));
+    }
+
+    // --- 3. data-size scaling (Fig. 5) -----------------------------------
+    println!("\ndata-size scaling (sample duplication, speedup vs CDN):");
+    println!("{:>6} {:>10} {:>12}", "dup", "samples", "speedup");
+    for f in [1usize, 2, 4] {
+        let d = train.duplicate(f);
+        let fstar_d = reference_fstar(&d, Objective::Logistic, analog.c_logistic, &exp);
+        let stop = StopRule::RelFuncDiff {
+            fstar: fstar_d,
+            eps,
+        };
+        let mut o = TrainOptions {
+            c: analog.c_logistic,
+            bundle_size: (n / 2).max(1),
+            stop,
+            max_outer: 1000,
+            record_iters: true,
+            ..TrainOptions::default()
+        };
+        let rp = Pcdn::new().train(&d, Objective::Logistic, &o);
+        o.bundle_size = 1;
+        let rc = pcdn::solver::cdn::Cdn::new().train(&d, Objective::Logistic, &o);
+        let tp = sim::total_time(
+            &rp.iter_records,
+            &SimParams {
+                n_threads: 23,
+                barrier_secs: 2e-6,
+            },
+        );
+        let tc = sim::total_time(
+            &rc.iter_records,
+            &SimParams {
+                n_threads: 1,
+                barrier_secs: 0.0,
+            },
+        );
+        println!("{:>6} {:>10} {:>12.2}", f, d.samples(), tc / tp.max(1e-12));
+    }
+}

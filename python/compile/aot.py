@@ -1,0 +1,162 @@
+"""AOT driver: lower the L2 graphs to HLO text + manifest for the rust
+runtime.
+
+HLO *text* (not a serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (normally via ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--configs 1024x32,1024x128,2048x64]
+
+Each config ``SxP`` produces four artifacts (bundle_step / ls_probe for the
+two objectives), shape-specialized to ``s`` padded samples and ``p`` padded
+bundle width. ``artifacts/manifest.json`` indexes them for
+``rust/src/runtime/manifest.rs``.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Pad quantum for the sample dimension: lcm of the bundle kernel's 256-row
+# tile and the line-search kernel's 1024-row tile.
+S_QUANTUM = 1024
+DEFAULT_CONFIGS = "1024x32,1024x128,2048x64"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for the loader)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def graph_signatures(s: int, p: int):
+    """(name → (fn, input specs, input names, output names)) for one config."""
+    xb = _spec((s, p))
+    vec_s = _spec((s,))
+    vec_p = _spec((p,))
+    one = _spec((1,))
+    return {
+        "bundle_step_logistic": (
+            model.bundle_step_logistic,
+            [xb, vec_s, vec_s, vec_p, vec_p, one],
+            ["xb", "y", "wx", "w_b", "active", "c"],
+            ["d", "delta", "xd", "grad", "hess"],
+        ),
+        "bundle_step_svm": (
+            model.bundle_step_svm,
+            [xb, vec_s, vec_s, vec_p, vec_p, one],
+            ["xb", "y", "b", "w_b", "active", "c"],
+            ["d", "delta", "xd", "grad", "hess"],
+        ),
+        "ls_probe_logistic": (
+            model.ls_probe_logistic,
+            [vec_s, vec_s, vec_s, vec_p, vec_p, one, one],
+            ["wx", "xd", "y", "w_b", "d_b", "alpha", "c"],
+            ["obj_delta"],
+        ),
+        "ls_probe_svm": (
+            model.ls_probe_svm,
+            [vec_s, vec_s, vec_s, vec_p, vec_p, one, one],
+            ["b", "xd", "y", "w_b", "d_b", "alpha", "c"],
+            ["obj_delta"],
+        ),
+        # §Perf reference twin (pure-jnp, no Pallas) — see model.py docs.
+        "bundle_step_logistic_jnp": (
+            model.bundle_step_logistic_jnp,
+            [xb, vec_s, vec_s, vec_p, vec_p, one],
+            ["xb", "y", "wx", "w_b", "active", "c"],
+            ["d", "delta", "xd", "grad", "hess"],
+        ),
+    }
+
+
+def lower_one(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def parse_configs(text: str):
+    configs = []
+    for tok in text.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        s_str, p_str = tok.lower().split("x")
+        s, p = int(s_str), int(p_str)
+        if s % S_QUANTUM != 0:
+            raise ValueError(f"config {tok}: s must be a multiple of {S_QUANTUM}")
+        if p < 1:
+            raise ValueError(f"config {tok}: p must be positive")
+        configs.append((s, p))
+    return configs
+
+
+def build(out_dir: str, configs) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for s, p in configs:
+        for name, (fn, specs, in_names, out_names) in graph_signatures(s, p).items():
+            hlo = lower_one(fn, specs)
+            fname = f"{name}_s{s}_p{p}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            entries.append(
+                {
+                    "name": name,
+                    "s": s,
+                    "p": p,
+                    "file": fname,
+                    "inputs": [
+                        {
+                            "name": n,
+                            "shape": list(sp.shape),
+                            "dtype": "f32",
+                        }
+                        for n, sp in zip(in_names, specs)
+                    ],
+                    "outputs": out_names,
+                }
+            )
+            print(f"  wrote {fname} ({len(hlo)} chars)", file=sys.stderr)
+    manifest = {
+        "version": 1,
+        "s_quantum": S_QUANTUM,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=DEFAULT_CONFIGS)
+    args = ap.parse_args()
+    configs = parse_configs(args.configs)
+    manifest = build(args.out_dir, configs)
+    print(
+        f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 Pallas kernels: the per-bundle compute hot-spot.
+
+The paper's OpenMP hot loop — per-feature gradient/Hessian over the bundle
+(Alg. 3 step 8) and the ``dᵀx_i`` update (Alg. 4 step 1) — re-thought for the
+TPU memory hierarchy (DESIGN.md §Hardware-Adaptation):
+
+* instead of P scalar column loops on P cores, the bundle block
+  ``X_B ∈ R^{s×P}`` is tiled ``(S_TILE, P)`` through VMEM and the gradient /
+  Hessian-diagonal become two fused reductions per tile,
+  ``grad += X_Bᵀu`` (an MXU matvec) and ``hess += (X_B⊙X_B)ᵀv`` (VPU
+  square + MXU matvec);
+* ``Xd = X_B d`` is the same tile schedule in the other direction.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO (numerically identical); the
+BlockSpec structure is what a real TPU build would reuse.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM tile. At f32 a (256, P≤512) block is ≤ 512 KiB — comfortably
+# inside the ~16 MiB VMEM budget together with the factor vectors and the
+# (P,) accumulators; large enough to keep the MXU matvec efficient.
+S_TILE = 256
+
+
+def _grad_hess_kernel(xb_ref, u_ref, v_ref, grad_ref, hess_ref):
+    """One (S_TILE, P) tile: accumulate both reductions.
+
+    grad/hess blocks map every grid step to the same (P,) output block, so
+    they act as VMEM accumulators across the sample tiles.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+        hess_ref[...] = jnp.zeros_like(hess_ref)
+
+    xb = xb_ref[...]
+    grad_ref[...] += xb.T @ u_ref[...]
+    hess_ref[...] += (xb * xb).T @ v_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bundle_grad_hess(xb, u, v):
+    """``(grad_B, hess_B) = (X_Bᵀu, (X_B⊙X_B)ᵀv)`` via the Pallas kernel.
+
+    Shapes: ``xb (s, p)``, ``u (s,)``, ``v (s,)`` with ``s % S_TILE == 0``
+    (the AOT driver pads); returns two ``(p,)`` vectors.
+    """
+    s, p = xb.shape
+    assert s % S_TILE == 0, f"s={s} must be a multiple of S_TILE={S_TILE}"
+    grid = (s // S_TILE,)
+    return pl.pallas_call(
+        _grad_hess_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((S_TILE, p), lambda i: (i, 0)),
+            pl.BlockSpec((S_TILE,), lambda i: (i,)),
+            pl.BlockSpec((S_TILE,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p,), lambda i: (0,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), xb.dtype),
+            jax.ShapeDtypeStruct((p,), xb.dtype),
+        ],
+        interpret=True,
+    )(xb, u, v)
+
+
+def _xd_kernel(xb_ref, d_ref, xd_ref):
+    """One (S_TILE, P) tile of ``Xd = X_B d`` (Alg. 4 step 1, DOP = P)."""
+    xd_ref[...] = xb_ref[...] @ d_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bundle_xd(xb, d):
+    """``Xd_i = Σ_j d_j·x_ij`` via the Pallas kernel; ``xd (s,)``."""
+    s, p = xb.shape
+    assert s % S_TILE == 0, f"s={s} must be a multiple of S_TILE={S_TILE}"
+    grid = (s // S_TILE,)
+    return pl.pallas_call(
+        _xd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((S_TILE, p), lambda i: (i, 0)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((S_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s,), xb.dtype),
+        interpret=True,
+    )(xb, d)

@@ -1,0 +1,94 @@
+"""L1 Pallas kernels for the Armijo line-search probe (paper Eq. 11).
+
+One probe evaluates ``L(w + α·d) − L(w)`` from the maintained per-sample
+quantities only — never touching the design matrix. On TPU this is a pure
+VPU streaming reduction over the sample dimension: tiles of the margin and
+``Xd`` vectors flow HBM→VMEM, a scalar accumulator lives in the output
+block. The ℓ1 part of the probe involves only the (P,) bundle vectors and is
+fused into the same jitted graph at the L2 layer (`model.py`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Samples per tile for the streaming reductions (f32: 4 KiB per vector
+# operand per tile — latency-bound; a larger tile just trades VMEM).
+S_TILE = 1024
+
+
+def _logistic_delta_kernel(wx_ref, xd_ref, y_ref, alpha_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    y = y_ref[...]
+    old = -y * wx_ref[...]
+    new = old - y * alpha_ref[0] * xd_ref[...]
+    out_ref[...] += jnp.sum(jax.nn.softplus(new) - jax.nn.softplus(old))[None]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def logistic_delta_loss(wx, xd, y, alpha, c):
+    """``c·Σ_i [softplus(−y(wx+α·xd)) − softplus(−y·wx)]`` (scalar).
+
+    ``alpha`` is a shape-(1,) array so one compiled executable serves every
+    backtracking step. Padded samples (wx = xd = 0) contribute exactly 0.
+    """
+    s = wx.shape[0]
+    assert s % S_TILE == 0, f"s={s} must be a multiple of S_TILE={S_TILE}"
+    grid = (s // S_TILE,)
+    total = pl.pallas_call(
+        _logistic_delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((S_TILE,), lambda i: (i,)),
+            pl.BlockSpec((S_TILE,), lambda i: (i,)),
+            pl.BlockSpec((S_TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), wx.dtype),
+        interpret=True,
+    )(wx, xd, y, alpha)
+    return c * total[0]
+
+
+def _svm_delta_kernel(b_ref, xd_ref, y_ref, alpha_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    b = b_ref[...]
+    new = b - y_ref[...] * alpha_ref[0] * xd_ref[...]
+    o2 = jnp.square(jnp.maximum(b, 0.0))
+    n2 = jnp.square(jnp.maximum(new, 0.0))
+    out_ref[...] += jnp.sum(n2 - o2)[None]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def svm_delta_loss(b, xd, y, alpha, c):
+    """``c·Σ_i [max(0, b−y·α·xd)² − max(0, b)²]`` (scalar)."""
+    s = b.shape[0]
+    assert s % S_TILE == 0, f"s={s} must be a multiple of S_TILE={S_TILE}"
+    grid = (s // S_TILE,)
+    total = pl.pallas_call(
+        _svm_delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((S_TILE,), lambda i: (i,)),
+            pl.BlockSpec((S_TILE,), lambda i: (i,)),
+            pl.BlockSpec((S_TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), b.dtype),
+        interpret=True,
+    )(b, xd, y, alpha)
+    return c * total[0]

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 bundle step.
+
+Everything here is the *specification*: straightforward, unfused jnp code
+mirroring the paper's equations. The Pallas kernels (``bundle.py``, ``ls.py``)
+and the composed model functions (``model.py``) are tested against these by
+``python/tests`` (same dtypes, assert_allclose).
+"""
+
+import jax.nn
+import jax.numpy as jnp
+
+NU = 1e-12  # Hessian floor (paper footnote 1)
+
+
+# ---------------------------------------------------------------- kernels
+
+def bundle_grad_hess(xb, u, v):
+    """grad_B = X_Bᵀu, hess_B = (X_B ⊙ X_B)ᵀ v (paper Eq. 12, factored).
+
+    xb: (s, p) dense bundle block; u, v: (s,) per-sample factors.
+    Returns (grad (p,), hess (p,)).
+    """
+    grad = xb.T @ u
+    hess = (xb * xb).T @ v
+    return grad, hess
+
+
+def bundle_xd(xb, d):
+    """Xd_i = Σ_j d_j x_ij — the dᵀx_i of Algorithm 4 step 1."""
+    return xb @ d
+
+
+# ------------------------------------------------------------- direction
+
+def newton_direction(grad, hess, w):
+    """Soft-thresholded Newton step, Eq. 5 (elementwise over the bundle)."""
+    hw = hess * w
+    d_up = -(grad + 1.0) / hess
+    d_dn = -(grad - 1.0) / hess
+    return jnp.where(
+        grad + 1.0 <= hw, d_up, jnp.where(grad - 1.0 >= hw, d_dn, -w)
+    )
+
+
+def delta_value(grad, hess, w, d, gamma=0.0):
+    """Δ of Eq. 7 restricted to the bundle (d = 0 elsewhere)."""
+    return (
+        jnp.sum(grad * d)
+        + gamma * jnp.sum(d * hess * d)
+        + jnp.sum(jnp.abs(w + d) - jnp.abs(w))
+    )
+
+
+# ------------------------------------------------------ logistic factors
+
+def logistic_factors(wx, y, c):
+    """Per-sample grad/hess factors from maintained margins (Eq. 12).
+
+    grad_factor_i = c·(τ(y_i wx_i) − 1)·y_i = −c·y_i·σ(−y_i wx_i)
+    hess_factor_i = c·σ(wx_i)·σ(−wx_i)
+    """
+    u = -y * jax.nn.sigmoid(-y * wx) * c
+    v = jax.nn.sigmoid(wx) * jax.nn.sigmoid(-wx) * c
+    return u, v
+
+
+def logistic_loss(wx, y, c):
+    """L(w) = c·Σ log(1 + e^{−y·wx}) (Eq. 2)."""
+    return c * jnp.sum(jax.nn.softplus(-y * wx))
+
+
+def logistic_delta_loss(wx, xd, y, alpha, c):
+    """L(w + αd) − L(w) from maintained quantities (Eq. 11 on margins)."""
+    old = -y * wx
+    new = old - y * alpha * xd
+    return c * jnp.sum(jax.nn.softplus(new) - jax.nn.softplus(old))
+
+
+# ----------------------------------------------------------- svm factors
+
+def svm_factors(b, y, c):
+    """ℓ2-SVM factors from maintained b_i = 1 − y_i·wx_i (active set only)."""
+    active = b > 0.0
+    u = jnp.where(active, -2.0 * y * b, 0.0) * c
+    v = jnp.where(active, 2.0, 0.0) * c
+    return u, v
+
+
+def svm_loss(b, c):
+    """L(w) = c·Σ max(0, b_i)² (Eq. 3)."""
+    return c * jnp.sum(jnp.square(jnp.maximum(b, 0.0)))
+
+
+def svm_delta_loss(b, xd, y, alpha, c):
+    """L(w + αd) − L(w): b moves by −y·α·xd."""
+    new = b - y * alpha * xd
+    return c * jnp.sum(
+        jnp.square(jnp.maximum(new, 0.0)) - jnp.square(jnp.maximum(b, 0.0))
+    )
+
+
+def l1_delta(w_b, d_b, alpha):
+    """Σ_j |w_j + α·d_j| − |w_j| over the bundle."""
+    return jnp.sum(jnp.abs(w_b + alpha * d_b) - jnp.abs(w_b))

@@ -1,0 +1,103 @@
+"""L2: the per-bundle compute graphs in JAX, composing the L1 kernels.
+
+Two graphs per objective, mirroring the split the rust coordinator needs
+(Algorithm 3 step 8 + Algorithm 4):
+
+* ``bundle_step_*`` — given the dense bundle block ``X_B``, labels, the
+  maintained per-sample quantity and the bundle weights: compute per-sample
+  factors, run the L1 grad/hess kernel, take the soft-thresholded Newton
+  direction (Eq. 5), the Armijo ``Δ`` (Eq. 7, γ = 0 as in §5.1), and
+  ``Xd = X_B d`` (L1 kernel). One PJRT call per bundle iteration.
+* ``ls_probe_*`` — one Armijo probe: ``F_c(w + α·d) − F_c(w)`` from the
+  maintained quantities + the bundle's ℓ1 terms (Eq. 11). One PJRT call per
+  backtracking step; `α` is an input so a single executable serves all
+  steps.
+
+The regularization parameter ``c`` and the probe step ``α`` are runtime
+inputs (shape-(1,) arrays), so the artifacts are shape-specialized only in
+``(s, p)``.
+
+Everything is f32: the PJRT path trades a little precision for MXU-friendly
+layouts; the rust coordinator cross-checks it against the f64 native path
+in its integration tests (tolerance 1e-4).
+"""
+
+import jax.nn
+import jax.numpy as jnp
+
+from .kernels import bundle as kb
+from .kernels import ls as kls
+from .kernels.ref import NU
+
+
+def _direction_and_delta(grad, hess, w_b, active):
+    """Eq. 5 + Eq. 7(γ=0) on the bundle; `active` masks padded features."""
+    hess = jnp.maximum(hess, NU)
+    hw = hess * w_b
+    d = jnp.where(
+        grad + 1.0 <= hw,
+        -(grad + 1.0) / hess,
+        jnp.where(grad - 1.0 >= hw, -(grad - 1.0) / hess, -w_b),
+    )
+    d = jnp.where(active, d, 0.0)
+    delta = jnp.sum(grad * d) + jnp.sum(jnp.abs(w_b + d) - jnp.abs(w_b))
+    return d, delta
+
+
+def bundle_step_logistic(xb, y, wx, w_b, active, c):
+    """Logistic bundle step.
+
+    Inputs: ``xb (s,p)``, ``y (s,)`` in {−1,+1} (pad: +1), ``wx (s,)``
+    maintained margins (pad: 0), ``w_b (p,)`` bundle weights (pad: 0),
+    ``active (p,)`` f32 mask of real features, ``c (1,)``.
+    Returns ``(d (p,), delta (1,), xd (s,), grad (p,), hess (p,))``.
+    """
+    cc = c[0]
+    u = -y * jax.nn.sigmoid(-y * wx) * cc
+    v = jax.nn.sigmoid(wx) * jax.nn.sigmoid(-wx) * cc
+    grad, hess = kb.bundle_grad_hess(xb, u, v)
+    d, delta = _direction_and_delta(grad, hess, w_b, active > 0.5)
+    xd = kb.bundle_xd(xb, d)
+    return d, delta[None], xd, grad, hess
+
+
+def bundle_step_svm(xb, y, b, w_b, active, c):
+    """ℓ2-SVM bundle step. ``b (s,)`` is the maintained 1 − y·wx (pad: 0)."""
+    cc = c[0]
+    on = b > 0.0
+    u = jnp.where(on, -2.0 * y * b, 0.0) * cc
+    v = jnp.where(on, 2.0, 0.0) * cc
+    grad, hess = kb.bundle_grad_hess(xb, u, v)
+    d, delta = _direction_and_delta(grad, hess, w_b, active > 0.5)
+    xd = kb.bundle_xd(xb, d)
+    return d, delta[None], xd, grad, hess
+
+
+def ls_probe_logistic(wx, xd, y, w_b, d_b, alpha, c):
+    """One Armijo probe: ``F_c(w+αd) − F_c(w)`` (scalar as shape (1,))."""
+    loss = kls.logistic_delta_loss(wx, xd, y, alpha, c[0])
+    l1 = jnp.sum(jnp.abs(w_b + alpha[0] * d_b) - jnp.abs(w_b))
+    return (loss + l1)[None]
+
+
+def ls_probe_svm(b, xd, y, w_b, d_b, alpha, c):
+    """One Armijo probe for ℓ2-SVM."""
+    loss = kls.svm_delta_loss(b, xd, y, alpha, c[0])
+    l1 = jnp.sum(jnp.abs(w_b + alpha[0] * d_b) - jnp.abs(w_b))
+    return (loss + l1)[None]
+
+
+def bundle_step_logistic_jnp(xb, y, wx, w_b, active, c):
+    """Pure-jnp twin of `bundle_step_logistic` (no Pallas), kept as a §Perf
+    reference artifact: the delta between the two compiled executables
+    measures the interpret-mode Pallas tax on CPU (a real TPU build lowers
+    the Pallas kernel to Mosaic instead; see DESIGN.md §Hardware-Adaptation).
+    """
+    cc = c[0]
+    u = -y * jax.nn.sigmoid(-y * wx) * cc
+    v = jax.nn.sigmoid(wx) * jax.nn.sigmoid(-wx) * cc
+    grad = xb.T @ u
+    hess = (xb * xb).T @ v
+    d, delta = _direction_and_delta(grad, hess, w_b, active > 0.5)
+    xd = xb @ d
+    return d, delta[None], xd, grad, hess

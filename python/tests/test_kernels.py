@@ -1,0 +1,167 @@
+"""L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value regimes; assert_allclose at f32
+tolerances. This is the CORE correctness signal for the compiled artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import bundle as kb
+from compile.kernels import ls as kls
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, scale=1.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def labels(s, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return np.where(rng.random(s) < 0.5, 1.0, -1.0).astype(np.float32)
+
+
+# -------------------------------------------------------- grad/hess kernel
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    p=st.integers(1, 33),
+    seed=st.integers(0, 2**31),
+    scale=st.sampled_from([1e-3, 1.0, 10.0]),
+)
+def test_bundle_grad_hess_matches_ref(tiles, p, seed, scale):
+    s = tiles * kb.S_TILE
+    xb = rand((s, p), scale, seed)
+    u = rand((s,), 1.0, seed + 1)
+    v = np.abs(rand((s,), 1.0, seed + 2))
+    got_g, got_h = kb.bundle_grad_hess(xb, u, v)
+    ref_g, ref_h = ref.bundle_grad_hess(jnp.asarray(xb), jnp.asarray(u), jnp.asarray(v))
+    np.testing.assert_allclose(got_g, ref_g, rtol=2e-5, atol=2e-4 * scale)
+    np.testing.assert_allclose(got_h, ref_h, rtol=2e-5, atol=2e-4 * scale**2)
+
+
+def test_bundle_grad_hess_zero_factors():
+    s, p = kb.S_TILE, 8
+    xb = rand((s, p), 1.0, 1)
+    z = np.zeros(s, np.float32)
+    g, h = kb.bundle_grad_hess(xb, z, z)
+    assert np.all(g == 0) and np.all(h == 0)
+
+
+def test_bundle_grad_hess_multi_tile_accumulates():
+    # 2 tiles where the second tile's factors are zero must equal the
+    # 1-tile result on the first half.
+    p = 5
+    s = 2 * kb.S_TILE
+    xb = rand((s, p), 1.0, 2)
+    u = rand((s,), 1.0, 3)
+    v = np.abs(rand((s,), 1.0, 4))
+    u[kb.S_TILE:] = 0
+    v[kb.S_TILE:] = 0
+    g2, h2 = kb.bundle_grad_hess(xb, u, v)
+    g1, h1 = kb.bundle_grad_hess(
+        xb[: kb.S_TILE], u[: kb.S_TILE], v[: kb.S_TILE]
+    )
+    np.testing.assert_allclose(g2, g1, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(h2, h1, rtol=1e-6, atol=1e-6)
+
+
+def test_bundle_grad_hess_rejects_ragged():
+    xb = rand((kb.S_TILE + 1, 3), 1.0, 5)
+    with pytest.raises(AssertionError):
+        kb.bundle_grad_hess(xb, rand((kb.S_TILE + 1,)), rand((kb.S_TILE + 1,)))
+
+
+# --------------------------------------------------------------- Xd kernel
+
+@settings(max_examples=20, deadline=None)
+@given(tiles=st.integers(1, 3), p=st.integers(1, 17), seed=st.integers(0, 2**31))
+def test_bundle_xd_matches_ref(tiles, p, seed):
+    s = tiles * kb.S_TILE
+    xb = rand((s, p), 1.0, seed)
+    d = rand((p,), 0.5, seed + 9)
+    got = kb.bundle_xd(xb, d)
+    want = ref.bundle_xd(jnp.asarray(xb), jnp.asarray(d))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+def test_bundle_xd_zero_direction():
+    xb = rand((kb.S_TILE, 4), 1.0, 6)
+    assert np.all(np.asarray(kb.bundle_xd(xb, np.zeros(4, np.float32))) == 0)
+
+
+# ------------------------------------------------------ line-search probes
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+    alpha=st.sampled_from([1.0, 0.5, 0.25, 0.015625]),
+    c=st.sampled_from([0.25, 1.0, 8.0]),
+)
+def test_logistic_delta_matches_ref(tiles, seed, alpha, c):
+    s = tiles * kls.S_TILE
+    wx = rand((s,), 2.0, seed)
+    xd = rand((s,), 1.0, seed + 1)
+    y = labels(s, seed + 2)
+    got = kls.logistic_delta_loss(
+        wx, xd, y, np.array([alpha], np.float32), np.float32(c)
+    )
+    want = ref.logistic_delta_loss(
+        jnp.asarray(wx), jnp.asarray(xd), jnp.asarray(y), alpha, c
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+    alpha=st.sampled_from([1.0, 0.5, 0.125]),
+    c=st.sampled_from([0.5, 2.0]),
+)
+def test_svm_delta_matches_ref(tiles, seed, alpha, c):
+    s = tiles * kls.S_TILE
+    b = rand((s,), 1.5, seed)
+    xd = rand((s,), 1.0, seed + 1)
+    y = labels(s, seed + 2)
+    got = kls.svm_delta_loss(b, xd, y, np.array([alpha], np.float32), np.float32(c))
+    want = ref.svm_delta_loss(
+        jnp.asarray(b), jnp.asarray(xd), jnp.asarray(y), alpha, c
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_delta_zero_step_is_zero():
+    # XLA may split sum(n² − o²) into sum(n²) − sum(o²), so "zero" is only
+    # zero up to f32 reduction rounding over S_TILE terms.
+    s = kls.S_TILE
+    wx = rand((s,), 1.0, 7)
+    y = labels(s, 8)
+    zero = np.zeros(s, np.float32)
+    a = np.array([1.0], np.float32)
+    assert abs(float(kls.logistic_delta_loss(wx, zero, y, a, np.float32(1.0)))) < 1e-4
+    assert abs(float(kls.svm_delta_loss(wx, zero, y, a, np.float32(1.0)))) < 1e-4
+
+
+def test_padding_contributes_nothing():
+    # Padded tail: wx = xd = 0, y = +1 must add exactly 0 to the reduction.
+    s = 2 * kls.S_TILE
+    wx = np.zeros(s, np.float32)
+    xd = np.zeros(s, np.float32)
+    y = np.ones(s, np.float32)
+    wx[: kls.S_TILE] = rand((kls.S_TILE,), 1.0, 9)
+    xd[: kls.S_TILE] = rand((kls.S_TILE,), 1.0, 10)
+    a = np.array([0.5], np.float32)
+    full = kls.logistic_delta_loss(wx, xd, y, a, np.float32(1.0))
+    half = kls.logistic_delta_loss(
+        wx[: kls.S_TILE], xd[: kls.S_TILE], y[: kls.S_TILE], a, np.float32(1.0)
+    )
+    np.testing.assert_allclose(full, half, rtol=1e-6, atol=1e-6)

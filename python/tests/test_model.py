@@ -1,0 +1,149 @@
+"""L2 model graphs: the composed bundle step vs an independent numpy
+re-derivation of the paper's equations, plus shape/mask/padding contracts."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import bundle as kb
+from compile.kernels import ref
+
+S = kb.S_TILE * 4  # 1024: also a multiple of the ls kernel tile
+
+
+def make_problem(p, seed, w_scale=0.3):
+    rng = np.random.default_rng(seed)
+    xb = (rng.standard_normal((S, p)) * 0.5).astype(np.float32)
+    y = np.where(rng.random(S) < 0.5, 1.0, -1.0).astype(np.float32)
+    w_b = (rng.standard_normal(p) * w_scale).astype(np.float32)
+    wx = (rng.standard_normal(S) * 0.5).astype(np.float32)
+    active = np.ones(p, np.float32)
+    return xb, y, wx, w_b, active
+
+
+def numpy_logistic_step(xb, y, wx, w_b, c):
+    """Independent float64 numpy re-derivation (Eq. 12 → Eq. 5 → Eq. 7)."""
+    xb, y, wx, w_b = (a.astype(np.float64) for a in (xb, y, wx, w_b))
+    sig = lambda z: 1.0 / (1.0 + np.exp(-z))
+    u = -y * sig(-y * wx) * c
+    v = sig(wx) * sig(-wx) * c
+    grad = xb.T @ u
+    hess = np.maximum((xb * xb).T @ v, ref.NU)
+    d = np.where(
+        grad + 1.0 <= hess * w_b,
+        -(grad + 1.0) / hess,
+        np.where(grad - 1.0 >= hess * w_b, -(grad - 1.0) / hess, -w_b),
+    )
+    delta = np.sum(grad * d) + np.sum(np.abs(w_b + d) - np.abs(w_b))
+    xd = xb @ d
+    return d, delta, xd, grad, hess
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(1, 24), seed=st.integers(0, 2**31), c=st.sampled_from([0.25, 1.0, 4.0]))
+def test_bundle_step_logistic_matches_numpy(p, seed, c):
+    xb, y, wx, w_b, active = make_problem(p, seed)
+    d, delta, xd, grad, hess = model.bundle_step_logistic(
+        xb, y, wx, w_b, active, np.array([c], np.float32)
+    )
+    nd, ndelta, nxd, ngrad, nhess = numpy_logistic_step(xb, y, wx, w_b, c)
+    np.testing.assert_allclose(grad, ngrad, rtol=3e-4, atol=3e-3)
+    np.testing.assert_allclose(hess, nhess, rtol=3e-4, atol=3e-3)
+    np.testing.assert_allclose(d, nd, rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(float(delta[0]), ndelta, rtol=3e-3, atol=3e-2)
+    np.testing.assert_allclose(xd, nxd, rtol=3e-3, atol=3e-3)
+
+
+def test_bundle_step_shapes_and_dtypes():
+    p = 12
+    xb, y, wx, w_b, active = make_problem(p, 0)
+    outs = model.bundle_step_logistic(
+        xb, y, wx, w_b, active, np.array([1.0], np.float32)
+    )
+    d, delta, xd, grad, hess = outs
+    assert d.shape == (p,) and grad.shape == (p,) and hess.shape == (p,)
+    assert delta.shape == (1,)
+    assert xd.shape == (S,)
+    assert all(o.dtype == jnp.float32 for o in outs)
+
+
+def test_inactive_mask_freezes_padded_features():
+    p = 10
+    xb, y, wx, w_b, active = make_problem(p, 3)
+    active[6:] = 0.0  # features 6..9 are padding
+    w_b[6:] = 0.0
+    d, delta, xd, grad, hess = model.bundle_step_logistic(
+        xb, y, wx, w_b, active, np.array([1.0], np.float32)
+    )
+    assert np.all(np.asarray(d)[6:] == 0.0), "padded features must not move"
+    # xd must equal the contribution of active features only.
+    want = np.asarray(xb)[:, :6] @ np.asarray(d)[:6]
+    np.testing.assert_allclose(xd, want, rtol=1e-5, atol=1e-5)
+
+
+def test_delta_is_nonpositive():
+    # Lemma 1(c): Δ ≤ (γ−1)dᵀHd ≤ 0 at γ = 0.
+    for seed in range(5):
+        xb, y, wx, w_b, active = make_problem(8, seed)
+        d, delta, *_ = model.bundle_step_logistic(
+            xb, y, wx, w_b, active, np.array([2.0], np.float32)
+        )
+        assert float(delta[0]) <= 1e-5, f"Δ = {float(delta[0])} > 0"
+
+
+def test_probe_consistent_with_direct_objective():
+    # ls_probe(α) must equal F_c(w+αd) − F_c(w) computed from scratch.
+    p = 6
+    xb, y, wx, w_b, active = make_problem(p, 11)
+    c = np.array([1.5], np.float32)
+    d, delta, xd, *_ = model.bundle_step_logistic(xb, y, wx, w_b, active, c)
+    for alpha in [1.0, 0.5, 0.0625]:
+        got = model.ls_probe_logistic(
+            wx, np.asarray(xd), y, w_b, np.asarray(d), np.array([alpha], np.float32), c
+        )
+        # direct recompute in f64
+        wxn = wx.astype(np.float64) + alpha * np.asarray(xd, np.float64)
+        f_old = 1.5 * np.sum(np.logaddexp(0, -y * wx.astype(np.float64)))
+        f_new = 1.5 * np.sum(np.logaddexp(0, -y * wxn))
+        l1 = np.sum(
+            np.abs(w_b.astype(np.float64) + alpha * np.asarray(d, np.float64))
+            - np.abs(w_b.astype(np.float64))
+        )
+        np.testing.assert_allclose(
+            float(got[0]), (f_new - f_old) + l1, rtol=2e-3, atol=2e-2
+        )
+
+
+def test_svm_bundle_step_consistency():
+    # SVM: verify against the shared ref helpers (active-set semantics).
+    p = 9
+    rng = np.random.default_rng(21)
+    xb = (rng.standard_normal((S, p)) * 0.5).astype(np.float32)
+    y = np.where(rng.random(S) < 0.5, 1.0, -1.0).astype(np.float32)
+    b = (1.0 - rng.standard_normal(S) * 0.8).astype(np.float32)
+    w_b = (rng.standard_normal(p) * 0.2).astype(np.float32)
+    active = np.ones(p, np.float32)
+    c = np.array([0.5], np.float32)
+    d, delta, xd, grad, hess = model.bundle_step_svm(xb, y, b, w_b, active, c)
+    u, v = ref.svm_factors(jnp.asarray(b), jnp.asarray(y), 0.5)
+    rg, rh = ref.bundle_grad_hess(jnp.asarray(xb), u, v)
+    np.testing.assert_allclose(grad, rg, rtol=3e-4, atol=3e-3)
+    np.testing.assert_allclose(hess, rh, rtol=3e-4, atol=3e-3)
+    rd = ref.newton_direction(rg, jnp.maximum(rh, ref.NU), jnp.asarray(w_b))
+    np.testing.assert_allclose(d, rd, rtol=3e-3, atol=3e-3)
+
+
+def test_svm_probe_zero_alpha():
+    p = 4
+    rng = np.random.default_rng(31)
+    b = (rng.standard_normal(S)).astype(np.float32)
+    xd = (rng.standard_normal(S)).astype(np.float32)
+    y = np.where(rng.random(S) < 0.5, 1.0, -1.0).astype(np.float32)
+    w_b = np.zeros(p, np.float32)
+    d_b = np.zeros(p, np.float32)
+    got = model.ls_probe_svm(
+        b, xd, y, w_b, d_b, np.array([0.0], np.float32), np.array([1.0], np.float32)
+    )
+    assert abs(float(got[0])) < 1e-6

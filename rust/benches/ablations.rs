@@ -1,0 +1,213 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **P-dimensional line search vs per-feature search** — isolate the
+//!    paper's key mechanism by comparing PCDN with SCDN at the *same*
+//!    parallelism on correlated data (the only difference is the bundle
+//!    search).
+//! 2. **Armijo γ** (Eq. 7): γ near 1 admits larger steps (Tseng & Yun);
+//!    measure step sizes and iterations across γ.
+//! 3. **Shrinking** on/off for CDN at several regularization strengths.
+//! 4. **Partition scheme**: random (Eq. 8) vs contiguous bundles.
+//! 5. **Elastic-net λ₂**: iterations and sparsity across the ridge mix.
+//!
+//! ```sh
+//! cargo bench --bench ablations
+//! ```
+
+use pcdn::coordinator::metrics::Table;
+use pcdn::data::synthetic::{generate, SyntheticSpec};
+use pcdn::data::Dataset;
+use pcdn::loss::Objective;
+use pcdn::solver::{
+    cdn::Cdn, pcdn::Pcdn, scdn::Scdn, ArmijoParams, Solver, StopRule, TrainOptions,
+};
+
+fn correlated(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            samples: 300,
+            features: 120,
+            nnz_per_row: 60,
+            corr_groups: 6,
+            corr_strength: 0.85,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+fn spread(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            samples: 400,
+            features: 150,
+            nnz_per_row: 12,
+            scale_sigma: 0.8,
+            true_density: 0.05,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+fn main() {
+    let out_dir = "bench_out";
+    println!("pcdn ablation benches\n");
+
+    // ---- 1. bundle line search vs per-feature (PCDN vs SCDN) ------------
+    {
+        let d = correlated(1);
+        let mut t = Table::new(
+            "Ablation 1: P-dim line search (PCDN) vs per-feature (SCDN) at equal parallelism",
+            &["P", "pcdn_F_at_budget", "pcdn_conv", "scdn_F_at_budget", "scdn_conv"],
+        );
+        for p in [4usize, 16, 64, 120] {
+            let o = TrainOptions {
+                c: 1.0,
+                bundle_size: p,
+                stop: StopRule::SubgradRel(1e-4),
+                max_outer: 60,
+                ..TrainOptions::default()
+            };
+            let rp = Pcdn::new().train(&d, Objective::Logistic, &o);
+            let rs = Scdn::new().train(&d, Objective::Logistic, &o);
+            t.push(vec![
+                p.into(),
+                rp.final_objective.into(),
+                format!("{}", rp.converged).into(),
+                rs.final_objective.into(),
+                format!("{}", rs.converged).into(),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+        t.write_csv(out_dir, "ablation_linesearch").unwrap();
+    }
+
+    // ---- 2. Armijo γ ------------------------------------------------------
+    {
+        let d = spread(2);
+        let mut t = Table::new(
+            "Ablation 2: Armijo gamma (Eq. 7) — step sizes and work to eps",
+            &["gamma", "inner_iters", "ls_steps", "mean_q", "F"],
+        );
+        for gamma in [0.0, 0.25, 0.5, 0.9] {
+            let o = TrainOptions {
+                c: 1.0,
+                bundle_size: 32,
+                armijo: ArmijoParams {
+                    gamma,
+                    ..ArmijoParams::default()
+                },
+                stop: StopRule::SubgradRel(1e-5),
+                max_outer: 2000,
+                ..TrainOptions::default()
+            };
+            let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+            t.push(vec![
+                gamma.into(),
+                r.inner_iters.into(),
+                r.ls_steps.into(),
+                (r.ls_steps as f64 / r.inner_iters.max(1) as f64).into(),
+                r.final_objective.into(),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+        t.write_csv(out_dir, "ablation_gamma").unwrap();
+    }
+
+    // ---- 3. shrinking ------------------------------------------------------
+    {
+        let d = spread(3);
+        let mut t = Table::new(
+            "Ablation 3: CDN shrinking on/off",
+            &["c", "plain_inner", "shrunk_inner", "saving_pct", "F_gap_rel"],
+        );
+        for c in [0.5, 1.0, 4.0] {
+            let mut o = TrainOptions {
+                c,
+                stop: StopRule::SubgradRel(1e-6),
+                max_outer: 2000,
+                ..TrainOptions::default()
+            };
+            let plain = Cdn::new().train(&d, Objective::Logistic, &o);
+            o.shrinking = true;
+            let shrunk = Cdn::new().train(&d, Objective::Logistic, &o);
+            let saving = 100.0 * (1.0 - shrunk.inner_iters as f64 / plain.inner_iters.max(1) as f64);
+            t.push(vec![
+                c.into(),
+                plain.inner_iters.into(),
+                shrunk.inner_iters.into(),
+                saving.into(),
+                ((shrunk.final_objective - plain.final_objective).abs()
+                    / plain.final_objective)
+                    .into(),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+        t.write_csv(out_dir, "ablation_shrinking").unwrap();
+    }
+
+    // ---- 4. partition scheme -----------------------------------------------
+    {
+        // Contiguous bundles on group-correlated data put correlated
+        // features together — worst case for the bundle step size. PCDN's
+        // random partition (Eq. 8) mixes groups. Compare line-search work.
+        let d = correlated(4);
+        let mut t = Table::new(
+            "Ablation 4: random (Eq. 8) vs correlation-adversarial bundles — proxy via seed spread",
+            &["seed", "inner_iters", "mean_q", "F"],
+        );
+        // Random partitions across seeds show the variance of the scheme;
+        // the adversarial grouping is emulated by corr-group-aligned data
+        // with group-size == bundle-size (see DESIGN.md).
+        for seed in 0..4u64 {
+            let o = TrainOptions {
+                c: 1.0,
+                bundle_size: 20, // = features/groups → aligned worst case exists
+                seed,
+                stop: StopRule::SubgradRel(1e-4),
+                max_outer: 500,
+                ..TrainOptions::default()
+            };
+            let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+            t.push(vec![
+                (seed as usize).into(),
+                r.inner_iters.into(),
+                (r.ls_steps as f64 / r.inner_iters.max(1) as f64).into(),
+                r.final_objective.into(),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+        t.write_csv(out_dir, "ablation_partition").unwrap();
+    }
+
+    // ---- 5. elastic net ----------------------------------------------------
+    {
+        let d = spread(5);
+        let mut t = Table::new(
+            "Ablation 5: elastic-net lambda2 — sparsity/conditioning trade",
+            &["l2_reg", "inner_iters", "nnz", "F"],
+        );
+        for l2 in [0.0, 0.1, 1.0, 10.0] {
+            let o = TrainOptions {
+                c: 1.0,
+                bundle_size: 32,
+                l2_reg: l2,
+                stop: StopRule::SubgradRel(1e-5),
+                max_outer: 2000,
+                ..TrainOptions::default()
+            };
+            let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+            t.push(vec![
+                l2.into(),
+                r.inner_iters.into(),
+                r.model_nnz().into(),
+                r.final_objective.into(),
+            ]);
+        }
+        println!("{}", t.to_markdown());
+        t.write_csv(out_dir, "ablation_elasticnet").unwrap();
+    }
+
+    println!("ablation CSVs written to {out_dir}/");
+}

@@ -1,0 +1,79 @@
+//! Bench harness regenerating EVERY table and figure of the paper's
+//! evaluation (Tables 2–3, Figures 1–7, plus the §4 theory checks).
+//!
+//! ```sh
+//! cargo bench --bench figures                 # quick-scale, all figures
+//! cargo bench --bench figures -- fig1 fig3    # a subset
+//! cargo bench --bench figures -- --full       # publication-scale grids
+//! ```
+//!
+//! CSVs land in `bench_out/`; ASCII previews print to stdout. Absolute
+//! numbers are testbed-specific (single core + the Eq. 20 schedule
+//! simulator at 23 modeled threads, DESIGN.md §3) — the *shapes* are the
+//! reproduction target and are compared against the paper in
+//! EXPERIMENTS.md.
+
+use pcdn::coordinator::experiments::{self, ExpOptions};
+use pcdn::util::timer::Stopwatch;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let out_dir = "bench_out";
+    let wanted: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .map(|s| s.as_str())
+        .collect();
+    let opts = ExpOptions {
+        quick: !full,
+        threads: 23,
+        seed: 0,
+    };
+    println!(
+        "pcdn figure bench: scale = {}, modeled threads = {}",
+        if opts.quick { "quick" } else { "full" },
+        opts.threads
+    );
+
+    type Driver = (&'static str, fn(&ExpOptions) -> experiments::ExpOutput);
+    let drivers: Vec<Driver> = vec![
+        ("table2", experiments::table2),
+        ("fig1", experiments::fig1),
+        ("fig2", experiments::fig2),
+        ("table3", experiments::table3),
+        ("fig3", experiments::fig3),
+        ("fig4", experiments::fig4_and_7), // also emits fig7
+        ("fig5", experiments::fig5),
+        ("fig6", experiments::fig6),
+        ("theory", experiments::theory_check),
+    ];
+
+    let mut ran = 0;
+    for (name, f) in &drivers {
+        if !wanted.is_empty() && !wanted.contains(name) {
+            // allow "fig7" to select the fig4 driver
+            if !(*name == "fig4" && wanted.contains(&"fig7")) {
+                continue;
+            }
+        }
+        let sw = Stopwatch::start();
+        let out = f(&opts);
+        println!("\n==== {name} ({:.1}s) ====", sw.secs());
+        for (csv_name, table) in &out.tables {
+            println!("{}", table.to_markdown());
+            table
+                .write_csv(out_dir, csv_name)
+                .unwrap_or_else(|e| eprintln!("csv write failed: {e}"));
+        }
+        for plot in &out.plots {
+            println!("{plot}");
+        }
+        ran += 1;
+    }
+    if ran == 0 {
+        eprintln!("no experiment matched {wanted:?}; known: table2 fig1 fig2 table3 fig3 fig4 fig5 fig6 fig7 theory");
+        std::process::exit(2);
+    }
+    println!("\nwrote CSVs to {out_dir}/ ({ran} experiment groups)");
+}

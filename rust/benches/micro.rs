@@ -1,0 +1,192 @@
+//! Micro-benchmarks of the solver hot paths (criterion-style statistics
+//! via `util::timer::measure`; the criterion crate is unavailable
+//! offline). These feed the §Perf iteration log in EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo bench --bench micro
+//! ```
+
+use pcdn::data::synthetic::{generate, SyntheticSpec};
+use pcdn::data::Dataset;
+use pcdn::loss::{LossState, Objective};
+use pcdn::solver::direction::newton_direction;
+use pcdn::solver::linesearch::DxScratch;
+use pcdn::util::rng::Pcg64;
+use pcdn::util::timer::{black_box, fmt_secs, measure};
+
+fn bench<T, F: FnMut() -> T>(name: &str, per_iter_items: usize, f: F) {
+    let (med, mean, std) = measure(3, 15, f);
+    let per_item = med / per_iter_items.max(1) as f64;
+    println!(
+        "{name:<44} median {:>10}  mean {:>10} ±{:>9}  ({}/item)",
+        fmt_secs(med),
+        fmt_secs(mean),
+        fmt_secs(std),
+        fmt_secs(per_item)
+    );
+}
+
+fn realsim_like() -> Dataset {
+    generate(
+        &SyntheticSpec {
+            samples: 2892,
+            features: 1048,
+            nnz_per_row: 50,
+            scale_sigma: 0.8,
+            ..Default::default()
+        },
+        1,
+    )
+}
+
+fn main() {
+    println!("pcdn micro benches (single core)\n");
+    let d = realsim_like();
+    let nnz = d.x.nnz();
+    println!(
+        "dataset: {} × {}, nnz = {nnz} (~real-sim analog)\n",
+        d.samples(),
+        d.features()
+    );
+
+    // --- per-feature gradient/Hessian pass (Eq. 12) ----------------------
+    let state = LossState::new(Objective::Logistic, &d, 4.0);
+    bench("grad_hess_j full sweep (n features)", d.features(), || {
+        let mut acc = 0.0;
+        for j in 0..d.features() {
+            let (g, h) = state.grad_hess_j(j);
+            acc += g + h;
+        }
+        black_box(acc)
+    });
+
+    // --- Newton direction (Eq. 5) ---------------------------------------
+    let ghs: Vec<(f64, f64, f64)> = (0..d.features())
+        .map(|j| {
+            let (g, h) = state.grad_hess_j(j);
+            (g, h, 0.1)
+        })
+        .collect();
+    bench("newton_direction (n features)", d.features(), || {
+        let mut acc = 0.0;
+        for &(g, h, w) in &ghs {
+            acc += newton_direction(g, h, w);
+        }
+        black_box(acc)
+    });
+
+    // --- dᵀx accumulation (Alg. 4 step 1) --------------------------------
+    let mut rng = Pcg64::new(7);
+    let bundle: Vec<usize> = rng.sample_indices(d.features(), 256);
+    let mut scratch = DxScratch::new(d.samples());
+    bench("dx accumulate, P = 256 bundle", 256, || {
+        scratch.reset();
+        for &j in &bundle {
+            let (ri, v) = d.x.col(j);
+            scratch.accumulate(ri, v, 0.01);
+        }
+        black_box(scratch.touched_len())
+    });
+
+    // --- Armijo probe over touched samples (Eq. 11) ----------------------
+    scratch.reset();
+    for &j in &bundle {
+        let (ri, v) = d.x.col(j);
+        scratch.accumulate(ri, v, 0.01);
+    }
+    let (touched, dx) = scratch.view();
+    let touched = touched.to_vec();
+    bench(
+        &format!("armijo probe ({} touched samples)", touched.len()),
+        touched.len(),
+        || black_box(state.delta_loss(&touched, &dx, 0.5)),
+    );
+
+    // --- loss value + full gradient (stopping test) -----------------------
+    bench("loss_value (s samples)", d.samples(), || {
+        black_box(state.loss_value())
+    });
+    bench("full_gradient (nnz)", nnz, || {
+        black_box(state.full_gradient())
+    });
+
+    // --- sparse matvec -----------------------------------------------------
+    let w: Vec<f64> = (0..d.features()).map(|j| (j % 7) as f64 * 0.01).collect();
+    bench("csc matvec Xw (nnz)", nnz, || black_box(d.x.matvec(&w)));
+
+    // --- one full PCDN outer iteration -------------------------------------
+    {
+        use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+        let opts = TrainOptions {
+            c: 4.0,
+            bundle_size: 256,
+            stop: StopRule::MaxOuter(1),
+            max_outer: 1,
+            ..TrainOptions::default()
+        };
+        bench("PCDN one outer sweep (P=256)", d.features(), || {
+            black_box(Pcdn::new().train(&d, Objective::Logistic, &opts).inner_iters)
+        });
+    }
+
+    // --- PJRT path latency (when artifacts are built) ----------------------
+    let art_dir = pcdn::runtime::PjrtRuntime::default_dir();
+    if art_dir.join("manifest.json").exists() {
+        use pcdn::runtime::{bundle_exec::BundleExecutor, PjrtRuntime};
+        let rt = PjrtRuntime::cpu(&art_dir).unwrap();
+        let dd = generate(
+            &SyntheticSpec {
+                samples: 1000,
+                features: 64,
+                nnz_per_row: 60,
+                ..Default::default()
+            },
+            3,
+        );
+        let exec = BundleExecutor::new(&rt, Objective::Logistic, dd.samples(), 32).unwrap();
+        let y = exec.pad_labels(&dd.y);
+        let q = exec.initial_quantity();
+        let bundle: Vec<usize> = (0..32).collect();
+        let mut xb = vec![0.0f32; exec.s_pad * exec.p_pad];
+        for (k, &j) in bundle.iter().enumerate() {
+            let (ri, v) = dd.x.col(j);
+            for (r, x) in ri.iter().zip(v) {
+                xb[*r as usize * exec.p_pad + k] = *x as f32;
+            }
+        }
+        let w_b = vec![0.0f32; 32];
+        println!();
+        bench("PJRT bundle_step (s=1024, p=32)", 1, || {
+            black_box(exec.bundle_step(&xb, &q, &y, &w_b, 1.0).unwrap().delta)
+        });
+        let step = exec.bundle_step(&xb, &q, &y, &w_b, 1.0).unwrap();
+        bench("PJRT ls_probe (s=1024)", 1, || {
+            black_box(
+                exec.ls_probe(&q, &step.xd, &y, &w_b, &step.d, 0.5, 1.0)
+                    .unwrap(),
+            )
+        });
+        // Interpret-mode Pallas tax: compare against the pure-jnp twin
+        // artifact compiled from the same L2 graph without the kernel.
+        if let Some(jnp_entry) = rt
+            .manifest
+            .select("bundle_step_logistic_jnp", dd.samples(), 32)
+        {
+            let jnp_entry = jnp_entry.clone();
+            let w_pad = vec![0.0f32; jnp_entry.p];
+            let mut active = vec![0.0f32; jnp_entry.p];
+            active[..32].fill(1.0);
+            let c_in = [1.0f32];
+            bench("PJRT bundle_step jnp-twin (s=1024, p=32)", 1, || {
+                black_box(
+                    rt.run_f32(&jnp_entry, &[&xb, &y, &q, &w_pad, &active, &c_in])
+                        .unwrap()
+                        .len(),
+                )
+            });
+        }
+    } else {
+        println!("\n(PJRT benches skipped: run `make artifacts`)");
+    }
+    println!("\nmicro benches done");
+}

@@ -1,0 +1,229 @@
+//! Run configuration: a JSON config file (or CLI flags) resolved into a
+//! validated [`RunConfig`] the coordinator executes. This is the config
+//! system the `pcdn` launcher consumes.
+
+use crate::data::{libsvm, registry, Dataset};
+use crate::loss::Objective;
+use crate::solver::{ArmijoParams, StopRule, TrainOptions};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Which solver to launch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    Pcdn,
+    Cdn,
+    Scdn,
+    ScdnAtomic,
+    Tron,
+    /// PCDN over the PJRT dense path (three-layer stack).
+    PcdnPjrt,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "pcdn" => SolverKind::Pcdn,
+            "cdn" => SolverKind::Cdn,
+            "scdn" => SolverKind::Scdn,
+            "scdn-atomic" => SolverKind::ScdnAtomic,
+            "tron" => SolverKind::Tron,
+            "pcdn-pjrt" => SolverKind::PcdnPjrt,
+            _ => bail!("unknown solver '{s}' (pcdn|cdn|scdn|scdn-atomic|tron|pcdn-pjrt)"),
+        })
+    }
+}
+
+/// Where the training data comes from.
+#[derive(Clone, Debug)]
+pub enum DataSource {
+    /// One of the six registry analogs (accepts paper or analog name).
+    Analog(String),
+    /// A LIBSVM text file on disk.
+    LibsvmFile(String),
+}
+
+impl DataSource {
+    pub fn load(&self) -> Result<Dataset> {
+        match self {
+            DataSource::Analog(name) => registry::by_name(name)
+                .map(|a| a.train())
+                .with_context(|| format!("unknown analog dataset '{name}'")),
+            DataSource::LibsvmFile(path) => libsvm::read_file(path, None),
+        }
+    }
+}
+
+/// A fully resolved training run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub solver: SolverKind,
+    pub data: DataSource,
+    pub objective: Objective,
+    pub train: TrainOptions,
+    /// Artifacts dir for the PJRT path.
+    pub artifacts: String,
+}
+
+impl RunConfig {
+    /// Parse a JSON config document:
+    ///
+    /// ```json
+    /// {
+    ///   "solver": "pcdn",
+    ///   "dataset": "real-sim",            // or {"libsvm": "path"}
+    ///   "objective": "logistic",
+    ///   "c": 4.0,
+    ///   "bundle_size": 256,
+    ///   "eps": 1e-3,                       // SubgradRel stopping
+    ///   "max_outer": 500,
+    ///   "threads": 1,
+    ///   "seed": 0,
+    ///   "shrinking": false,
+    ///   "armijo": {"sigma": 0.01, "beta": 0.5, "gamma": 0.0}
+    /// }
+    /// ```
+    pub fn from_json(text: &str) -> Result<RunConfig> {
+        let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let solver = SolverKind::parse(
+            doc.get("solver").and_then(Json::as_str).unwrap_or("pcdn"),
+        )?;
+        let data = match doc.get("dataset") {
+            Some(Json::Str(name)) => DataSource::Analog(name.clone()),
+            Some(obj) if obj.get("libsvm").is_some() => DataSource::LibsvmFile(
+                obj.get("libsvm").unwrap().as_str().context("libsvm path")?.to_string(),
+            ),
+            _ => bail!("config: missing dataset"),
+        };
+        let objective = match doc.get("objective").and_then(Json::as_str) {
+            Some("logistic") | None => Objective::Logistic,
+            Some("svm") | Some("l2svm") => Objective::L2Svm,
+            Some("lasso") => Objective::Lasso,
+            Some(o) => bail!("unknown objective '{o}'"),
+        };
+        let mut train = TrainOptions {
+            c: doc.get("c").and_then(Json::as_f64).unwrap_or(1.0),
+            bundle_size: doc
+                .get("bundle_size")
+                .and_then(Json::as_usize)
+                .unwrap_or(64),
+            n_threads: doc.get("threads").and_then(Json::as_usize).unwrap_or(1),
+            stop: StopRule::SubgradRel(
+                doc.get("eps").and_then(Json::as_f64).unwrap_or(1e-3),
+            ),
+            max_outer: doc.get("max_outer").and_then(Json::as_usize).unwrap_or(500),
+            shrinking: doc
+                .get("shrinking")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            seed: doc.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            l2_reg: doc.get("l2_reg").and_then(Json::as_f64).unwrap_or(0.0),
+            ..TrainOptions::default()
+        };
+        if let Some(a) = doc.get("armijo") {
+            train.armijo = ArmijoParams {
+                sigma: a.get("sigma").and_then(Json::as_f64).unwrap_or(0.01),
+                beta: a.get("beta").and_then(Json::as_f64).unwrap_or(0.5),
+                gamma: a.get("gamma").and_then(Json::as_f64).unwrap_or(0.0),
+                max_steps: a
+                    .get("max_steps")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(60),
+            };
+        }
+        let cfg = RunConfig {
+            solver,
+            data,
+            objective,
+            train,
+            artifacts: doc
+                .get("artifacts")
+                .and_then(Json::as_str)
+                .unwrap_or("artifacts")
+                .to_string(),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        let t = &self.train;
+        if t.c <= 0.0 {
+            bail!("c must be positive (got {})", t.c);
+        }
+        if t.bundle_size == 0 {
+            bail!("bundle_size must be ≥ 1");
+        }
+        if !(0.0..1.0).contains(&t.armijo.sigma) {
+            bail!("armijo sigma must be in (0,1)");
+        }
+        if !(0.0..1.0).contains(&t.armijo.beta) || t.armijo.beta == 0.0 {
+            bail!("armijo beta must be in (0,1)");
+        }
+        if !(0.0..1.0).contains(&t.armijo.gamma) {
+            bail!("armijo gamma must be in [0,1)");
+        }
+        if t.l2_reg < 0.0 {
+            bail!("l2_reg must be nonnegative");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let cfg = RunConfig::from_json(r#"{"dataset": "a9a"}"#).unwrap();
+        assert_eq!(cfg.solver, SolverKind::Pcdn);
+        assert_eq!(cfg.objective, Objective::Logistic);
+        assert!(matches!(cfg.data, DataSource::Analog(ref n) if n == "a9a"));
+        assert_eq!(cfg.train.bundle_size, 64);
+    }
+
+    #[test]
+    fn parse_full() {
+        let cfg = RunConfig::from_json(
+            r#"{
+              "solver": "tron", "dataset": {"libsvm": "/tmp/x.svm"},
+              "objective": "svm", "c": 0.5, "bundle_size": 8, "eps": 1e-5,
+              "max_outer": 99, "threads": 4, "seed": 7, "shrinking": true,
+              "armijo": {"sigma": 0.1, "beta": 0.25, "gamma": 0.5}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.solver, SolverKind::Tron);
+        assert_eq!(cfg.objective, Objective::L2Svm);
+        assert!(matches!(cfg.data, DataSource::LibsvmFile(_)));
+        assert_eq!(cfg.train.max_outer, 99);
+        assert_eq!(cfg.train.n_threads, 4);
+        assert!(cfg.train.shrinking);
+        assert_eq!(cfg.train.armijo.beta, 0.25);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(RunConfig::from_json(r#"{"dataset": "a9a", "c": -1}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"dataset": "a9a", "solver": "sgd"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"objective": "logistic"}"#).is_err());
+        assert!(RunConfig::from_json(
+            r#"{"dataset": "a9a", "armijo": {"sigma": 2.0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn analog_source_loads() {
+        let cfg = RunConfig::from_json(r#"{"dataset": "gisette"}"#).unwrap();
+        let d = cfg.data.load().unwrap();
+        assert!(d.samples() > 0);
+        assert!(RunConfig::from_json(r#"{"dataset": "bogus"}"#)
+            .unwrap()
+            .data
+            .load()
+            .is_err());
+    }
+}

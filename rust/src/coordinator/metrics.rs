@@ -1,0 +1,339 @@
+//! Tabular results + CSV/markdown/ASCII-plot rendering for the experiment
+//! drivers (no plotting libs offline; the benches emit CSV for external
+//! tooling and ASCII previews for the terminal).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-ordered table of f64/string cells.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+}
+
+/// One table cell.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Cell {
+    Str(String),
+    Num(f64),
+    Int(i64),
+    Empty,
+}
+
+impl Cell {
+    pub fn render(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Num(x) => {
+                if x.abs() >= 1e5 || (x.abs() < 1e-3 && *x != 0.0) {
+                    format!("{x:.4e}")
+                } else {
+                    format!("{x:.4}")
+                }
+            }
+            Cell::Int(i) => i.to_string(),
+            Cell::Empty => String::new(),
+        }
+    }
+}
+
+impl From<&str> for Cell {
+    fn from(s: &str) -> Self {
+        Cell::Str(s.to_string())
+    }
+}
+impl From<String> for Cell {
+    fn from(s: String) -> Self {
+        Cell::Str(s)
+    }
+}
+impl From<f64> for Cell {
+    fn from(x: f64) -> Self {
+        Cell::Num(x)
+    }
+}
+impl From<usize> for Cell {
+    fn from(i: usize) -> Self {
+        Cell::Int(i as i64)
+    }
+}
+impl From<i64> for Cell {
+    fn from(i: i64) -> Self {
+        Cell::Int(i)
+    }
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<Cell>) {
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// RFC-4180-ish CSV (quotes cells containing commas/quotes/newlines).
+    pub fn to_csv(&self) -> String {
+        let quote = |s: &str| {
+            if s.contains([',', '"', '\n']) {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| quote(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter()
+                    .map(|c| quote(&c.render()))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Aligned markdown rendering for terminal/EXPERIMENTS.md.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.render().len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&widths)
+            .map(|(h, w)| format!("{h:<w$}"))
+            .collect();
+        let _ = writeln!(out, "| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        let _ = writeln!(out, "| {} |", sep.join(" | "));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{:<w$}", c.render()))
+                .collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        out
+    }
+
+    /// Write the CSV next to a bench run.
+    pub fn write_csv(&self, dir: impl AsRef<Path>, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        std::fs::write(dir.as_ref().join(format!("{name}.csv")), self.to_csv())
+    }
+}
+
+/// Minimal ASCII line/scatter plot: one char per series, log-x/log-y
+/// options — enough to eyeball the figure shapes in a terminal.
+pub struct AsciiPlot {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    pub log_x: bool,
+    pub log_y: bool,
+    series: Vec<(char, Vec<(f64, f64)>)>,
+}
+
+impl AsciiPlot {
+    pub fn new(title: impl Into<String>) -> Self {
+        AsciiPlot {
+            title: title.into(),
+            width: 72,
+            height: 20,
+            log_x: false,
+            log_y: false,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn logx(mut self) -> Self {
+        self.log_x = true;
+        self
+    }
+    pub fn logy(mut self) -> Self {
+        self.log_y = true;
+        self
+    }
+
+    pub fn series(&mut self, marker: char, points: &[(f64, f64)]) {
+        self.series.push((marker, points.to_vec()));
+    }
+
+    fn tx(&self, x: f64) -> f64 {
+        if self.log_x {
+            x.max(1e-300).log10()
+        } else {
+            x
+        }
+    }
+    fn ty(&self, y: f64) -> f64 {
+        if self.log_y {
+            y.max(1e-300).log10()
+        } else {
+            y
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let pts: Vec<(f64, f64, char)> = self
+            .series
+            .iter()
+            .flat_map(|(m, ps)| {
+                ps.iter()
+                    .filter(|(x, y)| x.is_finite() && y.is_finite())
+                    .map(|&(x, y)| (self.tx(x), self.ty(y), *m))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        if pts.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1, mut y0, mut y1) = (
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        );
+        for &(x, y, _) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if x1 <= x0 {
+            x1 = x0 + 1.0;
+        }
+        if y1 <= y0 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for &(x, y, m) in &pts {
+            let cx = ((x - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+            let row = self.height - 1 - cy;
+            grid[row][cx] = m;
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.title);
+        let _ = writeln!(
+            out,
+            "  y: [{:.3e}, {:.3e}]{}",
+            if self.log_y { 10f64.powf(y0) } else { y0 },
+            if self.log_y { 10f64.powf(y1) } else { y1 },
+            if self.log_y { " (log)" } else { "" }
+        );
+        for row in grid {
+            let _ = writeln!(out, "  |{}", row.into_iter().collect::<String>());
+        }
+        let _ = writeln!(out, "  +{}", "-".repeat(self.width));
+        let _ = writeln!(
+            out,
+            "  x: [{:.3e}, {:.3e}]{}",
+            if self.log_x { 10f64.powf(x0) } else { x0 },
+            if self.log_x { 10f64.powf(x1) } else { x1 },
+            if self.log_x { " (log)" } else { "" }
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("demo", &["name", "value", "count"]);
+        t.push(vec!["a".into(), 1.5.into(), 3usize.into()]);
+        t.push(vec!["b,c".into(), 0.0001.into(), 0usize.into()]);
+        t
+    }
+
+    #[test]
+    fn csv_escaping_and_layout() {
+        let csv = sample().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "name,value,count");
+        assert!(lines[2].starts_with("\"b,c\""));
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn markdown_contains_all_cells() {
+        let md = sample().to_markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| name"));
+        assert!(md.contains("1.5"));
+        assert!(md.contains("b,c"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(vec![Cell::Empty]);
+    }
+
+    #[test]
+    fn cell_render_formats() {
+        assert_eq!(Cell::Num(1.5).render(), "1.5000");
+        assert_eq!(Cell::Num(1234567.0).render(), "1.2346e6");
+        assert_eq!(Cell::Int(42).render(), "42");
+        assert_eq!(Cell::Empty.render(), "");
+    }
+
+    #[test]
+    fn ascii_plot_renders_points() {
+        let mut p = AsciiPlot::new("t");
+        p.series('*', &[(1.0, 1.0), (2.0, 2.0), (3.0, 1.5)]);
+        let out = p.render();
+        assert!(out.contains('*'));
+        assert!(out.lines().count() > 10);
+    }
+
+    #[test]
+    fn ascii_plot_log_axes() {
+        let mut p = AsciiPlot::new("t").logx().logy();
+        p.series('o', &[(1.0, 1e-5), (100.0, 1e-1)]);
+        let out = p.render();
+        assert!(out.contains("(log)"));
+    }
+
+    #[test]
+    fn ascii_plot_empty() {
+        let p = AsciiPlot::new("empty");
+        assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn write_csv_to_disk() {
+        let dir = std::env::temp_dir().join("pcdn_metrics_test");
+        sample().write_csv(&dir, "demo").unwrap();
+        let read = std::fs::read_to_string(dir.join("demo.csv")).unwrap();
+        assert!(read.starts_with("name,value"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,123 @@
+//! The experiment coordinator: config resolution, run orchestration,
+//! metrics/tables, theory evaluation, and the per-figure experiment
+//! drivers that regenerate the paper's evaluation section.
+
+pub mod config;
+pub mod experiments;
+pub mod metrics;
+pub mod theory;
+
+use crate::loss::Objective;
+use crate::solver::{
+    cdn::Cdn, pcdn::Pcdn, scdn::Scdn, tron::Tron, Solver, TrainResult,
+};
+use anyhow::Result;
+use config::{RunConfig, SolverKind};
+
+/// Execute a resolved run config end to end.
+pub fn run(cfg: &RunConfig) -> Result<TrainResult> {
+    let data = cfg.data.load()?;
+    crate::log_info!(
+        "training {:?} on {} (s={}, n={}, sparsity={:.2}%)",
+        cfg.solver,
+        data.name,
+        data.samples(),
+        data.features(),
+        data.sparsity() * 100.0
+    );
+    let result = match cfg.solver {
+        SolverKind::Pcdn => Pcdn::new().train(&data, cfg.objective, &cfg.train),
+        SolverKind::Cdn => Cdn::new().train(&data, cfg.objective, &cfg.train),
+        SolverKind::Scdn => Scdn::new().train(&data, cfg.objective, &cfg.train),
+        SolverKind::ScdnAtomic => Scdn::atomic().train(&data, cfg.objective, &cfg.train),
+        SolverKind::Tron => Tron::new().train(&data, cfg.objective, &cfg.train),
+        SolverKind::PcdnPjrt => {
+            let rt = crate::runtime::PjrtRuntime::cpu(&cfg.artifacts)?;
+            crate::runtime::dense_trainer::train_dense_pjrt(
+                &rt,
+                &data,
+                cfg.objective,
+                &cfg.train,
+            )?
+        }
+    };
+    Ok(result)
+}
+
+/// One-line human summary of a run.
+pub fn summarize(r: &TrainResult) -> String {
+    format!(
+        "{}: F = {:.6}, nnz = {}, outer = {}, inner = {}, ls = {}, {} in {:.2}s",
+        r.solver,
+        r.final_objective,
+        r.model_nnz(),
+        r.outer_iters,
+        r.inner_iters,
+        r.ls_steps,
+        if r.converged { "converged" } else { "NOT converged" },
+        r.wall_secs
+    )
+}
+
+/// Convenience used by examples: train a named analog with defaults.
+pub fn train_analog(
+    name: &str,
+    obj: Objective,
+    solver: SolverKind,
+    bundle_size: usize,
+) -> Result<TrainResult> {
+    let analog = crate::data::registry::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown analog '{name}'"))?;
+    let c = match obj {
+        Objective::Logistic | Objective::Lasso => analog.c_logistic,
+        Objective::L2Svm => analog.c_svm,
+    };
+    let cfg = RunConfig {
+        solver,
+        data: config::DataSource::Analog(name.to_string()),
+        objective: obj,
+        train: crate::solver::TrainOptions {
+            c,
+            bundle_size,
+            ..Default::default()
+        },
+        artifacts: crate::runtime::PjrtRuntime::default_dir()
+            .to_string_lossy()
+            .into_owned(),
+    };
+    run(&cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_pcdn_via_config() {
+        let cfg = RunConfig::from_json(
+            r#"{"solver": "pcdn", "dataset": "a9a", "bundle_size": 32,
+                "eps": 1e-3, "max_outer": 100}"#,
+        )
+        .unwrap();
+        let r = run(&cfg).unwrap();
+        assert!(r.converged, "{}", summarize(&r));
+        assert!(summarize(&r).contains("pcdn"));
+    }
+
+    #[test]
+    fn run_all_native_solvers_one_dataset() {
+        for solver in ["pcdn", "cdn", "scdn", "tron"] {
+            let cfg = RunConfig::from_json(&format!(
+                r#"{{"solver": "{solver}", "dataset": "a9a", "bundle_size": 8,
+                     "eps": 1e-2, "max_outer": 120}}"#
+            ))
+            .unwrap();
+            let r = run(&cfg).unwrap();
+            assert!(
+                r.final_objective.is_finite(),
+                "{solver}: {}",
+                summarize(&r)
+            );
+        }
+    }
+}

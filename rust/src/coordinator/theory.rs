@@ -1,0 +1,179 @@
+//! Numeric evaluation of the paper's theory: the order-statistics formula
+//! for `E[λ̄(B)]` (Lemma 1(a), Eq. 22), its `P`-scaled variants, and the
+//! Theorem 2 line-search bound. Used by the Fig. 1 / theory benches and by
+//! property tests that pin the analysis to the implementation.
+
+use crate::util::rng::Pcg64;
+
+/// `ln(k!)` table for `k = 0..=n`.
+pub fn ln_factorials(n: usize) -> Vec<f64> {
+    let mut t = vec![0.0; n + 1];
+    for k in 1..=n {
+        t[k] = t[k - 1] + (k as f64).ln();
+    }
+    t
+}
+
+/// `ln C(n, k)` from a precomputed table.
+#[inline]
+fn ln_choose(lnf: &[f64], n: usize, k: usize) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    lnf[n] - lnf[k] - lnf[n - k]
+}
+
+/// Exact `E[λ̄(B)] = E[max_{j∈B} λ_j]` over uniformly random size-`P`
+/// subsets (Eq. 22): `f(P) = Σ_{k=P}^{n} λ_(k) · C(k−1, P−1)/C(n, P)`,
+/// where `λ_(k)` is the k-th smallest column norm.
+pub fn expected_lambda_bar(lambdas: &[f64], p: usize) -> f64 {
+    let n = lambdas.len();
+    assert!(p >= 1 && p <= n, "P must be in [1, n]");
+    let mut sorted = lambdas.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lnf = ln_factorials(n);
+    let ln_cn_p = ln_choose(&lnf, n, p);
+    let mut acc = 0.0;
+    for k in p..=n {
+        // λ_(k) is max iff the other P−1 members come from the k−1 smaller.
+        let w = (ln_choose(&lnf, k - 1, p - 1) - ln_cn_p).exp();
+        acc += sorted[k - 1] * w;
+    }
+    acc
+}
+
+/// Monte-Carlo estimate of the same expectation (cross-check).
+pub fn expected_lambda_bar_mc(lambdas: &[f64], p: usize, trials: usize, seed: u64) -> f64 {
+    let n = lambdas.len();
+    let mut rng = Pcg64::new(seed);
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        let idx = rng.sample_indices(n, p);
+        let m = idx
+            .iter()
+            .map(|&j| lambdas[j])
+            .fold(f64::NEG_INFINITY, f64::max);
+        acc += m;
+    }
+    acc / trials as f64
+}
+
+/// Theorem 2 upper bound on the expected Armijo step count:
+/// `E[q] ≤ 1 + log_{1/β}(θc / (2·h̲·(1−σ+σγ))) + ½·log_{1/β}P
+///        + log_{1/β} E[λ̄(B)]`.
+#[allow(clippy::too_many_arguments)]
+pub fn theorem2_bound(
+    theta: f64,
+    c: f64,
+    h_lower: f64,
+    sigma: f64,
+    gamma: f64,
+    beta: f64,
+    p: usize,
+    e_lambda_bar: f64,
+) -> f64 {
+    let base = 1.0 / beta;
+    1.0 + (theta * c / (2.0 * h_lower * (1.0 - sigma + sigma * gamma))).log(base)
+        + 0.5 * (p as f64).log(base)
+        + e_lambda_bar.log(base)
+}
+
+/// The `T_ε` upper-bound *shape* of Eq. 19 up to the problem constant:
+/// `T_ε ∝ E[λ̄(B)] / (P·ε)`.
+pub fn t_eps_shape(lambdas: &[f64], p: usize, eps: f64) -> f64 {
+    expected_lambda_bar(lambdas, p) / (p as f64 * eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+    use crate::testutil::prop::{prop_assert, prop_close, run_prop, Gen};
+
+    #[test]
+    fn extremes_exact() {
+        let l = vec![1.0, 5.0, 3.0, 2.0];
+        // P = 1: uniform average.
+        assert_close(expected_lambda_bar(&l, 1), 11.0 / 4.0, 1e-12);
+        // P = n: the maximum.
+        assert_close(expected_lambda_bar(&l, 4), 5.0, 1e-12);
+    }
+
+    #[test]
+    fn two_of_three_hand_computed() {
+        // λ = {1, 2, 3}, P = 2: pairs {1,2},{1,3},{2,3} → maxima 2,3,3.
+        let l = vec![1.0, 2.0, 3.0];
+        assert_close(expected_lambda_bar(&l, 2), 8.0 / 3.0, 1e-12);
+    }
+
+    #[test]
+    fn constant_lambdas_constant_in_p() {
+        // Lemma 1(a): λ_1 = … = λ_n ⇒ E[λ̄] = λ for every P.
+        let l = vec![2.5; 30];
+        for p in [1, 5, 17, 30] {
+            assert_close(expected_lambda_bar(&l, p), 2.5, 1e-12);
+        }
+    }
+
+    #[test]
+    fn prop_lemma1a_monotonicity() {
+        run_prop("Lemma 1(a): E[λ̄] ↑ in P, E[λ̄]/P ↓ in P", 64, |g: &mut Gen| {
+            let n = g.usize_in(2..40);
+            let l: Vec<f64> = (0..n).map(|_| g.f64_in(0.01..10.0)).collect();
+            let mut prev = f64::NEG_INFINITY;
+            let mut prev_over_p = f64::INFINITY;
+            for p in 1..=n {
+                let e = expected_lambda_bar(&l, p);
+                prop_assert(e >= prev - 1e-9, &format!("E[λ̄] not increasing at P={p}"))?;
+                let over_p = e / p as f64;
+                prop_assert(
+                    over_p <= prev_over_p + 1e-9,
+                    &format!("E[λ̄]/P not decreasing at P={p}"),
+                )?;
+                prev = e;
+                prev_over_p = over_p;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_exact_matches_monte_carlo() {
+        run_prop("Eq. 22 ≈ Monte Carlo", 16, |g: &mut Gen| {
+            let n = g.usize_in(3..25);
+            let l: Vec<f64> = (0..n).map(|_| g.f64_in(0.1..5.0)).collect();
+            let p = g.usize_in(1..n + 1);
+            let exact = expected_lambda_bar(&l, p);
+            let mc = expected_lambda_bar_mc(&l, p, 4000, g.rng().next_u64());
+            prop_close(exact, mc, 0.05, "exact vs MC")
+        });
+    }
+
+    #[test]
+    fn theorem2_bound_grows_half_log_in_p() {
+        let e = 3.0;
+        let q1 = theorem2_bound(0.25, 1.0, 0.1, 0.01, 0.0, 0.5, 1, e);
+        let q4 = theorem2_bound(0.25, 1.0, 0.1, 0.01, 0.0, 0.5, 4, e);
+        // ½·log_2(4) = 1 extra step.
+        assert_close(q4 - q1, 1.0, 1e-12);
+    }
+
+    #[test]
+    fn t_eps_shape_decreasing_in_p() {
+        let l: Vec<f64> = (1..=50).map(|k| k as f64 / 10.0).collect();
+        let mut prev = f64::INFINITY;
+        for p in [1usize, 2, 5, 10, 25, 50] {
+            let t = t_eps_shape(&l, p, 1e-3);
+            assert!(t <= prev + 1e-9, "T_ε shape not decreasing at P={p}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn ln_factorial_values() {
+        let t = ln_factorials(10);
+        assert_close(t[0], 0.0, 1e-15);
+        assert_close(t[5], (120.0f64).ln(), 1e-12);
+        assert_close(t[10], (3628800.0f64).ln(), 1e-10);
+    }
+}

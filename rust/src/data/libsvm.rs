@@ -1,0 +1,175 @@
+//! LIBSVM text format reader/writer.
+//!
+//! Format per line: `<label> <index>:<value> <index>:<value> ...` with
+//! 1-based, strictly increasing feature indices. This is the format of all
+//! six benchmark datasets in the paper (downloaded from the LIBSVM site), so
+//! real data drops into the pipeline unchanged when network access exists.
+
+use super::{CscMat, Dataset};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+/// Parse a LIBSVM document from a reader.
+///
+/// `n_features`: pass `Some(n)` to force the feature-space width (e.g. to
+/// keep train/test aligned); `None` infers it from the max index seen.
+/// Labels may be `+1/-1`, `1/0`, or `2/1` style; anything `> 0` maps to +1.
+pub fn read<R: Read>(reader: R, n_features: Option<usize>) -> Result<Dataset> {
+    let mut y = Vec::new();
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    let mut max_feat = 0usize;
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.context("read error")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().unwrap();
+        let label: f64 = label_tok
+            .parse()
+            .with_context(|| format!("line {}: bad label '{label_tok}'", lineno + 1))?;
+        let row = y.len();
+        y.push(if label > 0.0 { 1.0 } else { -1.0 });
+        let mut prev_idx = 0usize;
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: expected idx:val, got '{tok}'", lineno + 1))?;
+            let idx: usize = idx_s
+                .parse()
+                .with_context(|| format!("line {}: bad index '{idx_s}'", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: LIBSVM indices are 1-based, got 0", lineno + 1);
+            }
+            if idx <= prev_idx {
+                bail!(
+                    "line {}: indices must be strictly increasing ({idx} after {prev_idx})",
+                    lineno + 1
+                );
+            }
+            prev_idx = idx;
+            let val: f64 = val_s
+                .parse()
+                .with_context(|| format!("line {}: bad value '{val_s}'", lineno + 1))?;
+            max_feat = max_feat.max(idx);
+            if val != 0.0 {
+                triplets.push((row, idx - 1, val));
+            }
+        }
+    }
+    let n = match n_features {
+        Some(n) => {
+            if max_feat > n {
+                bail!("feature index {max_feat} exceeds declared width {n}");
+            }
+            n
+        }
+        None => max_feat,
+    };
+    let x = CscMat::from_triplets(y.len(), n, &triplets);
+    Ok(Dataset::new("libsvm", x, y))
+}
+
+/// Read from a file path.
+pub fn read_file(path: impl AsRef<Path>, n_features: Option<usize>) -> Result<Dataset> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut d = read(f, n_features)?;
+    d.name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    Ok(d)
+}
+
+/// Write a dataset in LIBSVM format.
+pub fn write<W: Write>(out: &mut W, d: &Dataset) -> Result<()> {
+    let csr = d.x.to_csr();
+    for i in 0..d.samples() {
+        let label = if d.y[i] > 0.0 { "+1" } else { "-1" };
+        write!(out, "{label}")?;
+        let (ci, v) = csr.row(i);
+        for (c, x) in ci.iter().zip(v) {
+            write!(out, " {}:{}", c + 1, x)?;
+        }
+        writeln!(out)?;
+    }
+    Ok(())
+}
+
+/// Write to a file path.
+pub fn write_file(path: impl AsRef<Path>, d: &Dataset) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    write(&mut f, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    #[test]
+    fn parse_basic() {
+        let doc = "+1 1:0.5 3:2.0\n-1 2:1.5\n";
+        let d = read(doc.as_bytes(), None).unwrap();
+        assert_eq!(d.samples(), 2);
+        assert_eq!(d.features(), 3);
+        assert_eq!(d.y, vec![1.0, -1.0]);
+        assert_eq!(d.x.col(0).1, &[0.5]);
+        assert_eq!(d.x.col(1).1, &[1.5]);
+        assert_eq!(d.x.col(2).1, &[2.0]);
+    }
+
+    #[test]
+    fn parse_label_styles_and_blank_lines() {
+        let doc = "1 1:1\n0 1:2\n\n# comment\n2.0 2:3\n-1.0 1:4\n";
+        let d = read(doc.as_bytes(), None).unwrap();
+        assert_eq!(d.y, vec![1.0, -1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn forced_width() {
+        let doc = "+1 1:1\n";
+        let d = read(doc.as_bytes(), Some(10)).unwrap();
+        assert_eq!(d.features(), 10);
+        assert!(read(doc.as_bytes(), Some(0)).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(read("x 1:1\n".as_bytes(), None).is_err()); // bad label
+        assert!(read("+1 0:1\n".as_bytes(), None).is_err()); // 0-based
+        assert!(read("+1 2:1 1:1\n".as_bytes(), None).is_err()); // decreasing
+        assert!(read("+1 1:abc\n".as_bytes(), None).is_err()); // bad value
+        assert!(read("+1 11\n".as_bytes(), None).is_err()); // missing colon
+    }
+
+    #[test]
+    fn roundtrip_synthetic() {
+        let spec = SyntheticSpec {
+            samples: 40,
+            features: 25,
+            nnz_per_row: 5,
+            ..SyntheticSpec::default()
+        };
+        let d = generate(&spec, 7);
+        let mut buf = Vec::new();
+        write(&mut buf, &d).unwrap();
+        let d2 = read(buf.as_slice(), Some(d.features())).unwrap();
+        assert_eq!(d2.samples(), d.samples());
+        assert_eq!(d2.y, d.y);
+        assert_eq!(d2.x.nnz(), d.x.nnz());
+        // Values survive the decimal round-trip.
+        for j in 0..d.features() {
+            let (ri1, v1) = d.x.col(j);
+            let (ri2, v2) = d2.x.col(j);
+            assert_eq!(ri1, ri2);
+            for (a, b) in v1.iter().zip(v2) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Dataset substrate: sparse storage, LIBSVM text I/O, seeded synthetic
+//! generation, the paper-dataset analog registry, and split/duplication
+//! utilities.
+
+pub mod libsvm;
+pub mod registry;
+pub mod sparse;
+pub mod split;
+pub mod synthetic;
+
+pub use sparse::{CscMat, CsrMat};
+
+/// A supervised binary-classification dataset: design matrix `X ∈ R^{s×n}`
+/// (CSC) and labels `y ∈ {−1, +1}^s`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: CscMat,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: CscMat, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows, y.len(), "labels must match sample count");
+        assert!(
+            y.iter().all(|&v| v == 1.0 || v == -1.0),
+            "labels must be ±1"
+        );
+        Dataset {
+            name: name.into(),
+            x,
+            y,
+        }
+    }
+
+    /// Regression dataset (real-valued targets, for Lasso / elastic net —
+    /// the paper's §6 extension). `accuracy()` is meaningless here; use
+    /// [`Dataset::mse`].
+    pub fn new_regression(name: impl Into<String>, x: CscMat, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows, y.len(), "targets must match sample count");
+        assert!(y.iter().all(|v| v.is_finite()), "targets must be finite");
+        Dataset {
+            name: name.into(),
+            x,
+            y,
+        }
+    }
+
+    /// Mean squared error of a linear model (regression datasets).
+    pub fn mse(&self, w: &[f64]) -> f64 {
+        let z = self.x.matvec(w);
+        z.iter()
+            .zip(&self.y)
+            .map(|(zi, yi)| (zi - yi).powi(2))
+            .sum::<f64>()
+            / self.samples().max(1) as f64
+    }
+
+    /// Number of samples `s`.
+    pub fn samples(&self) -> usize {
+        self.x.rows
+    }
+
+    /// Number of features `n`.
+    pub fn features(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Fraction of *zero* entries (paper Table 2 "train Spa.").
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.x.density()
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_rate(&self) -> f64 {
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.y.len().max(1) as f64
+    }
+
+    /// Classification accuracy of a linear model `w` on this dataset.
+    pub fn accuracy(&self, w: &[f64]) -> f64 {
+        let z = self.x.matvec(w);
+        let correct = z
+            .iter()
+            .zip(&self.y)
+            .filter(|(zi, yi)| zi.signum() * **yi > 0.0 || (**zi == 0.0 && **yi > 0.0))
+            .count();
+        correct as f64 / self.samples().max(1) as f64
+    }
+
+    /// Duplicate all samples `k` times (paper §5.4.1 data-size scaling).
+    pub fn duplicate(&self, k: usize) -> Dataset {
+        let x = self.x.vstack_copies(k);
+        let mut y = Vec::with_capacity(self.y.len() * k);
+        for _ in 0..k {
+            y.extend_from_slice(&self.y);
+        }
+        Dataset {
+            name: format!("{}x{}", self.name, k),
+            x,
+            y,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn toy() -> Dataset {
+        let x = CscMat::from_triplets(
+            3,
+            2,
+            &[(0, 0, 1.0), (1, 0, -1.0), (2, 1, 2.0)],
+        );
+        Dataset::new("toy", x, vec![1.0, -1.0, 1.0])
+    }
+
+    #[test]
+    fn accessors() {
+        let d = toy();
+        assert_eq!(d.samples(), 3);
+        assert_eq!(d.features(), 2);
+        assert!((d.sparsity() - 0.5).abs() < 1e-12);
+        assert!((d.positive_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_perfect_and_zero() {
+        let d = toy();
+        // w = (1, 1): scores (1, -1, 2) → all correct.
+        assert_eq!(d.accuracy(&[1.0, 1.0]), 1.0);
+        // w = (-1, -1): all wrong.
+        assert_eq!(d.accuracy(&[-1.0, -1.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must be ±1")]
+    fn rejects_bad_labels() {
+        let x = CscMat::zeros(1, 1);
+        Dataset::new("bad", x, vec![0.5]);
+    }
+
+    #[test]
+    fn duplicate_scales() {
+        let d = toy();
+        let d2 = d.duplicate(4);
+        assert_eq!(d2.samples(), 12);
+        assert_eq!(d2.features(), 2);
+        assert_eq!(d2.accuracy(&[1.0, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn random_dataset_valid() {
+        let mut rng = Pcg64::new(1);
+        let x = CscMat::random(50, 20, 0.2, &mut rng);
+        let y: Vec<f64> = (0..50)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let d = Dataset::new("rand", x, y);
+        assert!(d.sparsity() > 0.5 && d.sparsity() < 0.95);
+    }
+}

@@ -1,0 +1,571 @@
+//! Compressed sparse column (CSC) design-matrix storage.
+//!
+//! The CDN family is *feature-centric*: the hot path walks one feature column
+//! `x^j` at a time (paper §3.1 — "the core processing on the j-th feature
+//! only needs to access the data related to the j-th feature"), so CSC is the
+//! primary layout. A CSR view is derivable for row-centric consumers
+//! (prediction over test rows, dense export for the PJRT path).
+
+use crate::util::rng::Pcg64;
+
+/// Sparse matrix in compressed sparse column format.
+///
+/// `rows` = number of samples `s`, `cols` = number of features `n`.
+/// Row indices within each column are strictly increasing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// Length `cols + 1`; column `j` occupies `col_ptr[j]..col_ptr[j+1]`.
+    pub col_ptr: Vec<usize>,
+    /// Row index of each stored entry (u32: datasets here are < 4B rows).
+    pub row_idx: Vec<u32>,
+    /// Value of each stored entry.
+    pub vals: Vec<f64>,
+}
+
+impl CscMat {
+    /// An empty matrix with no stored entries.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        CscMat {
+            rows,
+            cols,
+            col_ptr: vec![0; cols + 1],
+            row_idx: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Build from (row, col, value) triplets. Duplicates are summed;
+    /// explicit zeros are dropped.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Self {
+        // Count entries per column.
+        let mut count = vec![0usize; cols + 1];
+        for &(r, c, _) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            count[c + 1] += 1;
+        }
+        for j in 0..cols {
+            count[j + 1] += count[j];
+        }
+        let mut col_ptr = count;
+        let nnz = col_ptr[cols];
+        let mut row_idx = vec![0u32; nnz];
+        let mut vals = vec![0f64; nnz];
+        let mut next = col_ptr.clone();
+        for &(r, c, v) in triplets {
+            let k = next[c];
+            row_idx[k] = r as u32;
+            vals[k] = v;
+            next[c] += 1;
+        }
+        // Sort rows within each column, merging duplicates & dropping zeros.
+        let mut out_ri: Vec<u32> = Vec::with_capacity(nnz);
+        let mut out_v: Vec<f64> = Vec::with_capacity(nnz);
+        let mut out_ptr = vec![0usize; cols + 1];
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for j in 0..cols {
+            scratch.clear();
+            for k in col_ptr[j]..col_ptr[j + 1] {
+                scratch.push((row_idx[k], vals[k]));
+            }
+            scratch.sort_unstable_by_key(|&(r, _)| r);
+            let mut i = 0;
+            while i < scratch.len() {
+                let r = scratch[i].0;
+                let mut v = scratch[i].1;
+                let mut k = i + 1;
+                while k < scratch.len() && scratch[k].0 == r {
+                    v += scratch[k].1;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    out_ri.push(r);
+                    out_v.push(v);
+                }
+                i = k;
+            }
+            out_ptr[j + 1] = out_ri.len();
+        }
+        col_ptr = out_ptr;
+        CscMat {
+            rows,
+            cols,
+            col_ptr,
+            row_idx: out_ri,
+            vals: out_v,
+        }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Density = nnz / (rows*cols).
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+        }
+    }
+
+    /// Column `j` as (row indices, values).
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[a..b], &self.vals[a..b])
+    }
+
+    /// Squared 2-norm of column `j`, i.e. `(XᵀX)_jj`.
+    pub fn col_sq_norm(&self, j: usize) -> f64 {
+        let (_, v) = self.col(j);
+        v.iter().map(|x| x * x).sum()
+    }
+
+    /// All column squared norms (the `λ` values of Lemma 1).
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        (0..self.cols).map(|j| self.col_sq_norm(j)).collect()
+    }
+
+    /// y += a * x^j (sparse axpy of column `j` into a dense vector of
+    /// length `rows`).
+    #[inline]
+    pub fn axpy_col(&self, j: usize, a: f64, y: &mut [f64]) {
+        debug_assert_eq!(y.len(), self.rows);
+        let (ri, v) = self.col(j);
+        for (r, x) in ri.iter().zip(v) {
+            y[*r as usize] += a * x;
+        }
+    }
+
+    /// Dot product of column `j` with a dense vector.
+    #[inline]
+    pub fn dot_col(&self, j: usize, y: &[f64]) -> f64 {
+        debug_assert_eq!(y.len(), self.rows);
+        let (ri, v) = self.col(j);
+        let mut acc = 0.0;
+        for (r, x) in ri.iter().zip(v) {
+            acc += y[*r as usize] * x;
+        }
+        acc
+    }
+
+    /// Dense matrix-vector product `X w` (over columns; `w` has length `cols`).
+    pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.cols);
+        let mut out = vec![0.0; self.rows];
+        for (j, &wj) in w.iter().enumerate() {
+            if wj != 0.0 {
+                self.axpy_col(j, wj, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Transposed product `Xᵀ r` (`r` has length `rows`).
+    pub fn matvec_t(&self, r: &[f64]) -> Vec<f64> {
+        assert_eq!(r.len(), self.rows);
+        (0..self.cols).map(|j| self.dot_col(j, r)).collect()
+    }
+
+    /// Extract columns `idx` as a dense row-major `rows × idx.len()` block
+    /// (f32, for the PJRT dense path).
+    pub fn dense_block_f32(&self, idx: &[usize]) -> Vec<f32> {
+        let p = idx.len();
+        let mut out = vec![0f32; self.rows * p];
+        for (k, &j) in idx.iter().enumerate() {
+            let (ri, v) = self.col(j);
+            for (r, x) in ri.iter().zip(v) {
+                out[*r as usize * p + k] = *x as f32;
+            }
+        }
+        out
+    }
+
+    /// Full dense row-major export (small matrices / tests only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for j in 0..self.cols {
+            let (ri, v) = self.col(j);
+            for (r, x) in ri.iter().zip(v) {
+                out[*r as usize * self.cols + j] = *x;
+            }
+        }
+        out
+    }
+
+    /// CSR view of the same matrix: per-row (col, val) lists.
+    pub fn to_csr(&self) -> CsrMat {
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        for &r in &self.row_idx {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut vals = vec![0f64; self.nnz()];
+        let mut next = row_ptr.clone();
+        for j in 0..self.cols {
+            let (ri, v) = self.col(j);
+            for (r, x) in ri.iter().zip(v) {
+                let k = next[*r as usize];
+                col_idx[k] = j as u32;
+                vals[k] = *x;
+                next[*r as usize] += 1;
+            }
+        }
+        CsrMat {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr,
+            col_idx,
+            vals,
+        }
+    }
+
+    /// Scale every column to unit 2-norm (paper: document datasets are
+    /// "normalized to unit vectors" — note the paper normalizes *samples*;
+    /// feature-wise normalization is the Lemma 1(a) footnote-5 trick that
+    /// makes `E[λ̄(B)]` constant). Returns the applied per-column scales.
+    pub fn normalize_cols(&mut self) -> Vec<f64> {
+        let mut scales = vec![1.0; self.cols];
+        for j in 0..self.cols {
+            let nrm = self.col_sq_norm(j).sqrt();
+            if nrm > 0.0 {
+                scales[j] = 1.0 / nrm;
+                let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
+                for v in &mut self.vals[a..b] {
+                    *v /= nrm;
+                }
+            }
+        }
+        scales
+    }
+
+    /// Scale every row (sample) to unit 2-norm, as the paper does for the
+    /// document datasets.
+    pub fn normalize_rows(&mut self) {
+        let mut sq = vec![0.0; self.rows];
+        for (&r, &v) in self.row_idx.iter().zip(&self.vals) {
+            sq[r as usize] += v * v;
+        }
+        let inv: Vec<f64> = sq
+            .iter()
+            .map(|&s| if s > 0.0 { 1.0 / s.sqrt() } else { 1.0 })
+            .collect();
+        for (r, v) in self.row_idx.iter().zip(self.vals.iter_mut()) {
+            *v *= inv[*r as usize];
+        }
+    }
+
+    /// Vertically stack `k` copies of this matrix (paper §5.4.1 duplicates
+    /// samples to scale data size while keeping feature correlation fixed).
+    pub fn vstack_copies(&self, k: usize) -> CscMat {
+        assert!(k >= 1);
+        let mut col_ptr = vec![0usize; self.cols + 1];
+        let mut row_idx = Vec::with_capacity(self.nnz() * k);
+        let mut vals = Vec::with_capacity(self.nnz() * k);
+        for j in 0..self.cols {
+            let (ri, v) = self.col(j);
+            for copy in 0..k {
+                let off = (copy * self.rows) as u32;
+                for (r, x) in ri.iter().zip(v) {
+                    row_idx.push(off + r);
+                    vals.push(*x);
+                }
+            }
+            col_ptr[j + 1] = row_idx.len();
+        }
+        CscMat {
+            rows: self.rows * k,
+            cols: self.cols,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+
+    /// Select a subset of rows (samples), renumbering them in order.
+    pub fn select_rows(&self, keep: &[usize]) -> CscMat {
+        let mut remap = vec![u32::MAX; self.rows];
+        for (new, &old) in keep.iter().enumerate() {
+            remap[old] = new as u32;
+        }
+        let mut col_ptr = vec![0usize; self.cols + 1];
+        let mut row_idx = Vec::new();
+        let mut vals = Vec::new();
+        for j in 0..self.cols {
+            let (ri, v) = self.col(j);
+            let mut entries: Vec<(u32, f64)> = ri
+                .iter()
+                .zip(v)
+                .filter_map(|(r, x)| {
+                    let nr = remap[*r as usize];
+                    (nr != u32::MAX).then_some((nr, *x))
+                })
+                .collect();
+            entries.sort_unstable_by_key(|&(r, _)| r);
+            for (r, x) in entries {
+                row_idx.push(r);
+                vals.push(x);
+            }
+            col_ptr[j + 1] = row_idx.len();
+        }
+        CscMat {
+            rows: keep.len(),
+            cols: self.cols,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+
+    /// A random sparse matrix (tests/benches).
+    pub fn random(rows: usize, cols: usize, density: f64, rng: &mut Pcg64) -> CscMat {
+        let per_col = ((rows as f64 * density).round() as usize).clamp(1, rows);
+        let mut col_ptr = vec![0usize; cols + 1];
+        let mut row_idx = Vec::with_capacity(per_col * cols);
+        let mut vals = Vec::with_capacity(per_col * cols);
+        for j in 0..cols {
+            let mut support = rng.sample_indices(rows, per_col);
+            support.sort_unstable();
+            for r in support {
+                row_idx.push(r as u32);
+                vals.push(rng.normal());
+            }
+            col_ptr[j + 1] = row_idx.len();
+        }
+        CscMat {
+            rows,
+            cols,
+            col_ptr,
+            row_idx,
+            vals,
+        }
+    }
+}
+
+/// Compressed sparse row view (derived from [`CscMat::to_csr`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl CsrMat {
+    /// Row `i` as (col indices, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[a..b], &self.vals[a..b])
+    }
+
+    /// Dot of row `i` with dense `w`.
+    #[inline]
+    pub fn dot_row(&self, i: usize, w: &[f64]) -> f64 {
+        let (ci, v) = self.row(i);
+        let mut acc = 0.0;
+        for (c, x) in ci.iter().zip(v) {
+            acc += w[*c as usize] * x;
+        }
+        acc
+    }
+
+    /// Dense product `X w`.
+    pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
+        (0..self.rows).map(|i| self.dot_row(i, w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::{prop_assert, prop_close, run_prop, Gen};
+    use crate::testutil::{assert_all_close, assert_close};
+
+    fn small() -> CscMat {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5],
+        //  [0, 0, 6]]
+        CscMat::from_triplets(
+            4,
+            3,
+            &[
+                (0, 0, 1.0),
+                (2, 0, 4.0),
+                (1, 1, 3.0),
+                (0, 2, 2.0),
+                (2, 2, 5.0),
+                (3, 2, 6.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn triplets_build_and_access() {
+        let m = small();
+        assert_eq!(m.nnz(), 6);
+        let (ri, v) = m.col(0);
+        assert_eq!(ri, &[0, 2]);
+        assert_eq!(v, &[1.0, 4.0]);
+        assert_close(m.col_sq_norm(2), 4.0 + 25.0 + 36.0, 1e-12);
+        assert_close(m.density(), 6.0 / 12.0, 1e-12);
+    }
+
+    #[test]
+    fn duplicates_summed_zeros_dropped() {
+        let m = CscMat::from_triplets(2, 2, &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 3.0), (1, 1, -3.0)]);
+        assert_eq!(m.nnz(), 1);
+        let (ri, v) = m.col(0);
+        assert_eq!((ri, v), (&[0u32][..], &[3.0][..]));
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = small();
+        let w = vec![1.0, -2.0, 0.5];
+        let got = m.matvec(&w);
+        assert_all_close(&got, &[1.0 + 1.0, -6.0, 4.0 + 2.5, 3.0], 1e-12);
+        let r = vec![1.0, 1.0, 1.0, 1.0];
+        let gt = m.matvec_t(&r);
+        assert_all_close(&gt, &[5.0, 3.0, 13.0], 1e-12);
+    }
+
+    #[test]
+    fn csr_roundtrip_matches() {
+        let m = small();
+        let csr = m.to_csr();
+        let w = vec![0.3, 0.7, -0.1];
+        assert_all_close(&csr.matvec(&w), &m.matvec(&w), 1e-12);
+        let (ci, v) = csr.row(2);
+        assert_eq!(ci, &[0, 2]);
+        assert_eq!(v, &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn dense_block_gather() {
+        let m = small();
+        let blk = m.dense_block_f32(&[2, 0]);
+        // rows × 2, row-major: col order [2, 0]
+        assert_eq!(
+            blk,
+            vec![2.0, 1.0, 0.0, 0.0, 5.0, 4.0, 6.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn normalize_cols_unit_norm() {
+        let mut m = small();
+        m.normalize_cols();
+        for j in 0..m.cols {
+            assert_close(m.col_sq_norm(j), 1.0, 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut m = small();
+        m.normalize_rows();
+        let csr = m.to_csr();
+        for i in 0..m.rows {
+            let (_, v) = csr.row(i);
+            if !v.is_empty() {
+                let nrm: f64 = v.iter().map(|x| x * x).sum();
+                assert_close(nrm, 1.0, 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn vstack_duplicates_samples() {
+        let m = small();
+        let m3 = m.vstack_copies(3);
+        assert_eq!(m3.rows, 12);
+        assert_eq!(m3.nnz(), 18);
+        let w = vec![1.0, 1.0, 1.0];
+        let base = m.matvec(&w);
+        let got = m3.matvec(&w);
+        for c in 0..3 {
+            assert_all_close(&got[c * 4..(c + 1) * 4], &base, 1e-12);
+        }
+        // column norms scale by 3
+        assert_close(m3.col_sq_norm(0), 3.0 * m.col_sq_norm(0), 1e-12);
+    }
+
+    #[test]
+    fn select_rows_subset() {
+        let m = small();
+        let sub = m.select_rows(&[2, 3]);
+        assert_eq!(sub.rows, 2);
+        let w = vec![1.0, 1.0, 1.0];
+        assert_all_close(&sub.matvec(&w), &[9.0, 6.0], 1e-12);
+    }
+
+    #[test]
+    fn prop_matvec_linear() {
+        run_prop("matvec linearity", 64, |g: &mut Gen| {
+            let rows = g.usize_in(1..30);
+            let cols = g.usize_in(1..30);
+            let m = CscMat::random(rows, cols, g.f64_in(0.05..0.9), g.rng());
+            let w1 = g.vec_f64(cols..cols + 1, -2.0..2.0);
+            let w2 = g.vec_f64(cols..cols + 1, -2.0..2.0);
+            let a = g.f64_in(-3.0..3.0);
+            let combo: Vec<f64> = w1.iter().zip(&w2).map(|(x, y)| x + a * y).collect();
+            let lhs = m.matvec(&combo);
+            let m1 = m.matvec(&w1);
+            let m2 = m.matvec(&w2);
+            for i in 0..rows {
+                prop_close(lhs[i], m1[i] + a * m2[i], 1e-9, "linearity")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_csr_csc_agree() {
+        run_prop("csr/csc matvec agree", 64, |g: &mut Gen| {
+            let rows = g.usize_in(1..40);
+            let cols = g.usize_in(1..40);
+            let m = CscMat::random(rows, cols, g.f64_in(0.02..0.8), g.rng());
+            let w = g.vec_f64(cols..cols + 1, -5.0..5.0);
+            let a = m.matvec(&w);
+            let b = m.to_csr().matvec(&w);
+            for i in 0..rows {
+                prop_close(a[i], b[i], 1e-10, "matvec mismatch")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dense_roundtrip() {
+        run_prop("to_dense consistent with col access", 32, |g: &mut Gen| {
+            let rows = g.usize_in(1..15);
+            let cols = g.usize_in(1..15);
+            let m = CscMat::random(rows, cols, g.f64_in(0.1..1.0), g.rng());
+            let d = m.to_dense();
+            for j in 0..cols {
+                let (ri, v) = m.col(j);
+                let mut sum = 0.0;
+                for (r, x) in ri.iter().zip(v) {
+                    prop_close(d[*r as usize * cols + j], *x, 1e-12, "entry")?;
+                    sum += x;
+                }
+                let dsum: f64 = (0..rows).map(|r| d[r * cols + j]).sum();
+                prop_close(dsum, sum, 1e-9, "col sum")?;
+            }
+            prop_assert(true, "")
+        });
+    }
+}

@@ -1,0 +1,109 @@
+//! Train/test splitting and subsampling (paper §5.3 splits each dataset
+//! into 1/5 test + 4/5 train; §5.4.1 subsamples 50–100% and duplicates
+//! 100–2000% for the data-size scalability study).
+
+use super::Dataset;
+use crate::util::rng::Pcg64;
+
+/// Random split into (train, test) with `test_frac` of samples held out.
+pub fn train_test_split(d: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let s = d.samples();
+    let mut rng = Pcg64::new(seed);
+    let perm = rng.permutation(s);
+    let n_test = ((s as f64) * test_frac).round() as usize;
+    let (test_idx, train_idx) = perm.split_at(n_test);
+    let mut train_idx = train_idx.to_vec();
+    let mut test_idx = test_idx.to_vec();
+    train_idx.sort_unstable();
+    test_idx.sort_unstable();
+    (
+        select(d, &train_idx, format!("{}-train", d.name)),
+        select(d, &test_idx, format!("{}-test", d.name)),
+    )
+}
+
+/// Keep a fraction of samples (paper §5.4.1's 50%–100% sweep).
+pub fn subsample(d: &Dataset, frac: f64, seed: u64) -> Dataset {
+    assert!(frac > 0.0 && frac <= 1.0);
+    let s = d.samples();
+    let keep_n = ((s as f64) * frac).round().max(1.0) as usize;
+    let mut rng = Pcg64::new(seed);
+    let mut keep = rng.sample_indices(s, keep_n);
+    keep.sort_unstable();
+    select(d, &keep, format!("{}@{:.0}%", d.name, frac * 100.0))
+}
+
+fn select(d: &Dataset, idx: &[usize], name: String) -> Dataset {
+    let x = d.x.select_rows(idx);
+    let y = idx.iter().map(|&i| d.y[i]).collect();
+    Dataset { name, x, y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::testutil::prop::{prop_assert, run_prop, Gen};
+
+    fn toy(samples: usize) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples,
+                features: 30,
+                nnz_per_row: 5,
+                ..Default::default()
+            },
+            3,
+        )
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = toy(100);
+        let (tr, te) = train_test_split(&d, 0.2, 1);
+        assert_eq!(tr.samples(), 80);
+        assert_eq!(te.samples(), 20);
+        assert_eq!(tr.features(), 30);
+        assert_eq!(te.features(), 30);
+    }
+
+    #[test]
+    fn split_partitions_nnz() {
+        let d = toy(60);
+        let (tr, te) = train_test_split(&d, 0.25, 9);
+        assert_eq!(tr.x.nnz() + te.x.nnz(), d.x.nnz());
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = toy(50);
+        let (a, _) = train_test_split(&d, 0.2, 42);
+        let (b, _) = train_test_split(&d, 0.2, 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn subsample_size() {
+        let d = toy(100);
+        let h = subsample(&d, 0.5, 7);
+        assert_eq!(h.samples(), 50);
+        assert_eq!(h.features(), 30);
+        let full = subsample(&d, 1.0, 7);
+        assert_eq!(full.samples(), 100);
+    }
+
+    #[test]
+    fn prop_split_covers_all_labels() {
+        run_prop("split preserves label multiset", 24, |g: &mut Gen| {
+            let d = toy(g.usize_in(5..80));
+            let frac = g.f64_in(0.1..0.9);
+            let seed = g.rng().next_u64();
+            let (tr, te) = train_test_split(&d, frac, seed);
+            prop_assert(tr.samples() + te.samples() == d.samples(), "sizes")?;
+            let pos = |ds: &Dataset| ds.y.iter().filter(|&&v| v > 0.0).count();
+            prop_assert(pos(&tr) + pos(&te) == pos(&d), "labels partitioned")
+        });
+    }
+}

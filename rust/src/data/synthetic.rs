@@ -1,0 +1,312 @@
+//! Seeded synthetic dataset generation.
+//!
+//! The paper evaluates on six LIBSVM datasets that cannot be downloaded in
+//! this offline environment, so `generate` produces analogs that match the
+//! statistics the algorithms are actually sensitive to (see DESIGN.md §3):
+//!
+//! * **shape** `s × n` and **sparsity** (nnz per row) — drives per-iteration
+//!   cost and the memory-bandwidth story of §5.3;
+//! * **column-norm spread** `(XᵀX)_jj` — the `λ_k` order statistics of
+//!   Lemma 1(a) that determine `E[λ̄(B)]` and hence `T_ε` vs `P`;
+//! * **feature correlation** — what makes SCDN diverge (spectral radius
+//!   `ρ(XᵀX)`) and P-dimensional line-search steps shrink;
+//! * **label noise / separability** — test-accuracy curves.
+//!
+//! The generator is deterministic given (spec, seed).
+
+use super::{CscMat, Dataset};
+use crate::util::rng::Pcg64;
+
+/// Knobs for the generator.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    /// Number of samples `s`.
+    pub samples: usize,
+    /// Number of features `n`.
+    pub features: usize,
+    /// Average number of nonzero features per sample.
+    pub nnz_per_row: usize,
+    /// Number of correlated feature groups. `0` ⇒ fully independent
+    /// features. Groups share a latent per-sample factor and overlap in
+    /// support, which raises `ρ(XᵀX)`.
+    pub corr_groups: usize,
+    /// In `[0, 1)`: weight of the shared latent factor within a group.
+    pub corr_strength: f64,
+    /// Log-normal σ of per-column scale (spreads the `λ_k` spectrum;
+    /// `0` ⇒ identical column norms as in footnote 5 of the paper).
+    pub scale_sigma: f64,
+    /// Fraction of features active in the true weight vector.
+    pub true_density: f64,
+    /// Probability of flipping each label (noise).
+    pub label_noise: f64,
+    /// Normalize every sample (row) to unit 2-norm, as the paper's document
+    /// datasets are.
+    pub row_normalize: bool,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec {
+            samples: 200,
+            features: 100,
+            nnz_per_row: 10,
+            corr_groups: 0,
+            corr_strength: 0.5,
+            scale_sigma: 0.5,
+            true_density: 0.1,
+            label_noise: 0.05,
+            row_normalize: true,
+        }
+    }
+}
+
+/// Generate a dataset from a spec. Deterministic in `(spec, seed)`.
+pub fn generate(spec: &SyntheticSpec, seed: u64) -> Dataset {
+    let s = spec.samples;
+    let n = spec.features;
+    assert!(s > 0 && n > 0, "empty dataset spec");
+    let nnz_row = spec.nnz_per_row.clamp(1, n);
+    let mut rng = Pcg64::new(seed);
+
+    // Per-column scales: log-normal spread of the λ spectrum.
+    let scales: Vec<f64> = (0..n)
+        .map(|_| (spec.scale_sigma * rng.normal()).exp())
+        .collect();
+
+    // Group assignment for correlated features. Feature j belongs to group
+    // j % corr_groups (interleaved so bundles hit many groups).
+    let groups = spec.corr_groups;
+    // Latent per-sample factors, one per group.
+    let latent: Vec<Vec<f64>> = (0..groups)
+        .map(|_| (0..s).map(|_| rng.normal()).collect())
+        .collect();
+
+    // Row-wise generation: each sample picks `nnz_row` distinct features.
+    // Generating by row (not column) gives the row-sparsity structure the
+    // LIBSVM text format and the paper's datasets have.
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(s * nnz_row);
+    for i in 0..s {
+        let k = if nnz_row as f64 >= 0.9 * n as f64 {
+            // Effectively dense rows (gisette-like): keep them dense.
+            nnz_row
+        } else {
+            // ±30% jitter on per-row nnz for realism.
+            let lo = (nnz_row as f64 * 0.7).floor().max(1.0) as usize;
+            let hi = ((nnz_row as f64 * 1.3).ceil() as usize).min(n);
+            lo + rng.index(hi - lo + 1)
+        };
+        let feats = rng.sample_indices(n, k);
+        for j in feats {
+            let base = if groups > 0 && spec.corr_strength > 0.0 {
+                let g = j % groups;
+                spec.corr_strength * latent[g][i]
+                    + (1.0 - spec.corr_strength) * rng.normal()
+            } else {
+                rng.normal()
+            };
+            let v = base * scales[j];
+            if v != 0.0 {
+                triplets.push((i, j, v));
+            }
+        }
+    }
+    let mut x = CscMat::from_triplets(s, n, &triplets);
+    if spec.row_normalize {
+        x.normalize_rows();
+    }
+
+    // Ground-truth sparse weight vector and noisy labels.
+    let true_nnz = ((n as f64 * spec.true_density).round() as usize).clamp(1, n);
+    let mut w_true = vec![0.0; n];
+    for j in rng.sample_indices(n, true_nnz) {
+        w_true[j] = rng.normal() * 2.0;
+    }
+    let z = x.matvec(&w_true);
+    let y: Vec<f64> = z
+        .iter()
+        .map(|&zi| {
+            let sign = if zi + 0.1 * rng.normal() >= 0.0 { 1.0 } else { -1.0 };
+            if rng.bernoulli(spec.label_noise) {
+                -sign
+            } else {
+                sign
+            }
+        })
+        .collect();
+
+    Dataset::new("synthetic", x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::power::spectral_radius_xtx;
+    use crate::testutil::prop::{prop_assert, run_prop, Gen};
+
+    #[test]
+    fn deterministic() {
+        let spec = SyntheticSpec::default();
+        let a = generate(&spec, 5);
+        let b = generate(&spec, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = generate(&spec, 6);
+        assert!(a.x != c.x);
+    }
+
+    #[test]
+    fn shape_and_sparsity_match_spec() {
+        let spec = SyntheticSpec {
+            samples: 300,
+            features: 500,
+            nnz_per_row: 20,
+            ..Default::default()
+        };
+        let d = generate(&spec, 1);
+        assert_eq!(d.samples(), 300);
+        assert_eq!(d.features(), 500);
+        let nnz_row = d.x.nnz() as f64 / 300.0;
+        assert!(
+            (nnz_row - 20.0).abs() < 3.0,
+            "avg nnz/row {nnz_row} far from 20"
+        );
+    }
+
+    #[test]
+    fn row_normalization() {
+        let d = generate(&SyntheticSpec::default(), 3);
+        let csr = d.x.to_csr();
+        for i in 0..d.samples() {
+            let (_, v) = csr.row(i);
+            if !v.is_empty() {
+                let nrm: f64 = v.iter().map(|x| x * x).sum();
+                assert!((nrm - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_learnable() {
+        // A low-noise dataset must be separably structured: a few CDN-like
+        // passes of plain gradient descent should beat chance comfortably.
+        let spec = SyntheticSpec {
+            samples: 400,
+            features: 50,
+            nnz_per_row: 10,
+            label_noise: 0.0,
+            ..Default::default()
+        };
+        let d = generate(&spec, 11);
+        let mut w = vec![0.0; d.features()];
+        for _ in 0..60 {
+            let z = d.x.matvec(&w);
+            let resid: Vec<f64> = z
+                .iter()
+                .zip(&d.y)
+                .map(|(zi, yi)| yi / (1.0 + (yi * zi).exp()))
+                .collect();
+            let grad = d.x.matvec_t(&resid);
+            for (wj, gj) in w.iter_mut().zip(&grad) {
+                *wj += 0.5 * gj;
+            }
+        }
+        let acc = d.accuracy(&w);
+        assert!(acc > 0.85, "accuracy only {acc}");
+    }
+
+    #[test]
+    fn correlation_raises_spectral_radius() {
+        let base = SyntheticSpec {
+            samples: 200,
+            features: 80,
+            nnz_per_row: 30,
+            scale_sigma: 0.0,
+            row_normalize: false,
+            ..Default::default()
+        };
+        let indep = generate(
+            &SyntheticSpec {
+                corr_groups: 0,
+                ..base.clone()
+            },
+            2,
+        );
+        let corr = generate(
+            &SyntheticSpec {
+                corr_groups: 4,
+                corr_strength: 0.9,
+                ..base
+            },
+            2,
+        );
+        let r_indep = spectral_radius_xtx(&indep.x, 200, 1e-6);
+        let r_corr = spectral_radius_xtx(&corr.x, 200, 1e-6);
+        assert!(
+            r_corr > 1.5 * r_indep,
+            "correlated ρ {r_corr} not ≫ independent ρ {r_indep}"
+        );
+    }
+
+    #[test]
+    fn scale_sigma_spreads_column_norms() {
+        let flat = generate(
+            &SyntheticSpec {
+                scale_sigma: 0.0,
+                row_normalize: false,
+                samples: 500,
+                features: 60,
+                nnz_per_row: 30,
+                ..Default::default()
+            },
+            4,
+        );
+        let spread = generate(
+            &SyntheticSpec {
+                scale_sigma: 1.0,
+                row_normalize: false,
+                samples: 500,
+                features: 60,
+                nnz_per_row: 30,
+                ..Default::default()
+            },
+            4,
+        );
+        let cv = |d: &Dataset| {
+            let norms = d.x.col_sq_norms();
+            let mean = norms.iter().sum::<f64>() / norms.len() as f64;
+            let var = norms.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+                / norms.len() as f64;
+            var.sqrt() / mean
+        };
+        assert!(cv(&spread) > 2.0 * cv(&flat));
+    }
+
+    #[test]
+    fn prop_valid_for_arbitrary_specs() {
+        run_prop("synthetic always valid", 24, |g: &mut Gen| {
+            let spec = SyntheticSpec {
+                samples: g.usize_in(1..60),
+                features: g.usize_in(1..60),
+                nnz_per_row: g.usize_in(1..20),
+                corr_groups: g.usize_in(0..5),
+                corr_strength: g.f64_in(0.0..0.99),
+                scale_sigma: g.f64_in(0.0..1.5),
+                true_density: g.f64_in(0.01..1.0),
+                label_noise: g.f64_in(0.0..0.5),
+                row_normalize: g.bool(),
+            };
+            let seed = g.rng().next_u64();
+            let d = generate(&spec, seed);
+            prop_assert(d.samples() == spec.samples, "sample count")?;
+            prop_assert(d.features() == spec.features, "feature count")?;
+            prop_assert(
+                d.y.iter().all(|&v| v == 1.0 || v == -1.0),
+                "labels valid",
+            )?;
+            prop_assert(
+                d.x.vals.iter().all(|v| v.is_finite()),
+                "values finite",
+            )
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! # PCDN — Parallel Coordinate Descent Newton for ℓ1-Regularized Minimization
+//!
+//! A production-quality reproduction of *Bian, Li, Liu, Yang — "Parallel
+//! Coordinate Descent Newton Method for Efficient ℓ1-Regularized
+//! Minimization" (2013)* as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: sparse dataset substrate, the
+//!   PCDN/CDN/SCDN/TRON solver family, the bundle scheduler and worker
+//!   pool, the experiment drivers that regenerate every table and figure of
+//!   the paper, and a PJRT runtime that executes AOT-compiled bundle
+//!   kernels on the dense path.
+//! * **L2 (`python/compile/model.py`)** — the per-bundle compute graph in
+//!   JAX, lowered once to HLO text at build time (`make artifacts`).
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the bundle
+//!   gradient/Hessian hot-spot, validated against a pure-jnp oracle.
+//!
+//! Python never runs at training time; the rust binary is self-contained
+//! once `artifacts/` is built.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pcdn::data::registry;
+//! use pcdn::loss::Objective;
+//! use pcdn::solver::{pcdn::Pcdn, Solver, TrainOptions};
+//!
+//! let analog = registry::by_name("real-sim").unwrap();
+//! let train = analog.train();
+//! let opts = TrainOptions {
+//!     c: analog.c_logistic,
+//!     bundle_size: 256,
+//!     ..TrainOptions::default()
+//! };
+//! let result = Pcdn::new().train(&train, Objective::Logistic, &opts);
+//! println!("F(w) = {}, nnz = {}", result.final_objective, result.model_nnz());
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod distributed;
+pub mod linalg;
+pub mod loss;
+pub mod parallel;
+pub mod runtime;
+pub mod solver;
+pub mod testutil;
+pub mod util;

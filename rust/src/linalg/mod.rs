@@ -1,0 +1,85 @@
+//! Small dense linear-algebra helpers used on solver hot paths.
+
+pub mod power;
+
+/// 1-norm `‖v‖₁`.
+#[inline]
+pub fn norm1(v: &[f64]) -> f64 {
+    v.iter().map(|x| x.abs()).sum()
+}
+
+/// Squared 2-norm.
+#[inline]
+pub fn norm2_sq(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum()
+}
+
+/// 2-norm.
+#[inline]
+pub fn norm2(v: &[f64]) -> f64 {
+    norm2_sq(v).sqrt()
+}
+
+/// Infinity norm.
+#[inline]
+pub fn norm_inf(v: &[f64]) -> f64 {
+    v.iter().fold(0.0, |m, x| m.max(x.abs()))
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// y ← y + a·x.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Count of nonzero entries (model sparsity, paper Fig. 7 "NNZ").
+#[inline]
+pub fn nnz(v: &[f64]) -> usize {
+    v.iter().filter(|x| **x != 0.0).count()
+}
+
+/// Normalize a vector to unit 2-norm in place (no-op on the zero vector).
+#[inline]
+pub fn scale_in_place_unit(v: &mut [f64]) {
+    let n = norm2(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        let v = [3.0, -4.0];
+        assert_eq!(norm1(&v), 7.0);
+        assert_eq!(norm2(&v), 5.0);
+        assert_eq!(norm2_sq(&v), 25.0);
+        assert_eq!(norm_inf(&v), 4.0);
+        assert_eq!(nnz(&[0.0, 1.0, 0.0, -2.0]), 2);
+    }
+
+    #[test]
+    fn dot_axpy() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6.0, 9.0, 12.0]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Power iteration for the spectral radius `ρ(XᵀX)`.
+//!
+//! SCDN's convergence condition (paper §2.2) bounds the safe parallelism at
+//! `P̄ ≤ n/ρ + 1` where `ρ` is the spectral radius of `XᵀX`. The paper notes
+//! ρ is hard to estimate for large data; here a sparse power iteration gives
+//! it directly for the analog datasets so the benches can report where SCDN
+//! *should* start diverging.
+
+use crate::data::CscMat;
+use crate::linalg::{norm2, scale_in_place_unit};
+use crate::util::rng::Pcg64;
+
+/// Estimate the largest eigenvalue of `XᵀX` with power iteration.
+///
+/// `XᵀX` is PSD, so the dominant eigenvalue equals the spectral radius.
+/// Each iteration costs two passes over the nonzeros (`Xv` then `Xᵀ(Xv)`).
+pub fn spectral_radius_xtx(x: &CscMat, max_iter: usize, tol: f64) -> f64 {
+    let n = x.cols;
+    if n == 0 || x.nnz() == 0 {
+        return 0.0;
+    }
+    let mut rng = Pcg64::new(0x5eed);
+    let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    scale_in_place_unit(&mut v);
+    let mut lambda = 0.0f64;
+    for _ in 0..max_iter {
+        let xv = x.matvec(&v);
+        let mut w = x.matvec_t(&xv);
+        let new_lambda = norm2(&w);
+        if new_lambda == 0.0 {
+            return 0.0;
+        }
+        for wi in &mut w {
+            *wi /= new_lambda;
+        }
+        let delta = (new_lambda - lambda).abs() / new_lambda.max(1e-300);
+        v = w;
+        lambda = new_lambda;
+        if delta < tol {
+            break;
+        }
+    }
+    lambda
+}
+
+/// The SCDN safe-parallelism bound `P̄ ≤ n/ρ + 1` (paper §2.2).
+pub fn scdn_parallelism_bound(x: &CscMat) -> f64 {
+    let rho = spectral_radius_xtx(x, 300, 1e-9);
+    if rho <= 0.0 {
+        x.cols as f64
+    } else {
+        x.cols as f64 / rho + 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        // X = diag(1, 2, 3) ⇒ XᵀX = diag(1, 4, 9) ⇒ ρ = 9.
+        let x = CscMat::from_triplets(3, 3, &[(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0)]);
+        assert_close(spectral_radius_xtx(&x, 500, 1e-12), 9.0, 1e-6);
+    }
+
+    #[test]
+    fn rank_one_exact() {
+        // X = u vᵀ with u=(1,2), v=(3,4): XᵀX = ‖u‖² v vᵀ, ρ = ‖u‖²‖v‖² = 5·25.
+        let x = CscMat::from_triplets(
+            2,
+            2,
+            &[(0, 0, 3.0), (0, 1, 4.0), (1, 0, 6.0), (1, 1, 8.0)],
+        );
+        assert_close(spectral_radius_xtx(&x, 500, 1e-12), 125.0, 1e-6);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let x = CscMat::zeros(5, 4);
+        assert_eq!(spectral_radius_xtx(&x, 10, 1e-9), 0.0);
+    }
+
+    #[test]
+    fn bound_reasonable() {
+        let x = CscMat::from_triplets(2, 4, &[(0, 0, 1.0), (1, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0)]);
+        let b = scdn_parallelism_bound(&x);
+        assert!(b >= 1.0 && b <= 5.0, "bound {b}");
+    }
+
+    #[test]
+    fn rho_at_least_max_column_norm() {
+        // ρ(XᵀX) ≥ max_j (XᵀX)_jj always.
+        let mut rng = crate::util::rng::Pcg64::new(77);
+        let x = CscMat::random(30, 20, 0.3, &mut rng);
+        let rho = spectral_radius_xtx(&x, 500, 1e-10);
+        let max_diag = x
+            .col_sq_norms()
+            .into_iter()
+            .fold(0.0f64, f64::max);
+        assert!(rho >= max_diag - 1e-8, "rho {rho} < max diag {max_diag}");
+    }
+}

@@ -1,0 +1,153 @@
+//! ℓ1-regularized ℓ2-loss SVM (squared hinge; paper Eq. 3).
+//!
+//! Maintained quantity: `b_i = 1 − y_i wᵀx_i` per sample. The loss touches
+//! only the active set `I(w) = {i : b_i > 0}` (margin violators):
+//!
+//! * `L(w)        = c·Σ_{i∈I} b_i²`
+//! * `∇_j L       = −2c·Σ_{i∈I} y_i b_i x_ij`  → `grad_factor[i] = −2 y_i max(b_i, 0)`
+//! * `∇²_jj L     =  2c·Σ_{i∈I} x_ij²`         → `hess_factor[i] = 2·[b_i > 0]`
+//!
+//! The generalized Hessian needs the `ν = 1e-12` floor (footnote 1, Chang
+//! et al. 2008) because `∇²_jj` vanishes when no active sample touches
+//! feature `j`; the floor is applied centrally in `LossState::grad_hess_j`.
+
+use crate::data::Dataset;
+
+pub struct L2SvmState<'a> {
+    pub data: &'a Dataset,
+    pub c: f64,
+    /// Maintained `b_i = 1 − y_i wᵀx_i`.
+    pub b: Vec<f64>,
+    /// `−2·y_i·max(b_i, 0)`.
+    pub grad_factor: Vec<f64>,
+    /// `2` if `b_i > 0` else `0`.
+    pub hess_factor: Vec<f64>,
+}
+
+impl<'a> L2SvmState<'a> {
+    /// State at `w = 0` (every margin violated: `b_i = 1`).
+    pub fn new(data: &'a Dataset, c: f64) -> Self {
+        let s = data.samples();
+        let mut st = L2SvmState {
+            data,
+            c,
+            b: vec![1.0; s],
+            grad_factor: vec![0.0; s],
+            hess_factor: vec![0.0; s],
+        };
+        for i in 0..s {
+            st.refresh_sample(i);
+        }
+        st
+    }
+
+    #[inline]
+    fn refresh_sample(&mut self, i: usize) {
+        let bi = self.b[i];
+        if bi > 0.0 {
+            self.grad_factor[i] = -2.0 * self.data.y[i] * bi;
+            self.hess_factor[i] = 2.0;
+        } else {
+            self.grad_factor[i] = 0.0;
+            self.hess_factor[i] = 0.0;
+        }
+    }
+
+    /// `L(w) = c·Σ max(0, b_i)²`.
+    pub fn loss_value(&self) -> f64 {
+        let acc: f64 = self
+            .b
+            .iter()
+            .map(|&bi| if bi > 0.0 { bi * bi } else { 0.0 })
+            .sum();
+        self.c * acc
+    }
+
+    /// `L(w + αd) − L(w)` on touched samples: `b_i` moves by `−y_i·α·dx_i`.
+    pub fn delta_loss(&self, touched: &[u32], dx: &[f64], alpha: f64) -> f64 {
+        debug_assert_eq!(touched.len(), dx.len());
+        let mut acc = 0.0;
+        for (&i, &dxi) in touched.iter().zip(dx) {
+            let i = i as usize;
+            let old = self.b[i];
+            let new = old - self.data.y[i] * alpha * dxi;
+            let o2 = if old > 0.0 { old * old } else { 0.0 };
+            let n2 = if new > 0.0 { new * new } else { 0.0 };
+            acc += n2 - o2;
+        }
+        self.c * acc
+    }
+
+    /// Commit the step.
+    pub fn apply_step(&mut self, touched: &[u32], dx: &[f64], alpha: f64) {
+        debug_assert_eq!(touched.len(), dx.len());
+        for (&i, &dxi) in touched.iter().zip(dx) {
+            let i = i as usize;
+            self.b[i] -= self.data.y[i] * alpha * dxi;
+            self.refresh_sample(i);
+        }
+    }
+
+    /// Rebuild from an explicit model.
+    pub fn reset_from(&mut self, w: &[f64]) {
+        let z = self.data.x.matvec(w);
+        for i in 0..self.data.samples() {
+            self.b[i] = 1.0 - self.data.y[i] * z[i];
+            self.refresh_sample(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::testutil::assert_close;
+
+    fn toy() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 25,
+                features: 10,
+                nnz_per_row: 4,
+                ..Default::default()
+            },
+            8,
+        )
+    }
+
+    #[test]
+    fn zero_model_loss() {
+        let d = toy();
+        let st = L2SvmState::new(&d, 3.0);
+        assert_close(st.loss_value(), 3.0 * d.samples() as f64, 1e-12);
+    }
+
+    #[test]
+    fn inactive_samples_contribute_nothing() {
+        let d = toy();
+        let mut st = L2SvmState::new(&d, 1.0);
+        // Push every margin far positive: b_i very negative ⇒ inactive.
+        let big: Vec<f64> = d.y.iter().map(|&y| 100.0 * y).collect();
+        // b = 1 − y·(y·100) = 1 − 100 < 0 — emulate via reset on a fake w.
+        // Direct surgery on maintained state:
+        for i in 0..d.samples() {
+            st.b[i] = 1.0 - d.y[i] * big[i];
+            st.refresh_sample(i);
+        }
+        assert_eq!(st.loss_value(), 0.0);
+        assert!(st.grad_factor.iter().all(|&g| g == 0.0));
+        assert!(st.hess_factor.iter().all(|&h| h == 0.0));
+    }
+
+    #[test]
+    fn hinge_boundary_behaviour() {
+        // Exactly b = 0 is inactive (strict inequality in I(w)).
+        let d = toy();
+        let mut st = L2SvmState::new(&d, 1.0);
+        st.b[0] = 0.0;
+        st.refresh_sample(0);
+        assert_eq!(st.grad_factor[0], 0.0);
+        assert_eq!(st.hess_factor[0], 0.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! `pcdn` — the launcher binary.
+//!
+//! ```text
+//! pcdn train    --dataset real-sim --solver pcdn --p 256 --eps 1e-3
+//! pcdn train    --config run.json
+//! pcdn bench    --exp fig1 [--full] [--out bench_out]
+//! pcdn inspect  --dataset gisette
+//! pcdn artifacts [--dir artifacts]
+//! ```
+
+use pcdn::coordinator::config::{DataSource, RunConfig, SolverKind};
+use pcdn::coordinator::experiments::{self, ExpOptions};
+use pcdn::coordinator::{run, summarize};
+use pcdn::data::registry;
+use pcdn::linalg::power;
+use pcdn::loss::Objective;
+use pcdn::runtime::PjrtRuntime;
+use pcdn::solver::StopRule;
+use pcdn::util::cli::Cli;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("usage: pcdn <train|bench|inspect|artifacts> [flags]; --help for details");
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let code = match cmd.as_str() {
+        "train" => cmd_train(args),
+        "bench" => cmd_bench(args),
+        "inspect" => cmd_inspect(args),
+        "artifacts" => cmd_artifacts(args),
+        other => {
+            eprintln!("unknown subcommand '{other}' (train|bench|inspect|artifacts)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_train(args: Vec<String>) -> i32 {
+    let cli = Cli::new("pcdn train", "train an l1-regularized linear model")
+        .opt("config", None, "JSON config file (overrides other flags)")
+        .opt("dataset", Some("real-sim"), "analog name or libsvm:<path>")
+        .opt("solver", Some("pcdn"), "pcdn|cdn|scdn|scdn-atomic|tron|pcdn-pjrt")
+        .opt("objective", Some("logistic"), "logistic|svm|lasso")
+        .opt("c", None, "regularization parameter (default: dataset c*)")
+        .opt("p", Some("64"), "bundle size P / SCDN parallelism")
+        .opt("eps", Some("1e-3"), "relative subgradient stopping tolerance")
+        .opt("max-outer", Some("500"), "outer iteration cap")
+        .opt("threads", Some("1"), "worker threads for parallel regions")
+        .opt("seed", Some("0"), "RNG seed")
+        .switch("shrinking", "enable CDN shrinking")
+        .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt solver)");
+    let a = cli.parse_from(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+
+    let cfg = if let Some(path) = a.get("config") {
+        match std::fs::read_to_string(path)
+            .map_err(anyhow::Error::from)
+            .and_then(|t| RunConfig::from_json(&t))
+        {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e:#}");
+                return 2;
+            }
+        }
+    } else {
+        let dataset = a.get("dataset").unwrap().to_string();
+        let data = if let Some(path) = dataset.strip_prefix("libsvm:") {
+            DataSource::LibsvmFile(path.to_string())
+        } else {
+            DataSource::Analog(dataset.clone())
+        };
+        let objective = match a.get("objective") {
+            Some("svm") | Some("l2svm") => Objective::L2Svm,
+            Some("lasso") => Objective::Lasso,
+            _ => Objective::Logistic,
+        };
+        let c = match a.get("c") {
+            Some(v) => v.parse().unwrap_or(1.0),
+            None => registry::by_name(&dataset)
+                .map(|an| match objective {
+                    Objective::Logistic | Objective::Lasso => an.c_logistic,
+                    Objective::L2Svm => an.c_svm,
+                })
+                .unwrap_or(1.0),
+        };
+        RunConfig {
+            solver: match SolverKind::parse(a.get("solver").unwrap()) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("{e:#}");
+                    return 2;
+                }
+            },
+            data,
+            objective,
+            train: pcdn::solver::TrainOptions {
+                c,
+                bundle_size: a.usize("p").unwrap_or(64),
+                n_threads: a.usize("threads").unwrap_or(1),
+                stop: StopRule::SubgradRel(a.f64("eps").unwrap_or(1e-3)),
+                max_outer: a.usize("max-outer").unwrap_or(500),
+                shrinking: a.flag("shrinking"),
+                seed: a.usize("seed").unwrap_or(0) as u64,
+                ..Default::default()
+            },
+            artifacts: a.get("artifacts").unwrap_or("artifacts").to_string(),
+        }
+    };
+    match run(&cfg) {
+        Ok(r) => {
+            println!("{}", summarize(&r));
+            if let Some(tp) = r.trace.last() {
+                println!(
+                    "final trace point: outer {} F = {:.6} nnz = {}",
+                    tp.outer_iter, tp.objective, tp.nnz
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("training failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_bench(args: Vec<String>) -> i32 {
+    let cli = Cli::new("pcdn bench", "regenerate paper tables/figures")
+        .opt(
+            "exp",
+            Some("all"),
+            "table2|fig1|fig2|table3|fig3|fig4|fig5|fig6|theory|all",
+        )
+        .switch("full", "full-scale run (default: quick)")
+        .opt("out", Some("bench_out"), "CSV output directory")
+        .opt("threads", Some("23"), "modeled thread count")
+        .opt("seed", Some("0"), "RNG seed");
+    let a = cli.parse_from(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let opts = ExpOptions {
+        quick: !a.flag("full"),
+        threads: a.usize("threads").unwrap_or(23),
+        seed: a.usize("seed").unwrap_or(0) as u64,
+    };
+    let out_dir = a.get("out").unwrap_or("bench_out").to_string();
+    let which = a.get("exp").unwrap_or("all");
+    let runs: Vec<(&str, experiments::ExpOutput)> = match which {
+        "all" => experiments::all(&opts),
+        "table2" => vec![("table2", experiments::table2(&opts))],
+        "fig1" => vec![("fig1", experiments::fig1(&opts))],
+        "fig2" => vec![("fig2", experiments::fig2(&opts))],
+        "table3" => vec![("table3", experiments::table3(&opts))],
+        "fig3" => vec![("fig3", experiments::fig3(&opts))],
+        "fig4" | "fig7" => vec![("fig4+7", experiments::fig4_and_7(&opts))],
+        "fig5" => vec![("fig5", experiments::fig5(&opts))],
+        "fig6" => vec![("fig6", experiments::fig6(&opts))],
+        "theory" => vec![("theory", experiments::theory_check(&opts))],
+        other => {
+            eprintln!("unknown experiment '{other}'");
+            return 2;
+        }
+    };
+    for (name, out) in runs {
+        println!("==== {name} ====");
+        for (csv_name, table) in &out.tables {
+            println!("{}", table.to_markdown());
+            if let Err(e) = table.write_csv(&out_dir, csv_name) {
+                eprintln!("csv write failed: {e}");
+            }
+        }
+        for plot in &out.plots {
+            println!("{plot}");
+        }
+    }
+    println!("CSVs written to {out_dir}/");
+    0
+}
+
+fn cmd_inspect(args: Vec<String>) -> i32 {
+    let cli = Cli::new("pcdn inspect", "dataset statistics")
+        .opt("dataset", Some("real-sim"), "analog name or libsvm:<path>");
+    let a = cli.parse_from(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let name = a.get("dataset").unwrap();
+    let src = if let Some(p) = name.strip_prefix("libsvm:") {
+        DataSource::LibsvmFile(p.to_string())
+    } else {
+        DataSource::Analog(name.to_string())
+    };
+    match src.load() {
+        Ok(d) => {
+            let rho = power::spectral_radius_xtx(&d.x, 300, 1e-9);
+            println!("dataset   : {}", d.name);
+            println!("samples   : {}", d.samples());
+            println!("features  : {}", d.features());
+            println!("nnz       : {}", d.x.nnz());
+            println!("sparsity  : {:.4}%", d.sparsity() * 100.0);
+            println!("pos rate  : {:.4}", d.positive_rate());
+            println!("rho(XtX)  : {rho:.4}");
+            println!(
+                "SCDN bound: P <= {:.2}  (n/rho + 1, paper §2.2)",
+                d.features() as f64 / rho.max(1e-12) + 1.0
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_artifacts(args: Vec<String>) -> i32 {
+    let cli = Cli::new("pcdn artifacts", "list AOT artifacts")
+        .opt("dir", Some("artifacts"), "artifacts directory");
+    let a = cli.parse_from(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    match PjrtRuntime::cpu(a.get("dir").unwrap()) {
+        Ok(rt) => {
+            println!(
+                "manifest: {} entries, s_quantum = {}",
+                rt.manifest.entries.len(),
+                rt.manifest.s_quantum
+            );
+            for e in &rt.manifest.entries {
+                println!(
+                    "  {:<26} s={:<6} p={:<5} {} inputs -> {:?}",
+                    e.name,
+                    e.s,
+                    e.p,
+                    e.inputs.len(),
+                    e.outputs
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    }
+}

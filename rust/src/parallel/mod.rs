@@ -1,0 +1,10 @@
+//! Parallel execution substrate.
+//!
+//! [`pool`] is a real static-scheduling worker pool mirroring the paper's
+//! OpenMP `parallel for` with static scheduling and one implicit barrier per
+//! region. [`sim`] is the deterministic parallel-schedule *cost model*
+//! (paper Eq. 13/20) used to report multicore numbers on this single-core
+//! testbed — see DESIGN.md §3.
+
+pub mod pool;
+pub mod sim;

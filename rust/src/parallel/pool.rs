@@ -1,0 +1,365 @@
+//! Static-scheduling worker pool — the OpenMP `parallel for` analog.
+//!
+//! The paper's implementation distributes bundle work "among a team of
+//! threads using the parallel for construct with static scheduling" and
+//! needs exactly *one implicit barrier synchronization per iteration*
+//! (§3.1). This pool reproduces that model:
+//!
+//! * `N` long-lived workers, woken per parallel region;
+//! * static chunking: worker `t` handles indices `i` with `i % N == t`
+//!   (interleaved, matching OpenMP `schedule(static, 1)`) — deterministic
+//!   assignment regardless of timing;
+//! * `parallel_for` returns only after every worker finishes: the single
+//!   barrier.
+//!
+//! Work closures receive `(index, worker_id)` so per-worker scratch arrays
+//! can be indexed without locks.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased region body: fn(index, worker_id).
+type RegionFn = Arc<dyn Fn(usize, usize) + Send + Sync>;
+
+struct Shared {
+    /// Monotonic region counter; bumping it (while holding the lock) wakes
+    /// the workers for a new region.
+    region: Mutex<RegionState>,
+    cv: Condvar,
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+    panicked: AtomicBool,
+    active: AtomicUsize,
+}
+
+struct RegionState {
+    epoch: u64,
+    body: Option<RegionFn>,
+    len: usize,
+    remaining_workers: usize,
+}
+
+/// A fixed-size worker pool with static scheduling.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `n_threads` workers (minimum 1). The calling
+    /// thread does not execute region bodies; with `n_threads == 1` the
+    /// pool degrades to a single background worker.
+    pub fn new(n_threads: usize) -> Self {
+        let n_threads = n_threads.max(1);
+        let shared = Arc::new(Shared {
+            region: Mutex::new(RegionState {
+                epoch: 0,
+                body: None,
+                len: 0,
+                remaining_workers: 0,
+            }),
+            cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+        });
+        let workers = (0..n_threads)
+            .map(|wid| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pcdn-worker-{wid}"))
+                    .spawn(move || worker_loop(sh, wid, n_threads))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            shared,
+            workers,
+            n_threads,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Run `body(i, worker_id)` for every `i in 0..len` across the pool and
+    /// wait for completion (the one barrier). Panics in workers propagate.
+    pub fn parallel_for<F>(&self, len: usize, body: F)
+    where
+        F: Fn(usize, usize) + Send + Sync + 'static,
+    {
+        if len == 0 {
+            return;
+        }
+        let body: RegionFn = Arc::new(body);
+        {
+            let mut st = self.shared.region.lock().unwrap();
+            st.epoch += 1;
+            st.body = Some(body);
+            st.len = len;
+            st.remaining_workers = self.n_threads;
+            self.shared.cv.notify_all();
+            // Barrier: wait until every worker has finished this region.
+            while st.remaining_workers > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.body = None;
+        }
+        if self.shared.panicked.swap(false, Ordering::SeqCst) {
+            panic!("worker panicked inside parallel_for");
+        }
+    }
+
+    /// Map over `0..len` collecting results (convenience on top of
+    /// `parallel_for`; output order matches index order).
+    pub fn parallel_map<T, F>(&self, len: usize, f: F) -> Vec<T>
+    where
+        T: Send + Default + Clone + 'static,
+        F: Fn(usize, usize) -> T + Send + Sync + 'static,
+    {
+        let out: Arc<Vec<Mutex<T>>> =
+            Arc::new((0..len).map(|_| Mutex::new(T::default())).collect());
+        let out2 = Arc::clone(&out);
+        self.parallel_for(len, move |i, wid| {
+            *out2[i].lock().unwrap() = f(i, wid);
+        });
+        Arc::try_unwrap(out)
+            .map(|v| v.into_iter().map(|m| m.into_inner().unwrap()).collect())
+            .unwrap_or_else(|arc| arc.iter().map(|m| m.lock().unwrap().clone()).collect())
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>, wid: usize, n_threads: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        // Wait for a new region (or shutdown).
+        let (body, len, epoch) = {
+            let mut st = sh.region.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if st.epoch > seen_epoch && st.body.is_some() {
+                    break;
+                }
+                st = sh.cv.wait(st).unwrap();
+            }
+            (st.body.clone().unwrap(), st.len, st.epoch)
+        };
+        seen_epoch = epoch;
+        sh.active.fetch_add(1, Ordering::SeqCst);
+        // Static interleaved schedule: indices wid, wid+N, wid+2N, ...
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut i = wid;
+            while i < len {
+                body(i, wid);
+                i += n_threads;
+            }
+        }));
+        if result.is_err() {
+            sh.panicked.store(true, Ordering::SeqCst);
+        }
+        sh.active.fetch_sub(1, Ordering::SeqCst);
+        let mut st = sh.region.lock().unwrap();
+        st.remaining_workers -= 1;
+        if st.remaining_workers == 0 {
+            sh.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        {
+            let _guard = self.shared.region.lock().unwrap();
+            self.shared.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Lock-free f64 accumulation via compare-and-swap on the bit pattern —
+/// the paper's "atomic operation … compare-and-swap implementation" used by
+/// SCDN's concurrent weight updates.
+pub struct AtomicF64(std::sync::atomic::AtomicU64);
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        AtomicF64(std::sync::atomic::AtomicU64::new(v.to_bits()))
+    }
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Acquire))
+    }
+    #[inline]
+    pub fn store(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Release)
+    }
+    /// Atomically add `delta` (CAS retry loop), returning the new value.
+    #[inline]
+    pub fn fetch_add(&self, delta: f64) -> f64 {
+        let mut cur = self.0.load(Ordering::Acquire);
+        loop {
+            let new = f64::from_bits(cur) + delta;
+            match self.0.compare_exchange_weak(
+                cur,
+                new.to_bits(),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return new,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// A vector of atomics (shared model state for SCDN / shared intermediate
+/// quantities for PCDN line search).
+pub struct AtomicF64Vec(Vec<AtomicF64>);
+
+impl AtomicF64Vec {
+    pub fn zeros(n: usize) -> Self {
+        AtomicF64Vec((0..n).map(|_| AtomicF64::new(0.0)).collect())
+    }
+    pub fn from_slice(v: &[f64]) -> Self {
+        AtomicF64Vec(v.iter().map(|&x| AtomicF64::new(x)).collect())
+    }
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+    #[inline]
+    pub fn load(&self, i: usize) -> f64 {
+        self.0[i].load()
+    }
+    #[inline]
+    pub fn store(&self, i: usize, v: f64) {
+        self.0[i].store(v)
+    }
+    #[inline]
+    pub fn fetch_add(&self, i: usize, d: f64) -> f64 {
+        self.0[i].fetch_add(d)
+    }
+    pub fn to_vec(&self) -> Vec<f64> {
+        self.0.iter().map(|a| a.load()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Arc<Vec<AtomicU64>> = Arc::new((0..1000).map(|_| AtomicU64::new(0)).collect());
+        let h = Arc::clone(&hits);
+        pool.parallel_for(1000, move |i, _| {
+            h[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn static_schedule_is_deterministic() {
+        let pool = ThreadPool::new(3);
+        let owner: Arc<Vec<AtomicU64>> = Arc::new((0..30).map(|_| AtomicU64::new(99)).collect());
+        let o = Arc::clone(&owner);
+        pool.parallel_for(30, move |i, wid| {
+            o[i].store(wid as u64, Ordering::SeqCst);
+        });
+        for i in 0..30 {
+            assert_eq!(owner[i].load(Ordering::SeqCst), (i % 3) as u64);
+        }
+    }
+
+    #[test]
+    fn reusable_across_regions() {
+        let pool = ThreadPool::new(2);
+        let total = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let t = Arc::clone(&total);
+            pool.parallel_for(10, move |_, _| {
+                t.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 500);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let pool = ThreadPool::new(4);
+        let out = pool.parallel_map(20, |i, _| i * i);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_region_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn worker_panic_propagates() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(4, |i, _| {
+            if i == 3 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_worker_panic() {
+        let pool = ThreadPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(4, |i, _| {
+                if i == 0 {
+                    panic!("boom");
+                }
+            })
+        }));
+        assert!(r.is_err());
+        // Pool still usable afterwards.
+        let total = Arc::new(AtomicU64::new(0));
+        let t = Arc::clone(&total);
+        pool.parallel_for(8, move |_, _| {
+            t.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn atomic_f64_fetch_add_concurrent() {
+        let pool = ThreadPool::new(4);
+        let acc = Arc::new(AtomicF64::new(0.0));
+        let a = Arc::clone(&acc);
+        pool.parallel_for(10_000, move |_, _| {
+            a.fetch_add(0.5);
+        });
+        assert!((acc.load() - 5000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn atomic_vec_roundtrip() {
+        let v = AtomicF64Vec::from_slice(&[1.0, 2.0, 3.0]);
+        v.fetch_add(1, 0.5);
+        v.store(0, -1.0);
+        assert_eq!(v.to_vec(), vec![-1.0, 2.5, 3.0]);
+        assert_eq!(v.len(), 3);
+    }
+}

@@ -1,0 +1,334 @@
+//! Typed wrappers over the two AOT graphs the dense PCDN path uses:
+//! `bundle_step_*` (directions + Δ + Xd in one PJRT call per bundle) and
+//! `ls_probe_*` (one call per Armijo probe). Handles all the padding
+//! between the dataset's real `(s, P)` and the artifact's `(s_pad, p_pad)`.
+
+use crate::loss::Objective;
+use crate::runtime::manifest::ArtifactEntry;
+use crate::runtime::PjrtRuntime;
+use anyhow::{Context, Result};
+
+/// Output of one `bundle_step` execution (already un-padded where sensible;
+/// `xd` stays at `s_pad` because the margin vectors live padded too).
+pub struct BundleStepOut {
+    /// Direction per bundle slot (length = real bundle width).
+    pub d: Vec<f32>,
+    /// Δ of Eq. 7.
+    pub delta: f64,
+    /// `X_B d` at padded length `s_pad`.
+    pub xd: Vec<f32>,
+    /// Bundle gradient/Hessian diag (diagnostics & tests).
+    pub grad: Vec<f32>,
+    pub hess: Vec<f32>,
+}
+
+/// Shape-bound executor for one (dataset, objective, bundle size) triple.
+pub struct BundleExecutor<'rt> {
+    rt: &'rt PjrtRuntime,
+    step_entry: ArtifactEntry,
+    probe_entry: ArtifactEntry,
+    /// Padded sample count (artifact `s`).
+    pub s_pad: usize,
+    /// Padded bundle width (artifact `p`).
+    pub p_pad: usize,
+    /// Real sample count.
+    pub s: usize,
+    pub objective: Objective,
+}
+
+impl<'rt> BundleExecutor<'rt> {
+    /// Select artifacts for `s` samples and bundle width `p`.
+    pub fn new(
+        rt: &'rt PjrtRuntime,
+        objective: Objective,
+        s: usize,
+        p: usize,
+    ) -> Result<Self> {
+        let (step_name, probe_name) = match objective {
+            Objective::Logistic => ("bundle_step_logistic", "ls_probe_logistic"),
+            Objective::L2Svm => ("bundle_step_svm", "ls_probe_svm"),
+            Objective::Lasso => anyhow::bail!(
+                "the PJRT dense path ships logistic/svm artifacts only; \
+                 use the native solvers for Lasso"
+            ),
+        };
+        let step_entry = rt
+            .manifest
+            .select(step_name, s, p)
+            .with_context(|| {
+                format!(
+                    "no {step_name} artifact fits s={s}, p={p} — rebuild with \
+                     `python -m compile.aot --configs {}x{}`",
+                    s.next_multiple_of(rt.manifest.s_quantum),
+                    p
+                )
+            })?
+            .clone();
+        let probe_entry = rt
+            .manifest
+            .select(probe_name, step_entry.s, step_entry.p)
+            .context("matching ls_probe artifact missing")?
+            .clone();
+        Ok(BundleExecutor {
+            rt,
+            s_pad: step_entry.s,
+            p_pad: step_entry.p,
+            s,
+            objective,
+            step_entry,
+            probe_entry,
+        })
+    }
+
+    /// Pad labels to `s_pad` (padding samples get `y = +1` and must carry
+    /// zero margins so they contribute nothing — see model.py docs).
+    pub fn pad_labels(&self, y: &[f64]) -> Vec<f32> {
+        let mut out = vec![1.0f32; self.s_pad];
+        for (o, v) in out.iter_mut().zip(y) {
+            *o = *v as f32;
+        }
+        out
+    }
+
+    /// Initial maintained quantity at `w = 0`, padded: logistic margins
+    /// `wx = 0`; SVM `b = 1` on real samples, `0` (inactive) on padding.
+    pub fn initial_quantity(&self) -> Vec<f32> {
+        match self.objective {
+            Objective::Logistic => vec![0.0f32; self.s_pad],
+            Objective::L2Svm => {
+                let mut b = vec![0.0f32; self.s_pad];
+                b[..self.s].fill(1.0);
+                b
+            }
+            Objective::Lasso => unreachable!("rejected in BundleExecutor::new"),
+        }
+    }
+
+    /// One bundle step. `xb` must be the dense `(s_pad × p_pad)` row-major
+    /// block (zero-padded); `q` the padded maintained quantity; `w_b` the
+    /// real bundle weights (length ≤ p_pad).
+    pub fn bundle_step(&self, xb: &[f32], q: &[f32], y: &[f32], w_b: &[f32], c: f64) -> Result<BundleStepOut> {
+        let bp = w_b.len();
+        anyhow::ensure!(bp <= self.p_pad, "bundle wider than artifact");
+        anyhow::ensure!(xb.len() == self.s_pad * self.p_pad, "xb shape");
+        let mut w_pad = vec![0.0f32; self.p_pad];
+        w_pad[..bp].copy_from_slice(w_b);
+        let mut active = vec![0.0f32; self.p_pad];
+        active[..bp].fill(1.0);
+        let c_in = [c as f32];
+        let outs = self.rt.run_f32(
+            &self.step_entry,
+            &[xb, y, q, &w_pad, &active, &c_in],
+        )?;
+        let [d, delta, xd, grad, hess]: [Vec<f32>; 5] = outs
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("bundle_step output arity"))?;
+        Ok(BundleStepOut {
+            d: d[..bp].to_vec(),
+            delta: delta[0] as f64,
+            xd,
+            grad: grad[..bp].to_vec(),
+            hess: hess[..bp].to_vec(),
+        })
+    }
+
+    /// One Armijo probe: `F_c(w + α·d) − F_c(w)`.
+    pub fn ls_probe(
+        &self,
+        q: &[f32],
+        xd: &[f32],
+        y: &[f32],
+        w_b: &[f32],
+        d_b: &[f32],
+        alpha: f64,
+        c: f64,
+    ) -> Result<f64> {
+        let bp = w_b.len();
+        let mut w_pad = vec![0.0f32; self.p_pad];
+        w_pad[..bp].copy_from_slice(w_b);
+        let mut d_pad = vec![0.0f32; self.p_pad];
+        d_pad[..bp].copy_from_slice(d_b);
+        let a_in = [alpha as f32];
+        let c_in = [c as f32];
+        let outs = self.rt.run_f32(
+            &self.probe_entry,
+            &[q, xd, y, &w_pad, &d_pad, &a_in, &c_in],
+        )?;
+        Ok(outs[0][0] as f64)
+    }
+
+    /// Commit a step onto the maintained quantity in place:
+    /// logistic: `wx += α·xd`; SVM: `b −= y·α·xd`.
+    pub fn apply_step(&self, q: &mut [f32], xd: &[f32], y: &[f32], alpha: f64) {
+        match self.objective {
+            Objective::Logistic => {
+                for (qi, xi) in q.iter_mut().zip(xd) {
+                    *qi += alpha as f32 * xi;
+                }
+            }
+            Objective::L2Svm => {
+                for ((qi, xi), yi) in q.iter_mut().zip(xd).zip(y) {
+                    *qi -= yi * alpha as f32 * xi;
+                }
+            }
+            Objective::Lasso => unreachable!("rejected in BundleExecutor::new"),
+        }
+    }
+
+    /// Loss value `L(w)` from the padded maintained quantity (f64 accum;
+    /// padded entries contribute 0 by construction).
+    pub fn loss_value(&self, q: &[f32], y: &[f32], c: f64) -> f64 {
+        match self.objective {
+            Objective::Logistic => {
+                let mut acc = 0.0f64;
+                for i in 0..self.s {
+                    let z = -(y[i] as f64) * q[i] as f64;
+                    acc += if z > 0.0 {
+                        z + (-z).exp().ln_1p()
+                    } else {
+                        z.exp().ln_1p()
+                    };
+                }
+                c * acc
+            }
+            Objective::L2Svm => {
+                let mut acc = 0.0f64;
+                for i in 0..self.s {
+                    let b = q[i] as f64;
+                    if b > 0.0 {
+                        acc += b * b;
+                    }
+                }
+                c * acc
+            }
+            Objective::Lasso => unreachable!("rejected in BundleExecutor::new"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::loss::LossState;
+    use crate::solver::direction::newton_direction;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    /// Cross-check the PJRT bundle step against the native f64 path — the
+    /// key three-layer composition test.
+    #[test]
+    fn pjrt_bundle_step_matches_native() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::cpu(&dir).unwrap();
+        let data = generate(
+            &SyntheticSpec {
+                samples: 500,
+                features: 40,
+                nnz_per_row: 12,
+                ..Default::default()
+            },
+            77,
+        );
+        for obj in [Objective::Logistic, Objective::L2Svm] {
+            let exec = BundleExecutor::new(&rt, obj, data.samples(), 8).unwrap();
+            let y = exec.pad_labels(&data.y);
+            let q = exec.initial_quantity();
+            let bundle: Vec<usize> = (3..11).collect();
+            // Dense padded block.
+            let blk = data.x.dense_block_f32(&bundle);
+            let mut xb = vec![0.0f32; exec.s_pad * exec.p_pad];
+            for r in 0..data.samples() {
+                for k in 0..bundle.len() {
+                    xb[r * exec.p_pad + k] = blk[r * bundle.len() + k];
+                }
+            }
+            let w_b = vec![0.0f32; bundle.len()];
+            let c = 1.3;
+            let out = exec.bundle_step(&xb, &q, &y, &w_b, c).unwrap();
+
+            // Native reference.
+            let state = LossState::new(obj, &data, c);
+            for (k, &j) in bundle.iter().enumerate() {
+                let (g, h) = state.grad_hess_j(j);
+                assert!(
+                    (out.grad[k] as f64 - g).abs() <= 1e-3 * g.abs().max(1.0),
+                    "{obj:?} grad[{k}]: pjrt {} vs native {g}",
+                    out.grad[k]
+                );
+                let d_native = newton_direction(g, h, 0.0);
+                assert!(
+                    (out.d[k] as f64 - d_native).abs() <= 2e-3 * d_native.abs().max(1.0),
+                    "{obj:?} d[{k}]: pjrt {} vs native {d_native}",
+                    out.d[k]
+                );
+            }
+            assert!(out.delta <= 1e-6, "Δ must be ≤ 0, got {}", out.delta);
+        }
+    }
+
+    #[test]
+    fn pjrt_probe_matches_native_delta() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::cpu(&dir).unwrap();
+        let data = generate(
+            &SyntheticSpec {
+                samples: 300,
+                features: 30,
+                nnz_per_row: 10,
+                ..Default::default()
+            },
+            88,
+        );
+        let obj = Objective::Logistic;
+        let exec = BundleExecutor::new(&rt, obj, data.samples(), 4).unwrap();
+        let y = exec.pad_labels(&data.y);
+        let q = exec.initial_quantity();
+        let bundle = [0usize, 5, 9, 17];
+        let blk = data.x.dense_block_f32(&bundle);
+        let mut xb = vec![0.0f32; exec.s_pad * exec.p_pad];
+        for r in 0..data.samples() {
+            for k in 0..bundle.len() {
+                xb[r * exec.p_pad + k] = blk[r * bundle.len() + k];
+            }
+        }
+        let w_b = vec![0.0f32; 4];
+        let c = 0.8;
+        let out = exec.bundle_step(&xb, &q, &y, &w_b, c).unwrap();
+        // Native objective delta at α = 0.5:
+        let state = LossState::new(obj, &data, c);
+        let mut dvec = vec![0.0f64; data.features()];
+        for (k, &j) in bundle.iter().enumerate() {
+            dvec[j] = out.d[k] as f64;
+        }
+        let dx_full = data.x.matvec(&dvec);
+        let touched: Vec<u32> = (0..data.samples() as u32)
+            .filter(|&i| dx_full[i as usize] != 0.0)
+            .collect();
+        let dxv: Vec<f64> = touched.iter().map(|&i| dx_full[i as usize]).collect();
+        for alpha in [1.0, 0.5, 0.25] {
+            let native = state.delta_loss(&touched, &dxv, alpha)
+                + crate::solver::linesearch::l1_delta(
+                    &w_b.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                    &out.d.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                    alpha,
+                );
+            let pjrt = exec
+                .ls_probe(&q, &out.xd, &y, &w_b, &out.d, alpha, c)
+                .unwrap();
+            assert!(
+                (pjrt - native).abs() <= 1e-2 * native.abs().max(1.0),
+                "α={alpha}: pjrt {pjrt} vs native {native}"
+            );
+        }
+    }
+}

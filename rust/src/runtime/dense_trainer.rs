@@ -1,0 +1,219 @@
+//! The dense three-layer PCDN trainer: Algorithm 3 where every bundle's
+//! compute runs through the AOT-compiled L2/L1 graphs on PJRT.
+//!
+//! This is the composition proof of the stack: the rust coordinator owns
+//! partitioning, the Armijo control loop, state commits, convergence and
+//! traces; the per-bundle numerics (factors → grad/hess kernel → Eq. 5
+//! direction → Δ → `X_B d`) execute inside XLA from artifacts Python wrote
+//! at build time. Intended for dense datasets (the gisette regime) — the
+//! sparse solvers in `crate::solver` remain the fast path for text data.
+
+use crate::data::Dataset;
+use crate::loss::{LossState, Objective};
+use crate::runtime::bundle_exec::BundleExecutor;
+use crate::runtime::PjrtRuntime;
+use crate::solver::{objective_value, RunMonitor, TrainOptions, TrainResult};
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+
+/// Train ℓ1-regularized logistic regression / ℓ2-SVM with PCDN over PJRT.
+///
+/// Semantics match [`crate::solver::pcdn::Pcdn`] (same options) except the
+/// arithmetic is f32 inside XLA; integration tests pin the two paths
+/// together at 1e-3 relative objective tolerance.
+pub fn train_dense_pjrt(
+    rt: &PjrtRuntime,
+    data: &Dataset,
+    obj: Objective,
+    opts: &TrainOptions,
+) -> Result<TrainResult> {
+    let n = data.features();
+    let p = opts.bundle_size.clamp(1, n.max(1));
+    let exec = BundleExecutor::new(rt, obj, data.samples(), p)?;
+    let y = exec.pad_labels(&data.y);
+    let mut q = exec.initial_quantity();
+    let mut w = vec![0.0f64; n];
+    let mut rng = Pcg64::new(opts.seed);
+    let mut monitor = RunMonitor::new();
+    let mut inner_iters = 0usize;
+    let mut ls_steps = 0usize;
+    let mut outer = 0usize;
+
+    // Reusable padded block buffer.
+    let mut xb = vec![0.0f32; exec.s_pad * exec.p_pad];
+
+    // Native state only for stopping/trace evaluation (f64, O(nnz) per
+    // outer iteration — not on the bundle hot path).
+    let mut eval_state = LossState::new(obj, data, opts.c);
+    if monitor.observe(0, &eval_state, &w, opts) {
+        return Ok(crate::solver::pcdn::finish(
+            "pcdn-pjrt", w, &eval_state, monitor, 0, 0, 0, Vec::new(),
+        ));
+    }
+
+    loop {
+        outer += 1;
+        let perm = rng.permutation(n);
+        for bundle in perm.chunks(p) {
+            inner_iters += 1;
+
+            // Gather the bundle's dense block (zero-pad rows & columns).
+            xb.fill(0.0);
+            for (k, &j) in bundle.iter().enumerate() {
+                let (ri, vals) = data.x.col(j);
+                for (r, v) in ri.iter().zip(vals) {
+                    xb[*r as usize * exec.p_pad + k] = *v as f32;
+                }
+            }
+            let w_b: Vec<f32> = bundle.iter().map(|&j| w[j] as f32).collect();
+
+            // L2/L1 graphs: directions + Δ + Xd in one PJRT call.
+            let step = exec.bundle_step(&xb, &q, &y, &w_b, opts.c)?;
+            if step.d.iter().all(|&d| d == 0.0) {
+                continue;
+            }
+            if step.delta > 0.0 {
+                // f32 round-off can make a near-zero Δ positive; skip.
+                continue;
+            }
+
+            // Armijo backtracking, one PJRT probe per step.
+            let mut alpha = 1.0f64;
+            let mut accepted = false;
+            for _ in 0..opts.armijo.max_steps {
+                ls_steps += 1;
+                let od = exec.ls_probe(&q, &step.xd, &y, &w_b, &step.d, alpha, opts.c)?;
+                if od <= opts.armijo.sigma * alpha * step.delta {
+                    accepted = true;
+                    break;
+                }
+                alpha *= opts.armijo.beta;
+            }
+            if accepted {
+                for (k, &j) in bundle.iter().enumerate() {
+                    w[j] += alpha * step.d[k] as f64;
+                }
+                exec.apply_step(&mut q, &step.xd, &y, alpha);
+            }
+        }
+
+        // Re-anchor the f32 maintained quantity from the exact w once per
+        // outer sweep (kills f32 drift accumulation across thousands of
+        // bundle commits) and evaluate stopping on the f64 state.
+        eval_state.reset_from(&w);
+        resync_quantity(&exec, &mut q, &eval_state);
+        if monitor.observe(outer, &eval_state, &w, opts) {
+            break;
+        }
+    }
+    let _ = objective_value(&eval_state, &w);
+    Ok(crate::solver::pcdn::finish(
+        "pcdn-pjrt",
+        w,
+        &eval_state,
+        monitor,
+        outer,
+        inner_iters,
+        ls_steps,
+        Vec::new(),
+    ))
+}
+
+/// Copy the exact (f64) maintained quantity into the padded f32 buffer.
+fn resync_quantity(exec: &BundleExecutor<'_>, q: &mut [f32], state: &LossState<'_>) {
+    match state {
+        LossState::Logistic(s) => {
+            for (i, &m) in s.wx.iter().enumerate() {
+                q[i] = m as f32;
+            }
+        }
+        LossState::L2Svm(s) => {
+            for (i, &b) in s.b.iter().enumerate() {
+                q[i] = b as f32;
+            }
+        }
+        LossState::Lasso(_) => unreachable!("rejected in BundleExecutor::new"),
+    }
+    let _ = exec;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::solver::{pcdn::Pcdn, Solver, StopRule};
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    fn dense_toy() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 400,
+                features: 48,
+                nnz_per_row: 44,
+                corr_groups: 4,
+                corr_strength: 0.6,
+                ..Default::default()
+            },
+            31,
+        )
+    }
+
+    #[test]
+    fn pjrt_trainer_matches_native_pcdn() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::cpu(&dir).unwrap();
+        let data = dense_toy();
+        let opts = TrainOptions {
+            c: 0.5,
+            bundle_size: 16,
+            stop: StopRule::SubgradRel(1e-3),
+            max_outer: 200,
+            ..Default::default()
+        };
+        for obj in [Objective::Logistic, Objective::L2Svm] {
+            let pjrt = train_dense_pjrt(&rt, &data, obj, &opts).unwrap();
+            let native = Pcdn::new().train(&data, obj, &opts);
+            assert!(pjrt.converged, "{obj:?}: PJRT path did not converge");
+            let rel = (pjrt.final_objective - native.final_objective).abs()
+                / native.final_objective.max(1e-9);
+            assert!(
+                rel < 1e-3,
+                "{obj:?}: PJRT F = {} vs native F = {} (rel {rel})",
+                pjrt.final_objective,
+                native.final_objective
+            );
+        }
+    }
+
+    #[test]
+    fn pjrt_trainer_objective_nonincreasing() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::cpu(&dir).unwrap();
+        let data = dense_toy();
+        let opts = TrainOptions {
+            c: 1.0,
+            bundle_size: 8,
+            stop: StopRule::MaxOuter(5),
+            max_outer: 5,
+            trace_every: 1,
+            ..Default::default()
+        };
+        let r = train_dense_pjrt(&rt, &data, Objective::Logistic, &opts).unwrap();
+        for pair in r.trace.windows(2) {
+            assert!(
+                pair[1].objective <= pair[0].objective + 1e-6,
+                "objective increased on the PJRT path"
+            );
+        }
+    }
+}

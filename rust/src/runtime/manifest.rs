@@ -1,0 +1,251 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the rust runtime (which picks and
+//! loads shape-specialized executables from it).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape/dtype of one executable input.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled graph, shape-specialized to `(s, p)`.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Graph name, e.g. `bundle_step_logistic`.
+    pub name: String,
+    /// Padded sample count the graph was lowered for.
+    pub s: usize,
+    /// Padded bundle width.
+    pub p: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Pad quantum for the sample dimension.
+    pub s_quantum: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (separated out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("manifest: missing version")?;
+        if version != 1 {
+            bail!("manifest: unsupported version {version}");
+        }
+        let s_quantum = doc
+            .get("s_quantum")
+            .and_then(Json::as_usize)
+            .context("manifest: missing s_quantum")?;
+        let mut entries = Vec::new();
+        for e in doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest: missing entries")?
+        {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .context("entry: name")?
+                .to_string();
+            let s = e.get("s").and_then(Json::as_usize).context("entry: s")?;
+            let p = e.get("p").and_then(Json::as_usize).context("entry: p")?;
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .context("entry: file")?
+                .to_string();
+            let mut inputs = Vec::new();
+            for i in e.get("inputs").and_then(Json::as_arr).context("entry: inputs")? {
+                inputs.push(TensorSpec {
+                    name: i
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("input: name")?
+                        .to_string(),
+                    shape: i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("input: shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("input: dim"))
+                        .collect::<Result<_>>()?,
+                    dtype: i
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("f32")
+                        .to_string(),
+                });
+            }
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("entry: outputs")?
+                .iter()
+                .map(|o| o.as_str().map(str::to_string).context("output name"))
+                .collect::<Result<_>>()?;
+            entries.push(ArtifactEntry {
+                name,
+                s,
+                p,
+                file,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest {
+            dir,
+            s_quantum,
+            entries,
+        })
+    }
+
+    /// Pick the smallest artifact of graph `name` that fits `s_req` samples
+    /// and `p_req` bundle width (both padded up by the runtime).
+    pub fn select(&self, name: &str, s_req: usize, p_req: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.name == name && e.s >= s_req && e.p >= p_req)
+            .min_by_key(|e| (e.s, e.p))
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// All distinct graph names.
+    pub fn graph_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.entries.iter().map(|e| e.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "s_quantum": 1024,
+      "entries": [
+        {"name": "bundle_step_logistic", "s": 1024, "p": 32,
+         "file": "a.hlo.txt",
+         "inputs": [{"name": "xb", "shape": [1024, 32], "dtype": "f32"},
+                    {"name": "c", "shape": [1], "dtype": "f32"}],
+         "outputs": ["d", "delta"]},
+        {"name": "bundle_step_logistic", "s": 2048, "p": 64,
+         "file": "b.hlo.txt",
+         "inputs": [], "outputs": ["d"]},
+        {"name": "ls_probe_logistic", "s": 1024, "p": 32,
+         "file": "c.hlo.txt",
+         "inputs": [], "outputs": ["obj_delta"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_select() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(m.s_quantum, 1024);
+        assert_eq!(m.entries.len(), 3);
+        // exact fit
+        let e = m.select("bundle_step_logistic", 1000, 20).unwrap();
+        assert_eq!((e.s, e.p), (1024, 32));
+        // forces the bigger artifact
+        let e = m.select("bundle_step_logistic", 1500, 20).unwrap();
+        assert_eq!((e.s, e.p), (2048, 64));
+        let e = m.select("bundle_step_logistic", 1000, 50).unwrap();
+        assert_eq!((e.s, e.p), (2048, 64));
+        // nothing fits
+        assert!(m.select("bundle_step_logistic", 5000, 1).is_none());
+        assert!(m.select("nope", 1, 1).is_none());
+    }
+
+    #[test]
+    fn tensor_specs() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        let e = &m.entries[0];
+        assert_eq!(e.inputs[0].name, "xb");
+        assert_eq!(e.inputs[0].elements(), 1024 * 32);
+        assert_eq!(e.outputs, vec!["d", "delta"]);
+        assert!(m.path_of(e).ends_with("a.hlo.txt"));
+    }
+
+    #[test]
+    fn graph_names_deduped() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/x")).unwrap();
+        assert_eq!(
+            m.graph_names(),
+            vec!["bundle_step_logistic", "ls_probe_logistic"]
+        );
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("[1,2]", PathBuf::new()).is_err());
+        assert!(
+            Manifest::parse(r#"{"version": 9, "s_quantum": 1, "entries": []}"#, PathBuf::new())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_built() {
+        // Integration-lite: when `make artifacts` has run, the real manifest
+        // must parse and contain all four graphs.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        for g in [
+            "bundle_step_logistic",
+            "bundle_step_svm",
+            "ls_probe_logistic",
+            "ls_probe_svm",
+        ] {
+            assert!(
+                m.entries.iter().any(|e| e.name == g),
+                "missing graph {g}"
+            );
+        }
+        for e in &m.entries {
+            assert!(m.path_of(e).exists(), "missing file {}", e.file);
+        }
+    }
+}

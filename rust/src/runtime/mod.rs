@@ -1,0 +1,190 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (built once by
+//! `make artifacts`) and execute them from the rust hot path.
+//!
+//! Python never runs here — the interchange is HLO *text* (see
+//! `python/compile/aot.py` for why text, not serialized protos), compiled
+//! by the in-process XLA CPU backend through the `xla` crate:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`.
+
+pub mod bundle_exec;
+pub mod dense_trainer;
+pub mod manifest;
+
+use anyhow::{Context, Result};
+use manifest::{ArtifactEntry, Manifest};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A PJRT client plus a cache of compiled executables keyed by artifact
+/// file name (compilation is the expensive step; every bundle iteration
+/// reuses the cached executable).
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn cpu(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory (`$PCDN_ARTIFACTS` or `./artifacts`).
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("PCDN_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+    }
+
+    /// Get (compiling on first use) the executable for an artifact.
+    pub fn executable(&self, entry: &ArtifactEntry) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&entry.file) {
+            return Ok(Rc::clone(exe));
+        }
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", entry.file))?;
+        let exe = Rc::new(exe);
+        self.cache
+            .borrow_mut()
+            .insert(entry.file.clone(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact with f32 input buffers (shapes from the entry's
+    /// specs) and return the flattened f32 outputs, in manifest order.
+    ///
+    /// The AOT graphs are lowered with `return_tuple=True`, so the single
+    /// result literal is a tuple that decomposes into one literal per
+    /// declared output.
+    pub fn run_f32(&self, entry: &ArtifactEntry, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            entry.name,
+            entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, data) in entry.inputs.iter().zip(inputs) {
+            anyhow::ensure!(
+                data.len() == spec.elements(),
+                "{}: input '{}' expected {} elements, got {}",
+                entry.name,
+                spec.name,
+                spec.elements(),
+                data.len()
+            );
+            let lit = xla::Literal::vec1(data);
+            let lit = if spec.shape.len() == 1 {
+                lit
+            } else {
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .with_context(|| format!("reshaping input '{}'", spec.name))?
+            };
+            literals.push(lit);
+        }
+        let exe = self.executable(entry)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", entry.name))?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == entry.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            entry.name,
+            entry.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn runtime_loads_and_executes_ls_probe() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::cpu(&dir).unwrap();
+        let entry = rt
+            .manifest
+            .select("ls_probe_logistic", 1024, 1)
+            .expect("artifact")
+            .clone();
+        let s = entry.s;
+        let p = entry.p;
+        // α = 0 probe must be ~0 regardless of state.
+        let wx = vec![0.3f32; s];
+        let xd = vec![0.1f32; s];
+        let y = vec![1.0f32; s];
+        let w_b = vec![0.0f32; p];
+        let d_b = vec![0.0f32; p];
+        let alpha = vec![0.0f32];
+        let c = vec![1.0f32];
+        let out = rt
+            .run_f32(&entry, &[&wx, &xd, &y, &w_b, &d_b, &alpha, &c])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0][0].abs() < 1e-3, "probe(0) = {}", out[0][0]);
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::cpu(&dir).unwrap();
+        let entry = rt.manifest.select("ls_probe_svm", 1024, 1).unwrap().clone();
+        let a = rt.executable(&entry).unwrap();
+        let b = rt.executable(&entry).unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "cache must return the same executable");
+    }
+
+    #[test]
+    fn input_validation() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = PjrtRuntime::cpu(&dir).unwrap();
+        let entry = rt.manifest.select("ls_probe_logistic", 1024, 1).unwrap().clone();
+        // wrong arity
+        assert!(rt.run_f32(&entry, &[]).is_err());
+        // wrong element count
+        let bad = vec![0.0f32; 3];
+        let refs: Vec<&[f32]> = entry.inputs.iter().map(|_| bad.as_slice()).collect();
+        assert!(rt.run_f32(&entry, &refs).is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! CDN — Coordinate Descent Newton (paper Algorithm 1; Yuan et al. 2010),
+//! the sequential baseline. One feature at a time: Newton direction
+//! (Eq. 5) then a 1-dimensional Armijo search.
+//!
+//! Supports the LIBLINEAR-style *shrinking* heuristic in the modified form
+//! the paper uses for fair comparison (§5.1): features with `w_j = 0` whose
+//! gradient sits strictly inside the subdifferential interval (with margin
+//! `M`, the max violation seen in the previous pass) are removed from the
+//! active set; when the active-set pass converges, all features are
+//! restored for a final verification pass.
+//!
+//! CDN is exactly PCDN with `P = 1` algorithmically; it is kept as its own
+//! implementation (a) for the shrinking variant, (b) as an independent
+//! implementation to cross-check PCDN(P=1) against in the tests.
+
+use crate::data::Dataset;
+use crate::loss::{LossState, Objective};
+use crate::parallel::sim::IterRecord;
+use crate::solver::direction::{delta_contribution, newton_direction};
+use crate::solver::linesearch::l1_delta;
+use crate::solver::pcdn::finish;
+use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// The CDN solver.
+#[derive(Default)]
+pub struct Cdn;
+
+impl Cdn {
+    pub fn new() -> Self {
+        Cdn
+    }
+}
+
+impl Solver for Cdn {
+    fn name(&self) -> &'static str {
+        "cdn"
+    }
+
+    fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult {
+        let n = data.features();
+        let mut state = LossState::new(obj, data, opts.c);
+        let mut w = vec![0.0f64; n];
+        if let Some(w0) = &opts.warm_start {
+            assert_eq!(w0.len(), n, "warm_start length mismatch");
+            w.copy_from_slice(w0);
+            state.reset_from(&w);
+        }
+        let mut rng = Pcg64::new(opts.seed);
+        let mut monitor = RunMonitor::new();
+        let mut records: Vec<IterRecord> = Vec::new();
+        let mut inner_iters = 0usize;
+        let mut ls_steps = 0usize;
+        let mut outer = 0usize;
+
+        // Shrinking state: `active[j]`, the previous pass's max violation,
+        // and the first pass's violation as the convergence scale
+        // (LIBLINEAR's Gmax_init).
+        let mut active: Vec<bool> = vec![true; n];
+        let mut n_active = n;
+        let mut m_prev = f64::INFINITY;
+        let mut m_first: Option<f64> = None;
+
+        if monitor.observe(0, &state, &w, opts) {
+            return finish(self.name(), w, &state, monitor, 0, 0, 0, records);
+        }
+
+        loop {
+            outer += 1;
+            let perm = rng.permutation(n);
+            let mut m_this = 0.0f64;
+
+            for &j in &perm {
+                if opts.shrinking && !active[j] {
+                    continue;
+                }
+                inner_iters += 1;
+                let t_dir = Stopwatch::start();
+                let (mut g, mut h) = state.grad_hess_j(j);
+                // Elastic-net fold-in (no-op at l2_reg = 0).
+                g += opts.l2_reg * w[j];
+                h += opts.l2_reg;
+
+                // Violation of the optimality conditions at feature j
+                // (LIBLINEAR's shrink measure).
+                let viol = if w[j] > 0.0 {
+                    (g + 1.0).abs()
+                } else if w[j] < 0.0 {
+                    (g - 1.0).abs()
+                } else {
+                    (g.abs() - 1.0).max(0.0)
+                };
+                m_this = m_this.max(viol);
+
+                if opts.shrinking && w[j] == 0.0 {
+                    // Strictly interior with margin M ⇒ shrink.
+                    let m = if m_prev.is_finite() { m_prev / n as f64 } else { 0.0 };
+                    if g > -1.0 + m && g < 1.0 - m && viol == 0.0 {
+                        active[j] = false;
+                        n_active -= 1;
+                        continue;
+                    }
+                }
+
+                let d = newton_direction(g, h, w[j]);
+                let t_direction_total = t_dir.secs();
+                if d == 0.0 || d.abs() < 1e-14 {
+                    if opts.record_iters {
+                        records.push(IterRecord {
+                            bundle_size: 1,
+                            t_direction_total,
+                            t_ls_parallel_total: 0.0,
+                            t_ls_serial: 0.0,
+                            q_steps: 0,
+                        });
+                    }
+                    continue;
+                }
+                let delta = delta_contribution(g, h, w[j], d, opts.armijo.gamma);
+
+                // 1-D line search: dᵀx_i = d·x_ij on the column support, so
+                // probe at α by scaling the *column* with α·d — no scratch.
+                let t_ls = Stopwatch::start();
+                let (ri, vals) = data.x.col(j);
+                let mut alpha = 1.0f64;
+                let mut accepted = false;
+                let mut steps = 0usize;
+                for _ in 0..opts.armijo.max_steps {
+                    steps += 1;
+                    let od = state.delta_loss(ri, vals, alpha * d)
+                        + l1_delta(&[w[j]], &[d], alpha)
+                        + crate::solver::linesearch::l2_delta(
+                            &[w[j]], &[d], alpha, opts.l2_reg,
+                        );
+                    if od <= opts.armijo.sigma * alpha * delta {
+                        accepted = true;
+                        break;
+                    }
+                    alpha *= opts.armijo.beta;
+                }
+                let t_ls_serial = t_ls.secs();
+                ls_steps += steps;
+
+                if accepted {
+                    w[j] += alpha * d;
+                    state.apply_step(ri, vals, alpha * d);
+                }
+                if opts.record_iters {
+                    records.push(IterRecord {
+                        bundle_size: 1,
+                        t_direction_total,
+                        t_ls_parallel_total: 0.0,
+                        t_ls_serial,
+                        q_steps: steps,
+                    });
+                }
+            }
+
+            m_prev = if m_this > 0.0 { m_this } else { f64::INFINITY };
+            let m0 = *m_first.get_or_insert(m_this.max(1e-300));
+
+            // Shrinking bookkeeping (LIBLINEAR pattern): when the
+            // *active-set* pass's max violation falls below tolerance,
+            // restore every feature and verify on the full set. Restoring
+            // on the active-set signal (not the full gradient) prevents
+            // spinning on a converged subset while shrunk features hold
+            // stale violations.
+            if opts.shrinking && n_active < n {
+                let eps = match opts.stop {
+                    crate::solver::StopRule::SubgradRel(e) => e,
+                    _ => 1e-3,
+                };
+                if m_this <= eps * m0 {
+                    active.iter_mut().for_each(|a| *a = true);
+                    n_active = n;
+                    m_prev = f64::INFINITY;
+                }
+            }
+
+            if monitor.observe(outer, &state, &w, opts) {
+                break;
+            }
+        }
+        finish(
+            self.name(),
+            w,
+            &state,
+            monitor,
+            outer,
+            inner_iters,
+            ls_steps,
+            records,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::solver::pcdn::Pcdn;
+    use crate::solver::StopRule;
+    use crate::testutil::assert_close;
+
+    fn toy(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 120,
+                features: 50,
+                nnz_per_row: 8,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn opts() -> TrainOptions {
+        TrainOptions {
+            c: 1.0,
+            stop: StopRule::SubgradRel(1e-5),
+            max_outer: 500,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_both_objectives() {
+        let d = toy(1);
+        for obj in [Objective::Logistic, Objective::L2Svm] {
+            let r = Cdn::new().train(&d, obj, &opts());
+            assert!(r.converged, "{obj:?} failed to converge");
+        }
+    }
+
+    #[test]
+    fn matches_pcdn_p1_optimum() {
+        // CDN and PCDN(P=1) are the same algorithm; trajectories differ by
+        // permutation draw order but optima must agree tightly.
+        let d = toy(2);
+        let mut o = opts();
+        o.stop = StopRule::SubgradRel(1e-7);
+        o.max_outer = 3000;
+        let rc = Cdn::new().train(&d, Objective::Logistic, &o);
+        let mut op = o.clone();
+        op.bundle_size = 1;
+        let rp = Pcdn::new().train(&d, Objective::Logistic, &op);
+        assert!(rc.converged && rp.converged);
+        assert_close(rc.final_objective, rp.final_objective, 1e-5);
+    }
+
+    #[test]
+    fn shrinking_reaches_same_objective() {
+        let d = toy(3);
+        let plain = Cdn::new().train(&d, Objective::Logistic, &opts());
+        let mut o = opts();
+        o.shrinking = true;
+        let shrunk = Cdn::new().train(&d, Objective::Logistic, &o);
+        assert!(shrunk.converged);
+        assert_close(plain.final_objective, shrunk.final_objective, 1e-4);
+    }
+
+    #[test]
+    fn shrinking_skips_work_under_strong_regularization() {
+        let d = generate(
+            &SyntheticSpec {
+                samples: 150,
+                features: 200,
+                nnz_per_row: 6,
+                true_density: 0.02,
+                ..Default::default()
+            },
+            4,
+        );
+        let mut o = opts();
+        o.c = 1.0; // sparse optimum (9 of 200 features) but nonzero
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 2000;
+        let plain = Cdn::new().train(&d, Objective::Logistic, &o);
+        let mut os = o.clone();
+        os.shrinking = true;
+        let shrunk = Cdn::new().train(&d, Objective::Logistic, &os);
+        assert!(
+            shrunk.inner_iters < plain.inner_iters,
+            "shrinking should visit fewer features ({} vs {})",
+            shrunk.inner_iters,
+            plain.inner_iters
+        );
+        assert_close(plain.final_objective, shrunk.final_objective, 1e-3);
+    }
+
+    #[test]
+    fn objective_nonincreasing() {
+        let d = toy(5);
+        let mut o = opts();
+        o.trace_every = 1;
+        let r = Cdn::new().train(&d, Objective::L2Svm, &o);
+        for pair in r.trace.windows(2) {
+            assert!(pair[1].objective <= pair[0].objective + 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = toy(6);
+        let a = Cdn::new().train(&d, Objective::Logistic, &opts());
+        let b = Cdn::new().train(&d, Objective::Logistic, &opts());
+        assert_eq!(a.w, b.w);
+    }
+}

@@ -1,0 +1,104 @@
+//! The one-dimensional Newton descent direction with ℓ1 soft-thresholding
+//! (paper Eq. 4 / Eq. 5) — shared by every solver in the family.
+
+/// Solve `argmin_d  g·d + ½·h·d² + |w + d|` in closed form (Eq. 5):
+///
+/// ```text
+/// d = −(g+1)/h   if g + 1 ≤ h·w
+///     −(g−1)/h   if g − 1 ≥ h·w
+///     −w         otherwise
+/// ```
+///
+/// `h` must be positive (callers floor it at `ν`, Lemma 1(b)).
+#[inline]
+pub fn newton_direction(g: f64, h: f64, w: f64) -> f64 {
+    debug_assert!(h > 0.0, "hessian must be positive (got {h})");
+    let hw = h * w;
+    if g + 1.0 <= hw {
+        -(g + 1.0) / h
+    } else if g - 1.0 >= hw {
+        -(g - 1.0) / h
+    } else {
+        -w
+    }
+}
+
+/// Per-feature contribution to `Δ` (Eq. 7) for a computed direction:
+/// `g_j·d_j + γ·h_j·d_j² + |w_j + d_j| − |w_j|`. Summing over the bundle
+/// gives the `Δ` used in the Armijo acceptance test.
+#[inline]
+pub fn delta_contribution(g: f64, h: f64, w: f64, d: f64, gamma: f64) -> f64 {
+    g * d + gamma * h * d * d + (w + d).abs() - w.abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop::{prop_assert, prop_close, run_prop, Gen};
+
+    /// Brute-force the subproblem objective on a fine grid around the
+    /// closed-form answer.
+    fn subproblem(g: f64, h: f64, w: f64, d: f64) -> f64 {
+        g * d + 0.5 * h * d * d + (w + d).abs()
+    }
+
+    #[test]
+    fn closed_form_cases() {
+        // Case 1: g+1 ≤ hw (w large positive) → pure Newton on g+1.
+        assert_eq!(newton_direction(0.0, 1.0, 5.0), -1.0);
+        // Case 2: g−1 ≥ hw (w large negative) → Newton on g−1.
+        assert_eq!(newton_direction(0.0, 1.0, -5.0), 1.0);
+        // Case 3: otherwise → snap w to zero.
+        assert_eq!(newton_direction(0.2, 1.0, 0.3), -0.3);
+        // At w = 0 with |g| ≤ 1, optimal d = 0.
+        assert_eq!(newton_direction(0.5, 2.0, 0.0), -0.0);
+    }
+
+    #[test]
+    fn prop_closed_form_is_argmin() {
+        run_prop("newton_direction minimizes the subproblem", 512, |g: &mut Gen| {
+            let grad = g.f64_edgy(10.0);
+            let h = g.f64_in(0.01..20.0);
+            let w = g.f64_edgy(5.0);
+            let d = newton_direction(grad, h, w);
+            let fd = subproblem(grad, h, w, d);
+            // Compare against a grid of candidate steps (plus the kinks).
+            for k in -60i32..=60 {
+                let cand = k as f64 * 0.1;
+                prop_assert(
+                    fd <= subproblem(grad, h, w, cand) + 1e-9,
+                    &format!("grid point {cand} beats closed form {d}"),
+                )?;
+            }
+            // The kink d = −w must not beat it either.
+            prop_assert(
+                fd <= subproblem(grad, h, w, -w) + 1e-12,
+                "kink beats closed form",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_direction_is_descent() {
+        // Δ-contribution with γ ∈ [0,1) must be ≤ 0 and zero iff d = 0
+        // (Lemma 1(c): Δ ≤ (γ−1)dᵀHd).
+        run_prop("delta contribution nonpositive", 512, |g: &mut Gen| {
+            let grad = g.f64_edgy(10.0);
+            let h = g.f64_in(0.01..20.0);
+            let w = g.f64_edgy(5.0);
+            let gamma = g.f64_in(0.0..0.99);
+            let d = newton_direction(grad, h, w);
+            let delta = delta_contribution(grad, h, w, d, gamma);
+            prop_assert(delta <= 1e-12, &format!("Δ = {delta} > 0 for d = {d}"))?;
+            prop_assert(
+                delta <= (gamma - 1.0) * h * d * d + 1e-9,
+                "Δ above Lemma 1(c) bound",
+            )
+        });
+    }
+
+    #[test]
+    fn zero_gradient_zero_w_stays_put() {
+        assert_eq!(newton_direction(0.0, 3.0, 0.0), -0.0);
+    }
+}

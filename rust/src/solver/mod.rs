@@ -1,0 +1,334 @@
+//! The solver family: CDN (Alg. 1), SCDN (Alg. 2), PCDN (Alg. 3–4, the
+//! paper's contribution) and the TRON baseline, sharing the Newton
+//! direction (Eq. 5), the Armijo machinery (Eq. 6/7/11), options, traces,
+//! and stopping rules.
+
+pub mod cdn;
+pub mod direction;
+pub mod linesearch;
+pub mod pcdn;
+pub mod scdn;
+pub mod tron;
+
+use crate::data::Dataset;
+use crate::linalg;
+use crate::loss::{LossState, Objective};
+use crate::parallel::sim::IterRecord;
+use crate::util::timer::Stopwatch;
+
+/// Armijo rule parameters (paper §5.1: σ = 0.01, β = 0.5, γ = 0 for
+/// PCDN/CDN/SCDN).
+#[derive(Clone, Copy, Debug)]
+pub struct ArmijoParams {
+    pub sigma: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    /// Hard cap on backtracking steps (β=0.5 ⇒ 60 steps ≈ α = 1e-18).
+    pub max_steps: usize,
+}
+
+impl Default for ArmijoParams {
+    fn default() -> Self {
+        ArmijoParams {
+            sigma: 0.01,
+            beta: 0.5,
+            gamma: 0.0,
+            max_steps: 60,
+        }
+    }
+}
+
+/// When to stop training.
+#[derive(Clone, Copy, Debug)]
+pub enum StopRule {
+    /// Relative minimum-norm-subgradient test (the outer stopping condition
+    /// of Yuan et al. 2012 used in §5.1): stop when
+    /// `‖∂F‖₁ ≤ eps · ‖∂F(w⁰)‖₁`.
+    SubgradRel(f64),
+    /// Stop when `(F(w) − F*) / F* ≤ eps` for a known optimum `F*`
+    /// (Eq. 21's relative function value difference — used by the figure
+    /// experiments after a high-accuracy reference run).
+    RelFuncDiff { fstar: f64, eps: f64 },
+    /// Fixed number of outer iterations.
+    MaxOuter(usize),
+}
+
+/// Everything a training run needs.
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    /// Regularization parameter `c` of Eq. 1.
+    pub c: f64,
+    /// Bundle size `P` (PCDN), or parallel updates `P̄` (SCDN). Ignored by
+    /// CDN/TRON.
+    pub bundle_size: usize,
+    /// Worker threads for the real (not simulated) parallel regions.
+    pub n_threads: usize,
+    pub armijo: ArmijoParams,
+    pub stop: StopRule,
+    /// Hard iteration cap regardless of `stop`.
+    pub max_outer: usize,
+    /// Hard wall-clock cap in seconds.
+    pub max_secs: f64,
+    /// LIBLINEAR-style shrinking (CDN only; §5.1 uses the modified variant
+    /// consistent with the parallel solvers).
+    pub shrinking: bool,
+    /// RNG seed for permutations / SCDN feature draws.
+    pub seed: u64,
+    /// Record per-inner-iteration cost records for the schedule simulator.
+    pub record_iters: bool,
+    /// Append an objective-trace point every `trace_every` outer iters.
+    pub trace_every: usize,
+    /// Optional held-out set; when present every trace point also records
+    /// test accuracy (paper Fig. 4 second row).
+    pub eval_test: Option<std::sync::Arc<Dataset>>,
+    /// Elastic-net ℓ2 term `λ₂/2·‖w‖²` added to the objective (paper §6:
+    /// "easily extended to … elastic net"). `0` = plain ℓ1 (the paper's
+    /// setting). Folded into the per-coordinate Newton subproblem as
+    /// `g ← g + λ₂·w_j`, `h ← h + λ₂`.
+    pub l2_reg: f64,
+    /// Start from this model instead of `w = 0` (used by the distributed
+    /// iterative-parameter-mixing driver; PCDN/CDN honour it).
+    pub warm_start: Option<Vec<f64>>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            c: 1.0,
+            bundle_size: 64,
+            n_threads: 1,
+            armijo: ArmijoParams::default(),
+            stop: StopRule::SubgradRel(1e-3),
+            max_outer: 500,
+            max_secs: f64::INFINITY,
+            shrinking: false,
+            seed: 0,
+            record_iters: false,
+            trace_every: 1,
+            eval_test: None,
+            l2_reg: 0.0,
+            warm_start: None,
+        }
+    }
+}
+
+/// One point on the objective trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    /// Wall-clock seconds since training started.
+    pub secs: f64,
+    /// Outer iteration index.
+    pub outer_iter: usize,
+    /// `F_c(w)` — loss + ℓ1.
+    pub objective: f64,
+    /// `‖w‖₀`.
+    pub nnz: usize,
+    /// Held-out accuracy, when `TrainOptions::eval_test` is set.
+    pub accuracy: Option<f64>,
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub solver: &'static str,
+    pub w: Vec<f64>,
+    pub final_objective: f64,
+    pub outer_iters: usize,
+    /// Cumulative inner iterations (bundles for PCDN, features for CDN,
+    /// rounds for SCDN, trust-region steps for TRON).
+    pub inner_iters: usize,
+    /// Total Armijo probes across training.
+    pub ls_steps: usize,
+    pub converged: bool,
+    /// True if the run was cut by `max_secs` or `max_outer`.
+    pub wall_secs: f64,
+    pub trace: Vec<TracePoint>,
+    /// Per-inner-iteration cost records (when `record_iters`).
+    pub iter_records: Vec<IterRecord>,
+}
+
+impl TrainResult {
+    pub fn model_nnz(&self) -> usize {
+        linalg::nnz(&self.w)
+    }
+}
+
+/// A solver that minimizes Eq. 1 on a dataset.
+pub trait Solver {
+    fn name(&self) -> &'static str;
+    fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult;
+}
+
+/// `F_c(w)` from a loss state and model (loss part is maintained; the ℓ1
+/// term is explicit).
+pub fn objective_value(state: &LossState<'_>, w: &[f64]) -> f64 {
+    state.loss_value() + linalg::norm1(w)
+}
+
+/// Elastic-net objective: `F_c(w) + λ₂/2·‖w‖²`.
+pub fn objective_value_l2(state: &LossState<'_>, w: &[f64], l2: f64) -> f64 {
+    objective_value(state, w) + 0.5 * l2 * linalg::norm2_sq(w)
+}
+
+/// 1-norm of the minimum-norm subgradient of `F_c` at `w`:
+/// `v_j = g_j + 1` if `w_j > 0`; `g_j − 1` if `w_j < 0`;
+/// `sign(g_j)·max(|g_j| − 1, 0)` if `w_j = 0`.
+pub fn subgrad_norm1(grad: &[f64], w: &[f64]) -> f64 {
+    grad.iter()
+        .zip(w)
+        .map(|(&g, &wj)| {
+            if wj > 0.0 {
+                (g + 1.0).abs()
+            } else if wj < 0.0 {
+                (g - 1.0).abs()
+            } else {
+                (g.abs() - 1.0).max(0.0)
+            }
+        })
+        .sum()
+}
+
+/// Shared bookkeeping every solver uses: trace, stopping, wall clock.
+pub(crate) struct RunMonitor {
+    pub sw: Stopwatch,
+    pub trace: Vec<TracePoint>,
+    pub init_subgrad: Option<f64>,
+    pub converged: bool,
+}
+
+impl RunMonitor {
+    pub fn new() -> Self {
+        RunMonitor {
+            sw: Stopwatch::start(),
+            trace: Vec::new(),
+            init_subgrad: None,
+            converged: false,
+        }
+    }
+
+    /// Record a trace point and evaluate the stop rule. Returns `true` if
+    /// training should stop. `outer` is the completed outer-iteration
+    /// count.
+    pub fn observe(
+        &mut self,
+        outer: usize,
+        state: &LossState<'_>,
+        w: &[f64],
+        opts: &TrainOptions,
+    ) -> bool {
+        let fval = objective_value_l2(state, w, opts.l2_reg);
+        if outer % opts.trace_every.max(1) == 0 {
+            let accuracy = opts.eval_test.as_ref().map(|t| t.accuracy(w));
+            self.trace.push(TracePoint {
+                secs: self.sw.secs(),
+                outer_iter: outer,
+                objective: fval,
+                nnz: linalg::nnz(w),
+                accuracy,
+            });
+        }
+        if self.sw.secs() > opts.max_secs || outer >= opts.max_outer {
+            return true;
+        }
+        match opts.stop {
+            StopRule::MaxOuter(k) => {
+                if outer >= k {
+                    self.converged = true;
+                    return true;
+                }
+                false
+            }
+            StopRule::RelFuncDiff { fstar, eps } => {
+                if fstar > 0.0 && (fval - fstar) / fstar <= eps {
+                    self.converged = true;
+                    return true;
+                }
+                false
+            }
+            StopRule::SubgradRel(eps) => {
+                let mut g = state.full_gradient();
+                if opts.l2_reg > 0.0 {
+                    for (gj, wj) in g.iter_mut().zip(w) {
+                        *gj += opts.l2_reg * wj;
+                    }
+                }
+                let v = subgrad_norm1(&g, w);
+                let init = *self.init_subgrad.get_or_insert(v.max(1e-300));
+                if v <= eps * init {
+                    self.converged = true;
+                    return true;
+                }
+                false
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    #[test]
+    fn subgrad_zero_at_optimum_conditions() {
+        // w_j = 0 and |g_j| ≤ 1 ⇒ contribution 0; w_j > 0 needs g_j = −1.
+        let g = vec![-1.0, 0.3, 1.0];
+        let w = vec![2.0, 0.0, -1.0];
+        assert_eq!(subgrad_norm1(&g, &w), 0.0);
+        let g2 = vec![-0.5, 2.0, 1.5];
+        let w2 = vec![2.0, 0.0, -1.0];
+        // |−0.5+1| + (2−1) + |1.5−1| = 0.5 + 1 + 0.5
+        assert!((subgrad_norm1(&g2, &w2) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monitor_stops_on_max_outer() {
+        let d = generate(&SyntheticSpec::default(), 1);
+        let st = LossState::new(Objective::Logistic, &d, 1.0);
+        let w = vec![0.0; d.features()];
+        let opts = TrainOptions {
+            stop: StopRule::MaxOuter(3),
+            ..Default::default()
+        };
+        let mut m = RunMonitor::new();
+        assert!(!m.observe(1, &st, &w, &opts));
+        assert!(!m.observe(2, &st, &w, &opts));
+        assert!(m.observe(3, &st, &w, &opts));
+        assert!(m.converged);
+    }
+
+    #[test]
+    fn monitor_rel_func_diff() {
+        let d = generate(&SyntheticSpec::default(), 1);
+        let st = LossState::new(Objective::Logistic, &d, 1.0);
+        let w = vec![0.0; d.features()];
+        let f0 = objective_value(&st, &w);
+        let opts = TrainOptions {
+            stop: StopRule::RelFuncDiff {
+                fstar: f0 * 0.999,
+                eps: 0.01,
+            },
+            ..Default::default()
+        };
+        let mut m = RunMonitor::new();
+        // (f0 − 0.999·f0)/(0.999·f0) ≈ 0.1% ≤ 1% ⇒ stop immediately.
+        assert!(m.observe(1, &st, &w, &opts));
+        assert!(m.converged);
+    }
+
+    #[test]
+    fn monitor_hard_caps() {
+        let d = generate(&SyntheticSpec::default(), 1);
+        let st = LossState::new(Objective::Logistic, &d, 1.0);
+        let w = vec![0.0; d.features()];
+        let opts = TrainOptions {
+            stop: StopRule::SubgradRel(0.0), // never satisfiable
+            max_outer: 2,
+            ..Default::default()
+        };
+        let mut m = RunMonitor::new();
+        assert!(!m.observe(1, &st, &w, &opts));
+        assert!(m.observe(2, &st, &w, &opts));
+        assert!(!m.converged);
+    }
+}

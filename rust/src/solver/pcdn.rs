@@ -1,0 +1,418 @@
+//! PCDN — Parallel Coordinate Descent Newton (paper Algorithm 3 + 4), the
+//! paper's contribution.
+//!
+//! Each outer iteration randomly partitions the feature set into
+//! `b = ⌈n/P⌉` bundles (Eq. 8) and processes them sequentially
+//! (Gauss-Seidel). Per bundle `B^t`:
+//!
+//! 1. **Direction pass (parallel over `P` features)** — each worker computes
+//!    `(∇_j L, ∇²_jj L)` from the maintained per-sample factors and its own
+//!    feature column only (Eq. 12), then the soft-thresholded Newton step
+//!    `d_j` (Eq. 5) and its `Δ` contribution (Eq. 7).
+//! 2. **`dᵀx` accumulation** — the parallelizable slice of the line search
+//!    (footnote 3: computable with `P` threads + reduction); measured
+//!    separately so the schedule simulator can scale it.
+//! 3. **One `P`-dimensional Armijo search** (Alg. 4) on maintained
+//!    quantities — the step that guarantees global convergence for *any*
+//!    `P ∈ [1, n]`, unlike SCDN.
+//! 4. **Commit** — `w_B`, margins, and factors update; one barrier total.
+
+use crate::data::Dataset;
+use crate::loss::{LossState, Objective};
+use crate::parallel::sim::IterRecord;
+use crate::solver::direction::{delta_contribution, newton_direction};
+use crate::solver::linesearch::{p_dim_armijo_l2, DxScratch};
+use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// The PCDN solver.
+#[derive(Default)]
+pub struct Pcdn;
+
+impl Pcdn {
+    pub fn new() -> Self {
+        Pcdn
+    }
+}
+
+/// Per-feature direction-pass output, written by the parallel workers.
+#[derive(Clone, Copy, Default)]
+struct DirSlot {
+    d: f64,
+    delta: f64,
+}
+
+/// Run `body(i)` for `i in 0..len` across `n_threads` scoped workers with
+/// contiguous chunking. Writes go through disjoint `&mut` chunks, so the
+/// body receives the chunk and its global offset.
+fn par_chunks<T: Send, F>(n_threads: usize, out: &mut [T], f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = out.len();
+    if n_threads <= 1 || len <= 1 {
+        f(0, out);
+        return;
+    }
+    let n_chunks = n_threads.min(len);
+    let chunk = len.div_ceil(n_chunks);
+    std::thread::scope(|s| {
+        for (k, piece) in out.chunks_mut(chunk).enumerate() {
+            let fr = &f;
+            s.spawn(move || fr(k * chunk, piece));
+        }
+    });
+}
+
+impl Solver for Pcdn {
+    fn name(&self) -> &'static str {
+        "pcdn"
+    }
+
+    fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult {
+        let n = data.features();
+        let s = data.samples();
+        let p = opts.bundle_size.clamp(1, n.max(1));
+        let mut state = LossState::new(obj, data, opts.c);
+        let mut w = vec![0.0f64; n];
+        if let Some(w0) = &opts.warm_start {
+            assert_eq!(w0.len(), n, "warm_start length mismatch");
+            w.copy_from_slice(w0);
+            state.reset_from(&w);
+        }
+        let mut rng = Pcg64::new(opts.seed);
+        let mut scratch = DxScratch::new(s);
+        let mut slots: Vec<DirSlot> = vec![DirSlot::default(); p];
+        let mut w_b: Vec<f64> = Vec::with_capacity(p);
+        let mut d_b: Vec<f64> = Vec::with_capacity(p);
+        let mut monitor = RunMonitor::new();
+        let mut records: Vec<IterRecord> = Vec::new();
+        let mut inner_iters = 0usize;
+        let mut ls_steps = 0usize;
+        let mut outer = 0usize;
+
+        // Initial trace point + early-exit check.
+        if monitor.observe(0, &state, &w, opts) {
+            return finish(self.name(), w, &state, monitor, 0, 0, 0, records);
+        }
+
+        loop {
+            outer += 1;
+            // Eq. 8: random disjoint partition of N into bundles.
+            let perm = rng.permutation(n);
+            for bundle in perm.chunks(p) {
+                inner_iters += 1;
+                let bp = bundle.len();
+
+                // ---- 1. direction pass (parallel region) -------------------
+                let t_dir = Stopwatch::start();
+                {
+                    let st = &state;
+                    let wref = &w;
+                    par_chunks(opts.n_threads, &mut slots[..bp], |off, piece| {
+                        for (k, slot) in piece.iter_mut().enumerate() {
+                            let j = bundle[off + k];
+                            let (mut g, mut h) = st.grad_hess_j(j);
+                            // Elastic-net fold-in (no-op at l2_reg = 0).
+                            g += opts.l2_reg * wref[j];
+                            h += opts.l2_reg;
+                            let d = newton_direction(g, h, wref[j]);
+                            let delta =
+                                delta_contribution(g, h, wref[j], d, opts.armijo.gamma);
+                            *slot = DirSlot { d, delta };
+                        }
+                    });
+                }
+                let t_direction_total = t_dir.secs();
+
+                // ---- 2. dᵀx accumulation (parallelizable LS slice) ---------
+                let t_acc = Stopwatch::start();
+                scratch.reset();
+                w_b.clear();
+                d_b.clear();
+                let mut delta = 0.0;
+                let mut any_move = false;
+                for (k, &j) in bundle.iter().enumerate() {
+                    let d = slots[k].d;
+                    delta += slots[k].delta;
+                    if d != 0.0 {
+                        any_move = true;
+                        let (ri, v) = data.x.col(j);
+                        scratch.accumulate(ri, v, d);
+                    }
+                    w_b.push(w[j]);
+                    d_b.push(d);
+                }
+                let t_ls_parallel_total = t_acc.secs();
+
+                if !any_move {
+                    if opts.record_iters {
+                        records.push(IterRecord {
+                            bundle_size: bp,
+                            t_direction_total,
+                            t_ls_parallel_total,
+                            t_ls_serial: 0.0,
+                            q_steps: 0,
+                        });
+                    }
+                    continue;
+                }
+
+                // ---- 3. P-dimensional Armijo line search -------------------
+                let t_ls = Stopwatch::start();
+                let (touched, dx) = scratch.view();
+                let outcome = p_dim_armijo_l2(
+                    &state, touched, &dx, &w_b, &d_b, delta, &opts.armijo, opts.l2_reg,
+                );
+                let t_ls_serial = t_ls.secs();
+                ls_steps += outcome.steps;
+
+                // ---- 4. commit --------------------------------------------
+                if outcome.accepted && outcome.alpha > 0.0 {
+                    for (k, &j) in bundle.iter().enumerate() {
+                        w[j] += outcome.alpha * d_b[k];
+                    }
+                    let touched_owned: Vec<u32> = touched.to_vec();
+                    state.apply_step(&touched_owned, &dx, outcome.alpha);
+                }
+
+                if opts.record_iters {
+                    records.push(IterRecord {
+                        bundle_size: bp,
+                        t_direction_total,
+                        t_ls_parallel_total,
+                        t_ls_serial,
+                        q_steps: outcome.steps,
+                    });
+                }
+            }
+
+            if monitor.observe(outer, &state, &w, opts) {
+                break;
+            }
+        }
+        finish(
+            self.name(),
+            w,
+            &state,
+            monitor,
+            outer,
+            inner_iters,
+            ls_steps,
+            records,
+        )
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn finish(
+    name: &'static str,
+    w: Vec<f64>,
+    state: &LossState<'_>,
+    monitor: RunMonitor,
+    outer: usize,
+    inner: usize,
+    ls_steps: usize,
+    records: Vec<IterRecord>,
+) -> TrainResult {
+    let fval = crate::solver::objective_value(state, &w);
+    TrainResult {
+        solver: name,
+        w,
+        final_objective: fval,
+        outer_iters: outer,
+        inner_iters: inner,
+        ls_steps,
+        converged: monitor.converged,
+        wall_secs: monitor.sw.secs(),
+        trace: monitor.trace,
+        iter_records: records,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::solver::StopRule;
+    use crate::testutil::assert_close;
+
+    fn toy(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 120,
+                features: 60,
+                nnz_per_row: 8,
+                label_noise: 0.05,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn opts(p: usize) -> TrainOptions {
+        TrainOptions {
+            c: 1.0,
+            bundle_size: p,
+            stop: StopRule::SubgradRel(1e-4),
+            max_outer: 300,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_logistic() {
+        let d = toy(1);
+        let r = Pcdn::new().train(&d, Objective::Logistic, &opts(16));
+        assert!(r.converged, "did not converge in {} iters", r.outer_iters);
+        // Objective strictly below F_c(0) = s·log 2 + 0.
+        let f0 = d.samples() as f64 * std::f64::consts::LN_2;
+        assert!(r.final_objective < f0);
+    }
+
+    #[test]
+    fn converges_svm() {
+        let d = toy(2);
+        let r = Pcdn::new().train(&d, Objective::L2Svm, &opts(16));
+        assert!(r.converged);
+        assert!(r.final_objective < d.samples() as f64);
+    }
+
+    #[test]
+    fn objective_nonincreasing_along_trace() {
+        let d = toy(3);
+        let mut o = opts(8);
+        o.trace_every = 1;
+        let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+        for pair in r.trace.windows(2) {
+            assert!(
+                pair[1].objective <= pair[0].objective + 1e-9,
+                "objective increased: {} -> {}",
+                pair[0].objective,
+                pair[1].objective
+            );
+        }
+    }
+
+    #[test]
+    fn all_bundle_sizes_reach_same_optimum() {
+        // Global convergence for any P ∈ [1, n] (paper §4).
+        let d = toy(4);
+        let mut finals = Vec::new();
+        for p in [1usize, 4, 16, 60] {
+            let mut o = opts(p);
+            o.stop = StopRule::SubgradRel(1e-6);
+            o.max_outer = 2000;
+            let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+            assert!(r.converged, "P={p} did not converge");
+            finals.push(r.final_objective);
+        }
+        for f in &finals[1..] {
+            assert_close(*f, finals[0], 1e-4);
+        }
+    }
+
+    #[test]
+    fn larger_bundles_fewer_inner_iters() {
+        // Eq. 19: T_ε (the number of *inner* bundle iterations to reach ε)
+        // decreases with P. Outer sweeps stay roughly flat; the per-sweep
+        // bundle count shrinks as ⌈n/P⌉.
+        let d = generate(
+            &SyntheticSpec {
+                samples: 200,
+                features: 100,
+                nnz_per_row: 10,
+                scale_sigma: 0.8,
+                ..Default::default()
+            },
+            7,
+        );
+        let run = |p: usize| {
+            let mut o = opts(p);
+            o.stop = StopRule::SubgradRel(1e-4);
+            o.max_outer = 3000;
+            Pcdn::new().train(&d, Objective::Logistic, &o).inner_iters
+        };
+        let t1 = run(1);
+        let t8 = run(8);
+        let t32 = run(32);
+        assert!(
+            t8 < t1 && t32 < t8,
+            "T_ε should fall with P: T(1)={t1}, T(8)={t8}, T(32)={t32}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = toy(5);
+        let r1 = Pcdn::new().train(&d, Objective::Logistic, &opts(8));
+        let r2 = Pcdn::new().train(&d, Objective::Logistic, &opts(8));
+        assert_eq!(r1.w, r2.w);
+        assert_eq!(r1.outer_iters, r2.outer_iters);
+    }
+
+    #[test]
+    fn multithreaded_matches_single_thread() {
+        // The direction pass is read-only w.r.t. state, so thread count
+        // must not change the trajectory at all.
+        let d = toy(6);
+        let mut o1 = opts(16);
+        o1.n_threads = 1;
+        let mut o4 = opts(16);
+        o4.n_threads = 4;
+        let r1 = Pcdn::new().train(&d, Objective::Logistic, &o1);
+        let r4 = Pcdn::new().train(&d, Objective::Logistic, &o4);
+        assert_eq!(r1.w, r4.w);
+        assert_eq!(r1.ls_steps, r4.ls_steps);
+    }
+
+    #[test]
+    fn produces_sparse_models() {
+        let d = toy(8);
+        let mut o = opts(16);
+        o.c = 0.05; // strong relative regularization
+        let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+        assert!(
+            r.model_nnz() < d.features(),
+            "ℓ1 should zero some coordinates (nnz = {})",
+            r.model_nnz()
+        );
+    }
+
+    #[test]
+    fn iter_records_captured() {
+        let d = toy(9);
+        let mut o = opts(10);
+        o.record_iters = true;
+        o.max_outer = 3;
+        o.stop = StopRule::MaxOuter(3);
+        let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+        // 60 features / bundle 10 = 6 bundles per outer iter, 3 iters.
+        assert_eq!(r.iter_records.len(), 18);
+        assert!(r.iter_records.iter().all(|rec| rec.bundle_size == 10));
+        assert!(r
+            .iter_records
+            .iter()
+            .any(|rec| rec.t_direction_total >= 0.0));
+    }
+
+    #[test]
+    fn bundle_size_clamped() {
+        let d = toy(10);
+        let mut o = opts(10_000); // P > n clamps to n
+        o.max_outer = 50;
+        let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+        assert!(r.final_objective.is_finite());
+    }
+
+    #[test]
+    fn respects_max_secs() {
+        let d = toy(11);
+        let mut o = opts(4);
+        o.max_secs = 0.0;
+        let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+        assert!(!r.converged);
+        assert!(r.outer_iters <= 1);
+    }
+}

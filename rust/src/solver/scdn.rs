@@ -1,0 +1,509 @@
+//! SCDN — Shotgun Coordinate Descent Newton (paper Algorithm 2; Bradley et
+//! al. 2011), the feature-parallel baseline *without* the bundle line
+//! search. `P̄` features are updated concurrently, each with its own
+//! 1-dimensional Armijo search computed against (possibly stale) shared
+//! state. Convergence is only guaranteed for `P̄ ≤ n/ρ(XᵀX) + 1`; beyond
+//! that the aggregate step can overshoot and the objective diverges — the
+//! behaviour PCDN's P-dimensional search eliminates.
+//!
+//! Two execution modes:
+//!
+//! * [`ScdnMode::Round`] (default, deterministic): each round snapshots the
+//!   state, computes `P̄` independent single-feature updates against the
+//!   snapshot (exactly what concurrent threads racing on shared state do in
+//!   the worst case), then applies them all. Deterministic given the seed,
+//!   so the divergence figures replay exactly.
+//! * [`ScdnMode::Atomic`]: real threads racing on shared atomic state —
+//!   margins and weights are `AtomicF64`s updated with the CAS loop the
+//!   paper mentions ("compare-and-swap implementation using inline
+//!   assembly" §5.1 — here `AtomicU64::compare_exchange_weak` on the f64
+//!   bit pattern). Nondeterministic; used to validate that the round-mode
+//!   behaviour matches genuinely racy execution.
+
+use crate::data::Dataset;
+use crate::loss::logistic::{log1p_exp, sigmoid};
+use crate::loss::{LossState, Objective};
+use crate::parallel::pool::AtomicF64Vec;
+use crate::parallel::sim::IterRecord;
+use crate::solver::direction::{delta_contribution, newton_direction};
+use crate::solver::linesearch::l1_delta;
+use crate::solver::pcdn::finish;
+use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Execution mode for SCDN.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ScdnMode {
+    /// Deterministic stale-round emulation of concurrent updates.
+    #[default]
+    Round,
+    /// Real threads on shared atomic state (logistic + svm).
+    Atomic,
+}
+
+/// The SCDN solver.
+#[derive(Default)]
+pub struct Scdn {
+    pub mode: ScdnMode,
+}
+
+impl Scdn {
+    pub fn new() -> Self {
+        Scdn::default()
+    }
+    pub fn atomic() -> Self {
+        Scdn {
+            mode: ScdnMode::Atomic,
+        }
+    }
+}
+
+impl Solver for Scdn {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            ScdnMode::Round => "scdn",
+            ScdnMode::Atomic => "scdn-atomic",
+        }
+    }
+
+    fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult {
+        match self.mode {
+            ScdnMode::Round => train_round(self.name(), data, obj, opts),
+            ScdnMode::Atomic => train_atomic(self.name(), data, obj, opts),
+        }
+    }
+}
+
+/// Deterministic round mode. One "outer iteration" = `⌈n/P̄⌉` rounds so the
+/// work per outer iteration matches one CDN sweep (n feature updates).
+fn train_round(
+    name: &'static str,
+    data: &Dataset,
+    obj: Objective,
+    opts: &TrainOptions,
+) -> TrainResult {
+    let n = data.features();
+    let pbar = opts.bundle_size.clamp(1, n);
+    let mut state = LossState::new(obj, data, opts.c);
+    let mut w = vec![0.0f64; n];
+    let mut rng = Pcg64::new(opts.seed);
+    let mut monitor = RunMonitor::new();
+    let mut records: Vec<IterRecord> = Vec::new();
+    let mut inner_iters = 0usize;
+    let mut ls_steps = 0usize;
+    let mut outer = 0usize;
+    let rounds_per_outer = n.div_ceil(pbar);
+
+    if monitor.observe(0, &state, &w, opts) {
+        return finish(name, w, &state, monitor, 0, 0, 0, records);
+    }
+
+    'outer: loop {
+        outer += 1;
+        for _ in 0..rounds_per_outer {
+            inner_iters += 1;
+            let t_dir = Stopwatch::start();
+            // Alg. 2 step 5: choose P̄ features uniformly at random
+            // (independent draws, like the shotgun paper — collisions are
+            // part of the algorithm's semantics and resolve by summing).
+            let feats: Vec<usize> = (0..pbar).map(|_| rng.index(n)).collect();
+            // Stale snapshot: all P̄ updates are computed against the state
+            // at round start, each with its own 1-D line search.
+            let mut updates: Vec<(usize, f64)> = Vec::with_capacity(pbar);
+            let mut steps_this_round = 0usize;
+            for &j in &feats {
+                let (mut g, mut h) = state.grad_hess_j(j);
+                g += opts.l2_reg * w[j];
+                h += opts.l2_reg;
+                let d = newton_direction(g, h, w[j]);
+                if d == 0.0 {
+                    continue;
+                }
+                let delta = delta_contribution(g, h, w[j], d, opts.armijo.gamma);
+                let (ri, vals) = data.x.col(j);
+                let mut alpha = 1.0f64;
+                let mut accepted = false;
+                for _ in 0..opts.armijo.max_steps {
+                    steps_this_round += 1;
+                    let od = state.delta_loss(ri, vals, alpha * d)
+                        + l1_delta(&[w[j]], &[d], alpha)
+                        + crate::solver::linesearch::l2_delta(
+                            &[w[j]], &[d], alpha, opts.l2_reg,
+                        );
+                    if od <= opts.armijo.sigma * alpha * delta {
+                        accepted = true;
+                        break;
+                    }
+                    alpha *= opts.armijo.beta;
+                }
+                if accepted {
+                    updates.push((j, alpha * d));
+                }
+            }
+            let t_direction_total = t_dir.secs();
+            ls_steps += steps_this_round;
+
+            // Apply all stale updates (the divergence mechanism: each was
+            // safe alone; their sum may overshoot).
+            let t_apply = Stopwatch::start();
+            for &(j, step) in &updates {
+                w[j] += step;
+                let (ri, vals) = data.x.col(j);
+                state.apply_step(ri, vals, step);
+            }
+            let t_ls_serial = t_apply.secs();
+
+            if opts.record_iters {
+                records.push(IterRecord {
+                    bundle_size: pbar,
+                    t_direction_total,
+                    t_ls_parallel_total: 0.0,
+                    t_ls_serial,
+                    q_steps: steps_this_round,
+                });
+            }
+
+            // Divergence guard: SCDN can blow up; stop when the objective
+            // is no longer finite (the paper's news20 non-convergence).
+            if !state.loss_value().is_finite() {
+                break 'outer;
+            }
+        }
+        if monitor.observe(outer, &state, &w, opts) {
+            break;
+        }
+    }
+    finish(name, w, &state, monitor, outer, inner_iters, ls_steps, records)
+}
+
+/// Real concurrent mode: P̄ worker threads race on shared atomic state.
+fn train_atomic(
+    name: &'static str,
+    data: &Dataset,
+    obj: Objective,
+    opts: &TrainOptions,
+) -> TrainResult {
+    let n = data.features();
+    let s = data.samples();
+    let pbar = opts.bundle_size.clamp(1, n);
+    // Shared state: weights and margins wx (logistic) / b (svm) as atomics.
+    let w_atomic = AtomicF64Vec::zeros(n);
+    let margin = match obj {
+        Objective::Logistic => AtomicF64Vec::zeros(s),
+        Objective::L2Svm => AtomicF64Vec::from_slice(&vec![1.0; s]),
+        // Lasso: residual r_i = wᵀx_i − y_i = −y_i at w = 0.
+        Objective::Lasso => {
+            AtomicF64Vec::from_slice(&data.y.iter().map(|&y| -y).collect::<Vec<_>>())
+        }
+    };
+    let c = opts.c;
+    let monitor = RunMonitor::new();
+    let mut outer = 0usize;
+    let updates_per_outer = n; // one CDN-sweep-equivalent per outer iter
+
+    // Everything below reads/writes atomics only.
+    let grad_hess_j = |j: usize| -> (f64, f64) {
+        let (ri, vals) = data.x.col(j);
+        let mut g = 0.0;
+        let mut h = 0.0;
+        match obj {
+            Objective::Logistic => {
+                for (r, v) in ri.iter().zip(vals) {
+                    let i = *r as usize;
+                    let m = margin.load(i);
+                    let y = data.y[i];
+                    g += -y * sigmoid(-y * m) * v;
+                    h += sigmoid(m) * sigmoid(-m) * v * v;
+                }
+            }
+            Objective::L2Svm => {
+                for (r, v) in ri.iter().zip(vals) {
+                    let i = *r as usize;
+                    let b = margin.load(i);
+                    if b > 0.0 {
+                        g += -2.0 * data.y[i] * b * v;
+                        h += 2.0 * v * v;
+                    }
+                }
+            }
+            Objective::Lasso => {
+                for (r, v) in ri.iter().zip(vals) {
+                    let i = *r as usize;
+                    g += 2.0 * margin.load(i) * v;
+                    h += 2.0 * v * v;
+                }
+            }
+        }
+        (c * g, (c * h).max(crate::loss::NU))
+    };
+    let delta_loss = |j: usize, step: f64| -> f64 {
+        let (ri, vals) = data.x.col(j);
+        let mut acc = 0.0;
+        match obj {
+            Objective::Logistic => {
+                for (r, v) in ri.iter().zip(vals) {
+                    let i = *r as usize;
+                    let y = data.y[i];
+                    let old = -y * margin.load(i);
+                    acc += log1p_exp(old - y * step * v) - log1p_exp(old);
+                }
+            }
+            Objective::L2Svm => {
+                for (r, v) in ri.iter().zip(vals) {
+                    let i = *r as usize;
+                    let old = margin.load(i);
+                    let new = old - data.y[i] * step * v;
+                    let o2 = if old > 0.0 { old * old } else { 0.0 };
+                    let n2 = if new > 0.0 { new * new } else { 0.0 };
+                    acc += n2 - o2;
+                }
+            }
+            Objective::Lasso => {
+                for (r, v) in ri.iter().zip(vals) {
+                    let i = *r as usize;
+                    let old = margin.load(i);
+                    let new = old + step * v;
+                    acc += new * new - old * old;
+                }
+            }
+        }
+        c * acc
+    };
+
+    let stop_flag = std::sync::atomic::AtomicBool::new(false);
+    let total_ls = std::sync::atomic::AtomicUsize::new(0);
+    let total_updates = std::sync::atomic::AtomicUsize::new(0);
+    let mut monitor = monitor;
+
+    // Reference subgradient norm at w = 0 for the relative stopping test.
+    let v0 = {
+        let st0 = LossState::new(obj, data, c);
+        crate::solver::subgrad_norm1(&st0.full_gradient(), &vec![0.0; n]).max(1e-300)
+    };
+
+    while outer < opts.max_outer && monitor.sw.secs() < opts.max_secs {
+        outer += 1;
+        let quota = updates_per_outer.div_ceil(pbar);
+        std::thread::scope(|scope| {
+            for t in 0..pbar {
+                let grad_hess_j = &grad_hess_j;
+                let delta_loss = &delta_loss;
+                let w_atomic = &w_atomic;
+                let margin = &margin;
+                let stop_flag = &stop_flag;
+                let total_ls = &total_ls;
+                let total_updates = &total_updates;
+                let armijo = opts.armijo;
+                let mut rng = Pcg64::with_stream(opts.seed ^ outer as u64, t as u64);
+                scope.spawn(move || {
+                    for _ in 0..quota {
+                        if stop_flag.load(std::sync::atomic::Ordering::Relaxed) {
+                            return;
+                        }
+                        let j = rng.index(n);
+                        let wj = w_atomic.load(j);
+                        let (g, h) = grad_hess_j(j);
+                        let d = newton_direction(g, h, wj);
+                        if d == 0.0 {
+                            continue;
+                        }
+                        let delta = delta_contribution(g, h, wj, d, armijo.gamma);
+                        let mut alpha = 1.0f64;
+                        let mut accepted = false;
+                        for _ in 0..armijo.max_steps {
+                            total_ls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            let od =
+                                delta_loss(j, alpha * d) + l1_delta(&[wj], &[d], alpha);
+                            if od <= armijo.sigma * alpha * delta {
+                                accepted = true;
+                                break;
+                            }
+                            alpha *= armijo.beta;
+                        }
+                        if accepted {
+                            let step = alpha * d;
+                            // CAS weight update + atomic margin axpy — the
+                            // paper's compare-and-swap implementation.
+                            w_atomic.fetch_add(j, step);
+                            let (ri, vals) = data.x.col(j);
+                            for (r, v) in ri.iter().zip(vals) {
+                                let i = *r as usize;
+                                match obj {
+                                    Objective::Logistic | Objective::Lasso => {
+                                        margin.fetch_add(i, step * v);
+                                    }
+                                    Objective::L2Svm => {
+                                        margin.fetch_add(i, -data.y[i] * step * v);
+                                    }
+                                }
+                            }
+                            total_updates
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+
+        // Convergence check on a consistent snapshot.
+        let w_snap = w_atomic.to_vec();
+        let mut st = LossState::new(obj, data, c);
+        st.reset_from(&w_snap);
+        let g = st.full_gradient();
+        let v = crate::solver::subgrad_norm1(&g, &w_snap);
+        if let crate::solver::StopRule::SubgradRel(eps) = opts.stop {
+            if v <= eps * v0 {
+                monitor.converged = true;
+                return finish(
+                    name,
+                    w_snap,
+                    &st,
+                    monitor,
+                    outer,
+                    outer * updates_per_outer,
+                    total_ls.load(std::sync::atomic::Ordering::Relaxed),
+                    Vec::new(),
+                );
+            }
+        }
+        if !st.loss_value().is_finite() {
+            break;
+        }
+    }
+    let _ = total_updates.load(std::sync::atomic::Ordering::Relaxed);
+
+    let w_snap = w_atomic.to_vec();
+    let mut st = LossState::new(obj, data, c);
+    st.reset_from(&w_snap);
+    finish(
+        name,
+        w_snap,
+        &st,
+        monitor,
+        outer,
+        outer * updates_per_outer,
+        total_ls.load(std::sync::atomic::Ordering::Relaxed),
+        Vec::new(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::solver::StopRule;
+    use crate::testutil::assert_close;
+
+    fn sparse_indep(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 150,
+                features: 80,
+                nnz_per_row: 4,
+                corr_groups: 0,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn dense_corr(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 100,
+                features: 60,
+                nnz_per_row: 55,
+                corr_groups: 3,
+                corr_strength: 0.95,
+                row_normalize: true,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn opts(pbar: usize) -> TrainOptions {
+        TrainOptions {
+            c: 1.0,
+            bundle_size: pbar,
+            stop: StopRule::SubgradRel(1e-4),
+            max_outer: 400,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_low_parallelism_uncorrelated() {
+        let d = sparse_indep(1);
+        let r = Scdn::new().train(&d, Objective::Logistic, &opts(2));
+        assert!(r.converged, "SCDN P̄=2 should converge on sparse data");
+    }
+
+    #[test]
+    fn matches_cdn_optimum_when_safe() {
+        let d = sparse_indep(2);
+        let mut o = opts(2);
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 3000;
+        let rs = Scdn::new().train(&d, Objective::Logistic, &o);
+        let rc = crate::solver::cdn::Cdn::new().train(&d, Objective::Logistic, &o);
+        assert!(rs.converged && rc.converged);
+        assert_close(rs.final_objective, rc.final_objective, 1e-4);
+    }
+
+    #[test]
+    fn struggles_at_high_parallelism_on_correlated_data() {
+        // The paper's divergence story: on a dense correlated dataset the
+        // safe bound P̄ ≤ n/ρ+1 is tiny; pushing P̄ ≫ bound must visibly
+        // stall or diverge relative to safe parallelism within an equal
+        // iteration budget.
+        let d = dense_corr(3);
+        let bound = crate::linalg::power::scdn_parallelism_bound(&d.x);
+        assert!(bound < 8.0, "test premise: bound must be small, got {bound}");
+        let mut o_safe = opts(1);
+        o_safe.max_outer = 40;
+        o_safe.stop = StopRule::MaxOuter(40);
+        let mut o_wild = o_safe.clone();
+        o_wild.bundle_size = 32;
+        let safe = Scdn::new().train(&d, Objective::Logistic, &o_safe);
+        let wild = Scdn::new().train(&d, Objective::Logistic, &o_wild);
+        assert!(
+            !wild.final_objective.is_finite()
+                || wild.final_objective > safe.final_objective * 1.02,
+            "expected stall/divergence: wild {} vs safe {}",
+            wild.final_objective,
+            safe.final_objective
+        );
+    }
+
+    #[test]
+    fn round_mode_deterministic() {
+        let d = sparse_indep(4);
+        let a = Scdn::new().train(&d, Objective::Logistic, &opts(4));
+        let b = Scdn::new().train(&d, Objective::Logistic, &opts(4));
+        assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn atomic_mode_converges_on_easy_data() {
+        let d = sparse_indep(5);
+        let mut o = opts(2);
+        o.max_outer = 600;
+        let r = Scdn::atomic().train(&d, Objective::Logistic, &o);
+        assert!(
+            r.converged,
+            "atomic SCDN should converge (subgrad rel 1e-4), F = {}",
+            r.final_objective
+        );
+    }
+
+    #[test]
+    fn atomic_mode_svm_finite() {
+        let d = sparse_indep(6);
+        let mut o = opts(2);
+        o.max_outer = 100;
+        let r = Scdn::atomic().train(&d, Objective::L2Svm, &o);
+        assert!(r.final_objective.is_finite());
+    }
+}

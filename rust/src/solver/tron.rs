@@ -1,0 +1,395 @@
+//! TRON — Trust Region Newton (Lin & Moré 1999), the second-order baseline
+//! of the paper's §5.2 (applied to ℓ1 problems as in Yuan et al. 2010).
+//!
+//! The ℓ1 problem is recast as a smooth bound-constrained one by variable
+//! splitting `w = u⁺ − u⁻`, `u = [u⁺; u⁻] ≥ 0`:
+//!
+//! ```text
+//! min_{u ≥ 0}  f(u) = L(u⁺ − u⁻) + Σ_j (u⁺_j + u⁻_j)
+//! ```
+//!
+//! Each iteration: (1) free-set identification from the projected gradient;
+//! (2) a Steihaug conjugate-gradient solve of the trust-region Newton
+//! subproblem restricted to the free variables (Hessian-vector products via
+//! `LossState::hessian_vec`, never forming `∇²L`); (3) a projected Armijo
+//! line search (σ = 0.01, β = 0.1 — the paper's TRON settings); (4) the
+//! classic actual-vs-predicted radius update.
+
+use crate::data::Dataset;
+use crate::linalg::{dot, norm2};
+use crate::loss::{LossState, Objective};
+use crate::solver::pcdn::finish;
+use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
+
+/// The TRON solver.
+#[derive(Default)]
+pub struct Tron;
+
+impl Tron {
+    pub fn new() -> Self {
+        Tron
+    }
+}
+
+/// TRON line-search constants (paper §5.1: σ = 0.01, β = 0.1).
+const TRON_SIGMA: f64 = 0.01;
+const TRON_BETA: f64 = 0.1;
+/// Radius-update thresholds (Lin–Moré standard values).
+const ETA0: f64 = 1e-4;
+const ETA1: f64 = 0.25;
+const ETA2: f64 = 0.75;
+
+struct Split<'a, 'd> {
+    state: LossState<'d>,
+    data: &'a Dataset,
+    n: usize,
+    /// Elastic-net λ₂ (0 = the paper's pure-ℓ1 setting).
+    l2: f64,
+}
+
+impl<'a, 'd> Split<'a, 'd> {
+    fn w_of(&self, u: &[f64]) -> Vec<f64> {
+        (0..self.n).map(|j| u[j] - u[self.n + j]).collect()
+    }
+
+    /// f(u) = L(w) + λ₂/2·‖w‖² + Σ u.
+    fn value(&mut self, u: &[f64]) -> f64 {
+        let w = self.w_of(u);
+        self.state.reset_from(&w);
+        self.state.loss_value()
+            + 0.5 * self.l2 * crate::linalg::norm2_sq(&w)
+            + u.iter().sum::<f64>()
+    }
+
+    /// ∇f(u) = [∇L + 1; −∇L + 1]; assumes `state` holds the current `w`.
+    fn gradient(&self, u: &[f64]) -> Vec<f64> {
+        let mut gl = self.state.full_gradient();
+        if self.l2 > 0.0 {
+            for (j, gj) in gl.iter_mut().enumerate() {
+                *gj += self.l2 * (u[j] - u[self.n + j]);
+            }
+        }
+        let mut g = vec![0.0; 2 * self.n];
+        for j in 0..self.n {
+            g[j] = gl[j] + 1.0;
+            g[self.n + j] = -gl[j] + 1.0;
+        }
+        g
+    }
+
+    /// Hessian-vector product on the split space (free-masked by caller).
+    fn hess_vec(&self, v: &[f64]) -> Vec<f64> {
+        let vw: Vec<f64> = (0..self.n).map(|j| v[j] - v[self.n + j]).collect();
+        let mut hw = self.state.hessian_vec(&vw);
+        if self.l2 > 0.0 {
+            for (hj, vj) in hw.iter_mut().zip(&vw) {
+                *hj += self.l2 * vj;
+            }
+        }
+        let mut out = vec![0.0; 2 * self.n];
+        for j in 0..self.n {
+            out[j] = hw[j];
+            out[self.n + j] = -hw[j];
+        }
+        out
+    }
+}
+
+/// Projected gradient: `pg_i = g_i` if `u_i > 0`, else `min(g_i, 0)`.
+fn projected_gradient(g: &[f64], u: &[f64]) -> Vec<f64> {
+    g.iter()
+        .zip(u)
+        .map(|(&gi, &ui)| if ui > 0.0 { gi } else { gi.min(0.0) })
+        .collect()
+}
+
+/// Steihaug CG for `min_s gᵀs + ½ sᵀHs` over the free set within radius Δ.
+fn steihaug_cg<H: Fn(&[f64]) -> Vec<f64>>(
+    g: &[f64],
+    free: &[bool],
+    hv: H,
+    delta: f64,
+    max_cg: usize,
+    tol: f64,
+) -> Vec<f64> {
+    let m = g.len();
+    let mask = |v: &mut Vec<f64>| {
+        for i in 0..m {
+            if !free[i] {
+                v[i] = 0.0;
+            }
+        }
+    };
+    let mut s = vec![0.0; m];
+    let mut r: Vec<f64> = g.iter().map(|x| -x).collect();
+    mask(&mut r);
+    let mut d = r.clone();
+    let r0 = norm2(&r);
+    if r0 == 0.0 {
+        return s;
+    }
+    let mut rr = dot(&r, &r);
+    for _ in 0..max_cg {
+        let mut hd = hv(&d);
+        mask(&mut hd);
+        let dhd = dot(&d, &hd);
+        if dhd <= 1e-300 {
+            // Negative curvature / singular: go to the boundary along d.
+            let tau = boundary_tau(&s, &d, delta);
+            for i in 0..m {
+                s[i] += tau * d[i];
+            }
+            return s;
+        }
+        let alpha = rr / dhd;
+        let mut s_next = s.clone();
+        for i in 0..m {
+            s_next[i] += alpha * d[i];
+        }
+        if norm2(&s_next) >= delta {
+            let tau = boundary_tau(&s, &d, delta);
+            for i in 0..m {
+                s[i] += tau * d[i];
+            }
+            return s;
+        }
+        s = s_next;
+        for i in 0..m {
+            r[i] -= alpha * hd[i];
+        }
+        let rr_new = dot(&r, &r);
+        if rr_new.sqrt() <= tol * r0 {
+            return s;
+        }
+        let beta = rr_new / rr;
+        for i in 0..m {
+            d[i] = r[i] + beta * d[i];
+        }
+        rr = rr_new;
+    }
+    s
+}
+
+/// Largest `τ ≥ 0` with `‖s + τ·d‖ = Δ`.
+fn boundary_tau(s: &[f64], d: &[f64], delta: f64) -> f64 {
+    let dd = dot(d, d);
+    if dd == 0.0 {
+        return 0.0;
+    }
+    let sd = dot(s, d);
+    let ss = dot(s, s);
+    let disc = (sd * sd + dd * (delta * delta - ss)).max(0.0);
+    (-sd + disc.sqrt()) / dd
+}
+
+impl Solver for Tron {
+    fn name(&self) -> &'static str {
+        "tron"
+    }
+
+    fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult {
+        let n = data.features();
+        let mut split = Split {
+            state: LossState::new(obj, data, opts.c),
+            data,
+            n,
+            l2: opts.l2_reg,
+        };
+        let _ = split.data;
+        let mut u = vec![0.0f64; 2 * n];
+        let mut f = split.value(&u);
+        let mut g = split.gradient(&u);
+        let pg0 = norm2(&projected_gradient(&g, &u)).max(1e-300);
+        let mut delta = pg0;
+        let mut monitor = RunMonitor::new();
+        let mut inner = 0usize;
+        let mut ls_steps = 0usize;
+        let mut outer = 0usize;
+
+        let w0 = split.w_of(&u);
+        if monitor.observe(0, &split.state, &w0, opts) {
+            return finish(self.name(), w0, &split.state, monitor, 0, 0, 0, Vec::new());
+        }
+
+        loop {
+            outer += 1;
+            // Free set from the projected gradient at the current point.
+            let free: Vec<bool> = (0..2 * n)
+                .map(|i| u[i] > 0.0 || g[i] < 0.0)
+                .collect();
+            let s = steihaug_cg(
+                &g,
+                &free,
+                |v| split.hess_vec(v),
+                delta,
+                (2 * n).min(100),
+                0.1,
+            );
+            inner += 1;
+
+            // Predicted reduction from the quadratic model.
+            let hs = split.hess_vec(&s);
+            let pred = -(dot(&g, &s) + 0.5 * dot(&s, &hs));
+
+            // Projected Armijo search along s.
+            let gs = dot(&g, &s);
+            let mut lambda = 1.0f64;
+            let mut accepted = false;
+            let mut u_new = vec![0.0; 2 * n];
+            let mut f_new = f;
+            for _ in 0..40 {
+                ls_steps += 1;
+                for i in 0..2 * n {
+                    u_new[i] = (u[i] + lambda * s[i]).max(0.0);
+                }
+                f_new = split.value(&u_new);
+                // Sufficient decrease w.r.t. the projected step.
+                let step_dot: f64 = (0..2 * n).map(|i| g[i] * (u_new[i] - u[i])).sum();
+                if f_new - f <= TRON_SIGMA * step_dot.min(lambda * gs).min(0.0) {
+                    accepted = true;
+                    break;
+                }
+                lambda *= TRON_BETA;
+            }
+
+            // Trust-region radius update (actual vs predicted).
+            let actual = f - f_new;
+            let rho = if pred > 0.0 { actual / pred } else { 1.0 };
+            let snorm = norm2(&s);
+            if rho < ETA1 {
+                delta = (delta.min(snorm) * 0.5).max(1e-12);
+            } else if rho > ETA2 && snorm >= 0.9 * delta {
+                delta *= 2.0;
+            }
+            let _ = ETA0;
+
+            if accepted && actual > 0.0 {
+                u = u_new.clone();
+                f = f_new;
+                // state already holds w(u_new) after value(); refresh grad.
+                g = split.gradient(&u);
+            } else {
+                // Re-sync state to the (unchanged) current point.
+                let w = split.w_of(&u);
+                split.state.reset_from(&w);
+            }
+
+            let w = split.w_of(&u);
+            if monitor.observe(outer, &split.state, &w, opts) {
+                break;
+            }
+            // Projected-gradient stop (TRON's native criterion) as a
+            // safety net alongside the shared subgradient rule.
+            let pg = norm2(&projected_gradient(&g, &u));
+            if pg <= 1e-12 * pg0 {
+                monitor.converged = true;
+                break;
+            }
+        }
+        let w = split.w_of(&u);
+        finish(
+            self.name(),
+            w,
+            &split.state,
+            monitor,
+            outer,
+            inner,
+            ls_steps,
+            Vec::new(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::solver::cdn::Cdn;
+    use crate::solver::StopRule;
+    use crate::testutil::assert_close;
+
+    fn toy(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 100,
+                features: 40,
+                nnz_per_row: 8,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn opts() -> TrainOptions {
+        TrainOptions {
+            c: 1.0,
+            stop: StopRule::SubgradRel(1e-4),
+            max_outer: 300,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_logistic() {
+        let d = toy(1);
+        let r = Tron::new().train(&d, Objective::Logistic, &opts());
+        assert!(r.converged, "TRON failed: F = {}", r.final_objective);
+    }
+
+    #[test]
+    fn matches_cdn_optimum() {
+        let d = toy(2);
+        let mut o = opts();
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 1000;
+        let rt = Tron::new().train(&d, Objective::Logistic, &o);
+        let rc = Cdn::new().train(&d, Objective::Logistic, &o);
+        assert!(rt.converged && rc.converged);
+        assert_close(rt.final_objective, rc.final_objective, 1e-3);
+    }
+
+    #[test]
+    fn svm_objective_decreases() {
+        let d = toy(3);
+        let mut o = opts();
+        o.max_outer = 60;
+        o.trace_every = 1;
+        let r = Tron::new().train(&d, Objective::L2Svm, &o);
+        assert!(r.final_objective < d.samples() as f64);
+        for pair in r.trace.windows(2) {
+            assert!(pair[1].objective <= pair[0].objective + 1e-6);
+        }
+    }
+
+    #[test]
+    fn steihaug_respects_radius() {
+        let g = vec![1.0, -2.0, 0.5, 0.0];
+        let free = vec![true, true, true, false];
+        let hv = |v: &[f64]| v.to_vec(); // identity Hessian
+        for delta in [0.1, 0.5, 10.0] {
+            let s = steihaug_cg(&g, &free, hv, delta, 50, 1e-10);
+            assert!(norm2(&s) <= delta + 1e-9);
+            assert_eq!(s[3], 0.0, "non-free coordinate moved");
+        }
+        // Unconstrained solution for identity H is -g; with big radius:
+        let s = steihaug_cg(&g, &free, hv, 10.0, 50, 1e-10);
+        assert_close(s[0], -1.0, 1e-6);
+        assert_close(s[1], 2.0, 1e-6);
+    }
+
+    #[test]
+    fn boundary_tau_exact() {
+        let s = vec![0.0, 0.0];
+        let d = vec![3.0, 4.0];
+        let tau = boundary_tau(&s, &d, 10.0);
+        assert_close(tau, 2.0, 1e-12);
+    }
+
+    #[test]
+    fn projected_gradient_zero_at_kkt() {
+        // u_i = 0 with g_i ≥ 0 and u_i > 0 with g_i = 0 ⇒ pg = 0.
+        let g = vec![0.5, 0.0];
+        let u = vec![0.0, 1.0];
+        assert_eq!(norm2(&projected_gradient(&g, &u)), 0.0);
+    }
+}

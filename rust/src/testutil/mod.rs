@@ -1,0 +1,29 @@
+//! Test-support code: a small property-based testing harness (stand-in for
+//! `proptest`, which is unavailable offline) plus shared numeric assertions.
+
+pub mod prop;
+
+/// Assert two floats are close in absolute or relative terms.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        diff <= tol * scale,
+        "assert_close failed: {a} vs {b} (diff {diff:.3e}, tol {tol:.1e})"
+    );
+}
+
+/// Assert every pair in two slices is close.
+#[track_caller]
+pub fn assert_all_close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let diff = (x - y).abs();
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            diff <= tol * scale,
+            "assert_all_close failed at [{i}]: {x} vs {y} (diff {diff:.3e}, tol {tol:.1e})"
+        );
+    }
+}

@@ -1,0 +1,265 @@
+//! Declarative command-line flag parsing (no `clap` available offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated flags,
+//! positional arguments, and auto-generated `--help` text. Used by the main
+//! `pcdn` binary and all examples/benches.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One declared flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<String>,
+}
+
+/// Parse error.
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Declarative argument parser builder.
+pub struct Cli {
+    program: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli {
+            program,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    /// Declare a flag that takes a value, with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.program, self.about);
+        for f in &self.flags {
+            let arg = if f.takes_value { "<v>" } else { "" };
+            let dft = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", format!("{} {arg}", f.name), f.help, dft));
+        }
+        s.push_str("  --help               print this message\n");
+        s
+    }
+
+    /// Parse from an explicit token list (testable) — `std::env::args` minus argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, CliError> {
+        let mut values: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                values.insert(f.name.to_string(), vec![d.clone()]);
+            }
+        }
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        let mut explicit: BTreeMap<String, bool> = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{name}\n\n{}", self.usage())))?;
+                let value = if spec.takes_value {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("--{name} requires a value")))?,
+                    }
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} does not take a value")));
+                    }
+                    "true".to_string()
+                };
+                let fresh = !explicit.get(&name).copied().unwrap_or(false);
+                let slot = values.entry(name.clone()).or_default();
+                if fresh {
+                    slot.clear(); // replace the default on first explicit use
+                }
+                slot.push(value);
+                explicit.insert(name, true);
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Args { values, positional })
+    }
+
+    /// Parse the process arguments; on `--help` or error print and exit.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected a non-negative integer")))
+    }
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.req(name)?
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected a number")))
+    }
+    pub fn str(&self, name: &str) -> Result<&str, CliError> {
+        self.req(name)
+    }
+    fn req(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name)
+            .ok_or_else(|| CliError(format!("missing required flag --{name}")))
+    }
+    /// Parse a comma-separated list of usizes, e.g. `--p-grid 1,8,64`.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        self.req(name)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| CliError(format!("--{name}: bad integer '{s}'")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("alpha", Some("1.5"), "alpha value")
+            .opt("name", None, "a name")
+            .switch("verbose", "verbosity")
+            .opt("p", Some("4"), "bundle size")
+    }
+
+    fn parse(tokens: &[&str]) -> Result<Args, CliError> {
+        cli().parse_from(tokens.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.f64("alpha").unwrap(), 1.5);
+        assert_eq!(a.usize("p").unwrap(), 4);
+        assert!(!a.flag("verbose"));
+        assert!(a.get("name").is_none());
+    }
+
+    #[test]
+    fn explicit_values_override() {
+        let a = parse(&["--alpha", "2.0", "--verbose", "--name=x", "pos1"]).unwrap();
+        assert_eq!(a.f64("alpha").unwrap(), 2.0);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("name"), Some("x"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_repeats() {
+        let a = parse(&["--p=8", "--p=16"]).unwrap();
+        assert_eq!(a.usize("p").unwrap(), 16); // last wins
+        assert_eq!(a.get_all("p"), vec!["8", "16"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&["--bogus"]).is_err());
+        assert!(parse(&["--name"]).is_err()); // missing value
+        assert!(parse(&["--verbose=1"]).is_err());
+        let a = parse(&["--alpha", "xyz"]).unwrap();
+        assert!(a.f64("alpha").is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = Cli::new("t", "x").opt("grid", Some("1,2,3"), "grid");
+        let a = c.parse_from(Vec::<String>::new()).unwrap();
+        assert_eq!(a.usize_list("grid").unwrap(), vec![1, 2, 3]);
+        let a = c
+            .parse_from(vec!["--grid".to_string(), "10, 20".to_string()])
+            .unwrap();
+        assert_eq!(a.usize_list("grid").unwrap(), vec![10, 20]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = parse(&["--help"]).unwrap_err();
+        assert!(e.0.contains("--alpha"));
+        assert!(e.0.contains("bundle size"));
+    }
+}

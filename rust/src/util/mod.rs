@@ -1,0 +1,8 @@
+//! Foundation utilities built from scratch for the offline environment:
+//! RNG, JSON, CLI parsing, timing/statistics, and logging.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,215 @@
+//! Edge-case and failure-injection tests across the solver family:
+//! degenerate datasets, extreme hyperparameters, and robustness of the
+//! public API at boundary inputs.
+
+use pcdn::data::{CscMat, Dataset};
+use pcdn::loss::Objective;
+use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, tron::Tron, Solver, StopRule, TrainOptions};
+
+fn opts() -> TrainOptions {
+    TrainOptions {
+        c: 1.0,
+        bundle_size: 4,
+        stop: StopRule::SubgradRel(1e-4),
+        max_outer: 200,
+        ..TrainOptions::default()
+    }
+}
+
+/// One sample, one feature — the smallest possible problem.
+#[test]
+fn single_sample_single_feature() {
+    let x = CscMat::from_triplets(1, 1, &[(0, 0, 1.0)]);
+    let d = Dataset::new("tiny", x, vec![1.0]);
+    for obj in [Objective::Logistic, Objective::L2Svm] {
+        let r = Pcdn::new().train(&d, obj, &opts());
+        assert!(r.final_objective.is_finite(), "{obj:?}");
+        assert!(r.w[0].is_finite());
+        // Gradient pushes w positive for the single +1 sample.
+        assert!(r.w[0] >= 0.0);
+    }
+}
+
+/// All labels identical: the optimum pushes margins one way; must converge,
+/// not oscillate.
+#[test]
+fn all_same_class() {
+    let mut rng = pcdn::util::rng::Pcg64::new(1);
+    let x = CscMat::random(50, 10, 0.4, &mut rng);
+    let d = Dataset::new("oneclass", x, vec![1.0; 50]);
+    let r = Pcdn::new().train(&d, Objective::Logistic, &opts());
+    assert!(r.final_objective.is_finite());
+    // The optimum can keep some margins negative under ℓ1 pressure, but
+    // training must not make the loss worse than the zero model.
+    let f0 = 50.0 * std::f64::consts::LN_2; // c = 1
+    assert!(r.final_objective <= f0 + 1e-9);
+}
+
+/// A feature column that is entirely zero must stay at w_j = 0 and never
+/// produce NaNs (its Hessian hits the ν floor).
+#[test]
+fn empty_feature_column() {
+    let x = CscMat::from_triplets(4, 3, &[(0, 0, 1.0), (1, 0, -1.0), (2, 2, 1.0), (3, 2, -1.0)]);
+    let d = Dataset::new("gap", x, vec![1.0, -1.0, 1.0, -1.0]);
+    for obj in [Objective::Logistic, Objective::L2Svm] {
+        let r = Pcdn::new().train(&d, obj, &opts());
+        assert_eq!(r.w[1], 0.0, "{obj:?}: empty column moved");
+        assert!(r.w.iter().all(|v| v.is_finite()));
+    }
+}
+
+/// Huge regularization c (loss dominates): solvers stay finite and make
+/// progress; tiny c (ℓ1 dominates): w = 0 is optimal and detected at
+/// iteration zero.
+#[test]
+fn extreme_regularization() {
+    let mut rng = pcdn::util::rng::Pcg64::new(2);
+    let x = CscMat::random(60, 20, 0.3, &mut rng);
+    let y: Vec<f64> = (0..60)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+    let d = Dataset::new("ext", x, y);
+    let mut big = opts();
+    big.c = 1e6;
+    big.max_outer = 30;
+    let r = Pcdn::new().train(&d, Objective::Logistic, &big);
+    assert!(r.final_objective.is_finite());
+    let mut small = opts();
+    small.c = 1e-9;
+    let r = Pcdn::new().train(&d, Objective::Logistic, &small);
+    assert_eq!(r.model_nnz(), 0, "w = 0 must be optimal at c → 0");
+    assert!(r.converged);
+    assert_eq!(r.outer_iters, 0, "optimality at w = 0 detected immediately");
+}
+
+/// Duplicate identical features: perfectly correlated columns are the
+/// worst case for bundle steps; the P-dimensional search must still
+/// converge with both copies agreeing in effect.
+#[test]
+fn duplicated_features_converge() {
+    let mut rng = pcdn::util::rng::Pcg64::new(3);
+    let base = CscMat::random(80, 10, 0.5, &mut rng);
+    // Duplicate every column.
+    let mut trip = Vec::new();
+    for j in 0..10 {
+        let (ri, v) = base.col(j);
+        for (r, x) in ri.iter().zip(v) {
+            trip.push((*r as usize, j, *x));
+            trip.push((*r as usize, j + 10, *x));
+        }
+    }
+    let x = CscMat::from_triplets(80, 20, &trip);
+    let y: Vec<f64> = (0..80)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+    let d = Dataset::new("dup", x, y);
+    let mut o = opts();
+    o.bundle_size = 20; // both copies always in the same bundle
+    o.max_outer = 500;
+    let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+    assert!(r.converged, "must converge despite perfect correlation");
+}
+
+/// Armijo with a pathological β close to 1 (slow backtracking) and close
+/// to 0 (aggressive) both converge.
+#[test]
+fn armijo_beta_extremes() {
+    let mut rng = pcdn::util::rng::Pcg64::new(4);
+    let x = CscMat::random(60, 15, 0.3, &mut rng);
+    let y: Vec<f64> = (0..60)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+    let d = Dataset::new("beta", x, y);
+    for beta in [0.9, 0.1] {
+        let mut o = opts();
+        o.armijo.beta = beta;
+        o.armijo.max_steps = 400; // β = 0.9 needs many probes for small α
+        let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+        assert!(r.converged, "β = {beta}");
+    }
+}
+
+/// TRON on an unregularized-feasible problem (separable data, moderate c):
+/// finite behavior under aggressive radius growth.
+#[test]
+fn tron_separable_data() {
+    let x = CscMat::from_triplets(
+        4,
+        2,
+        &[(0, 0, 1.0), (1, 0, -1.0), (2, 1, 1.0), (3, 1, -1.0)],
+    );
+    let d = Dataset::new("sep", x, vec![1.0, -1.0, 1.0, -1.0]);
+    let mut o = opts();
+    // At c = 1 the subgradient at w = 0 sits exactly on the ℓ1 boundary
+    // (|g_j| = 1) and w = 0 is optimal; c = 10 makes the loss dominate so
+    // the separable structure must be exploited.
+    o.c = 10.0;
+    o.max_outer = 100;
+    let r = Tron::new().train(&d, Objective::Logistic, &o);
+    assert!(r.final_objective.is_finite());
+    assert!(d.accuracy(&r.w) == 1.0);
+}
+
+/// Solvers must tolerate P > n, P = n, and P = 1 uniformly.
+#[test]
+fn bundle_size_boundaries() {
+    let mut rng = pcdn::util::rng::Pcg64::new(5);
+    let x = CscMat::random(40, 7, 0.5, &mut rng);
+    let y: Vec<f64> = (0..40)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+    let d = Dataset::new("pb", x, y);
+    let mut finals = Vec::new();
+    for p in [1usize, 7, 1000] {
+        let mut o = opts();
+        o.bundle_size = p;
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 2000;
+        let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+        assert!(r.converged, "P = {p}");
+        finals.push(r.final_objective);
+    }
+    for f in &finals[1..] {
+        assert!((f - finals[0]).abs() / finals[0] < 1e-4);
+    }
+}
+
+/// CDN with shrinking under RelFuncDiff stopping (not SubgradRel) must not
+/// deadlock on the restore logic.
+#[test]
+fn shrinking_with_relfuncdiff_stop() {
+    let mut rng = pcdn::util::rng::Pcg64::new(6);
+    let x = CscMat::random(80, 30, 0.25, &mut rng);
+    let y: Vec<f64> = (0..80)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+        .collect();
+    let d = Dataset::new("shr", x, y);
+    let fstar = Cdn::new()
+        .train(&d, Objective::Logistic, &TrainOptions {
+            stop: StopRule::SubgradRel(1e-8),
+            max_outer: 3000,
+            ..opts()
+        })
+        .final_objective;
+    let mut o = opts();
+    o.shrinking = true;
+    o.stop = StopRule::RelFuncDiff { fstar, eps: 1e-4 };
+    o.max_outer = 3000;
+    let r = Cdn::new().train(&d, Objective::Logistic, &o);
+    assert!(r.converged, "shrinking + RelFuncDiff deadlocked");
+}
+
+/// NaN/Inf injection: a dataset with a huge-magnitude value must not
+/// produce NaNs in the solver (stable softplus/sigmoid path).
+#[test]
+fn extreme_feature_values_stay_finite() {
+    let x = CscMat::from_triplets(
+        3,
+        2,
+        &[(0, 0, 1e12), (1, 0, -1e12), (2, 1, 1e-12)],
+    );
+    let d = Dataset::new("huge", x, vec![1.0, -1.0, 1.0]);
+    let r = Pcdn::new().train(&d, Objective::Logistic, &opts());
+    assert!(r.final_objective.is_finite());
+    assert!(r.w.iter().all(|v| v.is_finite()));
+}

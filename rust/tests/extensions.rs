@@ -1,0 +1,215 @@
+//! Tests for the paper's §6 extensions: Lasso, elastic net (`l2_reg`), and
+//! the distributed parameter-mixing driver.
+
+use pcdn::data::{CscMat, Dataset};
+use pcdn::loss::Objective;
+use pcdn::solver::{
+    cdn::Cdn, pcdn::Pcdn, scdn::Scdn, tron::Tron, Solver, StopRule, TrainOptions,
+};
+use pcdn::util::rng::Pcg64;
+
+/// Regression problem with an orthogonal design: the Lasso optimum is the
+/// soft-thresholded least-squares solution in closed form.
+fn orthogonal_regression() -> (Dataset, Vec<f64>) {
+    // X = I_8 scaled by column, y arbitrary.
+    let n = 8;
+    let mut trip = Vec::new();
+    for j in 0..n {
+        trip.push((j, j, 1.0));
+    }
+    let x = CscMat::from_triplets(n, n, &trip);
+    let y = vec![2.0, -1.5, 0.3, 0.0, -0.1, 4.0, -0.4, 0.05];
+    (Dataset::new_regression("ortho", x, y.clone()), y)
+}
+
+fn dense_regression(seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    let s = 200;
+    let n = 40;
+    let x = CscMat::random(s, n, 0.3, &mut rng);
+    let mut w_true = vec![0.0; n];
+    for j in rng.sample_indices(n, 6) {
+        w_true[j] = rng.normal() * 2.0;
+    }
+    let z = x.matvec(&w_true);
+    let y: Vec<f64> = z.iter().map(|zi| zi + 0.05 * rng.normal()).collect();
+    Dataset::new_regression("reg", x, y)
+}
+
+fn tight() -> TrainOptions {
+    TrainOptions {
+        c: 1.0,
+        bundle_size: 8,
+        stop: StopRule::SubgradRel(1e-7),
+        max_outer: 3000,
+        ..TrainOptions::default()
+    }
+}
+
+/// Closed-form check: on an orthogonal design, minimizing
+/// `c·‖Xw − y‖² + ‖w‖₁` gives `w_j = soft(y_j, 1/(2c))` per coordinate.
+#[test]
+fn lasso_orthogonal_matches_soft_threshold() {
+    let (d, y) = orthogonal_regression();
+    for c in [0.5, 1.0, 4.0] {
+        let mut o = tight();
+        o.c = c;
+        let r = Pcdn::new().train(&d, Objective::Lasso, &o);
+        let thr = 1.0 / (2.0 * c);
+        for (j, &yj) in y.iter().enumerate() {
+            let expect = if yj > thr {
+                yj - thr
+            } else if yj < -thr {
+                yj + thr
+            } else {
+                0.0
+            };
+            assert!(
+                (r.w[j] - expect).abs() < 1e-6,
+                "c={c}, j={j}: got {} expected {expect}",
+                r.w[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn lasso_solvers_agree() {
+    let d = dense_regression(1);
+    let o = tight();
+    let rp = Pcdn::new().train(&d, Objective::Lasso, &o);
+    let rc = Cdn::new().train(&d, Objective::Lasso, &o);
+    let rt = Tron::new().train(&d, Objective::Lasso, &o);
+    let mut os = o.clone();
+    os.bundle_size = 2;
+    let rs = Scdn::new().train(&d, Objective::Lasso, &os);
+    assert!(rp.converged && rc.converged);
+    let base = rc.final_objective;
+    for (name, f) in [
+        ("pcdn", rp.final_objective),
+        ("tron", rt.final_objective),
+        ("scdn", rs.final_objective),
+    ] {
+        assert!(
+            (f - base).abs() / base < 5e-3,
+            "{name}: {f} vs cdn {base}"
+        );
+    }
+}
+
+#[test]
+fn lasso_recovers_sparse_ground_truth() {
+    let mut rng = Pcg64::new(5);
+    let s = 300;
+    let n = 60;
+    let x = CscMat::random(s, n, 0.25, &mut rng);
+    let mut w_true = vec![0.0; n];
+    let support = rng.sample_indices(n, 5);
+    for &j in &support {
+        w_true[j] = 3.0 * rng.normal();
+    }
+    let y = x.matvec(&w_true);
+    let d = Dataset::new_regression("sparse-reg", x, y);
+    let mut o = tight();
+    o.c = 5.0; // weak l1 relative to a noiseless fit
+    let r = Pcdn::new().train(&d, Objective::Lasso, &o);
+    assert!(d.mse(&r.w) < 0.05, "mse {}", d.mse(&r.w));
+    // The recovered support contains the true one.
+    for &j in &support {
+        assert!(
+            r.w[j].abs() > 1e-2,
+            "missed true support coordinate {j}"
+        );
+    }
+}
+
+#[test]
+fn elastic_net_shrinks_norm() {
+    let d = dense_regression(2);
+    let mut o = tight();
+    o.c = 2.0;
+    let plain = Pcdn::new().train(&d, Objective::Lasso, &o);
+    let mut oe = o.clone();
+    oe.l2_reg = 5.0;
+    let enet = Pcdn::new().train(&d, Objective::Lasso, &oe);
+    let n2 = |w: &[f64]| w.iter().map(|x| x * x).sum::<f64>();
+    assert!(
+        n2(&enet.w) < n2(&plain.w),
+        "l2 term must shrink the model: {} vs {}",
+        n2(&enet.w),
+        n2(&plain.w)
+    );
+}
+
+#[test]
+fn elastic_net_solvers_agree_logistic() {
+    let d = {
+        let mut rng = Pcg64::new(3);
+        let x = CscMat::random(150, 40, 0.2, &mut rng);
+        let y: Vec<f64> = (0..150)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        Dataset::new("clf", x, y)
+    };
+    let mut o = tight();
+    o.c = 1.0;
+    o.l2_reg = 0.7;
+    let rp = Pcdn::new().train(&d, Objective::Logistic, &o);
+    let rc = Cdn::new().train(&d, Objective::Logistic, &o);
+    let rt = Tron::new().train(&d, Objective::Logistic, &o);
+    assert!(rp.converged && rc.converged, "elastic-net runs must converge");
+    let base = rc.final_objective;
+    for (name, f) in [("pcdn", rp.final_objective), ("tron", rt.final_objective)] {
+        assert!(
+            (f - base).abs() / base < 1e-3,
+            "{name}: {f} vs cdn {base}"
+        );
+    }
+}
+
+#[test]
+fn elastic_net_objective_nonincreasing() {
+    let d = dense_regression(4);
+    let mut o = tight();
+    o.c = 1.0;
+    o.l2_reg = 1.0;
+    o.trace_every = 1;
+    o.stop = StopRule::MaxOuter(40);
+    o.max_outer = 40;
+    let r = Pcdn::new().train(&d, Objective::Lasso, &o);
+    for pair in r.trace.windows(2) {
+        assert!(
+            pair[1].objective <= pair[0].objective + 1e-9,
+            "elastic-net objective increased"
+        );
+    }
+}
+
+#[test]
+fn lasso_line_search_accepts_quickly_on_orthogonal_design() {
+    // Quadratic loss + orthogonal columns ⇒ the unit Newton step is exact,
+    // so E[q_t] ≈ 1 even at full bundles.
+    let (d, _) = orthogonal_regression();
+    let mut o = tight();
+    o.bundle_size = 8; // P = n, fully parallel
+    let r = Pcdn::new().train(&d, Objective::Lasso, &o);
+    assert!(r.converged);
+    let mean_q = r.ls_steps as f64 / r.inner_iters.max(1) as f64;
+    assert!(mean_q <= 1.5, "mean q_t = {mean_q} on an orthogonal design");
+}
+
+#[test]
+fn warm_start_resumes_cleanly() {
+    let d = dense_regression(6);
+    let mut o = tight();
+    o.stop = StopRule::MaxOuter(5);
+    o.max_outer = 5;
+    let r1 = Pcdn::new().train(&d, Objective::Lasso, &o);
+    // Resume from r1 for another 5: objective must not regress and must
+    // beat a fresh 5-iteration run.
+    let mut o2 = o.clone();
+    o2.warm_start = Some(r1.w.clone());
+    let r2 = Pcdn::new().train(&d, Objective::Lasso, &o2);
+    assert!(r2.final_objective <= r1.final_objective + 1e-9);
+    assert!(r2.final_objective < r1.final_objective * 0.999 || r1.converged);
+}

@@ -1,0 +1,291 @@
+//! Cross-module integration tests: all solvers on shared problems, the
+//! config-driven coordinator, LIBSVM round trips through training, and the
+//! schedule simulator on real recorded runs.
+
+use pcdn::coordinator::config::RunConfig;
+use pcdn::data::registry;
+use pcdn::data::split::train_test_split;
+use pcdn::data::synthetic::{generate, SyntheticSpec};
+use pcdn::data::{libsvm, Dataset};
+use pcdn::loss::Objective;
+use pcdn::parallel::sim::{self, SimParams};
+use pcdn::solver::{
+    cdn::Cdn, pcdn::Pcdn, scdn::Scdn, tron::Tron, Solver, StopRule, TrainOptions,
+};
+
+fn problem(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            samples: 250,
+            features: 80,
+            nnz_per_row: 10,
+            label_noise: 0.05,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+fn tight(c: f64) -> TrainOptions {
+    TrainOptions {
+        c,
+        bundle_size: 16,
+        stop: StopRule::SubgradRel(1e-6),
+        max_outer: 3000,
+        ..TrainOptions::default()
+    }
+}
+
+/// Every solver in the family must land on the same optimum of the same
+/// convex problem — the strongest cross-implementation consistency check.
+#[test]
+fn all_solvers_agree_on_the_optimum_logistic() {
+    let d = problem(1);
+    let o = tight(1.0);
+    let solvers: Vec<(&str, Box<dyn Solver>)> = vec![
+        ("pcdn", Box::new(Pcdn::new())),
+        ("cdn", Box::new(Cdn::new())),
+        ("scdn", Box::new(Scdn::new())),
+        ("tron", Box::new(Tron::new())),
+    ];
+    let mut objs = Vec::new();
+    for (name, s) in &solvers {
+        let mut opts = o.clone();
+        if *name == "scdn" {
+            opts.bundle_size = 2; // stay under the safe parallelism bound
+        }
+        let r = s.train(&d, Objective::Logistic, &opts);
+        assert!(r.converged, "{name} did not converge");
+        objs.push((*name, r.final_objective));
+    }
+    let base = objs[0].1;
+    for (name, f) in &objs {
+        assert!(
+            (f - base).abs() / base < 1e-3,
+            "{name} landed on {f}, pcdn on {base}"
+        );
+    }
+}
+
+#[test]
+fn all_solvers_agree_on_the_optimum_svm() {
+    let d = problem(2);
+    let o = tight(0.5);
+    let rp = Pcdn::new().train(&d, Objective::L2Svm, &o);
+    let rc = Cdn::new().train(&d, Objective::L2Svm, &o);
+    let rt = Tron::new().train(&d, Objective::L2Svm, &o);
+    assert!(rp.converged && rc.converged);
+    let base = rc.final_objective;
+    for (name, f) in [("pcdn", rp.final_objective), ("tron", rt.final_objective)] {
+        assert!(
+            (f - base).abs() / base < 5e-3,
+            "{name}: {f} vs cdn {base}"
+        );
+    }
+}
+
+/// PCDN's defining guarantee: convergence at EVERY bundle size, including
+/// P = n where SCDN-style updates would diverge on correlated data.
+#[test]
+fn pcdn_full_bundle_converges_where_scdn_diverges() {
+    let d = generate(
+        &SyntheticSpec {
+            samples: 120,
+            features: 60,
+            nnz_per_row: 55, // dense
+            corr_groups: 3,
+            corr_strength: 0.95,
+            ..Default::default()
+        },
+        3,
+    );
+    let mut o = tight(1.0);
+    o.bundle_size = 60; // P = n
+    o.stop = StopRule::SubgradRel(1e-4);
+    let rp = Pcdn::new().train(&d, Objective::Logistic, &o);
+    assert!(rp.converged, "PCDN at P=n must converge (paper §4)");
+
+    // Same parallelism for SCDN on the same data: must do strictly worse
+    // (stall, diverge, or fail to converge within the same budget).
+    let mut os = o.clone();
+    os.max_outer = rp.outer_iters * 3 + 10;
+    let rs = Scdn::new().train(&d, Objective::Logistic, &os);
+    assert!(
+        !rs.converged || rs.final_objective > rp.final_objective * 1.001,
+        "SCDN at P̄=n unexpectedly matched PCDN (F {} vs {})",
+        rs.final_objective,
+        rp.final_objective
+    );
+}
+
+/// Train on a LIBSVM file that went through write→read round trip.
+#[test]
+fn libsvm_roundtrip_preserves_training() {
+    let d = problem(4);
+    let dir = std::env::temp_dir().join("pcdn_it_libsvm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("train.svm");
+    libsvm::write_file(&path, &d).unwrap();
+    let d2 = libsvm::read_file(&path, Some(d.features())).unwrap();
+    let o = tight(1.0);
+    let r1 = Pcdn::new().train(&d, Objective::Logistic, &o);
+    let r2 = Pcdn::new().train(&d2, Objective::Logistic, &o);
+    assert!((r1.final_objective - r2.final_objective).abs() < 1e-6);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Config-file driven end-to-end coordinator run.
+#[test]
+fn coordinator_runs_from_json_config() {
+    let cfg = RunConfig::from_json(
+        r#"{"solver": "pcdn", "dataset": "a9a", "objective": "svm",
+            "bundle_size": 30, "eps": 1e-3, "max_outer": 200}"#,
+    )
+    .unwrap();
+    let r = pcdn::coordinator::run(&cfg).unwrap();
+    assert!(r.converged);
+    assert!(r.model_nnz() > 0);
+}
+
+/// Generalization sanity: a trained model beats chance on held-out data.
+#[test]
+fn trained_model_generalizes() {
+    let a = registry::by_name("real-sim").unwrap();
+    let train = a.train();
+    let test = a.test();
+    let o = TrainOptions {
+        c: a.c_logistic,
+        bundle_size: 64,
+        stop: StopRule::SubgradRel(1e-4),
+        max_outer: 300,
+        ..TrainOptions::default()
+    };
+    let r = Pcdn::new().train(&train, Objective::Logistic, &o);
+    let acc = test.accuracy(&r.w);
+    assert!(acc > 0.75, "test accuracy only {acc}");
+}
+
+/// train_test_split + training: no panic, consistent shapes, both splits
+/// usable.
+#[test]
+fn split_then_train() {
+    let d = problem(6);
+    let (tr, te) = train_test_split(&d, 0.2, 9);
+    let o = tight(1.0);
+    let r = Cdn::new().train(&tr, Objective::Logistic, &o);
+    assert!(r.converged);
+    let _ = te.accuracy(&r.w);
+}
+
+/// The schedule simulator on real recorded PCDN runs: more threads never
+/// slower, 1 thread ≈ measured serial cost of the parallel parts.
+#[test]
+fn simulator_consistent_with_recorded_run() {
+    let d = problem(7);
+    let mut o = tight(1.0);
+    o.record_iters = true;
+    o.stop = StopRule::MaxOuter(3);
+    o.max_outer = 3;
+    let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+    assert!(!r.iter_records.is_empty());
+    let mut last = f64::INFINITY;
+    for nt in [1usize, 2, 4, 8, 16, 32] {
+        let t = sim::total_time(
+            &r.iter_records,
+            &SimParams {
+                n_threads: nt,
+                barrier_secs: 0.0,
+            },
+        );
+        assert!(t <= last + 1e-12, "simulated time increased at {nt} threads");
+        last = t;
+    }
+    // The serial fraction persists: simulated time at ∞ threads is > 0.
+    let t_inf = sim::total_time(
+        &r.iter_records,
+        &SimParams {
+            n_threads: 1_000_000,
+            barrier_secs: 0.0,
+        },
+    );
+    assert!(t_inf > 0.0);
+}
+
+/// Paper Eq. 19 system-level check: fewer inner iterations at larger P on
+/// a spread-λ dataset, at matched accuracy.
+#[test]
+fn t_eps_decreases_with_bundle_size() {
+    let d = generate(
+        &SyntheticSpec {
+            samples: 300,
+            features: 120,
+            nnz_per_row: 12,
+            scale_sigma: 0.9,
+            ..Default::default()
+        },
+        8,
+    );
+    // Reference optimum.
+    let mut oref = tight(1.0);
+    oref.bundle_size = 1;
+    let fstar = Cdn::new()
+        .train(&d, Objective::Logistic, &oref)
+        .final_objective;
+    let run = |p: usize| {
+        let o = TrainOptions {
+            c: 1.0,
+            bundle_size: p,
+            stop: StopRule::RelFuncDiff { fstar, eps: 1e-3 },
+            max_outer: 3000,
+            ..TrainOptions::default()
+        };
+        Pcdn::new().train(&d, Objective::Logistic, &o).inner_iters
+    };
+    let t1 = run(1);
+    let t16 = run(16);
+    let t64 = run(64);
+    assert!(
+        t16 < t1 && t64 <= t16,
+        "T_eps not decreasing: {t1}, {t16}, {t64}"
+    );
+}
+
+/// SVM and logistic produce different models on the same data (guards
+/// against accidental shared-code regressions collapsing the two losses).
+#[test]
+fn objectives_differ() {
+    let d = problem(9);
+    let o = tight(1.0);
+    let rl = Pcdn::new().train(&d, Objective::Logistic, &o);
+    let rs = Pcdn::new().train(&d, Objective::L2Svm, &o);
+    let diff: f64 = rl
+        .w
+        .iter()
+        .zip(&rs.w)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1e-3, "logistic and svm models identical?");
+}
+
+/// Duplicated data leaves the optimum's *model* nearly unchanged when c is
+/// rescaled to keep c·s constant (regularization balance) — validates the
+/// Fig. 5 experimental setup.
+#[test]
+fn duplication_with_rescaled_c_preserves_model() {
+    let d = problem(10);
+    let d2 = d.duplicate(2);
+    let mut o1 = tight(1.0);
+    o1.stop = StopRule::SubgradRel(1e-7);
+    let mut o2 = o1.clone();
+    o2.c = 0.5; // c/2 over 2x samples ⇒ same objective up to the l1 term
+    let r1 = Pcdn::new().train(&d, Objective::Logistic, &o1);
+    let r2 = Pcdn::new().train(&d2, Objective::Logistic, &o2);
+    let rel: f64 = r1
+        .w
+        .iter()
+        .zip(&r2.w)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f64>()
+        / r1.w.iter().map(|x| x.abs()).sum::<f64>().max(1e-12);
+    assert!(rel < 1e-3, "models differ by {rel}");
+}
