@@ -1,0 +1,36 @@
+"""Test-session wiring for the python (L1/L2) layer.
+
+Two jobs:
+
+1. Put ``python/`` on ``sys.path`` so ``from compile import ...`` works
+   whether pytest is invoked from the repo root (CI does
+   ``python -m pytest python/tests -q``) or from ``python/``.
+2. Skip-if-missing guards: the kernel/model/aot tests need ``jax`` (and
+   the kernel/model ones also ``hypothesis``). On accelerator-less or
+   offline runners those modules are excluded at collection time so the
+   suite stays green; ``test_smoke.py`` always collects, keeping the run
+   non-empty.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def _have(module: str) -> bool:
+    try:
+        return importlib.util.find_spec(module) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+HAVE_JAX = _have("jax")
+HAVE_HYPOTHESIS = _have("hypothesis")
+
+collect_ignore = []
+if not HAVE_JAX:
+    collect_ignore += ["test_aot.py", "test_kernels.py", "test_model.py"]
+elif not HAVE_HYPOTHESIS:
+    collect_ignore += ["test_kernels.py", "test_model.py"]

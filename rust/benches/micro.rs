@@ -9,6 +9,7 @@
 use pcdn::data::synthetic::{generate, SyntheticSpec};
 use pcdn::data::Dataset;
 use pcdn::loss::{LossState, Objective};
+use pcdn::parallel::pool::{SendPtr, WorkerPool};
 use pcdn::solver::direction::newton_direction;
 use pcdn::solver::linesearch::DxScratch;
 use pcdn::util::rng::Pcg64;
@@ -24,6 +25,63 @@ fn bench<T, F: FnMut() -> T>(name: &str, per_iter_items: usize, f: F) {
         fmt_secs(std),
         fmt_secs(per_item)
     );
+}
+
+/// Pre-pool baseline: one `thread::scope` spawn/join team per bundle
+/// (what `solver/pcdn.rs::par_chunks` did before the persistent pool).
+fn direction_sweep_spawn(
+    state: &LossState<'_>,
+    w: &[f64],
+    perm: &[usize],
+    p: usize,
+    n_threads: usize,
+    slots: &mut [f64],
+) {
+    for bundle in perm.chunks(p) {
+        let bp = bundle.len();
+        let n_chunks = n_threads.min(bp);
+        let chunk = bp.div_ceil(n_chunks);
+        std::thread::scope(|sc| {
+            for (ci, piece) in slots[..bp].chunks_mut(chunk).enumerate() {
+                sc.spawn(move || {
+                    for (k, slot) in piece.iter_mut().enumerate() {
+                        let j = bundle[ci * chunk + k];
+                        let (g, h) = state.grad_hess_j(j);
+                        *slot = newton_direction(g, h, w[j]);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Pooled equivalent: same static chunking, but each bundle is one region
+/// on the persistent team (one barrier, no thread churn).
+fn direction_sweep_pool(
+    state: &LossState<'_>,
+    w: &[f64],
+    perm: &[usize],
+    p: usize,
+    n_threads: usize,
+    pool: &WorkerPool,
+    slots: &mut [f64],
+) {
+    for bundle in perm.chunks(p) {
+        let bp = bundle.len();
+        let n_chunks = n_threads.min(bp);
+        let chunk = bp.div_ceil(n_chunks);
+        let ptr = SendPtr::new(slots.as_mut_ptr());
+        pool.parallel_for(n_chunks, move |ci, _wid| {
+            let lo = ci * chunk;
+            let hi = bp.min(lo + chunk);
+            for (k, &j) in bundle.iter().enumerate().take(hi).skip(lo) {
+                let (g, h) = state.grad_hess_j(j);
+                // SAFETY: chunks write disjoint slot ranges; the region
+                // barrier completes before `slots` is read again.
+                unsafe { *ptr.get().add(k) = newton_direction(g, h, w[j]) };
+            }
+        });
+    }
 }
 
 fn realsim_like() -> Dataset {
@@ -127,6 +185,105 @@ fn main() {
         bench("PCDN one outer sweep (P=256)", d.features(), || {
             black_box(Pcdn::new().train(&d, Objective::Logistic, &opts).inner_iters)
         });
+    }
+
+    // --- spawn-vs-pool: parallel-region overhead ---------------------------
+    // The cost the §3.1 pooled execution model removes: a per-bundle
+    // `thread::scope` pays a full OS-thread spawn + join per region, while
+    // the persistent pool pays one condvar wake + one barrier.
+    let n_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(2, 8);
+    let pool = WorkerPool::new(n_threads);
+    {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        println!();
+        let sink = AtomicU64::new(0);
+        bench(
+            &format!("empty region via thread::scope ({n_threads} threads)"),
+            1,
+            || {
+                std::thread::scope(|sc| {
+                    for t in 0..n_threads {
+                        let sink = &sink;
+                        sc.spawn(move || {
+                            sink.fetch_add(t as u64, Ordering::Relaxed);
+                        });
+                    }
+                });
+                black_box(sink.load(Ordering::Relaxed))
+            },
+        );
+        bench(
+            &format!("empty region via WorkerPool    ({n_threads} threads)"),
+            1,
+            || {
+                pool.parallel_for(n_threads, |i, _| {
+                    sink.fetch_add(i as u64, Ordering::Relaxed);
+                });
+                black_box(sink.load(Ordering::Relaxed))
+            },
+        );
+    }
+
+    // --- spawn-vs-pool: PCDN direction pass, one outer sweep ---------------
+    // One parallel region per bundle over the whole feature set — exactly
+    // the solver's hot loop shape. The spawn variant is the pre-pool
+    // baseline this repo used to run (`par_chunks` in solver/pcdn.rs).
+    {
+        println!();
+        let state = LossState::new(Objective::Logistic, &d, 4.0);
+        let w: Vec<f64> = vec![0.0; d.features()];
+        let mut rng = Pcg64::new(11);
+        let perm = rng.permutation(d.features());
+        let mut slots = vec![0.0f64; d.features()];
+        for p in [64usize, 256, 1024] {
+            let (spawn_med, _, _) = measure(2, 9, || {
+                direction_sweep_spawn(&state, &w, &perm, p, n_threads, &mut slots);
+                black_box(slots[0])
+            });
+            let (pool_med, _, _) = measure(2, 9, || {
+                direction_sweep_pool(&state, &w, &perm, p, n_threads, &pool, &mut slots);
+                black_box(slots[0])
+            });
+            println!(
+                "direction sweep P={p:<5} spawn {:>10}  pool {:>10}  speedup {:>5.2}x",
+                fmt_secs(spawn_med),
+                fmt_secs(pool_med),
+                spawn_med / pool_med.max(1e-12)
+            );
+        }
+    }
+
+    // --- pooled vs serial PCDN: full outer-iteration throughput ------------
+    {
+        use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+        println!();
+        for p in [64usize, 256, 1024] {
+            let serial = TrainOptions {
+                c: 4.0,
+                bundle_size: p,
+                stop: StopRule::MaxOuter(1),
+                max_outer: 1,
+                ..TrainOptions::default()
+            };
+            let mut pooled = serial.clone();
+            pooled.n_threads = n_threads;
+            pooled.pool = Some(pool.clone());
+            let (ts, _, _) = measure(1, 7, || {
+                black_box(Pcdn::new().train(&d, Objective::Logistic, &serial).inner_iters)
+            });
+            let (tp, _, _) = measure(1, 7, || {
+                black_box(Pcdn::new().train(&d, Objective::Logistic, &pooled).inner_iters)
+            });
+            println!(
+                "PCDN outer sweep P={p:<5} serial {:>10}  pooled({n_threads}t) {:>10}  speedup {:>5.2}x",
+                fmt_secs(ts),
+                fmt_secs(tp),
+                ts / tp.max(1e-12)
+            );
+        }
     }
 
     // --- PJRT path latency (when artifacts are built) ----------------------

@@ -17,9 +17,15 @@
 //! * **Iterative parameter mixing** (`rounds > 1`) — average, broadcast as
 //!   a warm start, repeat; converges toward the centralized optimum as
 //!   rounds grow.
+//!
+//! Machines run as one region per round on the shared persistent
+//! [`WorkerPool`] (machine `m` = region index `m`) instead of a scoped
+//! thread spawn per round; local solves run inline on their worker so
+//! they never submit nested regions to the busy team.
 
 use crate::data::Dataset;
 use crate::loss::Objective;
+use crate::parallel::pool::WorkerPool;
 use crate::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions, TrainResult};
 use crate::util::rng::Pcg64;
 
@@ -112,30 +118,40 @@ pub fn train_distributed(
     let n = data.features();
     let mut w_global = vec![0.0f64; n];
     let mut round_objectives = Vec::with_capacity(opts.rounds);
+    // The machine team: the caller's pool if one is threaded through the
+    // local options, else the process-wide shared team.
+    let team = opts
+        .local
+        .pool
+        .clone()
+        .unwrap_or_else(|| WorkerPool::global().clone());
 
     for round in 0..opts.rounds.max(1) {
-        // Each "machine" trains locally from the broadcast model.
-        let results: Vec<TrainResult> = std::thread::scope(|scope| {
-            let handles: Vec<_> = shards
-                .iter()
-                .enumerate()
-                .map(|(m, shard_data)| {
-                    let mut local = opts.local.clone();
-                    // Rebalance regularization: the shard sees 1/M of the
-                    // loss terms but the full ‖w‖₁, so scale `c` up by the
-                    // inverse shard fraction to keep the loss-vs-ℓ1 balance
-                    // of the *global* objective (otherwise shard optima are
-                    // systematically over-sparsified and the average is
-                    // biased toward zero).
-                    local.c =
-                        opts.local.c * data.samples() as f64 / shard_data.samples() as f64;
-                    local.seed = opts.seed ^ ((round as u64) << 32) ^ m as u64;
-                    local.warm_start = Some(w_global.clone());
-                    scope.spawn(move || Pcdn::new().train(shard_data, obj, &local))
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
+        // Each "machine" trains locally from the broadcast model — one
+        // region over the shards on the persistent team.
+        let w0 = &w_global;
+        let shards_ref = &shards;
+        let results: Vec<TrainResult> =
+            team.parallel_map(shards.len(), move |m, _wid| {
+                let shard_data = &shards_ref[m];
+                let mut local = opts.local.clone();
+                // Rebalance regularization: the shard sees 1/M of the
+                // loss terms but the full ‖w‖₁, so scale `c` up by the
+                // inverse shard fraction to keep the loss-vs-ℓ1 balance
+                // of the *global* objective (otherwise shard optima are
+                // systematically over-sparsified and the average is
+                // biased toward zero).
+                local.c =
+                    opts.local.c * data.samples() as f64 / shard_data.samples() as f64;
+                local.seed = opts.seed ^ ((round as u64) << 32) ^ m as u64;
+                local.warm_start = Some(w0.clone());
+                // The team is busy running the machines; local solves stay
+                // serial on their worker rather than submitting nested
+                // regions to it.
+                local.pool = None;
+                local.n_threads = 1;
+                Pcdn::new().train(shard_data, obj, &local)
+            });
         let models: Vec<(usize, Vec<f64>)> = shard_sizes
             .iter()
             .zip(results)

@@ -2,9 +2,14 @@
 //!
 //! [`pool`] is a real static-scheduling worker pool mirroring the paper's
 //! OpenMP `parallel for` with static scheduling and one implicit barrier per
-//! region. [`sim`] is the deterministic parallel-schedule *cost model*
-//! (paper Eq. 13/20) used to report multicore numbers on this single-core
-//! testbed — see DESIGN.md §3.
+//! region; [`pool::WorkerPool`] is the cheaply clonable handle the solvers
+//! thread through [`crate::solver::TrainOptions`] so a whole training run
+//! (direction passes, `dᵀx` accumulation, Armijo-probe reductions) shares
+//! one persistent team. [`sim`] is the deterministic parallel-schedule
+//! *cost model* (paper Eq. 13/20) used to report multicore numbers on this
+//! single-core testbed — see DESIGN.md §3.
 
 pub mod pool;
 pub mod sim;
+
+pub use pool::{ThreadPool, WorkerPool};

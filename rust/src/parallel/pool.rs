@@ -5,23 +5,35 @@
 //! needs exactly *one implicit barrier synchronization per iteration*
 //! (§3.1). This pool reproduces that model:
 //!
-//! * `N` long-lived workers, woken per parallel region;
+//! * `N` long-lived workers, woken per parallel region — solvers reuse one
+//!   team for a whole training run instead of spawning threads per bundle;
 //! * static chunking: worker `t` handles indices `i` with `i % N == t`
 //!   (interleaved, matching OpenMP `schedule(static, 1)`) — deterministic
 //!   assignment regardless of timing;
 //! * `parallel_for` returns only after every worker finishes: the single
-//!   barrier.
+//!   barrier;
+//! * region bodies may borrow the caller's stack (scoped execution): the
+//!   submitting thread blocks until the region completes, so no `'static`
+//!   bound is needed on the closure.
 //!
 //! Work closures receive `(index, worker_id)` so per-worker scratch arrays
 //! can be indexed without locks.
+//!
+//! Concurrency contract: regions submitted from multiple threads are
+//! serialized on an internal submitter lock; a `parallel_for` issued from
+//! *inside* a region of the same pool (nested parallelism) runs inline on
+//! the calling worker instead of deadlocking on the busy team.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
-/// Type-erased region body: fn(index, worker_id).
-type RegionFn = Arc<dyn Fn(usize, usize) + Send + Sync>;
+/// Region body handed to the workers. The `'static` lifetime is a lie told
+/// under strict supervision: `parallel_for` blocks until every worker is
+/// done with the reference, so it never outlives the real closure.
+#[derive(Clone, Copy)]
+struct RegionBody(&'static (dyn Fn(usize, usize) + Sync));
 
 struct Shared {
     /// Monotonic region counter; bumping it (while holding the lock) wakes
@@ -36,14 +48,47 @@ struct Shared {
 
 struct RegionState {
     epoch: u64,
-    body: Option<RegionFn>,
+    body: Option<RegionBody>,
     len: usize,
     remaining_workers: usize,
+}
+
+thread_local! {
+    /// Pools whose worker loop is running on this thread (for nested-region
+    /// detection). Registered once at worker startup, never popped.
+    static MEMBER_OF: std::cell::RefCell<Vec<usize>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// A raw-pointer wrapper that may cross the region boundary into workers.
+///
+/// # Safety contract for users
+///
+/// The caller must guarantee that concurrent region iterations touch
+/// disjoint elements behind the pointer (e.g. slot `i` written only by
+/// index `i`, or arena `w` only by worker/chunk `w`), and that the pointee
+/// outlives the region — which `parallel_for`'s blocking barrier provides.
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        SendPtr(p)
+    }
+    #[inline]
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
 }
 
 /// A fixed-size worker pool with static scheduling.
 pub struct ThreadPool {
     shared: Arc<Shared>,
+    /// Serializes region submission from multiple threads: one region runs
+    /// at a time, start to barrier.
+    submit: Mutex<()>,
     workers: Vec<JoinHandle<()>>,
     n_threads: usize,
 }
@@ -78,6 +123,7 @@ impl ThreadPool {
             .collect();
         ThreadPool {
             shared,
+            submit: Mutex::new(()),
             workers,
             n_threads,
         }
@@ -88,30 +134,72 @@ impl ThreadPool {
         self.n_threads
     }
 
+    fn pool_id(&self) -> usize {
+        Arc::as_ptr(&self.shared) as usize
+    }
+
+    /// True when the current thread is one of this pool's workers.
+    fn on_worker_thread(&self) -> bool {
+        let id = self.pool_id();
+        MEMBER_OF.with(|m| m.borrow().contains(&id))
+    }
+
     /// Run `body(i, worker_id)` for every `i in 0..len` across the pool and
     /// wait for completion (the one barrier). Panics in workers propagate.
+    ///
+    /// The body may borrow the caller's stack: the call blocks until every
+    /// worker has finished, so borrows never escape. Nested calls from a
+    /// worker of this same pool execute inline (worker id 0) rather than
+    /// deadlocking.
     pub fn parallel_for<F>(&self, len: usize, body: F)
     where
-        F: Fn(usize, usize) + Send + Sync + 'static,
+        F: Fn(usize, usize) + Sync,
     {
         if len == 0 {
             return;
         }
-        let body: RegionFn = Arc::new(body);
-        {
-            let mut st = self.shared.region.lock().unwrap();
-            st.epoch += 1;
-            st.body = Some(body);
-            st.len = len;
-            st.remaining_workers = self.n_threads;
-            self.shared.cv.notify_all();
-            // Barrier: wait until every worker has finished this region.
-            while st.remaining_workers > 0 {
-                st = self.shared.done_cv.wait(st).unwrap();
+        if self.on_worker_thread() {
+            // Nested region: the team is already busy running us.
+            for i in 0..len {
+                body(i, 0);
             }
-            st.body = None;
+            return;
         }
-        if self.shared.panicked.swap(false, Ordering::SeqCst) {
+        let body_ref: &(dyn Fn(usize, usize) + Sync) = &body;
+        // SAFETY: the region is strictly scoped — this call does not return
+        // until every worker has decremented `remaining_workers`, after
+        // which no worker touches the reference again (epoch gating), so
+        // extending the lifetime cannot dangle.
+        let body_static: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(body_ref) };
+        let worker_panicked = {
+            // Poison-tolerant: a submitter unwinding cannot happen while
+            // holding this lock (the propagation panic below fires after
+            // the guard drops), but stay robust anyway.
+            let _submit = self
+                .submit
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            {
+                let mut st = self.shared.region.lock().unwrap();
+                st.epoch += 1;
+                st.body = Some(RegionBody(body_static));
+                st.len = len;
+                st.remaining_workers = self.n_threads;
+                self.shared.cv.notify_all();
+                // Barrier: wait until every worker has finished this region.
+                while st.remaining_workers > 0 {
+                    st = self.shared.done_cv.wait(st).unwrap();
+                }
+                st.body = None;
+            }
+            // Read the flag while still holding the submitter lock so a
+            // concurrent caller cannot steal this region's panic; the
+            // propagation panic itself fires only after both guards drop,
+            // so a panicking region never poisons the pool.
+            self.shared.panicked.swap(false, Ordering::SeqCst)
+        };
+        if worker_panicked {
             panic!("worker panicked inside parallel_for");
         }
     }
@@ -120,22 +208,44 @@ impl ThreadPool {
     /// `parallel_for`; output order matches index order).
     pub fn parallel_map<T, F>(&self, len: usize, f: F) -> Vec<T>
     where
-        T: Send + Default + Clone + 'static,
-        F: Fn(usize, usize) -> T + Send + Sync + 'static,
+        T: Send,
+        F: Fn(usize, usize) -> T + Sync,
     {
-        let out: Arc<Vec<Mutex<T>>> =
-            Arc::new((0..len).map(|_| Mutex::new(T::default())).collect());
-        let out2 = Arc::clone(&out);
+        let mut out: Vec<Option<T>> = (0..len).map(|_| None).collect();
+        let ptr = SendPtr::new(out.as_mut_ptr());
         self.parallel_for(len, move |i, wid| {
-            *out2[i].lock().unwrap() = f(i, wid);
+            // SAFETY: each index is visited exactly once, so writes are
+            // disjoint; the barrier keeps `out` alive past all writes.
+            unsafe { *ptr.get().add(i) = Some(f(i, wid)) };
         });
-        Arc::try_unwrap(out)
-            .map(|v| v.into_iter().map(|m| m.into_inner().unwrap()).collect())
-            .unwrap_or_else(|arc| arc.iter().map(|m| m.lock().unwrap().clone()).collect())
+        out.into_iter()
+            .map(|v| v.expect("parallel_map slot unfilled"))
+            .collect()
+    }
+
+    /// Fold `map(i, worker_id)` over `0..len` with a *deterministic*
+    /// combination order: partial results are combined in index order,
+    /// independent of pool size or scheduling. This is the reduction
+    /// primitive behind the line-search probe (callers pass one index per
+    /// chunk so a probe costs a single barrier).
+    pub fn parallel_for_reduce<T, M, R>(&self, len: usize, identity: T, map: M, reduce: R) -> T
+    where
+        T: Send,
+        M: Fn(usize, usize) -> T + Sync,
+        R: Fn(T, T) -> T,
+    {
+        if len == 0 {
+            return identity;
+        }
+        self.parallel_map(len, map)
+            .into_iter()
+            .fold(identity, reduce)
     }
 }
 
 fn worker_loop(sh: Arc<Shared>, wid: usize, n_threads: usize) {
+    let pool_id = Arc::as_ptr(&sh) as usize;
+    MEMBER_OF.with(|m| m.borrow_mut().push(pool_id));
     let mut seen_epoch = 0u64;
     loop {
         // Wait for a new region (or shutdown).
@@ -150,7 +260,7 @@ fn worker_loop(sh: Arc<Shared>, wid: usize, n_threads: usize) {
                 }
                 st = sh.cv.wait(st).unwrap();
             }
-            (st.body.clone().unwrap(), st.len, st.epoch)
+            (st.body.unwrap(), st.len, st.epoch)
         };
         seen_epoch = epoch;
         sh.active.fetch_add(1, Ordering::SeqCst);
@@ -158,7 +268,7 @@ fn worker_loop(sh: Arc<Shared>, wid: usize, n_threads: usize) {
         let result = catch_unwind(AssertUnwindSafe(|| {
             let mut i = wid;
             while i < len {
-                body(i, wid);
+                (body.0)(i, wid);
                 i += n_threads;
             }
         }));
@@ -184,6 +294,82 @@ impl Drop for ThreadPool {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Cheaply clonable handle to a shared [`ThreadPool`] — the "persistent
+/// worker team" that `TrainOptions` threads through the solvers so every
+/// direction pass, `dᵀx` accumulation, and Armijo-probe reduction of a
+/// training run lands on the same long-lived threads.
+#[derive(Clone)]
+pub struct WorkerPool {
+    inner: Arc<ThreadPool>,
+}
+
+impl WorkerPool {
+    /// Spawn a dedicated team with `n_threads` workers.
+    pub fn new(n_threads: usize) -> Self {
+        WorkerPool {
+            inner: Arc::new(ThreadPool::new(n_threads)),
+        }
+    }
+
+    /// The process-wide shared team, sized by `PCDN_POOL_THREADS` or the
+    /// machine's available parallelism. Spawned on first use and reused by
+    /// every solver for the life of the process.
+    pub fn global() -> &'static WorkerPool {
+        static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let n = std::env::var("PCDN_POOL_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                });
+            WorkerPool::new(n)
+        })
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.inner.n_threads()
+    }
+
+    /// See [`ThreadPool::parallel_for`].
+    pub fn parallel_for<F>(&self, len: usize, body: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        self.inner.parallel_for(len, body)
+    }
+
+    /// See [`ThreadPool::parallel_map`].
+    pub fn parallel_map<T, F>(&self, len: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> T + Sync,
+    {
+        self.inner.parallel_map(len, f)
+    }
+
+    /// See [`ThreadPool::parallel_for_reduce`].
+    pub fn parallel_for_reduce<T, M, R>(&self, len: usize, identity: T, map: M, reduce: R) -> T
+    where
+        T: Send,
+        M: Fn(usize, usize) -> T + Sync,
+        R: Fn(T, T) -> T,
+    {
+        self.inner.parallel_for_reduce(len, identity, map, reduce)
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("n_threads", &self.n_threads())
+            .finish()
     }
 }
 
@@ -265,10 +451,9 @@ mod tests {
     #[test]
     fn parallel_for_covers_every_index_once() {
         let pool = ThreadPool::new(4);
-        let hits: Arc<Vec<AtomicU64>> = Arc::new((0..1000).map(|_| AtomicU64::new(0)).collect());
-        let h = Arc::clone(&hits);
-        pool.parallel_for(1000, move |i, _| {
-            h[i].fetch_add(1, Ordering::SeqCst);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(1000, |i, _| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
         });
         assert!(hits.iter().all(|c| c.load(Ordering::SeqCst) == 1));
     }
@@ -276,24 +461,35 @@ mod tests {
     #[test]
     fn static_schedule_is_deterministic() {
         let pool = ThreadPool::new(3);
-        let owner: Arc<Vec<AtomicU64>> = Arc::new((0..30).map(|_| AtomicU64::new(99)).collect());
-        let o = Arc::clone(&owner);
-        pool.parallel_for(30, move |i, wid| {
-            o[i].store(wid as u64, Ordering::SeqCst);
+        let owner: Vec<AtomicU64> = (0..30).map(|_| AtomicU64::new(99)).collect();
+        pool.parallel_for(30, |i, wid| {
+            owner[i].store(wid as u64, Ordering::SeqCst);
         });
-        for i in 0..30 {
-            assert_eq!(owner[i].load(Ordering::SeqCst), (i % 3) as u64);
+        for (i, o) in owner.iter().enumerate() {
+            assert_eq!(o.load(Ordering::SeqCst), (i % 3) as u64);
         }
+    }
+
+    #[test]
+    fn borrows_caller_stack() {
+        // The scoped API: no Arc, no 'static — plain borrows.
+        let pool = ThreadPool::new(2);
+        let input = vec![1.0f64, 2.0, 3.0, 4.0];
+        let out: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(4, |i, _| {
+            out[i].store((input[i] * 10.0) as u64, Ordering::SeqCst);
+        });
+        let vals: Vec<u64> = out.iter().map(|a| a.load(Ordering::SeqCst)).collect();
+        assert_eq!(vals, vec![10, 20, 30, 40]);
     }
 
     #[test]
     fn reusable_across_regions() {
         let pool = ThreadPool::new(2);
-        let total = Arc::new(AtomicU64::new(0));
+        let total = AtomicU64::new(0);
         for _ in 0..50 {
-            let t = Arc::clone(&total);
-            pool.parallel_for(10, move |_, _| {
-                t.fetch_add(1, Ordering::SeqCst);
+            pool.parallel_for(10, |_, _| {
+                total.fetch_add(1, Ordering::SeqCst);
             });
         }
         assert_eq!(total.load(Ordering::SeqCst), 500);
@@ -307,9 +503,45 @@ mod tests {
     }
 
     #[test]
+    fn parallel_for_reduce_deterministic_and_pool_size_independent() {
+        // Partials combine in index order, so the result is bitwise equal
+        // across pool sizes — the property the solver relies on for
+        // machine-independent reproducibility.
+        let vals: Vec<f64> = (0..1000).map(|i| (i as f64).sin()).collect();
+        let chunk = 97usize;
+        let n_chunks = vals.len().div_ceil(chunk);
+        let run = |pool: &ThreadPool| {
+            pool.parallel_for_reduce(
+                n_chunks,
+                0.0f64,
+                |ci, _| {
+                    let lo = ci * chunk;
+                    let hi = vals.len().min(lo + chunk);
+                    vals[lo..hi].iter().sum::<f64>()
+                },
+                |a, b| a + b,
+            )
+        };
+        let serial_fold: f64 = (0..n_chunks)
+            .map(|ci| {
+                let lo = ci * chunk;
+                let hi = vals.len().min(lo + chunk);
+                vals[lo..hi].iter().sum::<f64>()
+            })
+            .fold(0.0, |a, b| a + b);
+        for nt in [1usize, 2, 3, 5] {
+            let pool = ThreadPool::new(nt);
+            let r = run(&pool);
+            assert_eq!(r.to_bits(), serial_fold.to_bits(), "nt = {nt}");
+        }
+    }
+
+    #[test]
     fn empty_region_is_noop() {
         let pool = ThreadPool::new(2);
         pool.parallel_for(0, |_, _| panic!("must not run"));
+        let s = pool.parallel_for_reduce(0, 7.0, |_, _| panic!("must not run"), |a: f64, b| a + b);
+        assert_eq!(s, 7.0);
     }
 
     #[test]
@@ -335,21 +567,63 @@ mod tests {
         }));
         assert!(r.is_err());
         // Pool still usable afterwards.
-        let total = Arc::new(AtomicU64::new(0));
-        let t = Arc::clone(&total);
-        pool.parallel_for(8, move |_, _| {
-            t.fetch_add(1, Ordering::SeqCst);
+        let total = AtomicU64::new(0);
+        pool.parallel_for(8, |_, _| {
+            total.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(total.load(Ordering::SeqCst), 8);
     }
 
     #[test]
+    fn nested_region_runs_inline_without_deadlock() {
+        let pool = WorkerPool::new(2);
+        let inner_hits = AtomicU64::new(0);
+        let pool_ref = &pool;
+        pool.parallel_for(2, |_, _| {
+            // Submitting from a worker of the same pool must not deadlock.
+            pool_ref.parallel_for(5, |_, _| {
+                inner_hits.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(inner_hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = Arc::clone(&pool);
+            let t = Arc::clone(&total);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    p.parallel_for(8, |_, _| {
+                        t.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 25 * 8);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = WorkerPool::global();
+        let b = WorkerPool::global();
+        assert!(Arc::ptr_eq(&a.inner, &b.inner));
+        assert!(a.n_threads() >= 1);
+    }
+
+    #[test]
     fn atomic_f64_fetch_add_concurrent() {
         let pool = ThreadPool::new(4);
-        let acc = Arc::new(AtomicF64::new(0.0));
-        let a = Arc::clone(&acc);
-        pool.parallel_for(10_000, move |_, _| {
-            a.fetch_add(0.5);
+        let acc = AtomicF64::new(0.0);
+        pool.parallel_for(10_000, |_, _| {
+            acc.fetch_add(0.5);
         });
         assert!((acc.load() - 5000.0).abs() < 1e-9);
     }

@@ -11,6 +11,13 @@ pub mod bundle_exec;
 pub mod dense_trainer;
 pub mod manifest;
 
+/// PJRT bindings. In the offline build this resolves to the in-tree stub
+/// (`xla.rs`), which compiles everywhere and fails cleanly at runtime; link
+/// the real `xla` crate by removing this declaration and adding the
+/// dependency — the API surface is identical. Public because
+/// [`PjrtRuntime`]'s fields expose these types.
+pub mod xla;
+
 use anyhow::{Context, Result};
 use manifest::{ArtifactEntry, Manifest};
 use std::cell::RefCell;

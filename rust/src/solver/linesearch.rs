@@ -14,8 +14,16 @@
 //! (`d` is zero outside the bundle).
 
 use crate::loss::LossState;
+use crate::parallel::pool::WorkerPool;
 
 use super::ArmijoParams;
+
+/// Below this many touched samples a pooled probe loses to its own barrier
+/// (~a few µs) and the probe runs serially even when a pool is available.
+/// At or above it, each probe is one `parallel_for_reduce` region with
+/// chunk partials combined in index order (deterministic for a given chunk
+/// count, independent of pool size).
+pub const PARALLEL_PROBE_MIN_TOUCHED: usize = 8192;
 
 /// Outcome of one P-dimensional line search.
 #[derive(Clone, Copy, Debug)]
@@ -91,15 +99,51 @@ pub fn p_dim_armijo_l2(
     params: &ArmijoParams,
     l2: f64,
 ) -> LineSearchOutcome {
+    p_dim_armijo_exec(state, touched, dx, w_b, d_b, delta, params, l2, None, 1)
+}
+
+/// Pool-aware variant of [`p_dim_armijo_l2`]: when a worker team is given
+/// and the touched set is large enough, every probe's loss reduction runs
+/// as one parallel region over `degree` contiguous chunks of the touched
+/// samples, with partials summed in chunk order (footnote 3: the
+/// reduction-parallelizable slice of the line search).
+#[allow(clippy::too_many_arguments)]
+pub fn p_dim_armijo_exec(
+    state: &LossState<'_>,
+    touched: &[u32],
+    dx: &[f64],
+    w_b: &[f64],
+    d_b: &[f64],
+    delta: f64,
+    params: &ArmijoParams,
+    l2: f64,
+    pool: Option<&WorkerPool>,
+    degree: usize,
+) -> LineSearchOutcome {
     debug_assert!(
         delta <= 1e-9,
         "Armijo called with non-descent Δ = {delta}"
     );
+    let pooled = pool.filter(|_| degree > 1 && touched.len() >= PARALLEL_PROBE_MIN_TOUCHED);
+    let n_chunks = degree.max(1).min(touched.len().max(1));
+    let chunk = touched.len().div_ceil(n_chunks.max(1)).max(1);
     let mut alpha = 1.0;
     for q in 0..params.max_steps {
-        let obj_delta = state.delta_loss(touched, dx, alpha)
-            + l1_delta(w_b, d_b, alpha)
-            + l2_delta(w_b, d_b, alpha, l2);
+        let loss_delta = match pooled {
+            Some(pl) => pl.parallel_for_reduce(
+                n_chunks,
+                0.0f64,
+                |ci, _wid| {
+                    let lo = ci * chunk;
+                    let hi = touched.len().min(lo + chunk);
+                    state.delta_loss(&touched[lo..hi], &dx[lo..hi], alpha)
+                },
+                |a, b| a + b,
+            ),
+            None => state.delta_loss(touched, dx, alpha),
+        };
+        let obj_delta =
+            loss_delta + l1_delta(w_b, d_b, alpha) + l2_delta(w_b, d_b, alpha, l2);
         if obj_delta <= params.sigma * alpha * delta {
             return LineSearchOutcome {
                 alpha,
@@ -176,6 +220,40 @@ impl DxScratch {
             .map(|&i| self.dx[i as usize])
             .collect();
         (&self.touched, vals)
+    }
+
+    /// Touched sample ids in first-touch order.
+    pub fn touched(&self) -> &[u32] {
+        &self.touched
+    }
+
+    /// Gather the touched samples' `dᵀx_i` into a reusable buffer
+    /// (allocation-free once `out` has warmed up to its working capacity).
+    pub fn gather_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.touched.iter().map(|&i| self.dx[i as usize]));
+    }
+
+    /// Fold another scratch's accumulated image into this one. Used to
+    /// combine per-chunk arenas after a fused direction + `dᵀx` region:
+    /// merging chunk arenas in chunk order keeps both the touched order and
+    /// the per-sample summation order deterministic.
+    pub fn merge_from(&mut self, other: &DxScratch) {
+        debug_assert_eq!(self.dx.len(), other.dx.len());
+        for &r in &other.touched {
+            let i = r as usize;
+            let v = other.dx[i];
+            // SAFETY: touched ids come from validated CSC row indices, all
+            // < rows == mark.len() == dx.len(); §Perf hot loop.
+            unsafe {
+                if *self.mark.get_unchecked(i) != self.epoch {
+                    *self.mark.get_unchecked_mut(i) = self.epoch;
+                    *self.dx.get_unchecked_mut(i) = 0.0;
+                    self.touched.push(r);
+                }
+                *self.dx.get_unchecked_mut(i) += v;
+            }
+        }
     }
 
     /// Number of touched samples this iteration.
@@ -400,6 +478,79 @@ mod tests {
         let (touched, dx) = s.view();
         assert_eq!(touched, &[1]);
         assert_eq!(dx, vec![-2.0]);
+    }
+
+    #[test]
+    fn dx_scratch_merge_matches_serial_accumulation() {
+        // Serial: features 0..4 accumulated in order. Chunked: features
+        // split over two arenas, merged in chunk order — same touched order
+        // and same per-sample sums.
+        let rows: [&[u32]; 4] = [&[0, 2], &[1, 2], &[2, 3], &[0, 3]];
+        let vals: [&[f64]; 4] = [&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0], &[7.0, 8.0]];
+        let ds = [0.5, -1.0, 2.0, 0.25];
+
+        let mut serial = DxScratch::new(5);
+        serial.reset();
+        for k in 0..4 {
+            serial.accumulate(rows[k], vals[k], ds[k]);
+        }
+
+        let mut a = DxScratch::new(5);
+        a.reset();
+        for k in 0..2 {
+            a.accumulate(rows[k], vals[k], ds[k]);
+        }
+        let mut b = DxScratch::new(5);
+        b.reset();
+        for k in 2..4 {
+            b.accumulate(rows[k], vals[k], ds[k]);
+        }
+        let mut merged = DxScratch::new(5);
+        merged.reset();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+
+        assert_eq!(serial.touched(), merged.touched());
+        let (mut sv, mut mv) = (Vec::new(), Vec::new());
+        serial.gather_into(&mut sv);
+        merged.gather_into(&mut mv);
+        assert_eq!(sv, mv);
+    }
+
+    #[test]
+    fn pooled_probe_matches_serial() {
+        use crate::parallel::pool::WorkerPool;
+        let data = toy(42);
+        let state = LossState::new(Objective::Logistic, &data, 1.0);
+        let w = vec![0.0; data.features()];
+        let bundle: Vec<usize> = (0..10).collect();
+        let (touched, dx, w_b, d_b, delta) = make_step(&state, &w, &bundle, 0.0);
+        let serial = p_dim_armijo(
+            &state,
+            &touched,
+            &dx,
+            &w_b,
+            &d_b,
+            delta,
+            &ArmijoParams::default(),
+        );
+        // Force the pooled path regardless of the size cutoff by chunking
+        // manually through parallel_for_reduce, then compare one probe.
+        let pool = WorkerPool::new(2);
+        let n_chunks = 3usize.min(touched.len().max(1));
+        let chunk = touched.len().div_ceil(n_chunks).max(1);
+        let pooled_probe = pool.parallel_for_reduce(
+            n_chunks,
+            0.0f64,
+            |ci, _| {
+                let lo = ci * chunk;
+                let hi = touched.len().min(lo + chunk);
+                state.delta_loss(&touched[lo..hi], &dx[lo..hi], serial.alpha)
+            },
+            |a, b| a + b,
+        );
+        let serial_probe = state.delta_loss(&touched, &dx, serial.alpha);
+        assert_close(pooled_probe, serial_probe, 1e-12);
     }
 
     #[test]

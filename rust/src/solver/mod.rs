@@ -13,6 +13,7 @@ pub mod tron;
 use crate::data::Dataset;
 use crate::linalg;
 use crate::loss::{LossState, Objective};
+use crate::parallel::pool::WorkerPool;
 use crate::parallel::sim::IterRecord;
 use crate::util::timer::Stopwatch;
 
@@ -89,6 +90,11 @@ pub struct TrainOptions {
     /// Start from this model instead of `w = 0` (used by the distributed
     /// iterative-parameter-mixing driver; PCDN/CDN honour it).
     pub warm_start: Option<Vec<f64>>,
+    /// Persistent worker team for the real parallel regions. `Some(pool)`
+    /// pins the run to that team; `None` with `n_threads > 1` borrows the
+    /// process-wide [`WorkerPool::global`] team; `None` with
+    /// `n_threads <= 1` runs serially inline (no barriers at all).
+    pub pool: Option<WorkerPool>,
 }
 
 impl Default for TrainOptions {
@@ -108,6 +114,35 @@ impl Default for TrainOptions {
             eval_test: None,
             l2_reg: 0.0,
             warm_start: None,
+            pool: None,
+        }
+    }
+}
+
+impl TrainOptions {
+    /// Resolve the worker team for this run: the explicit [`Self::pool`] if
+    /// set, else the global team when `n_threads > 1`, else `None` (pure
+    /// serial execution, the single-core reference path).
+    pub fn exec_pool(&self) -> Option<WorkerPool> {
+        if let Some(p) = &self.pool {
+            return Some(p.clone());
+        }
+        if self.n_threads > 1 {
+            return Some(WorkerPool::global().clone());
+        }
+        None
+    }
+
+    /// Number of statically scheduled chunks per parallel region. When the
+    /// user names a thread count, chunk boundaries follow it *exactly*
+    /// (independent of the physical pool size) so results replay
+    /// bit-for-bit on any machine; an explicit pool with `n_threads <= 1`
+    /// uses the pool's own width.
+    pub fn parallel_degree(&self, pool: &WorkerPool) -> usize {
+        if self.n_threads > 1 {
+            self.n_threads
+        } else {
+            pool.n_threads()
         }
     }
 }

@@ -5,23 +5,34 @@
 //! `b = ⌈n/P⌉` bundles (Eq. 8) and processes them sequentially
 //! (Gauss-Seidel). Per bundle `B^t`:
 //!
-//! 1. **Direction pass (parallel over `P` features)** — each worker computes
-//!    `(∇_j L, ∇²_jj L)` from the maintained per-sample factors and its own
-//!    feature column only (Eq. 12), then the soft-thresholded Newton step
-//!    `d_j` (Eq. 5) and its `Δ` contribution (Eq. 7).
-//! 2. **`dᵀx` accumulation** — the parallelizable slice of the line search
-//!    (footnote 3: computable with `P` threads + reduction); measured
-//!    separately so the schedule simulator can scale it.
+//! 1. **Fused direction + `dᵀx` region (one barrier)** — the bundle is cut
+//!    into `degree` contiguous chunks dispatched on the persistent
+//!    [`WorkerPool`]. Each chunk computes `(∇_j L, ∇²_jj L)` from the
+//!    maintained per-sample factors and its own feature columns only
+//!    (Eq. 12), the soft-thresholded Newton step `d_j` (Eq. 5) and its `Δ`
+//!    contribution (Eq. 7), *and* accumulates `d_j·x^j` into a per-chunk
+//!    [`DxScratch`] arena — so direction pass and the parallelizable slice
+//!    of the line search (footnote 3) cost exactly one implicit barrier per
+//!    bundle, matching §3.1.
+//! 2. **Deterministic merge** — chunk arenas fold into the bundle image in
+//!    chunk order; chunk boundaries follow `n_threads`, not the physical
+//!    pool width, so a run replays bit-for-bit on any machine.
 //! 3. **One `P`-dimensional Armijo search** (Alg. 4) on maintained
 //!    quantities — the step that guarantees global convergence for *any*
-//!    `P ∈ [1, n]`, unlike SCDN.
-//! 4. **Commit** — `w_B`, margins, and factors update; one barrier total.
+//!    `P ∈ [1, n]`, unlike SCDN. Probes reduce over the same team when the
+//!    touched set is large enough to amortize a barrier.
+//! 4. **Commit** — `w_B`, margins, and factors update.
+//!
+//! With `n_threads <= 1` and no pool, every stage runs inline with zero
+//! barriers — the single-core reference path whose measured per-iteration
+//! costs feed the Eq. 20 schedule simulator.
 
 use crate::data::Dataset;
 use crate::loss::{LossState, Objective};
+use crate::parallel::pool::SendPtr;
 use crate::parallel::sim::IterRecord;
 use crate::solver::direction::{delta_contribution, newton_direction};
-use crate::solver::linesearch::{p_dim_armijo_l2, DxScratch};
+use crate::solver::linesearch::{p_dim_armijo_exec, DxScratch};
 use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -43,26 +54,23 @@ struct DirSlot {
     delta: f64,
 }
 
-/// Run `body(i)` for `i in 0..len` across `n_threads` scoped workers with
-/// contiguous chunking. Writes go through disjoint `&mut` chunks, so the
-/// body receives the chunk and its global offset.
-fn par_chunks<T: Send, F>(n_threads: usize, out: &mut [T], f: F)
-where
-    F: Fn(usize, &mut [T]) + Sync,
-{
-    let len = out.len();
-    if n_threads <= 1 || len <= 1 {
-        f(0, out);
-        return;
-    }
-    let n_chunks = n_threads.min(len);
-    let chunk = len.div_ceil(n_chunks);
-    std::thread::scope(|s| {
-        for (k, piece) in out.chunks_mut(chunk).enumerate() {
-            let fr = &f;
-            s.spawn(move || fr(k * chunk, piece));
-        }
-    });
+/// The per-feature work of the direction pass: Eq. 12 gradient/Hessian with
+/// the elastic-net fold-in (no-op at `l2 = 0`), Eq. 5 direction, Eq. 7 `Δ`
+/// contribution.
+#[inline]
+fn feature_direction(
+    state: &LossState<'_>,
+    w: &[f64],
+    j: usize,
+    gamma: f64,
+    l2: f64,
+) -> (f64, f64) {
+    let (mut g, mut h) = state.grad_hess_j(j);
+    g += l2 * w[j];
+    h += l2;
+    let d = newton_direction(g, h, w[j]);
+    let delta = delta_contribution(g, h, w[j], d, gamma);
+    (d, delta)
 }
 
 impl Solver for Pcdn {
@@ -86,11 +94,26 @@ impl Solver for Pcdn {
         let mut slots: Vec<DirSlot> = vec![DirSlot::default(); p];
         let mut w_b: Vec<f64> = Vec::with_capacity(p);
         let mut d_b: Vec<f64> = Vec::with_capacity(p);
+        let mut dx_buf: Vec<f64> = Vec::new();
         let mut monitor = RunMonitor::new();
         let mut records: Vec<IterRecord> = Vec::new();
         let mut inner_iters = 0usize;
         let mut ls_steps = 0usize;
         let mut outer = 0usize;
+
+        // The persistent worker team for the whole run (one pool, many
+        // thousands of regions — never a thread spawn per bundle).
+        let pool = opts.exec_pool();
+        let degree = match &pool {
+            Some(pl) => opts.parallel_degree(pl).max(1),
+            None => 1,
+        };
+        // Per-chunk scratch arenas, allocation-free after warm-up.
+        let mut arenas: Vec<DxScratch> = if degree > 1 {
+            (0..degree).map(|_| DxScratch::new(s)).collect()
+        } else {
+            Vec::new()
+        };
 
         // Initial trace point + early-exit check.
         if monitor.observe(0, &state, &w, opts) {
@@ -104,45 +127,70 @@ impl Solver for Pcdn {
             for bundle in perm.chunks(p) {
                 inner_iters += 1;
                 let bp = bundle.len();
+                let n_chunks = degree.min(bp);
 
-                // ---- 1. direction pass (parallel region) -------------------
+                // ---- 1. fused direction + dᵀx pass (one parallel region) --
                 let t_dir = Stopwatch::start();
-                {
+                scratch.reset();
+                if n_chunks > 1 {
+                    let pl = pool.as_ref().expect("degree > 1 implies a pool");
+                    let chunk = bp.div_ceil(n_chunks);
+                    let slots_ptr = SendPtr::new(slots.as_mut_ptr());
+                    let arenas_ptr = SendPtr::new(arenas.as_mut_ptr());
                     let st = &state;
                     let wref = &w;
-                    par_chunks(opts.n_threads, &mut slots[..bp], |off, piece| {
-                        for (k, slot) in piece.iter_mut().enumerate() {
-                            let j = bundle[off + k];
-                            let (mut g, mut h) = st.grad_hess_j(j);
-                            // Elastic-net fold-in (no-op at l2_reg = 0).
-                            g += opts.l2_reg * wref[j];
-                            h += opts.l2_reg;
-                            let d = newton_direction(g, h, wref[j]);
-                            let delta =
-                                delta_contribution(g, h, wref[j], d, opts.armijo.gamma);
-                            *slot = DirSlot { d, delta };
+                    let gamma = opts.armijo.gamma;
+                    let l2 = opts.l2_reg;
+                    pl.parallel_for(n_chunks, move |ci, _wid| {
+                        let lo = ci * chunk;
+                        let hi = bp.min(lo + chunk);
+                        // SAFETY: chunk `ci` exclusively owns arena `ci`
+                        // and slots[lo..hi]; chunks are disjoint, and the
+                        // region barrier completes before the main thread
+                        // touches these buffers again.
+                        let arena = unsafe { &mut *arenas_ptr.get().add(ci) };
+                        arena.reset();
+                        for (k, &j) in bundle.iter().enumerate().take(hi).skip(lo) {
+                            let (d, delta) = feature_direction(st, wref, j, gamma, l2);
+                            unsafe { *slots_ptr.get().add(k) = DirSlot { d, delta } };
+                            if d != 0.0 {
+                                let (ri, v) = st.data().x.col(j);
+                                arena.accumulate(ri, v, d);
+                            }
                         }
                     });
+                } else {
+                    for (k, &j) in bundle.iter().enumerate() {
+                        let (d, delta) =
+                            feature_direction(&state, &w, j, opts.armijo.gamma, opts.l2_reg);
+                        slots[k] = DirSlot { d, delta };
+                        if d != 0.0 {
+                            let (ri, v) = data.x.col(j);
+                            scratch.accumulate(ri, v, d);
+                        }
+                    }
                 }
                 let t_direction_total = t_dir.secs();
 
-                // ---- 2. dᵀx accumulation (parallelizable LS slice) ---------
+                // ---- 2. deterministic merge + Δ / w_B / d_B assembly ------
                 let t_acc = Stopwatch::start();
-                scratch.reset();
+                if n_chunks > 1 {
+                    for arena in &arenas[..n_chunks] {
+                        scratch.merge_from(arena);
+                    }
+                }
                 w_b.clear();
                 d_b.clear();
                 let mut delta = 0.0;
                 let mut any_move = false;
                 for (k, &j) in bundle.iter().enumerate() {
-                    let d = slots[k].d;
-                    delta += slots[k].delta;
-                    if d != 0.0 {
+                    let slot = slots[k];
+                    delta += slot.delta;
+                    if slot.d != 0.0 {
                         any_move = true;
-                        let (ri, v) = data.x.col(j);
-                        scratch.accumulate(ri, v, d);
                     }
                     w_b.push(w[j]);
-                    d_b.push(d);
+                    d_b.push(slot.d);
                 }
                 let t_ls_parallel_total = t_acc.secs();
 
@@ -161,9 +209,19 @@ impl Solver for Pcdn {
 
                 // ---- 3. P-dimensional Armijo line search -------------------
                 let t_ls = Stopwatch::start();
-                let (touched, dx) = scratch.view();
-                let outcome = p_dim_armijo_l2(
-                    &state, touched, &dx, &w_b, &d_b, delta, &opts.armijo, opts.l2_reg,
+                scratch.gather_into(&mut dx_buf);
+                let touched = scratch.touched();
+                let outcome = p_dim_armijo_exec(
+                    &state,
+                    touched,
+                    &dx_buf,
+                    &w_b,
+                    &d_b,
+                    delta,
+                    &opts.armijo,
+                    opts.l2_reg,
+                    pool.as_ref(),
+                    degree,
                 );
                 let t_ls_serial = t_ls.secs();
                 ls_steps += outcome.steps;
@@ -173,8 +231,7 @@ impl Solver for Pcdn {
                     for (k, &j) in bundle.iter().enumerate() {
                         w[j] += outcome.alpha * d_b[k];
                     }
-                    let touched_owned: Vec<u32> = touched.to_vec();
-                    state.apply_step(&touched_owned, &dx, outcome.alpha);
+                    state.apply_step(touched, &dx_buf, outcome.alpha);
                 }
 
                 if opts.record_iters {
@@ -235,6 +292,7 @@ pub(crate) fn finish(
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::parallel::pool::WorkerPool;
     use crate::solver::StopRule;
     use crate::testutil::assert_close;
 
@@ -354,8 +412,12 @@ mod tests {
 
     #[test]
     fn multithreaded_matches_single_thread() {
-        // The direction pass is read-only w.r.t. state, so thread count
-        // must not change the trajectory at all.
+        // Chunk boundaries follow `n_threads` (not the physical pool), so a
+        // thread count fully determines the arithmetic: repeated pooled
+        // runs are bitwise identical. Across *different* thread counts only
+        // the FP association of the chunk merge differs (~1e-16/step), so
+        // the trajectories agree to tight tolerance and land on the same
+        // optimum.
         let d = toy(6);
         let mut o1 = opts(16);
         o1.n_threads = 1;
@@ -363,8 +425,26 @@ mod tests {
         o4.n_threads = 4;
         let r1 = Pcdn::new().train(&d, Objective::Logistic, &o1);
         let r4 = Pcdn::new().train(&d, Objective::Logistic, &o4);
-        assert_eq!(r1.w, r4.w);
-        assert_eq!(r1.ls_steps, r4.ls_steps);
+        let r4b = Pcdn::new().train(&d, Objective::Logistic, &o4);
+        assert_eq!(r4.w, r4b.w, "same thread count must replay bitwise");
+        assert_eq!(r4.ls_steps, r4b.ls_steps);
+        assert!(r1.converged && r4.converged);
+        assert_close(r1.final_objective, r4.final_objective, 1e-6);
+    }
+
+    #[test]
+    fn explicit_pool_reused_across_runs() {
+        // One persistent team drives several trainings back to back.
+        let d = toy(12);
+        let pool = WorkerPool::new(3);
+        let mut o = opts(16);
+        o.pool = Some(pool.clone());
+        o.n_threads = 3;
+        let r1 = Pcdn::new().train(&d, Objective::Logistic, &o);
+        let r2 = Pcdn::new().train(&d, Objective::L2Svm, &o);
+        let r3 = Pcdn::new().train(&d, Objective::Logistic, &o);
+        assert!(r1.converged && r2.converged && r3.converged);
+        assert_eq!(r1.w, r3.w, "pooled runs must replay bitwise");
     }
 
     #[test]

@@ -23,7 +23,7 @@
 use crate::data::Dataset;
 use crate::loss::logistic::{log1p_exp, sigmoid};
 use crate::loss::{LossState, Objective};
-use crate::parallel::pool::AtomicF64Vec;
+use crate::parallel::pool::{AtomicF64Vec, SendPtr, WorkerPool};
 use crate::parallel::sim::IterRecord;
 use crate::solver::direction::{delta_contribution, newton_direction};
 use crate::solver::linesearch::l1_delta;
@@ -99,6 +99,18 @@ fn train_round(
         return finish(name, w, &state, monitor, 0, 0, 0, records);
     }
 
+    // Persistent worker team for the whole run: each round's P̄ stale
+    // direction passes (each with its own 1-D search) dispatch as ONE
+    // region on the shared pool — never a thread spawn per round.
+    let pool = opts.exec_pool();
+    let degree = match &pool {
+        Some(pl) => opts.parallel_degree(pl).max(1),
+        None => 1,
+    };
+    let mut feats: Vec<usize> = Vec::with_capacity(pbar);
+    // (step, probes) per drawn feature; 0.0 step = rejected/zero direction.
+    let mut slots: Vec<(f64, usize)> = vec![(0.0, 0); pbar];
+
     'outer: loop {
         outer += 1;
         for _ in 0..rounds_per_outer {
@@ -107,38 +119,66 @@ fn train_round(
             // Alg. 2 step 5: choose P̄ features uniformly at random
             // (independent draws, like the shotgun paper — collisions are
             // part of the algorithm's semantics and resolve by summing).
-            let feats: Vec<usize> = (0..pbar).map(|_| rng.index(n)).collect();
+            feats.clear();
+            feats.extend((0..pbar).map(|_| rng.index(n)));
             // Stale snapshot: all P̄ updates are computed against the state
-            // at round start, each with its own 1-D line search.
-            let mut updates: Vec<(usize, f64)> = Vec::with_capacity(pbar);
-            let mut steps_this_round = 0usize;
-            for &j in &feats {
+            // at round start, each with its own 1-D line search. Each
+            // update is independent of the others, so the pass is bitwise
+            // identical at any thread count.
+            let stale_update = |j: usize| -> (f64, usize) {
                 let (mut g, mut h) = state.grad_hess_j(j);
                 g += opts.l2_reg * w[j];
                 h += opts.l2_reg;
                 let d = newton_direction(g, h, w[j]);
                 if d == 0.0 {
-                    continue;
+                    return (0.0, 0);
                 }
                 let delta = delta_contribution(g, h, w[j], d, opts.armijo.gamma);
                 let (ri, vals) = data.x.col(j);
                 let mut alpha = 1.0f64;
-                let mut accepted = false;
+                let mut steps = 0usize;
                 for _ in 0..opts.armijo.max_steps {
-                    steps_this_round += 1;
+                    steps += 1;
                     let od = state.delta_loss(ri, vals, alpha * d)
                         + l1_delta(&[w[j]], &[d], alpha)
                         + crate::solver::linesearch::l2_delta(
                             &[w[j]], &[d], alpha, opts.l2_reg,
                         );
                     if od <= opts.armijo.sigma * alpha * delta {
-                        accepted = true;
-                        break;
+                        return (alpha * d, steps);
                     }
                     alpha *= opts.armijo.beta;
                 }
-                if accepted {
-                    updates.push((j, alpha * d));
+                (0.0, steps)
+            };
+            let n_chunks = degree.min(pbar);
+            if n_chunks > 1 {
+                let pl = pool.as_ref().expect("degree > 1 implies a pool");
+                let chunk = pbar.div_ceil(n_chunks);
+                let slots_ptr = SendPtr::new(slots.as_mut_ptr());
+                let feats_ref = &feats;
+                let upd = &stale_update;
+                pl.parallel_for(n_chunks, move |ci, _wid| {
+                    let lo = ci * chunk;
+                    let hi = pbar.min(lo + chunk);
+                    for (k, &j) in feats_ref.iter().enumerate().take(hi).skip(lo) {
+                        // SAFETY: slot k is written only by its own chunk;
+                        // the region barrier precedes any main-thread read.
+                        unsafe { *slots_ptr.get().add(k) = upd(j) };
+                    }
+                });
+            } else {
+                for (k, &j) in feats.iter().enumerate() {
+                    slots[k] = stale_update(j);
+                }
+            }
+            let mut updates: Vec<(usize, f64)> = Vec::with_capacity(pbar);
+            let mut steps_this_round = 0usize;
+            for (k, &j) in feats.iter().enumerate() {
+                let (step, steps) = slots[k];
+                steps_this_round += steps;
+                if step != 0.0 {
+                    updates.push((j, step));
                 }
             }
             let t_direction_total = t_dir.secs();
@@ -282,69 +322,72 @@ fn train_atomic(
         crate::solver::subgrad_norm1(&st0.full_gradient(), &vec![0.0; n]).max(1e-300)
     };
 
+    // One persistent team of racing workers for the whole run. Each of the
+    // P̄ "shotgun threads" is a region index; a region per outer iteration
+    // replaces the per-iteration scoped spawn/join storm.
+    let team = opts
+        .exec_pool()
+        .unwrap_or_else(|| WorkerPool::new(pbar));
+
     while outer < opts.max_outer && monitor.sw.secs() < opts.max_secs {
         outer += 1;
         let quota = updates_per_outer.div_ceil(pbar);
-        std::thread::scope(|scope| {
-            for t in 0..pbar {
-                let grad_hess_j = &grad_hess_j;
-                let delta_loss = &delta_loss;
-                let w_atomic = &w_atomic;
-                let margin = &margin;
-                let stop_flag = &stop_flag;
-                let total_ls = &total_ls;
-                let total_updates = &total_updates;
-                let armijo = opts.armijo;
+        {
+            let grad_hess_j = &grad_hess_j;
+            let delta_loss = &delta_loss;
+            let w_atomic = &w_atomic;
+            let margin = &margin;
+            let stop_flag = &stop_flag;
+            let total_ls = &total_ls;
+            let total_updates = &total_updates;
+            let armijo = opts.armijo;
+            team.parallel_for(pbar, move |t, _wid| {
                 let mut rng = Pcg64::with_stream(opts.seed ^ outer as u64, t as u64);
-                scope.spawn(move || {
-                    for _ in 0..quota {
-                        if stop_flag.load(std::sync::atomic::Ordering::Relaxed) {
-                            return;
+                for _ in 0..quota {
+                    if stop_flag.load(std::sync::atomic::Ordering::Relaxed) {
+                        return;
+                    }
+                    let j = rng.index(n);
+                    let wj = w_atomic.load(j);
+                    let (g, h) = grad_hess_j(j);
+                    let d = newton_direction(g, h, wj);
+                    if d == 0.0 {
+                        continue;
+                    }
+                    let delta = delta_contribution(g, h, wj, d, armijo.gamma);
+                    let mut alpha = 1.0f64;
+                    let mut accepted = false;
+                    for _ in 0..armijo.max_steps {
+                        total_ls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let od = delta_loss(j, alpha * d) + l1_delta(&[wj], &[d], alpha);
+                        if od <= armijo.sigma * alpha * delta {
+                            accepted = true;
+                            break;
                         }
-                        let j = rng.index(n);
-                        let wj = w_atomic.load(j);
-                        let (g, h) = grad_hess_j(j);
-                        let d = newton_direction(g, h, wj);
-                        if d == 0.0 {
-                            continue;
-                        }
-                        let delta = delta_contribution(g, h, wj, d, armijo.gamma);
-                        let mut alpha = 1.0f64;
-                        let mut accepted = false;
-                        for _ in 0..armijo.max_steps {
-                            total_ls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            let od =
-                                delta_loss(j, alpha * d) + l1_delta(&[wj], &[d], alpha);
-                            if od <= armijo.sigma * alpha * delta {
-                                accepted = true;
-                                break;
-                            }
-                            alpha *= armijo.beta;
-                        }
-                        if accepted {
-                            let step = alpha * d;
-                            // CAS weight update + atomic margin axpy — the
-                            // paper's compare-and-swap implementation.
-                            w_atomic.fetch_add(j, step);
-                            let (ri, vals) = data.x.col(j);
-                            for (r, v) in ri.iter().zip(vals) {
-                                let i = *r as usize;
-                                match obj {
-                                    Objective::Logistic | Objective::Lasso => {
-                                        margin.fetch_add(i, step * v);
-                                    }
-                                    Objective::L2Svm => {
-                                        margin.fetch_add(i, -data.y[i] * step * v);
-                                    }
+                        alpha *= armijo.beta;
+                    }
+                    if accepted {
+                        let step = alpha * d;
+                        // CAS weight update + atomic margin axpy — the
+                        // paper's compare-and-swap implementation.
+                        w_atomic.fetch_add(j, step);
+                        let (ri, vals) = data.x.col(j);
+                        for (r, v) in ri.iter().zip(vals) {
+                            let i = *r as usize;
+                            match obj {
+                                Objective::Logistic | Objective::Lasso => {
+                                    margin.fetch_add(i, step * v);
+                                }
+                                Objective::L2Svm => {
+                                    margin.fetch_add(i, -data.y[i] * step * v);
                                 }
                             }
-                            total_updates
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         }
+                        total_updates.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     }
-                });
-            }
-        });
+                }
+            });
+        }
 
         // Convergence check on a consistent snapshot.
         let w_snap = w_atomic.to_vec();

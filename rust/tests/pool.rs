@@ -1,0 +1,192 @@
+//! Worker-pool contract tests: deterministic static scheduling, panic
+//! propagation, reduction determinism, and the P = 1 solver regression
+//! (PCDN at bundle size 1 is CDN).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use pcdn::data::synthetic::{generate, SyntheticSpec};
+use pcdn::data::Dataset;
+use pcdn::loss::Objective;
+use pcdn::parallel::pool::{ThreadPool, WorkerPool};
+use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, Solver, StopRule, TrainOptions};
+
+fn toy(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            samples: 150,
+            features: 70,
+            nnz_per_row: 9,
+            label_noise: 0.05,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+/// Static scheduling is a pure function of (len, n_threads): the same
+/// input maps every index to the same worker on every run and across
+/// repeated regions on the same pool.
+#[test]
+fn static_schedule_same_input_same_assignment() {
+    let len = 997usize; // prime, exercises uneven tails
+    for nt in [1usize, 2, 3, 4, 7] {
+        let pool = ThreadPool::new(nt);
+        let mut assignments: Vec<Vec<u64>> = Vec::new();
+        for _ in 0..3 {
+            let owner: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(u64::MAX)).collect();
+            pool.parallel_for(len, |i, wid| {
+                owner[i].store(wid as u64, Ordering::SeqCst);
+            });
+            assignments.push(owner.iter().map(|a| a.load(Ordering::SeqCst)).collect());
+        }
+        // Interleaved static schedule: index i -> worker i % nt, every run.
+        for run in &assignments {
+            for (i, &wid) in run.iter().enumerate() {
+                assert_eq!(wid, (i % nt) as u64, "nt={nt}, index {i}");
+            }
+        }
+        assert_eq!(assignments[0], assignments[1]);
+        assert_eq!(assignments[1], assignments[2]);
+    }
+}
+
+/// A panic inside a region must propagate out of `parallel_for` on the
+/// submitting thread, and the pool must stay fully usable afterwards.
+#[test]
+fn panic_propagates_out_of_parallel_for() {
+    let pool = ThreadPool::new(3);
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        pool.parallel_for(16, |i, _| {
+            if i == 11 {
+                panic!("injected worker failure");
+            }
+        });
+    }));
+    let err = caught.expect_err("worker panic must surface to the caller");
+    let msg = err
+        .downcast_ref::<&str>()
+        .copied()
+        .map(String::from)
+        .or_else(|| err.downcast_ref::<String>().cloned())
+        .unwrap_or_default();
+    assert!(
+        msg.contains("worker panicked"),
+        "unexpected panic payload: {msg}"
+    );
+
+    // Recovery: the same pool still runs complete regions.
+    let count = AtomicUsize::new(0);
+    pool.parallel_for(64, |_, _| {
+        count.fetch_add(1, Ordering::SeqCst);
+    });
+    assert_eq!(count.load(Ordering::SeqCst), 64);
+}
+
+/// `parallel_for_reduce` combines chunk partials in index order, so the
+/// result is independent of the pool width — bitwise.
+#[test]
+fn reduce_is_pool_size_independent() {
+    let xs: Vec<f64> = (0..5000).map(|i| ((i * 37 % 101) as f64).sqrt()).collect();
+    let n_chunks = 13usize;
+    let chunk = xs.len().div_ceil(n_chunks);
+    let sum_on = |pool: &WorkerPool| -> f64 {
+        pool.parallel_for_reduce(
+            n_chunks,
+            0.0,
+            |ci, _| {
+                let lo = ci * chunk;
+                let hi = xs.len().min(lo + chunk);
+                xs[lo..hi].iter().sum::<f64>()
+            },
+            |a, b| a + b,
+        )
+    };
+    let reference = sum_on(&WorkerPool::new(1));
+    for nt in [2usize, 3, 5, 8] {
+        let got = sum_on(&WorkerPool::new(nt));
+        assert_eq!(got.to_bits(), reference.to_bits(), "pool width {nt}");
+    }
+}
+
+/// PCDN at P = 1 degenerates to CDN (one feature per bundle, the 1-D
+/// line search): with the same seed both walk the same permutations and
+/// their objective trajectories coincide. The two implementations differ
+/// only in FP association inside the probe (`α·(d·x)` vs `(α·d)·x`), so
+/// the comparison is at tight tolerance rather than bitwise.
+#[test]
+fn pcdn_p1_trajectory_matches_cdn() {
+    let d = toy(21);
+    let opts = TrainOptions {
+        c: 1.0,
+        bundle_size: 1,
+        stop: StopRule::MaxOuter(12),
+        max_outer: 12,
+        trace_every: 1,
+        ..TrainOptions::default()
+    };
+    let rp = Pcdn::new().train(&d, Objective::Logistic, &opts);
+    let rc = Cdn::new().train(&d, Objective::Logistic, &opts);
+    assert_eq!(rp.outer_iters, rc.outer_iters);
+    assert_eq!(rp.trace.len(), rc.trace.len());
+    for (tp, tc) in rp.trace.iter().zip(&rc.trace) {
+        assert_eq!(tp.outer_iter, tc.outer_iter);
+        let rel = (tp.objective - tc.objective).abs() / tc.objective.abs().max(1.0);
+        assert!(
+            rel < 1e-9,
+            "trajectory diverged at outer {}: pcdn {} vs cdn {} (rel {rel:.3e})",
+            tp.outer_iter,
+            tp.objective,
+            tc.objective
+        );
+    }
+    for (a, b) in rp.w.iter().zip(&rc.w) {
+        assert!((a - b).abs() < 1e-8, "models diverged: {a} vs {b}");
+    }
+}
+
+/// At P = 1 a bundle holds one feature, so there is nothing to chunk: a
+/// pooled run must take the identical serial path — bitwise.
+#[test]
+fn pcdn_p1_invariant_to_pool() {
+    let d = toy(22);
+    let serial = TrainOptions {
+        c: 1.0,
+        bundle_size: 1,
+        stop: StopRule::SubgradRel(1e-4),
+        max_outer: 200,
+        ..TrainOptions::default()
+    };
+    let mut pooled = serial.clone();
+    pooled.n_threads = 4;
+    pooled.pool = Some(WorkerPool::new(2));
+    let rs = Pcdn::new().train(&d, Objective::Logistic, &serial);
+    let rp = Pcdn::new().train(&d, Objective::Logistic, &pooled);
+    assert_eq!(rs.w, rp.w);
+    assert_eq!(rs.ls_steps, rp.ls_steps);
+    assert_eq!(rs.outer_iters, rp.outer_iters);
+}
+
+/// Pooled PCDN replays bit-for-bit for a fixed thread count: chunk
+/// boundaries follow `n_threads`, not the physical pool width.
+#[test]
+fn pooled_pcdn_bitwise_deterministic() {
+    let d = toy(23);
+    let mut opts = TrainOptions {
+        c: 1.0,
+        bundle_size: 16,
+        stop: StopRule::SubgradRel(1e-4),
+        max_outer: 300,
+        ..TrainOptions::default()
+    };
+    opts.n_threads = 3;
+    let r1 = Pcdn::new().train(&d, Objective::Logistic, &opts);
+    // Same requested degree on a differently sized dedicated team.
+    let mut on_team = opts.clone();
+    on_team.pool = Some(WorkerPool::new(2));
+    let r2 = Pcdn::new().train(&d, Objective::Logistic, &opts);
+    let r3 = Pcdn::new().train(&d, Objective::Logistic, &on_team);
+    assert_eq!(r1.w, r2.w);
+    assert_eq!(r1.w, r3.w, "chunking must follow n_threads, not pool width");
+    assert_eq!(r1.ls_steps, r3.ls_steps);
+}
