@@ -12,6 +12,7 @@
 //! feature `j`; the floor is applied centrally in `LossState::grad_hess_j`.
 
 use crate::data::Dataset;
+use crate::parallel::pool::{SendPtr, WorkerPool};
 
 pub struct L2SvmState<'a> {
     pub data: &'a Dataset,
@@ -22,6 +23,18 @@ pub struct L2SvmState<'a> {
     pub grad_factor: Vec<f64>,
     /// `2` if `b_i > 0` else `0`.
     pub hess_factor: Vec<f64>,
+}
+
+/// Derived per-sample factors `(grad_factor, hess_factor)` from a label and
+/// a margin `b_i`. Pure so the serial refresh and the range-sharded commit
+/// share one formula (keeping them bitwise identical by construction).
+#[inline]
+fn sample_factors(y: f64, b: f64) -> (f64, f64) {
+    if b > 0.0 {
+        (-2.0 * y * b, 2.0)
+    } else {
+        (0.0, 0.0)
+    }
 }
 
 impl<'a> L2SvmState<'a> {
@@ -43,14 +56,9 @@ impl<'a> L2SvmState<'a> {
 
     #[inline]
     fn refresh_sample(&mut self, i: usize) {
-        let bi = self.b[i];
-        if bi > 0.0 {
-            self.grad_factor[i] = -2.0 * self.data.y[i] * bi;
-            self.hess_factor[i] = 2.0;
-        } else {
-            self.grad_factor[i] = 0.0;
-            self.hess_factor[i] = 0.0;
-        }
+        let (gf, hf) = sample_factors(self.data.y[i], self.b[i]);
+        self.grad_factor[i] = gf;
+        self.hess_factor[i] = hf;
     }
 
     /// `L(w) = c·Σ max(0, b_i)²`.
@@ -86,6 +94,64 @@ impl<'a> L2SvmState<'a> {
             self.b[i] -= self.data.y[i] * alpha * dxi;
             self.refresh_sample(i);
         }
+    }
+
+    /// Disjoint-range commit: like [`Self::apply_step`] but every index in
+    /// `touched` must lie in `[lo, hi)`. Composing over a disjoint cover of
+    /// the touched set is bitwise equal to one `apply_step` call.
+    pub fn apply_step_range(
+        &mut self,
+        (lo, hi): (usize, usize),
+        touched: &[u32],
+        dx: &[f64],
+        alpha: f64,
+    ) {
+        debug_assert_eq!(touched.len(), dx.len());
+        for (&i, &dxi) in touched.iter().zip(dx) {
+            let i = i as usize;
+            debug_assert!(i >= lo && i < hi, "sample {i} outside range [{lo}, {hi})");
+            self.b[i] -= self.data.y[i] * alpha * dxi;
+            self.refresh_sample(i);
+        }
+    }
+
+    /// Pooled commit over disjoint sample ranges (see the logistic variant
+    /// for the contract). Bitwise identical to the serial commit.
+    pub fn apply_step_sharded(
+        &mut self,
+        touched: &[u32],
+        dx: &[f64],
+        offsets: &[usize],
+        alpha: f64,
+        pool: &WorkerPool,
+    ) {
+        debug_assert_eq!(touched.len(), dx.len());
+        debug_assert_eq!(offsets.last().copied().unwrap_or(0), touched.len());
+        if offsets.len() < 2 {
+            return;
+        }
+        let b_ptr = SendPtr::new(self.b.as_mut_ptr());
+        let gf_ptr = SendPtr::new(self.grad_factor.as_mut_ptr());
+        let hf_ptr = SendPtr::new(self.hess_factor.as_mut_ptr());
+        let y = &self.data.y;
+        pool.parallel_for(offsets.len() - 1, move |r, _wid| {
+            for (&id, &dxi) in touched[offsets[r]..offsets[r + 1]]
+                .iter()
+                .zip(&dx[offsets[r]..offsets[r + 1]])
+            {
+                let i = id as usize;
+                // SAFETY: ranges are pairwise disjoint in sample space and
+                // the region barrier completes before any further access.
+                unsafe {
+                    let yi = *y.get_unchecked(i);
+                    let bi = *b_ptr.get().add(i) - yi * alpha * dxi;
+                    *b_ptr.get().add(i) = bi;
+                    let (gf, hf) = sample_factors(yi, bi);
+                    *gf_ptr.get().add(i) = gf;
+                    *hf_ptr.get().add(i) = hf;
+                }
+            }
+        });
     }
 
     /// Rebuild from an explicit model.

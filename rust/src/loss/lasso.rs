@@ -14,6 +14,7 @@
 //! clean setting for observing the paper's `E[q_t]` vs `P` behaviour.
 
 use crate::data::Dataset;
+use crate::parallel::pool::{SendPtr, WorkerPool};
 
 pub struct LassoState<'a> {
     pub data: &'a Dataset,
@@ -26,12 +27,19 @@ pub struct LassoState<'a> {
     pub hess_factor: Vec<f64>,
 }
 
+/// `grad_factor` from a residual (pure; shared by the serial refresh and
+/// the range-sharded commit so the two stay bitwise identical).
+#[inline]
+fn grad_factor_of(r: f64) -> f64 {
+    2.0 * r
+}
+
 impl<'a> LassoState<'a> {
     /// State at `w = 0` (residuals `−y_i`).
     pub fn new(data: &'a Dataset, c: f64) -> Self {
         let s = data.samples();
         let r: Vec<f64> = data.y.iter().map(|&y| -y).collect();
-        let grad_factor = r.iter().map(|&ri| 2.0 * ri).collect();
+        let grad_factor = r.iter().map(|&ri| grad_factor_of(ri)).collect();
         LassoState {
             data,
             c,
@@ -64,8 +72,61 @@ impl<'a> LassoState<'a> {
         for (&i, &dxi) in touched.iter().zip(dx) {
             let i = i as usize;
             self.r[i] += alpha * dxi;
-            self.grad_factor[i] = 2.0 * self.r[i];
+            self.grad_factor[i] = grad_factor_of(self.r[i]);
         }
+    }
+
+    /// Disjoint-range commit: like [`Self::apply_step`] but every index in
+    /// `touched` must lie in `[lo, hi)`. Composing over a disjoint cover of
+    /// the touched set is bitwise equal to one `apply_step` call.
+    pub fn apply_step_range(
+        &mut self,
+        (lo, hi): (usize, usize),
+        touched: &[u32],
+        dx: &[f64],
+        alpha: f64,
+    ) {
+        debug_assert_eq!(touched.len(), dx.len());
+        for (&i, &dxi) in touched.iter().zip(dx) {
+            let i = i as usize;
+            debug_assert!(i >= lo && i < hi, "sample {i} outside range [{lo}, {hi})");
+            self.r[i] += alpha * dxi;
+            self.grad_factor[i] = grad_factor_of(self.r[i]);
+        }
+    }
+
+    /// Pooled commit over disjoint sample ranges (see the logistic variant
+    /// for the contract). Bitwise identical to the serial commit.
+    pub fn apply_step_sharded(
+        &mut self,
+        touched: &[u32],
+        dx: &[f64],
+        offsets: &[usize],
+        alpha: f64,
+        pool: &WorkerPool,
+    ) {
+        debug_assert_eq!(touched.len(), dx.len());
+        debug_assert_eq!(offsets.last().copied().unwrap_or(0), touched.len());
+        if offsets.len() < 2 {
+            return;
+        }
+        let r_ptr = SendPtr::new(self.r.as_mut_ptr());
+        let gf_ptr = SendPtr::new(self.grad_factor.as_mut_ptr());
+        pool.parallel_for(offsets.len() - 1, move |rr, _wid| {
+            for (&id, &dxi) in touched[offsets[rr]..offsets[rr + 1]]
+                .iter()
+                .zip(&dx[offsets[rr]..offsets[rr + 1]])
+            {
+                let i = id as usize;
+                // SAFETY: ranges are pairwise disjoint in sample space and
+                // the region barrier completes before any further access.
+                unsafe {
+                    let ri = *r_ptr.get().add(i) + alpha * dxi;
+                    *r_ptr.get().add(i) = ri;
+                    *gf_ptr.get().add(i) = grad_factor_of(ri);
+                }
+            }
+        });
     }
 
     /// Rebuild from an explicit model.
@@ -73,7 +134,7 @@ impl<'a> LassoState<'a> {
         let z = self.data.x.matvec(w);
         for i in 0..self.data.samples() {
             self.r[i] = z[i] - self.data.y[i];
-            self.grad_factor[i] = 2.0 * self.r[i];
+            self.grad_factor[i] = grad_factor_of(self.r[i]);
         }
     }
 }

@@ -12,6 +12,7 @@
 //! feature column.
 
 use crate::data::Dataset;
+use crate::parallel::pool::{SendPtr, WorkerPool};
 
 pub struct LogisticState<'a> {
     pub data: &'a Dataset,
@@ -49,6 +50,25 @@ pub fn sigmoid(z: f64) -> f64 {
     }
 }
 
+/// Derived per-sample factors `(grad_factor, hess_factor, sp_loss)` from a
+/// label and a margin. Pure so the range-sharded commit can refresh samples
+/// from worker threads without borrowing the whole state.
+///
+/// σ(−y·m) shares the exp with softplus(−y·m): both derive from `e^{−|z|}`
+/// at `z = y·m`; `τ(y·m) − 1 = −σ(−y·m)` and `σ(m)σ(−m) = σ(z)σ(−z)`.
+#[inline]
+fn sample_factors(y: f64, m: f64) -> (f64, f64, f64) {
+    let z = y * m;
+    let e = (-z.abs()).exp();
+    let sig_neg = if z >= 0.0 {
+        e / (1.0 + e)
+    } else {
+        1.0 / (1.0 + e)
+    };
+    let sp = if z >= 0.0 { e.ln_1p() } else { e.ln_1p() - z };
+    (-y * sig_neg, sig_neg * (1.0 - sig_neg), sp)
+}
+
 impl<'a> LogisticState<'a> {
     /// State at `w = 0`.
     pub fn new(data: &'a Dataset, c: f64) -> Self {
@@ -70,17 +90,10 @@ impl<'a> LogisticState<'a> {
     /// Recompute factors for sample `i` from its margin.
     #[inline]
     fn refresh_sample(&mut self, i: usize) {
-        let y = self.data.y[i];
-        let m = self.wx[i];
-        // σ(−y·m) shares the exp with softplus(−y·m): both derive from
-        // e^{−|z|} at z = y·m.
-        let z = y * m;
-        let e = (-z.abs()).exp();
-        let sig_neg = if z >= 0.0 { e / (1.0 + e) } else { 1.0 / (1.0 + e) };
-        // τ(y·m) − 1 = −σ(−y·m)
-        self.grad_factor[i] = -y * sig_neg;
-        self.hess_factor[i] = sig_neg * (1.0 - sig_neg); // σ(m)σ(−m) = σ(z)σ(−z)
-        self.sp_loss[i] = if z >= 0.0 { e.ln_1p() } else { e.ln_1p() - z };
+        let (gf, hf, sp) = sample_factors(self.data.y[i], self.wx[i]);
+        self.grad_factor[i] = gf;
+        self.hess_factor[i] = hf;
+        self.sp_loss[i] = sp;
     }
 
     /// `L(w) = c·Σ log(1 + e^{−y_i wx_i})` — exp-free from the cache.
@@ -119,6 +132,71 @@ impl<'a> LogisticState<'a> {
             self.wx[i] += alpha * dxi;
             self.refresh_sample(i);
         }
+    }
+
+    /// Disjoint-range commit: like [`Self::apply_step`] but every index in
+    /// `touched` must lie in `[lo, hi)`. Per-sample updates are independent
+    /// (each sample's arithmetic is identical to the whole-vector commit),
+    /// so composing this over a disjoint cover of the touched set is
+    /// bitwise equal to one `apply_step` call.
+    pub fn apply_step_range(
+        &mut self,
+        (lo, hi): (usize, usize),
+        touched: &[u32],
+        dx: &[f64],
+        alpha: f64,
+    ) {
+        debug_assert_eq!(touched.len(), dx.len());
+        for (&i, &dxi) in touched.iter().zip(dx) {
+            let i = i as usize;
+            debug_assert!(i >= lo && i < hi, "sample {i} outside range [{lo}, {hi})");
+            self.wx[i] += alpha * dxi;
+            self.refresh_sample(i);
+        }
+    }
+
+    /// Pooled commit: one `parallel_for` over the sample ranges described
+    /// by `offsets` (range `r` owns `touched[offsets[r]..offsets[r + 1]]`,
+    /// ranges pairwise disjoint in sample space). Bitwise identical to the
+    /// serial commit — per-sample updates are independent.
+    pub fn apply_step_sharded(
+        &mut self,
+        touched: &[u32],
+        dx: &[f64],
+        offsets: &[usize],
+        alpha: f64,
+        pool: &WorkerPool,
+    ) {
+        debug_assert_eq!(touched.len(), dx.len());
+        debug_assert_eq!(offsets.last().copied().unwrap_or(0), touched.len());
+        if offsets.len() < 2 {
+            return;
+        }
+        let wx_ptr = SendPtr::new(self.wx.as_mut_ptr());
+        let gf_ptr = SendPtr::new(self.grad_factor.as_mut_ptr());
+        let hf_ptr = SendPtr::new(self.hess_factor.as_mut_ptr());
+        let sp_ptr = SendPtr::new(self.sp_loss.as_mut_ptr());
+        let y = &self.data.y;
+        pool.parallel_for(offsets.len() - 1, move |r, _wid| {
+            for (&id, &dxi) in touched[offsets[r]..offsets[r + 1]]
+                .iter()
+                .zip(&dx[offsets[r]..offsets[r + 1]])
+            {
+                let i = id as usize;
+                // SAFETY: offsets partition `touched` by disjoint sample
+                // ranges, so range r touches sample indices no other range
+                // names; the region barrier completes before the state is
+                // read again.
+                unsafe {
+                    let m = *wx_ptr.get().add(i) + alpha * dxi;
+                    *wx_ptr.get().add(i) = m;
+                    let (gf, hf, sp) = sample_factors(*y.get_unchecked(i), m);
+                    *gf_ptr.get().add(i) = gf;
+                    *hf_ptr.get().add(i) = hf;
+                    *sp_ptr.get().add(i) = sp;
+                }
+            }
+        });
     }
 
     /// Rebuild all maintained quantities from an explicit model `w`.

@@ -18,11 +18,18 @@
 //! and update additively — the same information with no drift from repeated
 //! multiplication; all factor computations are in stable `log1p/exp` form.
 
+//! Mutation API: [`LossState::apply_step`] commits a step serially;
+//! [`LossState::apply_step_range`] commits one disjoint sample range (the
+//! building block), and [`LossState::apply_step_sharded`] dispatches the
+//! commit over a [`WorkerPool`] as one `parallel_for` over ranges — per-
+//! sample updates are independent, so all three are bitwise equivalent.
+
 pub mod l2svm;
 pub mod lasso;
 pub mod logistic;
 
 use crate::data::Dataset;
+use crate::parallel::pool::WorkerPool;
 
 /// Which ℓ1-regularized objective to minimize (paper Eq. 1–3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,6 +173,45 @@ impl<'a> LossState<'a> {
             LossState::Logistic(s) => s.apply_step(touched, dx, alpha),
             LossState::L2Svm(s) => s.apply_step(touched, dx, alpha),
             LossState::Lasso(s) => s.apply_step(touched, dx, alpha),
+        }
+    }
+
+    /// Disjoint-range commit: update maintained quantities for the touched
+    /// samples of one sample range `[lo, hi)` only. Per-sample updates are
+    /// independent, so composing this over any disjoint cover of the
+    /// touched set is bitwise equal to one whole-vector [`Self::apply_step`]
+    /// — the property the range-sharded epilogue rests on.
+    pub fn apply_step_range(
+        &mut self,
+        bounds: (usize, usize),
+        touched: &[u32],
+        dx: &[f64],
+        alpha: f64,
+    ) {
+        match self {
+            LossState::Logistic(s) => s.apply_step_range(bounds, touched, dx, alpha),
+            LossState::L2Svm(s) => s.apply_step_range(bounds, touched, dx, alpha),
+            LossState::Lasso(s) => s.apply_step_range(bounds, touched, dx, alpha),
+        }
+    }
+
+    /// Pooled commit: dispatch the step over the worker team as one
+    /// `parallel_for` whose items are the sample ranges described by
+    /// `offsets` (range `r` owns `touched[offsets[r]..offsets[r + 1]]`;
+    /// ranges must be pairwise disjoint in sample space, as produced by
+    /// `DxScratch::pack_into`). Bitwise identical to the serial commit.
+    pub fn apply_step_sharded(
+        &mut self,
+        touched: &[u32],
+        dx: &[f64],
+        offsets: &[usize],
+        alpha: f64,
+        pool: &WorkerPool,
+    ) {
+        match self {
+            LossState::Logistic(s) => s.apply_step_sharded(touched, dx, offsets, alpha, pool),
+            LossState::L2Svm(s) => s.apply_step_sharded(touched, dx, offsets, alpha, pool),
+            LossState::Lasso(s) => s.apply_step_sharded(touched, dx, offsets, alpha, pool),
         }
     }
 
@@ -315,6 +361,89 @@ mod tests {
             for (a, b) in inc.grad_factors().iter().zip(fresh.grad_factors()) {
                 assert_close(*a, *b, 1e-9);
             }
+        }
+    }
+
+    /// Build a multi-feature step image (touched ids + dᵀx values) plus the
+    /// range offsets of its range-major packing.
+    fn step_image(
+        data: &Dataset,
+        ranges: crate::parallel::SampleRanges,
+    ) -> (Vec<u32>, Vec<f64>, Vec<usize>) {
+        let mut d = vec![0.0; data.features()];
+        for (j, dj) in d.iter_mut().enumerate() {
+            if j % 3 != 2 {
+                *dj = 0.1 * (j as f64 + 1.0) * if j % 2 == 0 { 1.0 } else { -1.0 };
+            }
+        }
+        let dx_full = data.x.matvec(&d);
+        // Range-major pack (ids ascend, so ranges are contiguous runs).
+        let mut touched: Vec<u32> = (0..data.samples() as u32)
+            .filter(|&i| dx_full[i as usize] != 0.0)
+            .collect();
+        touched.sort_by_key(|&i| (ranges.of(i), i));
+        let dx: Vec<f64> = touched.iter().map(|&i| dx_full[i as usize]).collect();
+        let mut offsets = vec![0usize];
+        for r in 0..ranges.n_ranges() {
+            let upto = touched.iter().filter(|&&i| ranges.of(i) <= r).count();
+            offsets.push(upto);
+        }
+        (touched, dx, offsets)
+    }
+
+    #[test]
+    fn apply_step_range_composes_to_apply_step() {
+        // apply_step_range over a disjoint cover == one apply_step, bitwise,
+        // for every loss.
+        let data = toy();
+        let ranges = crate::parallel::SampleRanges::new(data.samples(), 3);
+        assert!(ranges.n_ranges() > 1);
+        for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
+            let (touched, dx, offsets) = step_image(&data, ranges);
+            let mut whole = LossState::new(obj, &data, 0.8);
+            whole.apply_step(&touched, &dx, 0.37);
+            let mut ranged = LossState::new(obj, &data, 0.8);
+            for r in 0..ranges.n_ranges() {
+                let (lo, hi) = (offsets[r], offsets[r + 1]);
+                ranged.apply_step_range(ranges.bounds(r), &touched[lo..hi], &dx[lo..hi], 0.37);
+            }
+            for (a, b) in whole.grad_factors().iter().zip(ranged.grad_factors()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{obj:?} grad factors");
+            }
+            for (a, b) in whole.hess_factors().iter().zip(ranged.hess_factors()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{obj:?} hess factors");
+            }
+            assert_eq!(
+                whole.loss_value().to_bits(),
+                ranged.loss_value().to_bits(),
+                "{obj:?} loss"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_step_sharded_matches_serial_commit() {
+        use crate::parallel::pool::WorkerPool;
+        let data = toy();
+        let ranges = crate::parallel::SampleRanges::new(data.samples(), 4);
+        let pool = WorkerPool::new(3); // width ≠ range count on purpose
+        for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
+            let (touched, dx, offsets) = step_image(&data, ranges);
+            let mut serial = LossState::new(obj, &data, 1.1);
+            serial.apply_step(&touched, &dx, -0.21);
+            let mut sharded = LossState::new(obj, &data, 1.1);
+            sharded.apply_step_sharded(&touched, &dx, &offsets, -0.21, &pool);
+            for (a, b) in serial.grad_factors().iter().zip(sharded.grad_factors()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{obj:?} grad factors");
+            }
+            for (a, b) in serial.hess_factors().iter().zip(sharded.hess_factors()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{obj:?} hess factors");
+            }
+            assert_eq!(
+                serial.loss_value().to_bits(),
+                sharded.loss_value().to_bits(),
+                "{obj:?} loss"
+            );
         }
     }
 

@@ -4,12 +4,17 @@
 //! OpenMP `parallel for` with static scheduling and one implicit barrier per
 //! region; [`pool::WorkerPool`] is the cheaply clonable handle the solvers
 //! thread through [`crate::solver::TrainOptions`] so a whole training run
-//! (direction passes, `dᵀx` accumulation, Armijo-probe reductions) shares
-//! one persistent team. [`sim`] is the deterministic parallel-schedule
-//! *cost model* (paper Eq. 13/20) used to report multicore numbers on this
-//! single-core testbed — see DESIGN.md §3.
+//! (direction passes, `dᵀx` accumulation, Armijo-probe reductions, and the
+//! range-sharded epilogue: merge, pack, commit) shares one persistent team.
+//! [`range::SampleRanges`] is the fixed sample-space partition that makes
+//! the epilogue phases contention-free and bitwise replayable. [`sim`] is
+//! the deterministic parallel-schedule *cost model* (paper Eq. 13/20) used
+//! to report multicore numbers on this single-core testbed — see DESIGN.md
+//! §3.
 
 pub mod pool;
+pub mod range;
 pub mod sim;
 
 pub use pool::{ThreadPool, WorkerPool};
+pub use range::SampleRanges;

@@ -1,0 +1,152 @@
+//! Fixed disjoint sample-range partition for the sharded bundle epilogue.
+//!
+//! PR 1 left three serial O(touched) phases at the end of every bundle
+//! iteration: the chunk-arena `dᵀx` merge, the touched-list pack, and the
+//! `LossState::apply_step` commit. All three become `parallel_for` regions
+//! over the *ranges* of this partition: contiguous, equally sized spans of
+//! sample-index space, so two different ranges can never name the same
+//! sample and range-parallel mutation is contention-free by construction
+//! (the sharding idea of Scherrer et al. 2012 / Richtárik & Takáč 2012,
+//! applied to the paper's maintained quantities).
+//!
+//! Determinism: the partition is a pure function of `(samples, degree)` —
+//! the *logical* parallel degree from `TrainOptions::parallel_degree`, not
+//! the physical pool width — so a run replays bit-for-bit on any machine,
+//! and per-range work is combined in fixed range order.
+
+/// Number of ranges per unit of parallel degree. Oversubscribing gives the
+/// static schedule slack to balance ranges whose touched samples cluster,
+/// while keeping the partition a pure function of `degree`.
+const RANGE_OVERSUB: usize = 4;
+
+/// A fixed partition of `0..samples` into `n_ranges` contiguous spans of
+/// width `span` (the last may be ragged). `degree <= 1` collapses to a
+/// single range — the serial reference path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SampleRanges {
+    samples: usize,
+    span: usize,
+    n_ranges: usize,
+}
+
+impl SampleRanges {
+    /// Partition `samples` for logical parallel `degree`. The range count is
+    /// `min(RANGE_OVERSUB·degree, samples)` (at least 1), so it depends only
+    /// on the arguments — never on the physical pool width.
+    pub fn new(samples: usize, degree: usize) -> Self {
+        if degree <= 1 || samples <= 1 {
+            return Self::serial(samples);
+        }
+        let n = (degree * RANGE_OVERSUB).clamp(1, samples);
+        let span = samples.div_ceil(n).max(1);
+        // Recompute the count from the span so ranges tile exactly.
+        let n_ranges = samples.div_ceil(span).max(1);
+        SampleRanges {
+            samples,
+            span,
+            n_ranges,
+        }
+    }
+
+    /// The single-range partition (serial epilogue).
+    pub fn serial(samples: usize) -> Self {
+        SampleRanges {
+            samples,
+            span: samples.max(1),
+            n_ranges: 1,
+        }
+    }
+
+    /// Number of ranges.
+    #[inline]
+    pub fn n_ranges(&self) -> usize {
+        self.n_ranges
+    }
+
+    /// Total samples covered.
+    #[inline]
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// Which range a sample index falls in.
+    #[inline]
+    pub fn of(&self, i: u32) -> usize {
+        if self.n_ranges == 1 {
+            0
+        } else {
+            i as usize / self.span
+        }
+    }
+
+    /// Half-open sample-index bounds `[lo, hi)` of range `r`.
+    #[inline]
+    pub fn bounds(&self, r: usize) -> (usize, usize) {
+        debug_assert!(r < self.n_ranges);
+        let lo = r * self.span;
+        let hi = self.samples.min(lo + self.span);
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_is_one_range() {
+        let p = SampleRanges::new(100, 1);
+        assert_eq!(p.n_ranges(), 1);
+        assert_eq!(p.bounds(0), (0, 100));
+        assert_eq!(p.of(0), 0);
+        assert_eq!(p.of(99), 0);
+    }
+
+    #[test]
+    fn ranges_tile_sample_space_exactly() {
+        for samples in [1usize, 2, 7, 100, 1000, 12_345] {
+            for degree in [1usize, 2, 3, 4, 8, 64] {
+                let p = SampleRanges::new(samples, degree);
+                let mut covered = 0usize;
+                for r in 0..p.n_ranges() {
+                    let (lo, hi) = p.bounds(r);
+                    assert_eq!(lo, covered, "gap before range {r}");
+                    assert!(hi > lo, "empty range {r} ({samples} x {degree})");
+                    covered = hi;
+                }
+                assert_eq!(covered, samples, "ranges must tile 0..samples");
+            }
+        }
+    }
+
+    #[test]
+    fn of_matches_bounds() {
+        let p = SampleRanges::new(1000, 4);
+        for i in 0..1000u32 {
+            let r = p.of(i);
+            let (lo, hi) = p.bounds(r);
+            assert!((i as usize) >= lo && (i as usize) < hi);
+        }
+    }
+
+    #[test]
+    fn independent_of_anything_but_inputs() {
+        // Pure function of (samples, degree): repeated construction agrees.
+        let a = SampleRanges::new(5000, 6);
+        let b = SampleRanges::new(5000, 6);
+        assert_eq!(a, b);
+        // More degree, at least as many ranges.
+        assert!(SampleRanges::new(5000, 8).n_ranges() >= a.n_ranges());
+        // Never more ranges than samples.
+        assert!(SampleRanges::new(3, 64).n_ranges() <= 3);
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let p = SampleRanges::new(0, 4);
+        assert_eq!(p.n_ranges(), 1);
+        let p1 = SampleRanges::new(1, 16);
+        assert_eq!(p1.n_ranges(), 1);
+        assert_eq!(p1.bounds(0), (0, 1));
+    }
+}

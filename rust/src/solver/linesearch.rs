@@ -12,18 +12,34 @@
 //! the maintained per-sample quantities over the touched samples (Eq. 11
 //! for logistic), the ℓ1 part from the bundle's `(w_j, d_j)` pairs only
 //! (`d` is zero outside the bundle).
+//!
+//! [`DxScratch`] — the scratch that carries the bundle direction's sample
+//! image `dᵀx_i` from the direction pass into the search and the commit —
+//! is *range-sharded*: touched sample ids are bucketed by the fixed
+//! [`SampleRanges`] partition, so the per-bundle epilogue (chunk-arena
+//! merge, flat pack, Armijo probes, `apply_step` commit) runs as
+//! `parallel_for` regions over disjoint sample ranges with a deterministic
+//! per-range chunk order, instead of a serial O(touched) fold.
 
 use crate::loss::LossState;
-use crate::parallel::pool::WorkerPool;
+use crate::parallel::pool::{SendPtr, WorkerPool};
+use crate::parallel::range::SampleRanges;
 
 use super::ArmijoParams;
 
 /// Below this many touched samples a pooled probe loses to its own barrier
 /// (~a few µs) and the probe runs serially even when a pool is available.
 /// At or above it, each probe is one `parallel_for_reduce` region with
-/// chunk partials combined in index order (deterministic for a given chunk
-/// count, independent of pool size).
+/// per-range partials combined in range order (deterministic for a given
+/// partition, independent of pool size).
 pub const PARALLEL_PROBE_MIN_TOUCHED: usize = 8192;
+
+/// Same cutoff for the epilogue's mutation phases (arena merge, pack, and
+/// `apply_step` commit): below it the serial loop beats a region barrier,
+/// at or above it each phase is one `parallel_for` over sample ranges.
+/// The gate depends only on deterministic touched counts, so it never
+/// breaks replayability.
+pub const PARALLEL_EPILOGUE_MIN_TOUCHED: usize = 8192;
 
 /// Outcome of one P-dimensional line search.
 #[derive(Clone, Copy, Debug)]
@@ -61,6 +77,40 @@ pub fn l1_delta(w_b: &[f64], d_b: &[f64], alpha: f64) -> f64 {
     acc
 }
 
+/// The shared backtracking loop: probe `α = β^q` until the Armijo test
+/// passes, with the loss part supplied by `loss_delta` (serial or pooled).
+fn backtrack<F>(
+    w_b: &[f64],
+    d_b: &[f64],
+    delta: f64,
+    params: &ArmijoParams,
+    l2: f64,
+    mut loss_delta: F,
+) -> LineSearchOutcome
+where
+    F: FnMut(f64) -> f64,
+{
+    debug_assert!(delta <= 1e-9, "Armijo called with non-descent Δ = {delta}");
+    let mut alpha = 1.0;
+    for q in 0..params.max_steps {
+        let obj_delta =
+            loss_delta(alpha) + l1_delta(w_b, d_b, alpha) + l2_delta(w_b, d_b, alpha, l2);
+        if obj_delta <= params.sigma * alpha * delta {
+            return LineSearchOutcome {
+                alpha,
+                steps: q + 1,
+                accepted: true,
+            };
+        }
+        alpha *= params.beta;
+    }
+    LineSearchOutcome {
+        alpha: 0.0,
+        steps: params.max_steps,
+        accepted: false,
+    }
+}
+
 /// Run the Armijo backtracking search.
 ///
 /// * `state` — loss state at the current `w` (not yet stepped);
@@ -71,8 +121,9 @@ pub fn l1_delta(w_b: &[f64], d_b: &[f64], alpha: f64) -> f64 {
 ///   descent direction; Lemma 1(c)).
 ///
 /// Returns the accepted step. Does **not** mutate `state`; callers commit
-/// with `state.apply_step(touched, dx, alpha)` afterwards so the direction
-/// pass and line search can share one parallel region (paper §3.1).
+/// with `state.apply_step(touched, dx, alpha)` (or its range-sharded
+/// variant) afterwards so the direction pass and line search can share one
+/// parallel region (paper §3.1).
 pub fn p_dim_armijo(
     state: &LossState<'_>,
     touched: &[u32],
@@ -120,43 +171,66 @@ pub fn p_dim_armijo_exec(
     pool: Option<&WorkerPool>,
     degree: usize,
 ) -> LineSearchOutcome {
-    debug_assert!(
-        delta <= 1e-9,
-        "Armijo called with non-descent Δ = {delta}"
-    );
     let pooled = pool.filter(|_| degree > 1 && touched.len() >= PARALLEL_PROBE_MIN_TOUCHED);
-    let n_chunks = degree.max(1).min(touched.len().max(1));
-    let chunk = touched.len().div_ceil(n_chunks.max(1)).max(1);
-    let mut alpha = 1.0;
-    for q in 0..params.max_steps {
-        let loss_delta = match pooled {
-            Some(pl) => pl.parallel_for_reduce(
-                n_chunks,
+    match pooled {
+        Some(pl) => {
+            let n_chunks = degree.max(1).min(touched.len().max(1));
+            let chunk = touched.len().div_ceil(n_chunks.max(1)).max(1);
+            backtrack(w_b, d_b, delta, params, l2, |alpha| {
+                pl.parallel_for_reduce(
+                    n_chunks,
+                    0.0f64,
+                    |ci, _wid| {
+                        let lo = ci * chunk;
+                        let hi = touched.len().min(lo + chunk);
+                        state.delta_loss(&touched[lo..hi], &dx[lo..hi], alpha)
+                    },
+                    |a, b| a + b,
+                )
+            })
+        }
+        None => backtrack(w_b, d_b, delta, params, l2, |alpha| {
+            state.delta_loss(touched, dx, alpha)
+        }),
+    }
+}
+
+/// Range-sharded variant of [`p_dim_armijo_exec`] used by the sharded
+/// epilogue: `offsets` are the per-range bounds of the packed
+/// `touched`/`dx` arrays (from [`DxScratch::pack_into`]), so each probe is
+/// one `parallel_for_reduce` whose chunks are exactly the sample ranges —
+/// the same region shape as the merge and the commit, with per-range
+/// partials combined in fixed range order.
+#[allow(clippy::too_many_arguments)]
+pub fn p_dim_armijo_sharded(
+    state: &LossState<'_>,
+    touched: &[u32],
+    dx: &[f64],
+    offsets: &[usize],
+    w_b: &[f64],
+    d_b: &[f64],
+    delta: f64,
+    params: &ArmijoParams,
+    l2: f64,
+    pool: Option<&WorkerPool>,
+) -> LineSearchOutcome {
+    debug_assert_eq!(offsets.last().copied().unwrap_or(0), touched.len());
+    let pooled = pool.filter(|_| offsets.len() > 2 && touched.len() >= PARALLEL_PROBE_MIN_TOUCHED);
+    match pooled {
+        Some(pl) => backtrack(w_b, d_b, delta, params, l2, |alpha| {
+            pl.parallel_for_reduce(
+                offsets.len() - 1,
                 0.0f64,
-                |ci, _wid| {
-                    let lo = ci * chunk;
-                    let hi = touched.len().min(lo + chunk);
+                |r, _wid| {
+                    let (lo, hi) = (offsets[r], offsets[r + 1]);
                     state.delta_loss(&touched[lo..hi], &dx[lo..hi], alpha)
                 },
                 |a, b| a + b,
-            ),
-            None => state.delta_loss(touched, dx, alpha),
-        };
-        let obj_delta =
-            loss_delta + l1_delta(w_b, d_b, alpha) + l2_delta(w_b, d_b, alpha, l2);
-        if obj_delta <= params.sigma * alpha * delta {
-            return LineSearchOutcome {
-                alpha,
-                steps: q + 1,
-                accepted: true,
-            };
-        }
-        alpha *= params.beta;
-    }
-    LineSearchOutcome {
-        alpha: 0.0,
-        steps: params.max_steps,
-        accepted: false,
+            )
+        }),
+        None => backtrack(w_b, d_b, delta, params, l2, |alpha| {
+            state.delta_loss(touched, dx, alpha)
+        }),
     }
 }
 
@@ -164,22 +238,44 @@ pub fn p_dim_armijo_exec(
 /// image `dᵀx_i` without clearing an s-length vector every iteration.
 ///
 /// Uses epoch stamping: `mark[i] == epoch` means `dx[i]` is live this
-/// iteration. `touched` lists the live indices in first-touch order.
+/// iteration. Touched ids are kept in per-range buckets (first-touch order
+/// within each bucket) following the scratch's [`SampleRanges`] partition,
+/// which is what lets the arena merge, the flat pack, and the commit run
+/// range-parallel without contention.
 pub struct DxScratch {
     dx: Vec<f64>,
     mark: Vec<u32>,
     epoch: u32,
-    touched: Vec<u32>,
+    ranges: SampleRanges,
+    /// Touched sample ids, bucketed by range (bucket `r` holds ids whose
+    /// `ranges.of(id) == r`, in first-touch order for this scratch).
+    buckets: Vec<Vec<u32>>,
+    n_touched: usize,
 }
 
 impl DxScratch {
+    /// Single-range scratch (the serial epilogue path).
     pub fn new(samples: usize) -> Self {
+        Self::with_ranges(SampleRanges::serial(samples))
+    }
+
+    /// Scratch sharded by an explicit partition. All scratches that take
+    /// part in one merge must share the same partition.
+    pub fn with_ranges(ranges: SampleRanges) -> Self {
+        let samples = ranges.samples();
         DxScratch {
             dx: vec![0.0; samples],
             mark: vec![0; samples],
             epoch: 0,
-            touched: Vec::new(),
+            ranges,
+            buckets: vec![Vec::new(); ranges.n_ranges()],
+            n_touched: 0,
         }
+    }
+
+    /// The partition this scratch is sharded by.
+    pub fn ranges(&self) -> SampleRanges {
+        self.ranges
     }
 
     /// Begin a new bundle iteration.
@@ -190,7 +286,10 @@ impl DxScratch {
             self.mark.fill(0);
             self.epoch = 1;
         }
-        self.touched.clear();
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.n_touched = 0;
     }
 
     /// Accumulate `d_j · x^j` (one feature's contribution).
@@ -200,65 +299,148 @@ impl DxScratch {
             let i = *r as usize;
             debug_assert!(i < self.mark.len());
             // SAFETY: CSC row indices are < rows == mark.len() == dx.len()
-            // (validated at matrix construction); §Perf hot loop.
+            // (validated at matrix construction). Hot loop — the unchecked
+            // gathers remove the bounds checks that dominate per-nnz cost.
             unsafe {
                 if *self.mark.get_unchecked(i) != self.epoch {
                     *self.mark.get_unchecked_mut(i) = self.epoch;
                     *self.dx.get_unchecked_mut(i) = 0.0;
-                    self.touched.push(*r);
+                    let b = self.ranges.of(*r);
+                    self.buckets.get_unchecked_mut(b).push(*r);
+                    self.n_touched += 1;
                 }
                 *self.dx.get_unchecked_mut(i) += d_j * v;
             }
         }
     }
 
-    /// Finish accumulation: returns (touched sample ids, their `dᵀx_i`).
-    pub fn view(&self) -> (&[u32], Vec<f64>) {
-        let vals: Vec<f64> = self
-            .touched
-            .iter()
-            .map(|&i| self.dx[i as usize])
-            .collect();
-        (&self.touched, vals)
-    }
-
-    /// Touched sample ids in first-touch order.
-    pub fn touched(&self) -> &[u32] {
-        &self.touched
-    }
-
-    /// Gather the touched samples' `dᵀx_i` into a reusable buffer
-    /// (allocation-free once `out` has warmed up to its working capacity).
-    pub fn gather_into(&self, out: &mut Vec<f64>) {
-        out.clear();
-        out.extend(self.touched.iter().map(|&i| self.dx[i as usize]));
-    }
-
-    /// Fold another scratch's accumulated image into this one. Used to
-    /// combine per-chunk arenas after a fused direction + `dᵀx` region:
-    /// merging chunk arenas in chunk order keeps both the touched order and
-    /// the per-sample summation order deterministic.
-    pub fn merge_from(&mut self, other: &DxScratch) {
-        debug_assert_eq!(self.dx.len(), other.dx.len());
-        for &r in &other.touched {
-            let i = r as usize;
-            let v = other.dx[i];
-            // SAFETY: touched ids come from validated CSC row indices, all
-            // < rows == mark.len() == dx.len(); §Perf hot loop.
-            unsafe {
-                if *self.mark.get_unchecked(i) != self.epoch {
-                    *self.mark.get_unchecked_mut(i) = self.epoch;
-                    *self.dx.get_unchecked_mut(i) = 0.0;
-                    self.touched.push(r);
+    /// Fold per-chunk arenas into this scratch, one `parallel_for` over the
+    /// sample ranges (serial loop over ranges when `pool` is `None`).
+    ///
+    /// Determinism: range `r` merges the arenas' `r`-buckets in arena
+    /// (= chunk) order, so both the touched order (range-major, chunk order
+    /// within a range) and the per-sample summation order (chunk order) are
+    /// fixed by the partition — independent of pool width or timing. The
+    /// pooled and serial merges are bitwise identical.
+    pub fn merge_arenas(&mut self, arenas: &[DxScratch], pool: Option<&WorkerPool>) {
+        for a in arenas {
+            debug_assert_eq!(a.ranges, self.ranges, "arena partition mismatch");
+            debug_assert_eq!(a.dx.len(), self.dx.len());
+        }
+        let nr = self.ranges.n_ranges();
+        let epoch = self.epoch;
+        match pool {
+            Some(pl) if nr > 1 => {
+                let dx_ptr = SendPtr::new(self.dx.as_mut_ptr());
+                let mark_ptr = SendPtr::new(self.mark.as_mut_ptr());
+                let buckets_ptr = SendPtr::new(self.buckets.as_mut_ptr());
+                pl.parallel_for(nr, move |r, _wid| {
+                    // SAFETY: range r exclusively owns bucket r and the
+                    // disjoint span of dx/mark indices the partition maps
+                    // to r; the region barrier completes before the main
+                    // thread touches any of these buffers again.
+                    let bucket = unsafe { &mut *buckets_ptr.get().add(r) };
+                    for arena in arenas {
+                        for &id in &arena.buckets[r] {
+                            let i = id as usize;
+                            unsafe {
+                                if *mark_ptr.get().add(i) != epoch {
+                                    *mark_ptr.get().add(i) = epoch;
+                                    *dx_ptr.get().add(i) = 0.0;
+                                    bucket.push(id);
+                                }
+                                *dx_ptr.get().add(i) += *arena.dx.get_unchecked(i);
+                            }
+                        }
+                    }
+                });
+            }
+            _ => {
+                for r in 0..nr {
+                    for arena in arenas {
+                        for &id in &arena.buckets[r] {
+                            let i = id as usize;
+                            if self.mark[i] != epoch {
+                                self.mark[i] = epoch;
+                                self.dx[i] = 0.0;
+                                self.buckets[r].push(id);
+                            }
+                            self.dx[i] += arena.dx[i];
+                        }
+                    }
                 }
-                *self.dx.get_unchecked_mut(i) += v;
+            }
+        }
+        self.n_touched = self.buckets.iter().map(Vec::len).sum();
+    }
+
+    /// Flatten the buckets into packed `(touched, dx)` arrays plus the
+    /// per-range offsets (`offsets[r]..offsets[r + 1]` is range `r`'s
+    /// slice), one `parallel_for` over the ranges. The packed order is
+    /// range-major and identical between the pooled and serial paths.
+    /// Buffers are reused allocation-free once warmed up.
+    pub fn pack_into(
+        &self,
+        touched_out: &mut Vec<u32>,
+        dx_out: &mut Vec<f64>,
+        offsets_out: &mut Vec<usize>,
+        pool: Option<&WorkerPool>,
+    ) {
+        let nr = self.ranges.n_ranges();
+        offsets_out.clear();
+        offsets_out.reserve(nr + 1);
+        let mut total = 0usize;
+        offsets_out.push(0);
+        for b in &self.buckets {
+            total += b.len();
+            offsets_out.push(total);
+        }
+        // resize (not clear + resize): every slot below `total` is
+        // overwritten, so warm buffers never re-zero their prefix.
+        touched_out.resize(total, 0);
+        dx_out.resize(total, 0.0);
+        match pool {
+            Some(pl) if nr > 1 && total > 0 => {
+                let offsets: &[usize] = offsets_out;
+                let t_ptr = SendPtr::new(touched_out.as_mut_ptr());
+                let d_ptr = SendPtr::new(dx_out.as_mut_ptr());
+                pl.parallel_for(nr, move |r, _wid| {
+                    let mut k = offsets[r];
+                    for &id in &self.buckets[r] {
+                        // SAFETY: range r writes exactly the disjoint slice
+                        // [offsets[r], offsets[r+1]); the region barrier
+                        // completes before the buffers are read.
+                        unsafe {
+                            *t_ptr.get().add(k) = id;
+                            *d_ptr.get().add(k) = *self.dx.get_unchecked(id as usize);
+                        }
+                        k += 1;
+                    }
+                });
+            }
+            _ => {
+                let mut k = 0usize;
+                for b in &self.buckets {
+                    for &id in b {
+                        touched_out[k] = id;
+                        dx_out[k] = self.dx[id as usize];
+                        k += 1;
+                    }
+                }
             }
         }
     }
 
+    /// Convenience pack for tests and one-shot callers.
+    pub fn pack(&self) -> (Vec<u32>, Vec<f64>, Vec<usize>) {
+        let (mut t, mut d, mut o) = (Vec::new(), Vec::new(), Vec::new());
+        self.pack_into(&mut t, &mut d, &mut o, None);
+        (t, d, o)
+    }
+
     /// Number of touched samples this iteration.
     pub fn touched_len(&self) -> usize {
-        self.touched.len()
+        self.n_touched
     }
 }
 
@@ -309,8 +491,8 @@ mod tests {
             w_b.push(w[j]);
             d_b.push(d);
         }
-        let (touched, dx) = scratch.view();
-        (touched.to_vec(), dx, w_b, d_b, delta)
+        let (touched, dx, _offsets) = scratch.pack();
+        (touched, dx, w_b, d_b, delta)
     }
 
     #[test]
@@ -468,23 +650,25 @@ mod tests {
         s.reset();
         s.accumulate(&[0, 2], &[1.0, 2.0], 0.5);
         s.accumulate(&[2, 4], &[3.0, 4.0], 1.0);
-        let (touched, dx) = s.view();
-        assert_eq!(touched, &[0, 2, 4]);
+        let (touched, dx, offsets) = s.pack();
+        assert_eq!(touched, vec![0, 2, 4]);
         assert_eq!(dx, vec![0.5, 1.0 + 3.0, 4.0]);
+        assert_eq!(offsets, vec![0, 3]);
         // Next epoch starts clean.
         s.reset();
         assert_eq!(s.touched_len(), 0);
         s.accumulate(&[1], &[1.0], -2.0);
-        let (touched, dx) = s.view();
-        assert_eq!(touched, &[1]);
+        let (touched, dx, _) = s.pack();
+        assert_eq!(touched, vec![1]);
         assert_eq!(dx, vec![-2.0]);
     }
 
     #[test]
     fn dx_scratch_merge_matches_serial_accumulation() {
         // Serial: features 0..4 accumulated in order. Chunked: features
-        // split over two arenas, merged in chunk order — same touched order
-        // and same per-sample sums.
+        // split over two arenas, merged in chunk order — same per-sample
+        // sums (bitwise: summation stays in chunk order) and, with a single
+        // range, the same touched order.
         let rows: [&[u32]; 4] = [&[0, 2], &[1, 2], &[2, 3], &[0, 3]];
         let vals: [&[f64]; 4] = [&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0], &[7.0, 8.0]];
         let ds = [0.5, -1.0, 2.0, 0.25];
@@ -507,19 +691,151 @@ mod tests {
         }
         let mut merged = DxScratch::new(5);
         merged.reset();
-        merged.merge_from(&a);
-        merged.merge_from(&b);
+        merged.merge_arenas(&[a, b], None);
 
-        assert_eq!(serial.touched(), merged.touched());
-        let (mut sv, mut mv) = (Vec::new(), Vec::new());
-        serial.gather_into(&mut sv);
-        merged.gather_into(&mut mv);
+        let (st, sv, _) = serial.pack();
+        let (mt, mv, _) = merged.pack();
+        assert_eq!(st, mt);
         assert_eq!(sv, mv);
     }
 
     #[test]
+    fn sharded_merge_and_pack_match_serial() {
+        // The real epilogue shape: a multi-range partition, per-chunk
+        // arenas, pooled merge + pack. The pooled path must be bitwise
+        // identical to the serial (pool = None) path, and the per-sample
+        // image must equal a straight serial accumulation.
+        let d = generate(
+            &SyntheticSpec {
+                samples: 500,
+                features: 64,
+                nnz_per_row: 12,
+                ..Default::default()
+            },
+            9,
+        );
+        let bundle: Vec<usize> = (0..64).collect();
+        let degree = 3usize;
+        let ranges = SampleRanges::new(d.samples(), degree);
+        assert!(ranges.n_ranges() > 1);
+        let pool = WorkerPool::new(2); // physical width ≠ degree on purpose
+
+        // Per-chunk arenas, chunked like the direction pass.
+        let chunk = bundle.len().div_ceil(degree);
+        let mut arenas: Vec<DxScratch> =
+            (0..degree).map(|_| DxScratch::with_ranges(ranges)).collect();
+        for (ci, arena) in arenas.iter_mut().enumerate() {
+            arena.reset();
+            let lo = ci * chunk;
+            let hi = bundle.len().min(lo + chunk);
+            for &j in &bundle[lo..hi] {
+                let (ri, v) = d.x.col(j);
+                arena.accumulate(ri, v, 0.01 * (j as f64 + 1.0));
+            }
+        }
+
+        let mut pooled = DxScratch::with_ranges(ranges);
+        pooled.reset();
+        pooled.merge_arenas(&arenas, Some(&pool));
+        let mut serial = DxScratch::with_ranges(ranges);
+        serial.reset();
+        serial.merge_arenas(&arenas, None);
+
+        let (mut pt, mut pv, mut po) = (Vec::new(), Vec::new(), Vec::new());
+        pooled.pack_into(&mut pt, &mut pv, &mut po, Some(&pool));
+        let (st, sv, so) = serial.pack();
+        assert_eq!(pt, st, "pooled/serial touched order must match");
+        assert_eq!(po, so);
+        for (a, b) in pv.iter().zip(&sv) {
+            assert_eq!(a.to_bits(), b.to_bits(), "merge must be bitwise stable");
+        }
+
+        // And the image equals a straight serial accumulation per sample.
+        let mut flat = DxScratch::new(d.samples());
+        flat.reset();
+        for &j in &bundle {
+            let (ri, v) = d.x.col(j);
+            flat.accumulate(ri, v, 0.01 * (j as f64 + 1.0));
+        }
+        assert_eq!(flat.touched_len(), pooled.touched_len());
+        let (ft, fv, _) = flat.pack();
+        let by_id: std::collections::HashMap<u32, f64> =
+            ft.iter().copied().zip(fv.iter().copied()).collect();
+        for (id, v) in pt.iter().zip(&pv) {
+            assert_eq!(v.to_bits(), by_id[id].to_bits());
+        }
+        // Offsets respect the partition bounds.
+        for (r, w) in po.windows(2).enumerate() {
+            let (lo, hi) = ranges.bounds(r);
+            for &id in &pt[w[0]..w[1]] {
+                assert!((id as usize) >= lo && (id as usize) < hi);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_probe_matches_flat_probe() {
+        // Range-shaped probe chunks must reduce to the same sum as the flat
+        // serial probe up to FP association (and exactly equal the serial
+        // range-ordered fold).
+        let data = toy(42);
+        let state = LossState::new(Objective::Logistic, &data, 1.0);
+        let w = vec![0.0; data.features()];
+        let bundle: Vec<usize> = (0..10).collect();
+        let ranges = SampleRanges::new(data.samples(), 2);
+        let mut scratch = DxScratch::with_ranges(ranges);
+        scratch.reset();
+        let mut w_b = Vec::new();
+        let mut d_b = Vec::new();
+        let mut delta = 0.0;
+        for &j in &bundle {
+            let (g, h) = state.grad_hess_j(j);
+            let dir = newton_direction(g, h, w[j]);
+            delta += delta_contribution(g, h, w[j], dir, 0.0);
+            if dir != 0.0 {
+                let (ri, v) = data.x.col(j);
+                scratch.accumulate(ri, v, dir);
+            }
+            w_b.push(w[j]);
+            d_b.push(dir);
+        }
+        let (touched, dx, offsets) = scratch.pack();
+        let out = p_dim_armijo_sharded(
+            &state,
+            &touched,
+            &dx,
+            &offsets,
+            &w_b,
+            &d_b,
+            delta,
+            &ArmijoParams::default(),
+            0.0,
+            None,
+        );
+        assert!(out.accepted);
+        let pool = WorkerPool::new(2);
+        let pooled_probe = pool.parallel_for_reduce(
+            offsets.len() - 1,
+            0.0f64,
+            |r, _| {
+                let (lo, hi) = (offsets[r], offsets[r + 1]);
+                state.delta_loss(&touched[lo..hi], &dx[lo..hi], out.alpha)
+            },
+            |a, b| a + b,
+        );
+        let serial_fold: f64 = (0..offsets.len() - 1)
+            .map(|r| {
+                let (lo, hi) = (offsets[r], offsets[r + 1]);
+                state.delta_loss(&touched[lo..hi], &dx[lo..hi], out.alpha)
+            })
+            .sum();
+        assert_eq!(pooled_probe.to_bits(), serial_fold.to_bits());
+        let flat = state.delta_loss(&touched, &dx, out.alpha);
+        assert_close(pooled_probe, flat, 1e-12);
+    }
+
+    #[test]
     fn pooled_probe_matches_serial() {
-        use crate::parallel::pool::WorkerPool;
         let data = toy(42);
         let state = LossState::new(Objective::Logistic, &data, 1.0);
         let w = vec![0.0; data.features()];
@@ -563,7 +879,7 @@ mod tests {
         s.reset(); // wraps -> clears marks, epoch = 1
         assert_eq!(s.touched_len(), 0);
         s.accumulate(&[0], &[1.0], 2.0);
-        let (_, dx) = s.view();
+        let (_, dx, _) = s.pack();
         assert_eq!(dx, vec![2.0]);
     }
 }

@@ -14,14 +14,32 @@
 //!    [`DxScratch`] arena — so direction pass and the parallelizable slice
 //!    of the line search (footnote 3) cost exactly one implicit barrier per
 //!    bundle, matching §3.1.
-//! 2. **Deterministic merge** — chunk arenas fold into the bundle image in
-//!    chunk order; chunk boundaries follow `n_threads`, not the physical
-//!    pool width, so a run replays bit-for-bit on any machine.
+//! 2. **Range-sharded merge + pack (one region each)** — chunk arenas keep
+//!    their touched ids bucketed by a fixed [`SampleRanges`] partition
+//!    (sized off `degree`, never the physical pool width), so folding the
+//!    arenas into the bundle image and packing the flat `(touched, dᵀx)`
+//!    arrays are `parallel_for` regions over disjoint sample ranges. Range
+//!    `r` merges the arenas' `r`-buckets in chunk order, which pins both
+//!    the touched order and the per-sample summation order: a run replays
+//!    bit-for-bit on any machine, and the pooled and serial epilogues are
+//!    bitwise identical.
 //! 3. **One `P`-dimensional Armijo search** (Alg. 4) on maintained
 //!    quantities — the step that guarantees global convergence for *any*
-//!    `P ∈ [1, n]`, unlike SCDN. Probes reduce over the same team when the
-//!    touched set is large enough to amortize a barrier.
-//! 4. **Commit** — `w_B`, margins, and factors update.
+//!    `P ∈ [1, n]`, unlike SCDN. Probes reduce over the same team in the
+//!    same region shape (per-range partials combined in range order) when
+//!    the touched set is large enough to amortize a barrier.
+//! 4. **Range-sharded commit (one region)** — `w_B` updates on the main
+//!    thread (O(P)), then margins and factors update through
+//!    `LossState::apply_step_sharded`, one `parallel_for` over the same
+//!    ranges; per-sample updates are independent, so the pooled commit is
+//!    bitwise equal to the serial `apply_step`.
+//!
+//! Cost model: with the spin-then-park pool barrier, a bundle costs one
+//! region for the fused direction + `dᵀx` pass plus one region per engaged
+//! epilogue phase (merge, pack, per-probe reduction, commit) — each phase
+//! engages the pool only past `PARALLEL_EPILOGUE_MIN_TOUCHED` /
+//! `PARALLEL_PROBE_MIN_TOUCHED` touched samples, so small bundles never
+//! trade a serial O(touched) loop for a slower barrier.
 //!
 //! With `n_threads <= 1` and no pool, every stage runs inline with zero
 //! barriers — the single-core reference path whose measured per-iteration
@@ -30,9 +48,10 @@
 use crate::data::Dataset;
 use crate::loss::{LossState, Objective};
 use crate::parallel::pool::SendPtr;
+use crate::parallel::range::SampleRanges;
 use crate::parallel::sim::IterRecord;
 use crate::solver::direction::{delta_contribution, newton_direction};
-use crate::solver::linesearch::{p_dim_armijo_exec, DxScratch};
+use crate::solver::linesearch::{p_dim_armijo_sharded, DxScratch, PARALLEL_EPILOGUE_MIN_TOUCHED};
 use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -90,11 +109,12 @@ impl Solver for Pcdn {
             state.reset_from(&w);
         }
         let mut rng = Pcg64::new(opts.seed);
-        let mut scratch = DxScratch::new(s);
         let mut slots: Vec<DirSlot> = vec![DirSlot::default(); p];
         let mut w_b: Vec<f64> = Vec::with_capacity(p);
         let mut d_b: Vec<f64> = Vec::with_capacity(p);
+        let mut touched_buf: Vec<u32> = Vec::new();
         let mut dx_buf: Vec<f64> = Vec::new();
+        let mut offsets: Vec<usize> = Vec::new();
         let mut monitor = RunMonitor::new();
         let mut records: Vec<IterRecord> = Vec::new();
         let mut inner_iters = 0usize;
@@ -108,9 +128,14 @@ impl Solver for Pcdn {
             Some(pl) => opts.parallel_degree(pl).max(1),
             None => 1,
         };
+        // The fixed sample-range partition behind the sharded epilogue:
+        // a pure function of (samples, degree), never of the physical pool
+        // width, so runs stay bitwise replayable.
+        let ranges = SampleRanges::new(s, degree);
+        let mut scratch = DxScratch::with_ranges(ranges);
         // Per-chunk scratch arenas, allocation-free after warm-up.
         let mut arenas: Vec<DxScratch> = if degree > 1 {
-            (0..degree).map(|_| DxScratch::new(s)).collect()
+            (0..degree).map(|_| DxScratch::with_ranges(ranges)).collect()
         } else {
             Vec::new()
         };
@@ -172,12 +197,16 @@ impl Solver for Pcdn {
                 }
                 let t_direction_total = t_dir.secs();
 
-                // ---- 2. deterministic merge + Δ / w_B / d_B assembly ------
+                // ---- 2. range-sharded merge + Δ / w_B / d_B assembly ------
                 let t_acc = Stopwatch::start();
+                // One region over sample ranges when the touched estimate
+                // amortizes the barrier; the serial fold is bitwise equal.
                 if n_chunks > 1 {
-                    for arena in &arenas[..n_chunks] {
-                        scratch.merge_from(arena);
-                    }
+                    let est: usize = arenas[..n_chunks].iter().map(DxScratch::touched_len).sum();
+                    let merge_pool = pool
+                        .as_ref()
+                        .filter(|_| est >= PARALLEL_EPILOGUE_MIN_TOUCHED);
+                    scratch.merge_arenas(&arenas[..n_chunks], merge_pool);
                 }
                 w_b.clear();
                 d_b.clear();
@@ -207,31 +236,41 @@ impl Solver for Pcdn {
                     continue;
                 }
 
-                // ---- 3. P-dimensional Armijo line search -------------------
+                // ---- 3. pack + P-dimensional Armijo line search -----------
                 let t_ls = Stopwatch::start();
-                scratch.gather_into(&mut dx_buf);
-                let touched = scratch.touched();
-                let outcome = p_dim_armijo_exec(
+                // The epilogue pool engages only past the touched cutoff;
+                // the gate reads deterministic counts, so replay is safe.
+                let epi_pool = pool
+                    .as_ref()
+                    .filter(|_| scratch.touched_len() >= PARALLEL_EPILOGUE_MIN_TOUCHED);
+                scratch.pack_into(&mut touched_buf, &mut dx_buf, &mut offsets, epi_pool);
+                let outcome = p_dim_armijo_sharded(
                     &state,
-                    touched,
+                    &touched_buf,
                     &dx_buf,
+                    &offsets,
                     &w_b,
                     &d_b,
                     delta,
                     &opts.armijo,
                     opts.l2_reg,
                     pool.as_ref(),
-                    degree,
                 );
                 let t_ls_serial = t_ls.secs();
                 ls_steps += outcome.steps;
 
-                // ---- 4. commit --------------------------------------------
+                // ---- 4. range-sharded commit ------------------------------
                 if outcome.accepted && outcome.alpha > 0.0 {
+                    let alpha = outcome.alpha;
                     for (k, &j) in bundle.iter().enumerate() {
-                        w[j] += outcome.alpha * d_b[k];
+                        w[j] += alpha * d_b[k];
                     }
-                    state.apply_step(touched, &dx_buf, outcome.alpha);
+                    match epi_pool {
+                        Some(pl) if offsets.len() > 2 => {
+                            state.apply_step_sharded(&touched_buf, &dx_buf, &offsets, alpha, pl);
+                        }
+                        _ => state.apply_step(&touched_buf, &dx_buf, alpha),
+                    }
                 }
 
                 if opts.record_iters {
@@ -430,6 +469,35 @@ mod tests {
         assert_eq!(r4.ls_steps, r4b.ls_steps);
         assert!(r1.converged && r4.converged);
         assert_close(r1.final_objective, r4.final_objective, 1e-6);
+    }
+
+    #[test]
+    fn sharded_epilogue_trajectory_matches_serial() {
+        // The range-sharded epilogue must track the serial epilogue step by
+        // step: across thread counts only the FP association of the chunk
+        // merge and probe partials differs (~1e-16 per op), so every trace
+        // point agrees to ≤ 1e-9 relative.
+        let d = toy(6);
+        let mut o1 = opts(16);
+        o1.n_threads = 1;
+        o1.trace_every = 1;
+        o1.stop = StopRule::MaxOuter(8);
+        o1.max_outer = 8;
+        let mut o4 = o1.clone();
+        o4.n_threads = 4;
+        let r1 = Pcdn::new().train(&d, Objective::Logistic, &o1);
+        let r4 = Pcdn::new().train(&d, Objective::Logistic, &o4);
+        assert_eq!(r1.trace.len(), r4.trace.len());
+        for (a, b) in r1.trace.iter().zip(&r4.trace) {
+            let tol = 1e-9 * a.objective.abs().max(1.0);
+            assert!(
+                (a.objective - b.objective).abs() <= tol,
+                "step {} diverged: {} vs {}",
+                a.outer_iter,
+                a.objective,
+                b.objective
+            );
+        }
     }
 
     #[test]

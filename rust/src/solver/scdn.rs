@@ -11,22 +11,31 @@
 //! * [`ScdnMode::Round`] (default, deterministic): each round snapshots the
 //!   state, computes `P̄` independent single-feature updates against the
 //!   snapshot (exactly what concurrent threads racing on shared state do in
-//!   the worst case), then applies them all. Deterministic given the seed,
-//!   so the divergence figures replay exactly.
+//!   the worst case), then applies them all. The commit accumulates the
+//!   accepted updates' sample image into a range-sharded [`DxScratch`] and
+//!   applies their *sum* in one (optionally pooled) `apply_step` — the
+//!   same stale-read model, with the per-round commit now a `parallel_for`
+//!   over disjoint sample ranges instead of a serial per-feature chain.
+//!   Deterministic given the seed — bitwise, at *any* thread count, since
+//!   every update is computed against the snapshot and the commit is
+//!   per-sample independent — so the divergence figures replay exactly.
 //! * [`ScdnMode::Atomic`]: real threads racing on shared atomic state —
 //!   margins and weights are `AtomicF64`s updated with the CAS loop the
 //!   paper mentions ("compare-and-swap implementation using inline
 //!   assembly" §5.1 — here `AtomicU64::compare_exchange_weak` on the f64
 //!   bit pattern). Nondeterministic; used to validate that the round-mode
-//!   behaviour matches genuinely racy execution.
+//!   behaviour matches genuinely racy execution. The racing team is sized
+//!   `min(P̄, hardware threads)`; virtual shotgun threads beyond the team
+//!   width serialize per worker (see `train_atomic`).
 
 use crate::data::Dataset;
 use crate::loss::logistic::{log1p_exp, sigmoid};
 use crate::loss::{LossState, Objective};
 use crate::parallel::pool::{AtomicF64Vec, SendPtr, WorkerPool};
+use crate::parallel::range::SampleRanges;
 use crate::parallel::sim::IterRecord;
 use crate::solver::direction::{delta_contribution, newton_direction};
-use crate::solver::linesearch::l1_delta;
+use crate::solver::linesearch::{l1_delta, DxScratch, PARALLEL_EPILOGUE_MIN_TOUCHED};
 use crate::solver::pcdn::finish;
 use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
 use crate::util::rng::Pcg64;
@@ -110,6 +119,14 @@ fn train_round(
     let mut feats: Vec<usize> = Vec::with_capacity(pbar);
     // (step, probes) per drawn feature; 0.0 step = rejected/zero direction.
     let mut slots: Vec<(f64, usize)> = vec![(0.0, 0); pbar];
+    // Range-sharded commit: the round's accepted updates accumulate into
+    // one sample image (partition fixed by degree, not pool width) and land
+    // as a single apply_step — pooled over disjoint ranges when large.
+    let ranges = SampleRanges::new(data.samples(), degree);
+    let mut commit = DxScratch::with_ranges(ranges);
+    let mut touched_buf: Vec<u32> = Vec::new();
+    let mut dx_buf: Vec<f64> = Vec::new();
+    let mut offsets: Vec<usize> = Vec::new();
 
     'outer: loop {
         outer += 1;
@@ -185,12 +202,26 @@ fn train_round(
             ls_steps += steps_this_round;
 
             // Apply all stale updates (the divergence mechanism: each was
-            // safe alone; their sum may overshoot).
+            // safe alone; their sum may overshoot). The accepted updates'
+            // sample image accumulates into the commit scratch and lands as
+            // one apply_step — a parallel_for over disjoint sample ranges
+            // when the touched set amortizes a region barrier.
             let t_apply = Stopwatch::start();
+            commit.reset();
             for &(j, step) in &updates {
                 w[j] += step;
                 let (ri, vals) = data.x.col(j);
-                state.apply_step(ri, vals, step);
+                commit.accumulate(ri, vals, step);
+            }
+            let epi_pool = pool
+                .as_ref()
+                .filter(|_| commit.touched_len() >= PARALLEL_EPILOGUE_MIN_TOUCHED);
+            commit.pack_into(&mut touched_buf, &mut dx_buf, &mut offsets, epi_pool);
+            match epi_pool {
+                Some(pl) if offsets.len() > 2 => {
+                    state.apply_step_sharded(&touched_buf, &dx_buf, &offsets, 1.0, pl)
+                }
+                _ => state.apply_step(&touched_buf, &dx_buf, 1.0),
             }
             let t_ls_serial = t_apply.secs();
 
@@ -324,10 +355,19 @@ fn train_atomic(
 
     // One persistent team of racing workers for the whole run. Each of the
     // P̄ "shotgun threads" is a region index; a region per outer iteration
-    // replaces the per-iteration scoped spawn/join storm.
-    let team = opts
-        .exec_pool()
-        .unwrap_or_else(|| WorkerPool::new(pbar));
+    // replaces the per-iteration scoped spawn/join storm. The team is sized
+    // `min(P̄, hardware threads)`: when P̄ exceeds the team width, the
+    // static schedule folds virtual shotgun threads `t ≡ wid (mod width)`
+    // onto one worker, where they run their update streams *sequentially*
+    // while still racing across workers — the CAS semantics and the per-`t`
+    // RNG draw schedule are unchanged, only the physical concurrency (and
+    // so the realizable staleness) is capped at the team width.
+    let team = opts.exec_pool().unwrap_or_else(|| {
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        WorkerPool::new(pbar.min(hw))
+    });
 
     while outer < opts.max_outer && monitor.sw.secs() < opts.max_secs {
         outer += 1;
@@ -526,6 +566,24 @@ mod tests {
         let a = Scdn::new().train(&d, Objective::Logistic, &opts(4));
         let b = Scdn::new().train(&d, Objective::Logistic, &opts(4));
         assert_eq!(a.w, b.w);
+    }
+
+    #[test]
+    fn round_mode_commit_thread_count_invariant() {
+        // Stale updates are computed against the round snapshot, the commit
+        // image accumulates in update order, and the committed per-sample
+        // arithmetic is independent — so round mode is bitwise identical at
+        // ANY thread count, not just repeatable at a fixed one.
+        let d = sparse_indep(7);
+        let mut o1 = opts(8);
+        o1.stop = StopRule::MaxOuter(25);
+        o1.max_outer = 25;
+        let mut o3 = o1.clone();
+        o3.n_threads = 3;
+        let a = Scdn::new().train(&d, Objective::Logistic, &o1);
+        let b = Scdn::new().train(&d, Objective::Logistic, &o3);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.ls_steps, b.ls_steps);
     }
 
     #[test]
