@@ -40,6 +40,7 @@ pub mod data;
 pub mod distributed;
 pub mod linalg;
 pub mod loss;
+pub mod oracle;
 pub mod parallel;
 pub mod runtime;
 pub mod solver;

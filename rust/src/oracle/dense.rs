@@ -1,0 +1,375 @@
+//! Dense, naive, maintained-quantity-free reference implementations of the
+//! objective, gradient, per-coordinate Newton subproblem, and the full CDN
+//! sweep — the differential oracle the fast solvers are checked against.
+//!
+//! Everything here recomputes from the raw data on every call: margins are
+//! re-derived from `w` per evaluation, the direction uses the
+//! soft-threshold *formulation* of Eq. 5 (algebraically equal to the
+//! three-case form in [`crate::solver::direction`], but implemented
+//! independently so a bug in either shows up as a disagreement), and each
+//! Armijo probe evaluates the full objective on a stepped copy of `w`.
+//! Deliberately O(n·nnz) per sweep — correctness is the only goal.
+
+use crate::data::Dataset;
+use crate::loss::logistic::{log1p_exp, sigmoid};
+use crate::loss::Objective;
+use crate::solver::ArmijoParams;
+
+/// Per-sample loss `φ(z; y)` at margin `z = wᵀx`.
+#[inline]
+pub fn sample_loss(obj: Objective, y: f64, z: f64) -> f64 {
+    match obj {
+        Objective::Logistic => log1p_exp(-y * z),
+        Objective::L2Svm => {
+            let b = 1.0 - y * z;
+            if b > 0.0 {
+                b * b
+            } else {
+                0.0
+            }
+        }
+        Objective::Lasso => (z - y) * (z - y),
+    }
+}
+
+/// Per-sample gradient factor `φ'(z; y)` (so `∇_j L = c·Σ_i φ'_i·x_ij`).
+#[inline]
+pub fn sample_grad_factor(obj: Objective, y: f64, z: f64) -> f64 {
+    match obj {
+        Objective::Logistic => -y * sigmoid(-y * z),
+        Objective::L2Svm => {
+            let b = 1.0 - y * z;
+            if b > 0.0 {
+                -2.0 * y * b
+            } else {
+                0.0
+            }
+        }
+        Objective::Lasso => 2.0 * (z - y),
+    }
+}
+
+/// Per-sample (generalized) second derivative `φ''(z; y)`.
+#[inline]
+pub fn sample_hess_factor(obj: Objective, y: f64, z: f64) -> f64 {
+    match obj {
+        Objective::Logistic => sigmoid(z) * sigmoid(-z),
+        Objective::L2Svm => {
+            if 1.0 - y * z > 0.0 {
+                2.0
+            } else {
+                0.0
+            }
+        }
+        Objective::Lasso => 2.0,
+    }
+}
+
+/// Margins `z = X·w`, accumulated column by column from the raw CSC data.
+pub fn margins(data: &Dataset, w: &[f64]) -> Vec<f64> {
+    assert_eq!(w.len(), data.features());
+    let mut z = vec![0.0f64; data.samples()];
+    for (j, &wj) in w.iter().enumerate() {
+        if wj == 0.0 {
+            continue;
+        }
+        let (ri, vals) = data.x.col(j);
+        for (r, v) in ri.iter().zip(vals) {
+            z[*r as usize] += wj * v;
+        }
+    }
+    z
+}
+
+/// Smooth part of the objective: `c·L(w) + λ₂/2·‖w‖²`, from scratch.
+pub fn dense_smooth(data: &Dataset, obj: Objective, c: f64, w: &[f64], l2: f64) -> f64 {
+    let z = margins(data, w);
+    let loss: f64 = z
+        .iter()
+        .zip(&data.y)
+        .map(|(&zi, &yi)| sample_loss(obj, yi, zi))
+        .sum();
+    c * loss + 0.5 * l2 * crate::linalg::norm2_sq(w)
+}
+
+/// Full objective `F(w) = c·L(w) + λ₂/2·‖w‖² + ‖w‖₁`, from scratch.
+pub fn dense_objective(data: &Dataset, obj: Objective, c: f64, w: &[f64], l2: f64) -> f64 {
+    dense_smooth(data, obj, c, w, l2) + crate::linalg::norm1(w)
+}
+
+/// Gradient of the smooth part, `∇(c·L)(w) + λ₂·w`, from scratch.
+pub fn dense_gradient(data: &Dataset, obj: Objective, c: f64, w: &[f64], l2: f64) -> Vec<f64> {
+    let z = margins(data, w);
+    let gf: Vec<f64> = z
+        .iter()
+        .zip(&data.y)
+        .map(|(&zi, &yi)| sample_grad_factor(obj, yi, zi))
+        .collect();
+    (0..data.features())
+        .map(|j| {
+            let (ri, vals) = data.x.col(j);
+            let mut g = 0.0;
+            for (r, v) in ri.iter().zip(vals) {
+                g += gf[*r as usize] * v;
+            }
+            c * g + l2 * w[j]
+        })
+        .collect()
+}
+
+/// `(∇_j, ∇²_jj)` of the smooth part at `w`, recomputed from the raw
+/// column and fresh margins (Hessian floored at `ν` like the fast path).
+pub fn dense_grad_hess_j(
+    data: &Dataset,
+    obj: Objective,
+    c: f64,
+    w: &[f64],
+    l2: f64,
+    j: usize,
+) -> (f64, f64) {
+    let z = margins(data, w);
+    let (ri, vals) = data.x.col(j);
+    let mut g = 0.0;
+    let mut h = 0.0;
+    for (r, v) in ri.iter().zip(vals) {
+        let i = *r as usize;
+        g += sample_grad_factor(obj, data.y[i], z[i]) * v;
+        h += sample_hess_factor(obj, data.y[i], z[i]) * v * v;
+    }
+    (c * g + l2 * w[j], (c * h).max(crate::loss::NU) + l2)
+}
+
+/// Soft-thresholding operator `S(x, t) = sign(x)·max(|x| − t, 0)`.
+#[inline]
+pub fn soft_threshold(x: f64, t: f64) -> f64 {
+    if x > t {
+        x - t
+    } else if x < -t {
+        x + t
+    } else {
+        0.0
+    }
+}
+
+/// The Eq. 5 one-dimensional Newton direction in its soft-threshold form:
+/// `d = S(w − g/h, 1/h) − w` minimizes `g·d + h·d²/2 + |w + d|`.
+/// Algebraically identical to
+/// [`newton_direction`](crate::solver::direction::newton_direction) but
+/// derived independently (substitute `u = w + d` and prox the quadratic).
+#[inline]
+pub fn reference_direction(g: f64, h: f64, w: f64) -> f64 {
+    soft_threshold(w - g / h, 1.0 / h) - w
+}
+
+/// Result of a reference-solver run ([`reference_cdn`], or
+/// [`ista`](crate::oracle::ista::ista)).
+#[derive(Clone, Debug)]
+pub struct OracleResult {
+    pub w: Vec<f64>,
+    /// `F(w)` via [`dense_objective`].
+    pub objective: f64,
+    /// Sweeps (CDN) or iterations (ISTA) performed.
+    pub iters: usize,
+    /// Whether the KKT stop fired before the iteration cap.
+    pub converged: bool,
+}
+
+/// Naive cyclic CDN: per feature, gradient/Hessian from fresh margins,
+/// the soft-threshold direction, and an Armijo backtracking search whose
+/// probes evaluate [`dense_objective`] on a stepped copy of `w`. Stops
+/// when the dense KKT residual (1-norm of the minimum-norm subgradient)
+/// falls to `eps` relative to its value at `w = 0`.
+///
+/// Deterministic (cyclic order, no RNG) and maintained-quantity-free:
+/// an independent second implementation of Algorithm 1 for differential
+/// testing, not a fast solver.
+pub fn reference_cdn(
+    data: &Dataset,
+    obj: Objective,
+    c: f64,
+    l2: f64,
+    eps: f64,
+    max_sweeps: usize,
+) -> OracleResult {
+    let n = data.features();
+    let armijo = ArmijoParams::default();
+    let mut w = vec![0.0f64; n];
+    let kkt0 = crate::oracle::kkt::kkt_residual_norm1(data, obj, c, &w, l2).max(1e-300);
+    let mut converged = kkt0 <= 1e-300;
+    let mut sweeps = 0usize;
+    while !converged && sweeps < max_sweeps {
+        sweeps += 1;
+        for j in 0..n {
+            let (g, h) = dense_grad_hess_j(data, obj, c, &w, l2, j);
+            let d = reference_direction(g, h, w[j]);
+            if d == 0.0 {
+                continue;
+            }
+            // Eq. 7 with γ = 0, restricted to coordinate j.
+            let delta = g * d + (w[j] + d).abs() - w[j].abs();
+            let f0 = dense_objective(data, obj, c, &w, l2);
+            let mut alpha = 1.0f64;
+            for _ in 0..armijo.max_steps {
+                let mut wt = w.clone();
+                wt[j] += alpha * d;
+                let ft = dense_objective(data, obj, c, &wt, l2);
+                if ft - f0 <= armijo.sigma * alpha * delta {
+                    w = wt;
+                    break;
+                }
+                alpha *= armijo.beta;
+            }
+        }
+        let kkt = crate::oracle::kkt::kkt_residual_norm1(data, obj, c, &w, l2);
+        converged = kkt <= eps * kkt0;
+    }
+    let objective = dense_objective(data, obj, c, &w, l2);
+    OracleResult {
+        w,
+        objective,
+        iters: sweeps,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::loss::LossState;
+    use crate::solver::direction::newton_direction;
+    use crate::testutil::prop::{prop_assert, prop_close, run_prop, Gen};
+    use crate::testutil::{assert_all_close, assert_close};
+
+    fn toy(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 40,
+                features: 18,
+                nnz_per_row: 5,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn dense_objective_matches_maintained_state() {
+        let d = toy(1);
+        let mut rng = crate::util::rng::Pcg64::new(7);
+        for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
+            let w: Vec<f64> = (0..d.features()).map(|_| 0.4 * rng.normal()).collect();
+            let mut st = LossState::new(obj, &d, 1.3);
+            st.reset_from(&w);
+            assert_close(
+                dense_objective(&d, obj, 1.3, &w, 0.0),
+                crate::solver::objective_value(&st, &w),
+                1e-10,
+            );
+            assert_close(
+                dense_objective(&d, obj, 1.3, &w, 0.7),
+                crate::solver::objective_value_l2(&st, &w, 0.7),
+                1e-10,
+            );
+        }
+    }
+
+    #[test]
+    fn dense_gradient_matches_maintained_state() {
+        let d = toy(2);
+        let mut rng = crate::util::rng::Pcg64::new(8);
+        for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
+            let w: Vec<f64> = (0..d.features()).map(|_| 0.3 * rng.normal()).collect();
+            let mut st = LossState::new(obj, &d, 0.8);
+            st.reset_from(&w);
+            let fast = st.full_gradient();
+            let dense = dense_gradient(&d, obj, 0.8, &w, 0.0);
+            assert_all_close(&dense, &fast, 1e-10);
+        }
+    }
+
+    #[test]
+    fn dense_grad_hess_matches_maintained_state() {
+        let d = toy(3);
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
+            let w: Vec<f64> = (0..d.features()).map(|_| 0.3 * rng.normal()).collect();
+            let mut st = LossState::new(obj, &d, 1.1);
+            st.reset_from(&w);
+            for j in [0usize, 5, 17] {
+                let (gf, hf) = st.grad_hess_j(j);
+                let (gd, hd) = dense_grad_hess_j(&d, obj, 1.1, &w, 0.0, j);
+                assert_close(gd, gf, 1e-10);
+                assert_close(hd, hf, 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_reference_direction_equals_eq5() {
+        // The soft-threshold form and the three-case form of Eq. 5 are the
+        // same function — differentially checked over an edgy input grid.
+        run_prop("soft-threshold direction == Eq. 5", 512, |g: &mut Gen| {
+            let grad = g.f64_edgy(10.0);
+            let h = g.f64_in(0.01..20.0);
+            let w = g.f64_edgy(5.0);
+            let a = reference_direction(grad, h, w);
+            let b = newton_direction(grad, h, w);
+            prop_close(a, b, 1e-12, "direction mismatch")
+        });
+    }
+
+    #[test]
+    fn reference_cdn_matches_fast_cdn_optimum() {
+        use crate::solver::{cdn::Cdn, Solver, StopRule, TrainOptions};
+        let d = toy(4);
+        for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
+            let oracle = reference_cdn(&d, obj, 0.7, 0.0, 1e-6, 2000);
+            assert!(oracle.converged, "{obj:?} oracle did not converge");
+            let fast = Cdn::new().train(
+                &d,
+                obj,
+                &TrainOptions {
+                    c: 0.7,
+                    stop: StopRule::SubgradRel(1e-6),
+                    max_outer: 3000,
+                    ..Default::default()
+                },
+            );
+            assert!(fast.converged, "{obj:?} fast CDN did not converge");
+            assert_close(oracle.objective, fast.final_objective, 1e-5);
+        }
+    }
+
+    #[test]
+    fn reference_cdn_trivial_at_tiny_c() {
+        // c → 0 makes w = 0 optimal; the oracle must detect it at sweep 0.
+        let d = toy(5);
+        let r = reference_cdn(&d, Objective::Logistic, 1e-9, 0.0, 1e-6, 100);
+        assert!(r.converged);
+        assert_eq!(r.iters, 0);
+        assert!(r.w.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn prop_margins_match_matvec() {
+        run_prop("naive margins == CSC matvec", 64, |g: &mut Gen| {
+            let d = generate(
+                &SyntheticSpec {
+                    samples: g.usize_in(1..40),
+                    features: g.usize_in(1..20),
+                    nnz_per_row: g.usize_in(1..6),
+                    ..Default::default()
+                },
+                g.rng().next_u64(),
+            );
+            let w: Vec<f64> = (0..d.features()).map(|_| g.f64_edgy(1.0)).collect();
+            let a = margins(&d, &w);
+            let b = d.x.matvec(&w);
+            for (x, y) in a.iter().zip(&b) {
+                prop_close(*x, *y, 1e-12, "margin mismatch")?;
+            }
+            prop_assert(a.len() == d.samples(), "length")
+        });
+    }
+}

@@ -1,0 +1,434 @@
+//! Reusable trajectory invariants: the paper's per-step guarantees as
+//! executable checks, run over a solver's [`Probe`] stream.
+//!
+//! Each [`Invariant`] sees the same [`StepInfo`]/[`OuterInfo`] events a
+//! probe does and returns `Err` with a human-readable violation when a
+//! guarantee breaks. [`InvariantSet`] bundles several invariants behind
+//! one [`Probe`] implementation and collects every violation, so a test
+//! attaches one handle and asserts [`InvariantSet::violations`] is empty
+//! afterwards.
+//!
+//! The invariants deliberately check against *independent* recomputation
+//! ([`dense`](crate::oracle::dense)), not against the maintained
+//! quantities that produced the step — that is the whole point: a drifted
+//! margin or a mis-merged `dᵀx` passes the solver's own arithmetic but
+//! fails the from-scratch evaluation here.
+
+use std::sync::Mutex;
+
+use crate::data::Dataset;
+use crate::loss::{LossState, Objective};
+use crate::oracle::{dense, kkt};
+use crate::solver::probe::{OuterInfo, Probe, StepInfo};
+use crate::solver::{StopRule, TrainOptions, TrainResult};
+
+/// One per-trajectory guarantee. Implementations are stateful (they track
+/// the previous point); [`InvariantSet`] serializes access.
+pub trait Invariant: Send {
+    fn name(&self) -> &'static str;
+    fn check_step(&mut self, _info: &StepInfo<'_, '_>) -> Result<(), String> {
+        Ok(())
+    }
+    fn check_outer(&mut self, _info: &OuterInfo<'_, '_>) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Armijo sufficient decrease (paper Eq. 9): every accepted step must
+/// satisfy `F(w + α·d) − F(w) ≤ σ·α·Δ`, with *both* objectives recomputed
+/// densely from raw data — not from the maintained quantities the solver
+/// used to accept the step. Applies to `Bundle` and `Feature` events
+/// (`Δ < 0`); `Round` events (see
+/// [`StepKind`](crate::solver::probe::StepKind)) carry `Δ = 0` and only
+/// reseed the reference point.
+pub struct ArmijoDecrease {
+    pub sigma: f64,
+    pub l2: f64,
+    /// Relative slack for the dense-vs-maintained FP difference.
+    pub tol: f64,
+    prev_objective: Option<f64>,
+}
+
+impl ArmijoDecrease {
+    pub fn new(sigma: f64, l2: f64) -> Self {
+        ArmijoDecrease {
+            sigma,
+            l2,
+            tol: 1e-9,
+            prev_objective: None,
+        }
+    }
+}
+
+impl Invariant for ArmijoDecrease {
+    fn name(&self) -> &'static str {
+        "armijo-decrease"
+    }
+
+    fn check_step(&mut self, info: &StepInfo<'_, '_>) -> Result<(), String> {
+        let st = info.state;
+        let f_now = dense::dense_objective(st.data(), st.objective(), st.c(), info.w, self.l2);
+        let res = match self.prev_objective {
+            Some(f_prev) if info.accepted && info.delta < 0.0 => {
+                let lhs = f_now - f_prev;
+                let rhs = self.sigma * info.alpha * info.delta;
+                if lhs <= rhs + self.tol * f_prev.abs().max(1.0) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "step {} (outer {}): dense F moved by {lhs:.6e}, Armijo bound \
+                         σαΔ = {rhs:.6e} (α = {}, Δ = {:.6e}, q = {})",
+                        info.inner, info.outer, info.alpha, info.delta, info.q_steps
+                    ))
+                }
+            }
+            _ => Ok(()),
+        };
+        self.prev_objective = Some(f_now);
+        res
+    }
+
+    fn check_outer(&mut self, info: &OuterInfo<'_, '_>) -> Result<(), String> {
+        // Seed the reference point from the outer-0 event (the start
+        // model), so the very first step is checked too.
+        if self.prev_objective.is_none() {
+            let st = info.state;
+            self.prev_objective = Some(dense::dense_objective(
+                st.data(),
+                st.objective(),
+                st.c(),
+                info.w,
+                self.l2,
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Monotone objective: `F` (as reported by the solver) never increases
+/// along the trajectory. Holds for PCDN/CDN (every accepted step passed an
+/// Armijo test; rejected steps leave `w` unchanged) and for TRON's outer
+/// sequence — but **not** for SCDN, whose aggregate stale rounds may
+/// overshoot; do not attach it to SCDN runs.
+pub struct MonotoneObjective {
+    pub tol: f64,
+    last: Option<f64>,
+}
+
+impl MonotoneObjective {
+    pub fn new() -> Self {
+        MonotoneObjective {
+            tol: 1e-9,
+            last: None,
+        }
+    }
+
+    fn observe(&mut self, objective: f64, what: &str) -> Result<(), String> {
+        let res = match self.last {
+            Some(prev) if objective > prev + self.tol * prev.abs().max(1.0) => Err(format!(
+                "{what}: objective rose {prev:.12e} -> {objective:.12e}"
+            )),
+            _ => Ok(()),
+        };
+        self.last = Some(objective);
+        res
+    }
+}
+
+impl Default for MonotoneObjective {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Invariant for MonotoneObjective {
+    fn name(&self) -> &'static str {
+        "monotone-objective"
+    }
+
+    fn check_step(&mut self, info: &StepInfo<'_, '_>) -> Result<(), String> {
+        // SCDN rounds may legitimately overshoot (stale aggregate steps —
+        // the divergence mechanism); monotonicity is only promised for
+        // line-searched Bundle/Feature steps. Rounds just reseed the
+        // reference point.
+        if info.kind == crate::solver::probe::StepKind::Round {
+            self.last = Some(info.objective);
+            return Ok(());
+        }
+        self.observe(
+            info.objective,
+            &format!("step {} (outer {})", info.inner, info.outer),
+        )
+    }
+
+    fn check_outer(&mut self, info: &OuterInfo<'_, '_>) -> Result<(), String> {
+        self.observe(info.objective, &format!("outer {}", info.outer))
+    }
+}
+
+/// Maintained-quantity drift: after every step, the live state's
+/// per-sample gradient factors and loss must match a from-scratch
+/// [`LossState::reset_from`] rebuild at the same `w` to within `tol`
+/// (the intermediate-quantity exactness of paper §3.1 / Alg. 4 step 5).
+pub struct MaintainedDrift {
+    pub tol: f64,
+}
+
+impl MaintainedDrift {
+    pub fn new() -> Self {
+        MaintainedDrift { tol: 1e-8 }
+    }
+}
+
+impl Default for MaintainedDrift {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Invariant for MaintainedDrift {
+    fn name(&self) -> &'static str {
+        "maintained-drift"
+    }
+
+    fn check_step(&mut self, info: &StepInfo<'_, '_>) -> Result<(), String> {
+        let st = info.state;
+        let mut fresh = LossState::new(st.objective(), st.data(), st.c());
+        fresh.reset_from(info.w);
+        let mut worst = 0.0f64;
+        let mut worst_i = 0usize;
+        for (i, (a, b)) in st
+            .grad_factors()
+            .iter()
+            .zip(fresh.grad_factors())
+            .enumerate()
+        {
+            let diff = (a - b).abs();
+            if diff > worst {
+                worst = diff;
+                worst_i = i;
+            }
+        }
+        if worst > self.tol {
+            return Err(format!(
+                "step {} (outer {}): grad factor drift {worst:.3e} at sample {worst_i} \
+                 (> {:.1e})",
+                info.inner, info.outer, self.tol
+            ));
+        }
+        let (li, lf) = (st.loss_value(), fresh.loss_value());
+        let diff = (li - lf).abs();
+        if diff > self.tol * lf.abs().max(1.0) {
+            return Err(format!(
+                "step {} (outer {}): loss drift {diff:.3e} (maintained {li}, fresh {lf})",
+                info.inner, info.outer
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Shrinking soundness: a run that reported convergence — with or without
+/// the shrinking heuristic — must satisfy the KKT conditions on *all*
+/// coordinates. Shrinking may skip features during optimization, but a
+/// feature it wrongly left shrunk shows up here as a residual the stop
+/// rule should not have tolerated. `slack` absorbs the (small, FP-level)
+/// difference between the dense residual and the solver's maintained one.
+pub fn check_shrinking_soundness(
+    data: &Dataset,
+    obj: Objective,
+    opts: &TrainOptions,
+    result: &TrainResult,
+    slack: f64,
+) -> Result<(), String> {
+    if !result.converged {
+        return Err("run did not converge; shrinking soundness is vacuous".into());
+    }
+    let eps = match opts.stop {
+        StopRule::SubgradRel(e) => e,
+        _ => 1e-3,
+    };
+    let rel = kkt::kkt_rel(data, obj, opts.c, &result.w, opts.l2_reg);
+    if rel <= eps * slack {
+        Ok(())
+    } else {
+        Err(format!(
+            "converged run has dense KKT residual rel {rel:.3e} > {eps:.1e} × slack {slack}"
+        ))
+    }
+}
+
+/// A set of invariants behind one [`Probe`]: dispatches every event to
+/// every invariant and collects the violations.
+pub struct InvariantSet {
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    invariants: Vec<Box<dyn Invariant>>,
+    violations: Vec<String>,
+}
+
+impl InvariantSet {
+    pub fn new(invariants: Vec<Box<dyn Invariant>>) -> Self {
+        InvariantSet {
+            inner: Mutex::new(Inner {
+                invariants,
+                violations: Vec::new(),
+            }),
+        }
+    }
+
+    /// The standard battery for a CDN-family (PCDN/CDN) run: Armijo
+    /// decrease, monotone objective, maintained-quantity drift.
+    pub fn standard(sigma: f64, l2: f64) -> Self {
+        Self::new(vec![
+            Box::new(ArmijoDecrease::new(sigma, l2)),
+            Box::new(MonotoneObjective::new()),
+            Box::new(MaintainedDrift::new()),
+        ])
+    }
+
+    /// Violations recorded so far (`"<invariant>: <detail>"` each).
+    pub fn violations(&self) -> Vec<String> {
+        self.inner.lock().unwrap().violations.clone()
+    }
+
+    /// Panic with every recorded violation (test helper).
+    #[track_caller]
+    pub fn assert_clean(&self) {
+        let v = self.violations();
+        assert!(
+            v.is_empty(),
+            "{} invariant violation(s):\n  {}",
+            v.len(),
+            v.join("\n  ")
+        );
+    }
+}
+
+impl Probe for InvariantSet {
+    fn on_step(&self, info: &StepInfo<'_, '_>) {
+        let mut inner = self.inner.lock().unwrap();
+        let Inner {
+            invariants,
+            violations,
+        } = &mut *inner;
+        for inv in invariants.iter_mut() {
+            if let Err(msg) = inv.check_step(info) {
+                violations.push(format!("{}: {msg}", inv.name()));
+            }
+        }
+    }
+
+    fn on_outer(&self, info: &OuterInfo<'_, '_>) {
+        let mut inner = self.inner.lock().unwrap();
+        let Inner {
+            invariants,
+            violations,
+        } = &mut *inner;
+        for inv in invariants.iter_mut() {
+            if let Err(msg) = inv.check_outer(info) {
+                violations.push(format!("{}: {msg}", inv.name()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::solver::probe::ProbeHandle;
+    use crate::solver::{cdn::Cdn, pcdn::Pcdn, Solver, TrainOptions};
+    use std::sync::Arc;
+
+    fn toy(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 60,
+                features: 24,
+                nnz_per_row: 5,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn standard_set_clean_on_pcdn_and_cdn() {
+        let d = toy(1);
+        for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
+            for threads in [1usize, 3] {
+                let set = Arc::new(InvariantSet::standard(0.01, 0.0));
+                let opts = TrainOptions {
+                    c: 1.0,
+                    bundle_size: 8,
+                    n_threads: threads,
+                    stop: StopRule::SubgradRel(1e-4),
+                    max_outer: 300,
+                    probe: Some(ProbeHandle(set.clone())),
+                    ..Default::default()
+                };
+                Pcdn::new().train(&d, obj, &opts);
+                set.assert_clean();
+            }
+            let set = Arc::new(InvariantSet::standard(0.01, 0.0));
+            let opts = TrainOptions {
+                c: 1.0,
+                stop: StopRule::SubgradRel(1e-4),
+                max_outer: 300,
+                probe: Some(ProbeHandle(set.clone())),
+                ..Default::default()
+            };
+            Cdn::new().train(&d, obj, &opts);
+            set.assert_clean();
+        }
+    }
+
+    #[test]
+    fn monotone_invariant_detects_a_rise() {
+        let mut inv = MonotoneObjective::new();
+        assert!(inv.observe(10.0, "a").is_ok());
+        assert!(inv.observe(9.0, "b").is_ok());
+        assert!(inv.observe(9.5, "c").is_err());
+        // Tolerance absorbs FP noise.
+        let mut inv = MonotoneObjective::new();
+        assert!(inv.observe(10.0, "a").is_ok());
+        assert!(inv.observe(10.0 + 1e-12, "b").is_ok());
+    }
+
+    #[test]
+    fn shrinking_soundness_on_converged_cdn() {
+        let d = toy(2);
+        let opts = TrainOptions {
+            c: 1.0,
+            shrinking: true,
+            stop: StopRule::SubgradRel(1e-5),
+            max_outer: 2000,
+            ..Default::default()
+        };
+        let r = Cdn::new().train(&d, Objective::Logistic, &opts);
+        assert!(r.converged);
+        check_shrinking_soundness(&d, Objective::Logistic, &opts, &r, 4.0)
+            .expect("shrinking left a KKT violation behind");
+    }
+
+    #[test]
+    fn shrinking_soundness_rejects_nonconverged_and_bad_points() {
+        let d = toy(3);
+        let opts = TrainOptions {
+            c: 1.0,
+            stop: StopRule::SubgradRel(1e-5),
+            max_outer: 2000,
+            ..Default::default()
+        };
+        let mut r = Cdn::new().train(&d, Objective::Logistic, &opts);
+        assert!(r.converged);
+        // Corrupt the model: the dense checker must notice.
+        r.w[0] += 10.0;
+        assert!(check_shrinking_soundness(&d, Objective::Logistic, &opts, &r, 4.0).is_err());
+        r.converged = false;
+        assert!(check_shrinking_soundness(&d, Objective::Logistic, &opts, &r, 4.0).is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! Differential-oracle conformance layer: independent reference
+//! implementations and optimality checks that the fast solver family is
+//! validated against.
+//!
+//! The PCDN/CDN/SCDN hot paths never evaluate the objective from raw data
+//! — they live entirely on maintained per-sample quantities (§3.1), which
+//! is exactly what makes them fast *and* what makes silent corruption
+//! possible under aggressive refactoring (a mis-merged `dᵀx` arena or a
+//! drifted margin still produces plausible-looking descent). This module
+//! is the antidote, three independent lines of defence:
+//!
+//! * [`dense`] — naive, maintained-quantity-free recomputation of the
+//!   objective, gradient, per-coordinate subproblem (soft-threshold form
+//!   of Eq. 5), and a from-scratch cyclic CDN
+//!   ([`dense::reference_cdn`]) as a second implementation of Alg. 1;
+//! * [`ista`] — proximal gradient with backtracking: an algorithmically
+//!   unrelated solver giving a second opinion on the optimum;
+//! * [`kkt`] — the minimum-norm-subgradient residual of
+//!   `F = c·L + ‖·‖₁ (+ λ₂/2‖·‖²)`, so "converged" is asserted against
+//!   the first-order optimality conditions, not a solver's own stop rule;
+//! * [`invariant`] — the paper's per-step guarantees (Armijo sufficient
+//!   decrease, monotone objective, maintained-quantity exactness) as
+//!   reusable [`Invariant`](invariant::Invariant) checks driven by the
+//!   solver [`Probe`](crate::solver::probe::Probe) stream.
+//!
+//! `rust/tests/conformance.rs` runs the property-driven campaign that ties
+//! them together: hundreds of generated (dataset × loss × λ × `P` ×
+//! thread-count) cases, each asserting agreement with both oracles, a KKT
+//! residual at tolerance, and a clean invariant stream — every failure
+//! reporting a seed that replays the exact case.
+
+pub mod dense;
+pub mod invariant;
+pub mod ista;
+pub mod kkt;

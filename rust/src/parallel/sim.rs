@@ -203,4 +203,99 @@ mod tests {
         let p = SimParams::default();
         assert_eq!(iter_time(&rec(0, 0.0, 0.0, 0.0, 0), &p), 0.0);
     }
+
+    #[test]
+    fn prop_total_time_nonincreasing_in_threads() {
+        // Eq. 20 as a property: for ANY recorded run, simulated total time
+        // never increases with #thread (the parallel span can only shrink;
+        // the serial part and the barrier are thread-count independent).
+        use crate::testutil::prop::{prop_assert, run_prop, Gen};
+        run_prop("simulated time non-increasing in #thread", 64, |g: &mut Gen| {
+            let recs: Vec<IterRecord> = (0..g.usize_in(1..8))
+                .map(|_| {
+                    rec(
+                        g.usize_in(1..300),
+                        g.f64_in(0.0..2.0),
+                        g.f64_in(0.0..1.0),
+                        g.f64_in(0.0..0.5),
+                        g.usize_in(1..6),
+                    )
+                })
+                .collect();
+            let barrier = g.f64_in(0.0..1e-4);
+            let mut last = f64::INFINITY;
+            for t in [1usize, 2, 3, 4, 8, 16, 23, 64, 512] {
+                let p = SimParams {
+                    n_threads: t,
+                    barrier_secs: barrier,
+                };
+                let now = total_time(&recs, &p);
+                prop_assert(
+                    now <= last + 1e-12 * last.abs().max(1.0),
+                    &format!("total time rose at {t} threads: {last} -> {now}"),
+                )?;
+                last = now;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ceil_staircase_at_thread_boundaries() {
+        // The span term is per-item cost × ceil(P/#thread): flat between
+        // consecutive divisor boundaries, dropping exactly when the ceil
+        // does. For P = 12: threads 4 and 5 share ceil = 3; thread 6 drops
+        // to ceil = 2; 7..11 stay at 2; 12 drops to 1.
+        let r = rec(12, 12.0, 0.0, 0.0, 1);
+        let t = |n| {
+            iter_time(
+                &r,
+                &SimParams {
+                    n_threads: n,
+                    barrier_secs: 0.0,
+                },
+            )
+        };
+        assert!((t(4) - 3.0).abs() < 1e-12);
+        assert!((t(5) - 3.0).abs() < 1e-12, "flat inside the ceil bucket");
+        assert!((t(6) - 2.0).abs() < 1e-12, "drop at the divisor boundary");
+        assert!((t(7) - 2.0).abs() < 1e-12);
+        assert!((t(11) - 2.0).abs() < 1e-12);
+        assert!((t(12) - 1.0).abs() < 1e-12);
+        assert!((t(1000) - 1.0).abs() < 1e-12, "floor at one item per thread");
+        // Exhaustive staircase: value is exactly per_item · ceil(12/t).
+        for n in 1..=24usize {
+            let expect = 12.0 / 12.0 * 12usize.div_ceil(n) as f64;
+            assert!((t(n) - expect).abs() < 1e-12, "thread count {n}");
+        }
+    }
+
+    #[test]
+    fn sync_overhead_dominates_as_regions_shrink() {
+        // Fix a per-feature cost and a realistic barrier; as the bundle
+        // (region) shrinks, the constant barrier term takes over the
+        // simulated iteration — the Eq. 20 reason small bundles must not
+        // engage the pool. The barrier share must grow monotonically as P
+        // falls, and exceed 90% for single-feature regions.
+        let per_item = 1e-6;
+        let p = SimParams {
+            n_threads: 23,
+            barrier_secs: 2e-5,
+        };
+        let mut last_share = 0.0;
+        for bundle in [4096usize, 1024, 256, 64, 16, 4, 1] {
+            let r = rec(bundle, per_item * bundle as f64, 0.0, 0.0, 1);
+            let total = iter_time(&r, &p);
+            let share = p.barrier_secs / total;
+            assert!(
+                share >= last_share - 1e-12,
+                "barrier share fell as the region shrank: {last_share} -> {share} at {bundle}"
+            );
+            last_share = share;
+        }
+        assert!(
+            last_share > 0.9,
+            "barrier must dominate a 1-feature region (share {last_share})"
+        );
+    }
 }

@@ -45,7 +45,7 @@ pub fn train_dense_pjrt(
     // Native state only for stopping/trace evaluation (f64, O(nnz) per
     // outer iteration — not on the bundle hot path).
     let mut eval_state = LossState::new(obj, data, opts.c);
-    if monitor.observe(0, &eval_state, &w, opts) {
+    if monitor.observe(0, &eval_state, &w, opts, 0) {
         return Ok(crate::solver::pcdn::finish(
             "pcdn-pjrt", w, &eval_state, monitor, 0, 0, 0, Vec::new(),
         ));
@@ -102,7 +102,7 @@ pub fn train_dense_pjrt(
         // bundle commits) and evaluate stopping on the f64 state.
         eval_state.reset_from(&w);
         resync_quantity(&exec, &mut q, &eval_state);
-        if monitor.observe(outer, &eval_state, &w, opts) {
+        if monitor.observe(outer, &eval_state, &w, opts, ls_steps) {
             break;
         }
     }

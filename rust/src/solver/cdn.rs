@@ -62,7 +62,7 @@ impl Solver for Cdn {
         let mut m_prev = f64::INFINITY;
         let mut m_first: Option<f64> = None;
 
-        if monitor.observe(0, &state, &w, opts) {
+        if monitor.observe(0, &state, &w, opts, 0) {
             return finish(self.name(), w, &state, monitor, 0, 0, 0, records);
         }
 
@@ -155,6 +155,22 @@ impl Solver for Cdn {
                         q_steps: steps,
                     });
                 }
+
+                // Trajectory probe: one event per line-searched feature.
+                if let Some(pr) = &opts.probe {
+                    pr.0.on_step(&crate::solver::probe::StepInfo {
+                        kind: crate::solver::probe::StepKind::Feature,
+                        outer,
+                        inner: inner_iters,
+                        accepted,
+                        alpha: if accepted { alpha } else { 0.0 },
+                        delta,
+                        q_steps: steps,
+                        objective: crate::solver::objective_value_l2(&state, &w, opts.l2_reg),
+                        w: &w,
+                        state: &state,
+                    });
+                }
             }
 
             m_prev = if m_this > 0.0 { m_this } else { f64::INFINITY };
@@ -178,7 +194,7 @@ impl Solver for Cdn {
                 }
             }
 
-            if monitor.observe(outer, &state, &w, opts) {
+            if monitor.observe(outer, &state, &w, opts, ls_steps) {
                 break;
             }
         }

@@ -7,8 +7,11 @@ pub mod cdn;
 pub mod direction;
 pub mod linesearch;
 pub mod pcdn;
+pub mod probe;
 pub mod scdn;
 pub mod tron;
+
+pub use probe::{Probe, ProbeHandle};
 
 use crate::data::Dataset;
 use crate::linalg;
@@ -95,6 +98,11 @@ pub struct TrainOptions {
     /// process-wide [`WorkerPool::global`] team; `None` with
     /// `n_threads <= 1` runs serially inline (no barriers at all).
     pub pool: Option<WorkerPool>,
+    /// Optional trajectory observer (see [`probe::Probe`]): receives one
+    /// callback per outer iteration from every solver, plus one per
+    /// line-searched inner step from PCDN/CDN/SCDN. `None` (the default)
+    /// costs one branch per step.
+    pub probe: Option<ProbeHandle>,
 }
 
 impl Default for TrainOptions {
@@ -115,6 +123,7 @@ impl Default for TrainOptions {
             l2_reg: 0.0,
             warm_start: None,
             pool: None,
+            probe: None,
         }
     }
 }
@@ -243,15 +252,26 @@ impl RunMonitor {
 
     /// Record a trace point and evaluate the stop rule. Returns `true` if
     /// training should stop. `outer` is the completed outer-iteration
-    /// count.
+    /// count; `ls_steps` the run's cumulative Armijo probes (forwarded to
+    /// the probe so observers can track search effort per outer).
     pub fn observe(
         &mut self,
         outer: usize,
         state: &LossState<'_>,
         w: &[f64],
         opts: &TrainOptions,
+        ls_steps: usize,
     ) -> bool {
         let fval = objective_value_l2(state, w, opts.l2_reg);
+        if let Some(p) = &opts.probe {
+            p.0.on_outer(&probe::OuterInfo {
+                outer,
+                objective: fval,
+                ls_steps,
+                w,
+                state,
+            });
+        }
         if outer % opts.trace_every.max(1) == 0 {
             let accuracy = opts.eval_test.as_ref().map(|t| t.accuracy(w));
             self.trace.push(TracePoint {
@@ -326,9 +346,9 @@ mod tests {
             ..Default::default()
         };
         let mut m = RunMonitor::new();
-        assert!(!m.observe(1, &st, &w, &opts));
-        assert!(!m.observe(2, &st, &w, &opts));
-        assert!(m.observe(3, &st, &w, &opts));
+        assert!(!m.observe(1, &st, &w, &opts, 0));
+        assert!(!m.observe(2, &st, &w, &opts, 0));
+        assert!(m.observe(3, &st, &w, &opts, 0));
         assert!(m.converged);
     }
 
@@ -347,7 +367,7 @@ mod tests {
         };
         let mut m = RunMonitor::new();
         // (f0 − 0.999·f0)/(0.999·f0) ≈ 0.1% ≤ 1% ⇒ stop immediately.
-        assert!(m.observe(1, &st, &w, &opts));
+        assert!(m.observe(1, &st, &w, &opts, 0));
         assert!(m.converged);
     }
 
@@ -362,8 +382,8 @@ mod tests {
             ..Default::default()
         };
         let mut m = RunMonitor::new();
-        assert!(!m.observe(1, &st, &w, &opts));
-        assert!(m.observe(2, &st, &w, &opts));
+        assert!(!m.observe(1, &st, &w, &opts, 0));
+        assert!(m.observe(2, &st, &w, &opts, 0));
         assert!(!m.converged);
     }
 }

@@ -141,7 +141,7 @@ impl Solver for Pcdn {
         };
 
         // Initial trace point + early-exit check.
-        if monitor.observe(0, &state, &w, opts) {
+        if monitor.observe(0, &state, &w, opts, 0) {
             return finish(self.name(), w, &state, monitor, 0, 0, 0, records);
         }
 
@@ -282,9 +282,26 @@ impl Solver for Pcdn {
                         q_steps: outcome.steps,
                     });
                 }
+
+                // Trajectory probe: one event per line-searched bundle,
+                // after the commit (state/w already reflect the step).
+                if let Some(pr) = &opts.probe {
+                    pr.0.on_step(&crate::solver::probe::StepInfo {
+                        kind: crate::solver::probe::StepKind::Bundle,
+                        outer,
+                        inner: inner_iters,
+                        accepted: outcome.accepted,
+                        alpha: if outcome.accepted { outcome.alpha } else { 0.0 },
+                        delta,
+                        q_steps: outcome.steps,
+                        objective: crate::solver::objective_value_l2(&state, &w, opts.l2_reg),
+                        w: &w,
+                        state: &state,
+                    });
+                }
             }
 
-            if monitor.observe(outer, &state, &w, opts) {
+            if monitor.observe(outer, &state, &w, opts, ls_steps) {
                 break;
             }
         }

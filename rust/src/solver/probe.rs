@@ -1,0 +1,223 @@
+//! Solver observer API: a [`Probe`] attached to
+//! [`TrainOptions`](super::TrainOptions) receives the trajectory of a
+//! training run — one [`OuterInfo`] per outer iteration (all four solvers)
+//! and one [`StepInfo`] per line-searched inner step (PCDN bundles, CDN
+//! features, SCDN rounds) — without forking any solver code.
+//!
+//! The probe exists so the paper's theorems can be checked *from outside*
+//! the solver: the [`oracle`](crate::oracle) layer implements
+//! [`Probe`] over a set of reusable
+//! [`Invariant`](crate::oracle::invariant::Invariant)s (Armijo sufficient
+//! decrease per Eq. 9, monotone objective, maintained-quantity drift
+//! against from-scratch recomputation) and the conformance campaign runs
+//! them on every generated case.
+//!
+//! Probes are called from the solver's main thread only, between parallel
+//! regions, so they observe a quiescent state; the `Send + Sync` bound
+//! exists because `TrainOptions` itself crosses threads. Emission is
+//! gated on `opts.probe.is_some()`, and the per-step objective evaluation
+//! (O(s)) happens only when a probe is attached — an unprobed run pays
+//! one `Option` check per step.
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::loss::LossState;
+
+/// What kind of inner step produced a [`StepInfo`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    /// One PCDN bundle: a `P`-dimensional direction + one Armijo search
+    /// (Alg. 3/4). `alpha`/`delta` are the paper's `β^{q_t}` and Eq. 7 `Δ`.
+    Bundle,
+    /// One CDN feature update: 1-D direction + 1-D Armijo search (Alg. 1).
+    Feature,
+    /// One SCDN round: `P̄` stale 1-D updates committed together (Alg. 2).
+    /// No joint line search exists, so `alpha = 1` and `delta = 0` — the
+    /// Armijo/monotone invariants do not apply to this kind (the aggregate
+    /// step may legitimately increase the objective; that is SCDN's
+    /// divergence mechanism).
+    Round,
+}
+
+/// Snapshot passed to [`Probe::on_step`] after an inner step committed
+/// (or was rejected — `accepted` distinguishes the two; `w` and `state`
+/// are unchanged for a rejected step).
+pub struct StepInfo<'a, 'd> {
+    pub kind: StepKind,
+    /// Outer iteration in progress (1-based; outer 0 is the start point).
+    pub outer: usize,
+    /// Cumulative inner-iteration count including this step.
+    pub inner: usize,
+    /// Whether the Armijo search accepted a positive step.
+    pub accepted: bool,
+    /// Accepted step size `α = β^{q_t}` (0 when rejected; 1 for SCDN
+    /// rounds, which commit unit stale steps).
+    pub alpha: f64,
+    /// The Eq. 7 sufficient-decrease bound `Δ ≤ 0` this step was tested
+    /// against (0 for [`StepKind::Round`], which has no joint test).
+    pub delta: f64,
+    /// Armijo probes performed (`q_t + 1`; 0 when no search ran).
+    pub q_steps: usize,
+    /// `F_c(w)` after the step, from the maintained quantities.
+    pub objective: f64,
+    /// The full model after the step.
+    pub w: &'a [f64],
+    /// The live loss state after the step — invariants recompute it from
+    /// scratch via [`LossState::new`] + `reset_from(w)` to bound drift.
+    pub state: &'a LossState<'d>,
+}
+
+/// Snapshot passed to [`Probe::on_outer`] once per outer iteration (and
+/// once at `outer = 0` for the start point).
+pub struct OuterInfo<'a, 'd> {
+    pub outer: usize,
+    /// `F_c(w)` from the maintained quantities.
+    pub objective: f64,
+    /// Cumulative Armijo probes over the whole run so far.
+    pub ls_steps: usize,
+    pub w: &'a [f64],
+    pub state: &'a LossState<'d>,
+}
+
+/// A trajectory observer. All methods have empty defaults; implement the
+/// granularity you need. Called on the solver's main thread.
+pub trait Probe: Send + Sync {
+    fn on_step(&self, _info: &StepInfo<'_, '_>) {}
+    fn on_outer(&self, _info: &OuterInfo<'_, '_>) {}
+}
+
+/// Cheaply clonable probe handle carried by
+/// [`TrainOptions`](super::TrainOptions). Wraps an `Arc` so one observer
+/// (e.g. an invariant set) can be shared between the options and the test
+/// that inspects it afterwards.
+#[derive(Clone)]
+pub struct ProbeHandle(pub Arc<dyn Probe>);
+
+impl ProbeHandle {
+    pub fn new(probe: impl Probe + 'static) -> Self {
+        ProbeHandle(Arc::new(probe))
+    }
+}
+
+impl fmt::Debug for ProbeHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("ProbeHandle(<dyn Probe>)")
+    }
+}
+
+/// A recording probe: keeps the whole emitted trajectory for inspection.
+/// The simplest useful observer, and the one the probe-mechanism tests
+/// assert against.
+#[derive(Default)]
+pub struct TrajectoryRecorder {
+    /// `(outer, objective, ls_steps)` per [`Probe::on_outer`].
+    pub outers: Mutex<Vec<(usize, f64, usize)>>,
+    /// `(kind, inner, accepted, alpha, q_steps, objective)` per
+    /// [`Probe::on_step`].
+    pub steps: Mutex<Vec<(StepKind, usize, bool, f64, usize, f64)>>,
+}
+
+impl TrajectoryRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Probe for TrajectoryRecorder {
+    fn on_step(&self, info: &StepInfo<'_, '_>) {
+        self.steps.lock().unwrap().push((
+            info.kind,
+            info.inner,
+            info.accepted,
+            info.alpha,
+            info.q_steps,
+            info.objective,
+        ));
+    }
+
+    fn on_outer(&self, info: &OuterInfo<'_, '_>) {
+        self.outers
+            .lock()
+            .unwrap()
+            .push((info.outer, info.objective, info.ls_steps));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::loss::Objective;
+    use crate::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+
+    #[test]
+    fn recorder_sees_every_outer_and_step() {
+        let d = generate(
+            &SyntheticSpec {
+                samples: 60,
+                features: 24,
+                nnz_per_row: 5,
+                ..Default::default()
+            },
+            3,
+        );
+        let rec = Arc::new(TrajectoryRecorder::new());
+        let opts = TrainOptions {
+            c: 1.0,
+            bundle_size: 8,
+            stop: StopRule::MaxOuter(4),
+            max_outer: 4,
+            probe: Some(ProbeHandle(rec.clone())),
+            ..Default::default()
+        };
+        let r = Pcdn::new().train(&d, Objective::Logistic, &opts);
+        let outers = rec.outers.lock().unwrap();
+        // outer 0 (start point) + one per completed outer iteration.
+        assert_eq!(outers.len(), r.outer_iters + 1);
+        assert_eq!(outers[0].0, 0);
+        // Probe objectives match the recorded trace (trace_every = 1).
+        for (tp, (o, f, _)) in r.trace.iter().zip(outers.iter()) {
+            assert_eq!(tp.outer_iter, *o);
+            assert!((tp.objective - f).abs() <= 1e-12 * f.abs().max(1.0));
+        }
+        let steps = rec.steps.lock().unwrap();
+        assert!(!steps.is_empty());
+        assert!(steps.iter().all(|s| s.0 == StepKind::Bundle));
+        // ls_steps on the last outer equals the run total.
+        assert_eq!(outers.last().unwrap().2, r.ls_steps);
+    }
+
+    #[test]
+    fn probe_handle_clones_share_observer() {
+        let rec = Arc::new(TrajectoryRecorder::new());
+        let h = ProbeHandle(rec.clone());
+        let h2 = h.clone();
+        h2.0.on_outer(&OuterInfo {
+            outer: 7,
+            objective: 1.0,
+            ls_steps: 0,
+            w: &[],
+            state: &sample_state(),
+        });
+        assert_eq!(rec.outers.lock().unwrap()[0].0, 7);
+        assert_eq!(format!("{h:?}"), "ProbeHandle(<dyn Probe>)");
+    }
+
+    fn sample_state() -> crate::loss::LossState<'static> {
+        use std::sync::OnceLock;
+        static DATA: OnceLock<crate::data::Dataset> = OnceLock::new();
+        let d = DATA.get_or_init(|| {
+            generate(
+                &SyntheticSpec {
+                    samples: 3,
+                    features: 2,
+                    nnz_per_row: 1,
+                    ..Default::default()
+                },
+                1,
+            )
+        });
+        crate::loss::LossState::new(Objective::Logistic, d, 1.0)
+    }
+}

@@ -104,7 +104,7 @@ fn train_round(
     let mut outer = 0usize;
     let rounds_per_outer = n.div_ceil(pbar);
 
-    if monitor.observe(0, &state, &w, opts) {
+    if monitor.observe(0, &state, &w, opts, 0) {
         return finish(name, w, &state, monitor, 0, 0, 0, records);
     }
 
@@ -235,13 +235,31 @@ fn train_round(
                 });
             }
 
+            // Trajectory probe: one event per committed round. There is no
+            // joint Armijo test (each stale update passed its own 1-D
+            // search), so `alpha = 1`, `delta = 0` — see `StepKind::Round`.
+            if let Some(pr) = &opts.probe {
+                pr.0.on_step(&crate::solver::probe::StepInfo {
+                    kind: crate::solver::probe::StepKind::Round,
+                    outer,
+                    inner: inner_iters,
+                    accepted: !updates.is_empty(),
+                    alpha: 1.0,
+                    delta: 0.0,
+                    q_steps: steps_this_round,
+                    objective: crate::solver::objective_value_l2(&state, &w, opts.l2_reg),
+                    w: &w,
+                    state: &state,
+                });
+            }
+
             // Divergence guard: SCDN can blow up; stop when the objective
             // is no longer finite (the paper's news20 non-convergence).
             if !state.loss_value().is_finite() {
                 break 'outer;
             }
         }
-        if monitor.observe(outer, &state, &w, opts) {
+        if monitor.observe(outer, &state, &w, opts, ls_steps) {
             break;
         }
     }
@@ -435,6 +453,17 @@ fn train_atomic(
         st.reset_from(&w_snap);
         let g = st.full_gradient();
         let v = crate::solver::subgrad_norm1(&g, &w_snap);
+        // Trajectory probe on the snapshot (atomic mode bypasses the shared
+        // monitor, so the outer event is emitted here).
+        if let Some(pr) = &opts.probe {
+            pr.0.on_outer(&crate::solver::probe::OuterInfo {
+                outer,
+                objective: crate::solver::objective_value_l2(&st, &w_snap, opts.l2_reg),
+                ls_steps: total_ls.load(std::sync::atomic::Ordering::Relaxed),
+                w: &w_snap,
+                state: &st,
+            });
+        }
         if let crate::solver::StopRule::SubgradRel(eps) = opts.stop {
             if v <= eps * v0 {
                 monitor.converged = true;

@@ -207,7 +207,7 @@ impl Solver for Tron {
         let mut outer = 0usize;
 
         let w0 = split.w_of(&u);
-        if monitor.observe(0, &split.state, &w0, opts) {
+        if monitor.observe(0, &split.state, &w0, opts, 0) {
             return finish(self.name(), w0, &split.state, monitor, 0, 0, 0, Vec::new());
         }
 
@@ -275,7 +275,7 @@ impl Solver for Tron {
             }
 
             let w = split.w_of(&u);
-            if monitor.observe(outer, &split.state, &w, opts) {
+            if monitor.observe(outer, &split.state, &w, opts, ls_steps) {
                 break;
             }
             // Projected-gradient stop (TRON's native criterion) as a

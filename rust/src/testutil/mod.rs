@@ -1,7 +1,9 @@
 //! Test-support code: a small property-based testing harness (stand-in for
-//! `proptest`, which is unavailable offline) plus shared numeric assertions.
+//! `proptest`, which is unavailable offline), a greedy dataset shrinker
+//! for minimizing failing cases, and shared numeric assertions.
 
 pub mod prop;
+pub mod shrink;
 
 /// Assert two floats are close in absolute or relative terms.
 #[track_caller]

@@ -2,9 +2,10 @@
 //!
 //! Deterministic: each case derives from a master seed, and a failing case
 //! reports its case seed so the exact input replays with
-//! `Gen::from_seed(seed)`. A light greedy shrinker is provided for sizes
-//! (integers) — enough to make failures readable without the full proptest
-//! machinery.
+//! `Gen::from_seed(seed)` (the failure message spells out the workflow).
+//! For failing *dataset* cases, [`crate::testutil::shrink`] greedily
+//! minimizes the reproduction (drop samples, then features, re-testing
+//! after each deletion) before it is reported.
 //!
 //! ```ignore
 //! run_prop("norm non-negative", 256, |g| {
@@ -131,7 +132,10 @@ where
         if let Err(msg) = body(&mut g) {
             panic!(
                 "property '{name}' failed on case {case}/{cases} (seed {seed:#x}):\n  {msg}\n  \
-                 replay: Gen::from_seed({seed:#x})"
+                 replay: `Gen::from_seed({seed:#x})` re-creates this case's exact draws — \
+                 call the property body with it directly (the generator is deterministic), \
+                 or set PCDN_PROP_SEED to re-seed / PCDN_PROP_CASES to re-scale the whole \
+                 campaign."
             );
         }
     }

@@ -1,0 +1,387 @@
+//! Differential-oracle conformance campaign (the executable form of the
+//! paper's claims).
+//!
+//! Property-driven: each case draws a random sparse dataset × loss × λ
+//! (via `c = 1/λ`) × bundle size `P` × thread count, runs the fast solvers,
+//! and asserts against the independent `pcdn::oracle` layer:
+//!
+//! * final objectives agree with the dense from-scratch CDN oracle *and*
+//!   the proximal-gradient (ISTA) oracle to tolerance;
+//! * the dense minimum-norm-subgradient KKT residual is at tolerance, so
+//!   "converged" is checked against optimality conditions rather than the
+//!   solver's own stop rule;
+//! * every trajectory invariant (Armijo sufficient decrease per Eq. 9,
+//!   monotone objective, maintained-quantity drift ≤ 1e-8) holds on the
+//!   probed trajectory at every thread count.
+//!
+//! Tolerance policy (see README "Testing & verification"): bitwise for
+//! pure re-execution claims (covered by the solver unit tests), 1e-9 for
+//! maintained-vs-dense objective identity, 1e-4/1e-3 for optimum agreement
+//! between independent solvers stopped at KKT 1e-6/1e-4, and KKT-ε = 1e-5
+//! (10× the stop tolerance) for residual checks.
+//!
+//! Every failure panics with a case seed; `Gen::from_seed(seed)` replays
+//! the exact draws, and the failing dataset is greedily minimized (drop
+//! samples, then features) before reporting.
+
+use std::sync::Arc;
+
+use pcdn::data::synthetic::{generate, SyntheticSpec};
+use pcdn::data::Dataset;
+use pcdn::loss::Objective;
+use pcdn::oracle::invariant::InvariantSet;
+use pcdn::oracle::{dense, ista, kkt};
+use pcdn::solver::probe::ProbeHandle;
+use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, scdn::Scdn, Solver, StopRule, TrainOptions};
+use pcdn::testutil::prop::{prop_assert, prop_close, run_prop, Gen};
+use pcdn::testutil::shrink::shrink_dataset;
+
+/// A drawn conformance case (dataset aside).
+#[derive(Clone, Copy, Debug)]
+struct CaseCfg {
+    obj: Objective,
+    c: f64,
+    p: usize,
+    threads: usize,
+}
+
+fn pick_obj(g: &mut Gen) -> Objective {
+    match g.usize_in(0..3) {
+        0 => Objective::Logistic,
+        1 => Objective::L2Svm,
+        _ => Objective::Lasso,
+    }
+}
+
+/// Small random sparse dataset: big enough to exercise bundling and
+/// sharding, small enough that the naive O(n·nnz)-per-sweep oracle stays
+/// cheap.
+fn gen_dataset(g: &mut Gen, correlated: bool) -> Dataset {
+    let spec = SyntheticSpec {
+        samples: g.usize_in(15..50),
+        features: g.usize_in(6..24),
+        nnz_per_row: g.usize_in(2..5),
+        corr_groups: if correlated { g.usize_in(0..3) } else { 0 },
+        corr_strength: if correlated { g.f64_in(0.0..0.5) } else { 0.0 },
+        scale_sigma: g.f64_in(0.0..0.8),
+        true_density: g.f64_in(0.05..0.5),
+        label_noise: g.f64_in(0.0..0.2),
+        row_normalize: true,
+    };
+    generate(&spec, g.rng().next_u64())
+}
+
+fn gen_cfg(g: &mut Gen, n: usize) -> CaseCfg {
+    CaseCfg {
+        obj: pick_obj(g),
+        c: g.f64_in(0.05..3.0),
+        p: g.usize_in(1..n + 1),
+        threads: [1usize, 1, 2, 3][g.usize_in(0..4)],
+    }
+}
+
+/// On failure, greedily minimize the dataset (drop samples, then
+/// features, re-testing after each deletion) and fold the minimized shape
+/// into the report. `run_prop` appends the case seed and the
+/// `Gen::from_seed` replay instructions.
+fn minimized_report(
+    d: &Dataset,
+    msg: String,
+    fails: impl Fn(&Dataset) -> bool,
+) -> Result<(), String> {
+    let m = shrink_dataset(d, 40, fails);
+    Err(format!(
+        "{msg}\n  minimized reproduction: {} samples x {} features (from {} x {}); \
+         the same seed re-derives the original case and this shrink is deterministic",
+        m.samples(),
+        m.features(),
+        d.samples(),
+        d.features()
+    ))
+}
+
+/// Core PCDN conformance: converge, pass dense KKT, agree with the dense
+/// CDN oracle, and report an objective identical (1e-9) to a from-scratch
+/// evaluation of the returned model.
+fn check_pcdn(d: &Dataset, cfg: CaseCfg) -> Result<(), String> {
+    let opts = TrainOptions {
+        c: cfg.c,
+        bundle_size: cfg.p,
+        n_threads: cfg.threads,
+        stop: StopRule::SubgradRel(1e-6),
+        max_outer: 5000,
+        ..Default::default()
+    };
+    let r = Pcdn::new().train(d, cfg.obj, &opts);
+    prop_assert(
+        r.converged,
+        &format!("PCDN {cfg:?} did not converge in {} outers", r.outer_iters),
+    )?;
+    prop_close(
+        r.final_objective,
+        dense::dense_objective(d, cfg.obj, cfg.c, &r.w, 0.0),
+        1e-9,
+        "maintained final objective vs dense recomputation",
+    )?;
+    let rel = kkt::kkt_rel(d, cfg.obj, cfg.c, &r.w, 0.0);
+    prop_assert(
+        rel <= 1e-5,
+        &format!("dense KKT residual rel {rel:.3e} > 1e-5 for {cfg:?}"),
+    )?;
+    let oracle = dense::reference_cdn(d, cfg.obj, cfg.c, 0.0, 1e-6, 2000);
+    prop_assert(oracle.converged, "dense CDN oracle did not converge")?;
+    prop_close(
+        r.final_objective,
+        oracle.objective,
+        1e-4,
+        "PCDN vs dense-CDN-oracle objective",
+    )
+}
+
+#[test]
+fn pcdn_conforms_to_dense_oracle_and_kkt() {
+    run_prop("pcdn vs dense CDN oracle + KKT", 96, |g: &mut Gen| {
+        let d = gen_dataset(g, true);
+        let cfg = gen_cfg(g, d.features());
+        check_pcdn(&d, cfg)
+            .or_else(|msg| minimized_report(&d, msg, |d2| check_pcdn(d2, cfg).is_err()))
+    });
+}
+
+/// SCDN at safe parallelism (P̄ ≤ 2, uncorrelated features — well inside
+/// the `P̄ ≤ n/ρ(XᵀX) + 1` bound) must land on the same optimum.
+fn check_scdn(d: &Dataset, cfg: CaseCfg) -> Result<(), String> {
+    let opts = TrainOptions {
+        c: cfg.c,
+        bundle_size: cfg.p,
+        n_threads: cfg.threads,
+        stop: StopRule::SubgradRel(1e-6),
+        max_outer: 6000,
+        ..Default::default()
+    };
+    let r = Scdn::new().train(d, cfg.obj, &opts);
+    prop_assert(
+        r.converged,
+        &format!("SCDN {cfg:?} did not converge in {} outers", r.outer_iters),
+    )?;
+    let rel = kkt::kkt_rel(d, cfg.obj, cfg.c, &r.w, 0.0);
+    prop_assert(
+        rel <= 1e-5,
+        &format!("dense KKT residual rel {rel:.3e} > 1e-5 for {cfg:?}"),
+    )?;
+    let oracle = dense::reference_cdn(d, cfg.obj, cfg.c, 0.0, 1e-6, 2000);
+    prop_assert(oracle.converged, "dense CDN oracle did not converge")?;
+    prop_close(
+        r.final_objective,
+        oracle.objective,
+        1e-4,
+        "SCDN vs dense-CDN-oracle objective",
+    )
+}
+
+#[test]
+fn scdn_conforms_at_safe_parallelism() {
+    run_prop("scdn (safe P̄) vs dense CDN oracle + KKT", 48, |g: &mut Gen| {
+        let d = gen_dataset(g, false);
+        let mut cfg = gen_cfg(g, d.features());
+        cfg.p = 1 + g.usize_in(0..2); // P̄ ∈ {1, 2}
+        cfg.c = g.f64_in(0.05..1.5);
+        check_scdn(&d, cfg)
+            .or_else(|msg| minimized_report(&d, msg, |d2| check_scdn(d2, cfg).is_err()))
+    });
+}
+
+/// The proximal-gradient second opinion: ISTA descends monotonically, so
+/// its final objective upper-bounds `F*`; a converged PCDN must sit at or
+/// below it and within tolerance once both report KKT at target.
+fn check_ista(d: &Dataset, cfg: CaseCfg) -> Result<(), String> {
+    let opts = TrainOptions {
+        c: cfg.c,
+        bundle_size: cfg.p,
+        n_threads: cfg.threads,
+        stop: StopRule::SubgradRel(1e-6),
+        max_outer: 5000,
+        ..Default::default()
+    };
+    let r = Pcdn::new().train(d, cfg.obj, &opts);
+    prop_assert(r.converged, &format!("PCDN {cfg:?} did not converge"))?;
+    let prox = ista::ista(d, cfg.obj, cfg.c, 0.0, 1e-4, 50_000);
+    prop_assert(
+        prox.converged,
+        &format!("ISTA did not reach KKT 1e-4 in {} iters", prox.iters),
+    )?;
+    // ISTA upper-bounds F* from above, but both solvers stop at their own
+    // KKT criteria and ISTA (checked every 5 iters) routinely overshoots
+    // its target — so the one-sided bound gets the documented inter-solver
+    // tolerance, not an exact-arithmetic one.
+    let scale = r.final_objective.abs().max(1.0);
+    prop_assert(
+        r.final_objective <= prox.objective + 1e-4 * scale,
+        &format!(
+            "PCDN objective {} above the ISTA monotone upper bound {}",
+            r.final_objective, prox.objective
+        ),
+    )?;
+    prop_close(
+        r.final_objective,
+        prox.objective,
+        1e-3,
+        "PCDN vs proximal-gradient objective",
+    )
+}
+
+#[test]
+fn pcdn_agrees_with_proximal_gradient_oracle() {
+    run_prop("pcdn vs ISTA second opinion", 32, |g: &mut Gen| {
+        let d = gen_dataset(g, false);
+        let mut cfg = gen_cfg(g, d.features());
+        cfg.c = g.f64_in(0.05..1.5);
+        check_ista(&d, cfg)
+            .or_else(|msg| minimized_report(&d, msg, |d2| check_ista(d2, cfg).is_err()))
+    });
+}
+
+/// Trajectory invariants on probed PCDN runs: Armijo decrease (dense),
+/// monotone objective, maintained-quantity drift ≤ 1e-8 — at every drawn
+/// thread count and bundle size.
+fn check_invariants(d: &Dataset, cfg: CaseCfg) -> Result<(), String> {
+    let set = Arc::new(InvariantSet::standard(0.01, 0.0));
+    let opts = TrainOptions {
+        c: cfg.c,
+        bundle_size: cfg.p,
+        n_threads: cfg.threads,
+        stop: StopRule::SubgradRel(1e-4),
+        max_outer: 1500,
+        probe: Some(ProbeHandle(set.clone())),
+        ..Default::default()
+    };
+    let _ = Pcdn::new().train(d, cfg.obj, &opts);
+    let v = set.violations();
+    prop_assert(
+        v.is_empty(),
+        &format!("{} invariant violation(s) for {cfg:?}: {}", v.len(), v.join(" | ")),
+    )
+}
+
+#[test]
+fn pcdn_trajectory_invariants_hold() {
+    run_prop("pcdn trajectory invariants", 32, |g: &mut Gen| {
+        let d = gen_dataset(g, true);
+        let cfg = gen_cfg(g, d.features());
+        check_invariants(&d, cfg)
+            .or_else(|msg| minimized_report(&d, msg, |d2| check_invariants(d2, cfg).is_err()))
+    });
+}
+
+/// CDN (including the shrinking variant) under the same invariant battery,
+/// plus the shrinking-soundness final check: a converged shrunk run must
+/// satisfy KKT on every coordinate, shrunk ones included.
+#[test]
+fn cdn_shrinking_trajectories_conform() {
+    run_prop("cdn + shrinking conformance", 24, |g: &mut Gen| {
+        let d = gen_dataset(g, true);
+        let obj = pick_obj(g);
+        let c = g.f64_in(0.1..2.0);
+        let shrinking = g.bool();
+        let set = Arc::new(InvariantSet::standard(0.01, 0.0));
+        let opts = TrainOptions {
+            c,
+            shrinking,
+            stop: StopRule::SubgradRel(1e-5),
+            max_outer: 4000,
+            probe: Some(ProbeHandle(set.clone())),
+            ..Default::default()
+        };
+        let r = Cdn::new().train(&d, obj, &opts);
+        let v = set.violations();
+        prop_assert(
+            v.is_empty(),
+            &format!("{} invariant violation(s): {}", v.len(), v.join(" | ")),
+        )?;
+        prop_assert(r.converged, "CDN did not converge")?;
+        pcdn::oracle::invariant::check_shrinking_soundness(&d, obj, &opts, &r, 4.0)
+            .map_err(|e| format!("shrinking soundness (shrinking={shrinking}): {e}"))
+    });
+}
+
+/// The probe mechanism itself: all four solvers emit outer trajectories;
+/// PCDN/SCDN/CDN additionally emit per-step events.
+#[test]
+fn all_four_solvers_emit_probed_trajectories() {
+    use pcdn::solver::probe::{StepKind, TrajectoryRecorder};
+    use pcdn::solver::tron::Tron;
+    let d = generate(
+        &SyntheticSpec {
+            samples: 50,
+            features: 20,
+            nnz_per_row: 4,
+            ..Default::default()
+        },
+        11,
+    );
+    let solvers: Vec<(Box<dyn Solver>, Option<StepKind>)> = vec![
+        (Box::new(Pcdn::new()), Some(StepKind::Bundle)),
+        (Box::new(Cdn::new()), Some(StepKind::Feature)),
+        (Box::new(Scdn::new()), Some(StepKind::Round)),
+        (Box::new(Tron::new()), None),
+    ];
+    for (solver, kind) in solvers {
+        let rec = Arc::new(TrajectoryRecorder::new());
+        let opts = TrainOptions {
+            c: 1.0,
+            bundle_size: 4,
+            stop: StopRule::MaxOuter(3),
+            max_outer: 3,
+            probe: Some(ProbeHandle(rec.clone())),
+            ..Default::default()
+        };
+        let r = solver.train(&d, Objective::Logistic, &opts);
+        let outers = rec.outers.lock().unwrap();
+        assert!(
+            outers.len() >= r.outer_iters,
+            "{}: {} outer events for {} outers",
+            solver.name(),
+            outers.len(),
+            r.outer_iters
+        );
+        assert!(outers.iter().all(|(_, f, _)| f.is_finite()));
+        let steps = rec.steps.lock().unwrap();
+        match kind {
+            Some(k) => {
+                assert!(!steps.is_empty(), "{}: no step events", solver.name());
+                assert!(steps.iter().all(|s| s.0 == k), "{}: wrong kind", solver.name());
+            }
+            None => assert!(steps.is_empty(), "TRON emits outer events only"),
+        }
+    }
+}
+
+/// SCDN atomic mode (real racing threads) also reports outer trajectories
+/// through the probe, from its snapshot loop.
+#[test]
+fn scdn_atomic_emits_outer_probes() {
+    use pcdn::solver::probe::TrajectoryRecorder;
+    let d = generate(
+        &SyntheticSpec {
+            samples: 60,
+            features: 30,
+            nnz_per_row: 4,
+            corr_groups: 0,
+            ..Default::default()
+        },
+        12,
+    );
+    let rec = Arc::new(TrajectoryRecorder::new());
+    let opts = TrainOptions {
+        c: 1.0,
+        bundle_size: 2,
+        stop: StopRule::SubgradRel(1e-3),
+        max_outer: 50,
+        probe: Some(ProbeHandle(rec.clone())),
+        ..Default::default()
+    };
+    let r = Scdn::atomic().train(&d, Objective::Logistic, &opts);
+    let outers = rec.outers.lock().unwrap();
+    assert_eq!(outers.len(), r.outer_iters);
+    assert!(outers.iter().all(|(_, f, _)| f.is_finite()));
+}

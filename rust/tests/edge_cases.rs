@@ -4,7 +4,10 @@
 
 use pcdn::data::{CscMat, Dataset};
 use pcdn::loss::Objective;
+use pcdn::oracle::{dense, kkt};
 use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, tron::Tron, Solver, StopRule, TrainOptions};
+
+const ALL_LOSSES: [Objective; 3] = [Objective::Logistic, Objective::L2Svm, Objective::Lasso];
 
 fn opts() -> TrainOptions {
     TrainOptions {
@@ -197,6 +200,135 @@ fn shrinking_with_relfuncdiff_stop() {
     o.max_outer = 3000;
     let r = Cdn::new().train(&d, Objective::Logistic, &o);
     assert!(r.converged, "shrinking + RelFuncDiff deadlocked");
+}
+
+/// `λ → ∞` (tiny `c`): `|∇_j L(0)| ≤ 1` for every feature, so `w = 0` is
+/// the exact optimum for all three losses — detected at iteration zero,
+/// and the dense KKT check passes *trivially* (residual exactly 0).
+/// `λ → 0` (large `c`): the loss dominates; the solver must still converge
+/// and the dense minimum-norm-subgradient residual must sit at the stop
+/// tolerance for every loss.
+#[test]
+fn lambda_extremes_kkt_all_losses() {
+    let d = pcdn::data::synthetic::generate(
+        &pcdn::data::synthetic::SyntheticSpec {
+            samples: 40,
+            features: 16,
+            nnz_per_row: 4,
+            ..Default::default()
+        },
+        21,
+    );
+    for obj in ALL_LOSSES {
+        // Huge λ: all-zero optimum, trivially KKT.
+        let mut tiny = opts();
+        tiny.c = 1e-9;
+        let r = Pcdn::new().train(&d, obj, &tiny);
+        assert!(r.converged, "{obj:?} tiny c");
+        assert_eq!(r.outer_iters, 0, "{obj:?}: w = 0 must be detected at start");
+        assert!(r.w.iter().all(|&x| x == 0.0));
+        assert_eq!(kkt::kkt_residual_norm1(&d, obj, 1e-9, &r.w, 0.0), 0.0);
+        assert_eq!(kkt::kkt_rel(&d, obj, 1e-9, &r.w, 0.0), 0.0);
+
+        // λ → 0: loss-dominated but still must converge to a KKT point.
+        let mut big = opts();
+        big.c = 20.0;
+        big.stop = StopRule::SubgradRel(1e-5);
+        big.max_outer = 4000;
+        let r = Pcdn::new().train(&d, obj, &big);
+        assert!(r.converged, "{obj:?} large c did not converge");
+        let rel = kkt::kkt_rel(&d, obj, 20.0, &r.w, 0.0);
+        assert!(rel <= 1e-4, "{obj:?}: KKT rel {rel:.3e} at large c");
+    }
+}
+
+/// A single-sample dataset across all three losses: the smallest
+/// nontrivial problem must converge and pass the dense KKT check.
+#[test]
+fn single_sample_dataset_all_losses() {
+    let x = CscMat::from_triplets(1, 3, &[(0, 0, 0.8), (0, 1, -0.5), (0, 2, 0.3)]);
+    let d = Dataset::new("one-sample", x, vec![1.0]);
+    for obj in ALL_LOSSES {
+        let mut o = opts();
+        o.c = 4.0; // strong enough that w = 0 is NOT optimal
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 2000;
+        let r = Pcdn::new().train(&d, obj, &o);
+        assert!(r.converged, "{obj:?}");
+        assert!(r.w.iter().all(|v| v.is_finite()));
+        let rel = kkt::kkt_rel(&d, obj, 4.0, &r.w, 0.0);
+        assert!(rel <= 1e-5, "{obj:?}: KKT rel {rel:.3e}");
+        // And the reported objective is a faithful dense evaluation.
+        let fd = dense::dense_objective(&d, obj, 4.0, &r.w, 0.0);
+        assert!((r.final_objective - fd).abs() <= 1e-9 * fd.abs().max(1.0));
+    }
+}
+
+/// An all-zero feature column across all three losses: the column's
+/// weight must stay exactly 0, its KKT condition holds trivially
+/// (`g_j = 0 ∈ [−1, 1]`), and the rest of the model still optimizes.
+#[test]
+fn all_zero_feature_column_all_losses() {
+    let x = CscMat::from_triplets(
+        6,
+        4,
+        &[
+            (0, 0, 1.0),
+            (1, 0, -0.7),
+            (2, 2, 0.9),
+            (3, 2, -1.1),
+            (4, 3, 0.6),
+            (5, 3, -0.5),
+        ],
+    );
+    let d = Dataset::new("zero-col", x, vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0]);
+    for obj in ALL_LOSSES {
+        let mut o = opts();
+        o.c = 5.0;
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 2000;
+        let r = Pcdn::new().train(&d, obj, &o);
+        assert!(r.converged, "{obj:?}");
+        assert_eq!(r.w[1], 0.0, "{obj:?}: empty column moved");
+        let rel = kkt::kkt_rel(&d, obj, 5.0, &r.w, 0.0);
+        assert!(rel <= 1e-5, "{obj:?}: KKT rel {rel:.3e}");
+        // The zero column contributes exactly nothing to the residual.
+        let v = kkt::min_norm_subgrad(&d, obj, 5.0, &r.w, 0.0);
+        assert_eq!(v[1], 0.0);
+    }
+}
+
+/// `P > n` (a single bundle per outer iteration) across all three losses:
+/// must match the dense CDN oracle's optimum.
+#[test]
+fn single_bundle_p_exceeds_features_all_losses() {
+    let d = pcdn::data::synthetic::generate(
+        &pcdn::data::synthetic::SyntheticSpec {
+            samples: 40,
+            features: 10,
+            nnz_per_row: 4,
+            ..Default::default()
+        },
+        22,
+    );
+    for obj in ALL_LOSSES {
+        let mut o = opts();
+        o.bundle_size = 500; // ≫ n: clamps to one n-wide bundle
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 3000;
+        let r = Pcdn::new().train(&d, obj, &o);
+        assert!(r.converged, "{obj:?}");
+        let oracle = dense::reference_cdn(&d, obj, o.c, 0.0, 1e-6, 2000);
+        assert!(oracle.converged, "{obj:?} oracle");
+        let diff = (r.final_objective - oracle.objective).abs();
+        let scale = oracle.objective.abs().max(1.0);
+        assert!(
+            diff <= 1e-4 * scale,
+            "{obj:?}: single-bundle PCDN {} vs oracle {}",
+            r.final_objective,
+            oracle.objective
+        );
+    }
 }
 
 /// NaN/Inf injection: a dataset with a huge-magnitude value must not
