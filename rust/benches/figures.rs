@@ -46,6 +46,7 @@ fn main() {
         ("fig4", experiments::fig4_and_7), // also emits fig7
         ("fig5", experiments::fig5),
         ("fig6", experiments::fig6),
+        ("path", experiments::path_exp),
         ("theory", experiments::theory_check),
     ];
 
@@ -72,7 +73,7 @@ fn main() {
         ran += 1;
     }
     if ran == 0 {
-        eprintln!("no experiment matched {wanted:?}; known: table2 fig1 fig2 table3 fig3 fig4 fig5 fig6 fig7 theory");
+        eprintln!("no experiment matched {wanted:?}; known: table2 fig1 fig2 table3 fig3 fig4 fig5 fig6 fig7 path theory");
         std::process::exit(2);
     }
     println!("\nwrote CSVs to {out_dir}/ ({ran} experiment groups)");

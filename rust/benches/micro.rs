@@ -107,11 +107,15 @@ fn main() {
         .unwrap_or(2)
         .clamp(2, 8);
     let pool = WorkerPool::new(n_threads);
-    // PCDN_BENCH=epilogue runs only the section that emits
-    // BENCH_epilogue.json (what CI uploads as the perf-trajectory
-    // artifact) without paying for the full suite.
+    // PCDN_BENCH=epilogue / PCDN_BENCH=path run only the section that
+    // emits the corresponding JSON artifact (what CI uploads as the
+    // perf-trajectory baselines) without paying for the full suite.
     if std::env::var("PCDN_BENCH").as_deref() == Ok("epilogue") {
         bench_epilogue(n_threads, &pool);
+        return;
+    }
+    if std::env::var("PCDN_BENCH").as_deref() == Ok("path") {
+        bench_path(n_threads, &pool);
         return;
     }
     let d = realsim_like();
@@ -298,6 +302,9 @@ fn main() {
     // --- serial vs range-sharded bundle epilogue ---------------------------
     bench_epilogue(n_threads, &pool);
 
+    // --- regularization path: warm+screened vs cold full grid --------------
+    bench_path(n_threads, &pool);
+
     // --- PJRT path latency (when artifacts are built) ----------------------
     let art_dir = pcdn::runtime::PjrtRuntime::default_dir();
     if art_dir.join("manifest.json").exists() {
@@ -358,6 +365,90 @@ fn main() {
         println!("\n(PJRT benches skipped: run `make artifacts`)");
     }
     println!("\nmicro benches done");
+}
+
+/// Warm-started + strong-rule-screened λ-path fit vs the cold full-grid
+/// baseline (every λ solved from scratch, no screening), both certified
+/// per grid point against the dense KKT conditions — so the speedup is
+/// measured at equal, independently verified accuracy. Emits
+/// BENCH_path.json (CI uploads it next to BENCH_epilogue.json;
+/// `PCDN_BENCH=path` runs just this section).
+fn bench_path(n_threads: usize, pool: &WorkerPool) {
+    use pcdn::path::{self, PathOptions};
+    println!();
+    let d = generate(
+        &SyntheticSpec {
+            samples: 4000,
+            features: 600,
+            nnz_per_row: 30,
+            scale_sigma: 0.8,
+            true_density: 0.05,
+            ..Default::default()
+        },
+        7,
+    );
+    println!(
+        "path dataset: {} × {}, nnz = {} ({n_threads} threads)",
+        d.samples(),
+        d.features(),
+        d.x.nnz()
+    );
+    let mut po = PathOptions {
+        n_lambdas: 10,
+        lambda_ratio: 0.05,
+        degree: n_threads,
+        ..PathOptions::default()
+    };
+    po.train.bundle_size = 256;
+    po.train.pool = Some(pool.clone());
+    let mut po_cold = po.clone();
+    po_cold.warm_start = false;
+    po_cold.screening = false;
+
+    // One certification fit per variant up front: it supplies the
+    // artifact's metadata (fit_path is deterministic here — fixed seed,
+    // pinned degree — so the timed fits below reproduce it exactly) and
+    // doubles as the warmup, so the timed loops need none.
+    let warm = path::fit_path(&d, Objective::Logistic, &po);
+    let cold = path::fit_path(&d, Objective::Logistic, &po_cold);
+    let (warm_secs, _, _) = measure(0, 3, || {
+        black_box(path::fit_path(&d, Objective::Logistic, &po).total_outer)
+    });
+    let (cold_secs, _, _) = measure(0, 3, || {
+        black_box(path::fit_path(&d, Objective::Logistic, &po_cold).total_outer)
+    });
+    let speedup = cold_secs / warm_secs.max(1e-12);
+    println!(
+        "path fit (10 λ)  warm+screened {:>10}  cold {:>10}  speedup {speedup:>5.2}x  \
+         (outers {} vs {}, certified {}/{})",
+        fmt_secs(warm_secs),
+        fmt_secs(cold_secs),
+        warm.total_outer,
+        cold.total_outer,
+        warm.certified,
+        cold.certified,
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("path".into())),
+        ("threads", Json::Num(n_threads as f64)),
+        ("samples", Json::Num(d.samples() as f64)),
+        ("features", Json::Num(d.features() as f64)),
+        ("nnz", Json::Num(d.x.nnz() as f64)),
+        ("n_lambdas", Json::Num(po.n_lambdas as f64)),
+        ("lambda_ratio", Json::Num(po.lambda_ratio)),
+        ("lambda_max", Json::Num(warm.lambda_max)),
+        ("warm_secs", Json::Num(warm_secs)),
+        ("cold_secs", Json::Num(cold_secs)),
+        ("speedup", Json::Num(speedup)),
+        ("warm_total_outer", Json::Num(warm.total_outer as f64)),
+        ("cold_total_outer", Json::Num(cold.total_outer as f64)),
+        ("warm_certified", Json::Bool(warm.certified)),
+        ("cold_certified", Json::Bool(cold.certified)),
+    ]);
+    match std::fs::write("BENCH_path.json", doc.pretty()) {
+        Ok(()) => println!("wrote BENCH_path.json"),
+        Err(e) => println!("could not write BENCH_path.json: {e}"),
+    }
 }
 
 /// Serial vs range-sharded bundle epilogue — the per-bundle tail PR 2

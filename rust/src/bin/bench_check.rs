@@ -1,0 +1,186 @@
+//! `bench_check` — perf-trajectory regression guard for the CI bench
+//! artifacts (ROADMAP item: regress the P = 1024 sharded-epilogue speedup
+//! against the accumulated artifact trajectory).
+//!
+//! CI uploads `BENCH_epilogue.json` on every run; this tool compares the
+//! current file's P = 1024 sharded speedup against the *median* of the
+//! accumulated history (a directory of previously downloaded artifacts)
+//! and fails when it regresses by more than the tolerance. The median —
+//! not the best — is the baseline because shared-runner numbers are noisy;
+//! a >20% drop below the median of several runs is a real smell, a drop
+//! below a single lucky best run is not.
+//!
+//! ```sh
+//! # history/ holds BENCH_epilogue.json files from previous CI runs
+//! bench_check --current BENCH_epilogue.json --history history [--tolerance 0.2]
+//! ```
+//!
+//! Exit codes: 0 = pass (or not enough history yet — the trajectory is
+//! still accumulating), 1 = regression beyond tolerance, 2 = bad
+//! input/usage.
+
+use pcdn::util::cli::Cli;
+use pcdn::util::json::Json;
+
+/// The gated configuration: the largest bundle size the epilogue bench
+/// measures (where sharding matters most and noise matters least).
+const GATE_P: f64 = 1024.0;
+
+/// Extract the sharded-epilogue speedup at bundle size `p` from one
+/// `BENCH_epilogue.json` document.
+fn speedup_at_p(doc: &Json, p: f64) -> Option<f64> {
+    doc.get("results")?
+        .as_arr()?
+        .iter()
+        .find(|r| r.get("p").and_then(|v| v.as_f64()) == Some(p))?
+        .get("speedup")?
+        .as_f64()
+}
+
+/// Median of a non-empty sample (average of the middle pair for even n).
+fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    }
+}
+
+/// The gate: `Ok(report)` when `current` is within `tolerance` of the
+/// history median (i.e. `current ≥ (1 − tolerance)·median`), `Err(report)`
+/// on regression.
+fn check(current: f64, history: &[f64], tolerance: f64) -> Result<String, String> {
+    let base = median(history);
+    let floor = (1.0 - tolerance) * base;
+    let report = format!(
+        "P={GATE_P} sharded speedup: current {current:.3}x vs median {base:.3}x \
+         over {} run(s); floor at -{:.0}% = {floor:.3}x",
+        history.len(),
+        tolerance * 100.0
+    );
+    if current >= floor {
+        Ok(report)
+    } else {
+        Err(report)
+    }
+}
+
+fn load_speedup(path: &std::path::Path) -> Result<f64, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    speedup_at_p(&doc, GATE_P)
+        .ok_or_else(|| format!("{}: no P={GATE_P} speedup entry", path.display()))
+}
+
+fn main() {
+    let cli = Cli::new(
+        "bench_check",
+        "fail when the current epilogue bench regresses vs the CI artifact trajectory",
+    )
+    .opt("current", Some("BENCH_epilogue.json"), "current bench output")
+    .opt("history", Some("bench_history"), "directory of prior BENCH_epilogue.json files")
+    .opt("tolerance", Some("0.2"), "allowed fractional drop below the history median")
+    .opt("min-history", Some("1"), "minimum prior runs before the gate engages");
+    let a = cli.parse();
+    let tolerance = a.f64("tolerance").unwrap_or(0.2);
+    let min_history = a.usize("min-history").unwrap_or(1).max(1);
+
+    let current = match load_speedup(std::path::Path::new(a.get("current").unwrap())) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    let dir = std::path::PathBuf::from(a.get("history").unwrap());
+    let mut history = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(&dir) {
+        // Artifacts may be unpacked flat or one-per-subdirectory; take any
+        // .json at depth ≤ 2.
+        let mut files: Vec<std::path::PathBuf> = Vec::new();
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                if let Ok(sub) = std::fs::read_dir(&p) {
+                    files.extend(sub.flatten().map(|s| s.path()));
+                }
+            } else {
+                files.push(p);
+            }
+        }
+        files.sort();
+        for f in files {
+            if f.extension().and_then(|x| x.to_str()) == Some("json") {
+                match load_speedup(&f) {
+                    Ok(v) => history.push(v),
+                    Err(e) => eprintln!("bench_check: skipping {e}"),
+                }
+            }
+        }
+    }
+
+    if history.len() < min_history {
+        println!(
+            "bench_check: only {} historical run(s) (< {min_history}); trajectory still \
+             accumulating, gate not engaged (current P={GATE_P} speedup {current:.3}x)",
+            history.len()
+        );
+        return;
+    }
+    match check(current, &history, tolerance) {
+        Ok(report) => println!("bench_check: PASS — {report}"),
+        Err(report) => {
+            eprintln!("bench_check: REGRESSION — {report}");
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "bench": "epilogue",
+        "threads": 4,
+        "results": [
+            {"p": 64, "speedup": 1.1, "serial_secs": 1e-4, "sharded_secs": 9e-5},
+            {"p": 256, "speedup": 1.6},
+            {"p": 1024, "speedup": 2.4}
+        ]
+    }"#;
+
+    #[test]
+    fn extracts_the_gated_speedup() {
+        let doc = Json::parse(SAMPLE).unwrap();
+        assert_eq!(speedup_at_p(&doc, 1024.0), Some(2.4));
+        assert_eq!(speedup_at_p(&doc, 64.0), Some(1.1));
+        assert_eq!(speedup_at_p(&doc, 999.0), None);
+        assert_eq!(speedup_at_p(&Json::parse("{}").unwrap(), 1024.0), None);
+    }
+
+    #[test]
+    fn median_odd_and_even() {
+        assert_eq!(median(&[3.0]), 3.0);
+        assert_eq!(median(&[1.0, 2.0, 10.0]), 2.0);
+        assert_eq!(median(&[1.0, 2.0, 3.0, 10.0]), 2.5);
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_fails_beyond() {
+        let hist = [2.0, 2.2, 2.1];
+        // Median 2.1, floor at 20% = 1.68.
+        assert!(check(2.3, &hist, 0.2).is_ok()); // improvement passes
+        assert!(check(1.7, &hist, 0.2).is_ok()); // within tolerance
+        assert!(check(1.67, &hist, 0.2).is_err()); // beyond: regression
+        // A single lucky best run does not move the median gate.
+        let hist2 = [2.0, 2.0, 9.0];
+        assert!(check(1.7, &hist2, 0.2).is_ok());
+    }
+}

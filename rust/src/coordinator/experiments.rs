@@ -633,6 +633,83 @@ pub fn fig6(opts: &ExpOptions) -> ExpOutput {
 }
 
 // ====================================================================
+// Regularization path — warm-started + strong-rule-screened PCDN
+// ====================================================================
+
+/// λ-path experiment (beyond the paper's single-λ evaluation): fit a
+/// geometric grid with the certified path driver (warm starts + strong
+/// rules + KKT post-check) and against the cold full-grid baseline —
+/// the path analog of the paper's runtime comparisons.
+pub fn path_exp(opts: &ExpOptions) -> ExpOutput {
+    use crate::path::{self, PathOptions};
+    let a = registry::by_name("a9a").unwrap();
+    let d = dataset_of(&a, opts);
+    let mut po = PathOptions {
+        n_lambdas: if opts.quick { 8 } else { 30 },
+        lambda_ratio: if opts.quick { 0.05 } else { 0.01 },
+        ..PathOptions::default()
+    };
+    po.train.bundle_size = scaled_p(&a, &d, true);
+    po.train.seed = opts.seed;
+    // The driver pins the chunking degree (default 4 = EXP_DEGREE), so
+    // the certified path replays bitwise on any machine; the global pool
+    // just soaks up the chunks.
+    po.train.pool = Some(WorkerPool::global().clone());
+    let warm = path::fit_path(&d, Objective::Logistic, &po);
+    let mut po_cold = po.clone();
+    po_cold.warm_start = false;
+    po_cold.screening = false;
+    let cold = path::fit_path(&d, Objective::Logistic, &po_cold);
+
+    let mut t = Table::new(
+        "Regularization path (a9a analog, logistic): warm+screened vs cold per lambda",
+        &[
+            "lambda", "nnz", "kkt_rel", "screened", "readmitted", "outer_warm",
+            "outer_cold", "certified",
+        ],
+    );
+    let mut nnz_curve = Vec::new();
+    for (pw, pc) in warm.points.iter().zip(&cold.points) {
+        t.push(vec![
+            pw.lambda.into(),
+            pw.nnz.into(),
+            pw.kkt_rel.into(),
+            pw.screened_out.into(),
+            pw.readmitted.into(),
+            pw.outer_iters.into(),
+            pc.outer_iters.into(),
+            (if pw.certified { "yes" } else { "NO" }).into(),
+        ]);
+        nnz_curve.push((pw.lambda, pw.nnz.max(1) as f64));
+    }
+    let mut ts = Table::new(
+        "Path summary: total outer iterations, certification",
+        &["variant", "total_outer", "total_inner", "certified"],
+    );
+    ts.push(vec![
+        "warm+screened".into(),
+        warm.total_outer.into(),
+        warm.total_inner.into(),
+        (if warm.certified { "yes" } else { "NO" }).into(),
+    ]);
+    ts.push(vec![
+        "cold".into(),
+        cold.total_outer.into(),
+        cold.total_inner.into(),
+        (if cold.certified { "yes" } else { "NO" }).into(),
+    ]);
+    let mut plot = AsciiPlot::new(
+        "Path: model nnz vs lambda ('*'); support grows as lambda shrinks (leftward)",
+    )
+    .logx();
+    plot.series('*', &nnz_curve);
+    ExpOutput {
+        tables: vec![("path".into(), t), ("path_summary".into(), ts)],
+        plots: vec![plot.render()],
+    }
+}
+
+// ====================================================================
 // Theory verification — Lemma 1(a) + Theorem 2
 // ====================================================================
 
@@ -687,6 +764,7 @@ pub fn all(opts: &ExpOptions) -> Vec<(&'static str, ExpOutput)> {
         ("fig4+7", fig4_and_7(opts)),
         ("fig5", fig5(opts)),
         ("fig6", fig6(opts)),
+        ("path", path_exp(opts)),
         ("theory", theory_check(opts)),
     ]
 }
@@ -765,6 +843,29 @@ mod tests {
         }
         // first (1 thread) strictly greater than last of first block (23).
         assert!(times[0] > times[5], "1-thread {} vs 23-thread {}", times[0], times[5]);
+    }
+
+    #[test]
+    fn path_experiment_certifies_and_warm_beats_cold() {
+        let out = path_exp(&quick());
+        assert_eq!(out.tables.len(), 2);
+        // Every per-λ row certified.
+        for row in &out.tables[0].1.rows {
+            assert_eq!(row.last().unwrap(), &Cell::from("yes"), "uncertified λ row");
+        }
+        // Summary: warm+screened spends no more outer iterations than cold.
+        let total = |i: usize| -> i64 {
+            match out.tables[1].1.rows[i][1] {
+                Cell::Int(v) => v,
+                _ => panic!("expected int total_outer"),
+            }
+        };
+        assert!(
+            total(0) <= total(1),
+            "warm+screened {} outers vs cold {}",
+            total(0),
+            total(1)
+        );
     }
 
     #[test]

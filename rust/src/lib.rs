@@ -42,6 +42,7 @@ pub mod linalg;
 pub mod loss;
 pub mod oracle;
 pub mod parallel;
+pub mod path;
 pub mod runtime;
 pub mod solver;
 pub mod testutil;

@@ -3,6 +3,7 @@
 //! ```text
 //! pcdn train    --dataset real-sim --solver pcdn --p 256 --eps 1e-3
 //! pcdn train    --config run.json
+//! pcdn path     --dataset a9a --n-lambdas 20 --ratio 0.01
 //! pcdn bench    --exp fig1 [--full] [--out bench_out]
 //! pcdn inspect  --dataset gisette
 //! pcdn artifacts [--dir artifacts]
@@ -14,6 +15,7 @@ use pcdn::coordinator::{run, summarize};
 use pcdn::data::registry;
 use pcdn::linalg::power;
 use pcdn::loss::Objective;
+use pcdn::path::{fit_path, PathOptions};
 use pcdn::runtime::PjrtRuntime;
 use pcdn::solver::StopRule;
 use pcdn::util::cli::Cli;
@@ -27,11 +29,12 @@ fn main() {
     let cmd = args.remove(0);
     let code = match cmd.as_str() {
         "train" => cmd_train(args),
+        "path" => cmd_path(args),
         "bench" => cmd_bench(args),
         "inspect" => cmd_inspect(args),
         "artifacts" => cmd_artifacts(args),
         other => {
-            eprintln!("unknown subcommand '{other}' (train|bench|inspect|artifacts)");
+            eprintln!("unknown subcommand '{other}' (train|path|bench|inspect|artifacts)");
             2
         }
     };
@@ -130,12 +133,93 @@ fn cmd_train(args: Vec<String>) -> i32 {
     }
 }
 
+fn cmd_path(args: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "pcdn path",
+        "fit an l1 regularization path (warm-started PCDN + certified strong rules)",
+    )
+    .opt("dataset", Some("a9a"), "analog name or libsvm:<path>")
+    .opt("objective", Some("logistic"), "logistic|svm|lasso")
+    .opt("n-lambdas", Some("16"), "grid size")
+    .opt("ratio", Some("0.01"), "lambda_min / lambda_max")
+    .opt("p", Some("64"), "bundle size P")
+    .opt(
+        "degree",
+        Some("4"),
+        "pinned chunking degree (path replays bitwise at any pool width)",
+    )
+    .opt("kkt-eps", Some("1e-5"), "per-point certification threshold")
+    .opt("max-outer", Some("5000"), "outer iteration cap per solve")
+    .opt("seed", Some("0"), "RNG seed")
+    .switch("no-screening", "disable strong-rule screening")
+    .switch("cold", "disable warm starts (the cold-baseline mode)");
+    let a = cli.parse_from(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let name = a.get("dataset").unwrap();
+    let src = if let Some(p) = name.strip_prefix("libsvm:") {
+        DataSource::LibsvmFile(p.to_string())
+    } else {
+        DataSource::Analog(name.to_string())
+    };
+    let data = match src.load() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    let objective = match a.get("objective") {
+        Some("svm") | Some("l2svm") => Objective::L2Svm,
+        Some("lasso") => Objective::Lasso,
+        _ => Objective::Logistic,
+    };
+    let mut po = PathOptions {
+        n_lambdas: a.usize("n-lambdas").unwrap_or(16),
+        lambda_ratio: a.f64("ratio").unwrap_or(0.01),
+        screening: !a.flag("no-screening"),
+        warm_start: !a.flag("cold"),
+        kkt_eps: a.f64("kkt-eps").unwrap_or(1e-5),
+        degree: a.usize("degree").unwrap_or(4).max(1),
+        ..PathOptions::default()
+    };
+    po.train.bundle_size = a.usize("p").unwrap_or(64);
+    po.train.max_outer = a.usize("max-outer").unwrap_or(5000);
+    po.train.seed = a.usize("seed").unwrap_or(0) as u64;
+    let r = fit_path(&data, objective, &po);
+    println!(
+        "dataset {} ({} x {}), lambda_max = {:.6}",
+        data.name,
+        data.samples(),
+        data.features(),
+        r.lambda_max
+    );
+    print!("{}", r.table());
+    println!(
+        "total: {} outer / {} inner iterations over {} grid points; {}",
+        r.total_outer,
+        r.total_inner,
+        r.points.len(),
+        if r.certified {
+            "every point certified (KKT + sound screen)"
+        } else {
+            "CERTIFICATION FAILED on at least one point"
+        }
+    );
+    if r.certified {
+        0
+    } else {
+        1
+    }
+}
+
 fn cmd_bench(args: Vec<String>) -> i32 {
     let cli = Cli::new("pcdn bench", "regenerate paper tables/figures")
         .opt(
             "exp",
             Some("all"),
-            "table2|fig1|fig2|table3|fig3|fig4|fig5|fig6|theory|all",
+            "table2|fig1|fig2|table3|fig3|fig4|fig5|fig6|path|theory|all",
         )
         .switch("full", "full-scale run (default: quick)")
         .opt("out", Some("bench_out"), "CSV output directory")
@@ -162,6 +246,7 @@ fn cmd_bench(args: Vec<String>) -> i32 {
         "fig4" | "fig7" => vec![("fig4+7", experiments::fig4_and_7(&opts))],
         "fig5" => vec![("fig5", experiments::fig5(&opts))],
         "fig6" => vec![("fig6", experiments::fig6(&opts))],
+        "path" => vec![("path", experiments::path_exp(&opts))],
         "theory" => vec![("theory", experiments::theory_check(&opts))],
         other => {
             eprintln!("unknown experiment '{other}'");

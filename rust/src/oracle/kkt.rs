@@ -62,6 +62,30 @@ pub fn kkt_rel(data: &Dataset, obj: Objective, c: f64, w: &[f64], l2: f64) -> f6
     r / kkt_residual_norm1(data, obj, c, &zeros, l2).max(1e-300)
 }
 
+/// Screening certificate: indices of *frozen* features (`mask[j] == false`)
+/// whose minimum-norm-subgradient entry at `w` exceeds `slack` — features a
+/// screening rule discarded that the first-order conditions say should have
+/// been free to move. An empty return certifies the screen sound at this
+/// point; a non-empty one is the path driver's re-admission set. Dense
+/// recomputation, independent of any solver's maintained state.
+pub fn screen_violations(
+    data: &Dataset,
+    obj: Objective,
+    c: f64,
+    w: &[f64],
+    mask: &[bool],
+    l2: f64,
+    slack: f64,
+) -> Vec<usize> {
+    assert_eq!(mask.len(), w.len(), "screen mask length mismatch");
+    min_norm_subgrad(data, obj, c, w, l2)
+        .iter()
+        .enumerate()
+        .filter(|&(j, vj)| !mask[j] && vj.abs() > slack)
+        .map(|(j, _)| j)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +154,60 @@ mod tests {
         for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
             assert_eq!(kkt_residual_norm1(&d, obj, 1e-9, &w, 0.0), 0.0);
             assert_eq!(kkt_rel(&d, obj, 1e-9, &w, 0.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn screen_violations_flags_wrongly_frozen_features() {
+        // Train unmasked to the optimum; a mask that freezes a feature the
+        // optimum needs (w*_j ≠ 0, so v_j at the screened point w_j = 0
+        // would be nonzero) must be flagged, while freezing a feature that
+        // is legitimately 0 at the optimum passes.
+        let d = toy(5);
+        let r = Cdn::new().train(
+            &d,
+            Objective::Logistic,
+            &TrainOptions {
+                c: 1.0,
+                stop: StopRule::SubgradRel(1e-7),
+                max_outer: 3000,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged);
+        // Everything active: trivially no violations, mask fully true.
+        let all_true = vec![true; d.features()];
+        assert!(
+            screen_violations(&d, Objective::Logistic, 1.0, &r.w, &all_true, 0.0, 1e-9)
+                .is_empty()
+        );
+        // Freeze the largest-|w| feature and zero it out: its gradient can
+        // no longer be cancelled, so the certificate must flag it.
+        let jbig = (0..d.features())
+            .max_by(|&a, &b| r.w[a].abs().partial_cmp(&r.w[b].abs()).unwrap())
+            .unwrap();
+        assert!(r.w[jbig].abs() > 1e-6, "test premise: optimum is not all-zero");
+        let mut w_screened = r.w.clone();
+        w_screened[jbig] = 0.0;
+        let mut mask = all_true.clone();
+        mask[jbig] = false;
+        let viol =
+            screen_violations(&d, Objective::Logistic, 1.0, &w_screened, &mask, 0.0, 1e-9);
+        assert_eq!(viol, vec![jbig]);
+        // Freezing a feature that is 0 at the optimum is sound.
+        if let Some(j0) = (0..d.features()).find(|&j| r.w[j] == 0.0) {
+            let mut mask2 = all_true;
+            mask2[j0] = false;
+            assert!(screen_violations(
+                &d,
+                Objective::Logistic,
+                1.0,
+                &r.w,
+                &mask2,
+                0.0,
+                1e-5
+            )
+            .is_empty());
         }
     }
 

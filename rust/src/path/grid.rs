@@ -1,0 +1,161 @@
+//! λ-grid construction and the zero-model `λ_max`.
+//!
+//! Convention: the solvers minimize `F_c(w) = c·L(w) + ‖w‖₁` (Eq. 1), which
+//! is the classic path problem `L(w) + λ‖w‖₁` scaled by `1/λ` — the same
+//! minimizer with `c = 1/λ`. The path layer speaks λ (what the screening
+//! literature uses) and converts to `c` at the solver boundary.
+//!
+//! `λ_max = ‖∇L(0)‖∞` is the smallest λ whose optimum is the all-zero
+//! model: at `w = 0` the first-order condition `0 ∈ (1/λ)·∇L(0) + ∂‖0‖₁`
+//! holds iff every `|∇_j L(0)| ≤ λ`.
+
+use crate::data::Dataset;
+use crate::loss::Objective;
+use crate::oracle::dense;
+
+/// `‖∇L(0)‖∞` from the dense (maintained-quantity-free) gradient — the
+/// smallest λ at which the all-zero model is optimal.
+pub fn lambda_max(data: &Dataset, obj: Objective) -> f64 {
+    let zeros = vec![0.0f64; data.features()];
+    dense::dense_gradient(data, obj, 1.0, &zeros, 0.0)
+        .iter()
+        .fold(0.0f64, |acc, g| acc.max(g.abs()))
+}
+
+/// A descending λ grid.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    /// Strictly positive, non-increasing.
+    pub lambdas: Vec<f64>,
+}
+
+impl Grid {
+    /// Geometric grid from `lambda_hi` down to `ratio·lambda_hi`:
+    /// `λ_k = lambda_hi · ratio^{k/(n−1)}`, `k = 0 … n−1` (the glmnet
+    /// convention). `n_lambdas = 1` yields the single point `lambda_hi`
+    /// and `ratio` is ignored.
+    pub fn geometric(lambda_hi: f64, n_lambdas: usize, ratio: f64) -> Grid {
+        assert!(
+            lambda_hi > 0.0 && lambda_hi.is_finite(),
+            "grid anchor λ must be positive and finite (got {lambda_hi})"
+        );
+        assert!(n_lambdas >= 1, "a grid needs at least one λ");
+        if n_lambdas == 1 {
+            return Grid {
+                lambdas: vec![lambda_hi],
+            };
+        }
+        assert!(
+            ratio > 0.0 && ratio <= 1.0,
+            "lambda ratio must be in (0, 1] (got {ratio})"
+        );
+        let m = (n_lambdas - 1) as f64;
+        let lambdas = (0..n_lambdas)
+            .map(|k| lambda_hi * ratio.powf(k as f64 / m))
+            .collect();
+        Grid { lambdas }
+    }
+
+    /// Wrap an explicit grid (validated: positive, finite, non-increasing —
+    /// the sequential strong rule walks λ downward).
+    pub fn explicit(lambdas: Vec<f64>) -> Grid {
+        assert!(!lambdas.is_empty(), "a grid needs at least one λ");
+        for pair in lambdas.windows(2) {
+            assert!(
+                pair[1] <= pair[0],
+                "grid must be non-increasing ({} before {})",
+                pair[0],
+                pair[1]
+            );
+        }
+        assert!(
+            lambdas.iter().all(|l| *l > 0.0 && l.is_finite()),
+            "grid λs must be positive and finite"
+        );
+        Grid { lambdas }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lambdas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lambdas.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::loss::LossState;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn geometric_shape_and_endpoints() {
+        let g = Grid::geometric(2.0, 5, 0.01);
+        assert_eq!(g.len(), 5);
+        assert_close(g.lambdas[0], 2.0, 1e-12);
+        assert_close(*g.lambdas.last().unwrap(), 0.02, 1e-12);
+        for pair in g.lambdas.windows(2) {
+            assert!(pair[1] < pair[0]);
+            // Constant ratio between neighbours.
+            assert_close(pair[1] / pair[0], 0.01f64.powf(0.25), 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_lambda_grid_ignores_ratio() {
+        // n_lambdas = 1: the (out-of-range) ratio must not even be looked
+        // at — the grid is just the anchor.
+        let g = Grid::geometric(0.7, 1, -3.0);
+        assert_eq!(g.lambdas, vec![0.7]);
+    }
+
+    #[test]
+    fn explicit_validates_order() {
+        let g = Grid::explicit(vec![1.0, 0.5, 0.5, 0.1]);
+        assert_eq!(g.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-increasing")]
+    fn explicit_rejects_ascending() {
+        Grid::explicit(vec![0.1, 0.5]);
+    }
+
+    #[test]
+    fn lambda_max_matches_maintained_gradient_and_zeroes_the_model() {
+        let d = generate(
+            &SyntheticSpec {
+                samples: 60,
+                features: 25,
+                nnz_per_row: 6,
+                ..Default::default()
+            },
+            3,
+        );
+        for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
+            let lmax = lambda_max(&d, obj);
+            assert!(lmax > 0.0);
+            // Same quantity from the maintained state at c = 1.
+            let st = LossState::new(obj, &d, 1.0);
+            let g = st.full_gradient();
+            let inf = g.iter().fold(0.0f64, |a, x| a.max(x.abs()));
+            assert_close(lmax, inf, 1e-10);
+            // At λ ≥ λ_max the zero model satisfies KKT exactly. Probe
+            // just above the boundary: at exactly 1/λ_max the rounding of
+            // the reciprocal can push |c·∇L| a ulp past 1 (the knife edge
+            // the path driver's anchor guard exists for).
+            let zeros = vec![0.0; d.features()];
+            let rel = crate::oracle::kkt::kkt_rel(
+                &d,
+                obj,
+                1.0 / (lmax * (1.0 + 1e-10)),
+                &zeros,
+                0.0,
+            );
+            assert_eq!(rel, 0.0);
+        }
+    }
+}

@@ -1,0 +1,554 @@
+//! Regularization-path driver: fit `L(w) + λ‖w‖₁` over a descending λ
+//! grid with warm-started PCDN, sequential strong-rule screening, and a
+//! mandatory dense KKT certificate per grid point.
+//!
+//! The paper evaluates PCDN at a single λ per dataset; real deployments
+//! sweep a path for model selection — the setting where CDN-family methods
+//! shine (Scherrer et al.; Bradley et al.). The driver composes three
+//! in-tree pieces:
+//!
+//! * **λ grid** ([`grid::Grid`]) — geometric from
+//!   [`grid::lambda_max`] (the zero-model `‖∇L(0)‖∞`) down to
+//!   `ratio·λ_max`;
+//! * **warm starts** — each solve seeds
+//!   [`TrainOptions::warm_start`] from the previous λ's optimum, so the
+//!   solver pays only for the *change* in λ;
+//! * **strong-rule screening** ([`screen::strong_rule_mask`]) — discards
+//!   feature `j` at `λ_{k+1}` when `|∇_j L(ŵ(λ_k))| < 2λ_{k+1} − λ_k`,
+//!   enforced through [`TrainOptions::feature_mask`] (honored by all four
+//!   solvers' outer loops).
+//!
+//! The strong rule is a heuristic, so every screened solve ends with a
+//! dense KKT post-check
+//! ([`oracle::kkt::screen_violations`](crate::oracle::kkt::screen_violations)):
+//! wrongly frozen features are re-admitted and the point is re-solved
+//! (warm) until the screen is *certified* sound; the per-point
+//! [`PathPoint::certified`] additionally requires the dense relative KKT
+//! residual ≤ [`PathOptions::kkt_eps`].
+//!
+//! **Stopping.** Warm starts break the relative subgradient rule (the
+//! reference point is nearly optimal already), so every solve runs under
+//! [`StopRule::SubgradAbs`] with an absolute target derived from the
+//! zero-model subgradient scale at that λ — each grid point is solved to
+//! the same certification accuracy regardless of how good its warm start
+//! was.
+//!
+//! **Determinism.** The solve's chunking degree is pinned to
+//! [`PathOptions::degree`] (never a physical pool width), so a certified
+//! path replays bit-for-bit on any machine and any pool size — the
+//! property the screening-soundness test campaign asserts.
+//!
+//! A probe attached to [`PathOptions::train`] observes every λ's solve in
+//! grid order (per-outer and per-bundle events); stateful cross-run
+//! invariants (e.g. monotone objective) do not apply across λ boundaries,
+//! where `c = 1/λ` changes the objective being minimized.
+
+pub mod grid;
+pub mod screen;
+
+pub use grid::{lambda_max, Grid};
+
+use std::sync::Arc;
+
+use crate::data::Dataset;
+use crate::linalg;
+use crate::loss::Objective;
+use crate::oracle::{dense, kkt};
+use crate::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+
+/// Options for a path fit.
+#[derive(Clone, Debug)]
+pub struct PathOptions {
+    /// Grid size (≥ 1).
+    pub n_lambdas: usize,
+    /// `λ_min / λ_max` for the geometric grid (ignored when
+    /// `n_lambdas = 1`).
+    pub lambda_ratio: f64,
+    /// Apply sequential strong-rule screening (certified by the KKT
+    /// post-check either way).
+    pub screening: bool,
+    /// Seed each solve from the previous λ's optimum. Disable for the
+    /// cold-baseline comparison the bench measures.
+    pub warm_start: bool,
+    /// Per-point certification threshold on the dense relative KKT
+    /// residual; solves target 10× tighter so the certificate has margin.
+    pub kkt_eps: f64,
+    /// Cap on re-admission re-solves per grid point (strong-rule failures
+    /// are rare; 4 is generous).
+    pub max_rescreen_rounds: usize,
+    /// Pinned chunking degree for every solve (`TrainOptions::n_threads`):
+    /// fixes the arithmetic independent of the physical pool, so the path
+    /// replays bitwise at any pool width. `1` forces pure serial solves.
+    pub degree: usize,
+    /// Base solver options. `c`, `stop`, `warm_start`, `feature_mask` and
+    /// `n_threads` are overridden per solve; `bundle_size`, `armijo`,
+    /// `max_outer`, `max_secs`, `seed`, `pool` and `probe` pass through.
+    /// `l2_reg` must be 0 (the strong rule is derived for pure ℓ1).
+    pub train: TrainOptions,
+}
+
+impl Default for PathOptions {
+    fn default() -> Self {
+        PathOptions {
+            n_lambdas: 16,
+            lambda_ratio: 1e-2,
+            screening: true,
+            warm_start: true,
+            kkt_eps: 1e-5,
+            max_rescreen_rounds: 4,
+            degree: 4,
+            train: TrainOptions {
+                max_outer: 5000,
+                ..TrainOptions::default()
+            },
+        }
+    }
+}
+
+/// One certified grid point.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    pub lambda: f64,
+    /// Solver-side regularization weight `c = 1/λ`.
+    pub c: f64,
+    /// The fitted model.
+    pub w: Vec<f64>,
+    /// Dense objective `c·L(w) + ‖w‖₁` at this point.
+    pub objective: f64,
+    pub nnz: usize,
+    /// Dense relative KKT residual (`oracle::kkt::kkt_rel`).
+    pub kkt_rel: f64,
+    /// Features frozen by the *final accepted* screen (0 when screening is
+    /// off or the rule could not discard anything).
+    pub screened_out: usize,
+    /// Screening violators re-admitted across the re-solve rounds.
+    pub readmitted: usize,
+    /// PCDN solves spent on this point (1 + re-admission rounds; 0 for
+    /// short-circuited λ ≥ λ_max points, whose zero model needs no solve).
+    pub solves: usize,
+    /// Outer iterations summed over those solves.
+    pub outer_iters: usize,
+    /// Every solve reported convergence under its stop rule.
+    pub converged: bool,
+    /// `kkt_rel ≤ kkt_eps` and zero un-re-admitted screening violations.
+    pub certified: bool,
+    /// The final active mask (`None` = all features active).
+    pub final_mask: Option<Vec<bool>>,
+}
+
+/// A fitted path.
+#[derive(Clone, Debug)]
+pub struct PathResult {
+    /// `‖∇L(0)‖∞` — the grid anchor.
+    pub lambda_max: f64,
+    /// One point per grid λ, in grid (descending-λ) order.
+    pub points: Vec<PathPoint>,
+    /// All points certified.
+    pub certified: bool,
+    /// Outer iterations summed over the whole grid (the warm-vs-cold bench
+    /// currency).
+    pub total_outer: usize,
+    /// Inner (bundle) iterations summed over the whole grid.
+    pub total_inner: usize,
+}
+
+impl PathResult {
+    /// Fixed-width per-λ table (CLI + example rendering).
+    pub fn table(&self) -> String {
+        let mut s = format!(
+            "{:>12} {:>10} {:>6} {:>10} {:>9} {:>10} {:>7} {:>7} {:>9}\n",
+            "lambda", "c", "nnz", "objective", "kkt_rel", "screened", "readm", "outers", "certified"
+        );
+        for p in &self.points {
+            s.push_str(&format!(
+                "{:>12.6} {:>10.4} {:>6} {:>10.4} {:>9.2e} {:>10} {:>7} {:>7} {:>9}\n",
+                p.lambda,
+                p.c,
+                p.nnz,
+                p.objective,
+                p.kkt_rel,
+                p.screened_out,
+                p.readmitted,
+                p.outer_iters,
+                p.certified
+            ));
+        }
+        s
+    }
+}
+
+/// Relative guard on the geometric grid's anchor: at exactly `λ = λ_max`
+/// the boundary condition `|∇_j L(0)|/λ = 1` sits on an FP knife edge
+/// (rounding of `c = 1/λ` can push the scaled gradient marginally above 1
+/// and produce a spurious ~1e-16 step, voiding the trivial certificate).
+/// Anchoring `(1 + 1e-10)·λ_max` keeps the first grid point's all-zero
+/// optimum exact in floating point while being λ_max for every practical
+/// purpose.
+const LAMBDA_MAX_GUARD: f64 = 1e-10;
+
+/// Fit the geometric grid anchored at `(1 + 1e-10)·λ_max` (see
+/// [`LAMBDA_MAX_GUARD`]).
+pub fn fit_path(data: &Dataset, obj: Objective, popts: &PathOptions) -> PathResult {
+    // One dense pass serves both the anchor and the whole fit.
+    let g0 = dense::dense_gradient(data, obj, 1.0, &vec![0.0; data.features()], 0.0);
+    let lmax = g0.iter().fold(0.0f64, |acc, gj| acc.max(gj.abs()));
+    assert!(
+        lmax > 0.0 && lmax.is_finite(),
+        "degenerate dataset: ∇L(0) = 0, no λ path exists"
+    );
+    let g = Grid::geometric(
+        lmax * (1.0 + LAMBDA_MAX_GUARD),
+        popts.n_lambdas,
+        popts.lambda_ratio,
+    );
+    fit_path_impl(data, obj, &g, popts, g0)
+}
+
+/// Fit an explicit (descending) grid. Grid points at (or within FP noise
+/// of) `λ_max` and above certify trivially on the exact all-zero model —
+/// the driver short-circuits them rather than chasing the 0/0 relative
+/// residual on the boundary's floating-point knife edge.
+pub fn fit_path_on_grid(
+    data: &Dataset,
+    obj: Objective,
+    g: &Grid,
+    popts: &PathOptions,
+) -> PathResult {
+    let zeros = vec![0.0f64; data.features()];
+    let g0 = dense::dense_gradient(data, obj, 1.0, &zeros, 0.0);
+    fit_path_impl(data, obj, g, popts, g0)
+}
+
+/// Shared driver body. `g0 = ∇L(0)` (unscaled) is computed exactly once
+/// by the public entry points: it yields λ_max as its ∞-norm, seeds the
+/// sequential strong rule, and gives each λ's zero-model subgradient
+/// scale in O(n). The certifying `kkt_rel` calls below still run their
+/// own dense passes at the *fitted* points — that redundancy is the
+/// certificate's independence, not waste.
+fn fit_path_impl(
+    data: &Dataset,
+    obj: Objective,
+    g: &Grid,
+    popts: &PathOptions,
+    g0: Vec<f64>,
+) -> PathResult {
+    assert_eq!(
+        popts.train.l2_reg, 0.0,
+        "the path driver's strong rule is derived for pure ℓ1 (l2_reg = 0)"
+    );
+    assert!(popts.degree >= 1, "degree must be ≥ 1");
+    let n = data.features();
+    let zeros = vec![0.0f64; n];
+    let lmax = g0.iter().fold(0.0f64, |acc, gj| acc.max(gj.abs()));
+
+    // Previous-point state for warm starts and the sequential rule. The
+    // k = 0 convention takes λ_prev = max(λ_max, λ_0): above λ_max the
+    // all-zero "previous solution" is exact, so the rule stays sequential.
+    let mut w_prev = zeros.clone();
+    let mut g_prev = g0.clone();
+    let mut lambda_prev = lmax.max(g.lambdas.first().copied().unwrap_or(lmax));
+
+    let mut points: Vec<PathPoint> = Vec::with_capacity(g.len());
+    let mut total_outer = 0usize;
+    let mut total_inner = 0usize;
+
+    let n_points = g.lambdas.len();
+    for (k, &lambda) in g.lambdas.iter().enumerate() {
+        let c = 1.0 / lambda;
+        // Absolute stop target from the zero-model subgradient scale at
+        // this c — every grid point reaches the same certification
+        // accuracy regardless of warm-start quality. `‖v(0)‖₁` comes from
+        // the cached ∇L(0) in O(n): at w = 0 the minimum-norm subgradient
+        // entry has magnitude `max(|c·∇_j L(0)| − 1, 0)`, exactly what the
+        // dense `kkt_residual_norm1` would recompute with a full pass.
+        let v0: f64 = g0
+            .iter()
+            .map(|&gj| ((c * gj).abs() - 1.0).max(0.0))
+            .sum();
+
+        let mut mask: Option<Vec<bool>> = if popts.screening {
+            screen::strong_rule_mask(&g_prev, &w_prev, lambda_prev, lambda)
+        } else {
+            None
+        };
+
+        // λ at (or within FP noise of) λ_max and above: v0 is pure
+        // round-off (≤ n·ulp), the zero model is optimal to O((λ_max−λ)²)
+        // in objective, and the *relative* residual at this λ is a 0/0
+        // knife edge no solver can meaningfully improve. Short-circuit to
+        // the exact trivial point instead of chasing an ~1e-22 absolute
+        // stop target to max_outer.
+        let noise_floor = 1e-14 * n as f64;
+        if v0 <= noise_floor {
+            let screened_out = mask
+                .as_ref()
+                .map(|m| m.iter().filter(|&&keep| !keep).count())
+                .unwrap_or(0);
+            points.push(PathPoint {
+                lambda,
+                c,
+                objective: dense::dense_objective(data, obj, c, &zeros, 0.0),
+                nnz: 0,
+                kkt_rel: 0.0,
+                screened_out,
+                readmitted: 0,
+                solves: 0,
+                outer_iters: 0,
+                converged: true,
+                certified: true,
+                final_mask: mask,
+                w: zeros.clone(),
+            });
+            // Sequential state: the solution is w = 0, whose gradient is
+            // the cached g0 — no dense recompute needed.
+            if w_prev.iter().any(|&x| x != 0.0) {
+                w_prev = zeros.clone();
+            }
+            g_prev.copy_from_slice(&g0);
+            lambda_prev = lambda;
+            continue;
+        }
+        let stop = StopRule::SubgradAbs(0.1 * popts.kkt_eps * v0);
+
+        let mut w = if popts.warm_start {
+            w_prev.clone()
+        } else {
+            zeros.clone()
+        };
+        let mut readmitted = 0usize;
+        let mut solves = 0usize;
+        let mut outer_iters = 0usize;
+        let mut converged = true;
+        // The loop value is the outstanding screening-violation count at
+        // the final w — 0 on the clean-exit path, the last (un-re-admitted)
+        // violator count when the re-solve budget runs out.
+        let residual_violations = loop {
+            solves += 1;
+            let mut o = popts.train.clone();
+            o.c = c;
+            o.stop = stop;
+            o.warm_start = Some(w.clone());
+            o.feature_mask = mask.clone().map(Arc::new);
+            o.n_threads = popts.degree;
+            if popts.degree <= 1 {
+                // Pure serial pinning: never let an explicit pool widen
+                // the chunking (parallel_degree falls back to pool width
+                // at n_threads ≤ 1).
+                o.pool = None;
+            }
+            let r = Pcdn::new().train(data, obj, &o);
+            outer_iters += r.outer_iters;
+            total_inner += r.inner_iters;
+            converged &= r.converged;
+            w = r.w;
+
+            // KKT post-check on the frozen set: re-admit violators and
+            // re-solve (warm from the current w) until certified sound.
+            let violators = match &mask {
+                Some(m) => {
+                    kkt::screen_violations(data, obj, c, &w, m, 0.0, screen::READMIT_SLACK)
+                }
+                None => Vec::new(),
+            };
+            if violators.is_empty() || solves > popts.max_rescreen_rounds {
+                break violators.len();
+            }
+            readmitted += violators.len();
+            let m = mask.as_mut().expect("violators imply a mask");
+            for j in violators {
+                m[j] = true;
+            }
+            if m.iter().all(|&keep| keep) {
+                mask = None;
+            }
+        };
+
+        let kkt_rel = kkt::kkt_rel(data, obj, c, &w, 0.0);
+        let certified = kkt_rel <= popts.kkt_eps && residual_violations == 0;
+        let screened_out = mask
+            .as_ref()
+            .map(|m| m.iter().filter(|&&keep| !keep).count())
+            .unwrap_or(0);
+        points.push(PathPoint {
+            lambda,
+            c,
+            objective: dense::dense_objective(data, obj, c, &w, 0.0),
+            nnz: linalg::nnz(&w),
+            kkt_rel,
+            screened_out,
+            readmitted,
+            solves,
+            outer_iters,
+            converged,
+            certified,
+            final_mask: mask,
+            w: w.clone(),
+        });
+        total_outer += outer_iters;
+
+        // Advance the sequential state. `g_prev` feeds only the strong
+        // rule, so the dense pass is skipped when screening is off (the
+        // cold baseline must not pay for gradients nobody reads) and
+        // after the last grid point.
+        if popts.screening && k + 1 < n_points {
+            g_prev = dense::dense_gradient(data, obj, 1.0, &w, 0.0);
+        }
+        w_prev = w;
+        lambda_prev = lambda;
+    }
+
+    let certified = points.iter().all(|p| p.certified);
+    PathResult {
+        lambda_max: lmax,
+        points,
+        certified,
+        total_outer,
+        total_inner,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn toy(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 80,
+                features: 40,
+                nnz_per_row: 6,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn quick_opts() -> PathOptions {
+        let mut o = PathOptions {
+            n_lambdas: 8,
+            lambda_ratio: 0.05,
+            ..Default::default()
+        };
+        o.train.bundle_size = 16; // several bundles per sweep on toy data
+        o
+    }
+
+    #[test]
+    fn path_certifies_every_grid_point() {
+        let d = toy(1);
+        let r = fit_path(&d, Objective::Logistic, &quick_opts());
+        assert_eq!(r.points.len(), 8);
+        assert!(r.certified, "uncertified points:\n{}", r.table());
+        for p in &r.points {
+            assert!(p.kkt_rel <= 1e-5, "λ = {}: kkt_rel {}", p.lambda, p.kkt_rel);
+            assert!(p.converged);
+        }
+        // The first point sits at λ_max: the all-zero model.
+        assert_eq!(r.points[0].nnz, 0);
+        // Sparsity is monotone-ish: the last point is the densest.
+        let last = r.points.last().unwrap();
+        assert!(last.nnz >= r.points[0].nnz);
+        assert!(last.nnz > 0, "smallest λ should activate features");
+    }
+
+    #[test]
+    fn screening_matches_unscreened_path() {
+        // Same grid with and without the strong rule: identical certified
+        // optima (screening is an optimization, never a semantics change).
+        let d = toy(2);
+        let o_screen = quick_opts();
+        let mut o_plain = quick_opts();
+        o_plain.screening = false;
+        let rs = fit_path(&d, Objective::Logistic, &o_screen);
+        let rp = fit_path(&d, Objective::Logistic, &o_plain);
+        assert!(rs.certified && rp.certified);
+        for (a, b) in rs.points.iter().zip(&rp.points) {
+            let tol = 1e-5 * a.objective.abs().max(1.0);
+            assert!(
+                (a.objective - b.objective).abs() <= tol,
+                "λ = {}: screened {} vs plain {}",
+                a.lambda,
+                a.objective,
+                b.objective
+            );
+            // Supports agree above FP dust (trajectories differ, so a
+            // borderline coefficient can be 0 in one run and ~1e-15 in the
+            // other — compare thresholded supports, not raw nnz).
+            let sup = |w: &[f64]| -> Vec<usize> {
+                w.iter()
+                    .enumerate()
+                    .filter(|(_, x)| x.abs() > 1e-8)
+                    .map(|(j, _)| j)
+                    .collect()
+            };
+            assert_eq!(sup(&a.w), sup(&b.w), "support mismatch at λ = {}", a.lambda);
+        }
+    }
+
+    #[test]
+    fn screening_actually_screens() {
+        // On a wide problem with a tight grid the rule must freeze a
+        // nontrivial share of features at the large-λ end.
+        let d = generate(
+            &SyntheticSpec {
+                samples: 60,
+                features: 120,
+                nnz_per_row: 5,
+                true_density: 0.05,
+                ..Default::default()
+            },
+            3,
+        );
+        let mut o = quick_opts();
+        o.n_lambdas = 10;
+        o.lambda_ratio = 0.1;
+        let r = fit_path(&d, Objective::Logistic, &o);
+        assert!(r.certified);
+        let total_screened: usize = r.points.iter().map(|p| p.screened_out).sum();
+        assert!(
+            total_screened > 0,
+            "strong rule never fired on a 120-feature path"
+        );
+    }
+
+    #[test]
+    fn warm_start_reduces_total_outer_iterations() {
+        let d = toy(4);
+        let warm = fit_path(&d, Objective::Logistic, &quick_opts());
+        let mut cold_opts = quick_opts();
+        cold_opts.warm_start = false;
+        cold_opts.screening = false;
+        let cold = fit_path(&d, Objective::Logistic, &cold_opts);
+        assert!(warm.certified && cold.certified);
+        assert!(
+            warm.total_outer <= cold.total_outer,
+            "warm {} vs cold {} outer iterations",
+            warm.total_outer,
+            cold.total_outer
+        );
+    }
+
+    #[test]
+    fn works_for_all_three_losses() {
+        let d = toy(5);
+        let mut o = quick_opts();
+        o.n_lambdas = 5;
+        o.lambda_ratio = 0.1;
+        for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
+            let r = fit_path(&d, obj, &o);
+            assert!(r.certified, "{obj:?} path uncertified:\n{}", r.table());
+        }
+    }
+
+    #[test]
+    fn table_renders_one_row_per_lambda() {
+        let d = toy(6);
+        let mut o = quick_opts();
+        o.n_lambdas = 3;
+        let r = fit_path(&d, Objective::Logistic, &o);
+        let t = r.table();
+        assert_eq!(t.lines().count(), 4); // header + 3 points
+        assert!(t.contains("kkt_rel"));
+    }
+}

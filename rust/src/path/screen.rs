@@ -1,0 +1,94 @@
+//! Sequential strong rules (Tibshirani et al. 2012) for the λ path.
+//!
+//! Walking the grid downward from `λ_k` to `λ_{k+1}`, the strong rule
+//! discards feature `j` when
+//!
+//! ```text
+//! |∇_j L(ŵ(λ_k))| < 2·λ_{k+1} − λ_k
+//! ```
+//!
+//! (gradient of the *unscaled* loss at the previous solution). The rule is
+//! a heuristic, not a safe rule: it assumes the gradient is 1-Lipschitz
+//! along the path in λ, which can fail — so every screened fit is followed
+//! by a KKT post-check
+//! ([`oracle::kkt::screen_violations`](crate::oracle::kkt::screen_violations))
+//! that re-admits violators and re-solves until the screen is certified
+//! sound. Features active at `λ_k` (`ŵ_j ≠ 0`) are never discarded.
+
+/// Absolute slack on a frozen feature's minimum-norm-subgradient entry
+/// before it counts as a screening violation. Deliberately tight (far
+/// below the certification ε): re-admitting a borderline feature costs one
+/// cheap warm re-solve, while missing a real violator voids the
+/// certificate.
+pub const READMIT_SLACK: f64 = 1e-9;
+
+/// Build the strong-rule mask for `λ_next` from the previous solution:
+/// keep `j` iff `w_prev[j] ≠ 0` or `|g_prev[j]| ≥ 2·λ_next − λ_prev`,
+/// where `g_prev = ∇L(w_prev)` (unscaled loss gradient). Returns `None`
+/// when the rule cannot discard anything — either the threshold is
+/// non-positive (grid too coarse: `λ_next < λ_prev/2`) or every feature
+/// survives — so callers skip the masked machinery entirely.
+pub fn strong_rule_mask(
+    g_prev: &[f64],
+    w_prev: &[f64],
+    lambda_prev: f64,
+    lambda_next: f64,
+) -> Option<Vec<bool>> {
+    assert_eq!(g_prev.len(), w_prev.len());
+    assert!(lambda_next > 0.0 && lambda_prev > 0.0);
+    let threshold = 2.0 * lambda_next - lambda_prev;
+    if threshold <= 0.0 {
+        return None;
+    }
+    let mask: Vec<bool> = g_prev
+        .iter()
+        .zip(w_prev)
+        .map(|(&g, &w)| w != 0.0 || g.abs() >= threshold)
+        .collect();
+    if mask.iter().all(|&keep| keep) {
+        None
+    } else {
+        Some(mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_active_and_high_gradient_features() {
+        // λ_prev = 1, λ_next = 0.8 ⇒ threshold 0.6.
+        let g = [0.9, 0.3, 0.61, 0.59];
+        let w = [0.0, 0.5, 0.0, 0.0];
+        let m = strong_rule_mask(&g, &w, 1.0, 0.8).expect("should screen");
+        // j0: |g| ≥ 0.6 → keep; j1: active → keep despite small gradient;
+        // j2: just above threshold → keep; j3: below → discard.
+        assert_eq!(m, vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn coarse_grid_disables_screening() {
+        // λ_next < λ_prev/2 ⇒ threshold ≤ 0 ⇒ nothing can be discarded.
+        let g = [0.0, 0.1];
+        let w = [0.0, 0.0];
+        assert!(strong_rule_mask(&g, &w, 1.0, 0.4).is_none());
+    }
+
+    #[test]
+    fn all_survivors_collapse_to_none() {
+        let g = [0.9, 0.8];
+        let w = [0.0, 0.0];
+        assert!(strong_rule_mask(&g, &w, 1.0, 0.9).is_none());
+    }
+
+    #[test]
+    fn first_point_at_lambda_max_discards_everything_strictly_below() {
+        // The k = 0 convention: λ_prev = λ_max. At λ_next = λ_max the
+        // threshold is λ_max itself, so only features at the max survive.
+        let g = [1.0, 0.99, 0.5];
+        let w = [0.0, 0.0, 0.0];
+        let m = strong_rule_mask(&g, &w, 1.0, 1.0).expect("should screen");
+        assert_eq!(m, vec![true, false, false]);
+    }
+}

@@ -40,6 +40,7 @@ impl Solver for Cdn {
 
     fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult {
         let n = data.features();
+        opts.check_mask(n);
         let mut state = LossState::new(obj, data, opts.c);
         let mut w = vec![0.0f64; n];
         if let Some(w0) = &opts.warm_start {
@@ -56,9 +57,13 @@ impl Solver for Cdn {
 
         // Shrinking state: `active[j]`, the previous pass's max violation,
         // and the first pass's violation as the convergence scale
-        // (LIBLINEAR's Gmax_init).
-        let mut active: Vec<bool> = vec![true; n];
-        let mut n_active = n;
+        // (LIBLINEAR's Gmax_init). A `feature_mask` seeds the active set —
+        // frozen features start (and stay) inactive, and the shrinking
+        // restore pass only ever restores up to the mask, so shrinking and
+        // screening compose without interfering.
+        let mut active: Vec<bool> = (0..n).map(|j| opts.feature_active(j)).collect();
+        let mut n_active = active.iter().filter(|&&a| a).count();
+        let n_masked = n_active;
         let mut m_prev = f64::INFINITY;
         let mut m_first: Option<f64> = None;
 
@@ -72,7 +77,7 @@ impl Solver for Cdn {
             let mut m_this = 0.0f64;
 
             for &j in &perm {
-                if opts.shrinking && !active[j] {
+                if !active[j] {
                     continue;
                 }
                 inner_iters += 1;
@@ -181,15 +186,18 @@ impl Solver for Cdn {
             // restore every feature and verify on the full set. Restoring
             // on the active-set signal (not the full gradient) prevents
             // spinning on a converged subset while shrunk features hold
-            // stale violations.
-            if opts.shrinking && n_active < n {
+            // stale violations. Restoration is capped at the feature mask:
+            // frozen features are the path driver's business, not ours.
+            if opts.shrinking && n_active < n_masked {
                 let eps = match opts.stop {
                     crate::solver::StopRule::SubgradRel(e) => e,
                     _ => 1e-3,
                 };
                 if m_this <= eps * m0 {
-                    active.iter_mut().for_each(|a| *a = true);
-                    n_active = n;
+                    for (j, a) in active.iter_mut().enumerate() {
+                        *a = opts.feature_active(j);
+                    }
+                    n_active = n_masked;
                     m_prev = f64::INFINITY;
                 }
             }
@@ -303,6 +311,31 @@ mod tests {
             plain.inner_iters
         );
         assert_close(plain.final_objective, shrunk.final_objective, 1e-3);
+    }
+
+    #[test]
+    fn feature_mask_freezes_features_with_and_without_shrinking() {
+        // Frozen features never move, the masked run converges (the stop
+        // rule reads the restricted subgradient), and shrinking composes
+        // with the mask: both variants land on the same restricted optimum.
+        let d = toy(7);
+        let n = d.features();
+        let mask: Vec<bool> = (0..n).map(|j| j % 2 == 0).collect();
+        let mut finals = Vec::new();
+        for shrinking in [false, true] {
+            let mut o = opts();
+            o.shrinking = shrinking;
+            o.feature_mask = Some(std::sync::Arc::new(mask.clone()));
+            let r = Cdn::new().train(&d, Objective::Logistic, &o);
+            assert!(r.converged, "masked CDN (shrinking={shrinking}) diverged");
+            for (j, &wj) in r.w.iter().enumerate() {
+                if !mask[j] {
+                    assert_eq!(wj, 0.0, "frozen feature {j} moved");
+                }
+            }
+            finals.push(r.final_objective);
+        }
+        assert_close(finals[0], finals[1], 1e-4);
     }
 
     #[test]

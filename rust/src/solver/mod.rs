@@ -49,6 +49,13 @@ pub enum StopRule {
     /// of Yuan et al. 2012 used in §5.1): stop when
     /// `‖∂F‖₁ ≤ eps · ‖∂F(w⁰)‖₁`.
     SubgradRel(f64),
+    /// Absolute minimum-norm-subgradient test: stop when `‖∂F‖₁ ≤ eps`.
+    /// Used by the regularization-path driver, whose warm starts make the
+    /// *relative* rule's reference point (`w⁰` = previous λ's optimum)
+    /// nearly optimal already — an absolute target computed from the
+    /// zero-model scale keeps every grid point solved to the same
+    /// certification accuracy.
+    SubgradAbs(f64),
     /// Stop when `(F(w) − F*) / F* ≤ eps` for a known optimum `F*`
     /// (Eq. 21's relative function value difference — used by the figure
     /// experiments after a high-accuracy reference run).
@@ -93,6 +100,17 @@ pub struct TrainOptions {
     /// Start from this model instead of `w = 0` (used by the distributed
     /// iterative-parameter-mixing driver; PCDN/CDN honour it).
     pub warm_start: Option<Vec<f64>>,
+    /// Optional per-feature active mask (length `n`). `Some(mask)` with
+    /// `mask[j] = false` freezes feature `j`: every solver's outer loop
+    /// skips it, so `w_j` keeps its warm-start value (0 unless the caller
+    /// seeded it) and the run optimizes the *restricted* problem over the
+    /// active coordinates. Stopping rules that read the subgradient are
+    /// evaluated over active features only — a frozen feature's violation
+    /// is deliberately invisible (that is what the path driver's KKT
+    /// post-check is for). `None` (the default) activates every feature.
+    /// Used by the regularization-path driver's strong-rule screening
+    /// (`crate::path`).
+    pub feature_mask: Option<std::sync::Arc<Vec<bool>>>,
     /// Persistent worker team for the real parallel regions. `Some(pool)`
     /// pins the run to that team; `None` with `n_threads > 1` borrows the
     /// process-wide [`WorkerPool::global`] team; `None` with
@@ -122,6 +140,7 @@ impl Default for TrainOptions {
             eval_test: None,
             l2_reg: 0.0,
             warm_start: None,
+            feature_mask: None,
             pool: None,
             probe: None,
         }
@@ -140,6 +159,24 @@ impl TrainOptions {
             return Some(WorkerPool::global().clone());
         }
         None
+    }
+
+    /// Whether feature `j` participates in this run (see
+    /// [`Self::feature_mask`]).
+    #[inline]
+    pub fn feature_active(&self, j: usize) -> bool {
+        match &self.feature_mask {
+            Some(m) => m[j],
+            None => true,
+        }
+    }
+
+    /// Validate the mask length against the dataset width (called once at
+    /// the top of every solver).
+    pub(crate) fn check_mask(&self, n: usize) {
+        if let Some(m) = &self.feature_mask {
+            assert_eq!(m.len(), n, "feature_mask length mismatch");
+        }
     }
 
     /// Number of statically scheduled chunks per parallel region. When the
@@ -218,9 +255,22 @@ pub fn objective_value_l2(state: &LossState<'_>, w: &[f64], l2: f64) -> f64 {
 /// `v_j = g_j + 1` if `w_j > 0`; `g_j − 1` if `w_j < 0`;
 /// `sign(g_j)·max(|g_j| − 1, 0)` if `w_j = 0`.
 pub fn subgrad_norm1(grad: &[f64], w: &[f64]) -> f64 {
+    subgrad_norm1_masked(grad, w, None)
+}
+
+/// [`subgrad_norm1`] restricted to an active-feature mask: frozen features
+/// contribute 0 (the restricted problem's optimality measure — what a
+/// masked run can actually drive to zero). `None` sums every coordinate.
+pub fn subgrad_norm1_masked(grad: &[f64], w: &[f64], mask: Option<&[bool]>) -> f64 {
     grad.iter()
         .zip(w)
-        .map(|(&g, &wj)| {
+        .enumerate()
+        .map(|(j, (&g, &wj))| {
+            if let Some(m) = mask {
+                if !m[j] {
+                    return 0.0;
+                }
+            }
             if wj > 0.0 {
                 (g + 1.0).abs()
             } else if wj < 0.0 {
@@ -230,6 +280,19 @@ pub fn subgrad_norm1(grad: &[f64], w: &[f64]) -> f64 {
             }
         })
         .sum()
+}
+
+/// The stopping subgradient norm: maintained full gradient (+ elastic-net
+/// term), restricted to the active-feature mask when one is set.
+fn monitor_subgrad(state: &LossState<'_>, w: &[f64], opts: &TrainOptions) -> f64 {
+    let mut g = state.full_gradient();
+    if opts.l2_reg > 0.0 {
+        for (gj, wj) in g.iter_mut().zip(w) {
+            *gj += opts.l2_reg * wj;
+        }
+    }
+    let mask = opts.feature_mask.as_ref().map(|m| m.as_slice());
+    subgrad_norm1_masked(&g, w, mask)
 }
 
 /// Shared bookkeeping every solver uses: trace, stopping, wall clock.
@@ -301,15 +364,16 @@ impl RunMonitor {
                 false
             }
             StopRule::SubgradRel(eps) => {
-                let mut g = state.full_gradient();
-                if opts.l2_reg > 0.0 {
-                    for (gj, wj) in g.iter_mut().zip(w) {
-                        *gj += opts.l2_reg * wj;
-                    }
-                }
-                let v = subgrad_norm1(&g, w);
+                let v = monitor_subgrad(state, w, opts);
                 let init = *self.init_subgrad.get_or_insert(v.max(1e-300));
                 if v <= eps * init {
+                    self.converged = true;
+                    return true;
+                }
+                false
+            }
+            StopRule::SubgradAbs(eps) => {
+                if monitor_subgrad(state, w, opts) <= eps {
                     self.converged = true;
                     return true;
                 }
@@ -367,6 +431,60 @@ mod tests {
         };
         let mut m = RunMonitor::new();
         // (f0 − 0.999·f0)/(0.999·f0) ≈ 0.1% ≤ 1% ⇒ stop immediately.
+        assert!(m.observe(1, &st, &w, &opts, 0));
+        assert!(m.converged);
+    }
+
+    #[test]
+    fn masked_subgrad_ignores_frozen_features() {
+        let g = vec![-0.5, 2.0, 1.5];
+        let w = vec![2.0, 0.0, -1.0];
+        // Unmasked: 0.5 + 1 + 0.5 = 2.0 (see subgrad_zero_at_optimum test).
+        assert!((subgrad_norm1_masked(&g, &w, None) - 2.0).abs() < 1e-12);
+        // Freeze the middle feature: its violation (1.0) vanishes.
+        let mask = [true, false, true];
+        assert!((subgrad_norm1_masked(&g, &w, Some(&mask)) - 1.0).abs() < 1e-12);
+        // Freeze everything: the restricted problem is trivially optimal.
+        assert_eq!(subgrad_norm1_masked(&g, &w, Some(&[false; 3])), 0.0);
+    }
+
+    #[test]
+    fn monitor_subgrad_abs_stops_at_threshold() {
+        let d = generate(&SyntheticSpec::default(), 2);
+        let st = LossState::new(Objective::Logistic, &d, 1.0);
+        let w = vec![0.0; d.features()];
+        let v0 = subgrad_norm1(&st.full_gradient(), &w);
+        assert!(v0 > 0.0);
+        // Threshold above the current residual: stop immediately.
+        let opts = TrainOptions {
+            stop: StopRule::SubgradAbs(v0 * 2.0),
+            ..Default::default()
+        };
+        let mut m = RunMonitor::new();
+        assert!(m.observe(1, &st, &w, &opts, 0));
+        assert!(m.converged);
+        // Threshold below: keep going.
+        let opts = TrainOptions {
+            stop: StopRule::SubgradAbs(v0 * 0.5),
+            ..Default::default()
+        };
+        let mut m = RunMonitor::new();
+        assert!(!m.observe(1, &st, &w, &opts, 0));
+    }
+
+    #[test]
+    fn monitor_mask_restricts_the_stop_rule() {
+        // With every feature frozen the restricted residual is 0, so even
+        // an absurdly tight absolute rule stops at once.
+        let d = generate(&SyntheticSpec::default(), 3);
+        let st = LossState::new(Objective::Logistic, &d, 1.0);
+        let w = vec![0.0; d.features()];
+        let opts = TrainOptions {
+            stop: StopRule::SubgradAbs(1e-300),
+            feature_mask: Some(std::sync::Arc::new(vec![false; d.features()])),
+            ..Default::default()
+        };
+        let mut m = RunMonitor::new();
         assert!(m.observe(1, &st, &w, &opts, 0));
         assert!(m.converged);
     }

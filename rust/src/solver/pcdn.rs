@@ -99,6 +99,7 @@ impl Solver for Pcdn {
 
     fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult {
         let n = data.features();
+        opts.check_mask(n);
         let s = data.samples();
         let p = opts.bundle_size.clamp(1, n.max(1));
         let mut state = LossState::new(obj, data, opts.c);
@@ -147,8 +148,14 @@ impl Solver for Pcdn {
 
         loop {
             outer += 1;
-            // Eq. 8: random disjoint partition of N into bundles.
-            let perm = rng.permutation(n);
+            // Eq. 8: random disjoint partition of N into bundles. With a
+            // feature mask, the permutation is drawn over the full set (so
+            // the draw schedule — and hence replay — does not depend on the
+            // mask) and frozen features are filtered out before bundling.
+            let mut perm = rng.permutation(n);
+            if opts.feature_mask.is_some() {
+                perm.retain(|&j| opts.feature_active(j));
+            }
             for bundle in perm.chunks(p) {
                 inner_iters += 1;
                 let bp = bundle.len();
@@ -530,6 +537,31 @@ mod tests {
         let r3 = Pcdn::new().train(&d, Objective::Logistic, &o);
         assert!(r1.converged && r2.converged && r3.converged);
         assert_eq!(r1.w, r3.w, "pooled runs must replay bitwise");
+    }
+
+    #[test]
+    fn feature_mask_restricts_updates() {
+        // Frozen features never move; the masked run converges on the
+        // restricted problem and agrees with masked CDN on its optimum.
+        let d = toy(13);
+        let n = d.features();
+        let mask: Vec<bool> = (0..n).map(|j| j < n / 2).collect();
+        let handle = std::sync::Arc::new(mask.clone());
+        let mut o = opts(8);
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 2000;
+        o.feature_mask = Some(handle.clone());
+        let r = Pcdn::new().train(&d, Objective::Logistic, &o);
+        assert!(r.converged);
+        for (j, &wj) in r.w.iter().enumerate() {
+            if !mask[j] {
+                assert_eq!(wj, 0.0, "frozen feature {j} moved");
+            }
+        }
+        let oc = o.clone();
+        let rc = crate::solver::cdn::Cdn::new().train(&d, Objective::Logistic, &oc);
+        assert!(rc.converged);
+        assert_close(r.final_objective, rc.final_objective, 1e-4);
     }
 
     #[test]

@@ -93,6 +93,7 @@ fn train_round(
     opts: &TrainOptions,
 ) -> TrainResult {
     let n = data.features();
+    opts.check_mask(n);
     let pbar = opts.bundle_size.clamp(1, n);
     let mut state = LossState::new(obj, data, opts.c);
     let mut w = vec![0.0f64; n];
@@ -143,6 +144,11 @@ fn train_round(
             // update is independent of the others, so the pass is bitwise
             // identical at any thread count.
             let stale_update = |j: usize| -> (f64, usize) {
+                // A frozen feature's draw is a no-op (the draw itself stays
+                // in the schedule so replay is mask-independent).
+                if !opts.feature_active(j) {
+                    return (0.0, 0);
+                }
                 let (mut g, mut h) = state.grad_hess_j(j);
                 g += opts.l2_reg * w[j];
                 h += opts.l2_reg;
@@ -274,6 +280,7 @@ fn train_atomic(
     opts: &TrainOptions,
 ) -> TrainResult {
     let n = data.features();
+    opts.check_mask(n);
     let s = data.samples();
     let pbar = opts.bundle_size.clamp(1, n);
     // Shared state: weights and margins wx (logistic) / b (svm) as atomics.
@@ -365,10 +372,13 @@ fn train_atomic(
     let total_updates = std::sync::atomic::AtomicUsize::new(0);
     let mut monitor = monitor;
 
-    // Reference subgradient norm at w = 0 for the relative stopping test.
+    // Reference subgradient norm at w = 0 for the relative stopping test
+    // (restricted to the active mask, like the shared monitor).
+    let mask = opts.feature_mask.as_ref().map(|m| m.as_slice());
     let v0 = {
         let st0 = LossState::new(obj, data, c);
-        crate::solver::subgrad_norm1(&st0.full_gradient(), &vec![0.0; n]).max(1e-300)
+        crate::solver::subgrad_norm1_masked(&st0.full_gradient(), &vec![0.0; n], mask)
+            .max(1e-300)
     };
 
     // One persistent team of racing workers for the whole run. Each of the
@@ -406,6 +416,9 @@ fn train_atomic(
                         return;
                     }
                     let j = rng.index(n);
+                    if !opts.feature_active(j) {
+                        continue; // frozen draw is a no-op; schedule unchanged
+                    }
                     let wj = w_atomic.load(j);
                     let (g, h) = grad_hess_j(j);
                     let d = newton_direction(g, h, wj);
@@ -452,7 +465,7 @@ fn train_atomic(
         let mut st = LossState::new(obj, data, c);
         st.reset_from(&w_snap);
         let g = st.full_gradient();
-        let v = crate::solver::subgrad_norm1(&g, &w_snap);
+        let v = crate::solver::subgrad_norm1_masked(&g, &w_snap, mask);
         // Trajectory probe on the snapshot (atomic mode bypasses the shared
         // monitor, so the outer event is emitted here).
         if let Some(pr) = &opts.probe {
@@ -464,20 +477,23 @@ fn train_atomic(
                 state: &st,
             });
         }
-        if let crate::solver::StopRule::SubgradRel(eps) = opts.stop {
-            if v <= eps * v0 {
-                monitor.converged = true;
-                return finish(
-                    name,
-                    w_snap,
-                    &st,
-                    monitor,
-                    outer,
-                    outer * updates_per_outer,
-                    total_ls.load(std::sync::atomic::Ordering::Relaxed),
-                    Vec::new(),
-                );
-            }
+        let stop_hit = match opts.stop {
+            crate::solver::StopRule::SubgradRel(eps) => v <= eps * v0,
+            crate::solver::StopRule::SubgradAbs(eps) => v <= eps,
+            _ => false,
+        };
+        if stop_hit {
+            monitor.converged = true;
+            return finish(
+                name,
+                w_snap,
+                &st,
+                monitor,
+                outer,
+                outer * updates_per_outer,
+                total_ls.load(std::sync::atomic::Ordering::Relaxed),
+                Vec::new(),
+            );
         }
         if !st.loss_value().is_finite() {
             break;
@@ -613,6 +629,25 @@ mod tests {
         let b = Scdn::new().train(&d, Objective::Logistic, &o3);
         assert_eq!(a.w, b.w);
         assert_eq!(a.ls_steps, b.ls_steps);
+    }
+
+    #[test]
+    fn feature_mask_honored_in_round_mode() {
+        // Frozen draws are no-ops: masked features never move and the run
+        // converges on the restricted problem.
+        let d = sparse_indep(9);
+        let n = d.features();
+        let mask: Vec<bool> = (0..n).map(|j| j % 3 != 0).collect();
+        let mut o = opts(2);
+        o.feature_mask = Some(std::sync::Arc::new(mask.clone()));
+        o.max_outer = 800;
+        let r = Scdn::new().train(&d, Objective::Logistic, &o);
+        assert!(r.converged, "masked SCDN diverged");
+        for (j, &wj) in r.w.iter().enumerate() {
+            if !mask[j] {
+                assert_eq!(wj, 0.0, "frozen feature {j} moved");
+            }
+        }
     }
 
     #[test]

@@ -189,6 +189,7 @@ impl Solver for Tron {
 
     fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult {
         let n = data.features();
+        opts.check_mask(n);
         let mut split = Split {
             state: LossState::new(obj, data, opts.c),
             data,
@@ -214,8 +215,14 @@ impl Solver for Tron {
         loop {
             outer += 1;
             // Free set from the projected gradient at the current point.
+            // Frozen features (feature_mask) pin both split halves `u⁺_j`
+            // and `u⁻_j`: the CG direction is zero there, so `w_j` never
+            // moves and the run optimizes the restricted problem.
             let free: Vec<bool> = (0..2 * n)
-                .map(|i| u[i] > 0.0 || g[i] < 0.0)
+                .map(|i| {
+                    let j = if i < n { i } else { i - n };
+                    opts.feature_active(j) && (u[i] > 0.0 || g[i] < 0.0)
+                })
                 .collect();
             let s = steihaug_cg(
                 &g,
@@ -359,6 +366,29 @@ mod tests {
         for pair in r.trace.windows(2) {
             assert!(pair[1].objective <= pair[0].objective + 1e-6);
         }
+    }
+
+    #[test]
+    fn feature_mask_freezes_split_variables() {
+        // Both split halves of a frozen feature stay pinned at 0, and the
+        // restricted optimum agrees with masked CDN.
+        let d = toy(5);
+        let n = d.features();
+        let mask: Vec<bool> = (0..n).map(|j| j % 2 == 1).collect();
+        let mut o = opts();
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 1000;
+        o.feature_mask = Some(std::sync::Arc::new(mask.clone()));
+        let r = Tron::new().train(&d, Objective::Logistic, &o);
+        assert!(r.converged, "masked TRON diverged");
+        for (j, &wj) in r.w.iter().enumerate() {
+            if !mask[j] {
+                assert_eq!(wj, 0.0, "frozen feature {j} moved");
+            }
+        }
+        let rc = Cdn::new().train(&d, Objective::Logistic, &o);
+        assert!(rc.converged);
+        assert_close(r.final_objective, rc.final_objective, 1e-3);
     }
 
     #[test]

@@ -356,6 +356,254 @@ fn all_four_solvers_emit_probed_trajectories() {
     }
 }
 
+// ====================================================================
+// Distributed driver conformance (ROADMAP open item)
+// ====================================================================
+
+/// Oracle agreement for the distributed driver's *exact* case: one
+/// machine, one round, tight local stop — parameter mixing degenerates to
+/// centralized PCDN, so the result must agree with the dense CDN oracle
+/// and pass the dense KKT residual like any other solver.
+fn check_distributed_single_machine(d: &Dataset, obj: Objective, c: f64) -> Result<(), String> {
+    use pcdn::distributed::{train_distributed, DistributedOptions};
+    // One machine ⇒ one sequential PCDN probe stream: the full stateful
+    // invariant battery applies.
+    let set = Arc::new(InvariantSet::standard(0.01, 0.0));
+    let opts = DistributedOptions {
+        machines: 1,
+        rounds: 1,
+        local: TrainOptions {
+            c,
+            bundle_size: 8,
+            stop: StopRule::SubgradRel(1e-6),
+            max_outer: 5000,
+            probe: Some(ProbeHandle(set.clone())),
+            ..Default::default()
+        },
+        seed: 1,
+    };
+    let r = train_distributed(d, obj, &opts);
+    let v = set.violations();
+    prop_assert(
+        v.is_empty(),
+        &format!("{} invariant violation(s): {}", v.len(), v.join(" | ")),
+    )?;
+    let rel = kkt::kkt_rel(d, obj, c, &r.w, 0.0);
+    prop_assert(
+        rel <= 1e-5,
+        &format!("1-machine distributed KKT rel {rel:.3e} > 1e-5"),
+    )?;
+    let oracle = dense::reference_cdn(d, obj, c, 0.0, 1e-6, 2000);
+    prop_assert(oracle.converged, "dense CDN oracle did not converge")?;
+    prop_close(
+        *r.round_objectives.last().unwrap(),
+        oracle.objective,
+        1e-4,
+        "1-machine distributed vs dense-CDN-oracle objective",
+    )
+}
+
+#[test]
+fn distributed_single_machine_conforms_to_oracles() {
+    run_prop("distributed (1 machine) vs oracles", 8, |g: &mut Gen| {
+        let d = gen_dataset(g, false);
+        let obj = pick_obj(g);
+        let c = g.f64_in(0.1..1.5);
+        check_distributed_single_machine(&d, obj, c).or_else(|msg| {
+            minimized_report(&d, msg, |d2| {
+                check_distributed_single_machine(d2, obj, c).is_err()
+            })
+        })
+    });
+}
+
+/// Multi-machine parameter mixing: not exact (averaging ℓ1 optima has a
+/// known bias), so the oracle contract is a *sandwich* — the mixed model
+/// never beats the true optimum (the oracle lower-bounds every feasible
+/// objective), captures most of the zero-model-to-optimum improvement,
+/// and every shard-solve probe event passes the maintained-drift
+/// invariant (the only one that is stateless and therefore sound under
+/// the interleaved multi-shard event stream).
+fn check_distributed_mixing(
+    d: &Dataset,
+    obj: Objective,
+    c: f64,
+    machines: usize,
+    rounds: usize,
+) -> Result<(), String> {
+    use pcdn::distributed::{train_distributed, DistributedOptions};
+    use pcdn::oracle::invariant::{Invariant, MaintainedDrift};
+    let invs: Vec<Box<dyn Invariant>> = vec![Box::new(MaintainedDrift::new())];
+    let set = Arc::new(InvariantSet::new(invs));
+    let opts = DistributedOptions {
+        machines,
+        rounds,
+        local: TrainOptions {
+            c,
+            bundle_size: 8,
+            stop: StopRule::MaxOuter(3),
+            max_outer: 3,
+            probe: Some(ProbeHandle(set.clone())),
+            ..Default::default()
+        },
+        seed: 2,
+    };
+    let r = train_distributed(d, obj, &opts);
+    let v = set.violations();
+    prop_assert(
+        v.is_empty(),
+        &format!("{} drift violation(s): {}", v.len(), v.join(" | ")),
+    )?;
+    let f_dist = *r.round_objectives.last().unwrap();
+    prop_assert(f_dist.is_finite(), "distributed objective not finite")?;
+    let oracle = dense::reference_cdn(d, obj, c, 0.0, 1e-6, 2000);
+    prop_assert(oracle.converged, "dense CDN oracle did not converge")?;
+    let scale = oracle.objective.abs().max(1.0);
+    prop_assert(
+        f_dist >= oracle.objective - 1e-6 * scale,
+        &format!(
+            "distributed {f_dist} beats the oracle optimum {} — impossible",
+            oracle.objective
+        ),
+    )?;
+    let f0 = dense::dense_objective(d, obj, c, &vec![0.0; d.features()], 0.0);
+    let denom = f0 - oracle.objective;
+    if denom <= 1e-6 * scale {
+        // The zero model is already (near-)optimal: the progress ratio is
+        // noise; the sandwich bound above is the whole contract.
+        return Ok(());
+    }
+    let progress = (f0 - f_dist) / denom;
+    prop_assert(
+        progress > 0.5,
+        &format!(
+            "mixing captured only {:.0}% of the zero-to-optimum improvement \
+             (F0 = {f0}, dist = {f_dist}, oracle = {})",
+            progress * 100.0,
+            oracle.objective
+        ),
+    )
+}
+
+#[test]
+fn distributed_mixing_conforms_on_reduced_grid() {
+    run_prop("distributed mixing vs oracles", 10, |g: &mut Gen| {
+        // Reduced case grid: enough samples that every shard can learn.
+        let spec = SyntheticSpec {
+            samples: g.usize_in(80..160),
+            features: g.usize_in(10..24),
+            nnz_per_row: g.usize_in(3..6),
+            corr_groups: 0,
+            corr_strength: 0.0,
+            scale_sigma: g.f64_in(0.0..0.5),
+            true_density: g.f64_in(0.1..0.4),
+            label_noise: g.f64_in(0.0..0.1),
+            row_normalize: true,
+        };
+        let d = generate(&spec, g.rng().next_u64());
+        let obj = if g.bool() {
+            Objective::Logistic
+        } else {
+            Objective::L2Svm
+        };
+        let c = g.f64_in(0.3..1.5);
+        let machines = g.usize_in(2..4);
+        let rounds = g.usize_in(5..9);
+        check_distributed_mixing(&d, obj, c, machines, rounds).or_else(|msg| {
+            minimized_report(&d, msg, |d2| {
+                check_distributed_mixing(d2, obj, c, machines, rounds).is_err()
+            })
+        })
+    });
+}
+
+// ====================================================================
+// PJRT dense trainer conformance (ROADMAP open item)
+// ====================================================================
+
+fn artifacts_runtime() -> Option<pcdn::runtime::PjrtRuntime> {
+    let dir = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping PJRT conformance: artifacts not built");
+        return None;
+    }
+    match pcdn::runtime::PjrtRuntime::cpu(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT conformance: {e:#}");
+            None
+        }
+    }
+}
+
+/// The PJRT dense trainer (f32 inside XLA) against the dense oracles: the
+/// returned model must agree with the dense CDN oracle at the documented
+/// f32 tolerance, pass a (looser) dense KKT residual, and emit a clean
+/// outer probe trajectory — monotone within f32 noise, every objective
+/// finite.
+#[test]
+fn pjrt_dense_trainer_conforms_when_artifacts_present() {
+    use pcdn::runtime::dense_trainer::train_dense_pjrt;
+    use pcdn::solver::probe::TrajectoryRecorder;
+    let Some(rt) = artifacts_runtime() else {
+        return;
+    };
+    let d = generate(
+        &SyntheticSpec {
+            samples: 400,
+            features: 48,
+            nnz_per_row: 44,
+            corr_groups: 4,
+            corr_strength: 0.6,
+            ..Default::default()
+        },
+        33,
+    );
+    for (obj, c) in [
+        (Objective::Logistic, 0.5),
+        (Objective::Logistic, 1.0),
+        (Objective::L2Svm, 0.5),
+    ] {
+        let rec = Arc::new(TrajectoryRecorder::new());
+        let opts = TrainOptions {
+            c,
+            bundle_size: 16,
+            stop: StopRule::SubgradRel(1e-3),
+            max_outer: 300,
+            probe: Some(ProbeHandle(rec.clone())),
+            ..Default::default()
+        };
+        let r = train_dense_pjrt(&rt, &d, obj, &opts).expect("PJRT path failed");
+        assert!(r.converged, "{obj:?} c={c}: PJRT trainer did not converge");
+        // Oracle agreement at the documented f32 tolerance.
+        let oracle = dense::reference_cdn(&d, obj, c, 0.0, 1e-6, 3000);
+        assert!(oracle.converged, "dense oracle did not converge");
+        let rel = (r.final_objective - oracle.objective).abs()
+            / oracle.objective.abs().max(1.0);
+        assert!(
+            rel <= 1e-3,
+            "{obj:?} c={c}: PJRT F = {} vs oracle {} (rel {rel:.2e})",
+            r.final_objective,
+            oracle.objective
+        );
+        // Dense KKT at 10× the (f32-limited) stop tolerance.
+        let kkt_rel = kkt::kkt_rel(&d, obj, c, &r.w, 0.0);
+        assert!(kkt_rel <= 1e-2, "{obj:?} c={c}: KKT rel {kkt_rel:.2e}");
+        // Clean outer trajectory: finite everywhere, monotone within the
+        // f32 round-off the trainer's own tests document (1e-6 relative).
+        let outers = rec.outers.lock().unwrap();
+        assert!(outers.len() >= r.outer_iters);
+        assert!(outers.iter().all(|(_, f, _)| f.is_finite()));
+        for pair in outers.windows(2) {
+            let (f0, f1) = (pair[0].1, pair[1].1);
+            assert!(
+                f1 <= f0 + 1e-6 * f0.abs().max(1.0),
+                "{obj:?} c={c}: PJRT outer objective rose {f0} -> {f1}"
+            );
+        }
+    }
+}
+
 /// SCDN atomic mode (real racing threads) also reports outer trajectories
 /// through the probe, from its snapshot loop.
 #[test]

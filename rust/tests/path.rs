@@ -1,0 +1,397 @@
+//! Regularization-path campaign: screening soundness as a *property*, the
+//! path driver's determinism claims, and the satellite edge cases.
+//!
+//! The strong rule is a heuristic — the driver's value is the *certificate*
+//! (dense KKT residual at tolerance + zero un-re-admitted screening
+//! violations). These tests assert the certificate holds across generated
+//! datasets × all three losses, that a certified path is bitwise-stable
+//! across physical pool widths (the chunking degree is pinned), that
+//! `λ ≥ λ_max` grids produce the exact all-zero model at every point, and
+//! the edge cases from the issue checklist: single-λ grids, duplicate
+//! columns, and `feature_mask` × shrinking interplay in CDN.
+
+use std::sync::Arc;
+
+use pcdn::data::synthetic::{generate, SyntheticSpec};
+use pcdn::data::{CscMat, Dataset};
+use pcdn::loss::Objective;
+use pcdn::oracle::invariant::{Invariant, InvariantSet, MaintainedDrift};
+use pcdn::oracle::kkt;
+use pcdn::parallel::pool::WorkerPool;
+use pcdn::path::{fit_path, fit_path_on_grid, lambda_max, Grid, PathOptions};
+use pcdn::solver::probe::ProbeHandle;
+use pcdn::solver::{
+    cdn::Cdn, pcdn::Pcdn, scdn::Scdn, tron::Tron, Solver, StopRule, TrainOptions,
+};
+use pcdn::testutil::prop::{prop_assert, run_prop, Gen};
+
+fn pick_obj(g: &mut Gen) -> Objective {
+    match g.usize_in(0..3) {
+        0 => Objective::Logistic,
+        1 => Objective::L2Svm,
+        _ => Objective::Lasso,
+    }
+}
+
+fn gen_dataset(g: &mut Gen) -> Dataset {
+    let spec = SyntheticSpec {
+        samples: g.usize_in(20..60),
+        features: g.usize_in(8..30),
+        nnz_per_row: g.usize_in(2..5),
+        corr_groups: g.usize_in(0..3),
+        corr_strength: g.f64_in(0.0..0.5),
+        scale_sigma: g.f64_in(0.0..0.8),
+        true_density: g.f64_in(0.05..0.5),
+        label_noise: g.f64_in(0.0..0.2),
+        row_normalize: true,
+    };
+    generate(&spec, g.rng().next_u64())
+}
+
+fn quick_path_opts() -> PathOptions {
+    PathOptions {
+        train: TrainOptions {
+            bundle_size: 8,
+            max_outer: 5000,
+            ..TrainOptions::default()
+        },
+        ..PathOptions::default()
+    }
+}
+
+/// Screening-soundness property: for generated datasets × all three
+/// losses, the certified path has a dense KKT residual ≤ 1e-5 at every
+/// grid point and *no strong-rule-screened feature violates KKT at the
+/// accepted solution* — re-checked here with the dense oracle, not
+/// trusted from the driver's own bookkeeping.
+#[test]
+fn screened_path_certifies_on_generated_cases() {
+    run_prop("strong-rule screening soundness", 24, |g: &mut Gen| {
+        let d = gen_dataset(g);
+        let obj = pick_obj(g);
+        let mut po = quick_path_opts();
+        po.n_lambdas = g.usize_in(4..9);
+        po.lambda_ratio = g.f64_in(0.05..0.4);
+        po.degree = [1usize, 2, 4][g.usize_in(0..3)];
+        po.train.bundle_size = g.usize_in(1..d.features() + 1);
+        po.train.seed = g.rng().next_u64();
+        let r = fit_path(&d, obj, &po);
+        prop_assert(
+            r.certified,
+            &format!("{obj:?} path not certified:\n{}", r.table()),
+        )?;
+        for p in &r.points {
+            prop_assert(
+                p.kkt_rel <= 1e-5,
+                &format!("{obj:?} λ = {}: kkt_rel {:.3e}", p.lambda, p.kkt_rel),
+            )?;
+            if let Some(mask) = &p.final_mask {
+                let viol = kkt::screen_violations(&d, obj, p.c, &p.w, mask, 0.0, 1e-9);
+                prop_assert(
+                    viol.is_empty(),
+                    &format!(
+                        "{obj:?} λ = {}: screened features {viol:?} violate KKT",
+                        p.lambda
+                    ),
+                )?;
+                // Frozen features really were held at their (zero) value.
+                for (j, &keep) in mask.iter().enumerate() {
+                    if !keep {
+                        prop_assert(
+                            p.w[j] == 0.0,
+                            &format!("{obj:?} λ = {}: frozen feature {j} moved", p.lambda),
+                        )?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// λ ≥ λ_max property: every grid point of an at-or-above-λ_max grid is
+/// the exact all-zero model with a zero KKT residual, for every loss.
+#[test]
+fn lambda_at_or_above_max_yields_all_zero_models() {
+    run_prop("λ ≥ λ_max ⇒ zero model", 12, |g: &mut Gen| {
+        let d = gen_dataset(g);
+        let obj = pick_obj(g);
+        let lmax = lambda_max(&d, obj);
+        prop_assert(lmax > 0.0, "degenerate dataset")?;
+        // Strictly-above multipliers (1.001 … 4); exact λ_max sits on an FP
+        // knife edge the geometric driver guards with its anchor nudge.
+        let ms = [4.0, 1.0 + g.f64_in(0.5..2.0), 1.001];
+        let grid = Grid::explicit(ms.iter().map(|m| m * lmax).collect());
+        let po = quick_path_opts();
+        let r = fit_path_on_grid(&d, obj, &grid, &po);
+        prop_assert(r.certified, "trivial path must certify")?;
+        for p in &r.points {
+            prop_assert(
+                p.w.iter().all(|&x| x == 0.0),
+                &format!("{obj:?} λ = {} (≥ λ_max = {lmax}): nonzero model", p.lambda),
+            )?;
+            prop_assert(p.nnz == 0, "nnz must be 0")?;
+            prop_assert(p.kkt_rel == 0.0, "zero model must have zero residual")?;
+        }
+        Ok(())
+    });
+}
+
+/// Determinism: the driver pins its chunking degree, so a certified path
+/// replays bitwise at *any* physical pool width.
+#[test]
+fn certified_path_is_bitwise_stable_across_pool_widths() {
+    let d = generate(
+        &SyntheticSpec {
+            samples: 100,
+            features: 60,
+            nnz_per_row: 8,
+            ..Default::default()
+        },
+        17,
+    );
+    let run = |width: usize| {
+        let mut po = quick_path_opts();
+        po.n_lambdas = 6;
+        po.lambda_ratio = 0.05;
+        po.degree = 4;
+        po.train.bundle_size = 16;
+        po.train.pool = Some(WorkerPool::new(width));
+        fit_path(&d, Objective::Logistic, &po)
+    };
+    let a = run(1);
+    let b = run(3);
+    assert!(a.certified && b.certified);
+    assert_eq!(a.total_outer, b.total_outer);
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.nnz, pb.nnz);
+        assert_eq!(pa.screened_out, pb.screened_out);
+        assert_eq!(pa.outer_iters, pb.outer_iters);
+        for (x, y) in pa.w.iter().zip(&pb.w) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "λ = {}: path must replay bitwise across pool widths",
+                pa.lambda
+            );
+        }
+    }
+}
+
+/// Edge case: a single-λ grid (`n_lambdas = 1`) ignores the ratio and
+/// certifies; an explicit single λ below λ_max produces a nonzero model.
+#[test]
+fn single_lambda_grids() {
+    let d = generate(
+        &SyntheticSpec {
+            samples: 80,
+            features: 30,
+            nnz_per_row: 5,
+            ..Default::default()
+        },
+        23,
+    );
+    let lmax = lambda_max(&d, Objective::Logistic);
+    let mut po = quick_path_opts();
+    po.n_lambdas = 1;
+    po.lambda_ratio = 1e-12; // out of practical range: must be ignored
+    let r = fit_path(&d, Objective::Logistic, &po);
+    assert_eq!(r.points.len(), 1);
+    assert!(r.certified);
+    assert_eq!(r.points[0].nnz, 0, "the anchor point is the all-zero model");
+
+    let grid = Grid::explicit(vec![0.25 * lmax]);
+    let r2 = fit_path_on_grid(&d, Objective::Logistic, &grid, &po);
+    assert_eq!(r2.points.len(), 1);
+    assert!(r2.certified, "single interior λ must certify:\n{}", r2.table());
+    assert!(r2.points[0].nnz > 0, "λ = λ_max/4 should activate features");
+}
+
+/// Exact-duplicate columns: identical gradients ⇒ the strong rule must
+/// treat a duplicate pair consistently whenever the warm-start treats them
+/// symmetrically (both zero at the previous point), and the certificate
+/// must hold throughout.
+#[test]
+fn duplicate_columns_screen_consistently_and_certify() {
+    let base = generate(
+        &SyntheticSpec {
+            samples: 60,
+            features: 12,
+            nnz_per_row: 4,
+            ..Default::default()
+        },
+        29,
+    );
+    let n = base.features();
+    let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+    for j in 0..n {
+        let (ri, vals) = base.x.col(j);
+        for (r, v) in ri.iter().zip(vals) {
+            trips.push((*r as usize, j, *v));
+            trips.push((*r as usize, n + j, *v)); // exact duplicate of column j
+        }
+    }
+    let x = CscMat::from_triplets(base.samples(), 2 * n, &trips);
+    let d = Dataset::new("dup-cols", x, base.y.clone());
+
+    let mut po = quick_path_opts();
+    po.n_lambdas = 7;
+    po.lambda_ratio = 0.08;
+    po.train.bundle_size = 6;
+    let r = fit_path(&d, Objective::Logistic, &po);
+    assert!(r.certified, "duplicate-column path uncertified:\n{}", r.table());
+    for (k, p) in r.points.iter().enumerate() {
+        if let Some(mask) = &p.final_mask {
+            let w_prev: &[f64] = if k == 0 { &[] } else { &r.points[k - 1].w };
+            for j in 0..n {
+                let both_zero = k == 0 || (w_prev[j] == 0.0 && w_prev[n + j] == 0.0);
+                if both_zero {
+                    assert_eq!(
+                        mask[j],
+                        mask[n + j],
+                        "λ = {}: duplicate pair ({j}, {}) screened asymmetrically",
+                        p.lambda,
+                        n + j
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Edge case: `feature_mask` × shrinking in `cdn.rs` — a masked shrinking
+/// run must equal (a) the masked non-shrinking run and (b) a plain run on
+/// the column submatrix, and frozen coordinates stay exactly zero.
+#[test]
+fn feature_mask_equals_column_submatrix_training() {
+    let d = generate(
+        &SyntheticSpec {
+            samples: 90,
+            features: 40,
+            nnz_per_row: 6,
+            ..Default::default()
+        },
+        31,
+    );
+    let n = d.features();
+    let keep: Vec<bool> = (0..n).map(|j| j % 3 != 1).collect();
+    // Column submatrix holding only the kept features.
+    let kept_idx: Vec<usize> = (0..n).filter(|&j| keep[j]).collect();
+    let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+    for (jj, &j) in kept_idx.iter().enumerate() {
+        let (ri, vals) = d.x.col(j);
+        for (r, v) in ri.iter().zip(vals) {
+            trips.push((*r as usize, jj, *v));
+        }
+    }
+    let sub = Dataset::new(
+        "submatrix",
+        CscMat::from_triplets(d.samples(), kept_idx.len(), &trips),
+        d.y.clone(),
+    );
+
+    let base = TrainOptions {
+        c: 1.0,
+        stop: StopRule::SubgradRel(1e-7),
+        max_outer: 3000,
+        ..Default::default()
+    };
+    let mut masked = base.clone();
+    masked.feature_mask = Some(Arc::new(keep.clone()));
+    let mut masked_shrink = masked.clone();
+    masked_shrink.shrinking = true;
+
+    let r_mask = Cdn::new().train(&d, Objective::Logistic, &masked);
+    let r_mask_shrink = Cdn::new().train(&d, Objective::Logistic, &masked_shrink);
+    let r_sub = Cdn::new().train(&sub, Objective::Logistic, &base);
+    assert!(r_mask.converged && r_mask_shrink.converged && r_sub.converged);
+    for r in [&r_mask, &r_mask_shrink] {
+        for (j, &wj) in r.w.iter().enumerate() {
+            if !keep[j] {
+                assert_eq!(wj, 0.0, "frozen feature {j} moved");
+            }
+        }
+    }
+    let tol = 1e-5 * r_sub.final_objective.abs().max(1.0);
+    assert!(
+        (r_mask.final_objective - r_sub.final_objective).abs() <= tol,
+        "masked ({}) vs submatrix ({}) optimum",
+        r_mask.final_objective,
+        r_sub.final_objective
+    );
+    assert!(
+        (r_mask_shrink.final_objective - r_sub.final_objective).abs() <= tol,
+        "masked+shrinking ({}) vs submatrix ({}) optimum",
+        r_mask_shrink.final_objective,
+        r_sub.final_objective
+    );
+}
+
+/// The mask is honored by every solver's outer loop: frozen coordinates
+/// stay exactly zero under PCDN, SCDN (round mode), and TRON too.
+#[test]
+fn all_solvers_honor_the_feature_mask() {
+    let d = generate(
+        &SyntheticSpec {
+            samples: 80,
+            features: 30,
+            nnz_per_row: 5,
+            corr_groups: 0,
+            ..Default::default()
+        },
+        37,
+    );
+    let n = d.features();
+    let keep: Vec<bool> = (0..n).map(|j| j % 2 == 0).collect();
+    let opts = TrainOptions {
+        c: 1.0,
+        // P̄ = 2 keeps SCDN safely inside its parallelism bound; PCDN is
+        // convergent at any P and TRON ignores the field.
+        bundle_size: 2,
+        stop: StopRule::SubgradRel(1e-4),
+        max_outer: 800,
+        feature_mask: Some(Arc::new(keep.clone())),
+        ..Default::default()
+    };
+    let solvers: Vec<Box<dyn Solver>> = vec![
+        Box::new(Pcdn::new()),
+        Box::new(Cdn::new()),
+        Box::new(Scdn::new()),
+        Box::new(Tron::new()),
+    ];
+    for s in solvers {
+        let r = s.train(&d, Objective::Logistic, &opts);
+        assert!(r.converged, "{} did not converge under the mask", s.name());
+        for (j, &wj) in r.w.iter().enumerate() {
+            if !keep[j] {
+                assert_eq!(wj, 0.0, "{}: frozen feature {j} moved", s.name());
+            }
+        }
+    }
+}
+
+/// The path driver forwards the probe into every λ's solve; the
+/// (stateless, interleaving-safe) maintained-drift invariant stays clean
+/// across the whole grid.
+#[test]
+fn path_probe_stream_is_drift_free() {
+    let d = generate(
+        &SyntheticSpec {
+            samples: 60,
+            features: 24,
+            nnz_per_row: 5,
+            ..Default::default()
+        },
+        41,
+    );
+    let invs: Vec<Box<dyn Invariant>> = vec![Box::new(MaintainedDrift::new())];
+    let set = Arc::new(InvariantSet::new(invs));
+    let mut po = quick_path_opts();
+    po.n_lambdas = 5;
+    po.lambda_ratio = 0.1;
+    po.train.probe = Some(ProbeHandle(set.clone()));
+    let r = fit_path(&d, Objective::Logistic, &po);
+    assert!(r.certified);
+    let v = set.violations();
+    assert!(v.is_empty(), "drift on the path: {}", v.join(" | "));
+}
