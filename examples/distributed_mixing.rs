@@ -10,7 +10,8 @@
 use pcdn::data::registry;
 use pcdn::distributed::{train_distributed, DistributedOptions};
 use pcdn::loss::Objective;
-use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+use pcdn::api::{Fit, Pcdn as PcdnCfg};
+use pcdn::solver::{pcdn::Pcdn, Solver, StopRule};
 
 fn main() {
     let analog = registry::by_name("real-sim").expect("registry dataset");
@@ -26,13 +27,13 @@ fn main() {
     let central = Pcdn::new().train(
         &data,
         Objective::Logistic,
-        &TrainOptions {
-            c: analog.c_logistic,
-            bundle_size: 128,
-            stop: StopRule::SubgradRel(1e-5),
-            max_outer: 1000,
-            ..TrainOptions::default()
-        },
+        &Fit::spec()
+            .c(analog.c_logistic)
+            .solver(PcdnCfg { p: 128 })
+            .stop(StopRule::SubgradRel(1e-5))
+            .max_outer(1000)
+            .options()
+            .expect("valid options"),
     );
     println!("centralized optimum F* = {:.6}\n", central.final_objective);
 
@@ -46,13 +47,13 @@ fn main() {
             let opts = DistributedOptions {
                 machines,
                 rounds,
-                local: TrainOptions {
-                    c: analog.c_logistic,
-                    bundle_size: 128,
-                    stop: StopRule::MaxOuter(3),
-                    max_outer: 3,
-                    ..TrainOptions::default()
-                },
+                local: Fit::spec()
+                    .c(analog.c_logistic)
+                    .solver(PcdnCfg { p: 128 })
+                    .stop(StopRule::MaxOuter(3))
+                    .max_outer(3)
+                    .options()
+                    .expect("valid options"),
                 seed: 7,
             };
             let r = train_distributed(&data, Objective::Logistic, &opts);

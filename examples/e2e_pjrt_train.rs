@@ -20,7 +20,8 @@ use pcdn::coordinator::metrics::Table;
 use pcdn::data::registry;
 use pcdn::loss::Objective;
 use pcdn::runtime::{dense_trainer::train_dense_pjrt, PjrtRuntime};
-use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+use pcdn::api::{Fit, Pcdn as PcdnCfg};
+use pcdn::solver::{pcdn::Pcdn, Solver, StopRule};
 
 fn main() -> anyhow::Result<()> {
     let dir = PjrtRuntime::default_dir();
@@ -54,15 +55,15 @@ fn main() -> anyhow::Result<()> {
         (Objective::L2Svm, analog.c_svm, 15),
     ] {
         println!("\n=== {obj:?} (c = {c}, P = {p} — paper Table 3 P*) ===");
-        let opts = TrainOptions {
-            c,
-            bundle_size: p,
-            stop: StopRule::SubgradRel(1e-3),
-            max_outer: 120,
-            trace_every: 1,
-            eval_test: Some(std::sync::Arc::new(test.clone())),
-            ..TrainOptions::default()
-        };
+        let opts = Fit::spec()
+            .c(c)
+            .solver(PcdnCfg { p })
+            .stop(StopRule::SubgradRel(1e-3))
+            .max_outer(120)
+            .trace_every(1)
+            .eval_test(std::sync::Arc::new(test.clone()))
+            .options()
+            .expect("valid options");
         let r = train_dense_pjrt(&rt, &train, obj, &opts)?;
         for tp in &r.trace {
             curve.push(vec![

@@ -12,7 +12,8 @@
 
 use pcdn::data::{CscMat, Dataset};
 use pcdn::loss::Objective;
-use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+use pcdn::api::{Fit, Pcdn as PcdnCfg};
+use pcdn::solver::{pcdn::Pcdn, Solver, StopRule};
 use pcdn::util::rng::Pcg64;
 
 fn main() {
@@ -37,13 +38,13 @@ fn main() {
     println!("Lasso (c = 2.0):");
     println!("{:>6} {:>12} {:>8} {:>10} {:>10}", "P", "inner iters", "nnz", "MSE", "F");
     for p in [1usize, 16, 64, 200] {
-        let o = TrainOptions {
-            c: 2.0,
-            bundle_size: p,
-            stop: StopRule::SubgradRel(1e-6),
-            max_outer: 2000,
-            ..TrainOptions::default()
-        };
+        let o = Fit::spec()
+            .c(2.0)
+            .solver(PcdnCfg { p })
+            .stop(StopRule::SubgradRel(1e-6))
+            .max_outer(2000)
+            .options()
+            .expect("valid options");
         let r = Pcdn::new().train(&data, Objective::Lasso, &o);
         println!(
             "{:>6} {:>12} {:>8} {:>10.5} {:>10.4}",
@@ -56,13 +57,13 @@ fn main() {
     }
 
     // --- support recovery check ------------------------------------------
-    let o = TrainOptions {
-        c: 2.0,
-        bundle_size: 64,
-        stop: StopRule::SubgradRel(1e-7),
-        max_outer: 3000,
-        ..TrainOptions::default()
-    };
+    let o = Fit::spec()
+        .c(2.0)
+        .solver(PcdnCfg { p: 64 })
+        .stop(StopRule::SubgradRel(1e-7))
+        .max_outer(3000)
+        .options()
+        .expect("valid options");
     let r = Pcdn::new().train(&data, Objective::Lasso, &o);
     let recovered: Vec<usize> = (0..n).filter(|&j| r.w[j].abs() > 1e-3).collect();
     let hits = support.iter().filter(|j| recovered.contains(j)).count();
@@ -75,14 +76,14 @@ fn main() {
     println!("\nelastic net (c = 2.0, P = 64):");
     println!("{:>8} {:>8} {:>10} {:>12}", "lambda2", "nnz", "MSE", "||w||2");
     for l2 in [0.0, 0.5, 2.0, 8.0] {
-        let o = TrainOptions {
-            c: 2.0,
-            bundle_size: 64,
-            l2_reg: l2,
-            stop: StopRule::SubgradRel(1e-6),
-            max_outer: 2000,
-            ..TrainOptions::default()
-        };
+        let o = Fit::spec()
+            .c(2.0)
+            .solver(PcdnCfg { p: 64 })
+            .l2(l2)
+            .stop(StopRule::SubgradRel(1e-6))
+            .max_outer(2000)
+            .options()
+            .expect("valid options");
         let r = Pcdn::new().train(&data, Objective::Lasso, &o);
         let norm2 = r.w.iter().map(|x| x * x).sum::<f64>().sqrt();
         println!(

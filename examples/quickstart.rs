@@ -1,13 +1,14 @@
-//! Quickstart: train ℓ1-regularized logistic regression with PCDN on the
-//! a9a analog dataset and report objective, sparsity, and test accuracy.
+//! Quickstart: the typed training API end to end — fit ℓ1-regularized
+//! logistic regression with PCDN on the a9a analog, save the model
+//! artifact, reload it, and serve predictions.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
+use pcdn::api::{Fit, Model, Pcdn, Scorer};
 use pcdn::data::registry;
-use pcdn::loss::Objective;
-use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+use pcdn::solver::StopRule;
 
 fn main() {
     // 1. Get a dataset. The registry ships seeded synthetic analogs of the
@@ -24,31 +25,43 @@ fn main() {
         train.sparsity() * 100.0
     );
 
-    // 2. Configure PCDN: bundle size P is the parallelism knob; the paper
-    //    uses P* = 123 for a9a logistic (Table 3).
-    let opts = TrainOptions {
-        c: analog.c_logistic,
-        bundle_size: 123,
-        stop: StopRule::SubgradRel(1e-4),
-        max_outer: 500,
-        ..TrainOptions::default()
-    };
-
-    // 3. Train.
-    let result = Pcdn::new().train(&train, Objective::Logistic, &opts);
+    // 2. Configure through the typed builder: bundle size P is a PCDN
+    //    field (the paper uses P* = 123 for a9a logistic, Table 3);
+    //    everything is validated before the run starts.
+    let fitted = Fit::on(&train)
+        .c(analog.c_logistic)
+        .solver(Pcdn { p: 123 })
+        .stop(StopRule::SubgradRel(1e-4))
+        .max_outer(500)
+        .run()
+        .expect("valid configuration");
+    let r = &fitted.result;
     println!(
         "PCDN: F(w) = {:.6}, ||w||_0 = {}/{}, outer iters = {}, \
          line-search steps = {}, {:.2}s",
-        result.final_objective,
-        result.model_nnz(),
+        r.final_objective,
+        fitted.model.nnz(),
         train.features(),
-        result.outer_iters,
-        result.ls_steps,
-        result.wall_secs
+        r.outer_iters,
+        r.ls_steps,
+        r.wall_secs
     );
-    assert!(result.converged, "did not converge — try more iterations");
+    assert!(r.converged, "did not converge — try more iterations");
 
-    // 4. Evaluate.
-    println!("train accuracy = {:.4}", train.accuracy(&result.w));
-    println!("test  accuracy = {:.4}", test.accuracy(&result.w));
+    // 3. The fit is a first-class artifact: save, reload, audit.
+    let path = std::env::temp_dir().join("quickstart_a9a.model");
+    fitted.model.save(&path).expect("save model");
+    let model = Model::load(&path).expect("load model");
+    println!(
+        "reloaded model: trained by {} on '{}' ({})",
+        model.provenance.solver,
+        model.provenance.dataset,
+        model.provenance.stop
+    );
+
+    // 4. Serve: batched pooled scoring, bitwise equal to the serial fold.
+    let scorer = Scorer::new(model).threads(4);
+    println!("train accuracy = {:.4}", scorer.accuracy(&train));
+    println!("test  accuracy = {:.4}", scorer.accuracy(&test));
+    std::fs::remove_file(&path).ok();
 }

@@ -10,7 +10,8 @@ use pcdn::coordinator::experiments::{reference_fstar, ExpOptions};
 use pcdn::data::registry;
 use pcdn::loss::Objective;
 use pcdn::parallel::sim::{self, SimParams};
-use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+use pcdn::api::{Fit, Pcdn as PcdnCfg};
+use pcdn::solver::{pcdn::Pcdn, Solver, StopRule};
 use pcdn::util::cli::Cli;
 
 fn main() {
@@ -40,14 +41,14 @@ fn main() {
     let mut p = 1usize;
     let mut recorded = None;
     while p <= n {
-        let opts = TrainOptions {
-            c: analog.c_logistic,
-            bundle_size: p,
-            stop: StopRule::RelFuncDiff { fstar, eps },
-            max_outer: 2000,
-            record_iters: true,
-            ..TrainOptions::default()
-        };
+        let opts = Fit::spec()
+            .c(analog.c_logistic)
+            .solver(PcdnCfg { p })
+            .stop(StopRule::RelFuncDiff { fstar, eps })
+            .max_outer(2000)
+            .record_iters(true)
+            .options()
+            .expect("valid options");
         let r = Pcdn::new().train(&train, Objective::Logistic, &opts);
         let sim_t = sim::total_time(
             &r.iter_records,
@@ -102,14 +103,14 @@ fn main() {
             fstar: fstar_d,
             eps,
         };
-        let mut o = TrainOptions {
-            c: analog.c_logistic,
-            bundle_size: (n / 2).max(1),
-            stop,
-            max_outer: 1000,
-            record_iters: true,
-            ..TrainOptions::default()
-        };
+        let mut o = Fit::spec()
+            .c(analog.c_logistic)
+            .solver(PcdnCfg { p: (n / 2).max(1) })
+            .stop(stop)
+            .max_outer(1000)
+            .record_iters(true)
+            .options()
+            .expect("valid options");
         let rp = Pcdn::new().train(&d, Objective::Logistic, &o);
         o.bundle_size = 1;
         let rc = pcdn::solver::cdn::Cdn::new().train(&d, Objective::Logistic, &o);

@@ -1,0 +1,105 @@
+//! Serving walkthrough: fit → checkpoint → save → load → batched pooled
+//! predict, with the bitwise guarantees the API makes checked live.
+//!
+//! Demonstrates the full pipeline the `api` layer exists for:
+//!
+//! 1. train with [`Fit`], writing a resume checkpoint every few outers;
+//! 2. resume from the mid-run checkpoint and confirm the continued run
+//!    lands on the **bitwise identical** model;
+//! 3. save/load the [`Model`] artifact (binary and JSON);
+//! 4. serve it through [`Scorer`]: pooled minibatch decision values,
+//!    bitwise equal to the serial fold, plus single-sample scoring.
+//!
+//! ```sh
+//! cargo run --release --example serve_predict
+//! ```
+
+use pcdn::api::{CheckpointRecorder, Fit, Model, Pcdn, Scorer};
+use pcdn::data::registry;
+use pcdn::solver::{ProbeHandle, StopRule};
+use std::sync::Arc;
+
+fn main() {
+    let analog = registry::by_name("a9a").expect("registry dataset");
+    let train = analog.train();
+    let test = analog.test();
+
+    // --- 1. fit, recording resume points every 5 outer iterations ------
+    let recorder = Arc::new(CheckpointRecorder::new(5));
+    let fitted = Fit::on(&train)
+        .c(analog.c_logistic)
+        .solver(Pcdn { p: 96 })
+        .stop(StopRule::SubgradRel(1e-4))
+        .probe(ProbeHandle(recorder.clone()))
+        .run()
+        .expect("valid configuration");
+    println!(
+        "fit: {} outers, F = {:.6}, nnz = {}",
+        fitted.result.outer_iters,
+        fitted.result.final_objective,
+        fitted.model.nnz()
+    );
+
+    // --- 2. resume from mid-run and verify bitwise continuation --------
+    if let Some(ck) = recorder.latest() {
+        let resumed_from = ck.outer;
+        let resumed = Fit::resume(&train, ck)
+            .expect("checkpoint matches")
+            .run()
+            .expect("valid resume");
+        assert_eq!(
+            fitted.result.w, resumed.result.w,
+            "resumed run must reproduce the uninterrupted model bitwise"
+        );
+        println!(
+            "resume from outer {resumed_from}: bitwise identical final model ✓ \
+             ({} additional outers)",
+            resumed.result.outer_iters - resumed_from
+        );
+    }
+
+    // --- 3. the model artifact ------------------------------------------
+    let dir = std::env::temp_dir();
+    let bin = dir.join("serve_predict.model");
+    let json = dir.join("serve_predict.json");
+    fitted.model.save(&bin).expect("save binary");
+    fitted.model.save(&json).expect("save json");
+    let model = Model::load(&bin).expect("load binary");
+    assert_eq!(model.w, Model::load(&json).expect("load json").w);
+    println!(
+        "artifact round-trip (binary + JSON) ✓ — provenance: {} on '{}', seed {}, {}",
+        model.provenance.solver,
+        model.provenance.dataset,
+        model.provenance.seed,
+        model.provenance.stop
+    );
+
+    // --- 4. serving ------------------------------------------------------
+    let serial = model.decision_values(&test.x);
+    let scorer = Scorer::new(model).threads(8);
+    let pooled = scorer.decision_values(&test.x);
+    assert!(
+        serial
+            .iter()
+            .zip(&pooled)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "pooled scoring must equal the serial fold bitwise"
+    );
+    println!(
+        "pooled batch scoring over {} samples: bitwise equal to serial ✓",
+        test.samples()
+    );
+    println!("test accuracy = {:.4}", scorer.accuracy(&test));
+
+    // Single-request path: score one sparse sample.
+    let csr = test.x.to_csr();
+    let (idx, vals) = csr.row(0);
+    println!(
+        "sample 0: decision value {:+.4} → predicted label {:+}",
+        scorer.model().score_sample(idx, vals),
+        if scorer.model().score_sample(idx, vals) < 0.0 { -1 } else { 1 }
+    );
+
+    std::fs::remove_file(&bin).ok();
+    std::fs::remove_file(&json).ok();
+}

@@ -11,7 +11,8 @@ use pcdn::coordinator::experiments::{reference_fstar, ExpOptions};
 use pcdn::data::registry;
 use pcdn::loss::Objective;
 use pcdn::parallel::sim::{self, SimParams};
-use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, tron::Tron, Solver, StopRule, TrainOptions};
+use pcdn::api::{Fit, Pcdn};
+use pcdn::solver::{cdn::Cdn, tron::Tron, Solver, StopRule};
 
 fn main() {
     let analog = registry::by_name("real-sim").expect("registry dataset");
@@ -38,15 +39,15 @@ fn main() {
 
     // PCDN at the scaled paper P* (500 → scaled to analog width).
     let (_, p_svm) = registry::scaled_pstar(&analog);
-    let mut o = TrainOptions {
-        c: analog.c_svm,
-        bundle_size: p_svm,
-        stop,
-        max_outer: 2000,
-        record_iters: true,
-        ..TrainOptions::default()
-    };
-    let rp = Pcdn::new().train(&train, Objective::L2Svm, &o);
+    let mut o = Fit::spec()
+        .c(analog.c_svm)
+        .solver(Pcdn { p: p_svm })
+        .stop(stop)
+        .max_outer(2000)
+        .record_iters(true)
+        .options()
+        .expect("valid options");
+    let rp = pcdn::solver::pcdn::Pcdn::new().train(&train, Objective::L2Svm, &o);
     let sim23 = sim::total_time(
         &rp.iter_records,
         &SimParams {

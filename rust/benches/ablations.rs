@@ -18,9 +18,7 @@ use pcdn::coordinator::metrics::Table;
 use pcdn::data::synthetic::{generate, SyntheticSpec};
 use pcdn::data::Dataset;
 use pcdn::loss::Objective;
-use pcdn::solver::{
-    cdn::Cdn, pcdn::Pcdn, scdn::Scdn, ArmijoParams, Solver, StopRule, TrainOptions,
-};
+use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, scdn::Scdn, ArmijoParams, Solver, StopRule};
 
 fn correlated(seed: u64) -> Dataset {
     generate(
@@ -62,13 +60,13 @@ fn main() {
             &["P", "pcdn_F_at_budget", "pcdn_conv", "scdn_F_at_budget", "scdn_conv"],
         );
         for p in [4usize, 16, 64, 120] {
-            let o = TrainOptions {
-                c: 1.0,
-                bundle_size: p,
-                stop: StopRule::SubgradRel(1e-4),
-                max_outer: 60,
-                ..TrainOptions::default()
-            };
+            let o = pcdn::api::Fit::spec()
+                .c(1.0)
+                .solver(pcdn::api::Pcdn { p })
+                .stop(StopRule::SubgradRel(1e-4))
+                .max_outer(60)
+                .options()
+                .expect("valid options");
             let rp = Pcdn::new().train(&d, Objective::Logistic, &o);
             let rs = Scdn::new().train(&d, Objective::Logistic, &o);
             t.push(vec![
@@ -91,17 +89,17 @@ fn main() {
             &["gamma", "inner_iters", "ls_steps", "mean_q", "F"],
         );
         for gamma in [0.0, 0.25, 0.5, 0.9] {
-            let o = TrainOptions {
-                c: 1.0,
-                bundle_size: 32,
-                armijo: ArmijoParams {
+            let o = pcdn::api::Fit::spec()
+                .c(1.0)
+                .solver(pcdn::api::Pcdn { p: 32 })
+                .armijo(ArmijoParams {
                     gamma,
                     ..ArmijoParams::default()
-                },
-                stop: StopRule::SubgradRel(1e-5),
-                max_outer: 2000,
-                ..TrainOptions::default()
-            };
+                })
+                .stop(StopRule::SubgradRel(1e-5))
+                .max_outer(2000)
+                .options()
+                .expect("valid options");
             let r = Pcdn::new().train(&d, Objective::Logistic, &o);
             t.push(vec![
                 gamma.into(),
@@ -123,12 +121,13 @@ fn main() {
             &["c", "plain_inner", "shrunk_inner", "saving_pct", "F_gap_rel"],
         );
         for c in [0.5, 1.0, 4.0] {
-            let mut o = TrainOptions {
-                c,
-                stop: StopRule::SubgradRel(1e-6),
-                max_outer: 2000,
-                ..TrainOptions::default()
-            };
+            let mut o = pcdn::api::Fit::spec()
+                .c(c)
+                .solver(pcdn::api::Cdn { shrinking: false })
+                .stop(StopRule::SubgradRel(1e-6))
+                .max_outer(2000)
+                .options()
+                .expect("valid options");
             let plain = Cdn::new().train(&d, Objective::Logistic, &o);
             o.shrinking = true;
             let shrunk = Cdn::new().train(&d, Objective::Logistic, &o);
@@ -161,14 +160,15 @@ fn main() {
         // the adversarial grouping is emulated by corr-group-aligned data
         // with group-size == bundle-size (see DESIGN.md).
         for seed in 0..4u64 {
-            let o = TrainOptions {
-                c: 1.0,
-                bundle_size: 20, // = features/groups → aligned worst case exists
-                seed,
-                stop: StopRule::SubgradRel(1e-4),
-                max_outer: 500,
-                ..TrainOptions::default()
-            };
+            // bundle 20 = features/groups → aligned worst case exists
+            let o = pcdn::api::Fit::spec()
+                .c(1.0)
+                .solver(pcdn::api::Pcdn { p: 20 })
+                .seed(seed)
+                .stop(StopRule::SubgradRel(1e-4))
+                .max_outer(500)
+                .options()
+                .expect("valid options");
             let r = Pcdn::new().train(&d, Objective::Logistic, &o);
             t.push(vec![
                 (seed as usize).into(),
@@ -189,14 +189,14 @@ fn main() {
             &["l2_reg", "inner_iters", "nnz", "F"],
         );
         for l2 in [0.0, 0.1, 1.0, 10.0] {
-            let o = TrainOptions {
-                c: 1.0,
-                bundle_size: 32,
-                l2_reg: l2,
-                stop: StopRule::SubgradRel(1e-5),
-                max_outer: 2000,
-                ..TrainOptions::default()
-            };
+            let o = pcdn::api::Fit::spec()
+                .c(1.0)
+                .solver(pcdn::api::Pcdn { p: 32 })
+                .l2(l2)
+                .stop(StopRule::SubgradRel(1e-5))
+                .max_outer(2000)
+                .options()
+                .expect("valid options");
             let r = Pcdn::new().train(&d, Objective::Logistic, &o);
             t.push(vec![
                 l2.into(),

@@ -192,14 +192,14 @@ fn main() {
 
     // --- one full PCDN outer iteration -------------------------------------
     {
-        use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
-        let opts = TrainOptions {
-            c: 4.0,
-            bundle_size: 256,
-            stop: StopRule::MaxOuter(1),
-            max_outer: 1,
-            ..TrainOptions::default()
-        };
+        use pcdn::solver::{pcdn::Pcdn, Solver, StopRule};
+        let opts = pcdn::api::Fit::spec()
+            .c(4.0)
+            .solver(pcdn::api::Pcdn { p: 256 })
+            .stop(StopRule::MaxOuter(1))
+            .max_outer(1)
+            .options()
+            .expect("valid options");
         bench("PCDN one outer sweep (P=256)", d.features(), || {
             black_box(Pcdn::new().train(&d, Objective::Logistic, &opts).inner_iters)
         });
@@ -271,16 +271,16 @@ fn main() {
 
     // --- pooled vs serial PCDN: full outer-iteration throughput ------------
     {
-        use pcdn::solver::{pcdn::Pcdn, Solver, StopRule, TrainOptions};
+        use pcdn::solver::{pcdn::Pcdn, Solver, StopRule};
         println!();
         for p in [64usize, 256, 1024] {
-            let serial = TrainOptions {
-                c: 4.0,
-                bundle_size: p,
-                stop: StopRule::MaxOuter(1),
-                max_outer: 1,
-                ..TrainOptions::default()
-            };
+            let serial = pcdn::api::Fit::spec()
+                .c(4.0)
+                .solver(pcdn::api::Pcdn { p })
+                .stop(StopRule::MaxOuter(1))
+                .max_outer(1)
+                .options()
+                .expect("valid options");
             let mut pooled = serial.clone();
             pooled.n_threads = n_threads;
             pooled.pool = Some(pool.clone());

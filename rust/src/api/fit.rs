@@ -1,0 +1,692 @@
+//! The [`Fit`] builder: the typed, validated way to configure and launch
+//! a training run.
+//!
+//! ```no_run
+//! use pcdn::api::{Fit, Pcdn};
+//! use pcdn::loss::Objective;
+//! use pcdn::solver::StopRule;
+//!
+//! # let dataset = pcdn::data::registry::by_name("a9a").unwrap().train();
+//! let fitted = Fit::on(&dataset)
+//!     .objective(Objective::Logistic)
+//!     .solver(Pcdn { p: 256 })
+//!     .stop(StopRule::SubgradRel(1e-3))
+//!     .threads(8)
+//!     .run()
+//!     .unwrap();
+//! println!("{} nnz, acc {:.4}", fitted.model.nnz(), fitted.model.accuracy(&dataset));
+//! ```
+//!
+//! Solver choice is *typed*: bundle size is a field of [`Pcdn`]/[`Scdn`],
+//! shrinking a field of [`Cdn`], so "PCDN with shrinking" or "CDN with a
+//! bundle size" cannot be expressed. Every parameter is validated in one
+//! place ([`Fit::options`]) before anything runs — mask lengths, bundle
+//! sizes, Armijo ranges, warm-start shapes, resume compatibility — and
+//! lowered to the solver-internal [`TrainOptions`], which remains the
+//! lowering target, not the public surface.
+//!
+//! **Migration note (old `TrainOptions` literals → builder).** Code that
+//! wrote
+//! `TrainOptions { c, bundle_size: 256, n_threads: 8, ..Default::default() }`
+//! and then picked a solver by hand now writes
+//! `Fit::on(&data).c(c).solver(Pcdn { p: 256 }).threads(8)` and calls
+//! [`Fit::run`] (for a [`Fitted`] model) or [`Fit::options`] (for the
+//! lowered `TrainOptions`, e.g. to feed `path::PathOptions`). Dataset-free
+//! contexts (config parsing) start from [`Fit::spec`] instead of
+//! [`Fit::on`]; shape validation then happens at the solver boundary.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::api::model::{Fitted, Model};
+use crate::data::Dataset;
+use crate::loss::Objective;
+use crate::parallel::pool::WorkerPool;
+use crate::solver::checkpoint::{Checkpoint, CheckpointWriter};
+use crate::solver::{
+    cdn, pcdn, scdn, tron, ArmijoParams, ProbeHandle, Solver, StopRule, TrainOptions,
+};
+
+/// PCDN (Alg. 3, the paper's contribution): bundles of `p` coordinates,
+/// one joint Armijo search per bundle — converges for any `p ∈ [1, n]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pcdn {
+    /// Bundle size `P`.
+    pub p: usize,
+}
+
+impl Default for Pcdn {
+    fn default() -> Self {
+        Pcdn { p: 64 }
+    }
+}
+
+/// CDN (Alg. 1): the sequential baseline, optionally with LIBLINEAR-style
+/// shrinking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Cdn {
+    pub shrinking: bool,
+}
+
+/// SCDN / Shotgun (Alg. 2): `p` concurrent stale single-coordinate
+/// updates per round; diverges past `P̄ > n/ρ(XᵀX) + 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scdn {
+    /// Parallel updates `P̄` per round.
+    pub p: usize,
+    /// Real racing threads on atomic state instead of the deterministic
+    /// round emulation.
+    pub atomic: bool,
+}
+
+impl Default for Scdn {
+    fn default() -> Self {
+        Scdn {
+            p: 64,
+            atomic: false,
+        }
+    }
+}
+
+/// TRON: the trust-region Newton baseline (variable splitting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Tron;
+
+/// A chosen solver configuration (what the typed structs lower into).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverSel {
+    Pcdn { p: usize },
+    Cdn { shrinking: bool },
+    Scdn { p: usize, atomic: bool },
+    Tron,
+}
+
+impl SolverSel {
+    /// The solver's `TrainResult::solver` / checkpoint name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverSel::Pcdn { .. } => "pcdn",
+            SolverSel::Cdn { .. } => "cdn",
+            SolverSel::Scdn { atomic: false, .. } => "scdn",
+            SolverSel::Scdn { atomic: true, .. } => "scdn-atomic",
+            SolverSel::Tron => "tron",
+        }
+    }
+
+    /// Reconstruct a selection from a checkpoint's solver name + saved
+    /// options (the inverse of [`SolverSel::name`] plus config).
+    fn from_checkpoint(ck: &Checkpoint) -> Result<SolverSel, FitError> {
+        Ok(match ck.solver.as_str() {
+            "pcdn" => SolverSel::Pcdn {
+                p: ck.opts.bundle_size,
+            },
+            "cdn" => SolverSel::Cdn {
+                shrinking: ck.opts.shrinking,
+            },
+            "scdn" => SolverSel::Scdn {
+                p: ck.opts.bundle_size,
+                atomic: false,
+            },
+            "scdn-atomic" => SolverSel::Scdn {
+                p: ck.opts.bundle_size,
+                atomic: true,
+            },
+            "tron" => SolverSel::Tron,
+            other => {
+                return Err(FitError::Resume(format!(
+                    "checkpoint names unknown solver '{other}'"
+                )))
+            }
+        })
+    }
+}
+
+impl From<Pcdn> for SolverSel {
+    fn from(s: Pcdn) -> Self {
+        SolverSel::Pcdn { p: s.p }
+    }
+}
+impl From<Cdn> for SolverSel {
+    fn from(s: Cdn) -> Self {
+        SolverSel::Cdn {
+            shrinking: s.shrinking,
+        }
+    }
+}
+impl From<Scdn> for SolverSel {
+    fn from(s: Scdn) -> Self {
+        SolverSel::Scdn {
+            p: s.p,
+            atomic: s.atomic,
+        }
+    }
+}
+impl From<Tron> for SolverSel {
+    fn from(_: Tron) -> Self {
+        SolverSel::Tron
+    }
+}
+
+/// Why a [`Fit`] refused to run. Every variant is a configuration error
+/// caught *before* any training work starts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FitError {
+    /// A parameter is out of range (message names it).
+    InvalidParam(String),
+    /// `feature_mask` length does not match the dataset width.
+    MaskLength { expected: usize, got: usize },
+    /// `warm_start` length does not match the dataset width.
+    WarmStartLength { expected: usize, got: usize },
+    /// The resume checkpoint does not match this run.
+    Resume(String),
+    /// A terminal method that needs a dataset was called on a
+    /// dataset-free spec (names the method).
+    MissingData(&'static str),
+}
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitError::InvalidParam(m) => write!(f, "invalid parameter: {m}"),
+            FitError::MaskLength { expected, got } => write!(
+                f,
+                "feature_mask has {got} entries but the dataset has {expected} features"
+            ),
+            FitError::WarmStartLength { expected, got } => write!(
+                f,
+                "warm_start has {got} entries but the dataset has {expected} features"
+            ),
+            FitError::Resume(m) => write!(f, "cannot resume: {m}"),
+            FitError::MissingData(m) => {
+                write!(f, "Fit::{m} needs a dataset — use Fit::on(&data), not Fit::spec()")
+            }
+        }
+    }
+}
+impl std::error::Error for FitError {}
+
+/// The fit builder. See the module docs for the shape of the API; every
+/// setter is chainable and the terminals are [`Fit::run`] (train, get a
+/// [`Fitted`]) and [`Fit::options`] (validate + lower only).
+#[derive(Clone, Debug)]
+pub struct Fit<'d> {
+    data: Option<&'d Dataset>,
+    objective: Objective,
+    solver: SolverSel,
+    c: f64,
+    l2_reg: f64,
+    stop: StopRule,
+    max_outer: usize,
+    max_secs: f64,
+    armijo: ArmijoParams,
+    seed: u64,
+    n_threads: usize,
+    pool: Option<WorkerPool>,
+    trace_every: usize,
+    eval_test: Option<Arc<Dataset>>,
+    record_iters: bool,
+    feature_mask: Option<Arc<Vec<bool>>>,
+    warm_start: Option<Vec<f64>>,
+    probe: Option<ProbeHandle>,
+    resume: Option<Arc<Checkpoint>>,
+    checkpoint: Option<(usize, PathBuf)>,
+}
+
+impl<'d> Fit<'d> {
+    /// Start configuring a fit on `data`. Defaults: logistic objective,
+    /// `Pcdn { p: 64 }`, `c = 1`, relative subgradient stop at `1e-3`,
+    /// serial execution.
+    pub fn on(data: &'d Dataset) -> Fit<'d> {
+        let mut fit: Fit<'d> = Fit::spec();
+        fit.data = Some(data);
+        fit
+    }
+
+    /// A dataset-free spec: same builder, but only [`Fit::options`] is a
+    /// valid terminal (shape checks against the data are deferred to the
+    /// solver boundary). Used by config-file lowering, where the dataset
+    /// is loaded after the options are resolved.
+    pub fn spec() -> Fit<'static> {
+        let d = TrainOptions::default();
+        Fit {
+            data: None,
+            objective: Objective::Logistic,
+            solver: SolverSel::Pcdn { p: d.bundle_size },
+            c: d.c,
+            l2_reg: d.l2_reg,
+            stop: d.stop,
+            max_outer: d.max_outer,
+            max_secs: d.max_secs,
+            armijo: d.armijo,
+            seed: d.seed,
+            n_threads: d.n_threads,
+            pool: None,
+            trace_every: d.trace_every,
+            eval_test: None,
+            record_iters: false,
+            feature_mask: None,
+            warm_start: None,
+            probe: None,
+            resume: None,
+            checkpoint: None,
+        }
+    }
+
+    /// Continue a checkpointed run on `data`: restores the checkpoint's
+    /// solver selection and every trajectory-determining option
+    /// (`c`, seed, stop rule, Armijo, thread count, mask …) so the
+    /// resumed run is bitwise identical to one that never stopped.
+    /// Overriding any of those afterwards is allowed but forfeits the
+    /// bitwise guarantee. (`warm_start` is the degenerate form of this:
+    /// model only, no counters/RNG/maintained state.)
+    pub fn resume(data: &'d Dataset, ck: Checkpoint) -> Result<Fit<'d>, FitError> {
+        let solver = SolverSel::from_checkpoint(&ck)?;
+        let mut fit = Fit::on(data);
+        fit.solver = solver;
+        fit.objective = ck.objective;
+        fit.c = ck.opts.c;
+        fit.l2_reg = ck.opts.l2_reg;
+        fit.seed = ck.opts.seed;
+        fit.stop = ck.opts.stop;
+        fit.armijo = ck.opts.armijo;
+        fit.max_outer = ck.opts.max_outer;
+        fit.n_threads = ck.opts.n_threads;
+        fit.feature_mask = ck.opts.feature_mask.clone().map(Arc::new);
+        fit.resume = Some(Arc::new(ck));
+        Ok(fit)
+    }
+
+    // ---- setters ------------------------------------------------------
+
+    pub fn objective(mut self, obj: Objective) -> Self {
+        self.objective = obj;
+        self
+    }
+
+    /// Choose the solver via its typed config ([`Pcdn`], [`Cdn`],
+    /// [`Scdn`], [`Tron`] — or a prebuilt [`SolverSel`]).
+    pub fn solver(mut self, sel: impl Into<SolverSel>) -> Self {
+        self.solver = sel.into();
+        self
+    }
+
+    /// Regularization weight `c` of Eq. 1 (`λ = 1/c`).
+    pub fn c(mut self, c: f64) -> Self {
+        self.c = c;
+        self
+    }
+
+    /// Elastic-net ℓ2 weight `λ₂` (0 = pure ℓ1, the paper's setting).
+    pub fn l2(mut self, l2: f64) -> Self {
+        self.l2_reg = l2;
+        self
+    }
+
+    pub fn stop(mut self, stop: StopRule) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    pub fn max_outer(mut self, k: usize) -> Self {
+        self.max_outer = k;
+        self
+    }
+
+    pub fn max_secs(mut self, secs: f64) -> Self {
+        self.max_secs = secs;
+        self
+    }
+
+    pub fn armijo(mut self, a: ArmijoParams) -> Self {
+        self.armijo = a;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Worker threads (= the pinned chunking degree, so results replay
+    /// bitwise on any machine with the same value).
+    pub fn threads(mut self, t: usize) -> Self {
+        self.n_threads = t;
+        self
+    }
+
+    /// Pin the run to an explicit worker team instead of the process-wide
+    /// one.
+    pub fn pool(mut self, pool: WorkerPool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    pub fn trace_every(mut self, k: usize) -> Self {
+        self.trace_every = k;
+        self
+    }
+
+    /// Held-out set evaluated along the trace.
+    pub fn eval_test(mut self, test: Arc<Dataset>) -> Self {
+        self.eval_test = Some(test);
+        self
+    }
+
+    pub fn record_iters(mut self, on: bool) -> Self {
+        self.record_iters = on;
+        self
+    }
+
+    /// Active-feature mask (screening); length must equal the dataset
+    /// width — validated before running.
+    pub fn mask(mut self, mask: Vec<bool>) -> Self {
+        self.feature_mask = Some(Arc::new(mask));
+        self
+    }
+
+    /// Shared form of [`Fit::mask`].
+    pub fn mask_arc(mut self, mask: Arc<Vec<bool>>) -> Self {
+        self.feature_mask = Some(mask);
+        self
+    }
+
+    /// Start from this model instead of `w = 0`.
+    pub fn warm_start(mut self, w0: Vec<f64>) -> Self {
+        self.warm_start = Some(w0);
+        self
+    }
+
+    /// Attach a trajectory observer.
+    pub fn probe(mut self, probe: ProbeHandle) -> Self {
+        self.probe = Some(probe);
+        self
+    }
+
+    /// Write a checkpoint to `path` every `k` outer iterations
+    /// (atomically overwritten — the file always holds the newest
+    /// complete resume point). Composes with [`Fit::probe`].
+    ///
+    /// Write failures are recorded, not fatal (a failing disk should not
+    /// kill a long fit). To *inspect* them, construct the
+    /// [`CheckpointWriter`] yourself, keep a handle, and attach it via
+    /// [`Fit::probe`] — then read `writer.last_error` after the run (the
+    /// CLI does exactly this).
+    pub fn checkpoint_every(mut self, k: usize, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint = Some((k, path.into()));
+        self
+    }
+
+    // ---- terminals ----------------------------------------------------
+
+    /// Validate everything and lower to the solver-internal
+    /// [`TrainOptions`]. This is the single validation point: anything
+    /// this returns will be accepted by every solver.
+    pub fn options(&self) -> Result<TrainOptions, FitError> {
+        self.validate()?;
+        let (bundle_size, shrinking) = match self.solver {
+            SolverSel::Pcdn { p } | SolverSel::Scdn { p, .. } => (p, false),
+            SolverSel::Cdn { shrinking } => (TrainOptions::default().bundle_size, shrinking),
+            SolverSel::Tron => (TrainOptions::default().bundle_size, false),
+        };
+        let mut probes: Vec<ProbeHandle> = Vec::new();
+        if let Some(p) = &self.probe {
+            probes.push(p.clone());
+        }
+        if let Some((k, path)) = &self.checkpoint {
+            probes.push(ProbeHandle::new(CheckpointWriter::new(*k, path.clone())));
+        }
+        let probe = match probes.len() {
+            0 => None,
+            1 => Some(probes.remove(0)),
+            _ => Some(ProbeHandle::fanout(probes)),
+        };
+        Ok(TrainOptions {
+            c: self.c,
+            bundle_size,
+            n_threads: self.n_threads,
+            armijo: self.armijo,
+            stop: self.stop,
+            max_outer: self.max_outer,
+            max_secs: self.max_secs,
+            shrinking,
+            seed: self.seed,
+            record_iters: self.record_iters,
+            trace_every: self.trace_every,
+            eval_test: self.eval_test.clone(),
+            l2_reg: self.l2_reg,
+            warm_start: if self.resume.is_some() {
+                None
+            } else {
+                self.warm_start.clone()
+            },
+            feature_mask: self.feature_mask.clone(),
+            pool: self.pool.clone(),
+            probe,
+            resume: self.resume.clone(),
+        })
+    }
+
+    /// Train and wrap the result as a first-class [`Model`] artifact.
+    pub fn run(&self) -> Result<Fitted, FitError> {
+        let data = self.data.ok_or(FitError::MissingData("run"))?;
+        let opts = self.options()?;
+        let result = match self.solver {
+            SolverSel::Pcdn { .. } => pcdn::Pcdn::new().train(data, self.objective, &opts),
+            SolverSel::Cdn { .. } => cdn::Cdn::new().train(data, self.objective, &opts),
+            SolverSel::Scdn { atomic: false, .. } => {
+                scdn::Scdn::new().train(data, self.objective, &opts)
+            }
+            SolverSel::Scdn { atomic: true, .. } => {
+                scdn::Scdn::atomic().train(data, self.objective, &opts)
+            }
+            SolverSel::Tron => tron::Tron::new().train(data, self.objective, &opts),
+        };
+        let model = Model::from_training(&result, self.objective, &opts, data);
+        Ok(Fitted { model, result })
+    }
+
+    fn validate(&self) -> Result<(), FitError> {
+        let c_ok = self.c.is_finite() && self.c > 0.0;
+        if !c_ok {
+            return Err(FitError::InvalidParam(format!(
+                "c must be positive and finite (got {})",
+                self.c
+            )));
+        }
+        let l2_ok = self.l2_reg.is_finite() && self.l2_reg >= 0.0;
+        if !l2_ok {
+            return Err(FitError::InvalidParam(format!(
+                "l2_reg must be nonnegative and finite (got {})",
+                self.l2_reg
+            )));
+        }
+        match self.solver {
+            SolverSel::Pcdn { p } | SolverSel::Scdn { p, .. } => {
+                if p == 0 {
+                    return Err(FitError::InvalidParam(
+                        "bundle size p must be ≥ 1".to_string(),
+                    ));
+                }
+            }
+            SolverSel::Cdn { .. } | SolverSel::Tron => {}
+        }
+        if self.n_threads == 0 {
+            return Err(FitError::InvalidParam(
+                "threads must be ≥ 1 (1 = serial)".to_string(),
+            ));
+        }
+        if self.max_outer == 0 {
+            return Err(FitError::InvalidParam("max_outer must be ≥ 1".to_string()));
+        }
+        let a = self.armijo;
+        let beta_ok = a.beta > 0.0 && a.beta < 1.0;
+        if !(0.0..1.0).contains(&a.sigma)
+            || !beta_ok
+            || !(0.0..1.0).contains(&a.gamma)
+            || a.max_steps == 0
+        {
+            return Err(FitError::InvalidParam(format!(
+                "armijo parameters out of range (sigma {} in [0,1), beta {} in (0,1), \
+                 gamma {} in [0,1), max_steps {} ≥ 1)",
+                a.sigma, a.beta, a.gamma, a.max_steps
+            )));
+        }
+        if let Some((k, _)) = &self.checkpoint {
+            if *k == 0 {
+                return Err(FitError::InvalidParam(
+                    "checkpoint_every interval must be ≥ 1".to_string(),
+                ));
+            }
+        }
+        if self.resume.is_some() && self.warm_start.is_some() {
+            return Err(FitError::InvalidParam(
+                "resume supersedes warm_start — set only one".to_string(),
+            ));
+        }
+        if let Some(data) = self.data {
+            let n = data.features();
+            if let Some(m) = &self.feature_mask {
+                if m.len() != n {
+                    return Err(FitError::MaskLength {
+                        expected: n,
+                        got: m.len(),
+                    });
+                }
+            }
+            if let Some(w0) = &self.warm_start {
+                if w0.len() != n {
+                    return Err(FitError::WarmStartLength {
+                        expected: n,
+                        got: w0.len(),
+                    });
+                }
+            }
+            if let Some(ck) = &self.resume {
+                ck.validate_for(self.solver.name(), data, self.objective)
+                    .map_err(FitError::Resume)?;
+                // Same contract the solvers enforce, surfaced as a typed
+                // error before any training work instead of a panic.
+                let same_mask = match (&ck.opts.feature_mask, &self.feature_mask) {
+                    (None, None) => true,
+                    (Some(a), Some(b)) => a.as_slice() == b.as_slice(),
+                    _ => false,
+                };
+                if !same_mask {
+                    return Err(FitError::Resume(
+                        "the run's feature_mask differs from the checkpoint's".to_string(),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn toy() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 60,
+                features: 24,
+                nnz_per_row: 5,
+                ..Default::default()
+            },
+            4,
+        )
+    }
+
+    #[test]
+    fn lowering_matches_typed_config() {
+        let d = toy();
+        let o = Fit::on(&d)
+            .solver(Pcdn { p: 8 })
+            .c(0.5)
+            .threads(3)
+            .seed(7)
+            .options()
+            .unwrap();
+        assert_eq!(o.bundle_size, 8);
+        assert_eq!(o.n_threads, 3);
+        assert_eq!(o.seed, 7);
+        assert!(!o.shrinking);
+        let o = Fit::on(&d)
+            .solver(Cdn { shrinking: true })
+            .options()
+            .unwrap();
+        assert!(o.shrinking);
+    }
+
+    #[test]
+    fn rejects_zero_bundle_and_bad_mask() {
+        let d = toy();
+        assert!(matches!(
+            Fit::on(&d).solver(Pcdn { p: 0 }).options(),
+            Err(FitError::InvalidParam(_))
+        ));
+        assert!(matches!(
+            Fit::on(&d).solver(Scdn { p: 0, atomic: false }).options(),
+            Err(FitError::InvalidParam(_))
+        ));
+        assert!(matches!(
+            Fit::on(&d).mask(vec![true; 3]).options(),
+            Err(FitError::MaskLength {
+                expected: 24,
+                got: 3
+            })
+        ));
+        assert!(matches!(
+            Fit::on(&d).warm_start(vec![0.0; 2]).options(),
+            Err(FitError::WarmStartLength { .. })
+        ));
+        assert!(Fit::on(&d).c(-1.0).options().is_err());
+        assert!(Fit::on(&d).c(f64::NAN).options().is_err());
+        assert!(Fit::on(&d).threads(0).options().is_err());
+    }
+
+    #[test]
+    fn spec_lowering_without_data() {
+        // Dataset-free spec validates everything except data shapes.
+        let o = Fit::spec()
+            .solver(Scdn { p: 16, atomic: false })
+            .options()
+            .unwrap();
+        assert_eq!(o.bundle_size, 16);
+        assert!(Fit::spec().solver(Pcdn { p: 0 }).options().is_err());
+        assert!(matches!(
+            Fit::spec().run(),
+            Err(FitError::MissingData("run"))
+        ));
+    }
+
+    #[test]
+    fn run_produces_model_with_provenance() {
+        let d = toy();
+        let fitted = Fit::on(&d)
+            .solver(Pcdn { p: 8 })
+            .stop(StopRule::SubgradRel(1e-3))
+            .run()
+            .unwrap();
+        assert_eq!(fitted.model.w, fitted.result.w);
+        assert_eq!(fitted.model.provenance.solver, "pcdn");
+        assert_eq!(fitted.model.provenance.features, d.features());
+        assert_eq!(fitted.model.provenance.fingerprint, d.fingerprint());
+        assert!(fitted.model.accuracy(&d) > 0.5);
+    }
+
+    #[test]
+    fn solver_name_round_trip() {
+        for sel in [
+            SolverSel::Pcdn { p: 4 },
+            SolverSel::Cdn { shrinking: true },
+            SolverSel::Scdn { p: 4, atomic: false },
+            SolverSel::Scdn { p: 4, atomic: true },
+            SolverSel::Tron,
+        ] {
+            assert!(!sel.name().is_empty());
+        }
+    }
+}

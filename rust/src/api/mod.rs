@@ -1,0 +1,60 @@
+//! # The public training / serving API
+//!
+//! This layer is the one front door to the crate's fit → select → serve
+//! pipeline; everything underneath (`solver`, `path`, `distributed`,
+//! `runtime`) is the engine room it lowers into.
+//!
+//! * [`Fit`] — a typed builder over dataset + objective + solver.
+//!   Per-solver configuration is typed ([`Pcdn`]`{ p }`, [`Cdn`]
+//!   `{ shrinking }`, [`Scdn`]`{ p, atomic }`, [`Tron`]), so invalid
+//!   combinations don't compile; all runtime validation (mask lengths,
+//!   Armijo ranges, resume compatibility) happens in one place before
+//!   anything runs. Lowers to the solver-internal
+//!   [`TrainOptions`](crate::solver::TrainOptions).
+//! * [`Model`] — the first-class artifact a fit produces: weights +
+//!   objective + provenance, versioned save/load (JSON and bit-exact
+//!   binary), serial and single-sample scoring.
+//! * [`Scorer`] — serving-grade batched prediction: decision values over
+//!   sparse minibatches sharded across the persistent
+//!   [`WorkerPool`](crate::parallel::pool::WorkerPool), bitwise equal to
+//!   the serial fold.
+//! * [`Checkpoint`] — interrupt/resume for long fits: `Fit::resume`
+//!   continues a checkpointed run **bitwise identically** to one that
+//!   never stopped ([`crate::solver::checkpoint`] has the contract).
+//!
+//! ```no_run
+//! use pcdn::api::{Fit, Model, Pcdn, Scorer};
+//! use pcdn::solver::StopRule;
+//!
+//! # fn main() -> Result<(), Box<dyn std::error::Error>> {
+//! let data = pcdn::data::registry::by_name("real-sim").unwrap().train();
+//!
+//! // fit (checkpointing every 10 outers) …
+//! let fitted = Fit::on(&data)
+//!     .solver(Pcdn { p: 256 })
+//!     .stop(StopRule::SubgradRel(1e-3))
+//!     .threads(8)
+//!     .checkpoint_every(10, "run.ckpt")
+//!     .run()?;
+//!
+//! // … save the artifact …
+//! fitted.model.save(std::path::Path::new("model.bin"))?;
+//!
+//! // … and serve it.
+//! let model = Model::load(std::path::Path::new("model.bin"))?;
+//! let scorer = Scorer::new(model).threads(8);
+//! println!("accuracy {:.4}", scorer.accuracy(&data));
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod fit;
+pub mod model;
+
+pub use crate::loss::Objective;
+pub use crate::solver::checkpoint::{
+    Checkpoint, CheckpointRecorder, CheckpointWriter,
+};
+pub use crate::solver::{ArmijoParams, StopRule, TrainResult};
+pub use fit::{Cdn, Fit, FitError, Pcdn, Scdn, SolverSel, Tron};
+pub use model::{Fitted, Model, Provenance, Scorer};

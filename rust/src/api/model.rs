@@ -1,0 +1,602 @@
+//! The [`Model`] artifact: what a fit produces, what serving consumes.
+//!
+//! A model is the weight vector plus everything needed to use and audit
+//! it: the objective, the regularization weights, and training
+//! [`Provenance`] (solver, seed, stop rule, dataset stamp). Two on-disk
+//! formats:
+//!
+//! * **binary** (`util::codec`, magic `PCDNMDL1`) — the canonical format;
+//!   every weight round-trips bit-for-bit;
+//! * **JSON** (`util::json`) — human-readable; finite weights round-trip
+//!   exactly through Rust's shortest-representation float formatting
+//!   (`-0.0` normalizes to `0`).
+//!
+//! [`Model::save`]/[`Model::load`] pick by content: load sniffs the magic,
+//! save writes JSON iff the path ends in `.json`.
+//!
+//! Serving goes through [`Scorer`]: batched decision values over sparse
+//! minibatches, sharded across a [`WorkerPool`] by the same fixed
+//! [`SampleRanges`] partition the trainers use — and, like them, bitwise
+//! equal to the serial fold at any pool width (each sample's accumulation
+//! order is ascending feature order in both paths).
+
+use std::path::Path;
+
+use crate::data::{CscMat, Dataset};
+use crate::loss::Objective;
+use crate::parallel::pool::{SendPtr, WorkerPool};
+use crate::parallel::range::SampleRanges;
+use crate::solver::{StopRule, TrainOptions, TrainResult};
+use crate::util::codec::{ByteReader, ByteWriter};
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"PCDNMDL1";
+const VERSION: u32 = 1;
+
+/// Where a model came from: enough to reproduce (solver, seed, stop) and
+/// to audit (dataset stamp, convergence) the fit that produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    pub solver: String,
+    pub seed: u64,
+    /// Human-readable stop rule, e.g. `subgrad_rel(0.001)`.
+    pub stop: String,
+    pub dataset: String,
+    /// [`Dataset::fingerprint`] of the training data.
+    pub fingerprint: u64,
+    pub samples: usize,
+    pub features: usize,
+    pub outer_iters: usize,
+    pub converged: bool,
+    pub final_objective: f64,
+}
+
+/// A trained model artifact. See the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Model {
+    pub w: Vec<f64>,
+    pub objective: Objective,
+    pub c: f64,
+    pub l2_reg: f64,
+    pub provenance: Provenance,
+}
+
+/// What [`Fit::run`](crate::api::Fit::run) returns: the model artifact
+/// plus the raw training result (trace, counters, timings).
+#[derive(Clone, Debug)]
+pub struct Fitted {
+    pub model: Model,
+    pub result: TrainResult,
+}
+
+/// Render a stop rule for provenance.
+pub fn stop_rule_string(stop: StopRule) -> String {
+    match stop {
+        StopRule::SubgradRel(e) => format!("subgrad_rel({e})"),
+        StopRule::SubgradAbs(e) => format!("subgrad_abs({e})"),
+        StopRule::RelFuncDiff { fstar, eps } => format!("rel_func_diff({fstar},{eps})"),
+        StopRule::MaxOuter(k) => format!("max_outer({k})"),
+    }
+}
+
+impl Model {
+    /// Wrap a training result (used by `Fit::run`; callers driving
+    /// solvers directly can use it too).
+    pub fn from_training(
+        result: &TrainResult,
+        objective: Objective,
+        opts: &TrainOptions,
+        data: &Dataset,
+    ) -> Model {
+        Model {
+            w: result.w.clone(),
+            objective,
+            c: opts.c,
+            l2_reg: opts.l2_reg,
+            provenance: Provenance {
+                solver: result.solver.to_string(),
+                seed: opts.seed,
+                stop: stop_rule_string(opts.stop),
+                dataset: data.name.clone(),
+                fingerprint: data.fingerprint(),
+                samples: data.samples(),
+                features: data.features(),
+                outer_iters: result.outer_iters,
+                converged: result.converged,
+                final_objective: result.final_objective,
+            },
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        crate::linalg::nnz(&self.w)
+    }
+
+    /// Decision value `wᵀx` for one sparse sample given as parallel
+    /// `(feature index, value)` arrays — the single-request serving path.
+    /// An index beyond the model width is rejected exactly like a
+    /// wrong-width batch in [`Self::decision_values`] — never silently
+    /// dropped, which would return a partial score.
+    pub fn score_sample(&self, idx: &[u32], vals: &[f64]) -> f64 {
+        assert_eq!(
+            idx.len(),
+            vals.len(),
+            "sample has {} indices but {} values",
+            idx.len(),
+            vals.len()
+        );
+        let mut z = 0.0;
+        for (&j, &v) in idx.iter().zip(vals) {
+            let j = j as usize;
+            assert!(
+                j < self.w.len(),
+                "sample names feature {j} but the model has {} features",
+                self.w.len()
+            );
+            z += self.w[j] * v;
+        }
+        z
+    }
+
+    /// Decision values `X w` (serial reference path).
+    pub fn decision_values(&self, x: &CscMat) -> Vec<f64> {
+        assert_eq!(
+            x.cols,
+            self.w.len(),
+            "batch has {} features, model has {}",
+            x.cols,
+            self.w.len()
+        );
+        x.matvec(&self.w)
+    }
+
+    /// Predicted ±1 labels (`z = 0` predicts `+1`, matching the
+    /// [`Dataset::accuracy`] convention).
+    pub fn predict(&self, x: &CscMat) -> Vec<f64> {
+        self.decision_values(x)
+            .into_iter()
+            .map(|z| if z < 0.0 { -1.0 } else { 1.0 })
+            .collect()
+    }
+
+    /// Classification accuracy on a labeled dataset; defers to
+    /// [`Dataset::accuracy`] so the two surfaces can never disagree.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        assert_eq!(data.features(), self.w.len(), "dataset width != model");
+        data.accuracy(&self.w)
+    }
+
+    /// Mean squared error (regression / Lasso serving).
+    pub fn mse(&self, data: &Dataset) -> f64 {
+        assert_eq!(data.features(), self.w.len(), "dataset width != model");
+        data.mse(&self.w)
+    }
+
+    // ---- JSON format --------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let p = &self.provenance;
+        Json::obj(vec![
+            ("format", Json::Str("pcdn-model".into())),
+            ("version", Json::Num(VERSION as f64)),
+            ("objective", Json::Str(objective_str(self.objective).into())),
+            ("c", Json::Num(self.c)),
+            ("l2_reg", Json::Num(self.l2_reg)),
+            ("w", Json::Arr(self.w.iter().map(|&x| Json::Num(x)).collect())),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("solver", Json::Str(p.solver.clone())),
+                    ("seed", Json::Str(p.seed.to_string())),
+                    ("stop", Json::Str(p.stop.clone())),
+                    ("dataset", Json::Str(p.dataset.clone())),
+                    (
+                        "fingerprint",
+                        Json::Str(format!("{:#018x}", p.fingerprint)),
+                    ),
+                    ("samples", Json::Num(p.samples as f64)),
+                    ("features", Json::Num(p.features as f64)),
+                    ("outer_iters", Json::Num(p.outer_iters as f64)),
+                    ("converged", Json::Bool(p.converged)),
+                    ("final_objective", Json::Num(p.final_objective)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Model, String> {
+        if doc.get("format").and_then(Json::as_str) != Some("pcdn-model") {
+            return Err("not a pcdn-model document".into());
+        }
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or("missing version")?;
+        if version == 0 || version > VERSION as usize {
+            return Err(format!("unsupported model version {version}"));
+        }
+        let objective =
+            objective_of_str(doc.get("objective").and_then(Json::as_str).unwrap_or(""))?;
+        let w = doc
+            .get("w")
+            .and_then(Json::as_arr)
+            .ok_or("missing weight array")?
+            .iter()
+            .map(|v| v.as_f64().ok_or("non-numeric weight"))
+            .collect::<Result<Vec<f64>, _>>()?;
+        let p = doc.get("provenance").ok_or("missing provenance")?;
+        let fp_str = p
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or("missing fingerprint")?;
+        let fingerprint = u64::from_str_radix(fp_str.trim_start_matches("0x"), 16)
+            .map_err(|_| format!("bad fingerprint '{fp_str}'"))?;
+        let seed_str = p.get("seed").and_then(Json::as_str).ok_or("missing seed")?;
+        Ok(Model {
+            w,
+            objective,
+            c: doc.get("c").and_then(Json::as_f64).ok_or("missing c")?,
+            l2_reg: doc.get("l2_reg").and_then(Json::as_f64).unwrap_or(0.0),
+            provenance: Provenance {
+                solver: p
+                    .get("solver")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                seed: seed_str.parse().map_err(|_| "bad seed")?,
+                stop: p
+                    .get("stop")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                dataset: p
+                    .get("dataset")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                fingerprint,
+                samples: p.get("samples").and_then(Json::as_usize).unwrap_or(0),
+                features: p.get("features").and_then(Json::as_usize).unwrap_or(0),
+                outer_iters: p.get("outer_iters").and_then(Json::as_usize).unwrap_or(0),
+                converged: p.get("converged").and_then(Json::as_bool).unwrap_or(false),
+                final_objective: p
+                    .get("final_objective")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(f64::NAN),
+            },
+        })
+    }
+
+    // ---- binary format (bit-exact) ------------------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new(MAGIC, VERSION);
+        w.put_u8(match self.objective {
+            Objective::Logistic => 0,
+            Objective::L2Svm => 1,
+            Objective::Lasso => 2,
+        });
+        w.put_f64(self.c);
+        w.put_f64(self.l2_reg);
+        w.put_f64_slice(&self.w);
+        let p = &self.provenance;
+        w.put_str(&p.solver);
+        w.put_u64(p.seed);
+        w.put_str(&p.stop);
+        w.put_str(&p.dataset);
+        w.put_u64(p.fingerprint);
+        w.put_usize(p.samples);
+        w.put_usize(p.features);
+        w.put_usize(p.outer_iters);
+        w.put_bool(p.converged);
+        w.put_f64(p.final_objective);
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Model, String> {
+        let (mut r, _version) =
+            ByteReader::open(bytes, MAGIC, VERSION).map_err(|e| e.to_string())?;
+        let model = decode_model(&mut r).map_err(|e| e.to_string())?;
+        r.finish().map_err(|e| e.to_string())?;
+        Ok(model)
+    }
+
+    // ---- files --------------------------------------------------------
+
+    /// Save as JSON when the path ends in `.json`, binary otherwise.
+    /// Atomic (full-name `.tmp` sibling + rename), so concurrent savers
+    /// of *different* targets never share a tmp file and an interrupted
+    /// write never leaves a torn artifact.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let bytes = if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            self.to_json().pretty().into_bytes()
+        } else {
+            self.to_bytes()
+        };
+        let tmp = crate::util::tmp_sibling(path);
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Load either format (sniffs the binary magic).
+    pub fn load(path: &Path) -> Result<Model, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        if bytes.starts_with(MAGIC) {
+            Model::from_bytes(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+        } else {
+            let text = std::str::from_utf8(&bytes)
+                .map_err(|_| format!("{}: neither binary model nor UTF-8", path.display()))?;
+            let doc =
+                Json::parse(text).map_err(|e| format!("{}: {e}", path.display()))?;
+            Model::from_json(&doc).map_err(|e| format!("{}: {e}", path.display()))
+        }
+    }
+}
+
+fn decode_model(
+    r: &mut ByteReader<'_>,
+) -> Result<Model, crate::util::codec::CodecError> {
+    let objective = match r.get_u8()? {
+        0 => Objective::Logistic,
+        1 => Objective::L2Svm,
+        2 => Objective::Lasso,
+        t => {
+            return Err(crate::util::codec::CodecError {
+                pos: 0,
+                msg: format!("unknown objective tag {t}"),
+            })
+        }
+    };
+    let c = r.get_f64()?;
+    let l2_reg = r.get_f64()?;
+    let w = r.get_f64_vec()?;
+    let provenance = Provenance {
+        solver: r.get_str()?,
+        seed: r.get_u64()?,
+        stop: r.get_str()?,
+        dataset: r.get_str()?,
+        fingerprint: r.get_u64()?,
+        samples: r.get_usize()?,
+        features: r.get_usize()?,
+        outer_iters: r.get_usize()?,
+        converged: r.get_bool()?,
+        final_objective: r.get_f64()?,
+    };
+    Ok(Model {
+        w,
+        objective,
+        c,
+        l2_reg,
+        provenance,
+    })
+}
+
+fn objective_str(o: Objective) -> &'static str {
+    match o {
+        Objective::Logistic => "logistic",
+        Objective::L2Svm => "l2svm",
+        Objective::Lasso => "lasso",
+    }
+}
+
+fn objective_of_str(s: &str) -> Result<Objective, String> {
+    match s {
+        "logistic" => Ok(Objective::Logistic),
+        "l2svm" | "svm" => Ok(Objective::L2Svm),
+        "lasso" => Ok(Objective::Lasso),
+        other => Err(format!("unknown objective '{other}'")),
+    }
+}
+
+/// Pooled batch scorer: decision values / predictions / accuracy over
+/// sparse minibatches, sharded by fixed [`SampleRanges`] (sized off the
+/// configured degree, never the physical pool width) — bitwise equal to
+/// the serial fold on any machine.
+pub struct Scorer {
+    model: Model,
+    pool: Option<WorkerPool>,
+    degree: usize,
+}
+
+impl Scorer {
+    /// Serial scorer (degree 1, no pool).
+    pub fn new(model: Model) -> Scorer {
+        Scorer {
+            model,
+            pool: None,
+            degree: 1,
+        }
+    }
+
+    /// Shard batches into `t` fixed ranges scored on the worker team
+    /// (the explicit [`Scorer::pool`] if set, else the process-wide one).
+    pub fn threads(mut self, t: usize) -> Self {
+        self.degree = t.max(1);
+        self
+    }
+
+    /// Pin scoring to an explicit worker team.
+    pub fn pool(mut self, pool: WorkerPool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Decision values `X w` for a sparse batch. With degree > 1 the rows
+    /// are cut into fixed sample ranges (minibatches) scored as one
+    /// `parallel_for` region; each range costs
+    /// `O(cols·log(col nnz) + nnz in range)` via the sorted-column binary
+    /// search, and the result is bitwise identical to the serial product.
+    pub fn decision_values(&self, x: &CscMat) -> Vec<f64> {
+        assert_eq!(
+            x.cols,
+            self.model.w.len(),
+            "batch has {} features, model has {}",
+            x.cols,
+            self.model.w.len()
+        );
+        let s = x.rows;
+        if self.degree <= 1 || s == 0 {
+            return x.matvec(&self.model.w);
+        }
+        let ranges = SampleRanges::new(s, self.degree);
+        let mut out = vec![0.0f64; s];
+        let team = self
+            .pool
+            .clone()
+            .unwrap_or_else(|| WorkerPool::global().clone());
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        let w = &self.model.w;
+        team.parallel_for(ranges.n_ranges(), move |r, _wid| {
+            let (lo, hi) = ranges.bounds(r);
+            // SAFETY: ranges partition [0, s) disjointly; each region item
+            // writes only its own out[lo..hi], and the region barrier
+            // completes before `out` is read.
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(lo), hi - lo) };
+            x.matvec_range(w, lo, hi, slice);
+        });
+        out
+    }
+
+    /// Predicted ±1 labels for a batch.
+    pub fn predict(&self, x: &CscMat) -> Vec<f64> {
+        self.decision_values(x)
+            .into_iter()
+            .map(|z| if z < 0.0 { -1.0 } else { 1.0 })
+            .collect()
+    }
+
+    /// Classification accuracy over a labeled batch: pooled decision
+    /// values folded through the same shared predicate as
+    /// [`Dataset::accuracy`] ([`crate::data::correct_classification`]),
+    /// so the two surfaces cannot diverge.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let z = self.decision_values(&data.x);
+        crate::data::accuracy_of(&z, &data.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::fit::{Fit, Pcdn};
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::solver::StopRule;
+
+    fn toy() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 90,
+                features: 30,
+                nnz_per_row: 6,
+                ..Default::default()
+            },
+            11,
+        )
+    }
+
+    fn trained(d: &Dataset) -> Model {
+        Fit::on(d)
+            .solver(Pcdn { p: 8 })
+            .stop(StopRule::SubgradRel(1e-4))
+            .run()
+            .unwrap()
+            .model
+    }
+
+    #[test]
+    fn binary_roundtrip_bitwise() {
+        let d = toy();
+        let m = trained(&d);
+        let rt = Model::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(m, rt);
+        for (a, b) in m.w.iter().zip(&rt.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_bitwise_on_trained_weights() {
+        let d = toy();
+        let m = trained(&d);
+        let doc = Json::parse(&m.to_json().pretty()).unwrap();
+        let rt = Model::from_json(&doc).unwrap();
+        assert_eq!(m, rt);
+        for (a, b) in m.w.iter().zip(&rt.w) {
+            assert_eq!(a.to_bits(), b.to_bits(), "JSON weight drifted");
+        }
+    }
+
+    #[test]
+    fn predict_agrees_with_dataset_accuracy() {
+        let d = toy();
+        let m = trained(&d);
+        let preds = m.predict(&d.x);
+        let acc_from_preds = preds
+            .iter()
+            .zip(&d.y)
+            .filter(|(p, y)| *p == *y)
+            .count() as f64
+            / d.samples() as f64;
+        assert_eq!(acc_from_preds, d.accuracy(&m.w));
+        assert_eq!(m.accuracy(&d), d.accuracy(&m.w));
+    }
+
+    #[test]
+    fn pooled_scorer_bitwise_equals_serial() {
+        let d = toy();
+        let m = trained(&d);
+        let serial = m.decision_values(&d.x);
+        for degree in [2usize, 3, 7] {
+            let scorer = Scorer::new(m.clone()).threads(degree);
+            let pooled = scorer.decision_values(&d.x);
+            assert_eq!(serial.len(), pooled.len());
+            for (a, b) in serial.iter().zip(&pooled) {
+                assert_eq!(a.to_bits(), b.to_bits(), "degree {degree} diverged");
+            }
+            assert_eq!(scorer.accuracy(&d), d.accuracy(&m.w));
+        }
+    }
+
+    #[test]
+    fn score_sample_matches_batch() {
+        let d = toy();
+        let m = trained(&d);
+        let z = m.decision_values(&d.x);
+        let csr = d.x.to_csr();
+        for i in [0usize, 5, 89] {
+            let (idx, vals) = csr.row(i);
+            let zi = m.score_sample(idx, vals);
+            assert!((zi - z[i]).abs() <= 1e-12 * z[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn file_save_load_both_formats() {
+        let d = toy();
+        let m = trained(&d);
+        let dir = std::env::temp_dir().join("pcdn_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bin = dir.join("m.model");
+        let json = dir.join("m.json");
+        m.save(&bin).unwrap();
+        m.save(&json).unwrap();
+        assert_eq!(Model::load(&bin).unwrap(), m);
+        assert_eq!(Model::load(&json).unwrap(), m);
+        // JSON file really is JSON.
+        let text = std::fs::read_to_string(&json).unwrap();
+        assert!(text.trim_start().starts_with('{'));
+        std::fs::remove_file(&bin).ok();
+        std::fs::remove_file(&json).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        assert!(Model::from_bytes(b"nope").is_err());
+        assert!(Model::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+}

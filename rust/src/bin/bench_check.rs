@@ -12,8 +12,14 @@
 //!
 //! ```sh
 //! # history/ holds BENCH_epilogue.json files from previous CI runs
-//! bench_check --current BENCH_epilogue.json --history history [--tolerance 0.2]
+//! # (one subdirectory per run: BENCH_epilogue-r<run_id>/...)
+//! bench_check --current BENCH_epilogue.json --history history \
+//!     [--tolerance 0.2] [--max-history 10]
 //! ```
+//!
+//! `--max-history N` gates against the N *newest* runs only (CI names
+//! artifacts per run id, so the newest files sort last), keeping the
+//! baseline a moving median rather than an all-time one.
 //!
 //! Exit codes: 0 = pass (or not enough history yet — the trajectory is
 //! still accumulating), 1 = regression beyond tolerance, 2 = bad
@@ -85,10 +91,31 @@ fn main() {
     .opt("current", Some("BENCH_epilogue.json"), "current bench output")
     .opt("history", Some("bench_history"), "directory of prior BENCH_epilogue.json files")
     .opt("tolerance", Some("0.2"), "allowed fractional drop below the history median")
-    .opt("min-history", Some("1"), "minimum prior runs before the gate engages");
+    .opt("min-history", Some("1"), "minimum prior runs before the gate engages")
+    .opt("max-history", Some("10"), "gate against the N newest history files only");
     let a = cli.parse();
-    let tolerance = a.f64("tolerance").unwrap_or(0.2);
-    let min_history = a.usize("min-history").unwrap_or(1).max(1);
+    // Malformed numeric flags are usage errors, not silent defaults.
+    let tolerance = match a.f64("tolerance") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            std::process::exit(2);
+        }
+    };
+    let min_history = match a.usize("min-history") {
+        Ok(v) => v.max(1),
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            std::process::exit(2);
+        }
+    };
+    let max_history = match a.usize("max-history") {
+        Ok(v) => v.max(1),
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            std::process::exit(2);
+        }
+    };
 
     let current = match load_speedup(std::path::Path::new(a.get("current").unwrap())) {
         Ok(v) => v,
@@ -114,13 +141,24 @@ fn main() {
                 files.push(p);
             }
         }
-        files.sort();
-        for f in files {
-            if f.extension().and_then(|x| x.to_str()) == Some("json") {
-                match load_speedup(&f) {
-                    Ok(v) => history.push(v),
-                    Err(e) => eprintln!("bench_check: skipping {e}"),
-                }
+        // Per-run artifact names embed monotonically increasing run ids,
+        // so (length, lexicographic) order is numeric order — shorter ids
+        // are always older. Keep only the `max_history` newest files so
+        // the gate is a moving median, not an all-time one.
+        files.sort_by_key(|f| (f.as_os_str().len(), f.clone()));
+        files.retain(|f| f.extension().and_then(|x| x.to_str()) == Some("json"));
+        let skip = files.len().saturating_sub(max_history);
+        if skip > 0 {
+            println!(
+                "bench_check: trajectory holds {} runs; gating against the {} newest",
+                files.len(),
+                max_history
+            );
+        }
+        for f in files.into_iter().skip(skip) {
+            match load_speedup(&f) {
+                Ok(v) => history.push(v),
+                Err(e) => eprintln!("bench_check: skipping {e}"),
             }
         }
     }

@@ -101,27 +101,39 @@ impl RunConfig {
             Some("lasso") => Objective::Lasso,
             Some(o) => bail!("unknown objective '{o}'"),
         };
-        let mut train = TrainOptions {
-            c: doc.get("c").and_then(Json::as_f64).unwrap_or(1.0),
-            bundle_size: doc
-                .get("bundle_size")
-                .and_then(Json::as_usize)
-                .unwrap_or(64),
-            n_threads: doc.get("threads").and_then(Json::as_usize).unwrap_or(1),
-            stop: StopRule::SubgradRel(
-                doc.get("eps").and_then(Json::as_f64).unwrap_or(1e-3),
-            ),
-            max_outer: doc.get("max_outer").and_then(Json::as_usize).unwrap_or(500),
-            shrinking: doc
-                .get("shrinking")
-                .and_then(Json::as_bool)
-                .unwrap_or(false),
-            seed: doc.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
-            l2_reg: doc.get("l2_reg").and_then(Json::as_f64).unwrap_or(0.0),
-            ..TrainOptions::default()
+        // Lower through the public typed builder (the crate's single
+        // validation point); bundle size rides the PCDN/SCDN config,
+        // shrinking the CDN config. The JSON surface remains free-form —
+        // a `shrinking` key on a non-CDN solver is carried through (and
+        // ignored by that solver) exactly as before.
+        let p = doc
+            .get("bundle_size")
+            .and_then(Json::as_usize)
+            .unwrap_or(64);
+        let shrinking = doc
+            .get("shrinking")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
+        let sel = match solver {
+            SolverKind::Pcdn | SolverKind::PcdnPjrt => crate::api::SolverSel::Pcdn { p },
+            SolverKind::Cdn => crate::api::SolverSel::Cdn { shrinking },
+            SolverKind::Scdn => crate::api::SolverSel::Scdn { p, atomic: false },
+            SolverKind::ScdnAtomic => crate::api::SolverSel::Scdn { p, atomic: true },
+            SolverKind::Tron => crate::api::SolverSel::Tron,
         };
+        let mut fit = crate::api::Fit::spec()
+            .solver(sel)
+            .objective(objective)
+            .c(doc.get("c").and_then(Json::as_f64).unwrap_or(1.0))
+            .l2(doc.get("l2_reg").and_then(Json::as_f64).unwrap_or(0.0))
+            .stop(StopRule::SubgradRel(
+                doc.get("eps").and_then(Json::as_f64).unwrap_or(1e-3),
+            ))
+            .max_outer(doc.get("max_outer").and_then(Json::as_usize).unwrap_or(500))
+            .threads(doc.get("threads").and_then(Json::as_usize).unwrap_or(1))
+            .seed(doc.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64);
         if let Some(a) = doc.get("armijo") {
-            train.armijo = ArmijoParams {
+            fit = fit.armijo(ArmijoParams {
                 sigma: a.get("sigma").and_then(Json::as_f64).unwrap_or(0.01),
                 beta: a.get("beta").and_then(Json::as_f64).unwrap_or(0.5),
                 gamma: a.get("gamma").and_then(Json::as_f64).unwrap_or(0.0),
@@ -129,8 +141,11 @@ impl RunConfig {
                     .get("max_steps")
                     .and_then(Json::as_usize)
                     .unwrap_or(60),
-            };
+            });
         }
+        let mut train = fit.options().map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        // Free-form passthrough (see the comment above).
+        train.shrinking = shrinking;
         let cfg = RunConfig {
             solver,
             data,

@@ -79,12 +79,16 @@ fn dataset_of(a: &AnalogSpec, opts: &ExpOptions) -> Dataset {
 /// the speedup. Drivers whose outputs are iteration counts rather than
 /// modeled times attach the shared team via [`pooled_opts`].
 fn base_opts(c: f64, p: usize, opts: &ExpOptions) -> TrainOptions {
-    TrainOptions {
-        c,
-        bundle_size: p,
-        seed: opts.seed,
-        ..TrainOptions::default()
-    }
+    // Through the public builder (single validation point). `Pcdn { p }`
+    // carries the bundle size for every driver; solvers that ignore it
+    // (CDN/TRON) ignore the lowered field exactly as before, and drivers
+    // that need shrinking flip the lowered option directly.
+    crate::api::Fit::spec()
+        .c(c)
+        .solver(crate::api::Pcdn { p })
+        .seed(opts.seed)
+        .options()
+        .expect("experiment base options are valid")
 }
 
 /// [`base_opts`] plus the process-wide persistent worker team, for runs

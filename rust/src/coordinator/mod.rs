@@ -17,6 +17,12 @@ use config::{RunConfig, SolverKind};
 /// Execute a resolved run config end to end.
 pub fn run(cfg: &RunConfig) -> Result<TrainResult> {
     let data = cfg.data.load()?;
+    run_on(&data, cfg)
+}
+
+/// Execute a run config on an already-loaded dataset (the CLI loads once
+/// and reuses the data for model saving / scoring afterwards).
+pub fn run_on(data: &crate::data::Dataset, cfg: &RunConfig) -> Result<TrainResult> {
     crate::log_info!(
         "training {:?} on {} (s={}, n={}, sparsity={:.2}%)",
         cfg.solver,
@@ -26,16 +32,16 @@ pub fn run(cfg: &RunConfig) -> Result<TrainResult> {
         data.sparsity() * 100.0
     );
     let result = match cfg.solver {
-        SolverKind::Pcdn => Pcdn::new().train(&data, cfg.objective, &cfg.train),
-        SolverKind::Cdn => Cdn::new().train(&data, cfg.objective, &cfg.train),
-        SolverKind::Scdn => Scdn::new().train(&data, cfg.objective, &cfg.train),
-        SolverKind::ScdnAtomic => Scdn::atomic().train(&data, cfg.objective, &cfg.train),
-        SolverKind::Tron => Tron::new().train(&data, cfg.objective, &cfg.train),
+        SolverKind::Pcdn => Pcdn::new().train(data, cfg.objective, &cfg.train),
+        SolverKind::Cdn => Cdn::new().train(data, cfg.objective, &cfg.train),
+        SolverKind::Scdn => Scdn::new().train(data, cfg.objective, &cfg.train),
+        SolverKind::ScdnAtomic => Scdn::atomic().train(data, cfg.objective, &cfg.train),
+        SolverKind::Tron => Tron::new().train(data, cfg.objective, &cfg.train),
         SolverKind::PcdnPjrt => {
             let rt = crate::runtime::PjrtRuntime::cpu(&cfg.artifacts)?;
             crate::runtime::dense_trainer::train_dense_pjrt(
                 &rt,
-                &data,
+                data,
                 cfg.objective,
                 &cfg.train,
             )?
@@ -76,11 +82,11 @@ pub fn train_analog(
         solver,
         data: config::DataSource::Analog(name.to_string()),
         objective: obj,
-        train: crate::solver::TrainOptions {
-            c,
-            bundle_size,
-            ..Default::default()
-        },
+        train: crate::api::Fit::spec()
+            .c(c)
+            .solver(crate::api::Pcdn { p: bundle_size })
+            .options()
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
         artifacts: crate::runtime::PjrtRuntime::default_dir()
             .to_string_lossy()
             .into_owned(),

@@ -79,12 +79,39 @@ impl Dataset {
     /// Classification accuracy of a linear model `w` on this dataset.
     pub fn accuracy(&self, w: &[f64]) -> f64 {
         let z = self.x.matvec(w);
-        let correct = z
-            .iter()
-            .zip(&self.y)
-            .filter(|(zi, yi)| zi.signum() * **yi > 0.0 || (**zi == 0.0 && **yi > 0.0))
-            .count();
-        correct as f64 / self.samples().max(1) as f64
+        accuracy_of(&z, &self.y)
+    }
+
+    /// Deterministic 64-bit content fingerprint (FNV-1a over dimensions,
+    /// label bits and the sparse structure/values). Used to stamp model
+    /// and checkpoint artifacts so a resume or predict against the wrong
+    /// dataset is caught at load time rather than producing silent
+    /// garbage. O(nnz) — called once per artifact write, never on a hot
+    /// path.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        eat(&(self.samples() as u64).to_le_bytes());
+        eat(&(self.features() as u64).to_le_bytes());
+        for &yi in &self.y {
+            eat(&yi.to_bits().to_le_bytes());
+        }
+        for j in 0..self.features() {
+            let (ri, vals) = self.x.col(j);
+            eat(&(ri.len() as u64).to_le_bytes());
+            for (r, v) in ri.iter().zip(vals) {
+                eat(&r.to_le_bytes());
+                eat(&v.to_bits().to_le_bytes());
+            }
+        }
+        h
     }
 
     /// Duplicate all samples `k` times (paper §5.4.1 data-size scaling).
@@ -100,6 +127,26 @@ impl Dataset {
             y,
         }
     }
+}
+
+/// The classification correctness convention, shared by every accuracy
+/// surface ([`Dataset::accuracy`], `api::Scorer`, the `pcdn predict`
+/// CLI) so they can never disagree: a decision value of exactly 0
+/// predicts the positive class.
+#[inline]
+pub fn correct_classification(z: f64, y: f64) -> bool {
+    z.signum() * y > 0.0 || (z == 0.0 && y > 0.0)
+}
+
+/// Accuracy from precomputed decision values and ±1 labels.
+pub fn accuracy_of(z: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(z.len(), y.len());
+    let correct = z
+        .iter()
+        .zip(y)
+        .filter(|(&zi, &yi)| correct_classification(zi, yi))
+        .count();
+    correct as f64 / z.len().max(1) as f64
 }
 
 #[cfg(test)]
@@ -148,6 +195,21 @@ mod tests {
         assert_eq!(d2.samples(), 12);
         assert_eq!(d2.features(), 2);
         assert_eq!(d2.accuracy(&[1.0, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn fingerprint_stable_and_content_sensitive() {
+        let d = toy();
+        assert_eq!(d.fingerprint(), toy().fingerprint());
+        // A one-bit value change, a label flip, or a shape change all move it.
+        let mut d2 = toy();
+        d2.y[0] = -1.0;
+        assert_ne!(d.fingerprint(), d2.fingerprint());
+        let d3 = d.duplicate(2);
+        assert_ne!(d.fingerprint(), d3.fingerprint());
+        let x4 = CscMat::from_triplets(3, 2, &[(0, 0, 1.0 + 1e-15), (1, 0, -1.0), (2, 1, 2.0)]);
+        let d4 = Dataset::new("toy", x4, vec![1.0, -1.0, 1.0]);
+        assert_ne!(d.fingerprint(), d4.fingerprint());
     }
 
     #[test]

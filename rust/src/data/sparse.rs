@@ -168,6 +168,33 @@ impl CscMat {
         out
     }
 
+    /// Row-range slice of [`Self::matvec`]: writes `(X w)[lo..hi]` into
+    /// `out` (length `hi − lo`). Row indices are sorted within every
+    /// column (an invariant of all construction paths), so each column
+    /// contributes a contiguous run found by binary search — a range costs
+    /// `O(cols·log(col nnz) + nnz in range)` instead of a full `O(nnz)`
+    /// pass. Per-sample accumulation order is ascending `j`, exactly as in
+    /// the full product, so covering `[0, rows)` with disjoint ranges is
+    /// bitwise identical to one `matvec` — the property the pooled serving
+    /// path (`api::Scorer`) rests on.
+    pub fn matvec_range(&self, w: &[f64], lo: usize, hi: usize, out: &mut [f64]) {
+        assert_eq!(w.len(), self.cols);
+        assert!(lo <= hi && hi <= self.rows, "bad row range [{lo}, {hi})");
+        assert_eq!(out.len(), hi - lo);
+        out.fill(0.0);
+        for (j, &wj) in w.iter().enumerate() {
+            if wj == 0.0 {
+                continue;
+            }
+            let (ri, vals) = self.col(j);
+            let a = ri.partition_point(|&r| (r as usize) < lo);
+            let b = ri.partition_point(|&r| (r as usize) < hi);
+            for (r, x) in ri[a..b].iter().zip(&vals[a..b]) {
+                out[*r as usize - lo] += wj * x;
+            }
+        }
+    }
+
     /// Transposed product `Xᵀ r` (`r` has length `rows`).
     pub fn matvec_t(&self, r: &[f64]) -> Vec<f64> {
         assert_eq!(r.len(), self.rows);
@@ -440,6 +467,26 @@ mod tests {
         let r = vec![1.0, 1.0, 1.0, 1.0];
         let gt = m.matvec_t(&r);
         assert_all_close(&gt, &[5.0, 3.0, 13.0], 1e-12);
+    }
+
+    #[test]
+    fn matvec_range_covers_bitwise() {
+        // Any disjoint cover of the rows reassembles the full product
+        // bitwise; empty ranges are fine.
+        let mut rng = crate::util::rng::Pcg64::new(42);
+        let m = CscMat::random(23, 9, 0.4, &mut rng);
+        let w: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let full = m.matvec(&w);
+        for cuts in [vec![0usize, 23], vec![0, 7, 7, 15, 23], vec![0, 1, 22, 23]] {
+            let mut got = vec![0.0f64; 23];
+            for pair in cuts.windows(2) {
+                let (lo, hi) = (pair[0], pair[1]);
+                m.matvec_range(&w, lo, hi, &mut got[lo..hi]);
+            }
+            for (a, b) in full.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

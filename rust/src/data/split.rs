@@ -34,6 +34,47 @@ pub fn subsample(d: &Dataset, frac: f64, seed: u64) -> Dataset {
     select(d, &keep, format!("{}@{:.0}%", d.name, frac * 100.0))
 }
 
+/// Seeded k-fold partition: `(train, held-out)` pairs where fold `f` holds
+/// out the `f`-th of `k` near-equal random sample blocks. Every sample is
+/// held out exactly once across the folds — the substrate for
+/// cross-validated model selection over a regularization path
+/// (`crate::path::cv`).
+pub fn kfold(d: &Dataset, k: usize, seed: u64) -> Vec<(Dataset, Dataset)> {
+    let s = d.samples();
+    assert!(k >= 2, "kfold: need at least 2 folds (got {k})");
+    assert!(k <= s, "kfold: more folds ({k}) than samples ({s})");
+    let mut rng = Pcg64::new(seed);
+    let perm = rng.permutation(s);
+    // Spread the remainder over the first `s % k` folds (sizes differ by
+    // at most one).
+    let base = s / k;
+    let extra = s % k;
+    let mut folds: Vec<Vec<usize>> = Vec::with_capacity(k);
+    let mut at = 0usize;
+    for f in 0..k {
+        let len = base + usize::from(f < extra);
+        folds.push(perm[at..at + len].to_vec());
+        at += len;
+    }
+    (0..k)
+        .map(|f| {
+            let mut held: Vec<usize> = folds[f].clone();
+            let mut train: Vec<usize> = folds
+                .iter()
+                .enumerate()
+                .filter(|(g, _)| *g != f)
+                .flat_map(|(_, idx)| idx.iter().copied())
+                .collect();
+            held.sort_unstable();
+            train.sort_unstable();
+            (
+                select(d, &train, format!("{}-fold{}cv-train", d.name, f)),
+                select(d, &held, format!("{}-fold{}cv-val", d.name, f)),
+            )
+        })
+        .collect()
+}
+
 fn select(d: &Dataset, idx: &[usize], name: String) -> Dataset {
     let x = d.x.select_rows(idx);
     let y = idx.iter().map(|&i| d.y[i]).collect();
@@ -56,6 +97,28 @@ mod tests {
             },
             3,
         )
+    }
+
+    #[test]
+    fn kfold_holds_out_every_sample_once() {
+        let d = toy(53);
+        for k in [2usize, 3, 5] {
+            let folds = kfold(&d, k, 7);
+            assert_eq!(folds.len(), k);
+            let mut held_total = 0usize;
+            for (tr, va) in &folds {
+                assert_eq!(tr.samples() + va.samples(), d.samples());
+                assert_eq!(tr.features(), d.features());
+                // Near-equal fold sizes.
+                assert!(va.samples() >= d.samples() / k);
+                assert!(va.samples() <= d.samples() / k + 1);
+                held_total += va.samples();
+            }
+            assert_eq!(held_total, d.samples());
+            // Deterministic given the seed.
+            let again = kfold(&d, k, 7);
+            assert_eq!(folds[0].1.y, again[0].1.y);
+        }
     }
 
     #[test]

@@ -50,11 +50,15 @@ impl Default for DistributedOptions {
         DistributedOptions {
             machines: 4,
             rounds: 4,
-            local: TrainOptions {
-                stop: StopRule::MaxOuter(3),
-                max_outer: 3,
-                ..TrainOptions::default()
-            },
+            // Local options through the public builder (single validation
+            // point); per-round overrides (seed, warm start, c rebalance)
+            // happen in `train_distributed`.
+            local: crate::api::Fit::spec()
+                .solver(crate::api::Pcdn { p: 64 })
+                .stop(StopRule::MaxOuter(3))
+                .max_outer(3)
+                .options()
+                .expect("default distributed options are valid"),
             seed: 0,
         }
     }
@@ -210,13 +214,13 @@ mod tests {
         let opts = DistributedOptions {
             machines: 1,
             rounds: 1,
-            local: TrainOptions {
-                c: 1.0,
-                bundle_size: 16,
-                stop: StopRule::SubgradRel(1e-5),
-                max_outer: 500,
-                ..TrainOptions::default()
-            },
+            local: crate::api::Fit::spec()
+                .c(1.0)
+                .solver(crate::api::Pcdn { p: 16 })
+                .stop(StopRule::SubgradRel(1e-5))
+                .max_outer(500)
+                .options()
+                .unwrap(),
             seed: 0,
         };
         let dist = train_distributed(&d, Objective::Logistic, &opts);
@@ -226,19 +230,23 @@ mod tests {
         assert!(rel < 1e-6, "1-machine distributed must be centralized ({rel})");
     }
 
+    fn local_opts(c: f64, p: usize, stop: StopRule, max_outer: usize) -> TrainOptions {
+        crate::api::Fit::spec()
+            .c(c)
+            .solver(crate::api::Pcdn { p })
+            .stop(stop)
+            .max_outer(max_outer)
+            .options()
+            .unwrap()
+    }
+
     #[test]
     fn mixing_rounds_improve_objective() {
         let d = toy();
         let opts = DistributedOptions {
             machines: 4,
             rounds: 6,
-            local: TrainOptions {
-                c: 1.0,
-                bundle_size: 16,
-                stop: StopRule::MaxOuter(2),
-                max_outer: 2,
-                ..TrainOptions::default()
-            },
+            local: local_opts(1.0, 16, StopRule::MaxOuter(2), 2),
             seed: 0,
         };
         let r = train_distributed(&d, Objective::Logistic, &opts);
@@ -257,24 +265,12 @@ mod tests {
         let central = Pcdn::new().train(
             &d,
             Objective::Logistic,
-            &TrainOptions {
-                c: 1.0,
-                bundle_size: 16,
-                stop: StopRule::SubgradRel(1e-6),
-                max_outer: 1000,
-                ..TrainOptions::default()
-            },
+            &local_opts(1.0, 16, StopRule::SubgradRel(1e-6), 1000),
         );
         let opts = DistributedOptions {
             machines: 4,
             rounds: 12,
-            local: TrainOptions {
-                c: 1.0,
-                bundle_size: 16,
-                stop: StopRule::MaxOuter(3),
-                max_outer: 3,
-                ..TrainOptions::default()
-            },
+            local: local_opts(1.0, 16, StopRule::MaxOuter(3), 3),
             seed: 0,
         };
         let r = train_distributed(&d, Objective::Logistic, &opts);
@@ -306,13 +302,7 @@ mod tests {
         let opts = DistributedOptions {
             machines: 3,
             rounds: 4,
-            local: TrainOptions {
-                c: 0.5,
-                bundle_size: 8,
-                stop: StopRule::MaxOuter(2),
-                max_outer: 2,
-                ..TrainOptions::default()
-            },
+            local: local_opts(0.5, 8, StopRule::MaxOuter(2), 2),
             seed: 2,
         };
         let r = train_distributed(&d, Objective::L2Svm, &opts);

@@ -19,22 +19,33 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use pcdn::data::registry;
-//! use pcdn::loss::Objective;
-//! use pcdn::solver::{pcdn::Pcdn, Solver, TrainOptions};
+//! The public entry point is the [`api`] layer: a typed [`api::Fit`]
+//! builder that produces a first-class [`api::Model`] artifact with
+//! save/load, pooled serving, and checkpoint/resume.
 //!
-//! let analog = registry::by_name("real-sim").unwrap();
+//! ```no_run
+//! use pcdn::api::{Fit, Pcdn};
+//!
+//! let analog = pcdn::data::registry::by_name("real-sim").unwrap();
 //! let train = analog.train();
-//! let opts = TrainOptions {
-//!     c: analog.c_logistic,
-//!     bundle_size: 256,
-//!     ..TrainOptions::default()
-//! };
-//! let result = Pcdn::new().train(&train, Objective::Logistic, &opts);
-//! println!("F(w) = {}, nnz = {}", result.final_objective, result.model_nnz());
+//! let fitted = Fit::on(&train)
+//!     .c(analog.c_logistic)
+//!     .solver(Pcdn { p: 256 })
+//!     .run()
+//!     .unwrap();
+//! println!(
+//!     "F(w) = {}, nnz = {}, acc = {:.4}",
+//!     fitted.result.final_objective,
+//!     fitted.model.nnz(),
+//!     fitted.model.accuracy(&train)
+//! );
 //! ```
+//!
+//! (The old pattern — a `TrainOptions` struct literal handed to a
+//! `Solver` — still works and is what the builder lowers into; see the
+//! migration note in [`api::fit`].)
 
+pub mod api;
 pub mod coordinator;
 pub mod data;
 pub mod distributed;

@@ -162,6 +162,17 @@ impl<'a> L2SvmState<'a> {
             self.refresh_sample(i);
         }
     }
+
+    /// Restore from a bit-exact snapshot of the maintained `b_i` margins
+    /// (a checkpoint); bitwise identical to the snapshotted state (see the
+    /// logistic variant).
+    pub fn restore_maintained(&mut self, b: &[f64]) {
+        assert_eq!(b.len(), self.b.len(), "maintained snapshot length");
+        self.b.copy_from_slice(b);
+        for i in 0..self.data.samples() {
+            self.refresh_sample(i);
+        }
+    }
 }
 
 #[cfg(test)]

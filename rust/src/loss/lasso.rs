@@ -137,6 +137,17 @@ impl<'a> LassoState<'a> {
             self.grad_factor[i] = grad_factor_of(self.r[i]);
         }
     }
+
+    /// Restore from a bit-exact snapshot of the maintained residuals (a
+    /// checkpoint); bitwise identical to the snapshotted state (see the
+    /// logistic variant).
+    pub fn restore_maintained(&mut self, r: &[f64]) {
+        assert_eq!(r.len(), self.r.len(), "maintained snapshot length");
+        self.r.copy_from_slice(r);
+        for i in 0..self.data.samples() {
+            self.grad_factor[i] = grad_factor_of(self.r[i]);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -206,6 +206,19 @@ impl<'a> LogisticState<'a> {
             self.refresh_sample(i);
         }
     }
+
+    /// Restore from a bit-exact snapshot of the maintained margins (a
+    /// checkpoint). Factors are pure functions of `(y_i, wx_i)`, so the
+    /// restored state is bitwise identical to the snapshotted one —
+    /// unlike [`Self::reset_from`], which re-folds `wᵀx_i` and can differ
+    /// from the incrementally maintained margins by FP round-off.
+    pub fn restore_maintained(&mut self, wx: &[f64]) {
+        assert_eq!(wx.len(), self.wx.len(), "maintained snapshot length");
+        self.wx.copy_from_slice(wx);
+        for i in 0..self.data.samples() {
+            self.refresh_sample(i);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -253,6 +253,32 @@ impl<'a> LossState<'a> {
             LossState::Lasso(s) => s.reset_from(w),
         }
     }
+
+    /// The maintained per-sample vector: margins `wᵀx_i` (logistic),
+    /// `b_i = 1 − y_i wᵀx_i` (ℓ2-SVM) or residuals `r_i = wᵀx_i − y_i`
+    /// (Lasso). Every derived factor is a pure per-sample function of this
+    /// vector and the labels, so snapshotting it (plus `w`) captures the
+    /// full solver-visible state — the basis of bitwise checkpoint/resume
+    /// (`crate::solver::checkpoint`).
+    pub fn maintained(&self) -> &[f64] {
+        match self {
+            LossState::Logistic(s) => &s.wx,
+            LossState::L2Svm(s) => &s.b,
+            LossState::Lasso(s) => &s.r,
+        }
+    }
+
+    /// Restore from a snapshot of [`Self::maintained`]: bitwise identical
+    /// to the snapshotted state, unlike [`Self::reset_from`] whose
+    /// from-scratch fold can differ from incrementally maintained values
+    /// by FP round-off (~1e-16) — enough to fork a resumed trajectory.
+    pub fn restore_maintained(&mut self, snap: &[f64]) {
+        match self {
+            LossState::Logistic(s) => s.restore_maintained(snap),
+            LossState::L2Svm(s) => s.restore_maintained(snap),
+            LossState::Lasso(s) => s.restore_maintained(snap),
+        }
+    }
 }
 
 /// Hessian floor `ν` (footnote 1; Chang et al. 2008 use 1e-12).

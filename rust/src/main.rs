@@ -2,43 +2,110 @@
 //!
 //! ```text
 //! pcdn train    --dataset real-sim --solver pcdn --p 256 --eps 1e-3
-//! pcdn train    --config run.json
-//! pcdn path     --dataset a9a --n-lambdas 20 --ratio 0.01
+//! pcdn train    --config run.json --save-model model.bin --checkpoint-every 25
+//! pcdn train    --resume run.ckpt
+//! pcdn predict  --model model.bin --dataset real-sim --threads 8
+//! pcdn path     --dataset a9a --n-lambdas 20 --ratio 0.01 [--cv 5]
 //! pcdn bench    --exp fig1 [--full] [--out bench_out]
 //! pcdn inspect  --dataset gisette
 //! pcdn artifacts [--dir artifacts]
 //! ```
+//!
+//! All training configuration flows through the typed `api::Fit` builder
+//! (one validation point); malformed numeric flags are usage errors, not
+//! silent defaults.
 
+use std::path::Path;
+use std::sync::Arc;
+
+use pcdn::api::{self, Fit, Model, Scorer, SolverSel};
 use pcdn::coordinator::config::{DataSource, RunConfig, SolverKind};
 use pcdn::coordinator::experiments::{self, ExpOptions};
-use pcdn::coordinator::{run, summarize};
+use pcdn::coordinator::{run_on, summarize};
 use pcdn::data::registry;
 use pcdn::linalg::power;
 use pcdn::loss::Objective;
-use pcdn::path::{fit_path, PathOptions};
+use pcdn::path::{cv_path, fit_path, CvOptions, PathOptions};
 use pcdn::runtime::PjrtRuntime;
-use pcdn::solver::StopRule;
+use pcdn::solver::checkpoint::{Checkpoint, CheckpointWriter};
+use pcdn::solver::{ProbeHandle, StopRule};
 use pcdn::util::cli::Cli;
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
-        eprintln!("usage: pcdn <train|bench|inspect|artifacts> [flags]; --help for details");
+        eprintln!(
+            "usage: pcdn <train|predict|path|bench|inspect|artifacts> [flags]; --help for details"
+        );
         std::process::exit(2);
     }
     let cmd = args.remove(0);
     let code = match cmd.as_str() {
         "train" => cmd_train(args),
+        "predict" => cmd_predict(args),
         "path" => cmd_path(args),
         "bench" => cmd_bench(args),
         "inspect" => cmd_inspect(args),
         "artifacts" => cmd_artifacts(args),
         other => {
-            eprintln!("unknown subcommand '{other}' (train|path|bench|inspect|artifacts)");
+            eprintln!("unknown subcommand '{other}' (train|predict|path|bench|inspect|artifacts)");
             2
         }
     };
     std::process::exit(code);
+}
+
+/// Unwrap a numeric flag, turning a malformed value into a usage error
+/// (exit 2). `Args::usize`/`Args::f64` already produce the right message;
+/// this macro stops callers from discarding it with `unwrap_or` — the bug
+/// that made `--c 1e.3` silently train with the default.
+macro_rules! flag_or_exit {
+    ($e:expr) => {
+        match $e {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
+}
+
+fn parse_objective(name: Option<&str>) -> Result<Objective, String> {
+    match name {
+        Some("logistic") | None => Ok(Objective::Logistic),
+        Some("svm") | Some("l2svm") => Ok(Objective::L2Svm),
+        Some("lasso") => Ok(Objective::Lasso),
+        Some(o) => Err(format!("unknown objective '{o}' (logistic|svm|lasso)")),
+    }
+}
+
+fn parse_source(name: &str) -> DataSource {
+    if let Some(p) = name.strip_prefix("libsvm:") {
+        DataSource::LibsvmFile(p.to_string())
+    } else {
+        DataSource::Analog(name.to_string())
+    }
+}
+
+/// Resolve a resume's training data from the checkpoint's own dataset
+/// stamp: the recorded name is tried as a registry analog, then as a
+/// libsvm file path, and accepted only if the content fingerprint
+/// matches. `None` falls back to the CLI `--dataset` flag.
+fn load_checkpoint_dataset(
+    ck: &pcdn::solver::checkpoint::Checkpoint,
+) -> Option<pcdn::data::Dataset> {
+    let name = ck.data.name.as_str();
+    let candidate = DataSource::Analog(name.to_string())
+        .load()
+        .ok()
+        .or_else(|| {
+            std::path::Path::new(name)
+                .is_file()
+                .then(|| DataSource::LibsvmFile(name.to_string()).load().ok())
+                .flatten()
+        })?;
+    (candidate.fingerprint() == ck.data.fingerprint).then_some(candidate)
 }
 
 fn cmd_train(args: Vec<String>) -> i32 {
@@ -48,19 +115,32 @@ fn cmd_train(args: Vec<String>) -> i32 {
         .opt("solver", Some("pcdn"), "pcdn|cdn|scdn|scdn-atomic|tron|pcdn-pjrt")
         .opt("objective", Some("logistic"), "logistic|svm|lasso")
         .opt("c", None, "regularization parameter (default: dataset c*)")
+        .opt("l2", Some("0"), "elastic-net l2 weight (0 = pure l1)")
         .opt("p", Some("64"), "bundle size P / SCDN parallelism")
         .opt("eps", Some("1e-3"), "relative subgradient stopping tolerance")
         .opt("max-outer", Some("500"), "outer iteration cap")
         .opt("threads", Some("1"), "worker threads for parallel regions")
         .opt("seed", Some("0"), "RNG seed")
         .switch("shrinking", "enable CDN shrinking")
+        .opt("save-model", None, "save the fitted model (binary, or JSON if *.json)")
+        .opt("checkpoint", Some("pcdn.ckpt"), "checkpoint file path")
+        .opt(
+            "checkpoint-every",
+            Some("0"),
+            "write a resume checkpoint every K outer iterations (0 = off)",
+        )
+        .opt(
+            "resume",
+            None,
+            "continue from this checkpoint (restores solver + options; bitwise)",
+        )
         .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt solver)");
     let a = cli.parse_from(args).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
     });
 
-    let cfg = if let Some(path) = a.get("config") {
+    let mut cfg = if let Some(path) = a.get("config") {
         match std::fs::read_to_string(path)
             .map_err(anyhow::Error::from)
             .and_then(|t| RunConfig::from_json(&t))
@@ -73,18 +153,22 @@ fn cmd_train(args: Vec<String>) -> i32 {
         }
     } else {
         let dataset = a.get("dataset").unwrap().to_string();
-        let data = if let Some(path) = dataset.strip_prefix("libsvm:") {
-            DataSource::LibsvmFile(path.to_string())
-        } else {
-            DataSource::Analog(dataset.clone())
+        let objective = match parse_objective(a.get("objective")) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
         };
-        let objective = match a.get("objective") {
-            Some("svm") | Some("l2svm") => Objective::L2Svm,
-            Some("lasso") => Objective::Lasso,
-            _ => Objective::Logistic,
-        };
+        // Malformed --c is a usage error, not a silent fall-back to 1.0.
         let c = match a.get("c") {
-            Some(v) => v.parse().unwrap_or(1.0),
+            Some(v) => match v.parse::<f64>() {
+                Ok(x) => x,
+                Err(_) => {
+                    eprintln!("--c: expected a number (got '{v}')");
+                    return 2;
+                }
+            },
             None => registry::by_name(&dataset)
                 .map(|an| match objective {
                     Objective::Logistic | Objective::Lasso => an.c_logistic,
@@ -92,37 +176,184 @@ fn cmd_train(args: Vec<String>) -> i32 {
                 })
                 .unwrap_or(1.0),
         };
-        RunConfig {
-            solver: match SolverKind::parse(a.get("solver").unwrap()) {
-                Ok(s) => s,
-                Err(e) => {
-                    eprintln!("{e:#}");
-                    return 2;
-                }
-            },
-            data,
-            objective,
-            train: pcdn::solver::TrainOptions {
-                c,
-                bundle_size: a.usize("p").unwrap_or(64),
-                n_threads: a.usize("threads").unwrap_or(1),
-                stop: StopRule::SubgradRel(a.f64("eps").unwrap_or(1e-3)),
-                max_outer: a.usize("max-outer").unwrap_or(500),
+        let solver = match SolverKind::parse(a.get("solver").unwrap()) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 2;
+            }
+        };
+        let p = flag_or_exit!(a.usize("p"));
+        let sel = match solver {
+            SolverKind::Pcdn | SolverKind::PcdnPjrt => SolverSel::Pcdn { p },
+            SolverKind::Cdn => SolverSel::Cdn {
                 shrinking: a.flag("shrinking"),
-                seed: a.usize("seed").unwrap_or(0) as u64,
-                ..Default::default()
             },
+            SolverKind::Scdn => SolverSel::Scdn { p, atomic: false },
+            SolverKind::ScdnAtomic => SolverSel::Scdn { p, atomic: true },
+            SolverKind::Tron => SolverSel::Tron,
+        };
+        let train = Fit::spec()
+            .solver(sel)
+            .objective(objective)
+            .c(c)
+            .l2(flag_or_exit!(a.f64("l2")))
+            .stop(StopRule::SubgradRel(flag_or_exit!(a.f64("eps"))))
+            .max_outer(flag_or_exit!(a.usize("max-outer")))
+            .threads(flag_or_exit!(a.usize("threads")))
+            .seed(flag_or_exit!(a.usize("seed")) as u64)
+            .options();
+        let train = match train {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        RunConfig {
+            solver,
+            data: parse_source(&dataset),
+            objective,
+            train,
             artifacts: a.get("artifacts").unwrap_or("artifacts").to_string(),
         }
     };
-    match run(&cfg) {
+
+    // --resume: route through `api::Fit::resume`, the single place that
+    // knows how to restore a checkpoint's solver + trajectory-determining
+    // options (the bitwise-continuation contract; CLI flags for those are
+    // superseded and we say so). Mismatches (wrong dataset, solver,
+    // objective) surface as usage errors here, never as solver panics.
+    if let Some(ckpt_path) = a.get("resume") {
+        let ck = match Checkpoint::load(Path::new(ckpt_path)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("--resume: {e}");
+                return 2;
+            }
+        };
+        println!(
+            "resuming {} on '{}' from outer {} (solver/options restored from checkpoint)",
+            ck.solver, ck.data.name, ck.outer
+        );
+        let ck_dataset = ck.data.name.clone();
+        // Prefer the checkpoint's own dataset stamp (content-verified);
+        // fall back to --dataset only when the stamp can't be resolved.
+        let data = match load_checkpoint_dataset(&ck) {
+            Some(d) => {
+                println!("dataset '{}' resolved from the checkpoint stamp", d.name);
+                d
+            }
+            None => match cfg.data.load() {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("{e:#}");
+                    return 1;
+                }
+            },
+        };
+        let mut fit = match Fit::resume(&data, ck) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("--resume: {e}");
+                return 2;
+            }
+        };
+        let every = flag_or_exit!(a.usize("checkpoint-every"));
+        let mut resume_writer: Option<Arc<CheckpointWriter>> = None;
+        if every > 0 {
+            let path = a.get("checkpoint").unwrap().to_string();
+            let writer = Arc::new(CheckpointWriter::new(every, path.clone()));
+            resume_writer = Some(writer.clone());
+            fit = fit.probe(ProbeHandle(writer));
+            println!("checkpointing every {every} outer iteration(s) to {path}");
+        }
+        return match fit.run() {
+            Ok(fitted) => {
+                println!("{}", summarize(&fitted.result));
+                if let Some(w) = &resume_writer {
+                    if let Some(e) = w.last_error.lock().unwrap().as_ref() {
+                        eprintln!("warning: checkpoint write(s) failed: {e}");
+                    }
+                }
+                if let Some(tp) = fitted.result.trace.last() {
+                    println!(
+                        "final trace point: outer {} F = {:.6} nnz = {}",
+                        tp.outer_iter, tp.objective, tp.nnz
+                    );
+                }
+                if let Some(model_path) = a.get("save-model") {
+                    match fitted.model.save(Path::new(model_path)) {
+                        Ok(()) => println!("model saved to {model_path}"),
+                        Err(e) => {
+                            eprintln!("--save-model: {model_path}: {e}");
+                            return 1;
+                        }
+                    }
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!(
+                    "--resume: {e}\n(hint: pass --dataset {ck_dataset} — the checkpoint \
+                     was taken on it)"
+                );
+                2
+            }
+        };
+    }
+
+    // --checkpoint-every: attach the writer probe alongside any existing
+    // observer. Keep a handle so IO failures (non-fatal by design) are
+    // reported after the run instead of vanishing.
+    let every = flag_or_exit!(a.usize("checkpoint-every"));
+    let mut ckpt_writer: Option<Arc<CheckpointWriter>> = None;
+    if every > 0 {
+        let path = a.get("checkpoint").unwrap().to_string();
+        let writer = Arc::new(CheckpointWriter::new(every, path.clone()));
+        ckpt_writer = Some(writer.clone());
+        let handle = ProbeHandle(writer);
+        cfg.train.probe = Some(match cfg.train.probe.take() {
+            Some(existing) => ProbeHandle::fanout(vec![existing, handle]),
+            None => handle,
+        });
+        println!("checkpointing every {every} outer iteration(s) to {path}");
+    }
+
+    let data = match cfg.data.load() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    match run_on(&data, &cfg) {
         Ok(r) => {
             println!("{}", summarize(&r));
+            if let Some(w) = &ckpt_writer {
+                if let Some(e) = w.last_error.lock().unwrap().as_ref() {
+                    eprintln!("warning: checkpoint write(s) failed: {e}");
+                }
+            }
             if let Some(tp) = r.trace.last() {
                 println!(
                     "final trace point: outer {} F = {:.6} nnz = {}",
                     tp.outer_iter, tp.objective, tp.nnz
                 );
+            }
+            if let Some(model_path) = a.get("save-model") {
+                let model = Model::from_training(&r, cfg.objective, &cfg.train, &data);
+                match model.save(Path::new(model_path)) {
+                    Ok(()) => println!(
+                        "model saved to {model_path} ({} features, {} nnz)",
+                        model.w.len(),
+                        model.nnz()
+                    ),
+                    Err(e) => {
+                        eprintln!("--save-model: {model_path}: {e}");
+                        return 1;
+                    }
+                }
             }
             0
         }
@@ -131,6 +362,99 @@ fn cmd_train(args: Vec<String>) -> i32 {
             1
         }
     }
+}
+
+fn cmd_predict(args: Vec<String>) -> i32 {
+    let cli = Cli::new("pcdn predict", "score a dataset with a saved model")
+        .opt("model", Some("model.bin"), "saved model file (binary or JSON)")
+        .opt("dataset", Some("real-sim"), "analog name or libsvm:<path>")
+        .opt("threads", Some("1"), "scoring shards on the worker pool")
+        .opt("out", None, "write decision values here (one per line)")
+        .switch("labels", "print predicted ±1 labels to stdout");
+    let a = cli.parse_from(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let model = match Model::load(Path::new(a.get("model").unwrap())) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let data = match parse_source(a.get("dataset").unwrap()).load() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    if data.features() != model.w.len() {
+        eprintln!(
+            "dataset '{}' has {} features but the model was trained on {} ('{}')",
+            data.name,
+            data.features(),
+            model.w.len(),
+            model.provenance.dataset
+        );
+        return 2;
+    }
+    let threads = flag_or_exit!(a.usize("threads"));
+    let p = model.provenance.clone();
+    println!(
+        "model: {} via {} on '{}' ({} outers, {}; F = {:.6})",
+        a.get("model").unwrap(),
+        p.solver,
+        p.dataset,
+        p.outer_iters,
+        if p.converged { "converged" } else { "NOT converged" },
+        p.final_objective
+    );
+    let same_data = p.fingerprint == data.fingerprint();
+    let scorer = Scorer::new(model).threads(threads);
+    // One pooled decision-value pass feeds the metric, the label dump and
+    // the --out file alike.
+    let z = scorer.decision_values(&data.x);
+    match scorer.model().objective {
+        Objective::Lasso => {
+            let mse = z
+                .iter()
+                .zip(&data.y)
+                .map(|(zi, yi)| (zi - yi) * (zi - yi))
+                .sum::<f64>()
+                / data.samples().max(1) as f64;
+            println!(
+                "scored {} samples: mse = {mse:.6}{}",
+                data.samples(),
+                if same_data { " (training data)" } else { "" }
+            );
+        }
+        _ => {
+            println!(
+                "scored {} samples: accuracy = {:.4}{}",
+                data.samples(),
+                pcdn::data::accuracy_of(&z, &data.y),
+                if same_data { " (training data)" } else { "" }
+            );
+        }
+    }
+    if a.flag("labels") {
+        for zi in &z {
+            println!("{}", if *zi < 0.0 { -1 } else { 1 });
+        }
+    }
+    if let Some(out) = a.get("out") {
+        let mut text = String::with_capacity(z.len() * 12);
+        for zi in &z {
+            text.push_str(&format!("{zi}\n"));
+        }
+        if let Err(e) = std::fs::write(out, text) {
+            eprintln!("--out: {out}: {e}");
+            return 1;
+        }
+        println!("decision values written to {out}");
+    }
+    0
 }
 
 fn cmd_path(args: Vec<String>) -> i32 {
@@ -151,42 +475,114 @@ fn cmd_path(args: Vec<String>) -> i32 {
     .opt("kkt-eps", Some("1e-5"), "per-point certification threshold")
     .opt("max-outer", Some("5000"), "outer iteration cap per solve")
     .opt("seed", Some("0"), "RNG seed")
+    .opt(
+        "cv",
+        Some("0"),
+        "k-fold cross-validated model selection over the path (0 = off)",
+    )
+    .opt("cv-seed", Some("0"), "fold-assignment seed")
+    .opt("save-model", None, "save the selected model (with --cv)")
     .switch("no-screening", "disable strong-rule screening")
     .switch("cold", "disable warm starts (the cold-baseline mode)");
     let a = cli.parse_from(args).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
     });
-    let name = a.get("dataset").unwrap();
-    let src = if let Some(p) = name.strip_prefix("libsvm:") {
-        DataSource::LibsvmFile(p.to_string())
-    } else {
-        DataSource::Analog(name.to_string())
-    };
-    let data = match src.load() {
+    let data = match parse_source(a.get("dataset").unwrap()).load() {
         Ok(d) => d,
         Err(e) => {
             eprintln!("{e:#}");
             return 1;
         }
     };
-    let objective = match a.get("objective") {
-        Some("svm") | Some("l2svm") => Objective::L2Svm,
-        Some("lasso") => Objective::Lasso,
-        _ => Objective::Logistic,
+    let objective = match parse_objective(a.get("objective")) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
-    let mut po = PathOptions {
-        n_lambdas: a.usize("n-lambdas").unwrap_or(16),
-        lambda_ratio: a.f64("ratio").unwrap_or(0.01),
+    // Per-solve base options through the public builder (single
+    // validation point); the path driver overrides c/stop/mask per λ.
+    let train = match Fit::spec()
+        .solver(api::Pcdn {
+            p: flag_or_exit!(a.usize("p")),
+        })
+        .objective(objective)
+        .max_outer(flag_or_exit!(a.usize("max-outer")))
+        .seed(flag_or_exit!(a.usize("seed")) as u64)
+        .options()
+    {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let po = PathOptions {
+        n_lambdas: flag_or_exit!(a.usize("n-lambdas")),
+        lambda_ratio: flag_or_exit!(a.f64("ratio")),
         screening: !a.flag("no-screening"),
         warm_start: !a.flag("cold"),
-        kkt_eps: a.f64("kkt-eps").unwrap_or(1e-5),
-        degree: a.usize("degree").unwrap_or(4).max(1),
+        kkt_eps: flag_or_exit!(a.f64("kkt-eps")),
+        degree: flag_or_exit!(a.usize("degree")).max(1),
+        train,
         ..PathOptions::default()
     };
-    po.train.bundle_size = a.usize("p").unwrap_or(64);
-    po.train.max_outer = a.usize("max-outer").unwrap_or(5000);
-    po.train.seed = a.usize("seed").unwrap_or(0) as u64;
+
+    let folds = flag_or_exit!(a.usize("cv"));
+    if folds > 0 {
+        if folds < 2 {
+            eprintln!("--cv: need at least 2 folds (got {folds})");
+            return 2;
+        }
+        if folds > data.samples() {
+            eprintln!(
+                "--cv: more folds ({folds}) than samples ({}) in '{}'",
+                data.samples(),
+                data.name
+            );
+            return 2;
+        }
+        let cv = CvOptions {
+            folds,
+            seed: flag_or_exit!(a.usize("cv-seed")) as u64,
+            path: po,
+        };
+        let r = cv_path(&data, objective, &cv);
+        println!(
+            "dataset {} ({} x {}), lambda_max = {:.6}, {} folds",
+            data.name,
+            data.samples(),
+            data.features(),
+            r.lambda_max,
+            folds
+        );
+        print!("{}", r.table());
+        println!(
+            "selected lambda = {:.6} (c = {:.4}), nnz = {}, mean held-out score = {:.6}; {}",
+            r.best_lambda(),
+            r.model.c,
+            r.model.nnz(),
+            r.points[r.best].mean_score,
+            if r.certified {
+                "every path certified"
+            } else {
+                "CERTIFICATION FAILED on at least one path"
+            }
+        );
+        if let Some(path) = a.get("save-model") {
+            match r.model.save(Path::new(path)) {
+                Ok(()) => println!("selected model saved to {path}"),
+                Err(e) => {
+                    eprintln!("--save-model: {path}: {e}");
+                    return 1;
+                }
+            }
+        }
+        return if r.certified { 0 } else { 1 };
+    }
+
     let r = fit_path(&data, objective, &po);
     println!(
         "dataset {} ({} x {}), lambda_max = {:.6}",
@@ -231,8 +627,8 @@ fn cmd_bench(args: Vec<String>) -> i32 {
     });
     let opts = ExpOptions {
         quick: !a.flag("full"),
-        threads: a.usize("threads").unwrap_or(23),
-        seed: a.usize("seed").unwrap_or(0) as u64,
+        threads: flag_or_exit!(a.usize("threads")),
+        seed: flag_or_exit!(a.usize("seed")) as u64,
     };
     let out_dir = a.get("out").unwrap_or("bench_out").to_string();
     let which = a.get("exp").unwrap_or("all");
@@ -276,13 +672,7 @@ fn cmd_inspect(args: Vec<String>) -> i32 {
         eprintln!("{e}");
         std::process::exit(2)
     });
-    let name = a.get("dataset").unwrap();
-    let src = if let Some(p) = name.strip_prefix("libsvm:") {
-        DataSource::LibsvmFile(p.to_string())
-    } else {
-        DataSource::Analog(name.to_string())
-    };
-    match src.load() {
+    match parse_source(a.get("dataset").unwrap()).load() {
         Ok(d) => {
             let rho = power::spectral_radius_xtx(&d.x, 300, 1e-9);
             println!("dataset   : {}", d.name);
@@ -291,6 +681,7 @@ fn cmd_inspect(args: Vec<String>) -> i32 {
             println!("nnz       : {}", d.x.nnz());
             println!("sparsity  : {:.4}%", d.sparsity() * 100.0);
             println!("pos rate  : {:.4}", d.positive_rate());
+            println!("fingerprint: {:#018x}", d.fingerprint());
             println!("rho(XtX)  : {rho:.4}");
             println!(
                 "SCDN bound: P <= {:.2}  (n/rho + 1, paper §2.2)",

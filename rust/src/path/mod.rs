@@ -43,9 +43,11 @@
 //! invariants (e.g. monotone objective) do not apply across λ boundaries,
 //! where `c = 1/λ` changes the objective being minimized.
 
+pub mod cv;
 pub mod grid;
 pub mod screen;
 
+pub use cv::{cv_path, CvOptions, CvResult};
 pub use grid::{lambda_max, Grid};
 
 use std::sync::Arc;
@@ -97,10 +99,14 @@ impl Default for PathOptions {
             kkt_eps: 1e-5,
             max_rescreen_rounds: 4,
             degree: 4,
-            train: TrainOptions {
-                max_outer: 5000,
-                ..TrainOptions::default()
-            },
+            // Solves are warm-started PCDN; the base options come through
+            // the public builder so the path layer shares the single
+            // validation point with every other caller.
+            train: crate::api::Fit::spec()
+                .solver(crate::api::Pcdn { p: 64 })
+                .max_outer(5000)
+                .options()
+                .expect("default path options are valid"),
         }
     }
 }

@@ -28,6 +28,12 @@ pub fn train_dense_pjrt(
     opts: &TrainOptions,
 ) -> Result<TrainResult> {
     let n = data.features();
+    anyhow::ensure!(
+        opts.resume.is_none(),
+        "the PJRT dense trainer does not support checkpoint/resume \
+         (its maintained quantity is f32 and re-anchored each sweep — \
+         there is no bitwise trajectory to restore); use a native solver"
+    );
     let p = opts.bundle_size.clamp(1, n.max(1));
     let exec = BundleExecutor::new(rt, obj, data.samples(), p)?;
     let y = exec.pad_labels(&data.y);
@@ -170,13 +176,13 @@ mod tests {
         };
         let rt = PjrtRuntime::cpu(&dir).unwrap();
         let data = dense_toy();
-        let opts = TrainOptions {
-            c: 0.5,
-            bundle_size: 16,
-            stop: StopRule::SubgradRel(1e-3),
-            max_outer: 200,
-            ..Default::default()
-        };
+        let opts = crate::api::Fit::spec()
+            .c(0.5)
+            .solver(crate::api::Pcdn { p: 16 })
+            .stop(StopRule::SubgradRel(1e-3))
+            .max_outer(200)
+            .options()
+            .unwrap();
         for obj in [Objective::Logistic, Objective::L2Svm] {
             let pjrt = train_dense_pjrt(&rt, &data, obj, &opts).unwrap();
             let native = Pcdn::new().train(&data, obj, &opts);
@@ -200,14 +206,14 @@ mod tests {
         };
         let rt = PjrtRuntime::cpu(&dir).unwrap();
         let data = dense_toy();
-        let opts = TrainOptions {
-            c: 1.0,
-            bundle_size: 8,
-            stop: StopRule::MaxOuter(5),
-            max_outer: 5,
-            trace_every: 1,
-            ..Default::default()
-        };
+        let opts = crate::api::Fit::spec()
+            .c(1.0)
+            .solver(crate::api::Pcdn { p: 8 })
+            .stop(StopRule::MaxOuter(5))
+            .max_outer(5)
+            .trace_every(1)
+            .options()
+            .unwrap();
         let r = train_dense_pjrt(&rt, &data, Objective::Logistic, &opts).unwrap();
         for pair in r.trace.windows(2) {
             assert!(

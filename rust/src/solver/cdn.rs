@@ -16,6 +16,7 @@
 use crate::data::Dataset;
 use crate::loss::{LossState, Objective};
 use crate::parallel::sim::IterRecord;
+use crate::solver::checkpoint::{self, ExtraView, SolverExtra};
 use crate::solver::direction::{delta_contribution, newton_direction};
 use crate::solver::linesearch::l1_delta;
 use crate::solver::pcdn::finish;
@@ -67,7 +68,28 @@ impl Solver for Cdn {
         let mut m_prev = f64::INFINITY;
         let mut m_first: Option<f64> = None;
 
-        if monitor.observe(0, &state, &w, opts, 0) {
+        let resumed = checkpoint::apply_resume(opts, self.name(), data, obj, &mut state, &mut w);
+        if let Some(rs) = resumed {
+            outer = rs.outer;
+            inner_iters = rs.inner_iters;
+            ls_steps = rs.ls_steps;
+            monitor.init_subgrad = rs.init_subgrad;
+            rng = rs.rng.expect("cdn checkpoints carry an RNG state");
+            match rs.extra {
+                SolverExtra::Cdn {
+                    active: a,
+                    m_prev: mp,
+                    m_first: mf,
+                } => {
+                    assert_eq!(a.len(), n, "checkpoint active-set length");
+                    n_active = a.iter().filter(|&&x| x).count();
+                    active = a;
+                    m_prev = mp;
+                    m_first = mf;
+                }
+                _ => panic!("cdn checkpoint carries non-CDN solver state"),
+            }
+        } else if monitor.observe(0, &state, &w, opts, 0) {
             return finish(self.name(), w, &state, monitor, 0, 0, 0, records);
         }
 
@@ -205,6 +227,22 @@ impl Solver for Cdn {
             if monitor.observe(outer, &state, &w, opts, ls_steps) {
                 break;
             }
+            checkpoint::emit(
+                opts,
+                self.name(),
+                outer,
+                inner_iters,
+                ls_steps,
+                monitor.init_subgrad,
+                &w,
+                &state,
+                Some(rng.snapshot()),
+                ExtraView::Cdn {
+                    active: &active,
+                    m_prev,
+                    m_first,
+                },
+            );
         }
         finish(
             self.name(),

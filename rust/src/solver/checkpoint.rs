@@ -1,0 +1,827 @@
+//! Checkpoint/resume for training runs.
+//!
+//! A [`Checkpoint`] captures everything a solver needs to continue a run
+//! **bitwise identically** to never having stopped:
+//!
+//! * the model `w` and the loss state's maintained per-sample vector
+//!   (margins/residuals — restored via
+//!   [`LossState::restore_maintained`], *not* recomputed from `w`, whose
+//!   from-scratch fold differs from the incrementally maintained values
+//!   by FP round-off);
+//! * the RNG state ([`RngState`]) so permutation/draw schedules continue
+//!   where they left off;
+//! * the outer counter, cumulative inner iterations and Armijo probes,
+//!   and the [`RunMonitor`](super::RunMonitor)'s relative-stop reference
+//!   (`init_subgrad`);
+//! * solver-specific cross-outer state ([`SolverExtra`]): CDN's shrinking
+//!   active set, TRON's split variables and trust radius;
+//! * the trajectory-determining option subset ([`SavedOptions`]) and a
+//!   dataset stamp ([`DataStamp`]) so a resume against the wrong data,
+//!   solver, or configuration is rejected at load time.
+//!
+//! **Emission** rides the existing probe hook: every solver calls
+//! [`emit`] once per outer boundary (after all stop checks for that
+//! boundary — a resume never replays a stop decision the original run
+//! already made), which forwards a borrow-only [`CheckpointView`] to
+//! [`Probe::on_resume_point`]. Observers that don't care inherit the
+//! empty default; [`CheckpointWriter`] persists every `k`-th view to disk
+//! and [`CheckpointRecorder`] keeps owned copies in memory (tests, the
+//! `Fit` API). An unprobed run pays one `Option` check per outer.
+//!
+//! **Resume** enters through [`TrainOptions::resume`]: each solver calls
+//! [`apply_resume`] before its main loop, which validates the checkpoint
+//! and restores `(w, state, counters)`; the solver then restores its RNG
+//! and [`SolverExtra`]. `warm_start` remains the degenerate case — a
+//! resume *is* a warm start that also carries the maintained state, RNG
+//! and counters, which is exactly what upgrades "close to the same
+//! optimum" to "bitwise the same trajectory".
+//!
+//! **Format**: a compact binary document (`util::codec`, magic
+//! `PCDNCKP1`), bit-exact for every float. There is deliberately no JSON
+//! checkpoint format: checkpoints exist to be byte-faithful, not
+//! human-readable (models have both — see `api::Model`).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::data::Dataset;
+use crate::loss::{LossState, Objective};
+use crate::solver::probe::Probe;
+use crate::solver::{ArmijoParams, StopRule, TrainOptions};
+use crate::util::codec::{ByteReader, ByteWriter, CodecError};
+use crate::util::rng::{Pcg64, RngState};
+
+/// On-disk magic + newest writer version.
+const MAGIC: &[u8; 8] = b"PCDNCKP1";
+const VERSION: u32 = 1;
+
+/// The subset of [`TrainOptions`] that determines a run's trajectory.
+/// Stored in the checkpoint and restored by `api::Fit::resume` so a
+/// resumed run replays under the configuration that produced the
+/// checkpoint (changing any of these forfeits bitwise identity).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SavedOptions {
+    pub c: f64,
+    pub l2_reg: f64,
+    pub seed: u64,
+    pub bundle_size: usize,
+    pub shrinking: bool,
+    pub n_threads: usize,
+    pub max_outer: usize,
+    pub stop: StopRule,
+    pub armijo: ArmijoParams,
+    /// The active-feature mask, when the run was screened (`path` driver).
+    pub feature_mask: Option<Vec<bool>>,
+}
+
+impl SavedOptions {
+    fn of(opts: &TrainOptions) -> SavedOptions {
+        SavedOptions {
+            c: opts.c,
+            l2_reg: opts.l2_reg,
+            seed: opts.seed,
+            bundle_size: opts.bundle_size,
+            shrinking: opts.shrinking,
+            n_threads: opts.n_threads,
+            max_outer: opts.max_outer,
+            stop: opts.stop,
+            armijo: opts.armijo,
+            feature_mask: opts.feature_mask.as_ref().map(|m| (**m).clone()),
+        }
+    }
+}
+
+/// Identity stamp of the dataset a checkpoint (or model) was produced on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataStamp {
+    pub name: String,
+    pub samples: usize,
+    pub features: usize,
+    pub nnz: usize,
+    /// [`Dataset::fingerprint`] — content hash, not just shape.
+    pub fingerprint: u64,
+}
+
+impl DataStamp {
+    pub fn of(data: &Dataset) -> DataStamp {
+        DataStamp {
+            name: data.name.clone(),
+            samples: data.samples(),
+            features: data.features(),
+            nnz: data.x.nnz(),
+            fingerprint: data.fingerprint(),
+        }
+    }
+}
+
+/// Solver-specific cross-outer state (owned form).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolverExtra {
+    /// PCDN / SCDN: nothing beyond `(w, maintained, rng, counters)`.
+    None,
+    /// CDN shrinking state: the active set, the previous pass's max
+    /// violation `M` and the first pass's violation scale.
+    Cdn {
+        active: Vec<bool>,
+        m_prev: f64,
+        m_first: Option<f64>,
+    },
+    /// TRON: the split variables `u = [u⁺; u⁻]` (not recoverable from
+    /// `w = u⁺ − u⁻`), the trust radius `Δ`, and the projected-gradient
+    /// reference `pg0`.
+    Tron { u: Vec<f64>, delta: f64, pg0: f64 },
+}
+
+/// Borrow-only form of [`SolverExtra`] used on the emission path.
+pub enum ExtraView<'a> {
+    None,
+    Cdn {
+        active: &'a [bool],
+        m_prev: f64,
+        m_first: Option<f64>,
+    },
+    Tron {
+        u: &'a [f64],
+        delta: f64,
+        pg0: f64,
+    },
+}
+
+impl ExtraView<'_> {
+    fn to_owned_extra(&self) -> SolverExtra {
+        match self {
+            ExtraView::None => SolverExtra::None,
+            ExtraView::Cdn {
+                active,
+                m_prev,
+                m_first,
+            } => SolverExtra::Cdn {
+                active: active.to_vec(),
+                m_prev: *m_prev,
+                m_first: *m_first,
+            },
+            ExtraView::Tron { u, delta, pg0 } => SolverExtra::Tron {
+                u: u.to_vec(),
+                delta: *delta,
+                pg0: *pg0,
+            },
+        }
+    }
+}
+
+/// A zero-copy snapshot of a resume point, passed to
+/// [`Probe::on_resume_point`] once per completed outer iteration.
+/// Materialize an owned [`Checkpoint`] with [`CheckpointView::to_checkpoint`]
+/// (O(n + s) clones — do it only for the outers you keep).
+pub struct CheckpointView<'a, 'd> {
+    pub solver: &'static str,
+    pub outer: usize,
+    pub inner_iters: usize,
+    pub ls_steps: usize,
+    /// The monitor's relative-stop reference (`‖∂F(w⁰)‖₁`), if set.
+    pub init_subgrad: Option<f64>,
+    pub w: &'a [f64],
+    pub state: &'a LossState<'d>,
+    pub opts: &'a TrainOptions,
+    pub rng: Option<RngState>,
+    pub extra: ExtraView<'a>,
+}
+
+impl CheckpointView<'_, '_> {
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        self.to_checkpoint_with(DataStamp::of(self.state.data()))
+    }
+
+    /// Like [`Self::to_checkpoint`] but with a precomputed [`DataStamp`]:
+    /// the stamp's fingerprint is an O(nnz) dataset pass that never
+    /// changes during a run, so periodic writers compute it once and
+    /// reuse it (see [`CheckpointWriter`]/[`CheckpointRecorder`]).
+    pub fn to_checkpoint_with(&self, data: DataStamp) -> Checkpoint {
+        Checkpoint {
+            solver: self.solver.to_string(),
+            objective: self.state.objective(),
+            opts: SavedOptions::of(self.opts),
+            data,
+            outer: self.outer,
+            inner_iters: self.inner_iters,
+            ls_steps: self.ls_steps,
+            init_subgrad: self.init_subgrad,
+            rng: self.rng,
+            w: self.w.to_vec(),
+            maintained: self.state.maintained().to_vec(),
+            extra: self.extra.to_owned_extra(),
+        }
+    }
+}
+
+/// A complete, owned resume point. See the module docs for the bitwise
+/// contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub solver: String,
+    pub objective: Objective,
+    pub opts: SavedOptions,
+    pub data: DataStamp,
+    pub outer: usize,
+    pub inner_iters: usize,
+    pub ls_steps: usize,
+    pub init_subgrad: Option<f64>,
+    pub rng: Option<RngState>,
+    pub w: Vec<f64>,
+    pub maintained: Vec<f64>,
+    pub extra: SolverExtra,
+}
+
+impl Checkpoint {
+    /// Reject a resume against the wrong solver/objective/data before any
+    /// state is touched.
+    pub fn validate_for(
+        &self,
+        solver: &str,
+        data: &Dataset,
+        obj: Objective,
+    ) -> Result<(), String> {
+        if self.solver != solver {
+            return Err(format!(
+                "checkpoint was written by solver '{}', resuming with '{solver}'",
+                self.solver
+            ));
+        }
+        if self.objective != obj {
+            return Err(format!(
+                "checkpoint objective {:?} != run objective {obj:?}",
+                self.objective
+            ));
+        }
+        if self.w.len() != data.features() || self.maintained.len() != data.samples() {
+            return Err(format!(
+                "checkpoint shape ({} features, {} samples) != dataset ({}, {})",
+                self.w.len(),
+                self.maintained.len(),
+                data.features(),
+                data.samples()
+            ));
+        }
+        let fp = data.fingerprint();
+        if self.data.fingerprint != fp {
+            return Err(format!(
+                "checkpoint dataset fingerprint {:#018x} ('{}') != loaded dataset {fp:#018x} \
+                 ('{}') — resuming on different data would silently corrupt the run",
+                self.data.fingerprint, self.data.name, data.name
+            ));
+        }
+        Ok(())
+    }
+
+    // ---- binary serialization (bit-exact) -----------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new(MAGIC, VERSION);
+        w.put_str(&self.solver);
+        w.put_u8(objective_tag(self.objective));
+        // SavedOptions
+        w.put_f64(self.opts.c);
+        w.put_f64(self.opts.l2_reg);
+        w.put_u64(self.opts.seed);
+        w.put_usize(self.opts.bundle_size);
+        w.put_bool(self.opts.shrinking);
+        w.put_usize(self.opts.n_threads);
+        w.put_usize(self.opts.max_outer);
+        put_stop(&mut w, self.opts.stop);
+        w.put_f64(self.opts.armijo.sigma);
+        w.put_f64(self.opts.armijo.beta);
+        w.put_f64(self.opts.armijo.gamma);
+        w.put_usize(self.opts.armijo.max_steps);
+        match &self.opts.feature_mask {
+            Some(m) => {
+                w.put_bool(true);
+                w.put_bool_slice(m);
+            }
+            None => w.put_bool(false),
+        }
+        // DataStamp
+        w.put_str(&self.data.name);
+        w.put_usize(self.data.samples);
+        w.put_usize(self.data.features);
+        w.put_usize(self.data.nnz);
+        w.put_u64(self.data.fingerprint);
+        // Counters + monitor state
+        w.put_usize(self.outer);
+        w.put_usize(self.inner_iters);
+        w.put_usize(self.ls_steps);
+        w.put_opt_f64(self.init_subgrad);
+        // RNG
+        match self.rng {
+            Some(r) => {
+                w.put_bool(true);
+                w.put_u64(r.state_hi);
+                w.put_u64(r.state_lo);
+                w.put_u64(r.inc_hi);
+                w.put_u64(r.inc_lo);
+            }
+            None => w.put_bool(false),
+        }
+        // Model + maintained state
+        w.put_f64_slice(&self.w);
+        w.put_f64_slice(&self.maintained);
+        // Solver extra
+        match &self.extra {
+            SolverExtra::None => w.put_u8(0),
+            SolverExtra::Cdn {
+                active,
+                m_prev,
+                m_first,
+            } => {
+                w.put_u8(1);
+                w.put_bool_slice(active);
+                w.put_f64(*m_prev);
+                w.put_opt_f64(*m_first);
+            }
+            SolverExtra::Tron { u, delta, pg0 } => {
+                w.put_u8(2);
+                w.put_f64_slice(u);
+                w.put_f64(*delta);
+                w.put_f64(*pg0);
+            }
+        }
+        w.into_bytes()
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, CodecError> {
+        let (mut r, _version) = ByteReader::open(bytes, MAGIC, VERSION)?;
+        let solver = r.get_str()?;
+        let objective = objective_of_tag(r.get_u8()?)?;
+        let c = r.get_f64()?;
+        let l2_reg = r.get_f64()?;
+        let seed = r.get_u64()?;
+        let bundle_size = r.get_usize()?;
+        let shrinking = r.get_bool()?;
+        let n_threads = r.get_usize()?;
+        let max_outer = r.get_usize()?;
+        let stop = get_stop(&mut r)?;
+        let armijo = ArmijoParams {
+            sigma: r.get_f64()?,
+            beta: r.get_f64()?,
+            gamma: r.get_f64()?,
+            max_steps: r.get_usize()?,
+        };
+        let feature_mask = if r.get_bool()? {
+            Some(r.get_bool_vec()?)
+        } else {
+            None
+        };
+        let data = DataStamp {
+            name: r.get_str()?,
+            samples: r.get_usize()?,
+            features: r.get_usize()?,
+            nnz: r.get_usize()?,
+            fingerprint: r.get_u64()?,
+        };
+        let outer = r.get_usize()?;
+        let inner_iters = r.get_usize()?;
+        let ls_steps = r.get_usize()?;
+        let init_subgrad = r.get_opt_f64()?;
+        let rng = if r.get_bool()? {
+            Some(RngState {
+                state_hi: r.get_u64()?,
+                state_lo: r.get_u64()?,
+                inc_hi: r.get_u64()?,
+                inc_lo: r.get_u64()?,
+            })
+        } else {
+            None
+        };
+        let w = r.get_f64_vec()?;
+        let maintained = r.get_f64_vec()?;
+        let extra = match r.get_u8()? {
+            0 => SolverExtra::None,
+            1 => SolverExtra::Cdn {
+                active: r.get_bool_vec()?,
+                m_prev: r.get_f64()?,
+                m_first: r.get_opt_f64()?,
+            },
+            2 => SolverExtra::Tron {
+                u: r.get_f64_vec()?,
+                delta: r.get_f64()?,
+                pg0: r.get_f64()?,
+            },
+            t => {
+                return Err(CodecError {
+                    pos: 0,
+                    msg: format!("unknown solver-extra tag {t}"),
+                })
+            }
+        };
+        r.finish()?;
+        Ok(Checkpoint {
+            solver,
+            objective,
+            opts: SavedOptions {
+                c,
+                l2_reg,
+                seed,
+                bundle_size,
+                shrinking,
+                n_threads,
+                max_outer,
+                stop,
+                armijo,
+                feature_mask,
+            },
+            data,
+            outer,
+            inner_iters,
+            ls_steps,
+            init_subgrad,
+            rng,
+            w,
+            maintained,
+            extra,
+        })
+    }
+
+    /// Write atomically (full-name `.tmp` sibling + rename) so an
+    /// interrupted write never leaves a torn checkpoint behind — the
+    /// whole point of having one — and concurrent runs checkpointing to
+    /// different files in one directory never share a tmp path.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let tmp = crate::util::tmp_sibling(path);
+        std::fs::write(&tmp, self.to_bytes())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint, String> {
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Checkpoint::from_bytes(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+fn objective_tag(o: Objective) -> u8 {
+    match o {
+        Objective::Logistic => 0,
+        Objective::L2Svm => 1,
+        Objective::Lasso => 2,
+    }
+}
+
+fn objective_of_tag(t: u8) -> Result<Objective, CodecError> {
+    match t {
+        0 => Ok(Objective::Logistic),
+        1 => Ok(Objective::L2Svm),
+        2 => Ok(Objective::Lasso),
+        _ => Err(CodecError {
+            pos: 0,
+            msg: format!("unknown objective tag {t}"),
+        }),
+    }
+}
+
+fn put_stop(w: &mut ByteWriter, stop: StopRule) {
+    match stop {
+        StopRule::SubgradRel(e) => {
+            w.put_u8(0);
+            w.put_f64(e);
+        }
+        StopRule::SubgradAbs(e) => {
+            w.put_u8(1);
+            w.put_f64(e);
+        }
+        StopRule::RelFuncDiff { fstar, eps } => {
+            w.put_u8(2);
+            w.put_f64(fstar);
+            w.put_f64(eps);
+        }
+        StopRule::MaxOuter(k) => {
+            w.put_u8(3);
+            w.put_u64(k as u64);
+        }
+    }
+}
+
+fn get_stop(r: &mut ByteReader<'_>) -> Result<StopRule, CodecError> {
+    Ok(match r.get_u8()? {
+        0 => StopRule::SubgradRel(r.get_f64()?),
+        1 => StopRule::SubgradAbs(r.get_f64()?),
+        2 => StopRule::RelFuncDiff {
+            fstar: r.get_f64()?,
+            eps: r.get_f64()?,
+        },
+        3 => StopRule::MaxOuter(r.get_u64()? as usize),
+        t => {
+            return Err(CodecError {
+                pos: 0,
+                msg: format!("unknown stop-rule tag {t}"),
+            })
+        }
+    })
+}
+
+// ====================================================================
+// Emission side
+// ====================================================================
+
+/// Forward a resume point to the attached probe (no-op without one).
+/// Called by every solver once per outer boundary, *after* that
+/// boundary's stop checks — see the module docs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn emit(
+    opts: &TrainOptions,
+    solver: &'static str,
+    outer: usize,
+    inner_iters: usize,
+    ls_steps: usize,
+    init_subgrad: Option<f64>,
+    w: &[f64],
+    state: &LossState<'_>,
+    rng: Option<RngState>,
+    extra: ExtraView<'_>,
+) {
+    if let Some(p) = &opts.probe {
+        p.0.on_resume_point(&CheckpointView {
+            solver,
+            outer,
+            inner_iters,
+            ls_steps,
+            init_subgrad,
+            w,
+            state,
+            opts,
+            rng,
+            extra,
+        });
+    }
+}
+
+/// Probe that persists every `k`-th resume point to one file (atomically
+/// overwritten — the file always holds the newest complete checkpoint).
+/// IO errors are recorded, not panicked: a failing disk should not kill a
+/// multi-hour fit, and the caller can inspect [`CheckpointWriter::last_error`].
+pub struct CheckpointWriter {
+    every: usize,
+    path: PathBuf,
+    stamp: StampCache,
+    pub last_error: Mutex<Option<String>>,
+}
+
+impl CheckpointWriter {
+    pub fn new(every: usize, path: impl Into<PathBuf>) -> CheckpointWriter {
+        CheckpointWriter {
+            every: every.max(1),
+            path: path.into(),
+            stamp: StampCache::default(),
+            last_error: Mutex::new(None),
+        }
+    }
+}
+
+impl Probe for CheckpointWriter {
+    fn on_resume_point(&self, view: &CheckpointView<'_, '_>) {
+        if view.outer % self.every != 0 {
+            return;
+        }
+        let ck = view.to_checkpoint_with(self.stamp.of(view.state.data()));
+        if let Err(e) = ck.save(&self.path) {
+            *self.last_error.lock().unwrap() =
+                Some(format!("{}: {e}", self.path.display()));
+        }
+    }
+}
+
+/// Memoized [`DataStamp`]: the O(nnz) fingerprint pass runs once per
+/// dataset, not once per checkpoint. Keyed on (name, shape, nnz) so a
+/// probe reused across runs on a *different* dataset re-fingerprints
+/// (datasets are immutable during a run, so the key is sufficient).
+#[derive(Default)]
+struct StampCache(Mutex<Option<DataStamp>>);
+
+impl StampCache {
+    fn of(&self, data: &Dataset) -> DataStamp {
+        let mut guard = self.0.lock().unwrap();
+        match &*guard {
+            Some(s)
+                if s.name == data.name
+                    && s.samples == data.samples()
+                    && s.features == data.features()
+                    && s.nnz == data.x.nnz() =>
+            {
+                s.clone()
+            }
+            _ => {
+                let s = DataStamp::of(data);
+                *guard = Some(s.clone());
+                s
+            }
+        }
+    }
+}
+
+/// Probe that keeps every `k`-th resume point in memory (tests and
+/// programmatic use through `api::Fit`).
+pub struct CheckpointRecorder {
+    every: usize,
+    stamp: StampCache,
+    pub taken: Mutex<Vec<Checkpoint>>,
+}
+
+impl CheckpointRecorder {
+    pub fn new(every: usize) -> CheckpointRecorder {
+        CheckpointRecorder {
+            every: every.max(1),
+            stamp: StampCache::default(),
+            taken: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The checkpoint taken at outer iteration `outer`, if any.
+    pub fn at_outer(&self, outer: usize) -> Option<Checkpoint> {
+        self.taken
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|c| c.outer == outer)
+            .cloned()
+    }
+
+    /// The newest checkpoint taken.
+    pub fn latest(&self) -> Option<Checkpoint> {
+        self.taken.lock().unwrap().last().cloned()
+    }
+}
+
+impl Probe for CheckpointRecorder {
+    fn on_resume_point(&self, view: &CheckpointView<'_, '_>) {
+        if view.outer % self.every != 0 {
+            return;
+        }
+        let ck = view.to_checkpoint_with(self.stamp.of(view.state.data()));
+        self.taken.lock().unwrap().push(ck);
+    }
+}
+
+// ====================================================================
+// Resume side
+// ====================================================================
+
+/// What [`apply_resume`] hands back to the solver's main loop.
+pub(crate) struct ResumeState {
+    pub outer: usize,
+    pub inner_iters: usize,
+    pub ls_steps: usize,
+    pub init_subgrad: Option<f64>,
+    pub rng: Option<Pcg64>,
+    pub extra: SolverExtra,
+}
+
+/// Validate [`TrainOptions::resume`] against this run and restore
+/// `(w, maintained state)`. Returns `None` when no resume is requested.
+/// Panics on a mismatched checkpoint — resuming the wrong run is a
+/// programming error the `api::Fit` layer surfaces as a typed error
+/// before ever reaching a solver.
+pub(crate) fn apply_resume(
+    opts: &TrainOptions,
+    solver: &'static str,
+    data: &Dataset,
+    obj: Objective,
+    state: &mut LossState<'_>,
+    w: &mut [f64],
+) -> Option<ResumeState> {
+    let ck = opts.resume.as_ref()?;
+    if let Err(e) = ck.validate_for(solver, data, obj) {
+        panic!("cannot resume: {e}");
+    }
+    let same_mask = match (&ck.opts.feature_mask, &opts.feature_mask) {
+        (None, None) => true,
+        (Some(a), Some(b)) => a.as_slice() == b.as_slice(),
+        _ => false,
+    };
+    assert!(
+        same_mask,
+        "cannot resume: the run's feature_mask differs from the checkpoint's"
+    );
+    w.copy_from_slice(&ck.w);
+    state.restore_maintained(&ck.maintained);
+    Some(ResumeState {
+        outer: ck.outer,
+        inner_iters: ck.inner_iters,
+        ls_steps: ck.ls_steps,
+        init_subgrad: ck.init_subgrad,
+        rng: ck.rng.map(Pcg64::restore),
+        extra: ck.extra.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn toy() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 20,
+                features: 8,
+                nnz_per_row: 3,
+                ..Default::default()
+            },
+            2,
+        )
+    }
+
+    fn sample_checkpoint(data: &Dataset) -> Checkpoint {
+        let opts = TrainOptions {
+            c: 0.7,
+            bundle_size: 4,
+            n_threads: 3,
+            ..Default::default()
+        };
+        Checkpoint {
+            solver: "pcdn".into(),
+            objective: Objective::Logistic,
+            opts: SavedOptions::of(&opts),
+            data: DataStamp::of(data),
+            outer: 5,
+            inner_iters: 10,
+            ls_steps: 17,
+            init_subgrad: Some(3.25),
+            rng: Some(Pcg64::new(9).snapshot()),
+            w: vec![0.5, -0.25, 0.0, 1e-300, -0.0, 2.0, 0.0, 0.125],
+            maintained: (0..20).map(|i| (i as f64) * 0.3 - 2.0).collect(),
+            extra: SolverExtra::Cdn {
+                active: vec![true, false, true, true, false, true, true, true],
+                m_prev: f64::INFINITY,
+                m_first: Some(0.5),
+            },
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let d = toy();
+        let ck = sample_checkpoint(&d);
+        let rt = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, rt);
+        // −0.0 and ∞ survive bit-for-bit.
+        assert_eq!(rt.w[4].to_bits(), (-0.0f64).to_bits());
+        match rt.extra {
+            SolverExtra::Cdn { m_prev, .. } => assert_eq!(m_prev, f64::INFINITY),
+            _ => panic!("wrong extra"),
+        }
+    }
+
+    #[test]
+    fn tron_extra_roundtrip() {
+        let d = toy();
+        let mut ck = sample_checkpoint(&d);
+        ck.solver = "tron".into();
+        ck.rng = None;
+        ck.extra = SolverExtra::Tron {
+            u: vec![0.1; 16],
+            delta: 2.5,
+            pg0: 7.75,
+        };
+        let rt = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, rt);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let d = toy();
+        let ck = sample_checkpoint(&d);
+        let dir = std::env::temp_dir().join("pcdn_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        ck.save(&path).unwrap();
+        let rt = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, rt);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validate_rejects_mismatches() {
+        let d = toy();
+        let ck = sample_checkpoint(&d);
+        assert!(ck.validate_for("pcdn", &d, Objective::Logistic).is_ok());
+        assert!(ck.validate_for("cdn", &d, Objective::Logistic).is_err());
+        assert!(ck.validate_for("pcdn", &d, Objective::L2Svm).is_err());
+        let other = generate(
+            &SyntheticSpec {
+                samples: 20,
+                features: 8,
+                nnz_per_row: 3,
+                ..Default::default()
+            },
+            3, // different seed → different content, same shape
+        );
+        assert!(ck.validate_for("pcdn", &other, Objective::Logistic).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_bytes() {
+        assert!(Checkpoint::from_bytes(b"not a checkpoint").is_err());
+        let d = toy();
+        let mut bytes = sample_checkpoint(&d).to_bytes();
+        bytes.truncate(bytes.len() - 3);
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+}

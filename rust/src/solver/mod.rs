@@ -4,6 +4,7 @@
 //! and stopping rules.
 
 pub mod cdn;
+pub mod checkpoint;
 pub mod direction;
 pub mod linesearch;
 pub mod pcdn;
@@ -11,6 +12,7 @@ pub mod probe;
 pub mod scdn;
 pub mod tron;
 
+pub use checkpoint::{Checkpoint, CheckpointRecorder, CheckpointView, CheckpointWriter};
 pub use probe::{Probe, ProbeHandle};
 
 use crate::data::Dataset;
@@ -22,7 +24,7 @@ use crate::util::timer::Stopwatch;
 
 /// Armijo rule parameters (paper §5.1: σ = 0.01, β = 0.5, γ = 0 for
 /// PCDN/CDN/SCDN).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ArmijoParams {
     pub sigma: f64,
     pub beta: f64,
@@ -43,7 +45,7 @@ impl Default for ArmijoParams {
 }
 
 /// When to stop training.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum StopRule {
     /// Relative minimum-norm-subgradient test (the outer stopping condition
     /// of Yuan et al. 2012 used in §5.1): stop when
@@ -121,6 +123,15 @@ pub struct TrainOptions {
     /// line-searched inner step from PCDN/CDN/SCDN. `None` (the default)
     /// costs one branch per step.
     pub probe: Option<ProbeHandle>,
+    /// Continue from a [`Checkpoint`] instead of starting fresh: restores
+    /// `(w, maintained state, RNG, counters, solver extras)` so the run
+    /// is bitwise identical to one that was never interrupted — the
+    /// generalization of [`Self::warm_start`], which remains the
+    /// degenerate "model only" case. Takes precedence over `warm_start`.
+    /// The checkpoint must match this run's solver, objective, dataset
+    /// fingerprint and `feature_mask` (validated before any state moves;
+    /// `api::Fit::resume` surfaces mismatches as typed errors).
+    pub resume: Option<std::sync::Arc<Checkpoint>>,
 }
 
 impl Default for TrainOptions {
@@ -143,6 +154,7 @@ impl Default for TrainOptions {
             feature_mask: None,
             pool: None,
             probe: None,
+            resume: None,
         }
     }
 }

@@ -50,6 +50,7 @@ use crate::loss::{LossState, Objective};
 use crate::parallel::pool::SendPtr;
 use crate::parallel::range::SampleRanges;
 use crate::parallel::sim::IterRecord;
+use crate::solver::checkpoint::{self, ExtraView};
 use crate::solver::direction::{delta_contribution, newton_direction};
 use crate::solver::linesearch::{p_dim_armijo_sharded, DxScratch, PARALLEL_EPILOGUE_MIN_TOUCHED};
 use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
@@ -110,6 +111,7 @@ impl Solver for Pcdn {
             state.reset_from(&w);
         }
         let mut rng = Pcg64::new(opts.seed);
+        let resumed = checkpoint::apply_resume(opts, self.name(), data, obj, &mut state, &mut w);
         let mut slots: Vec<DirSlot> = vec![DirSlot::default(); p];
         let mut w_b: Vec<f64> = Vec::with_capacity(p);
         let mut d_b: Vec<f64> = Vec::with_capacity(p);
@@ -141,9 +143,21 @@ impl Solver for Pcdn {
             Vec::new()
         };
 
-        // Initial trace point + early-exit check.
-        if monitor.observe(0, &state, &w, opts, 0) {
-            return finish(self.name(), w, &state, monitor, 0, 0, 0, records);
+        if let Some(rs) = resumed {
+            // Continue exactly where the checkpoint left off: counters,
+            // the monitor's relative-stop reference, and the RNG stream.
+            // The initial observe belongs to outer 0 of the original run
+            // and is not replayed.
+            outer = rs.outer;
+            inner_iters = rs.inner_iters;
+            ls_steps = rs.ls_steps;
+            monitor.init_subgrad = rs.init_subgrad;
+            rng = rs.rng.expect("pcdn checkpoints carry an RNG state");
+        } else {
+            // Initial trace point + early-exit check.
+            if monitor.observe(0, &state, &w, opts, 0) {
+                return finish(self.name(), w, &state, monitor, 0, 0, 0, records);
+            }
         }
 
         loop {
@@ -311,6 +325,20 @@ impl Solver for Pcdn {
             if monitor.observe(outer, &state, &w, opts, ls_steps) {
                 break;
             }
+            // Resume point: after this boundary's stop checks, so a
+            // resumed run never replays a stop decision already made.
+            checkpoint::emit(
+                opts,
+                self.name(),
+                outer,
+                inner_iters,
+                ls_steps,
+                monitor.init_subgrad,
+                &w,
+                &state,
+                Some(rng.snapshot()),
+                ExtraView::None,
+            );
         }
         finish(
             self.name(),

@@ -85,6 +85,13 @@ pub struct OuterInfo<'a, 'd> {
 pub trait Probe: Send + Sync {
     fn on_step(&self, _info: &StepInfo<'_, '_>) {}
     fn on_outer(&self, _info: &OuterInfo<'_, '_>) {}
+    /// A resume point: everything needed to continue the run bitwise from
+    /// this outer boundary (see [`crate::solver::checkpoint`]). Emitted by
+    /// every solver once per outer iteration, after that boundary's stop
+    /// checks. The view borrows live solver state — materialize with
+    /// [`CheckpointView::to_checkpoint`](crate::solver::checkpoint::CheckpointView::to_checkpoint)
+    /// only for the outers you keep.
+    fn on_resume_point(&self, _view: &crate::solver::checkpoint::CheckpointView<'_, '_>) {}
 }
 
 /// Cheaply clonable probe handle carried by
@@ -97,6 +104,34 @@ pub struct ProbeHandle(pub Arc<dyn Probe>);
 impl ProbeHandle {
     pub fn new(probe: impl Probe + 'static) -> Self {
         ProbeHandle(Arc::new(probe))
+    }
+
+    /// Combine several observers into one handle: every event fans out to
+    /// every member, in order. Used by `api::Fit` to attach a checkpoint
+    /// writer alongside a user probe (TrainOptions carries one handle).
+    pub fn fanout(handles: Vec<ProbeHandle>) -> Self {
+        ProbeHandle(Arc::new(MultiProbe(handles)))
+    }
+}
+
+/// Fan-out observer behind [`ProbeHandle::fanout`].
+struct MultiProbe(Vec<ProbeHandle>);
+
+impl Probe for MultiProbe {
+    fn on_step(&self, info: &StepInfo<'_, '_>) {
+        for h in &self.0 {
+            h.0.on_step(info);
+        }
+    }
+    fn on_outer(&self, info: &OuterInfo<'_, '_>) {
+        for h in &self.0 {
+            h.0.on_outer(info);
+        }
+    }
+    fn on_resume_point(&self, view: &crate::solver::checkpoint::CheckpointView<'_, '_>) {
+        for h in &self.0 {
+            h.0.on_resume_point(view);
+        }
     }
 }
 

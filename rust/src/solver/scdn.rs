@@ -34,6 +34,7 @@ use crate::loss::{LossState, Objective};
 use crate::parallel::pool::{AtomicF64Vec, SendPtr, WorkerPool};
 use crate::parallel::range::SampleRanges;
 use crate::parallel::sim::IterRecord;
+use crate::solver::checkpoint::{self, ExtraView};
 use crate::solver::direction::{delta_contribution, newton_direction};
 use crate::solver::linesearch::{l1_delta, DxScratch, PARALLEL_EPILOGUE_MIN_TOUCHED};
 use crate::solver::pcdn::finish;
@@ -105,7 +106,14 @@ fn train_round(
     let mut outer = 0usize;
     let rounds_per_outer = n.div_ceil(pbar);
 
-    if monitor.observe(0, &state, &w, opts, 0) {
+    let resumed = checkpoint::apply_resume(opts, name, data, obj, &mut state, &mut w);
+    if let Some(rs) = resumed {
+        outer = rs.outer;
+        inner_iters = rs.inner_iters;
+        ls_steps = rs.ls_steps;
+        monitor.init_subgrad = rs.init_subgrad;
+        rng = rs.rng.expect("scdn checkpoints carry an RNG state");
+    } else if monitor.observe(0, &state, &w, opts, 0) {
         return finish(name, w, &state, monitor, 0, 0, 0, records);
     }
 
@@ -268,6 +276,18 @@ fn train_round(
         if monitor.observe(outer, &state, &w, opts, ls_steps) {
             break;
         }
+        checkpoint::emit(
+            opts,
+            name,
+            outer,
+            inner_iters,
+            ls_steps,
+            monitor.init_subgrad,
+            &w,
+            &state,
+            Some(rng.snapshot()),
+            ExtraView::None,
+        );
     }
     finish(name, w, &state, monitor, outer, inner_iters, ls_steps, records)
 }
@@ -283,19 +303,48 @@ fn train_atomic(
     opts.check_mask(n);
     let s = data.samples();
     let pbar = opts.bundle_size.clamp(1, n);
-    // Shared state: weights and margins wx (logistic) / b (svm) as atomics.
-    let w_atomic = AtomicF64Vec::zeros(n);
-    let margin = match obj {
-        Objective::Logistic => AtomicF64Vec::zeros(s),
-        Objective::L2Svm => AtomicF64Vec::from_slice(&vec![1.0; s]),
-        // Lasso: residual r_i = wᵀx_i − y_i = −y_i at w = 0.
-        Objective::Lasso => {
-            AtomicF64Vec::from_slice(&data.y.iter().map(|&y| -y).collect::<Vec<_>>())
+    // Resume (atomic mode): the checkpointed `(w, maintained)` pair seeds
+    // the shared atomics. Atomic mode is nondeterministic by design, so
+    // the resume contract here is "continue from the snapshot", not
+    // bitwise replay; checkpoints are emitted from the per-outer
+    // consistent snapshot (the reset-derived state, like the stop test).
+    let ckpt = opts.resume.as_deref();
+    if let Some(ck) = ckpt {
+        if let Err(e) = ck.validate_for(name, data, obj) {
+            panic!("cannot resume: {e}");
         }
+        // Same mask contract as apply_resume enforces for the other
+        // solvers: resuming under a different active set would silently
+        // mix states of two different restricted problems.
+        let same_mask = match (&ck.opts.feature_mask, &opts.feature_mask) {
+            (None, None) => true,
+            (Some(a), Some(b)) => a.as_slice() == b.as_slice(),
+            _ => false,
+        };
+        assert!(
+            same_mask,
+            "cannot resume: the run's feature_mask differs from the checkpoint's"
+        );
+    }
+    // Shared state: weights and margins wx (logistic) / b (svm) as atomics.
+    let w_atomic = match ckpt {
+        Some(ck) => AtomicF64Vec::from_slice(&ck.w),
+        None => AtomicF64Vec::zeros(n),
+    };
+    let margin = match ckpt {
+        Some(ck) => AtomicF64Vec::from_slice(&ck.maintained),
+        None => match obj {
+            Objective::Logistic => AtomicF64Vec::zeros(s),
+            Objective::L2Svm => AtomicF64Vec::from_slice(&vec![1.0; s]),
+            // Lasso: residual r_i = wᵀx_i − y_i = −y_i at w = 0.
+            Objective::Lasso => {
+                AtomicF64Vec::from_slice(&data.y.iter().map(|&y| -y).collect::<Vec<_>>())
+            }
+        },
     };
     let c = opts.c;
     let monitor = RunMonitor::new();
-    let mut outer = 0usize;
+    let mut outer = ckpt.map(|ck| ck.outer).unwrap_or(0);
     let updates_per_outer = n; // one CDN-sweep-equivalent per outer iter
 
     // Everything below reads/writes atomics only.
@@ -368,17 +417,22 @@ fn train_atomic(
     };
 
     let stop_flag = std::sync::atomic::AtomicBool::new(false);
-    let total_ls = std::sync::atomic::AtomicUsize::new(0);
+    let total_ls =
+        std::sync::atomic::AtomicUsize::new(ckpt.map(|ck| ck.ls_steps).unwrap_or(0));
     let total_updates = std::sync::atomic::AtomicUsize::new(0);
     let mut monitor = monitor;
 
     // Reference subgradient norm at w = 0 for the relative stopping test
-    // (restricted to the active mask, like the shared monitor).
+    // (restricted to the active mask, like the shared monitor). A resumed
+    // run reuses the original run's reference.
     let mask = opts.feature_mask.as_ref().map(|m| m.as_slice());
-    let v0 = {
-        let st0 = LossState::new(obj, data, c);
-        crate::solver::subgrad_norm1_masked(&st0.full_gradient(), &vec![0.0; n], mask)
-            .max(1e-300)
+    let v0 = match ckpt.and_then(|ck| ck.init_subgrad) {
+        Some(v) => v,
+        None => {
+            let st0 = LossState::new(obj, data, c);
+            crate::solver::subgrad_norm1_masked(&st0.full_gradient(), &vec![0.0; n], mask)
+                .max(1e-300)
+        }
     };
 
     // One persistent team of racing workers for the whole run. Each of the
@@ -498,6 +552,18 @@ fn train_atomic(
         if !st.loss_value().is_finite() {
             break;
         }
+        checkpoint::emit(
+            opts,
+            name,
+            outer,
+            outer * updates_per_outer,
+            total_ls.load(std::sync::atomic::Ordering::Relaxed),
+            Some(v0),
+            &w_snap,
+            &st,
+            None,
+            ExtraView::None,
+        );
     }
     let _ = total_updates.load(std::sync::atomic::Ordering::Relaxed);
 

@@ -18,6 +18,7 @@
 use crate::data::Dataset;
 use crate::linalg::{dot, norm2};
 use crate::loss::{LossState, Objective};
+use crate::solver::checkpoint::{self, ExtraView, SolverExtra};
 use crate::solver::pcdn::finish;
 use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
 
@@ -200,15 +201,40 @@ impl Solver for Tron {
         let mut u = vec![0.0f64; 2 * n];
         let mut f = split.value(&u);
         let mut g = split.gradient(&u);
-        let pg0 = norm2(&projected_gradient(&g, &u)).max(1e-300);
+        let mut pg0 = norm2(&projected_gradient(&g, &u)).max(1e-300);
         let mut delta = pg0;
         let mut monitor = RunMonitor::new();
         let mut inner = 0usize;
         let mut ls_steps = 0usize;
         let mut outer = 0usize;
 
-        let w0 = split.w_of(&u);
-        if monitor.observe(0, &split.state, &w0, opts, 0) {
+        let mut w0 = split.w_of(&u);
+        let resumed =
+            checkpoint::apply_resume(opts, self.name(), data, obj, &mut split.state, &mut w0);
+        if let Some(rs) = resumed {
+            outer = rs.outer;
+            inner = rs.inner_iters;
+            ls_steps = rs.ls_steps;
+            monitor.init_subgrad = rs.init_subgrad;
+            match rs.extra {
+                SolverExtra::Tron {
+                    u: cu,
+                    delta: cd,
+                    pg0: cp,
+                } => {
+                    assert_eq!(cu.len(), 2 * n, "checkpoint split-variable length");
+                    u = cu;
+                    delta = cd;
+                    pg0 = cp;
+                }
+                _ => panic!("tron checkpoint carries non-TRON solver state"),
+            }
+            // `value`/`gradient` recompute from scratch at every call, so
+            // re-deriving them from the restored `u` reproduces exactly the
+            // values the uninterrupted run held at this boundary.
+            f = split.value(&u);
+            g = split.gradient(&u);
+        } else if monitor.observe(0, &split.state, &w0, opts, 0) {
             return finish(self.name(), w0, &split.state, monitor, 0, 0, 0, Vec::new());
         }
 
@@ -292,6 +318,22 @@ impl Solver for Tron {
                 monitor.converged = true;
                 break;
             }
+            checkpoint::emit(
+                opts,
+                self.name(),
+                outer,
+                inner,
+                ls_steps,
+                monitor.init_subgrad,
+                &w,
+                &split.state,
+                None,
+                ExtraView::Tron {
+                    u: &u,
+                    delta,
+                    pg0,
+                },
+            );
         }
         let w = split.w_of(&u);
         finish(

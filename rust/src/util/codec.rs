@@ -1,0 +1,328 @@
+//! Compact little-endian binary codec for on-disk artifacts.
+//!
+//! The JSON layer (`util::json`) is the human-readable interchange format;
+//! this codec is the *exact* one: every `f64` round-trips bit-for-bit
+//! (including `-0.0`, infinities, NaN payloads and subnormals), which the
+//! model / checkpoint formats require for bitwise save→load→resume
+//! guarantees. Framing is `magic (8 bytes) + version (u32)` followed by a
+//! flat field stream — no schema evolution machinery beyond the version
+//! gate; readers reject unknown magics and future versions outright.
+
+use std::fmt;
+
+/// Decode error with byte offset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "codec error at byte {}: {}", self.pos, self.msg)
+    }
+}
+impl std::error::Error for CodecError {}
+
+/// Append-only byte sink.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Start a document: 8-byte magic + u32 version.
+    pub fn new(magic: &[u8; 8], version: u32) -> Self {
+        let mut w = ByteWriter {
+            buf: Vec::with_capacity(64),
+        };
+        w.buf.extend_from_slice(magic);
+        w.put_u32(version);
+        w
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` as u64 (portable across word sizes).
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Exact f64: the IEEE bit pattern.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f64 vector (bit-exact).
+    pub fn put_f64_slice(&mut self, xs: &[f64]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_f64(x);
+        }
+    }
+
+    /// Length-prefixed bool vector (one byte per element).
+    pub fn put_bool_slice(&mut self, xs: &[bool]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_bool(x);
+        }
+    }
+
+    /// `Option<f64>` as presence byte + bits.
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.put_bool(true);
+                self.put_f64(x);
+            }
+            None => self.put_bool(false),
+        }
+    }
+}
+
+/// Sequential reader over an encoded document.
+pub struct ByteReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Open a document, checking magic and that `version ≤ max_version`.
+    /// Returns the reader positioned after the header plus the version.
+    pub fn open(
+        bytes: &'a [u8],
+        magic: &[u8; 8],
+        max_version: u32,
+    ) -> Result<(Self, u32), CodecError> {
+        let mut r = ByteReader { bytes, pos: 0 };
+        let got = r.take(8)?;
+        if got != magic {
+            return Err(r.err(&format!(
+                "bad magic {:?} (expected {:?})",
+                String::from_utf8_lossy(got),
+                String::from_utf8_lossy(magic)
+            )));
+        }
+        let version = r.get_u32()?;
+        if version == 0 || version > max_version {
+            return Err(r.err(&format!(
+                "unsupported format version {version} (reader supports 1..={max_version})"
+            )));
+        }
+        Ok((r, version))
+    }
+
+    fn err(&self, msg: &str) -> CodecError {
+        CodecError {
+            pos: self.pos,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.pos + n > self.bytes.len() {
+            return Err(self.err(&format!(
+                "truncated input (need {n} bytes, have {})",
+                self.bytes.len() - self.pos
+            )));
+        }
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize, CodecError> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| self.err(&format!("length {v} exceeds usize")))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool, CodecError> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(self.err(&format!("invalid bool byte {b}"))),
+        }
+    }
+
+    pub fn get_str(&mut self) -> Result<String, CodecError> {
+        let n = self.bounded_len(1)?;
+        let raw = self.take(n)?;
+        std::str::from_utf8(raw)
+            .map(|s| s.to_string())
+            .map_err(|_| self.err("invalid utf-8 in string"))
+    }
+
+    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>, CodecError> {
+        let n = self.bounded_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_bool_vec(&mut self) -> Result<Vec<bool>, CodecError> {
+        let n = self.bounded_len(1)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_bool()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_opt_f64(&mut self) -> Result<Option<f64>, CodecError> {
+        Ok(if self.get_bool()? {
+            Some(self.get_f64()?)
+        } else {
+            None
+        })
+    }
+
+    /// A length prefix sanity-bounded by the remaining input (`elem_size`
+    /// bytes per element) so a corrupt prefix cannot drive a huge
+    /// allocation before the truncation error surfaces.
+    fn bounded_len(&mut self, elem_size: usize) -> Result<usize, CodecError> {
+        let n = self.get_usize()?;
+        let remaining = self.bytes.len() - self.pos;
+        if n.checked_mul(elem_size).map(|b| b > remaining).unwrap_or(true) {
+            return Err(self.err(&format!(
+                "length prefix {n} exceeds remaining input ({remaining} bytes)"
+            )));
+        }
+        Ok(n)
+    }
+
+    /// Error unless every input byte was consumed.
+    pub fn finish(self) -> Result<(), CodecError> {
+        if self.pos != self.bytes.len() {
+            return Err(self.err(&format!(
+                "{} trailing bytes after document",
+                self.bytes.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MAGIC: &[u8; 8] = b"PCDNTST1";
+
+    #[test]
+    fn roundtrip_every_field_kind() {
+        let mut w = ByteWriter::new(MAGIC, 1);
+        w.put_u8(7);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX);
+        w.put_usize(12345);
+        w.put_f64(-0.0);
+        w.put_f64(f64::INFINITY);
+        w.put_f64(f64::MIN_POSITIVE / 8.0); // subnormal
+        w.put_bool(true);
+        w.put_str("héllo — 😀");
+        w.put_f64_slice(&[1.5, -2.25, 0.0]);
+        w.put_bool_slice(&[true, false, true]);
+        w.put_opt_f64(Some(3.5));
+        w.put_opt_f64(None);
+        let bytes = w.into_bytes();
+
+        let (mut r, v) = ByteReader::open(&bytes, MAGIC, 1).unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_usize().unwrap(), 12345);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.get_f64().unwrap(), f64::INFINITY);
+        assert_eq!(
+            r.get_f64().unwrap().to_bits(),
+            (f64::MIN_POSITIVE / 8.0).to_bits()
+        );
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_str().unwrap(), "héllo — 😀");
+        assert_eq!(r.get_f64_vec().unwrap(), vec![1.5, -2.25, 0.0]);
+        assert_eq!(r.get_bool_vec().unwrap(), vec![true, false, true]);
+        assert_eq!(r.get_opt_f64().unwrap(), Some(3.5));
+        assert_eq!(r.get_opt_f64().unwrap(), None);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let w = ByteWriter::new(MAGIC, 1);
+        let bytes = w.into_bytes();
+        assert!(ByteReader::open(&bytes, b"WRONGMGC", 1).is_err());
+        let w2 = ByteWriter::new(MAGIC, 9);
+        assert!(ByteReader::open(&w2.into_bytes(), MAGIC, 1).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let mut w = ByteWriter::new(MAGIC, 1);
+        w.put_f64_slice(&[1.0, 2.0]);
+        let mut bytes = w.into_bytes();
+        bytes.push(0); // trailing garbage
+        let (mut r, _) = ByteReader::open(&bytes, MAGIC, 1).unwrap();
+        r.get_f64_vec().unwrap();
+        assert!(r.finish().is_err());
+
+        let mut w = ByteWriter::new(MAGIC, 1);
+        w.put_f64_slice(&[1.0, 2.0]);
+        let bytes = w.into_bytes();
+        let cut = &bytes[..bytes.len() - 4];
+        let (mut r, _) = ByteReader::open(cut, MAGIC, 1).unwrap();
+        assert!(r.get_f64_vec().is_err());
+    }
+
+    #[test]
+    fn corrupt_length_prefix_fails_without_allocating() {
+        let mut w = ByteWriter::new(MAGIC, 1);
+        w.put_usize(usize::MAX); // absurd length prefix for a vec
+        let bytes = w.into_bytes();
+        let (mut r, _) = ByteReader::open(&bytes, MAGIC, 1).unwrap();
+        assert!(r.get_f64_vec().is_err());
+    }
+}

@@ -1,8 +1,19 @@
 //! Foundation utilities built from scratch for the offline environment:
-//! RNG, JSON, CLI parsing, timing/statistics, and logging.
+//! RNG, JSON, a binary codec, CLI parsing, timing/statistics, and logging.
 
 pub mod cli;
+pub mod codec;
 pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod timer;
+
+/// A `.tmp` sibling of `path` for atomic write-then-rename: the suffix is
+/// appended to the FULL file name (`m.json` → `m.json.tmp`), unlike
+/// `Path::with_extension`, which would map sibling artifacts sharing a
+/// stem (`m.json`, `m.bin`) onto one colliding tmp file.
+pub fn tmp_sibling(path: &std::path::Path) -> std::path::PathBuf {
+    let mut name = path.as_os_str().to_owned();
+    name.push(".tmp");
+    std::path::PathBuf::from(name)
+}

@@ -1,0 +1,380 @@
+//! Integration tests for the public `api` layer: the typed `Fit` builder,
+//! the `Model` artifact (save → load → predict), serving-grade pooled
+//! scoring, and checkpoint/resume.
+//!
+//! The headline property: a checkpoint-interrupted-then-resumed run is
+//! **bitwise identical** to one that never stopped — asserted across all
+//! four solvers × all three losses, on the final model and on every
+//! post-resume trace point.
+
+use std::sync::Arc;
+
+use pcdn::api::{
+    Cdn, CheckpointRecorder, Fit, FitError, Model, Pcdn, Scdn, Scorer, SolverSel, Tron,
+};
+use pcdn::data::synthetic::{generate, SyntheticSpec};
+use pcdn::data::Dataset;
+use pcdn::loss::Objective;
+use pcdn::solver::checkpoint::Checkpoint;
+use pcdn::solver::{ProbeHandle, StopRule};
+
+fn toy(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            samples: 90,
+            features: 36,
+            nnz_per_row: 6,
+            label_noise: 0.05,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+const ALL_LOSSES: [Objective; 3] = [Objective::Logistic, Objective::L2Svm, Objective::Lasso];
+
+/// Run `sel` for `total` outers recording resume points, then resume from
+/// the checkpoint at `cut` and demand bitwise identity of the final model
+/// and of every post-resume trace objective.
+fn assert_resume_bitwise(sel: SolverSel, obj: Objective, d: &Dataset, cut: usize, total: usize) {
+    let label = format!("{} {obj:?}", sel.name());
+    let rec = Arc::new(CheckpointRecorder::new(1));
+    let full = Fit::on(d)
+        .solver(sel)
+        .objective(obj)
+        .c(0.7)
+        .stop(StopRule::MaxOuter(total))
+        .max_outer(total)
+        .trace_every(1)
+        .probe(ProbeHandle(rec.clone()))
+        .run()
+        .unwrap_or_else(|e| panic!("{label}: {e}"));
+    let ck = rec
+        .at_outer(cut)
+        .unwrap_or_else(|| panic!("{label}: no checkpoint at outer {cut}"));
+    assert_eq!(ck.solver, sel.name());
+    assert_eq!(ck.objective, obj);
+
+    let resumed = Fit::resume(d, ck)
+        .unwrap_or_else(|e| panic!("{label}: {e}"))
+        .trace_every(1)
+        .run()
+        .unwrap_or_else(|e| panic!("{label}: {e}"));
+
+    assert_eq!(
+        full.result.w, resumed.result.w,
+        "{label}: resumed model != uninterrupted model"
+    );
+    assert_eq!(full.result.outer_iters, resumed.result.outer_iters, "{label}");
+    assert_eq!(full.result.ls_steps, resumed.result.ls_steps, "{label}");
+    assert_eq!(
+        full.result.inner_iters, resumed.result.inner_iters,
+        "{label}"
+    );
+
+    // Every post-resume trace point matches the uninterrupted trajectory
+    // bitwise (the full run also has points for outers 0..=cut).
+    let tail: Vec<_> = full
+        .result
+        .trace
+        .iter()
+        .filter(|tp| tp.outer_iter > cut)
+        .collect();
+    assert_eq!(tail.len(), resumed.result.trace.len(), "{label}: trace shape");
+    for (a, b) in tail.iter().zip(&resumed.result.trace) {
+        assert_eq!(a.outer_iter, b.outer_iter, "{label}");
+        assert_eq!(
+            a.objective.to_bits(),
+            b.objective.to_bits(),
+            "{label}: objective diverged at outer {}",
+            a.outer_iter
+        );
+        assert_eq!(a.nnz, b.nnz, "{label}");
+    }
+}
+
+#[test]
+fn resume_bitwise_pcdn_all_losses() {
+    for (i, obj) in ALL_LOSSES.into_iter().enumerate() {
+        assert_resume_bitwise(SolverSel::Pcdn { p: 8 }, obj, &toy(10 + i as u64), 3, 9);
+    }
+}
+
+#[test]
+fn resume_bitwise_cdn_all_losses() {
+    for (i, obj) in ALL_LOSSES.into_iter().enumerate() {
+        assert_resume_bitwise(
+            SolverSel::Cdn { shrinking: false },
+            obj,
+            &toy(20 + i as u64),
+            3,
+            9,
+        );
+    }
+}
+
+#[test]
+fn resume_bitwise_cdn_shrinking() {
+    // Shrinking carries cross-outer state (active set, M violations) —
+    // the checkpoint must restore it exactly.
+    assert_resume_bitwise(
+        SolverSel::Cdn { shrinking: true },
+        Objective::Logistic,
+        &toy(30),
+        4,
+        10,
+    );
+}
+
+#[test]
+fn resume_bitwise_scdn_all_losses() {
+    for (i, obj) in ALL_LOSSES.into_iter().enumerate() {
+        assert_resume_bitwise(
+            SolverSel::Scdn {
+                p: 4,
+                atomic: false,
+            },
+            obj,
+            &toy(40 + i as u64),
+            3,
+            9,
+        );
+    }
+}
+
+#[test]
+fn resume_bitwise_tron_all_losses() {
+    for (i, obj) in ALL_LOSSES.into_iter().enumerate() {
+        assert_resume_bitwise(SolverSel::Tron, obj, &toy(50 + i as u64), 3, 9);
+    }
+}
+
+#[test]
+fn resume_bitwise_pcdn_pooled() {
+    // The chunking degree is part of the checkpoint; a pooled run resumes
+    // bitwise because chunk boundaries follow n_threads, not the pool.
+    let d = toy(60);
+    let rec = Arc::new(CheckpointRecorder::new(2));
+    let full = Fit::on(&d)
+        .solver(Pcdn { p: 12 })
+        .threads(3)
+        .stop(StopRule::MaxOuter(8))
+        .max_outer(8)
+        .probe(ProbeHandle(rec.clone()))
+        .run()
+        .unwrap();
+    let ck = rec.at_outer(4).expect("checkpoint at outer 4");
+    assert_eq!(ck.opts.n_threads, 3);
+    let resumed = Fit::resume(&d, ck).unwrap().run().unwrap();
+    assert_eq!(full.result.w, resumed.result.w);
+}
+
+#[test]
+fn resume_under_subgrad_rel_keeps_the_reference() {
+    // The relative stop rule's reference point ‖∂F(w⁰)‖₁ is monitor state;
+    // the checkpoint must carry it or the resumed run would re-anchor at
+    // the (much smaller) mid-run subgradient and grind to max_outer.
+    let d = toy(61);
+    let rec = Arc::new(CheckpointRecorder::new(1));
+    let full = Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::SubgradRel(1e-4))
+        .max_outer(400)
+        .probe(ProbeHandle(rec.clone()))
+        .run()
+        .unwrap();
+    assert!(full.result.converged);
+    assert!(full.result.outer_iters > 2, "toy converged too fast to test");
+    let cut = full.result.outer_iters / 2;
+    let ck = rec.at_outer(cut).expect("mid-run checkpoint");
+    assert!(ck.init_subgrad.is_some(), "reference not checkpointed");
+    let resumed = Fit::resume(&d, ck).unwrap().run().unwrap();
+    assert!(resumed.result.converged);
+    assert_eq!(full.result.w, resumed.result.w);
+    assert_eq!(full.result.outer_iters, resumed.result.outer_iters);
+}
+
+#[test]
+fn checkpoint_file_roundtrip_through_writer() {
+    // The CLI flow: --checkpoint-every writes a file, --resume loads it.
+    let d = toy(62);
+    let dir = std::env::temp_dir().join("pcdn_api_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("writer.ckpt");
+    let full = Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::MaxOuter(7))
+        .max_outer(7)
+        .checkpoint_every(3, path.clone())
+        .run()
+        .unwrap();
+    let ck = Checkpoint::load(&path).expect("writer produced a checkpoint");
+    // The file holds the newest emitted resume point (outer 6: emission
+    // stops at the final boundary, which never emits).
+    assert_eq!(ck.outer, 6);
+    let resumed = Fit::resume(&d, ck).unwrap().run().unwrap();
+    assert_eq!(full.result.w, resumed.result.w);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_rejects_mismatches() {
+    let d = toy(63);
+    let rec = Arc::new(CheckpointRecorder::new(1));
+    Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::MaxOuter(4))
+        .max_outer(4)
+        .probe(ProbeHandle(rec.clone()))
+        .run()
+        .unwrap();
+    let ck = rec.at_outer(2).unwrap();
+
+    // Wrong dataset (same shape, different content).
+    let other = toy(64);
+    let err = Fit::resume(&other, ck.clone()).unwrap().run();
+    assert!(matches!(err, Err(FitError::Resume(_))), "got {err:?}");
+
+    // Wrong solver (override after resume prefill).
+    let err = Fit::resume(&d, ck.clone())
+        .unwrap()
+        .solver(Tron)
+        .run();
+    assert!(matches!(err, Err(FitError::Resume(_))), "got {err:?}");
+
+    // Wrong objective.
+    let err = Fit::resume(&d, ck)
+        .unwrap()
+        .objective(Objective::L2Svm)
+        .run();
+    assert!(matches!(err, Err(FitError::Resume(_))), "got {err:?}");
+}
+
+#[test]
+fn warm_start_remains_the_degenerate_resume() {
+    // A warm start from a checkpoint's model lands near the same optimum
+    // (that is all it promises) while a true resume is bitwise — both
+    // must converge under the same stop rule.
+    let d = toy(65);
+    let rec = Arc::new(CheckpointRecorder::new(1));
+    let full = Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::SubgradRel(1e-5))
+        .max_outer(600)
+        .probe(ProbeHandle(rec.clone()))
+        .run()
+        .unwrap();
+    assert!(full.result.converged);
+    let ck = rec.latest().unwrap();
+    let warm = Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::SubgradRel(1e-5))
+        .max_outer(600)
+        .warm_start(ck.w.clone())
+        .run()
+        .unwrap();
+    assert!(warm.result.converged);
+    let rel = (warm.result.final_objective - full.result.final_objective).abs()
+        / full.result.final_objective.abs().max(1.0);
+    assert!(rel < 1e-4, "warm start landed {rel} away");
+}
+
+// ---- Model artifact + serving --------------------------------------------
+
+#[test]
+fn model_save_load_predict_roundtrip() {
+    let d = toy(70);
+    let fitted = Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::SubgradRel(1e-4))
+        .run()
+        .unwrap();
+    let m = &fitted.model;
+
+    // Bitwise on w through both formats.
+    let bin = Model::from_bytes(&m.to_bytes()).unwrap();
+    let json =
+        Model::from_json(&pcdn::util::json::Json::parse(&m.to_json().pretty()).unwrap())
+            .unwrap();
+    for rt in [&bin, &json] {
+        assert_eq!(m.w.len(), rt.w.len());
+        for (a, b) in m.w.iter().zip(&rt.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(m.provenance, rt.provenance);
+    }
+
+    // Predict agrees with Dataset::accuracy exactly.
+    assert_eq!(bin.accuracy(&d), d.accuracy(&m.w));
+    let preds = bin.predict(&d.x);
+    let acc = preds.iter().zip(&d.y).filter(|(p, y)| *p == *y).count() as f64
+        / d.samples() as f64;
+    assert_eq!(acc, d.accuracy(&m.w));
+}
+
+#[test]
+fn pooled_predict_equals_serial_fold_bitwise() {
+    let d = toy(71);
+    let m = Fit::on(&d)
+        .solver(Cdn { shrinking: true })
+        .stop(StopRule::SubgradRel(1e-5))
+        .run()
+        .unwrap()
+        .model;
+    let serial = m.decision_values(&d.x);
+    for t in [2usize, 4, 9] {
+        let pooled = Scorer::new(m.clone()).threads(t).decision_values(&d.x);
+        for (a, b) in serial.iter().zip(&pooled) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads = {t}");
+        }
+    }
+}
+
+// ---- builder validation ---------------------------------------------------
+
+#[test]
+fn builder_rejects_invalid_configurations() {
+    let d = toy(72);
+    assert!(matches!(
+        Fit::on(&d).solver(Pcdn { p: 0 }).run(),
+        Err(FitError::InvalidParam(_))
+    ));
+    assert!(matches!(
+        Fit::on(&d)
+            .solver(Scdn {
+                p: 0,
+                atomic: false
+            })
+            .run(),
+        Err(FitError::InvalidParam(_))
+    ));
+    assert!(matches!(
+        Fit::on(&d).mask(vec![true; 7]).run(),
+        Err(FitError::MaskLength { got: 7, .. })
+    ));
+    assert!(Fit::on(&d).c(0.0).run().is_err());
+    assert!(Fit::on(&d).threads(0).run().is_err());
+    // Valid config still runs after all that rejection.
+    let ok = Fit::on(&d).solver(Pcdn { p: 4 }).max_outer(3).run();
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn typed_solver_configs_lower_correctly() {
+    let d = toy(73);
+    // Shrinking is a CDN field; bundle size a PCDN/SCDN field. The
+    // lowered options reflect exactly the typed selection.
+    let o = Fit::on(&d).solver(Cdn { shrinking: true }).options().unwrap();
+    assert!(o.shrinking);
+    let o = Fit::on(&d).solver(Pcdn { p: 17 }).options().unwrap();
+    assert_eq!(o.bundle_size, 17);
+    assert!(!o.shrinking);
+    let o = Fit::on(&d)
+        .solver(Scdn {
+            p: 5,
+            atomic: true,
+        })
+        .options()
+        .unwrap();
+    assert_eq!(o.bundle_size, 5);
+}

@@ -32,7 +32,7 @@ use pcdn::loss::Objective;
 use pcdn::oracle::invariant::InvariantSet;
 use pcdn::oracle::{dense, ista, kkt};
 use pcdn::solver::probe::ProbeHandle;
-use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, scdn::Scdn, Solver, StopRule, TrainOptions};
+use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, scdn::Scdn, Solver, StopRule};
 use pcdn::testutil::prop::{prop_assert, prop_close, run_prop, Gen};
 use pcdn::testutil::shrink::shrink_dataset;
 
@@ -104,14 +104,14 @@ fn minimized_report(
 /// CDN oracle, and report an objective identical (1e-9) to a from-scratch
 /// evaluation of the returned model.
 fn check_pcdn(d: &Dataset, cfg: CaseCfg) -> Result<(), String> {
-    let opts = TrainOptions {
-        c: cfg.c,
-        bundle_size: cfg.p,
-        n_threads: cfg.threads,
-        stop: StopRule::SubgradRel(1e-6),
-        max_outer: 5000,
-        ..Default::default()
-    };
+    let opts = pcdn::api::Fit::spec()
+        .c(cfg.c)
+        .solver(pcdn::api::Pcdn { p: cfg.p })
+        .threads(cfg.threads)
+        .stop(StopRule::SubgradRel(1e-6))
+        .max_outer(5000)
+        .options()
+        .expect("valid case options");
     let r = Pcdn::new().train(d, cfg.obj, &opts);
     prop_assert(
         r.converged,
@@ -151,14 +151,17 @@ fn pcdn_conforms_to_dense_oracle_and_kkt() {
 /// SCDN at safe parallelism (P̄ ≤ 2, uncorrelated features — well inside
 /// the `P̄ ≤ n/ρ(XᵀX) + 1` bound) must land on the same optimum.
 fn check_scdn(d: &Dataset, cfg: CaseCfg) -> Result<(), String> {
-    let opts = TrainOptions {
-        c: cfg.c,
-        bundle_size: cfg.p,
-        n_threads: cfg.threads,
-        stop: StopRule::SubgradRel(1e-6),
-        max_outer: 6000,
-        ..Default::default()
-    };
+    let opts = pcdn::api::Fit::spec()
+        .c(cfg.c)
+        .solver(pcdn::api::Scdn {
+            p: cfg.p,
+            atomic: false,
+        })
+        .threads(cfg.threads)
+        .stop(StopRule::SubgradRel(1e-6))
+        .max_outer(6000)
+        .options()
+        .expect("valid case options");
     let r = Scdn::new().train(d, cfg.obj, &opts);
     prop_assert(
         r.converged,
@@ -195,14 +198,14 @@ fn scdn_conforms_at_safe_parallelism() {
 /// its final objective upper-bounds `F*`; a converged PCDN must sit at or
 /// below it and within tolerance once both report KKT at target.
 fn check_ista(d: &Dataset, cfg: CaseCfg) -> Result<(), String> {
-    let opts = TrainOptions {
-        c: cfg.c,
-        bundle_size: cfg.p,
-        n_threads: cfg.threads,
-        stop: StopRule::SubgradRel(1e-6),
-        max_outer: 5000,
-        ..Default::default()
-    };
+    let opts = pcdn::api::Fit::spec()
+        .c(cfg.c)
+        .solver(pcdn::api::Pcdn { p: cfg.p })
+        .threads(cfg.threads)
+        .stop(StopRule::SubgradRel(1e-6))
+        .max_outer(5000)
+        .options()
+        .expect("valid case options");
     let r = Pcdn::new().train(d, cfg.obj, &opts);
     prop_assert(r.converged, &format!("PCDN {cfg:?} did not converge"))?;
     let prox = ista::ista(d, cfg.obj, cfg.c, 0.0, 1e-4, 50_000);
@@ -246,15 +249,15 @@ fn pcdn_agrees_with_proximal_gradient_oracle() {
 /// thread count and bundle size.
 fn check_invariants(d: &Dataset, cfg: CaseCfg) -> Result<(), String> {
     let set = Arc::new(InvariantSet::standard(0.01, 0.0));
-    let opts = TrainOptions {
-        c: cfg.c,
-        bundle_size: cfg.p,
-        n_threads: cfg.threads,
-        stop: StopRule::SubgradRel(1e-4),
-        max_outer: 1500,
-        probe: Some(ProbeHandle(set.clone())),
-        ..Default::default()
-    };
+    let opts = pcdn::api::Fit::spec()
+        .c(cfg.c)
+        .solver(pcdn::api::Pcdn { p: cfg.p })
+        .threads(cfg.threads)
+        .stop(StopRule::SubgradRel(1e-4))
+        .max_outer(1500)
+        .probe(ProbeHandle(set.clone()))
+        .options()
+        .expect("valid case options");
     let _ = Pcdn::new().train(d, cfg.obj, &opts);
     let v = set.violations();
     prop_assert(
@@ -284,14 +287,14 @@ fn cdn_shrinking_trajectories_conform() {
         let c = g.f64_in(0.1..2.0);
         let shrinking = g.bool();
         let set = Arc::new(InvariantSet::standard(0.01, 0.0));
-        let opts = TrainOptions {
-            c,
-            shrinking,
-            stop: StopRule::SubgradRel(1e-5),
-            max_outer: 4000,
-            probe: Some(ProbeHandle(set.clone())),
-            ..Default::default()
-        };
+        let opts = pcdn::api::Fit::spec()
+            .c(c)
+            .solver(pcdn::api::Cdn { shrinking })
+            .stop(StopRule::SubgradRel(1e-5))
+            .max_outer(4000)
+            .probe(ProbeHandle(set.clone()))
+            .options()
+            .expect("valid case options");
         let r = Cdn::new().train(&d, obj, &opts);
         let v = set.violations();
         prop_assert(
@@ -327,14 +330,14 @@ fn all_four_solvers_emit_probed_trajectories() {
     ];
     for (solver, kind) in solvers {
         let rec = Arc::new(TrajectoryRecorder::new());
-        let opts = TrainOptions {
-            c: 1.0,
-            bundle_size: 4,
-            stop: StopRule::MaxOuter(3),
-            max_outer: 3,
-            probe: Some(ProbeHandle(rec.clone())),
-            ..Default::default()
-        };
+        let opts = pcdn::api::Fit::spec()
+            .c(1.0)
+            .solver(pcdn::api::Pcdn { p: 4 })
+            .stop(StopRule::MaxOuter(3))
+            .max_outer(3)
+            .probe(ProbeHandle(rec.clone()))
+            .options()
+            .expect("valid case options");
         let r = solver.train(&d, Objective::Logistic, &opts);
         let outers = rec.outers.lock().unwrap();
         assert!(
@@ -372,14 +375,14 @@ fn check_distributed_single_machine(d: &Dataset, obj: Objective, c: f64) -> Resu
     let opts = DistributedOptions {
         machines: 1,
         rounds: 1,
-        local: TrainOptions {
-            c,
-            bundle_size: 8,
-            stop: StopRule::SubgradRel(1e-6),
-            max_outer: 5000,
-            probe: Some(ProbeHandle(set.clone())),
-            ..Default::default()
-        },
+        local: pcdn::api::Fit::spec()
+            .c(c)
+            .solver(pcdn::api::Pcdn { p: 8 })
+            .stop(StopRule::SubgradRel(1e-6))
+            .max_outer(5000)
+            .probe(ProbeHandle(set.clone()))
+            .options()
+            .expect("valid case options"),
         seed: 1,
     };
     let r = train_distributed(d, obj, &opts);
@@ -438,14 +441,14 @@ fn check_distributed_mixing(
     let opts = DistributedOptions {
         machines,
         rounds,
-        local: TrainOptions {
-            c,
-            bundle_size: 8,
-            stop: StopRule::MaxOuter(3),
-            max_outer: 3,
-            probe: Some(ProbeHandle(set.clone())),
-            ..Default::default()
-        },
+        local: pcdn::api::Fit::spec()
+            .c(c)
+            .solver(pcdn::api::Pcdn { p: 8 })
+            .stop(StopRule::MaxOuter(3))
+            .max_outer(3)
+            .probe(ProbeHandle(set.clone()))
+            .options()
+            .expect("valid case options"),
         seed: 2,
     };
     let r = train_distributed(d, obj, &opts);
@@ -565,14 +568,14 @@ fn pjrt_dense_trainer_conforms_when_artifacts_present() {
         (Objective::L2Svm, 0.5),
     ] {
         let rec = Arc::new(TrajectoryRecorder::new());
-        let opts = TrainOptions {
-            c,
-            bundle_size: 16,
-            stop: StopRule::SubgradRel(1e-3),
-            max_outer: 300,
-            probe: Some(ProbeHandle(rec.clone())),
-            ..Default::default()
-        };
+        let opts = pcdn::api::Fit::spec()
+            .c(c)
+            .solver(pcdn::api::Pcdn { p: 16 })
+            .stop(StopRule::SubgradRel(1e-3))
+            .max_outer(300)
+            .probe(ProbeHandle(rec.clone()))
+            .options()
+            .expect("valid case options");
         let r = train_dense_pjrt(&rt, &d, obj, &opts).expect("PJRT path failed");
         assert!(r.converged, "{obj:?} c={c}: PJRT trainer did not converge");
         // Oracle agreement at the documented f32 tolerance.
@@ -620,14 +623,14 @@ fn scdn_atomic_emits_outer_probes() {
         12,
     );
     let rec = Arc::new(TrajectoryRecorder::new());
-    let opts = TrainOptions {
-        c: 1.0,
-        bundle_size: 2,
-        stop: StopRule::SubgradRel(1e-3),
-        max_outer: 50,
-        probe: Some(ProbeHandle(rec.clone())),
-        ..Default::default()
-    };
+    let opts = pcdn::api::Fit::spec()
+        .c(1.0)
+        .solver(pcdn::api::Scdn { p: 2, atomic: true })
+        .stop(StopRule::SubgradRel(1e-3))
+        .max_outer(50)
+        .probe(ProbeHandle(rec.clone()))
+        .options()
+        .expect("valid case options");
     let r = Scdn::atomic().train(&d, Objective::Logistic, &opts);
     let outers = rec.outers.lock().unwrap();
     assert_eq!(outers.len(), r.outer_iters);

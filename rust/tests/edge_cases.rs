@@ -10,13 +10,13 @@ use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, tron::Tron, Solver, StopRule, TrainOpti
 const ALL_LOSSES: [Objective; 3] = [Objective::Logistic, Objective::L2Svm, Objective::Lasso];
 
 fn opts() -> TrainOptions {
-    TrainOptions {
-        c: 1.0,
-        bundle_size: 4,
-        stop: StopRule::SubgradRel(1e-4),
-        max_outer: 200,
-        ..TrainOptions::default()
-    }
+    pcdn::api::Fit::spec()
+        .c(1.0)
+        .solver(pcdn::api::Pcdn { p: 4 })
+        .stop(StopRule::SubgradRel(1e-4))
+        .max_outer(200)
+        .options()
+        .expect("valid options")
 }
 
 /// One sample, one feature — the smallest possible problem.
@@ -187,13 +187,12 @@ fn shrinking_with_relfuncdiff_stop() {
         .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
         .collect();
     let d = Dataset::new("shr", x, y);
-    let fstar = Cdn::new()
-        .train(&d, Objective::Logistic, &TrainOptions {
-            stop: StopRule::SubgradRel(1e-8),
-            max_outer: 3000,
-            ..opts()
-        })
-        .final_objective;
+    let oref = TrainOptions {
+        stop: StopRule::SubgradRel(1e-8),
+        max_outer: 3000,
+        ..opts()
+    };
+    let fstar = Cdn::new().train(&d, Objective::Logistic, &oref).final_objective;
     let mut o = opts();
     o.shrinking = true;
     o.stop = StopRule::RelFuncDiff { fstar, eps: 1e-4 };

@@ -37,13 +37,13 @@ fn dense_regression(seed: u64) -> Dataset {
 }
 
 fn tight() -> TrainOptions {
-    TrainOptions {
-        c: 1.0,
-        bundle_size: 8,
-        stop: StopRule::SubgradRel(1e-7),
-        max_outer: 3000,
-        ..TrainOptions::default()
-    }
+    pcdn::api::Fit::spec()
+        .c(1.0)
+        .solver(pcdn::api::Pcdn { p: 8 })
+        .stop(StopRule::SubgradRel(1e-7))
+        .max_outer(3000)
+        .options()
+        .expect("valid options")
 }
 
 /// Closed-form check: on an orthogonal design, minimizing

@@ -27,13 +27,13 @@ fn problem(seed: u64) -> Dataset {
 }
 
 fn tight(c: f64) -> TrainOptions {
-    TrainOptions {
-        c,
-        bundle_size: 16,
-        stop: StopRule::SubgradRel(1e-6),
-        max_outer: 3000,
-        ..TrainOptions::default()
-    }
+    pcdn::api::Fit::spec()
+        .c(c)
+        .solver(pcdn::api::Pcdn { p: 16 })
+        .stop(StopRule::SubgradRel(1e-6))
+        .max_outer(3000)
+        .options()
+        .expect("valid options")
 }
 
 /// Every solver in the family must land on the same optimum of the same
@@ -153,13 +153,13 @@ fn trained_model_generalizes() {
     let a = registry::by_name("real-sim").unwrap();
     let train = a.train();
     let test = a.test();
-    let o = TrainOptions {
-        c: a.c_logistic,
-        bundle_size: 64,
-        stop: StopRule::SubgradRel(1e-4),
-        max_outer: 300,
-        ..TrainOptions::default()
-    };
+    let o = pcdn::api::Fit::spec()
+        .c(a.c_logistic)
+        .solver(pcdn::api::Pcdn { p: 64 })
+        .stop(StopRule::SubgradRel(1e-4))
+        .max_outer(300)
+        .options()
+        .expect("valid options");
     let r = Pcdn::new().train(&train, Objective::Logistic, &o);
     let acc = test.accuracy(&r.w);
     assert!(acc > 0.75, "test accuracy only {acc}");
@@ -232,13 +232,13 @@ fn t_eps_decreases_with_bundle_size() {
         .train(&d, Objective::Logistic, &oref)
         .final_objective;
     let run = |p: usize| {
-        let o = TrainOptions {
-            c: 1.0,
-            bundle_size: p,
-            stop: StopRule::RelFuncDiff { fstar, eps: 1e-3 },
-            max_outer: 3000,
-            ..TrainOptions::default()
-        };
+        let o = pcdn::api::Fit::spec()
+            .c(1.0)
+            .solver(pcdn::api::Pcdn { p })
+            .stop(StopRule::RelFuncDiff { fstar, eps: 1e-3 })
+            .max_outer(3000)
+            .options()
+            .expect("valid options");
         Pcdn::new().train(&d, Objective::Logistic, &o).inner_iters
     };
     let t1 = run(1);

@@ -20,9 +20,7 @@ use pcdn::oracle::kkt;
 use pcdn::parallel::pool::WorkerPool;
 use pcdn::path::{fit_path, fit_path_on_grid, lambda_max, Grid, PathOptions};
 use pcdn::solver::probe::ProbeHandle;
-use pcdn::solver::{
-    cdn::Cdn, pcdn::Pcdn, scdn::Scdn, tron::Tron, Solver, StopRule, TrainOptions,
-};
+use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, scdn::Scdn, tron::Tron, Solver, StopRule};
 use pcdn::testutil::prop::{prop_assert, run_prop, Gen};
 
 fn pick_obj(g: &mut Gen) -> Objective {
@@ -50,11 +48,11 @@ fn gen_dataset(g: &mut Gen) -> Dataset {
 
 fn quick_path_opts() -> PathOptions {
     PathOptions {
-        train: TrainOptions {
-            bundle_size: 8,
-            max_outer: 5000,
-            ..TrainOptions::default()
-        },
+        train: pcdn::api::Fit::spec()
+            .solver(pcdn::api::Pcdn { p: 8 })
+            .max_outer(5000)
+            .options()
+            .expect("valid options"),
         ..PathOptions::default()
     }
 }
@@ -290,12 +288,13 @@ fn feature_mask_equals_column_submatrix_training() {
         d.y.clone(),
     );
 
-    let base = TrainOptions {
-        c: 1.0,
-        stop: StopRule::SubgradRel(1e-7),
-        max_outer: 3000,
-        ..Default::default()
-    };
+    let base = pcdn::api::Fit::spec()
+        .c(1.0)
+        .solver(pcdn::api::Pcdn { p: 64 })
+        .stop(StopRule::SubgradRel(1e-7))
+        .max_outer(3000)
+        .options()
+        .expect("valid options");
     let mut masked = base.clone();
     masked.feature_mask = Some(Arc::new(keep.clone()));
     let mut masked_shrink = masked.clone();
@@ -343,16 +342,16 @@ fn all_solvers_honor_the_feature_mask() {
     );
     let n = d.features();
     let keep: Vec<bool> = (0..n).map(|j| j % 2 == 0).collect();
-    let opts = TrainOptions {
-        c: 1.0,
-        // P̄ = 2 keeps SCDN safely inside its parallelism bound; PCDN is
-        // convergent at any P and TRON ignores the field.
-        bundle_size: 2,
-        stop: StopRule::SubgradRel(1e-4),
-        max_outer: 800,
-        feature_mask: Some(Arc::new(keep.clone())),
-        ..Default::default()
-    };
+    // P̄ = 2 keeps SCDN safely inside its parallelism bound; PCDN is
+    // convergent at any P and TRON ignores the field.
+    let opts = pcdn::api::Fit::spec()
+        .c(1.0)
+        .solver(pcdn::api::Scdn { p: 2, atomic: false })
+        .stop(StopRule::SubgradRel(1e-4))
+        .max_outer(800)
+        .mask_arc(Arc::new(keep.clone()))
+        .options()
+        .expect("valid options");
     let solvers: Vec<Box<dyn Solver>> = vec![
         Box::new(Pcdn::new()),
         Box::new(Cdn::new()),

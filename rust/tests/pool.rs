@@ -9,7 +9,7 @@ use pcdn::data::synthetic::{generate, SyntheticSpec};
 use pcdn::data::Dataset;
 use pcdn::loss::Objective;
 use pcdn::parallel::pool::{ThreadPool, WorkerPool};
-use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, Solver, StopRule, TrainOptions};
+use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, Solver, StopRule};
 
 fn toy(seed: u64) -> Dataset {
     generate(
@@ -117,14 +117,14 @@ fn reduce_is_pool_size_independent() {
 #[test]
 fn pcdn_p1_trajectory_matches_cdn() {
     let d = toy(21);
-    let opts = TrainOptions {
-        c: 1.0,
-        bundle_size: 1,
-        stop: StopRule::MaxOuter(12),
-        max_outer: 12,
-        trace_every: 1,
-        ..TrainOptions::default()
-    };
+    let opts = pcdn::api::Fit::spec()
+        .c(1.0)
+        .solver(pcdn::api::Pcdn { p: 1 })
+        .stop(StopRule::MaxOuter(12))
+        .max_outer(12)
+        .trace_every(1)
+        .options()
+        .expect("valid options");
     let rp = Pcdn::new().train(&d, Objective::Logistic, &opts);
     let rc = Cdn::new().train(&d, Objective::Logistic, &opts);
     assert_eq!(rp.outer_iters, rc.outer_iters);
@@ -150,13 +150,13 @@ fn pcdn_p1_trajectory_matches_cdn() {
 #[test]
 fn pcdn_p1_invariant_to_pool() {
     let d = toy(22);
-    let serial = TrainOptions {
-        c: 1.0,
-        bundle_size: 1,
-        stop: StopRule::SubgradRel(1e-4),
-        max_outer: 200,
-        ..TrainOptions::default()
-    };
+    let serial = pcdn::api::Fit::spec()
+        .c(1.0)
+        .solver(pcdn::api::Pcdn { p: 1 })
+        .stop(StopRule::SubgradRel(1e-4))
+        .max_outer(200)
+        .options()
+        .expect("valid options");
     let mut pooled = serial.clone();
     pooled.n_threads = 4;
     pooled.pool = Some(WorkerPool::new(2));
@@ -172,13 +172,13 @@ fn pcdn_p1_invariant_to_pool() {
 #[test]
 fn pooled_pcdn_bitwise_deterministic() {
     let d = toy(23);
-    let mut opts = TrainOptions {
-        c: 1.0,
-        bundle_size: 16,
-        stop: StopRule::SubgradRel(1e-4),
-        max_outer: 300,
-        ..TrainOptions::default()
-    };
+    let mut opts = pcdn::api::Fit::spec()
+        .c(1.0)
+        .solver(pcdn::api::Pcdn { p: 16 })
+        .stop(StopRule::SubgradRel(1e-4))
+        .max_outer(300)
+        .options()
+        .expect("valid options");
     opts.n_threads = 3;
     let r1 = Pcdn::new().train(&d, Objective::Logistic, &opts);
     // Same requested degree on a differently sized dedicated team.
