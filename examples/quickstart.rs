@@ -9,6 +9,7 @@
 use pcdn::api::{Fit, Model, Pcdn, Scorer};
 use pcdn::data::registry;
 use pcdn::solver::StopRule;
+use std::sync::Arc;
 
 fn main() {
     // 1. Get a dataset. The registry ships seeded synthetic analogs of the
@@ -51,7 +52,7 @@ fn main() {
     // 3. The fit is a first-class artifact: save, reload, audit.
     let path = std::env::temp_dir().join("quickstart_a9a.model");
     fitted.model.save(&path).expect("save model");
-    let model = Model::load(&path).expect("load model");
+    let model = Arc::new(Model::load(&path).expect("load model"));
     println!(
         "reloaded model: trained by {} on '{}' ({})",
         model.provenance.solver,
@@ -60,8 +61,19 @@ fn main() {
     );
 
     // 4. Serve: batched pooled scoring, bitwise equal to the serial fold.
-    let scorer = Scorer::new(model).threads(4);
-    println!("train accuracy = {:.4}", scorer.accuracy(&train));
-    println!("test  accuracy = {:.4}", scorer.accuracy(&test));
+    //    The builder shares the model by `Arc` — any number of scorers
+    //    (and the `pcdn serve` daemon) reference one copy of the weights.
+    let scorer = Scorer::for_model(&model)
+        .threads(4)
+        .build()
+        .expect("valid scorer configuration");
+    println!(
+        "train accuracy = {:.4}",
+        scorer.accuracy(&train).expect("width matches")
+    );
+    println!(
+        "test  accuracy = {:.4}",
+        scorer.accuracy(&test).expect("width matches")
+    );
     std::fs::remove_file(&path).ok();
 }

@@ -14,7 +14,7 @@
 //! cargo run --release --example serve_predict
 //! ```
 
-use pcdn::api::{CheckpointRecorder, Fit, Model, Pcdn, Scorer};
+use pcdn::api::{CheckpointRecorder, Fit, Model, ModelRegistry, Pcdn, Scorer};
 use pcdn::data::registry;
 use pcdn::solver::{ProbeHandle, StopRule};
 use std::sync::Arc;
@@ -64,7 +64,7 @@ fn main() {
     let json = dir.join("serve_predict.json");
     fitted.model.save(&bin).expect("save binary");
     fitted.model.save(&json).expect("save json");
-    let model = Model::load(&bin).expect("load binary");
+    let model = Arc::new(Model::load(&bin).expect("load binary"));
     assert_eq!(model.w, Model::load(&json).expect("load json").w);
     println!(
         "artifact round-trip (binary + JSON) ✓ — provenance: {} on '{}', seed {}, {}",
@@ -75,9 +75,14 @@ fn main() {
     );
 
     // --- 4. serving ------------------------------------------------------
+    // Scorers are built from a shared `Arc<Model>`; any number of them
+    // (and the `pcdn serve` daemon) reference one copy of the weights.
     let serial = model.decision_values(&test.x);
-    let scorer = Scorer::new(model).threads(8);
-    let pooled = scorer.decision_values(&test.x);
+    let scorer = Scorer::for_model(&model)
+        .threads(8)
+        .build()
+        .expect("valid scorer configuration");
+    let pooled = scorer.decision_values(&test.x).expect("width matches");
     assert!(
         serial
             .iter()
@@ -89,15 +94,33 @@ fn main() {
         "pooled batch scoring over {} samples: bitwise equal to serial ✓",
         test.samples()
     );
-    println!("test accuracy = {:.4}", scorer.accuracy(&test));
+    println!(
+        "test accuracy = {:.4}",
+        scorer.accuracy(&test).expect("width matches")
+    );
 
-    // Single-request path: score one sparse sample.
+    // Single-request path: score one sparse sample (typed errors, no
+    // panics — the same path the daemon's line protocol takes).
     let csr = test.x.to_csr();
     let (idx, vals) = csr.row(0);
+    let z0 = scorer.score_sample(idx, vals).expect("row fits the model");
     println!(
-        "sample 0: decision value {:+.4} → predicted label {:+}",
-        scorer.model().score_sample(idx, vals),
-        if scorer.model().score_sample(idx, vals) < 0.0 { -1 } else { 1 }
+        "sample 0: decision value {z0:+.4} → predicted label {:+}",
+        if z0 < 0.0 { -1 } else { 1 }
+    );
+
+    // --- 5. hot-swap registry -------------------------------------------
+    // The daemon's model pointer: versioned, swapped atomically, shared
+    // with every in-flight scorer by `Arc` (old versions finish their
+    // batches on the old weights; new batches see the new version).
+    let reg = ModelRegistry::from_path(&bin).expect("registry from artifact");
+    let v1 = reg.current();
+    let swapped_version = reg.swap(Arc::clone(&model));
+    println!(
+        "registry: v{} -> v{swapped_version} swapped atomically ✓ \
+         (old version still scores: {:+.4})",
+        v1.version,
+        v1.model.score_sample(idx, vals)
     );
 
     std::fs::remove_file(&bin).ok();

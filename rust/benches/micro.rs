@@ -118,6 +118,10 @@ fn main() {
         bench_path(n_threads, &pool);
         return;
     }
+    if std::env::var("PCDN_BENCH").as_deref() == Ok("serve") {
+        bench_serve(n_threads);
+        return;
+    }
     let d = realsim_like();
     let nnz = d.x.nnz();
     println!(
@@ -558,5 +562,111 @@ fn bench_epilogue(n_threads: usize, pool: &WorkerPool) {
     match std::fs::write("BENCH_epilogue.json", doc.pretty()) {
         Ok(()) => println!("wrote BENCH_epilogue.json"),
         Err(e) => println!("could not write BENCH_epilogue.json: {e}"),
+    }
+}
+/// Serving latency and throughput: a live daemon on a loopback port,
+/// N clients issuing single-sample requests over persistent
+/// line-protocol connections (the wire path `pcdn serve` exposes for
+/// benchmarking). Emits BENCH_serve.json — p50/p99 per-request latency
+/// plus aggregate throughput — which `bench_check --serve` gates in CI;
+/// `PCDN_BENCH=serve` runs just this section.
+fn bench_serve(n_threads: usize) {
+    use pcdn::serve::{protocol, ModelRegistry, ServeOptions, Server};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+
+    println!();
+    let width = 512usize;
+    let model = Arc::new(pcdn::testutil::tiny_model(width));
+    let registry = Arc::new(ModelRegistry::new(model));
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        threads: n_threads,
+        ..ServeOptions::default()
+    };
+    let server = Server::bind(registry, opts).expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    let clients = 4usize;
+    let warmup = 100usize;
+    let requests = 1500usize;
+    println!(
+        "serve bench: {clients} clients x {requests} line-protocol requests \
+         against {addr} ({n_threads} scoring threads, {width} features)"
+    );
+
+    let wall = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(&addr).expect("connect to daemon");
+                stream.set_nodelay(true).ok();
+                let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+                let mut writer = stream;
+                // A small rotation of sparse rows unique to this client.
+                let lines: Vec<String> = (0..8)
+                    .map(|i| {
+                        let terms: Vec<String> = (0..5)
+                            .map(|t| {
+                                let j = (c * 97 + i * 31 + t * 13) % width;
+                                format!("{j}:{:.3}", 0.25 + (i + t) as f64 / 7.0)
+                            })
+                            .collect();
+                        format!("score {}\n", terms.join(" "))
+                    })
+                    .collect();
+                let mut lat = Vec::with_capacity(requests);
+                for r in 0..warmup + requests {
+                    let line = &lines[r % lines.len()];
+                    let t0 = std::time::Instant::now();
+                    writer.write_all(line.as_bytes()).expect("send request");
+                    writer.flush().expect("flush request");
+                    let mut reply = String::new();
+                    reader.read_line(&mut reply).expect("read reply");
+                    let dt = t0.elapsed().as_secs_f64();
+                    let (_, z) = protocol::parse_line_response(reply.trim()).expect("ok reply");
+                    black_box(z);
+                    if r >= warmup {
+                        lat.push(dt);
+                    }
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().expect("client thread"))
+        .collect();
+    let total_secs = wall.elapsed().as_secs_f64();
+    server.shutdown();
+
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| lat[((lat.len() - 1) as f64 * q).round() as usize];
+    let (p50, p99) = (pct(0.50), pct(0.99));
+    let timed = lat.len();
+    let throughput = (clients * (warmup + requests)) as f64 / total_secs;
+    println!(
+        "serve latency  p50 {:>10}  p99 {:>10}  throughput {throughput:>8.0} req/s \
+         ({timed} timed requests in {})",
+        fmt_secs(p50),
+        fmt_secs(p99),
+        fmt_secs(total_secs)
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("serve".into())),
+        ("threads", Json::Num(n_threads as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("features", Json::Num(width as f64)),
+        ("requests", Json::Num(timed as f64)),
+        ("p50_secs", Json::Num(p50)),
+        ("p99_secs", Json::Num(p99)),
+        ("throughput_rps", Json::Num(throughput)),
+    ]);
+    match std::fs::write("BENCH_serve.json", doc.pretty()) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => println!("could not write BENCH_serve.json: {e}"),
     }
 }

@@ -14,10 +14,14 @@
 //! * [`Model`] — the first-class artifact a fit produces: weights +
 //!   objective + provenance, versioned save/load (JSON and bit-exact
 //!   binary), serial and single-sample scoring.
-//! * [`Scorer`] — serving-grade batched prediction: decision values over
-//!   sparse minibatches sharded across the persistent
+//! * [`Scorer`] — serving-grade batched prediction, built through the
+//!   typed [`ScorerBuilder`] (`Scorer::for_model(&model)`): decision
+//!   values over sparse minibatches sharded across the persistent
 //!   [`WorkerPool`](crate::parallel::pool::WorkerPool), bitwise equal to
-//!   the serial fold.
+//!   the serial fold. Weights are shared via `Arc<Model>`, and every
+//!   malformed input is a typed [`ScoreError`] instead of a panic. The
+//!   daemon side of serving (HTTP front end, hot-swap registry,
+//!   coalescer) lives in [`crate::serve`] and re-exports here.
 //! * [`Checkpoint`] — interrupt/resume for long fits: `Fit::resume`
 //!   continues a checkpointed run **bitwise identically** to one that
 //!   never stopped ([`crate::solver::checkpoint`] has the contract).
@@ -41,9 +45,9 @@
 //! fitted.model.save(std::path::Path::new("model.bin"))?;
 //!
 //! // … and serve it.
-//! let model = Model::load(std::path::Path::new("model.bin"))?;
-//! let scorer = Scorer::new(model).threads(8);
-//! println!("accuracy {:.4}", scorer.accuracy(&data));
+//! let model = std::sync::Arc::new(Model::load(std::path::Path::new("model.bin"))?);
+//! let scorer = Scorer::for_model(&model).threads(8).build()?;
+//! println!("accuracy {:.4}", scorer.accuracy(&data)?);
 //! # Ok(())
 //! # }
 //! ```
@@ -52,9 +56,10 @@ pub mod fit;
 pub mod model;
 
 pub use crate::loss::Objective;
-pub use crate::solver::checkpoint::{
-    Checkpoint, CheckpointRecorder, CheckpointWriter,
+pub use crate::serve::{
+    Admission, Coalescer, ModelRegistry, ModelVersion, ServeError, ServeOptions, Server,
 };
+pub use crate::solver::checkpoint::{Checkpoint, CheckpointRecorder, CheckpointWriter};
 pub use crate::solver::{ArmijoParams, StopRule, TrainResult};
 pub use fit::{Cdn, Fit, FitError, Pcdn, Scdn, SolverSel, Tron};
-pub use model::{Fitted, Model, Provenance, Scorer};
+pub use model::{Fitted, Model, ModelLoadError, Provenance, ScoreError, Scorer, ScorerBuilder};

@@ -14,13 +14,20 @@
 //! [`Model::save`]/[`Model::load`] pick by content: load sniffs the magic,
 //! save writes JSON iff the path ends in `.json`.
 //!
-//! Serving goes through [`Scorer`]: batched decision values over sparse
-//! minibatches, sharded across a [`WorkerPool`] by the same fixed
-//! [`SampleRanges`] partition the trainers use — and, like them, bitwise
-//! equal to the serial fold at any pool width (each sample's accumulation
-//! order is ascending feature order in both paths).
+//! Serving goes through [`Scorer`], built with the typed
+//! [`ScorerBuilder`] (`Scorer::for_model(&model).threads(8).build()?`):
+//! batched decision values over sparse minibatches, sharded across a
+//! [`WorkerPool`] by the same fixed [`SampleRanges`] partition the
+//! trainers use — and, like them, bitwise equal to the serial fold at
+//! any pool width (each sample's accumulation order is ascending feature
+//! order in both paths). Scorers share weights through `Arc<Model>`
+//! (no per-scorer copy of `w`) and return typed [`ScoreError`]s instead
+//! of panicking; [`Model::load`] likewise reports a typed
+//! [`ModelLoadError`] (truncated file, bad magic, version skew).
 
+use std::fmt;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::data::{CscMat, Dataset};
 use crate::loss::Objective;
@@ -67,6 +74,66 @@ pub struct Model {
 pub struct Fitted {
     pub model: Model,
     pub result: TrainResult,
+}
+
+/// Why a model artifact failed to load. Each variant carries a
+/// human-readable detail string (already prefixed with the offending
+/// path when the failure came through [`Model::load`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModelLoadError {
+    /// The file could not be read at all.
+    Io(String),
+    /// The content matches neither the `PCDNMDL1` magic nor UTF-8 JSON,
+    /// or claims to be JSON but is not a `pcdn-model` document.
+    BadMagic(String),
+    /// The input ended mid-field, or a length prefix overruns it.
+    Truncated(String),
+    /// The magic is right but the format version is newer than this
+    /// reader (or zero).
+    VersionSkew(String),
+    /// Structurally decodable but semantically invalid: bad objective
+    /// tag, malformed JSON field, trailing bytes after the document.
+    Malformed(String),
+}
+
+impl fmt::Display for ModelLoadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelLoadError::Io(d) => write!(f, "cannot read model: {d}"),
+            ModelLoadError::BadMagic(d) => write!(f, "not a pcdn model: {d}"),
+            ModelLoadError::Truncated(d) => write!(f, "truncated model: {d}"),
+            ModelLoadError::VersionSkew(d) => write!(f, "model version skew: {d}"),
+            ModelLoadError::Malformed(d) => write!(f, "malformed model: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelLoadError {}
+
+impl ModelLoadError {
+    /// Prefix the detail string with the file path it came from.
+    fn at(self, path: &Path) -> ModelLoadError {
+        let tag = |d: String| format!("{}: {d}", path.display());
+        match self {
+            ModelLoadError::Io(d) => ModelLoadError::Io(tag(d)),
+            ModelLoadError::BadMagic(d) => ModelLoadError::BadMagic(tag(d)),
+            ModelLoadError::Truncated(d) => ModelLoadError::Truncated(tag(d)),
+            ModelLoadError::VersionSkew(d) => ModelLoadError::VersionSkew(tag(d)),
+            ModelLoadError::Malformed(d) => ModelLoadError::Malformed(tag(d)),
+        }
+    }
+}
+
+/// Classify a codec error from the model decoder: length overruns and
+/// short reads are [`ModelLoadError::Truncated`]; anything else decoded
+/// but carried an invalid value.
+fn classify_codec(e: crate::util::codec::CodecError) -> ModelLoadError {
+    let rendered = e.to_string();
+    if e.msg.starts_with("truncated input") || e.msg.starts_with("length prefix") {
+        ModelLoadError::Truncated(rendered)
+    } else {
+        ModelLoadError::Malformed(rendered)
+    }
 }
 
 /// Render a stop rule for provenance.
@@ -293,11 +360,32 @@ impl Model {
         w.into_bytes()
     }
 
-    pub fn from_bytes(bytes: &[u8]) -> Result<Model, String> {
+    pub fn from_bytes(bytes: &[u8]) -> Result<Model, ModelLoadError> {
+        // Classify the header by hand so magic / version / truncation
+        // failures surface as distinct [`ModelLoadError`] variants.
+        if bytes.len() >= 8 && !bytes.starts_with(MAGIC) {
+            return Err(ModelLoadError::BadMagic(format!(
+                "leading bytes {:?} are not {:?}",
+                String::from_utf8_lossy(&bytes[..8]),
+                String::from_utf8_lossy(MAGIC)
+            )));
+        }
+        if bytes.len() < 12 {
+            return Err(ModelLoadError::Truncated(format!(
+                "{} bytes is shorter than the 12 byte header",
+                bytes.len()
+            )));
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version == 0 || version > VERSION {
+            return Err(ModelLoadError::VersionSkew(format!(
+                "format version {version} (reader supports 1..={VERSION})"
+            )));
+        }
         let (mut r, _version) =
-            ByteReader::open(bytes, MAGIC, VERSION).map_err(|e| e.to_string())?;
-        let model = decode_model(&mut r).map_err(|e| e.to_string())?;
-        r.finish().map_err(|e| e.to_string())?;
+            ByteReader::open(bytes, MAGIC, VERSION).map_err(classify_codec)?;
+        let model = decode_model(&mut r).map_err(classify_codec)?;
+        r.finish().map_err(classify_codec)?;
         Ok(model)
     }
 
@@ -318,17 +406,29 @@ impl Model {
         std::fs::rename(&tmp, path)
     }
 
-    /// Load either format (sniffs the binary magic).
-    pub fn load(path: &Path) -> Result<Model, String> {
-        let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    /// Load either format (sniffs the binary magic). Every failure is a
+    /// typed [`ModelLoadError`] whose detail string names the path.
+    pub fn load(path: &Path) -> Result<Model, ModelLoadError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| ModelLoadError::Io(e.to_string()).at(path))?;
         if bytes.starts_with(MAGIC) {
-            Model::from_bytes(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+            Model::from_bytes(&bytes).map_err(|e| e.at(path))
         } else {
-            let text = std::str::from_utf8(&bytes)
-                .map_err(|_| format!("{}: neither binary model nor UTF-8", path.display()))?;
-            let doc =
-                Json::parse(text).map_err(|e| format!("{}: {e}", path.display()))?;
-            Model::from_json(&doc).map_err(|e| format!("{}: {e}", path.display()))
+            let text = std::str::from_utf8(&bytes).map_err(|_| {
+                ModelLoadError::BadMagic("neither binary model nor UTF-8".into()).at(path)
+            })?;
+            let doc = Json::parse(text)
+                .map_err(|e| ModelLoadError::Malformed(e.to_string()).at(path))?;
+            Model::from_json(&doc).map_err(|e| {
+                let typed = if e.starts_with("unsupported model version") {
+                    ModelLoadError::VersionSkew(e)
+                } else if e == "not a pcdn-model document" {
+                    ModelLoadError::BadMagic(e)
+                } else {
+                    ModelLoadError::Malformed(e)
+                };
+                typed.at(path)
+            })
         }
     }
 }
@@ -388,30 +488,77 @@ fn objective_of_str(s: &str) -> Result<Objective, String> {
     }
 }
 
-/// Pooled batch scorer: decision values / predictions / accuracy over
-/// sparse minibatches, sharded by fixed [`SampleRanges`] (sized off the
-/// configured degree, never the physical pool width) — bitwise equal to
-/// the serial fold on any machine.
-pub struct Scorer {
-    model: Model,
-    pool: Option<WorkerPool>,
-    degree: usize,
+/// Why a scoring request was rejected. Serving never panics on
+/// malformed input: every check that used to `assert!` in the scorer is
+/// a typed variant here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScoreError {
+    /// The batch names a different feature count than the model.
+    WidthMismatch { batch: usize, model: usize },
+    /// The batch contains zero rows.
+    EmptyBatch,
+    /// The caller pinned an expected dataset fingerprint and the model's
+    /// provenance disagrees.
+    FingerprintMismatch { expected: u64, got: u64 },
+    /// A sparse sample's index and value arrays differ in length.
+    LengthMismatch { indices: usize, values: usize },
+    /// A sample names a feature beyond the model width.
+    FeatureOutOfRange { feature: usize, width: usize },
+    /// The builder was given an unusable configuration.
+    InvalidConfig(String),
 }
 
-impl Scorer {
-    /// Serial scorer (degree 1, no pool).
-    pub fn new(model: Model) -> Scorer {
-        Scorer {
-            model,
-            pool: None,
-            degree: 1,
+impl fmt::Display for ScoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScoreError::WidthMismatch { batch, model } => {
+                write!(f, "batch has {batch} features, model has {model}")
+            }
+            ScoreError::EmptyBatch => write!(f, "batch contains no samples"),
+            ScoreError::FingerprintMismatch { expected, got } => write!(
+                f,
+                "model fingerprint {got:#018x} does not match expected {expected:#018x}"
+            ),
+            ScoreError::LengthMismatch { indices, values } => {
+                write!(f, "sample has {indices} indices but {values} values")
+            }
+            ScoreError::FeatureOutOfRange { feature, width } => {
+                write!(f, "sample names feature {feature} but the model has {width}")
+            }
+            ScoreError::InvalidConfig(d) => write!(f, "invalid scorer config: {d}"),
         }
     }
+}
 
-    /// Shard batches into `t` fixed ranges scored on the worker team
-    /// (the explicit [`Scorer::pool`] if set, else the process-wide one).
+impl std::error::Error for ScoreError {}
+
+/// Builder for [`Scorer`], mirroring the [`Fit`](crate::api::Fit)
+/// builder: chainable setters, one validation point in
+/// [`ScorerBuilder::build`]. Obtained from [`Scorer::for_model`].
+#[derive(Clone)]
+pub struct ScorerBuilder {
+    model: Arc<Model>,
+    threads: usize,
+    batch: Option<usize>,
+    pool: Option<WorkerPool>,
+    expect_fingerprint: Option<u64>,
+}
+
+impl ScorerBuilder {
+    /// Shard batches into at least `t` fixed ranges scored on the worker
+    /// team (the explicit [`ScorerBuilder::pool`] if set, else the
+    /// process-wide one). `build` rejects 0.
     pub fn threads(mut self, t: usize) -> Self {
-        self.degree = t.max(1);
+        self.threads = t;
+        self
+    }
+
+    /// Cap samples per range: a batch of `s` rows is cut into at least
+    /// `ceil(s / n)` ranges. Sharding stays a pure function of
+    /// `(samples, threads, batch)` — never of the physical pool width —
+    /// so results remain bitwise reproducible. `build` rejects 0.
+    pub fn batch(mut self, n: usize) -> Self {
+        self.batch = Some(n);
         self
     }
 
@@ -421,8 +568,112 @@ impl Scorer {
         self
     }
 
+    /// Demand that the model's training-data fingerprint equals `fp`;
+    /// `build` fails with [`ScoreError::FingerprintMismatch`] otherwise.
+    pub fn expect_fingerprint(mut self, fp: u64) -> Self {
+        self.expect_fingerprint = Some(fp);
+        self
+    }
+
+    /// Validate the configuration and produce the scorer.
+    pub fn build(self) -> Result<Scorer, ScoreError> {
+        if self.threads == 0 {
+            return Err(ScoreError::InvalidConfig("threads must be >= 1".into()));
+        }
+        if self.batch == Some(0) {
+            return Err(ScoreError::InvalidConfig("batch must be >= 1".into()));
+        }
+        if let Some(expected) = self.expect_fingerprint {
+            let got = self.model.provenance.fingerprint;
+            if got != expected {
+                return Err(ScoreError::FingerprintMismatch { expected, got });
+            }
+        }
+        Ok(Scorer {
+            model: self.model,
+            pool: self.pool,
+            degree: self.threads,
+            batch: self.batch,
+        })
+    }
+}
+
+/// Pooled batch scorer: decision values / predictions / accuracy over
+/// sparse minibatches, sharded by fixed [`SampleRanges`] (sized off the
+/// configured degree, never the physical pool width) — bitwise equal to
+/// the serial fold on any machine.
+///
+/// Construct through [`Scorer::for_model`]; the model is shared via
+/// `Arc`, so any number of scorers (and the serving daemon's registry)
+/// reference one weight vector without copying it.
+pub struct Scorer {
+    model: Arc<Model>,
+    pool: Option<WorkerPool>,
+    degree: usize,
+    batch: Option<usize>,
+}
+
+impl Scorer {
+    /// Start building a scorer over a shared model. Defaults: serial
+    /// (one thread), no batch cap, process-wide pool.
+    pub fn for_model(model: &Arc<Model>) -> ScorerBuilder {
+        ScorerBuilder {
+            model: Arc::clone(model),
+            threads: 1,
+            batch: None,
+            pool: None,
+            expect_fingerprint: None,
+        }
+    }
+
+    /// Serial scorer over an owned model.
+    #[deprecated(
+        since = "0.1.0",
+        note = "use `Scorer::for_model(&model).threads(..).build()?`; \
+                this shim wraps the model in a fresh Arc and cannot share \
+                weights with other scorers"
+    )]
+    pub fn new(model: Model) -> Scorer {
+        Scorer {
+            model: Arc::new(model),
+            pool: None,
+            degree: 1,
+            batch: None,
+        }
+    }
+
+    /// Shard batches into `t` fixed ranges.
+    #[deprecated(since = "0.1.0", note = "use `ScorerBuilder::threads`")]
+    pub fn threads(mut self, t: usize) -> Self {
+        self.degree = t.max(1);
+        self
+    }
+
+    /// Pin scoring to an explicit worker team.
+    #[deprecated(since = "0.1.0", note = "use `ScorerBuilder::pool`")]
+    pub fn pool(mut self, pool: WorkerPool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
     pub fn model(&self) -> &Model {
         &self.model
+    }
+
+    /// The shared model handle (cheap to clone; used by the serving
+    /// registry to hand one artifact to many scorers).
+    pub fn shared_model(&self) -> &Arc<Model> {
+        &self.model
+    }
+
+    /// The sharding degree for a batch of `samples` rows: the configured
+    /// thread count, raised so no range exceeds the configured batch cap.
+    fn effective_degree(&self, samples: usize) -> usize {
+        let mut d = self.degree;
+        if let Some(b) = self.batch {
+            d = d.max(samples.div_ceil(b));
+        }
+        d
     }
 
     /// Decision values `X w` for a sparse batch. With degree > 1 the rows
@@ -430,19 +681,22 @@ impl Scorer {
     /// `parallel_for` region; each range costs
     /// `O(cols·log(col nnz) + nnz in range)` via the sorted-column binary
     /// search, and the result is bitwise identical to the serial product.
-    pub fn decision_values(&self, x: &CscMat) -> Vec<f64> {
-        assert_eq!(
-            x.cols,
-            self.model.w.len(),
-            "batch has {} features, model has {}",
-            x.cols,
-            self.model.w.len()
-        );
-        let s = x.rows;
-        if self.degree <= 1 || s == 0 {
-            return x.matvec(&self.model.w);
+    pub fn decision_values(&self, x: &CscMat) -> Result<Vec<f64>, ScoreError> {
+        if x.cols != self.model.w.len() {
+            return Err(ScoreError::WidthMismatch {
+                batch: x.cols,
+                model: self.model.w.len(),
+            });
         }
-        let ranges = SampleRanges::new(s, self.degree);
+        let s = x.rows;
+        if s == 0 {
+            return Err(ScoreError::EmptyBatch);
+        }
+        let degree = self.effective_degree(s);
+        if degree <= 1 {
+            return Ok(x.matvec(&self.model.w));
+        }
+        let ranges = SampleRanges::new(s, degree);
         let mut out = vec![0.0f64; s];
         let team = self
             .pool
@@ -459,24 +713,50 @@ impl Scorer {
                 unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(lo), hi - lo) };
             x.matvec_range(w, lo, hi, slice);
         });
-        out
+        Ok(out)
+    }
+
+    /// Decision value for one sparse sample given as parallel
+    /// `(feature index, value)` arrays — the single-request serving
+    /// path, with every malformed-input case a typed error.
+    pub fn score_sample(&self, idx: &[u32], vals: &[f64]) -> Result<f64, ScoreError> {
+        if idx.len() != vals.len() {
+            return Err(ScoreError::LengthMismatch {
+                indices: idx.len(),
+                values: vals.len(),
+            });
+        }
+        let w = &self.model.w;
+        let mut z = 0.0;
+        for (&j, &v) in idx.iter().zip(vals) {
+            let j = j as usize;
+            if j >= w.len() {
+                return Err(ScoreError::FeatureOutOfRange {
+                    feature: j,
+                    width: w.len(),
+                });
+            }
+            z += w[j] * v;
+        }
+        Ok(z)
     }
 
     /// Predicted ±1 labels for a batch.
-    pub fn predict(&self, x: &CscMat) -> Vec<f64> {
-        self.decision_values(x)
+    pub fn predict(&self, x: &CscMat) -> Result<Vec<f64>, ScoreError> {
+        Ok(self
+            .decision_values(x)?
             .into_iter()
             .map(|z| if z < 0.0 { -1.0 } else { 1.0 })
-            .collect()
+            .collect())
     }
 
     /// Classification accuracy over a labeled batch: pooled decision
     /// values folded through the same shared predicate as
     /// [`Dataset::accuracy`] ([`crate::data::correct_classification`]),
     /// so the two surfaces cannot diverge.
-    pub fn accuracy(&self, data: &Dataset) -> f64 {
-        let z = self.decision_values(&data.x);
-        crate::data::accuracy_of(&z, &data.y)
+    pub fn accuracy(&self, data: &Dataset) -> Result<f64, ScoreError> {
+        let z = self.decision_values(&data.x)?;
+        Ok(crate::data::accuracy_of(&z, &data.y))
     }
 }
 
@@ -549,16 +829,117 @@ mod tests {
     #[test]
     fn pooled_scorer_bitwise_equals_serial() {
         let d = toy();
-        let m = trained(&d);
+        let m = Arc::new(trained(&d));
         let serial = m.decision_values(&d.x);
         for degree in [2usize, 3, 7] {
-            let scorer = Scorer::new(m.clone()).threads(degree);
-            let pooled = scorer.decision_values(&d.x);
+            let scorer = Scorer::for_model(&m).threads(degree).build().unwrap();
+            let pooled = scorer.decision_values(&d.x).unwrap();
             assert_eq!(serial.len(), pooled.len());
             for (a, b) in serial.iter().zip(&pooled) {
                 assert_eq!(a.to_bits(), b.to_bits(), "degree {degree} diverged");
             }
-            assert_eq!(scorer.accuracy(&d), d.accuracy(&m.w));
+            assert_eq!(scorer.accuracy(&d).unwrap(), d.accuracy(&m.w));
+        }
+    }
+
+    #[test]
+    fn batch_cap_is_bitwise_and_deterministic() {
+        let d = toy();
+        let m = Arc::new(trained(&d));
+        let serial = m.decision_values(&d.x);
+        for batch in [1usize, 7, 64, 4096] {
+            let scorer = Scorer::for_model(&m)
+                .threads(2)
+                .batch(batch)
+                .build()
+                .unwrap();
+            let z = scorer.decision_values(&d.x).unwrap();
+            for (a, b) in serial.iter().zip(&z) {
+                assert_eq!(a.to_bits(), b.to_bits(), "batch {batch} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn scorers_share_model_storage() {
+        let d = toy();
+        let m = Arc::new(trained(&d));
+        let s1 = Scorer::for_model(&m).threads(2).build().unwrap();
+        let s2 = Scorer::for_model(&m).threads(5).build().unwrap();
+        // One weight vector, three handles: both scorers and the caller's
+        // Arc alias the same storage — no per-scorer clone of `w`.
+        assert!(std::ptr::eq(s1.model().w.as_ptr(), s2.model().w.as_ptr()));
+        assert!(std::ptr::eq(s1.model().w.as_ptr(), m.w.as_ptr()));
+        assert!(Arc::ptr_eq(s1.shared_model(), s2.shared_model()));
+    }
+
+    #[test]
+    fn scorer_rejects_malformed_input_with_typed_errors() {
+        let d = toy();
+        let m = Arc::new(trained(&d));
+        let scorer = Scorer::for_model(&m).threads(2).build().unwrap();
+        let wide = CscMat::zeros(3, m.w.len() + 1);
+        assert_eq!(
+            scorer.decision_values(&wide),
+            Err(ScoreError::WidthMismatch {
+                batch: m.w.len() + 1,
+                model: m.w.len()
+            })
+        );
+        let empty = CscMat::zeros(0, m.w.len());
+        assert_eq!(scorer.decision_values(&empty), Err(ScoreError::EmptyBatch));
+        assert_eq!(
+            scorer.score_sample(&[0, 1], &[1.0]),
+            Err(ScoreError::LengthMismatch {
+                indices: 2,
+                values: 1
+            })
+        );
+        assert_eq!(
+            scorer.score_sample(&[m.w.len() as u32], &[1.0]),
+            Err(ScoreError::FeatureOutOfRange {
+                feature: m.w.len(),
+                width: m.w.len()
+            })
+        );
+    }
+
+    #[test]
+    fn builder_validates_config_and_fingerprint() {
+        let d = toy();
+        let m = Arc::new(trained(&d));
+        assert!(matches!(
+            Scorer::for_model(&m).threads(0).build(),
+            Err(ScoreError::InvalidConfig(_))
+        ));
+        assert!(matches!(
+            Scorer::for_model(&m).batch(0).build(),
+            Err(ScoreError::InvalidConfig(_))
+        ));
+        let fp = m.provenance.fingerprint;
+        assert!(Scorer::for_model(&m).expect_fingerprint(fp).build().is_ok());
+        assert_eq!(
+            Scorer::for_model(&m)
+                .expect_fingerprint(fp ^ 1)
+                .build()
+                .err(),
+            Some(ScoreError::FingerprintMismatch {
+                expected: fp ^ 1,
+                got: fp
+            })
+        );
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_scorer_shim_still_scores() {
+        let d = toy();
+        let m = trained(&d);
+        let serial = m.decision_values(&d.x);
+        let scorer = Scorer::new(m).threads(3);
+        let pooled = scorer.decision_values(&d.x).unwrap();
+        for (a, b) in serial.iter().zip(&pooled) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
@@ -598,5 +979,43 @@ mod tests {
     fn load_rejects_garbage() {
         assert!(Model::from_bytes(b"nope").is_err());
         assert!(Model::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn load_errors_are_classified() {
+        let d = toy();
+        let m = trained(&d);
+        let bytes = m.to_bytes();
+
+        // Truncated: cut the document mid-stream.
+        let cut = &bytes[..bytes.len() / 2];
+        assert!(matches!(
+            Model::from_bytes(cut),
+            Err(ModelLoadError::Truncated(_))
+        ));
+
+        // Bad magic: flip the first byte.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(
+            Model::from_bytes(&bad),
+            Err(ModelLoadError::BadMagic(_))
+        ));
+
+        // Version skew: bump the header version beyond the reader's.
+        let mut skew = bytes.clone();
+        skew[8..12].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(
+            Model::from_bytes(&skew),
+            Err(ModelLoadError::VersionSkew(_))
+        ));
+
+        // Malformed: trailing garbage after a valid document.
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(matches!(
+            Model::from_bytes(&trailing),
+            Err(ModelLoadError::Malformed(_))
+        ));
     }
 }

@@ -2,19 +2,28 @@
 //! artifacts (ROADMAP item: regress the P = 1024 sharded-epilogue speedup
 //! against the accumulated artifact trajectory).
 //!
-//! CI uploads `BENCH_epilogue.json` on every run; this tool compares the
-//! current file's P = 1024 sharded speedup against the *median* of the
-//! accumulated history (a directory of previously downloaded artifacts)
-//! and fails when it regresses by more than the tolerance. The median —
-//! not the best — is the baseline because shared-runner numbers are noisy;
-//! a >20% drop below the median of several runs is a real smell, a drop
-//! below a single lucky best run is not.
+//! CI uploads a bench JSON on every run; this tool compares the current
+//! file's gated metric against the *median* of the accumulated history
+//! (a directory of previously downloaded artifacts) and fails when it
+//! regresses by more than the tolerance. The median — not the best — is
+//! the baseline because shared-runner numbers are noisy; a >20% drift
+//! past the median of several runs is a real smell, drifting past a
+//! single lucky best run is not.
+//!
+//! Two gated metrics, selected with `--metric`:
+//!
+//! * `epilogue` (default) — the P = 1024 sharded-epilogue speedup from
+//!   `BENCH_epilogue.json`; **higher is better**, so the gate fails when
+//!   `current < (1 − tolerance)·median`.
+//! * `serve` — the p99 per-request serving latency from
+//!   `BENCH_serve.json`; **lower is better**, so the direction inverts
+//!   and the gate fails when `current > (1 + tolerance)·median`.
 //!
 //! ```sh
-//! # history/ holds BENCH_epilogue.json files from previous CI runs
+//! # history/ holds bench JSON files from previous CI runs
 //! # (one subdirectory per run: BENCH_epilogue-r<run_id>/...)
 //! bench_check --current BENCH_epilogue.json --history history \
-//!     [--tolerance 0.2] [--max-history 10]
+//!     [--metric epilogue|serve] [--tolerance 0.2] [--max-history 10]
 //! ```
 //!
 //! `--max-history N` gates against the N *newest* runs only (CI names
@@ -32,15 +41,48 @@ use pcdn::util::json::Json;
 /// measures (where sharding matters most and noise matters least).
 const GATE_P: f64 = 1024.0;
 
-/// Extract the sharded-epilogue speedup at bundle size `p` from one
-/// `BENCH_epilogue.json` document.
-fn speedup_at_p(doc: &Json, p: f64) -> Option<f64> {
-    doc.get("results")?
-        .as_arr()?
-        .iter()
-        .find(|r| r.get("p").and_then(|v| v.as_f64()) == Some(p))?
-        .get("speedup")?
-        .as_f64()
+/// Which bench artifact is gated, and in which direction.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Metric {
+    /// P = 1024 sharded-epilogue speedup; higher is better.
+    EpilogueSpeedup,
+    /// Serving p99 per-request latency; lower is better.
+    ServeP99,
+}
+
+impl Metric {
+    fn from_flag(s: &str) -> Result<Metric, String> {
+        match s {
+            "epilogue" => Ok(Metric::EpilogueSpeedup),
+            "serve" => Ok(Metric::ServeP99),
+            other => Err(format!("unknown --metric '{other}' (epilogue|serve)")),
+        }
+    }
+
+    fn higher_is_better(self) -> bool {
+        matches!(self, Metric::EpilogueSpeedup)
+    }
+
+    fn label(self) -> String {
+        match self {
+            Metric::EpilogueSpeedup => format!("P={GATE_P} sharded speedup"),
+            Metric::ServeP99 => "serve p99 latency".into(),
+        }
+    }
+
+    /// Extract this metric from one bench JSON document.
+    fn extract(self, doc: &Json) -> Option<f64> {
+        match self {
+            Metric::EpilogueSpeedup => doc
+                .get("results")?
+                .as_arr()?
+                .iter()
+                .find(|r| r.get("p").and_then(|v| v.as_f64()) == Some(GATE_P))?
+                .get("speedup")?
+                .as_f64(),
+            Metric::ServeP99 => doc.get("p99_secs")?.as_f64(),
+        }
+    }
 }
 
 /// Median of a non-empty sample (average of the middle pair for even n).
@@ -56,44 +98,63 @@ fn median(xs: &[f64]) -> f64 {
     }
 }
 
-/// The gate: `Ok(report)` when `current` is within `tolerance` of the
-/// history median (i.e. `current ≥ (1 − tolerance)·median`), `Err(report)`
-/// on regression.
-fn check(current: f64, history: &[f64], tolerance: f64) -> Result<String, String> {
+/// The gate. For a higher-is-better metric, `Ok(report)` when
+/// `current ≥ (1 − tolerance)·median`; for a lower-is-better metric the
+/// direction inverts: `Ok(report)` when `current ≤ (1 + tolerance)·median`.
+fn check(metric: Metric, current: f64, history: &[f64], tolerance: f64) -> Result<String, String> {
     let base = median(history);
-    let floor = (1.0 - tolerance) * base;
+    let (bound, side, sign) = if metric.higher_is_better() {
+        ((1.0 - tolerance) * base, "floor", "-")
+    } else {
+        ((1.0 + tolerance) * base, "ceiling", "+")
+    };
     let report = format!(
-        "P={GATE_P} sharded speedup: current {current:.3}x vs median {base:.3}x \
-         over {} run(s); floor at -{:.0}% = {floor:.3}x",
+        "{}: current {current:.6} vs median {base:.6} over {} run(s); \
+         {side} at {sign}{:.0}% = {bound:.6}",
+        metric.label(),
         history.len(),
         tolerance * 100.0
     );
-    if current >= floor {
+    let ok = if metric.higher_is_better() {
+        current >= bound
+    } else {
+        current <= bound
+    };
+    if ok {
         Ok(report)
     } else {
         Err(report)
     }
 }
 
-fn load_speedup(path: &std::path::Path) -> Result<f64, String> {
+fn load_metric(metric: Metric, path: &std::path::Path) -> Result<f64, String> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| format!("{}: {e}", path.display()))?;
     let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
-    speedup_at_p(&doc, GATE_P)
-        .ok_or_else(|| format!("{}: no P={GATE_P} speedup entry", path.display()))
+    metric
+        .extract(&doc)
+        .ok_or_else(|| format!("{}: no {} entry", path.display(), metric.label()))
 }
 
 fn main() {
     let cli = Cli::new(
         "bench_check",
-        "fail when the current epilogue bench regresses vs the CI artifact trajectory",
+        "fail when the current bench regresses vs the CI artifact trajectory",
     )
+    .opt("metric", Some("epilogue"), "gated metric: epilogue (speedup) or serve (p99 latency)")
     .opt("current", Some("BENCH_epilogue.json"), "current bench output")
-    .opt("history", Some("bench_history"), "directory of prior BENCH_epilogue.json files")
-    .opt("tolerance", Some("0.2"), "allowed fractional drop below the history median")
+    .opt("history", Some("bench_history"), "directory of prior bench JSON files")
+    .opt("tolerance", Some("0.2"), "allowed fractional drift past the history median")
     .opt("min-history", Some("1"), "minimum prior runs before the gate engages")
     .opt("max-history", Some("10"), "gate against the N newest history files only");
     let a = cli.parse();
+    let metric = match Metric::from_flag(a.get("metric").unwrap()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            std::process::exit(2);
+        }
+    };
     // Malformed numeric flags are usage errors, not silent defaults.
     let tolerance = match a.f64("tolerance") {
         Ok(v) => v,
@@ -117,7 +178,7 @@ fn main() {
         }
     };
 
-    let current = match load_speedup(std::path::Path::new(a.get("current").unwrap())) {
+    let current = match load_metric(metric, std::path::Path::new(a.get("current").unwrap())) {
         Ok(v) => v,
         Err(e) => {
             eprintln!("bench_check: {e}");
@@ -156,7 +217,7 @@ fn main() {
             );
         }
         for f in files.into_iter().skip(skip) {
-            match load_speedup(&f) {
+            match load_metric(metric, &f) {
                 Ok(v) => history.push(v),
                 Err(e) => eprintln!("bench_check: skipping {e}"),
             }
@@ -166,12 +227,13 @@ fn main() {
     if history.len() < min_history {
         println!(
             "bench_check: only {} historical run(s) (< {min_history}); trajectory still \
-             accumulating, gate not engaged (current P={GATE_P} speedup {current:.3}x)",
-            history.len()
+             accumulating, gate not engaged (current {} = {current:.6})",
+            history.len(),
+            metric.label()
         );
         return;
     }
-    match check(current, &history, tolerance) {
+    match check(metric, current, &history, tolerance) {
         Ok(report) => println!("bench_check: PASS — {report}"),
         Err(report) => {
             eprintln!("bench_check: REGRESSION — {report}");
@@ -194,13 +256,36 @@ mod tests {
         ]
     }"#;
 
+    const SERVE_SAMPLE: &str = r#"{
+        "bench": "serve",
+        "threads": 4,
+        "clients": 4,
+        "requests": 6000,
+        "p50_secs": 0.00011,
+        "p99_secs": 0.00042,
+        "throughput_rps": 21000.0
+    }"#;
+
     #[test]
     fn extracts_the_gated_speedup() {
         let doc = Json::parse(SAMPLE).unwrap();
-        assert_eq!(speedup_at_p(&doc, 1024.0), Some(2.4));
-        assert_eq!(speedup_at_p(&doc, 64.0), Some(1.1));
-        assert_eq!(speedup_at_p(&doc, 999.0), None);
-        assert_eq!(speedup_at_p(&Json::parse("{}").unwrap(), 1024.0), None);
+        assert_eq!(Metric::EpilogueSpeedup.extract(&doc), Some(2.4));
+        assert_eq!(
+            Metric::EpilogueSpeedup.extract(&Json::parse("{}").unwrap()),
+            None
+        );
+    }
+
+    #[test]
+    fn extracts_the_serve_p99() {
+        let doc = Json::parse(SERVE_SAMPLE).unwrap();
+        assert_eq!(Metric::ServeP99.extract(&doc), Some(0.00042));
+        // The epilogue doc has no p99 — metrics don't cross-match.
+        assert_eq!(Metric::ServeP99.extract(&Json::parse(SAMPLE).unwrap()), None);
+        assert_eq!(
+            Metric::EpilogueSpeedup.extract(&Json::parse(SERVE_SAMPLE).unwrap()),
+            None
+        );
     }
 
     #[test]
@@ -214,11 +299,23 @@ mod tests {
     fn gate_passes_within_tolerance_fails_beyond() {
         let hist = [2.0, 2.2, 2.1];
         // Median 2.1, floor at 20% = 1.68.
-        assert!(check(2.3, &hist, 0.2).is_ok()); // improvement passes
-        assert!(check(1.7, &hist, 0.2).is_ok()); // within tolerance
-        assert!(check(1.67, &hist, 0.2).is_err()); // beyond: regression
+        assert!(check(Metric::EpilogueSpeedup, 2.3, &hist, 0.2).is_ok());
+        assert!(check(Metric::EpilogueSpeedup, 1.7, &hist, 0.2).is_ok());
+        assert!(check(Metric::EpilogueSpeedup, 1.67, &hist, 0.2).is_err());
         // A single lucky best run does not move the median gate.
         let hist2 = [2.0, 2.0, 9.0];
-        assert!(check(1.7, &hist2, 0.2).is_ok());
+        assert!(check(Metric::EpilogueSpeedup, 1.7, &hist2, 0.2).is_ok());
+    }
+
+    #[test]
+    fn serve_gate_direction_is_inverted() {
+        // Latency: lower is better. Median 4e-4, ceiling at +20% = 4.8e-4.
+        let hist = [4.2e-4, 4.0e-4, 3.8e-4];
+        assert!(check(Metric::ServeP99, 3.0e-4, &hist, 0.2).is_ok()); // faster passes
+        assert!(check(Metric::ServeP99, 4.7e-4, &hist, 0.2).is_ok()); // within tolerance
+        assert!(check(Metric::ServeP99, 4.9e-4, &hist, 0.2).is_err()); // slower: regression
+        // A single lucky fast run does not tighten the gate.
+        let hist2 = [4.0e-4, 4.0e-4, 1.0e-5];
+        assert!(check(Metric::ServeP99, 4.7e-4, &hist2, 0.2).is_ok());
     }
 }

@@ -55,6 +55,7 @@ pub mod oracle;
 pub mod parallel;
 pub mod path;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod testutil;
 pub mod util;

@@ -5,9 +5,12 @@
 //! pcdn train    --config run.json --save-model model.bin --checkpoint-every 25
 //! pcdn train    --resume run.ckpt
 //! pcdn predict  --model model.bin --dataset real-sim --threads 8
+//! pcdn predict  --model model.bin --dataset a9a --via 127.0.0.1:8077
+//! pcdn serve    --model model.bin --addr 127.0.0.1:8077 --threads 8 --watch 5
 //! pcdn path     --dataset a9a --n-lambdas 20 --ratio 0.01 [--cv 5]
 //! pcdn bench    --exp fig1 [--full] [--out bench_out]
 //! pcdn inspect  --dataset gisette
+//! pcdn checkpoints run.ckpt
 //! pcdn artifacts [--dir artifacts]
 //! ```
 //!
@@ -27,6 +30,7 @@ use pcdn::linalg::power;
 use pcdn::loss::Objective;
 use pcdn::path::{cv_path, fit_path, CvOptions, PathOptions};
 use pcdn::runtime::PjrtRuntime;
+use pcdn::serve::{protocol, ModelRegistry, ServeOptions, Server};
 use pcdn::solver::checkpoint::{Checkpoint, CheckpointWriter};
 use pcdn::solver::{ProbeHandle, StopRule};
 use pcdn::util::cli::Cli;
@@ -35,7 +39,8 @@ fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         eprintln!(
-            "usage: pcdn <train|predict|path|bench|inspect|artifacts> [flags]; --help for details"
+            "usage: pcdn <train|predict|serve|path|bench|inspect|checkpoints|artifacts> [flags]; \
+             --help for details"
         );
         std::process::exit(2);
     }
@@ -43,12 +48,17 @@ fn main() {
     let code = match cmd.as_str() {
         "train" => cmd_train(args),
         "predict" => cmd_predict(args),
+        "serve" => cmd_serve(args),
         "path" => cmd_path(args),
         "bench" => cmd_bench(args),
         "inspect" => cmd_inspect(args),
+        "checkpoints" => cmd_checkpoints(args),
         "artifacts" => cmd_artifacts(args),
         other => {
-            eprintln!("unknown subcommand '{other}' (train|predict|path|bench|inspect|artifacts)");
+            eprintln!(
+                "unknown subcommand '{other}' \
+                 (train|predict|serve|path|bench|inspect|checkpoints|artifacts)"
+            );
             2
         }
     };
@@ -370,13 +380,18 @@ fn cmd_predict(args: Vec<String>) -> i32 {
         .opt("dataset", Some("real-sim"), "analog name or libsvm:<path>")
         .opt("threads", Some("1"), "scoring shards on the worker pool")
         .opt("out", None, "write decision values here (one per line)")
+        .opt(
+            "via",
+            None,
+            "score over HTTP against a running `pcdn serve` at this address",
+        )
         .switch("labels", "print predicted ±1 labels to stdout");
     let a = cli.parse_from(args).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
     });
     let model = match Model::load(Path::new(a.get("model").unwrap())) {
-        Ok(m) => m,
+        Ok(m) => Arc::new(m),
         Err(e) => {
             eprintln!("{e}");
             return 1;
@@ -411,11 +426,34 @@ fn cmd_predict(args: Vec<String>) -> i32 {
         p.final_objective
     );
     let same_data = p.fingerprint == data.fingerprint();
-    let scorer = Scorer::new(model).threads(threads);
-    // One pooled decision-value pass feeds the metric, the label dump and
-    // the --out file alike.
-    let z = scorer.decision_values(&data.x);
-    match scorer.model().objective {
+    // One decision-value pass feeds the metric, the label dump and the
+    // --out file alike: locally through the pooled Scorer, or remotely
+    // through a running daemon with --via.
+    let z = if let Some(addr) = a.get("via") {
+        match score_via_daemon(addr, &data) {
+            Ok(z) => z,
+            Err(e) => {
+                eprintln!("--via {addr}: {e}");
+                return 1;
+            }
+        }
+    } else {
+        let scorer = match Scorer::for_model(&model).threads(threads).build() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        match scorer.decision_values(&data.x) {
+            Ok(z) => z,
+            Err(e) => {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+    };
+    match model.objective {
         Objective::Lasso => {
             let mse = z
                 .iter()
@@ -454,6 +492,118 @@ fn cmd_predict(args: Vec<String>) -> i32 {
         }
         println!("decision values written to {out}");
     }
+    0
+}
+
+/// Score every sample of `data` against a running daemon, chunking rows
+/// into `POST /score` requests. Chunk boundaries don't affect the bits
+/// (the coalescer's per-request split is exact), but a mid-run hot-swap
+/// changes the answering model — detect and warn.
+fn score_via_daemon(addr: &str, data: &pcdn::data::Dataset) -> Result<Vec<f64>, String> {
+    const CHUNK: usize = 512;
+    let csr = data.x.to_csr();
+    let mut z = Vec::with_capacity(data.samples());
+    let mut version: Option<u64> = None;
+    let mut lo = 0usize;
+    while lo < data.samples() {
+        let hi = (lo + CHUNK).min(data.samples());
+        let rows: Vec<protocol::SparseRow> = (lo..hi)
+            .map(|i| {
+                let (idx, vals) = csr.row(i);
+                protocol::SparseRow {
+                    idx: idx.to_vec(),
+                    vals: vals.to_vec(),
+                }
+            })
+            .collect();
+        let batch = protocol::http_score(addr, &rows).map_err(|e| e.to_string())?;
+        if let Some(v) = version {
+            if v != batch.version {
+                eprintln!(
+                    "warning: daemon hot-swapped models mid-run (v{v} -> v{})",
+                    batch.version
+                );
+            }
+        }
+        version = Some(batch.version);
+        z.extend_from_slice(&batch.z);
+        lo = hi;
+    }
+    if let Some(v) = version {
+        println!("scored remotely against {addr} (model version {v})");
+    }
+    Ok(z)
+}
+
+fn cmd_serve(args: Vec<String>) -> i32 {
+    let cli = Cli::new("pcdn serve", "serve a saved model over HTTP (scoring daemon)")
+        .opt("model", Some("model.bin"), "saved model file (binary or JSON)")
+        .opt(
+            "addr",
+            Some("127.0.0.1:8077"),
+            "bind address (use port 0 for a free port)",
+        )
+        .opt("threads", Some("4"), "scoring shards per coalesced batch")
+        .opt("batch", Some("1024"), "row cap per coalesced dispatch")
+        .opt("queue", Some("256"), "pending-request queue bound (beyond it: 503)")
+        .opt(
+            "max-inflight",
+            Some("64"),
+            "concurrent in-flight request cap (beyond it: 503)",
+        )
+        .opt("retry-after", Some("1"), "Retry-After seconds sent with 503s")
+        .opt(
+            "watch",
+            Some("0"),
+            "poll the model file and hot-swap on change, every N seconds (0 = off)",
+        );
+    let a = cli.parse_from(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let model_path = a.get("model").unwrap();
+    let registry = match ModelRegistry::from_path(Path::new(model_path)) {
+        Ok(r) => Arc::new(r),
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    {
+        let mv = registry.current();
+        let p = &mv.model.provenance;
+        println!(
+            "serving {model_path}: {} on '{}' ({} features, {} nnz, {})",
+            p.solver,
+            p.dataset,
+            mv.model.w.len(),
+            mv.model.nnz(),
+            if p.converged { "converged" } else { "NOT converged" }
+        );
+    }
+    let opts = ServeOptions {
+        addr: a.get("addr").unwrap().to_string(),
+        threads: flag_or_exit!(a.usize("threads")),
+        max_batch: flag_or_exit!(a.usize("batch")),
+        queue_cap: flag_or_exit!(a.usize("queue")),
+        max_inflight: flag_or_exit!(a.usize("max-inflight")),
+        retry_after_secs: flag_or_exit!(a.usize("retry-after")) as u64,
+        watch_secs: flag_or_exit!(a.usize("watch")) as u64,
+    };
+    let server = match Server::bind(registry, opts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!(
+        "listening on http://{} (POST /score, GET /healthz, GET /model, POST /reload, \
+         POST /shutdown)",
+        server.local_addr()
+    );
+    server.wait();
+    println!("drained and stopped");
     0
 }
 
@@ -691,6 +841,33 @@ fn cmd_inspect(args: Vec<String>) -> i32 {
         }
         Err(e) => {
             eprintln!("{e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_checkpoints(args: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "pcdn checkpoints",
+        "inspect a PCDNCKP1 resume checkpoint (usage: pcdn checkpoints <path>)",
+    );
+    let a = cli.parse_from(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    if a.positional.len() != 1 {
+        eprintln!("usage: pcdn checkpoints <path>");
+        return 2;
+    }
+    let path = &a.positional[0];
+    match Checkpoint::load(Path::new(path)) {
+        Ok(ck) => {
+            println!("checkpoint : {path}");
+            print!("{}", ck.summary());
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
             1
         }
     }

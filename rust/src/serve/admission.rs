@@ -1,0 +1,155 @@
+//! Backpressure and admission control for the serving daemon.
+//!
+//! A fixed in-flight cap backed by an atomic counter: every admitted
+//! request holds an RAII [`Permit`] until its response is written, so
+//! the count can never leak on an error path. When the cap is reached
+//! new requests are *shed* (the daemon answers `503 + Retry-After`)
+//! rather than queued without bound — the coalescer's pending queue is
+//! separately bounded, so total buffered work is `max_inflight` requests
+//! no matter how many clients connect. Graceful shutdown flips the
+//! draining flag (refusing new admissions) and then waits for the
+//! in-flight count to reach zero.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use super::ServeError;
+
+/// Bounded admission gate. See the module docs.
+pub struct Admission {
+    in_flight: AtomicUsize,
+    cap: usize,
+    draining: AtomicBool,
+}
+
+/// RAII admission token: dropping it releases the slot.
+pub struct Permit<'a> {
+    gate: &'a Admission,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.gate.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl Admission {
+    /// A gate admitting at most `cap` concurrent requests (`cap` is
+    /// clamped to at least 1).
+    pub fn new(cap: usize) -> Admission {
+        Admission {
+            in_flight: AtomicUsize::new(0),
+            cap: cap.max(1),
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    /// Try to admit one request. Fails with [`ServeError::Draining`]
+    /// during shutdown and [`ServeError::Overloaded`] at the cap.
+    pub fn try_acquire(&self) -> Result<Permit<'_>, ServeError> {
+        if self.draining.load(Ordering::Acquire) {
+            return Err(ServeError::Draining);
+        }
+        let prev = self.in_flight.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.cap {
+            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            return Err(ServeError::Overloaded {
+                in_flight: prev,
+                cap: self.cap,
+            });
+        }
+        // Re-check after incrementing so a drain that raced the
+        // fetch_add still refuses the request (the permit is dropped
+        // here, releasing the slot before the caller sees the error).
+        if self.draining.load(Ordering::Acquire) {
+            self.in_flight.fetch_sub(1, Ordering::AcqRel);
+            return Err(ServeError::Draining);
+        }
+        Ok(Permit { gate: self })
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Stop admitting new requests; already-admitted ones keep their
+    /// permits and finish normally.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    /// Block until every admitted request has released its permit, or
+    /// `timeout` elapses. Returns whether the drain completed.
+    pub fn wait_drained(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.in_flight() > 0 {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cap_is_enforced_and_permits_release_on_drop() {
+        let gate = Admission::new(2);
+        let p1 = gate.try_acquire().unwrap();
+        let _p2 = gate.try_acquire().unwrap();
+        assert!(matches!(
+            gate.try_acquire(),
+            Err(ServeError::Overloaded { cap: 2, .. })
+        ));
+        drop(p1);
+        assert_eq!(gate.in_flight(), 1);
+        let _p3 = gate.try_acquire().unwrap();
+    }
+
+    #[test]
+    fn draining_refuses_new_work_and_waits_for_old() {
+        let gate = Admission::new(4);
+        let p = gate.try_acquire().unwrap();
+        gate.begin_drain();
+        assert_eq!(gate.try_acquire().err(), Some(ServeError::Draining));
+        assert!(!gate.wait_drained(Duration::from_millis(20)));
+        drop(p);
+        assert!(gate.wait_drained(Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn concurrent_acquires_never_exceed_cap() {
+        let gate = std::sync::Arc::new(Admission::new(3));
+        let peak = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let g = std::sync::Arc::clone(&gate);
+            let pk = std::sync::Arc::clone(&peak);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    if let Ok(_permit) = g.try_acquire() {
+                        let now = g.in_flight();
+                        pk.fetch_max(now, Ordering::AcqRel);
+                        std::hint::spin_loop();
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert!(peak.load(Ordering::Acquire) <= 3, "cap exceeded");
+    }
+}

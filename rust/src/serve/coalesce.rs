@@ -1,0 +1,421 @@
+//! Request coalescing: many concurrent score requests, one minibatch.
+//!
+//! Concurrent clients each submit a few rows; scoring them one by one
+//! wastes the pool on tiny `parallel_for` regions. The coalescer packs
+//! whatever is pending (up to `max_batch` rows) into **one** combined
+//! sparse batch, snapshots **one** model version from the
+//! [`ModelRegistry`], scores the batch through the same
+//! [`Scorer`](crate::api::Scorer) → `SampleRanges` → `WorkerPool` path
+//! the library exposes, and splits the decision values back per request.
+//!
+//! Determinism: a sample's decision value is a dot product accumulated
+//! in ascending feature order — by [`CscMat::matvec`] /
+//! [`CscMat::matvec_range`] in every path — so neither the batch a row
+//! rides in, the `SampleRanges` partition, nor the pool width can
+//! change a bit. Coalesced responses are bitwise equal to a
+//! per-request [`Scorer::decision_values`](crate::api::Scorer::decision_values)
+//! call over the same rows (rows with three or more duplicate entries
+//! for one feature are the lone exception: duplicate merging may sum
+//! them in a different order).
+//!
+//! Version integrity: the model snapshot is taken once per dispatched
+//! batch and every response in that batch is stamped with its version —
+//! a hot-swap lands between batches, never inside one.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::protocol::SparseRow;
+use super::registry::ModelRegistry;
+use super::ServeError;
+use crate::api::{ScoreError, Scorer};
+use crate::data::CscMat;
+use crate::parallel::pool::WorkerPool;
+
+/// Decision values for one request, stamped with the registry version
+/// of the model that produced every one of them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoredBatch {
+    pub version: u64,
+    pub z: Vec<f64>,
+}
+
+struct Pending {
+    rows: Vec<SparseRow>,
+    tx: mpsc::Sender<Result<ScoredBatch, ServeError>>,
+}
+
+struct Queue {
+    pending: VecDeque<Pending>,
+    closed: bool,
+}
+
+struct Inner {
+    queue: Mutex<Queue>,
+    cv: Condvar,
+    registry: Arc<ModelRegistry>,
+    pool: WorkerPool,
+    threads: usize,
+    max_batch: usize,
+    queue_cap: usize,
+}
+
+/// Coalescing dispatcher. See the module docs.
+pub struct Coalescer {
+    inner: Arc<Inner>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Coalescer {
+    /// Spawn the dispatcher thread. `threads` is the scoring shard
+    /// degree (≥ 1), `max_batch` caps rows per combined dispatch, and
+    /// `queue_cap` bounds the pending-request queue (submissions beyond
+    /// it are refused with [`ServeError::QueueFull`], never buffered).
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        pool: WorkerPool,
+        threads: usize,
+        max_batch: usize,
+        queue_cap: usize,
+    ) -> Coalescer {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(Queue {
+                pending: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            registry,
+            pool,
+            threads: threads.max(1),
+            max_batch: max_batch.max(1),
+            queue_cap: queue_cap.max(1),
+        });
+        let run = Arc::clone(&inner);
+        let worker = std::thread::Builder::new()
+            .name("pcdn-coalesce".into())
+            .spawn(move || dispatcher(&run))
+            .expect("spawn coalescer thread");
+        Coalescer {
+            inner,
+            worker: Mutex::new(Some(worker)),
+        }
+    }
+
+    /// Enqueue one request; the receiver yields its scored rows (or a
+    /// typed rejection) once the dispatcher reaches it.
+    pub fn submit(
+        &self,
+        rows: Vec<SparseRow>,
+    ) -> Result<mpsc::Receiver<Result<ScoredBatch, ServeError>>, ServeError> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            if q.closed {
+                return Err(ServeError::ChannelClosed);
+            }
+            if q.pending.len() >= self.inner.queue_cap {
+                return Err(ServeError::QueueFull {
+                    depth: q.pending.len(),
+                    cap: self.inner.queue_cap,
+                });
+            }
+            q.pending.push_back(Pending { rows, tx });
+        }
+        self.inner.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn score(&self, rows: Vec<SparseRow>) -> Result<ScoredBatch, ServeError> {
+        let rx = self.submit(rows)?;
+        rx.recv().map_err(|_| ServeError::ChannelClosed)?
+    }
+
+    /// Pending requests not yet dispatched (for health reporting).
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue.lock().unwrap().pending.len()
+    }
+
+    /// Close the queue and join the dispatcher. Everything already
+    /// queued is still scored and answered before the thread exits —
+    /// the drain half of graceful shutdown.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            if q.closed {
+                return;
+            }
+            q.closed = true;
+        }
+        self.inner.cv.notify_all();
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coalescer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Dispatcher loop: sleep until work arrives, drain up to `max_batch`
+/// rows of pending requests, score them as one batch, answer each.
+fn dispatcher(inner: &Inner) {
+    loop {
+        let group = {
+            let mut q = inner.queue.lock().unwrap();
+            while q.pending.is_empty() && !q.closed {
+                q = inner.cv.wait(q).unwrap();
+            }
+            if q.pending.is_empty() && q.closed {
+                return;
+            }
+            let mut group = Vec::new();
+            let mut rows = 0usize;
+            while let Some(front) = q.pending.front() {
+                let n = front.rows.len();
+                // Always take at least one request; afterwards stop at
+                // the row cap (the Scorer shards an oversized single
+                // request internally).
+                if !group.is_empty() && rows + n > inner.max_batch {
+                    break;
+                }
+                rows += n;
+                group.push(q.pending.pop_front().unwrap());
+                if rows >= inner.max_batch {
+                    break;
+                }
+            }
+            group
+        };
+        score_group(inner, group);
+    }
+}
+
+/// Validate, pack, score, and answer one group of requests against a
+/// single model snapshot.
+fn score_group(inner: &Inner, group: Vec<Pending>) {
+    let snapshot = inner.registry.current();
+    let width = snapshot.model.w.len();
+
+    // Partition into refusals (answered immediately) and contributors.
+    let mut contributors: Vec<(Pending, usize)> = Vec::with_capacity(group.len());
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    let mut total_rows = 0usize;
+    for pending in group {
+        if pending.rows.is_empty() {
+            let _ = pending
+                .tx
+                .send(Err(ServeError::Score(ScoreError::EmptyBatch)));
+            continue;
+        }
+        if let Some(e) = pending
+            .rows
+            .iter()
+            .find_map(|r| r.validate(width).err())
+        {
+            let _ = pending.tx.send(Err(ServeError::Score(e)));
+            continue;
+        }
+        let offset = total_rows;
+        for (i, row) in pending.rows.iter().enumerate() {
+            for (&j, &v) in row.idx.iter().zip(&row.vals) {
+                triplets.push((offset + i, j as usize, v));
+            }
+        }
+        total_rows += pending.rows.len();
+        contributors.push((pending, offset));
+    }
+    if contributors.is_empty() {
+        return;
+    }
+
+    let x = CscMat::from_triplets(total_rows, width, &triplets);
+    let scored = Scorer::for_model(&snapshot.model)
+        .threads(inner.threads)
+        .pool(inner.pool.clone())
+        .build()
+        .and_then(|scorer| scorer.decision_values(&x));
+    match scored {
+        Ok(z) => {
+            for (pending, offset) in contributors {
+                let slice = z[offset..offset + pending.rows.len()].to_vec();
+                let _ = pending.tx.send(Ok(ScoredBatch {
+                    version: snapshot.version,
+                    z: slice,
+                }));
+            }
+        }
+        Err(e) => {
+            for (pending, _) in contributors {
+                let _ = pending.tx.send(Err(ServeError::Score(e.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::tiny_model;
+
+    fn rows_of(model_width: usize, seed: u64, n: usize) -> Vec<SparseRow> {
+        // Deterministic pseudo-rows without any RNG dependency.
+        (0..n)
+            .map(|i| {
+                let k = 1 + ((seed as usize + i) % 3);
+                let idx: Vec<u32> = (0..k)
+                    .map(|t| (((i + t * 5 + seed as usize * 7) % model_width) as u32))
+                    .collect();
+                let vals: Vec<f64> =
+                    (0..k).map(|t| 0.5 + (i + t) as f64 / 3.0).collect();
+                SparseRow { idx, vals }
+            })
+            .collect()
+    }
+
+    fn rows_to_csc(rows: &[SparseRow], width: usize) -> CscMat {
+        let mut trip = Vec::new();
+        for (i, r) in rows.iter().enumerate() {
+            for (&j, &v) in r.idx.iter().zip(&r.vals) {
+                trip.push((i, j as usize, v));
+            }
+        }
+        CscMat::from_triplets(rows.len(), width, &trip)
+    }
+
+    #[test]
+    fn coalesced_scores_bitwise_equal_per_request_scorer() {
+        let width = 24;
+        let model = Arc::new(tiny_model(width));
+        let registry = Arc::new(ModelRegistry::new(Arc::clone(&model)));
+        let pool = WorkerPool::new(3);
+        let co = Coalescer::start(registry, pool, 4, 16, 64);
+
+        for seed in 0..4u64 {
+            let rows = rows_of(width, seed, 9);
+            let got = co.score(rows.clone()).unwrap();
+            assert_eq!(got.version, 1);
+            let reference = Scorer::for_model(&model)
+                .threads(4)
+                .build()
+                .unwrap()
+                .decision_values(&rows_to_csc(&rows, width))
+                .unwrap();
+            assert_eq!(got.z.len(), reference.len());
+            for (a, b) in got.z.iter().zip(&reference) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} diverged");
+            }
+        }
+        co.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_get_typed_refusals_not_panics() {
+        let model = Arc::new(tiny_model(8));
+        let registry = Arc::new(ModelRegistry::new(model));
+        let co = Coalescer::start(registry, WorkerPool::new(2), 2, 8, 8);
+
+        assert_eq!(
+            co.score(vec![]),
+            Err(ServeError::Score(ScoreError::EmptyBatch))
+        );
+        let wide = SparseRow {
+            idx: vec![8],
+            vals: vec![1.0],
+        };
+        assert_eq!(
+            co.score(vec![wide]),
+            Err(ServeError::Score(ScoreError::FeatureOutOfRange {
+                feature: 8,
+                width: 8
+            }))
+        );
+        let ragged = SparseRow {
+            idx: vec![1, 2],
+            vals: vec![1.0],
+        };
+        assert_eq!(
+            co.score(vec![ragged]),
+            Err(ServeError::Score(ScoreError::LengthMismatch {
+                indices: 2,
+                values: 1
+            }))
+        );
+        co.shutdown();
+    }
+
+    #[test]
+    fn queue_cap_refuses_instead_of_buffering() {
+        let model = Arc::new(tiny_model(4));
+        let registry = Arc::new(ModelRegistry::new(model));
+        let pool = WorkerPool::new(1);
+        // Park the pool in a slow region from a helper thread: the
+        // dispatcher's next `parallel_for` waits behind it, so the
+        // queue fills deterministically while the first request scores.
+        let parked = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let p = pool.clone();
+        let flag = Arc::clone(&parked);
+        let blocker = std::thread::spawn(move || {
+            p.parallel_for(1, |_, _| {
+                while flag.load(std::sync::atomic::Ordering::Acquire) {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            });
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+
+        let co = Coalescer::start(registry, pool, 2, 4, 2);
+        let row = || SparseRow {
+            idx: vec![0],
+            vals: vec![1.0],
+        };
+        let mut receivers = Vec::new();
+        // First submission is picked up by the dispatcher, which then
+        // blocks on the parked pool; give it a moment to do so.
+        receivers.push(co.submit(vec![row()]).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // Two more fill the bounded queue; the next must be refused.
+        receivers.push(co.submit(vec![row()]).unwrap());
+        receivers.push(co.submit(vec![row()]).unwrap());
+        match co.submit(vec![row()]) {
+            Err(ServeError::QueueFull { depth: 2, cap: 2 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+
+        parked.store(false, std::sync::atomic::Ordering::Release);
+        blocker.join().unwrap();
+        for rx in receivers {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        co.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        let model = Arc::new(tiny_model(6));
+        let registry = Arc::new(ModelRegistry::new(model));
+        let co = Coalescer::start(registry, WorkerPool::new(2), 2, 4, 32);
+        let mut receivers = Vec::new();
+        for i in 0..10usize {
+            let rows = vec![SparseRow {
+                idx: vec![(i % 6) as u32],
+                vals: vec![1.0 + i as f64],
+            }];
+            if let Ok(rx) = co.submit(rows) {
+                receivers.push(rx);
+            }
+        }
+        co.shutdown();
+        // Every admitted request was answered before the dispatcher
+        // exited.
+        for rx in receivers {
+            let got = rx.recv().expect("answered before shutdown");
+            assert!(got.is_ok());
+        }
+    }
+}

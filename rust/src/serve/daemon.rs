@@ -1,0 +1,417 @@
+//! The `pcdn serve` daemon: accept loop, endpoint dispatch, shutdown.
+//!
+//! Endpoints:
+//!
+//! * `POST /score` — JSON rows in, decision values + model version out.
+//! * `GET /healthz` — liveness, installed version, in-flight gauge.
+//! * `GET /model` — provenance of the installed model (no weights).
+//! * `POST /reload` — re-read the source artifact; on failure the old
+//!   model stays installed and the error is reported.
+//! * `POST /shutdown` — begin graceful shutdown: stop admitting, drain
+//!   in-flight work, exit the accept loop. (A loopback affordance for
+//!   CI and benchmarking; a production deployment would front this.)
+//!
+//! Overload answers `503` with a `Retry-After` header — the bounded
+//! admission gate and coalescer queue shed load instead of buffering
+//! it. A connection whose first line is not an HTTP request line drops
+//! into the one-line-per-request protocol (`score j:v ...` → `ok
+//! <version> <z>`) used by the latency benchmark.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::admission::Admission;
+use super::coalesce::Coalescer;
+use super::registry::ModelRegistry;
+use super::{http, protocol, ServeError};
+use crate::parallel::pool::WorkerPool;
+use crate::util::json::Json;
+
+/// Daemon configuration (the `pcdn serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address, e.g. `127.0.0.1:8077` (`:0` picks a free port).
+    pub addr: String,
+    /// Scoring shard degree per coalesced batch.
+    pub threads: usize,
+    /// Row cap per coalesced dispatch.
+    pub max_batch: usize,
+    /// Pending-request queue bound (beyond it: 503).
+    pub queue_cap: usize,
+    /// Concurrent in-flight request cap (beyond it: 503).
+    pub max_inflight: usize,
+    /// Value of the `Retry-After` header on 503 responses.
+    pub retry_after_secs: u64,
+    /// Poll the source artifact for atomic replacement every this many
+    /// seconds; 0 disables the watcher (explicit `POST /reload` always
+    /// works).
+    pub watch_secs: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1:8077".into(),
+            threads: 4,
+            max_batch: 1024,
+            queue_cap: 256,
+            max_inflight: 64,
+            retry_after_secs: 1,
+            watch_secs: 0,
+        }
+    }
+}
+
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    coalescer: Coalescer,
+    admission: Admission,
+    retry_after: String,
+    stop: AtomicBool,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    fn stop_requested(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// Flip the stop flag, refuse new admissions, and poke the accept
+    /// loop awake with a loopback connection.
+    fn request_stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        self.admission.begin_drain();
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A running scoring daemon. Dropping it without calling
+/// [`Server::shutdown`] aborts ungracefully (threads are detached);
+/// call `shutdown` (or serve `POST /shutdown` + [`Server::wait`]) for
+/// the drain-then-exit path.
+pub struct Server {
+    shared: Arc<Shared>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    watcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Bind `opts.addr`, spawn the accept loop (one blocking thread per
+    /// connection) and the optional reload watcher, and return.
+    pub fn bind(registry: Arc<ModelRegistry>, opts: ServeOptions) -> Result<Server, ServeError> {
+        let listener = TcpListener::bind(&opts.addr)
+            .map_err(|e| ServeError::Io(format!("bind {}: {e}", opts.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| ServeError::Io(e.to_string()))?;
+        let coalescer = Coalescer::start(
+            Arc::clone(&registry),
+            WorkerPool::global().clone(),
+            opts.threads,
+            opts.max_batch,
+            opts.queue_cap,
+        );
+        let shared = Arc::new(Shared {
+            registry,
+            coalescer,
+            admission: Admission::new(opts.max_inflight),
+            retry_after: opts.retry_after_secs.to_string(),
+            stop: AtomicBool::new(false),
+            addr,
+        });
+
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("pcdn-accept".into())
+            .spawn(move || accept_loop(&listener, &accept_shared))
+            .expect("spawn accept thread");
+
+        let watcher = if opts.watch_secs > 0 {
+            let watch_shared = Arc::clone(&shared);
+            let interval = Duration::from_secs(opts.watch_secs);
+            Some(
+                std::thread::Builder::new()
+                    .name("pcdn-watch".into())
+                    .spawn(move || watch_loop(&watch_shared, interval))
+                    .expect("spawn watcher thread"),
+            )
+        } else {
+            None
+        };
+
+        Ok(Server {
+            shared,
+            accept: Mutex::new(Some(accept)),
+            watcher: Mutex::new(watcher),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Whether shutdown has been requested (flag, `POST /shutdown`, or
+    /// [`Server::shutdown`]).
+    pub fn stop_requested(&self) -> bool {
+        self.shared.stop_requested()
+    }
+
+    /// Block until shutdown is requested, then drain and exit: join the
+    /// accept loop, wait for in-flight permits to release, answer
+    /// everything still queued, and stop the worker threads.
+    pub fn wait(&self) {
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.shared.admission.begin_drain();
+        self.shared.admission.wait_drained(Duration::from_secs(30));
+        self.shared.coalescer.shutdown();
+        if let Some(h) = self.watcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Request graceful shutdown and drain (idempotent).
+    pub fn shutdown(&self) {
+        self.shared.request_stop();
+        self.wait();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.stop_requested() {
+            return;
+        }
+        match stream {
+            Ok(stream) => {
+                let conn_shared = Arc::clone(shared);
+                let _ = std::thread::Builder::new()
+                    .name("pcdn-conn".into())
+                    .spawn(move || handle_conn(&conn_shared, stream));
+            }
+            Err(_) => {
+                // Transient accept failure (e.g. fd pressure): back off
+                // briefly instead of spinning.
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn watch_loop(shared: &Arc<Shared>, interval: Duration) {
+    while !shared.stop_requested() {
+        // Sleep in short slices so shutdown isn't delayed by a long
+        // watch interval.
+        let mut left = interval;
+        while left > Duration::ZERO && !shared.stop_requested() {
+            let step = left.min(Duration::from_millis(100));
+            std::thread::sleep(step);
+            left = left.saturating_sub(step);
+        }
+        if shared.stop_requested() {
+            return;
+        }
+        // A failed reload keeps the old model; nothing to do here but
+        // try again next tick.
+        let _ = shared.registry.poll_changed();
+    }
+}
+
+fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        let mut first = String::new();
+        match reader.read_line(&mut first) {
+            Ok(0) | Err(_) => return,
+            Ok(_) => {}
+        }
+        if first.trim().is_empty() {
+            continue;
+        }
+        match http::read_request(&first, &mut reader) {
+            Ok(Some(req)) => {
+                let keep = handle_http(shared, &req, &mut writer);
+                if !keep {
+                    return;
+                }
+            }
+            Ok(None) => {
+                // Line protocol: this line and every following one.
+                handle_line(shared, first.trim(), &mut writer);
+                loop {
+                    let mut line = String::new();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => return,
+                        Ok(_) => {}
+                    }
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    handle_line(shared, line.trim(), &mut writer);
+                }
+            }
+            Err(e) => {
+                let body = protocol::error_json(&e).dump();
+                let _ = http::write_response(
+                    &mut writer,
+                    400,
+                    http::reason(400),
+                    false,
+                    &[],
+                    &body,
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// HTTP status for a serving error.
+fn status_of(e: &ServeError) -> u16 {
+    match e {
+        ServeError::Overloaded { .. }
+        | ServeError::QueueFull { .. }
+        | ServeError::Draining
+        | ServeError::ChannelClosed => 503,
+        ServeError::Score(_) | ServeError::BadRequest(_) => 400,
+        ServeError::Reload(_) | ServeError::Io(_) | ServeError::Remote { .. } => 500,
+    }
+}
+
+/// Dispatch one HTTP request; returns whether to keep the connection.
+fn handle_http(shared: &Arc<Shared>, req: &http::Request, writer: &mut TcpStream) -> bool {
+    let keep = req.keep_alive && !shared.stop_requested();
+    let (status, extra, body): (u16, Vec<(&str, String)>, String) =
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/score") => match score_via_http(shared, &req.body) {
+                Ok(json) => (200, vec![], json.dump()),
+                Err(e) => {
+                    let status = status_of(&e);
+                    let extra = if status == 503 {
+                        vec![("Retry-After", shared.retry_after.clone())]
+                    } else {
+                        vec![]
+                    };
+                    (status, extra, protocol::error_json(&e).dump())
+                }
+            },
+            ("GET", "/healthz") => {
+                let doc = Json::obj(vec![
+                    ("status", Json::Str("ok".into())),
+                    (
+                        "version",
+                        Json::Num(shared.registry.current_version() as f64),
+                    ),
+                    (
+                        "in_flight",
+                        Json::Num(shared.admission.in_flight() as f64),
+                    ),
+                    (
+                        "queue_depth",
+                        Json::Num(shared.coalescer.queue_depth() as f64),
+                    ),
+                    ("draining", Json::Bool(shared.admission.is_draining())),
+                ]);
+                (200, vec![], doc.dump())
+            }
+            ("GET", "/model") => {
+                let mv = shared.registry.current();
+                let p = &mv.model.provenance;
+                let doc = Json::obj(vec![
+                    ("version", Json::Num(mv.version as f64)),
+                    ("features", Json::Num(mv.model.w.len() as f64)),
+                    ("nnz", Json::Num(mv.model.nnz() as f64)),
+                    ("solver", Json::Str(p.solver.clone())),
+                    ("dataset", Json::Str(p.dataset.clone())),
+                    (
+                        "fingerprint",
+                        Json::Str(format!("{:#018x}", p.fingerprint)),
+                    ),
+                    ("converged", Json::Bool(p.converged)),
+                    ("final_objective", Json::Num(p.final_objective)),
+                ]);
+                (200, vec![], doc.dump())
+            }
+            ("POST", "/reload") => match shared.registry.reload() {
+                Ok(version) => (
+                    200,
+                    vec![],
+                    Json::obj(vec![("version", Json::Num(version as f64))]).dump(),
+                ),
+                Err(e) => {
+                    let e = ServeError::Reload(e);
+                    (status_of(&e), vec![], protocol::error_json(&e).dump())
+                }
+            },
+            ("POST", "/shutdown") => {
+                shared.request_stop();
+                (
+                    200,
+                    vec![],
+                    Json::obj(vec![("status", Json::Str("shutting down".into()))]).dump(),
+                )
+            }
+            ("GET" | "POST", _) => {
+                let e = ServeError::BadRequest(format!("no such endpoint {}", req.path));
+                (404, vec![], protocol::error_json(&e).dump())
+            }
+            _ => {
+                let e = ServeError::BadRequest(format!("method {} not allowed", req.method));
+                (405, vec![], protocol::error_json(&e).dump())
+            }
+        };
+    let keep = keep && !shared.stop_requested();
+    let ok = http::write_response(
+        writer,
+        status,
+        http::reason(status),
+        keep,
+        &extra,
+        &body,
+    )
+    .is_ok();
+    keep && ok
+}
+
+/// The `/score` pipeline: admit → parse → coalesce → respond.
+fn score_via_http(shared: &Shared, body: &str) -> Result<Json, ServeError> {
+    let _permit = shared.admission.try_acquire()?;
+    let rows = protocol::parse_score_request(body)?;
+    let batch = shared.coalescer.score(rows)?;
+    Ok(protocol::score_response_json(batch.version, &batch.z))
+}
+
+/// One line-protocol exchange.
+fn handle_line(shared: &Arc<Shared>, line: &str, writer: &mut TcpStream) {
+    let reply = match protocol::parse_line_request(line) {
+        Ok(protocol::LineRequest::Ping) => "pong\n".to_string(),
+        Ok(protocol::LineRequest::Score(row)) => match score_one(shared, row) {
+            Ok((version, z)) => protocol::line_ok(version, z),
+            Err(e) => protocol::line_err(&e),
+        },
+        Err(e) => protocol::line_err(&e),
+    };
+    let _ = writer.write_all(reply.as_bytes());
+    let _ = writer.flush();
+}
+
+fn score_one(shared: &Shared, row: protocol::SparseRow) -> Result<(u64, f64), ServeError> {
+    let _permit = shared.admission.try_acquire()?;
+    let batch = shared.coalescer.score(vec![row])?;
+    let z = batch
+        .z
+        .first()
+        .copied()
+        .ok_or_else(|| ServeError::Io("coalescer returned no rows".into()))?;
+    Ok((batch.version, z))
+}

@@ -1,0 +1,215 @@
+//! Minimal blocking HTTP/1.1 support for the serving daemon.
+//!
+//! Deliberately small: request line + headers + `Content-Length` body,
+//! keep-alive by default (HTTP/1.1 semantics), no chunked encoding, no
+//! TLS — the daemon fronts a trusted network position, and the repo's
+//! vendored-shim philosophy rules out pulling in a server framework.
+//! Malformed traffic is a typed [`ServeError::BadRequest`], never a
+//! panic; oversized bodies are refused before allocation.
+
+use std::io::{BufRead, Read, Write};
+
+use super::ServeError;
+
+/// Refuse request bodies larger than this (16 MiB) before buffering
+/// them — a `Content-Length` is attacker-controlled input.
+pub const MAX_BODY: usize = 16 << 20;
+
+/// One parsed request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+    /// HTTP/1.1 defaults to keep-alive; `Connection: close` clears it.
+    pub keep_alive: bool,
+}
+
+/// Read one request, given the already-consumed request line (the
+/// daemon reads the first line itself to sniff HTTP from the line
+/// protocol). Returns `Ok(None)` if the line is not an HTTP request
+/// line.
+pub fn read_request(
+    request_line: &str,
+    reader: &mut impl BufRead,
+) -> Result<Option<Request>, ServeError> {
+    let line = request_line.trim_end();
+    let mut parts = line.split(' ');
+    let (Some(method), Some(path), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return Ok(None);
+    };
+    if parts.next().is_some() || !matches!(version, "HTTP/1.1" | "HTTP/1.0") {
+        return Ok(None);
+    }
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        let n = reader
+            .read_line(&mut header)
+            .map_err(|e| ServeError::Io(e.to_string()))?;
+        if n == 0 {
+            return Err(ServeError::BadRequest("eof inside headers".into()));
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        let Some((name, value)) = header.split_once(':') else {
+            return Err(ServeError::BadRequest(format!("bad header {header:?}")));
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .parse::<usize>()
+                .map_err(|_| ServeError::BadRequest("bad content-length".into()))?;
+            if content_length > MAX_BODY {
+                return Err(ServeError::BadRequest(format!(
+                    "body of {content_length} bytes exceeds the {MAX_BODY} byte cap"
+                )));
+            }
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        }
+    }
+    let mut raw = vec![0u8; content_length];
+    reader
+        .read_exact(&mut raw)
+        .map_err(|e| ServeError::Io(e.to_string()))?;
+    let body = String::from_utf8(raw)
+        .map_err(|_| ServeError::BadRequest("non-UTF-8 body".into()))?;
+    Ok(Some(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        body,
+        keep_alive,
+    }))
+}
+
+/// Write one response. `extra` headers are appended after the standard
+/// ones (`Content-Type`, `Content-Length`, `Connection`).
+pub fn write_response(
+    out: &mut impl Write,
+    status: u16,
+    reason: &str,
+    keep_alive: bool,
+    extra: &[(&str, String)],
+    body: &str,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    for (name, value) in extra {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    out.write_all(head.as_bytes())?;
+    out.write_all(body.as_bytes())?;
+    out.flush()
+}
+
+/// Standard reason phrase for the handful of statuses the daemon emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(first: &str, rest: &str) -> Result<Option<Request>, ServeError> {
+        let mut r = BufReader::new(rest.as_bytes());
+        read_request(first, &mut r)
+    }
+
+    #[test]
+    fn parses_post_with_body_and_keep_alive() {
+        let req = parse(
+            "POST /score HTTP/1.1\r\n",
+            "Host: x\r\nContent-Length: 4\r\n\r\nbody",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/score");
+        assert_eq!(req.body, "body");
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn connection_close_and_http10_disable_keep_alive() {
+        let req = parse(
+            "GET /healthz HTTP/1.1\r\n",
+            "Connection: close\r\n\r\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert!(!req.keep_alive);
+        let req = parse("GET / HTTP/1.0\r\n", "\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn non_http_first_line_is_sniffed_not_errored() {
+        assert!(parse("score 1:0.5 2:1.0\n", "").unwrap().is_none());
+        assert!(parse("ping\n", "").unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_and_malformed_requests_are_typed_errors() {
+        assert!(matches!(
+            parse(
+                "POST /score HTTP/1.1\r\n",
+                "Content-Length: 99999999999\r\n\r\n"
+            ),
+            Err(ServeError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse("POST /score HTTP/1.1\r\n", "NotAHeader\r\n\r\n"),
+            Err(ServeError::BadRequest(_))
+        ));
+        assert!(matches!(
+            parse("POST /score HTTP/1.1\r\n", "Content-Length: 10\r\n\r\nshort"),
+            Err(ServeError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn response_writer_emits_well_formed_http() {
+        let mut buf = Vec::new();
+        write_response(
+            &mut buf,
+            503,
+            reason(503),
+            false,
+            &[("Retry-After", "1".to_string())],
+            "{\"error\":\"overloaded\"}",
+        )
+        .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("{\"error\":\"overloaded\"}"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Production scoring service: the daemon behind `pcdn serve`.
+//!
+//! The paper's training-side discipline — fixed minibatch partitions,
+//! shared worker pools, bitwise reproducibility — carries over to the
+//! serving path here. The subsystem is std-only (blocking sockets, no
+//! new dependencies) and splits into:
+//!
+//! * [`registry`] — [`ModelRegistry`]: versioned `PCDNMDL1` artifacts
+//!   with atomic hot-swap (an `ArcSwap`-style epoch pointer hand-rolled
+//!   on `Mutex<Arc<_>>`), reloadable from disk via `POST /reload` or a
+//!   polling watcher keyed to `util::tmp_sibling` atomic renames.
+//! * [`coalesce`] — [`Coalescer`]: packs concurrent single/batch score
+//!   requests into one [`SampleRanges`](crate::parallel::range::SampleRanges)
+//!   minibatch dispatched on the shared
+//!   [`WorkerPool`](crate::parallel::pool::WorkerPool). Every score it
+//!   returns is **bitwise equal** to
+//!   [`Scorer::decision_values`](crate::api::Scorer::decision_values)
+//!   over the same rows: per-sample accumulation is ascending feature
+//!   order in both paths, so neither batch composition nor pool width
+//!   can perturb a bit.
+//! * [`admission`] — [`Admission`]: bounded in-flight cap with RAII
+//!   permits; overload sheds with `503 + Retry-After` instead of
+//!   queueing without bound, and graceful shutdown drains in-flight
+//!   work before the process exits.
+//! * [`protocol`] — wire types ([`SparseRow`]), the JSON request/response
+//!   bodies, the one-line-per-request fallback protocol used for
+//!   benchmarking, and a small blocking HTTP client for tests/CI.
+//! * [`http`] — a minimal blocking HTTP/1.1 reader/writer.
+//! * [`daemon`] — [`Server`]: the accept loop wiring it all together,
+//!   with `/score`, `/healthz`, `/model`, `/reload`, `/shutdown`.
+//!
+//! Determinism policy: responses carry the model version they were
+//! scored against, a batch is never scored across two versions, and the
+//! decision values on the wire round-trip bit-exactly (shortest
+//! round-trip float formatting in both the JSON and line protocols).
+
+pub mod admission;
+pub mod coalesce;
+pub mod daemon;
+pub mod http;
+pub mod protocol;
+pub mod registry;
+
+use std::fmt;
+
+pub use admission::{Admission, Permit};
+pub use coalesce::{Coalescer, ScoredBatch};
+pub use daemon::{ServeOptions, Server};
+pub use protocol::SparseRow;
+pub use registry::{ModelRegistry, ModelVersion};
+
+use crate::api::{ModelLoadError, ScoreError};
+
+/// Why the serving layer rejected or failed a request. Maps onto HTTP
+/// statuses in [`daemon`]: overload variants become `503 + Retry-After`,
+/// malformed input becomes `400`, reload failures become `500`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The in-flight cap is reached; shed load instead of queueing.
+    Overloaded { in_flight: usize, cap: usize },
+    /// The coalescer's pending queue is full.
+    QueueFull { depth: usize, cap: usize },
+    /// The server is draining for shutdown and accepts no new work.
+    Draining,
+    /// The request was admitted but scoring rejected it.
+    Score(ScoreError),
+    /// A model reload was requested and failed; the previous model
+    /// stays installed.
+    Reload(ModelLoadError),
+    /// The request could not be parsed.
+    BadRequest(String),
+    /// Socket-level failure.
+    Io(String),
+    /// The scoring pipeline shut down underneath a waiting request.
+    ChannelClosed,
+    /// Client side: the server answered with a non-success status.
+    Remote { status: u16, message: String },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded { in_flight, cap } => {
+                write!(f, "overloaded: {in_flight} requests in flight (cap {cap})")
+            }
+            ServeError::QueueFull { depth, cap } => {
+                write!(f, "queue full: {depth} pending requests (cap {cap})")
+            }
+            ServeError::Draining => write!(f, "server is draining for shutdown"),
+            ServeError::Score(e) => write!(f, "scoring rejected: {e}"),
+            ServeError::Reload(e) => write!(f, "reload failed: {e}"),
+            ServeError::BadRequest(d) => write!(f, "bad request: {d}"),
+            ServeError::Io(d) => write!(f, "io error: {d}"),
+            ServeError::ChannelClosed => write!(f, "scoring pipeline closed"),
+            ServeError::Remote { status, message } => {
+                write!(f, "server answered {status}: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<ScoreError> for ServeError {
+    fn from(e: ScoreError) -> ServeError {
+        ServeError::Score(e)
+    }
+}
+
+impl From<ModelLoadError> for ServeError {
+    fn from(e: ModelLoadError) -> ServeError {
+        ServeError::Reload(e)
+    }
+}

@@ -1,0 +1,409 @@
+//! Wire formats for the scoring daemon, plus a small blocking client.
+//!
+//! Two protocols share one data model ([`SparseRow`]):
+//!
+//! * **JSON over HTTP** — `POST /score` with
+//!   `{"rows":[{"idx":[1,7],"vals":[0.5,1.25]}]}`, answered by
+//!   `{"version":3,"z":[-0.75,...]}`. Decision values round-trip
+//!   bit-exactly: the JSON writer uses Rust's shortest round-trip float
+//!   formatting, so a parsed response compares bitwise against a local
+//!   [`Scorer`](crate::api::Scorer) run.
+//! * **Line protocol** — one request per line for benchmarking over a
+//!   persistent connection: `score 1:0.5 7:1.25` answers
+//!   `ok <version> <z>`, `ping` answers `pong`, errors answer
+//!   `err <message>`. Same bit-exact float formatting.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::coalesce::ScoredBatch;
+use super::ServeError;
+use crate::api::ScoreError;
+use crate::util::json::Json;
+
+/// One sparse sample as parallel `(feature index, value)` arrays — the
+/// unit both protocols move around.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseRow {
+    pub idx: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl SparseRow {
+    /// Check this row against a model of `width` features: the typed
+    /// rejections the serving path returns instead of panicking.
+    pub fn validate(&self, width: usize) -> Result<(), ScoreError> {
+        if self.idx.len() != self.vals.len() {
+            return Err(ScoreError::LengthMismatch {
+                indices: self.idx.len(),
+                values: self.vals.len(),
+            });
+        }
+        for &j in &self.idx {
+            if j as usize >= width {
+                return Err(ScoreError::FeatureOutOfRange {
+                    feature: j as usize,
+                    width,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---- JSON bodies ------------------------------------------------------
+
+/// Encode rows as the `POST /score` request body.
+pub fn rows_to_json(rows: &[SparseRow]) -> Json {
+    Json::obj(vec![(
+        "rows",
+        Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        (
+                            "idx",
+                            Json::Arr(r.idx.iter().map(|&j| Json::Num(j as f64)).collect()),
+                        ),
+                        (
+                            "vals",
+                            Json::Arr(r.vals.iter().map(|&v| Json::Num(v)).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+/// Decode a `POST /score` request body. Structural problems (not JSON,
+/// missing fields, non-numeric entries) are [`ServeError::BadRequest`];
+/// semantic ones (index width, length mismatch) surface later as
+/// [`ScoreError`]s from validation against the scoring model.
+pub fn parse_score_request(body: &str) -> Result<Vec<SparseRow>, ServeError> {
+    let doc = Json::parse(body).map_err(|e| ServeError::BadRequest(e.to_string()))?;
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServeError::BadRequest("missing \"rows\" array".into()))?;
+    let mut out = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let idx = row
+            .get("idx")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ServeError::BadRequest(format!("row {i}: missing \"idx\"")))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .and_then(|j| u32::try_from(j).ok())
+                    .ok_or_else(|| ServeError::BadRequest(format!("row {i}: bad index")))
+            })
+            .collect::<Result<Vec<u32>, _>>()?;
+        let vals = row
+            .get("vals")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ServeError::BadRequest(format!("row {i}: missing \"vals\"")))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| ServeError::BadRequest(format!("row {i}: bad value")))
+            })
+            .collect::<Result<Vec<f64>, _>>()?;
+        out.push(SparseRow { idx, vals });
+    }
+    Ok(out)
+}
+
+/// Encode a scored batch as the `POST /score` response body.
+pub fn score_response_json(version: u64, z: &[f64]) -> Json {
+    Json::obj(vec![
+        ("version", Json::Num(version as f64)),
+        ("z", Json::Arr(z.iter().map(|&v| Json::Num(v)).collect())),
+    ])
+}
+
+/// Decode a `POST /score` response body (client side).
+pub fn parse_score_response(body: &str) -> Result<ScoredBatch, ServeError> {
+    let doc = Json::parse(body).map_err(|e| ServeError::BadRequest(e.to_string()))?;
+    let version = doc
+        .get("version")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ServeError::BadRequest("missing \"version\"".into()))?
+        as u64;
+    let z = doc
+        .get("z")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServeError::BadRequest("missing \"z\"".into()))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| ServeError::BadRequest("non-numeric score".into()))
+        })
+        .collect::<Result<Vec<f64>, _>>()?;
+    Ok(ScoredBatch { version, z })
+}
+
+/// Encode an error as the JSON body of a non-200 response.
+pub fn error_json(e: &ServeError) -> Json {
+    Json::obj(vec![("error", Json::Str(e.to_string()))])
+}
+
+// ---- line protocol ----------------------------------------------------
+
+/// Parse one line-protocol request: `score <j>:<v> ...` (one row) or
+/// `ping`.
+pub fn parse_line_request(line: &str) -> Result<LineRequest, ServeError> {
+    let line = line.trim();
+    if line == "ping" {
+        return Ok(LineRequest::Ping);
+    }
+    let rest = match line.strip_prefix("score") {
+        Some(r) if r.is_empty() || r.starts_with(char::is_whitespace) => r,
+        _ => {
+            return Err(ServeError::BadRequest(format!(
+                "unknown line command {:?}",
+                line.split_whitespace().next().unwrap_or("")
+            )))
+        }
+    };
+    let mut idx = Vec::new();
+    let mut vals = Vec::new();
+    for tok in rest.split_whitespace() {
+        let (j, v) = tok
+            .split_once(':')
+            .ok_or_else(|| ServeError::BadRequest(format!("bad token {tok:?}")))?;
+        idx.push(
+            j.parse::<u32>()
+                .map_err(|_| ServeError::BadRequest(format!("bad index {j:?}")))?,
+        );
+        vals.push(
+            v.parse::<f64>()
+                .map_err(|_| ServeError::BadRequest(format!("bad value {v:?}")))?,
+        );
+    }
+    Ok(LineRequest::Score(SparseRow { idx, vals }))
+}
+
+/// A parsed line-protocol request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LineRequest {
+    Score(SparseRow),
+    Ping,
+}
+
+/// `ok <version> <z>` — `{z}` is shortest round-trip formatting, so the
+/// bits survive the wire.
+pub fn line_ok(version: u64, z: f64) -> String {
+    format!("ok {version} {z}\n")
+}
+
+pub fn line_err(e: &ServeError) -> String {
+    format!("err {e}\n")
+}
+
+/// Parse an `ok <version> <z>` line (client side).
+pub fn parse_line_response(line: &str) -> Result<(u64, f64), ServeError> {
+    let line = line.trim();
+    if let Some(msg) = line.strip_prefix("err ") {
+        return Err(ServeError::Remote {
+            status: 0,
+            message: msg.to_string(),
+        });
+    }
+    let rest = line
+        .strip_prefix("ok ")
+        .ok_or_else(|| ServeError::BadRequest(format!("unexpected reply {line:?}")))?;
+    let (v, z) = rest
+        .split_once(' ')
+        .ok_or_else(|| ServeError::BadRequest("short ok reply".into()))?;
+    Ok((
+        v.parse::<u64>()
+            .map_err(|_| ServeError::BadRequest("bad version".into()))?,
+        z.parse::<f64>()
+            .map_err(|_| ServeError::BadRequest("bad score".into()))?,
+    ))
+}
+
+// ---- blocking HTTP client ---------------------------------------------
+
+/// A raw HTTP reply: status, optional `Retry-After` seconds, body.
+#[derive(Clone, Debug)]
+pub struct HttpReply {
+    pub status: u16,
+    pub retry_after: Option<u64>,
+    pub body: String,
+}
+
+/// One blocking HTTP/1.1 exchange on a fresh connection (the client
+/// used by tests, CI smoke, and `pcdn predict --via`).
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> Result<HttpReply, ServeError> {
+    let io_err = |e: std::io::Error| ServeError::Io(format!("{addr}: {e}"));
+    let stream = TcpStream::connect(addr).map_err(io_err)?;
+    stream.set_read_timeout(Some(timeout)).map_err(io_err)?;
+    stream.set_write_timeout(Some(timeout)).map_err(io_err)?;
+    let mut reader = BufReader::new(stream);
+    let request = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    reader
+        .get_mut()
+        .write_all(request.as_bytes())
+        .map_err(io_err)?;
+
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).map_err(io_err)?;
+    let status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| ServeError::Io(format!("bad status line {status_line:?}")))?;
+
+    let mut retry_after = None;
+    let mut content_length = None;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).map_err(io_err)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("retry-after") {
+                retry_after = value.parse::<u64>().ok();
+            } else if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.parse::<usize>().ok();
+            }
+        }
+    }
+    let mut raw = Vec::new();
+    match content_length {
+        Some(n) => {
+            raw.resize(n, 0);
+            reader.read_exact(&mut raw).map_err(io_err)?;
+        }
+        None => {
+            reader.read_to_end(&mut raw).map_err(io_err)?;
+        }
+    }
+    let body = String::from_utf8(raw)
+        .map_err(|_| ServeError::Io("non-UTF-8 response body".into()))?;
+    Ok(HttpReply {
+        status,
+        retry_after,
+        body,
+    })
+}
+
+/// Score `rows` against a running daemon over HTTP. Non-200 answers
+/// surface as [`ServeError::Remote`] with the server's error message.
+pub fn http_score(addr: &str, rows: &[SparseRow]) -> Result<ScoredBatch, ServeError> {
+    let body = rows_to_json(rows).dump();
+    let reply = http_request(addr, "POST", "/score", &body, Duration::from_secs(30))?;
+    if reply.status != 200 {
+        let message = Json::parse(&reply.body)
+            .ok()
+            .and_then(|d| d.get("error").and_then(Json::as_str).map(str::to_string))
+            .unwrap_or(reply.body);
+        return Err(ServeError::Remote {
+            status: reply.status,
+            message,
+        });
+    }
+    parse_score_response(&reply.body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_request_roundtrip_is_bitwise() {
+        let rows = vec![
+            SparseRow {
+                idx: vec![0, 3, 9],
+                vals: vec![0.1, -2.5, 1.0 / 3.0],
+            },
+            SparseRow {
+                idx: vec![],
+                vals: vec![],
+            },
+        ];
+        let body = rows_to_json(&rows).dump();
+        let back = parse_score_request(&body).unwrap();
+        assert_eq!(rows.len(), back.len());
+        for (a, b) in rows.iter().zip(&back) {
+            assert_eq!(a.idx, b.idx);
+            for (x, y) in a.vals.iter().zip(&b.vals) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn json_response_roundtrip_is_bitwise() {
+        let z = vec![-0.0, 1.0 / 3.0, 6.02e23, -7.25];
+        let body = score_response_json(42, &z).dump();
+        let back = parse_score_response(&body).unwrap();
+        assert_eq!(back.version, 42);
+        for (a, b) in z.iter().zip(&back.z) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn line_protocol_roundtrip_is_bitwise() {
+        let z = 2.0 / 3.0;
+        let (v, back) = parse_line_response(&line_ok(7, z)).unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(back.to_bits(), z.to_bits());
+
+        let req = parse_line_request("score 1:0.5 7:0.3333333333333333").unwrap();
+        match req {
+            LineRequest::Score(r) => {
+                assert_eq!(r.idx, vec![1, 7]);
+                assert_eq!(r.vals[1], 0.333_333_333_333_333_3);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(parse_line_request("ping").unwrap(), LineRequest::Ping);
+        assert!(parse_line_request("launch 1:2").is_err());
+        assert!(parse_line_request("score nope").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_rows() {
+        let row = SparseRow {
+            idx: vec![0, 9],
+            vals: vec![1.0, 2.0],
+        };
+        assert!(row.validate(10).is_ok());
+        assert!(matches!(
+            row.validate(9),
+            Err(ScoreError::FeatureOutOfRange { feature: 9, width: 9 })
+        ));
+        let bad = SparseRow {
+            idx: vec![0],
+            vals: vec![],
+        };
+        assert!(matches!(
+            bad.validate(10),
+            Err(ScoreError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_request_bodies_are_typed_errors() {
+        assert!(parse_score_request("not json").is_err());
+        assert!(parse_score_request("{}").is_err());
+        assert!(parse_score_request("{\"rows\":[{\"idx\":[1]}]}").is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Versioned model registry with atomic hot-swap.
+//!
+//! The swap pointer is an `ArcSwap`-style epoch pointer hand-rolled on
+//! `Mutex<Arc<ModelVersion>>`: readers take the lock only long enough
+//! to clone the `Arc` (a refcount bump), so a reader either sees the
+//! old version or the new one in full — never a torn mixture — and
+//! in-flight batches keep their snapshot alive for as long as they
+//! score against it. Versions are monotonically increasing and never
+//! reused, so a response stamped `version: n` is attributable to
+//! exactly one registered artifact.
+//!
+//! Reloading is pull-based: [`ModelRegistry::reload`] re-reads the
+//! source path (exposed over `POST /reload`), and
+//! [`ModelRegistry::poll_changed`] backs the optional file watcher —
+//! because [`Model::save`] publishes via `util::tmp_sibling`
+//! write-then-rename, a changed `(mtime, len)` stamp always refers to a
+//! complete artifact, never a half-written one.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::SystemTime;
+
+use crate::api::{Model, ModelLoadError};
+
+/// One registered artifact: the shared model plus its registry epoch.
+#[derive(Clone, Debug)]
+pub struct ModelVersion {
+    /// Monotonic epoch, starting at 1 for the boot model.
+    pub version: u64,
+    pub model: Arc<Model>,
+}
+
+/// File identity stamp used by the watcher to detect atomic
+/// replacement without hashing the content.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct FileStamp {
+    mtime: Option<SystemTime>,
+    len: u64,
+}
+
+fn stamp(path: &Path) -> std::io::Result<FileStamp> {
+    let meta = std::fs::metadata(path)?;
+    Ok(FileStamp {
+        mtime: meta.modified().ok(),
+        len: meta.len(),
+    })
+}
+
+/// Versioned model holder with atomic hot-swap. See the module docs.
+pub struct ModelRegistry {
+    current: Mutex<Arc<ModelVersion>>,
+    next_version: AtomicU64,
+    /// Source artifact for `reload`/watching, when loaded from disk.
+    source: Option<PathBuf>,
+    last_stamp: Mutex<Option<FileStamp>>,
+}
+
+impl ModelRegistry {
+    /// Register a boot model (version 1) with no on-disk source;
+    /// `reload` is a no-op error-free refusal and the watcher never
+    /// fires.
+    pub fn new(model: Arc<Model>) -> ModelRegistry {
+        ModelRegistry {
+            current: Mutex::new(Arc::new(ModelVersion { version: 1, model })),
+            next_version: AtomicU64::new(2),
+            source: None,
+            last_stamp: Mutex::new(None),
+        }
+    }
+
+    /// Load the boot model from `path` and remember it as the reload
+    /// source.
+    pub fn from_path(path: &Path) -> Result<ModelRegistry, ModelLoadError> {
+        let model = Arc::new(Model::load(path)?);
+        let reg = ModelRegistry {
+            current: Mutex::new(Arc::new(ModelVersion { version: 1, model })),
+            next_version: AtomicU64::new(2),
+            source: Some(path.to_path_buf()),
+            last_stamp: Mutex::new(stamp(path).ok()),
+        };
+        Ok(reg)
+    }
+
+    /// Snapshot the current version: a refcount bump under a
+    /// momentarily-held lock. The returned `Arc` keeps that version
+    /// alive for the caller regardless of later swaps.
+    pub fn current(&self) -> Arc<ModelVersion> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+
+    /// The epoch of the currently installed model.
+    pub fn current_version(&self) -> u64 {
+        self.current.lock().unwrap().version
+    }
+
+    /// Atomically install `model` as the next version and return its
+    /// epoch. Readers that already snapshotted keep the old version;
+    /// the next `current()` observes the new one in full.
+    pub fn swap(&self, model: Arc<Model>) -> u64 {
+        let version = self.next_version.fetch_add(1, Ordering::Relaxed);
+        let next = Arc::new(ModelVersion { version, model });
+        *self.current.lock().unwrap() = next;
+        version
+    }
+
+    /// Re-read the source artifact and install it. On any load failure
+    /// the previous model stays installed and the error is returned.
+    pub fn reload(&self) -> Result<u64, ModelLoadError> {
+        let path = self.source.as_deref().ok_or_else(|| {
+            ModelLoadError::Io("registry has no source path to reload from".into())
+        })?;
+        let new_stamp = stamp(path).ok();
+        let model = Arc::new(Model::load(path)?);
+        let version = self.swap(model);
+        *self.last_stamp.lock().unwrap() = new_stamp;
+        Ok(version)
+    }
+
+    /// Watcher hook: if the source file's `(mtime, len)` stamp changed
+    /// since the last load, reload and return the new epoch. Returns
+    /// `Ok(None)` when unchanged (or when there is no source).
+    /// `Model::save`'s atomic rename guarantees a changed stamp names a
+    /// complete artifact.
+    pub fn poll_changed(&self) -> Result<Option<u64>, ModelLoadError> {
+        let Some(path) = self.source.as_deref() else {
+            return Ok(None);
+        };
+        let Ok(now) = stamp(path) else {
+            // Mid-rename or deleted: keep serving the installed model.
+            return Ok(None);
+        };
+        if *self.last_stamp.lock().unwrap() == Some(now) {
+            return Ok(None);
+        }
+        self.reload().map(Some)
+    }
+
+    /// The reload source, if the registry was loaded from disk.
+    pub fn source(&self) -> Option<&Path> {
+        self.source.as_deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::tiny_model;
+
+    #[test]
+    fn swap_bumps_version_and_old_snapshots_survive() {
+        let m1 = Arc::new(tiny_model(4));
+        let reg = ModelRegistry::new(Arc::clone(&m1));
+        let snap1 = reg.current();
+        assert_eq!(snap1.version, 1);
+
+        let mut m2 = tiny_model(4);
+        m2.w[0] += 1.0;
+        let v2 = reg.swap(Arc::new(m2));
+        assert_eq!(v2, 2);
+        assert_eq!(reg.current().version, 2);
+        // The pre-swap snapshot still points at the version-1 weights.
+        assert_eq!(snap1.version, 1);
+        assert!(Arc::ptr_eq(&snap1.model, &m1));
+    }
+
+    #[test]
+    fn reload_without_source_is_a_typed_error() {
+        let reg = ModelRegistry::new(Arc::new(tiny_model(3)));
+        assert!(matches!(reg.reload(), Err(ModelLoadError::Io(_))));
+        assert_eq!(reg.poll_changed(), Ok(None));
+    }
+
+    #[test]
+    fn from_path_reload_and_poll_roundtrip() {
+        let dir = std::env::temp_dir().join("pcdn_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("reg.model");
+        let m1 = tiny_model(5);
+        m1.save(&path).unwrap();
+
+        let reg = ModelRegistry::from_path(&path).unwrap();
+        assert_eq!(reg.current_version(), 1);
+        assert_eq!(reg.poll_changed().unwrap(), None);
+
+        let mut m2 = tiny_model(5);
+        m2.w[2] = 7.5;
+        m2.save(&path).unwrap();
+        // Force a stamp difference even on filesystems with coarse
+        // mtime granularity: length is part of the stamp, so grow the
+        // provenance string if needed; here just assert reload works.
+        let v = reg.reload().unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(reg.current().model.w[2], 7.5);
+        std::fs::remove_file(&path).ok();
+    }
+}

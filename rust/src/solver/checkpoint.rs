@@ -273,6 +273,89 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Human-readable inspection dump: solver, counters, saved options,
+    /// and the dataset stamp. The `pcdn checkpoints <path>` subcommand
+    /// prints exactly this.
+    pub fn summary(&self) -> String {
+        let o = &self.opts;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "solver     : {} ({:?})\n",
+            self.solver, self.objective
+        ));
+        s.push_str(&format!(
+            "progress   : outer {} ({} inner iterations, {} line-search steps)\n",
+            self.outer, self.inner_iters, self.ls_steps
+        ));
+        s.push_str(&format!(
+            "dataset    : {} ({} x {}, {} nnz, fingerprint {:#018x})\n",
+            self.data.name, self.data.samples, self.data.features, self.data.nnz,
+            self.data.fingerprint
+        ));
+        s.push_str(&format!(
+            "options    : c = {}, l2 = {}, P = {}, threads = {}, seed = {}, max_outer = {}{}\n",
+            o.c,
+            o.l2_reg,
+            o.bundle_size,
+            o.n_threads,
+            o.seed,
+            o.max_outer,
+            if o.shrinking { ", shrinking" } else { "" }
+        ));
+        s.push_str(&format!(
+            "stop       : {}\n",
+            crate::api::model::stop_rule_string(o.stop)
+        ));
+        s.push_str(&format!(
+            "armijo     : sigma = {}, beta = {}, gamma = {}, max_steps = {}\n",
+            o.armijo.sigma, o.armijo.beta, o.armijo.gamma, o.armijo.max_steps
+        ));
+        let mask = match &o.feature_mask {
+            Some(m) => format!(
+                "{}/{} features active",
+                m.iter().filter(|&&b| b).count(),
+                m.len()
+            ),
+            None => "full".to_string(),
+        };
+        s.push_str(&format!("mask       : {mask}\n"));
+        s.push_str(&format!(
+            "w          : {} features, {} nonzero\n",
+            self.w.len(),
+            self.w.iter().filter(|&&x| x != 0.0).count()
+        ));
+        s.push_str(&format!(
+            "monitor    : init_subgrad = {}\n",
+            self.init_subgrad
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| "unset".into())
+        ));
+        s.push_str(&format!(
+            "rng        : {}\n",
+            if self.rng.is_some() { "saved" } else { "none" }
+        ));
+        let extra = match &self.extra {
+            SolverExtra::None => "none".to_string(),
+            SolverExtra::Cdn {
+                active,
+                m_prev,
+                m_first,
+            } => format!(
+                "cdn shrinking ({}/{} active, M_prev = {m_prev}, M_first = {})",
+                active.iter().filter(|&&b| b).count(),
+                active.len(),
+                m_first
+                    .map(|v| v.to_string())
+                    .unwrap_or_else(|| "unset".into())
+            ),
+            SolverExtra::Tron { u, delta, pg0 } => {
+                format!("tron (|u| = {}, delta = {delta}, pg0 = {pg0})", u.len())
+            }
+        };
+        s.push_str(&format!("extra      : {extra}\n"));
+        s
+    }
+
     // ---- binary serialization (bit-exact) -----------------------------
 
     pub fn to_bytes(&self) -> Vec<u8> {
@@ -814,6 +897,27 @@ mod tests {
             3, // different seed → different content, same shape
         );
         assert!(ck.validate_for("pcdn", &other, Objective::Logistic).is_err());
+    }
+
+    #[test]
+    fn summary_survives_a_file_roundtrip() {
+        let d = toy();
+        let ck = sample_checkpoint(&d);
+        let dir = std::env::temp_dir().join("pcdn_ckpt_summary_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        ck.save(&path).unwrap();
+        let rt = Checkpoint::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // The inspection dump is a pure function of the checkpoint, so a
+        // bit-exact load reproduces it verbatim.
+        assert_eq!(ck.summary(), rt.summary());
+        let text = rt.summary();
+        assert!(text.contains("solver     : pcdn (Logistic)"));
+        assert!(text.contains("outer 5 (10 inner iterations, 17 line-search steps)"));
+        assert!(text.contains(&format!("fingerprint {:#018x}", d.fingerprint())));
+        assert!(text.contains("c = 0.7"));
+        assert!(text.contains("cdn shrinking (6/8 active"));
     }
 
     #[test]

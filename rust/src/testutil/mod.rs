@@ -5,6 +5,40 @@
 pub mod prop;
 pub mod shrink;
 
+/// A tiny hand-built [`Model`](crate::api::Model) artifact for
+/// serving-layer tests: deterministic weights (including zeros), no fit
+/// required. Width is `features`; weight `j` is `0.25·j − 0.5`, with
+/// every fourth weight zeroed so sparsity paths are exercised.
+pub fn tiny_model(features: usize) -> crate::api::Model {
+    let w: Vec<f64> = (0..features)
+        .map(|j| {
+            if j % 4 == 3 {
+                0.0
+            } else {
+                0.25 * j as f64 - 0.5
+            }
+        })
+        .collect();
+    crate::api::Model {
+        w,
+        objective: crate::loss::Objective::Logistic,
+        c: 1.0,
+        l2_reg: 0.0,
+        provenance: crate::api::Provenance {
+            solver: "test".into(),
+            seed: 0,
+            stop: "max_outer(0)".into(),
+            dataset: "tiny".into(),
+            fingerprint: 0xfeed_beef_dead_cafe,
+            samples: 0,
+            features,
+            outer_iters: 0,
+            converged: true,
+            final_objective: 0.0,
+        },
+    }
+}
+
 /// Assert two floats are close in absolute or relative terms.
 #[track_caller]
 pub fn assert_close(a: f64, b: f64, tol: f64) {

@@ -10,7 +10,8 @@
 use std::sync::Arc;
 
 use pcdn::api::{
-    Cdn, CheckpointRecorder, Fit, FitError, Model, Pcdn, Scdn, Scorer, SolverSel, Tron,
+    Cdn, CheckpointRecorder, Fit, FitError, Model, ModelLoadError, Pcdn, Scdn, Scorer,
+    SolverSel, Tron,
 };
 use pcdn::data::synthetic::{generate, SyntheticSpec};
 use pcdn::data::Dataset;
@@ -322,12 +323,93 @@ fn pooled_predict_equals_serial_fold_bitwise() {
         .unwrap()
         .model;
     let serial = m.decision_values(&d.x);
+    let m = Arc::new(m);
     for t in [2usize, 4, 9] {
-        let pooled = Scorer::new(m.clone()).threads(t).decision_values(&d.x);
+        let pooled = Scorer::for_model(&m)
+            .threads(t)
+            .build()
+            .unwrap()
+            .decision_values(&d.x)
+            .unwrap();
         for (a, b) in serial.iter().zip(&pooled) {
             assert_eq!(a.to_bits(), b.to_bits(), "threads = {t}");
         }
     }
+}
+
+#[test]
+fn scorers_share_one_copy_of_the_weights() {
+    // Regression: `Scorer::new` used to clone the model per scorer; the
+    // builder shares it by `Arc`, so two scorers point at one buffer.
+    let d = toy(74);
+    let m = Arc::new(
+        Fit::on(&d)
+            .solver(Pcdn { p: 8 })
+            .max_outer(3)
+            .run()
+            .unwrap()
+            .model,
+    );
+    let s1 = Scorer::for_model(&m).threads(2).build().unwrap();
+    let s2 = Scorer::for_model(&m).threads(7).build().unwrap();
+    assert!(Arc::ptr_eq(s1.shared_model(), s2.shared_model()));
+    assert!(std::ptr::eq(s1.model().w.as_ptr(), s2.model().w.as_ptr()));
+}
+
+#[test]
+fn model_load_classifies_corrupt_files() {
+    let d = toy(75);
+    let m = Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .max_outer(3)
+        .run()
+        .unwrap()
+        .model;
+    let dir = std::env::temp_dir().join("pcdn_api_load_err_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let good = m.to_bytes();
+    let write = |name: &str, bytes: &[u8]| {
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    };
+
+    // Truncated: the file ends mid-document.
+    let p = write("cut.model", &good[..good.len() / 2]);
+    assert!(matches!(Model::load(&p), Err(ModelLoadError::Truncated(_))));
+
+    // Bad magic: the leading bytes are not PCDNMDL1 (and not UTF-8 JSON).
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    let p = write("magic.model", &bad);
+    assert!(matches!(Model::load(&p), Err(ModelLoadError::BadMagic(_))));
+
+    // Version skew: right magic, format version from the future.
+    let mut skew = good.clone();
+    skew[8..12].copy_from_slice(&99u32.to_le_bytes());
+    let p = write("skew.model", &skew);
+    assert!(matches!(
+        Model::load(&p),
+        Err(ModelLoadError::VersionSkew(_))
+    ));
+
+    // Malformed: decodes but with trailing bytes after the document.
+    let mut trailing = good.clone();
+    trailing.push(0);
+    let p = write("trailing.model", &trailing);
+    assert!(matches!(
+        Model::load(&p),
+        Err(ModelLoadError::Malformed(_))
+    ));
+
+    // Missing file: an Io error that names the path.
+    let p = dir.join("missing.model");
+    std::fs::remove_file(&p).ok();
+    let e = Model::load(&p).unwrap_err();
+    assert!(matches!(e, ModelLoadError::Io(_)));
+    assert!(e.to_string().contains("missing.model"));
+
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 // ---- builder validation ---------------------------------------------------

@@ -1,0 +1,434 @@
+//! Integration battery for the `pcdn serve` daemon: HTTP scoring
+//! bitwise-equal to the local `Scorer`, atomic hot-swap under
+//! concurrent load (no torn or mixed-version responses), bounded
+//! admission (503 + Retry-After instead of unbounded queueing), reload
+//! over HTTP, and graceful shutdown that drains in-flight work.
+//!
+//! Determinism the assertions lean on: a response's decision values are
+//! bitwise equal to `Scorer::decision_values` over the same rows no
+//! matter how the coalescer batched them, so "matches exactly one
+//! registered model version" is a strict bit-level check.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use pcdn::api::{Model, Scorer};
+use pcdn::data::CscMat;
+use pcdn::parallel::pool::WorkerPool;
+use pcdn::serve::protocol::{self, SparseRow};
+use pcdn::serve::{ModelRegistry, ServeOptions, Server};
+use pcdn::testutil::tiny_model;
+use pcdn::util::json::Json;
+
+/// Deterministic sparse rows with strictly distinct feature indices per
+/// row (so no duplicate-merge ordering can enter the comparison).
+fn rows_of(width: usize, seed: u64, n: usize) -> Vec<SparseRow> {
+    (0..n)
+        .map(|i| {
+            let k = 1 + ((seed as usize + i) % 3);
+            let mut idx: Vec<u32> = (0..k)
+                .map(|t| (((i + seed as usize * 7) % width + t * 5) % width) as u32)
+                .collect();
+            idx.sort_unstable();
+            idx.dedup();
+            let vals: Vec<f64> = (0..idx.len())
+                .map(|t| 0.5 + (i + t) as f64 / 3.0 + seed as f64 / 7.0)
+                .collect();
+            SparseRow { idx, vals }
+        })
+        .collect()
+}
+
+fn rows_to_csc(rows: &[SparseRow], width: usize) -> CscMat {
+    let mut trip = Vec::new();
+    for (i, r) in rows.iter().enumerate() {
+        for (&j, &v) in r.idx.iter().zip(&r.vals) {
+            trip.push((i, j as usize, v));
+        }
+    }
+    CscMat::from_triplets(rows.len(), width, &trip)
+}
+
+/// The local reference the daemon must match bitwise.
+fn expected(model: &Arc<Model>, rows: &[SparseRow]) -> Vec<f64> {
+    Scorer::for_model(model)
+        .build()
+        .unwrap()
+        .decision_values(&rows_to_csc(rows, model.w.len()))
+        .unwrap()
+}
+
+fn opts_on_free_port() -> ServeOptions {
+    ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ..ServeOptions::default()
+    }
+}
+
+fn shutdown_via_http(addr: &str, server: &Server) {
+    let reply = protocol::http_request(addr, "POST", "/shutdown", "", Duration::from_secs(10))
+        .expect("shutdown request");
+    assert_eq!(reply.status, 200);
+    server.wait();
+}
+
+/// Park the global worker pool in a busy region from a helper thread:
+/// any pooled scoring submitted while parked waits behind it, which
+/// holds serving requests in flight deterministically.
+fn park_global_pool() -> (Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let parked = Arc::new(AtomicBool::new(true));
+    let flag = Arc::clone(&parked);
+    let handle = std::thread::spawn(move || {
+        WorkerPool::global().clone().parallel_for(1, |_, _| {
+            while flag.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+    });
+    std::thread::sleep(Duration::from_millis(20));
+    (parked, handle)
+}
+
+fn healthz(addr: &str) -> Json {
+    let reply = protocol::http_request(addr, "GET", "/healthz", "", Duration::from_secs(10))
+        .expect("healthz");
+    assert_eq!(reply.status, 200);
+    Json::parse(&reply.body).expect("healthz is json")
+}
+
+#[test]
+fn http_scoring_matches_local_scorer_bitwise() {
+    let width = 24;
+    let model = Arc::new(tiny_model(width));
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&model)));
+    let server = Server::bind(registry, opts_on_free_port()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    for seed in 0..3u64 {
+        let rows = rows_of(width, seed, 7);
+        let want = expected(&model, &rows);
+        let got = protocol::http_score(&addr, &rows).unwrap();
+        assert_eq!(got.version, 1);
+        assert_eq!(got.z.len(), want.len());
+        for (a, b) in got.z.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} diverged");
+        }
+    }
+
+    // Observability endpoints answer sanely.
+    let h = healthz(&addr);
+    assert_eq!(h.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(h.get("version").and_then(Json::as_usize), Some(1));
+    let reply =
+        protocol::http_request(&addr, "GET", "/model", "", Duration::from_secs(10)).unwrap();
+    assert_eq!(reply.status, 200);
+    let doc = Json::parse(&reply.body).unwrap();
+    assert_eq!(doc.get("features").and_then(Json::as_usize), Some(width));
+    assert_eq!(doc.get("solver").and_then(Json::as_str), Some("test"));
+
+    // Malformed input is a typed 400, never a panic or a hang.
+    let reply = protocol::http_request(
+        &addr,
+        "POST",
+        "/score",
+        "{\"rows\":[{\"idx\":[9999],\"vals\":[1.0]}]}",
+        Duration::from_secs(10),
+    )
+    .unwrap();
+    assert_eq!(reply.status, 400);
+    let reply =
+        protocol::http_request(&addr, "POST", "/score", "not json", Duration::from_secs(10))
+            .unwrap();
+    assert_eq!(reply.status, 400);
+
+    shutdown_via_http(&addr, &server);
+}
+
+#[test]
+fn concurrent_coalesced_scoring_is_bitwise_per_request() {
+    let width = 32;
+    let model = Arc::new(tiny_model(width));
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&model)));
+    let server = Server::bind(registry, opts_on_free_port()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let clients: Vec<_> = (0..8u64)
+        .map(|seed| {
+            let addr = addr.clone();
+            let model = Arc::clone(&model);
+            std::thread::spawn(move || {
+                let rows = rows_of(width, seed, 1 + (seed as usize % 5));
+                let want = expected(&model, &rows);
+                for round in 0..12 {
+                    let got = protocol::http_score(&addr, &rows).unwrap();
+                    assert_eq!(got.z.len(), want.len());
+                    for (a, b) in got.z.iter().zip(&want) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "client {seed} round {round}: coalesced != per-request"
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    shutdown_via_http(&addr, &server);
+}
+
+#[test]
+fn hot_swap_under_load_is_never_torn() {
+    let width = 16;
+    let model_a = Arc::new(tiny_model(width));
+    let mut b = tiny_model(width);
+    for x in b.w.iter_mut() {
+        *x = -1.5 * *x + 0.125;
+    }
+    let model_b = Arc::new(b);
+
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&model_a)));
+    let server = Server::bind(Arc::clone(&registry), opts_on_free_port()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // Complete version ledger: every epoch ever registered, and which
+    // artifact it held. v1 is the boot model.
+    let ledger: Arc<Mutex<Vec<(u64, bool)>>> = Arc::new(Mutex::new(vec![(1, true)]));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let swapper = {
+        let registry = Arc::clone(&registry);
+        let ledger = Arc::clone(&ledger);
+        let stop = Arc::clone(&stop);
+        let (a, b) = (Arc::clone(&model_a), Arc::clone(&model_b));
+        std::thread::spawn(move || {
+            let mut use_a = false;
+            while !stop.load(Ordering::Acquire) {
+                let v = registry.swap(Arc::clone(if use_a { &a } else { &b }));
+                ledger.lock().unwrap().push((v, use_a));
+                use_a = !use_a;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+
+    let clients: Vec<_> = (0..4u64)
+        .map(|seed| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let rows = rows_of(width, seed, 3);
+                (0..25)
+                    .map(|_| {
+                        let got = protocol::http_score(&addr, &rows).unwrap();
+                        (rows.clone(), got)
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let transcripts: Vec<_> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    stop.store(true, Ordering::Release);
+    swapper.join().unwrap();
+
+    // Post-hoc: every response must match, bitwise and in full, the one
+    // registered artifact its version stamp names.
+    let ledger = ledger.lock().unwrap();
+    for transcript in &transcripts {
+        for (rows, got) in transcript {
+            let &(_, is_a) = ledger
+                .iter()
+                .find(|(v, _)| *v == got.version)
+                .unwrap_or_else(|| panic!("version {} was never registered", got.version));
+            let want = expected(if is_a { &model_a } else { &model_b }, rows);
+            for (a, b) in got.z.iter().zip(&want) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "response stamped v{} does not match that version's model",
+                    got.version
+                );
+            }
+        }
+    }
+    shutdown_via_http(&addr, &server);
+}
+
+#[test]
+fn overload_sheds_with_503_and_retry_after() {
+    let width = 8;
+    let model = Arc::new(tiny_model(width));
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&model)));
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        threads: 2, // pooled scoring, so a parked pool holds requests in flight
+        max_inflight: 2,
+        retry_after_secs: 3,
+        ..ServeOptions::default()
+    };
+    let server = Server::bind(registry, opts).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (parked, blocker) = park_global_pool();
+    let body = protocol::rows_to_json(&rows_of(width, 0, 1)).dump();
+    let blocked: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            let body = body.clone();
+            std::thread::spawn(move || {
+                protocol::http_request(&addr, "POST", "/score", &body, Duration::from_secs(60))
+            })
+        })
+        .collect();
+
+    // Wait until both requests hold admission permits.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let in_flight = healthz(&addr)
+            .get("in_flight")
+            .and_then(Json::as_usize)
+            .unwrap();
+        if in_flight >= 2 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "requests never reached in-flight (got {in_flight})"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // The gate is full: the next request is shed, not queued.
+    let reply =
+        protocol::http_request(&addr, "POST", "/score", &body, Duration::from_secs(10)).unwrap();
+    assert_eq!(reply.status, 503);
+    assert_eq!(reply.retry_after, Some(3));
+    assert!(reply.body.contains("overloaded"), "body: {}", reply.body);
+
+    // Release the pool: the two admitted requests complete correctly.
+    parked.store(false, Ordering::Release);
+    blocker.join().unwrap();
+    let want = expected(&model, &rows_of(width, 0, 1));
+    for b in blocked {
+        let reply = b.join().unwrap().unwrap();
+        assert_eq!(reply.status, 200);
+        let got = protocol::parse_score_response(&reply.body).unwrap();
+        assert_eq!(got.z[0].to_bits(), want[0].to_bits());
+    }
+    shutdown_via_http(&addr, &server);
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_work() {
+    let width = 8;
+    let model = Arc::new(tiny_model(width));
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&model)));
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        threads: 2,
+        ..ServeOptions::default()
+    };
+    let server = Server::bind(registry, opts).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (parked, blocker) = park_global_pool();
+    let rows = rows_of(width, 1, 2);
+    let body = protocol::rows_to_json(&rows).dump();
+    let in_flight = {
+        let addr = addr.clone();
+        let body = body.clone();
+        std::thread::spawn(move || {
+            protocol::http_request(&addr, "POST", "/score", &body, Duration::from_secs(60))
+        })
+    };
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while healthz(&addr)
+        .get("in_flight")
+        .and_then(Json::as_usize)
+        .unwrap()
+        < 1
+    {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "request never reached in-flight"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Begin graceful shutdown while that request is still in flight.
+    let reply =
+        protocol::http_request(&addr, "POST", "/shutdown", "", Duration::from_secs(10)).unwrap();
+    assert_eq!(reply.status, 200);
+    // New work is refused: the listener is closing and admissions drain,
+    // so a fresh request either fails to connect (listener already gone)
+    // or answers 503.
+    if let Ok(reply) =
+        protocol::http_request(&addr, "POST", "/score", &body, Duration::from_secs(5))
+    {
+        assert_eq!(reply.status, 503);
+    }
+
+    // The in-flight request still completes, with correct bits.
+    parked.store(false, Ordering::Release);
+    blocker.join().unwrap();
+    let reply = in_flight.join().unwrap().unwrap();
+    assert_eq!(reply.status, 200);
+    let got = protocol::parse_score_response(&reply.body).unwrap();
+    let want = expected(&model, &rows);
+    for (a, b) in got.z.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    server.wait();
+}
+
+#[test]
+fn reload_over_http_hot_swaps_the_artifact() {
+    let width = 12;
+    let dir = std::env::temp_dir().join("pcdn_serve_reload_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("served.model");
+
+    let model_a = Arc::new(tiny_model(width));
+    model_a.save(&path).unwrap();
+    let registry = Arc::new(ModelRegistry::from_path(&path).unwrap());
+    let server = Server::bind(registry, opts_on_free_port()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let rows = rows_of(width, 2, 4);
+    let got = protocol::http_score(&addr, &rows).unwrap();
+    assert_eq!(got.version, 1);
+    let want_a = expected(&model_a, &rows);
+    for (a, b) in got.z.iter().zip(&want_a) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // Atomically replace the artifact on disk, then ask for a reload.
+    let mut b = tiny_model(width);
+    for x in b.w.iter_mut() {
+        *x += 2.0;
+    }
+    let model_b = Arc::new(b);
+    model_b.save(&path).unwrap();
+    let reply =
+        protocol::http_request(&addr, "POST", "/reload", "", Duration::from_secs(10)).unwrap();
+    assert_eq!(reply.status, 200);
+    assert_eq!(
+        Json::parse(&reply.body)
+            .unwrap()
+            .get("version")
+            .and_then(Json::as_usize),
+        Some(2)
+    );
+
+    let got = protocol::http_score(&addr, &rows).unwrap();
+    assert_eq!(got.version, 2);
+    let want_b = expected(&model_b, &rows);
+    for (a, b) in got.z.iter().zip(&want_b) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    std::fs::remove_file(&path).ok();
+    shutdown_via_http(&addr, &server);
+}
