@@ -42,7 +42,7 @@ use crate::api::model::{Fitted, Model};
 use crate::data::Dataset;
 use crate::loss::Objective;
 use crate::parallel::pool::WorkerPool;
-use crate::solver::checkpoint::{Checkpoint, CheckpointWriter};
+use crate::solver::checkpoint::{Checkpoint, CheckpointWriter, LastCheckpoint};
 use crate::solver::{
     cdn, pcdn, scdn, tron, ArmijoParams, ProbeHandle, Solver, StopRule, TrainOptions,
 };
@@ -167,8 +167,9 @@ impl From<Tron> for SolverSel {
     }
 }
 
-/// Why a [`Fit`] refused to run. Every variant is a configuration error
-/// caught *before* any training work starts.
+/// Why a [`Fit`] refused to run, or why a run was aborted. Every variant
+/// except [`FitError::Diverged`] is a configuration error caught *before*
+/// any training work starts.
 #[derive(Debug, Clone, PartialEq)]
 pub enum FitError {
     /// A parameter is out of range (message names it).
@@ -182,6 +183,18 @@ pub enum FitError {
     /// A terminal method that needs a dataset was called on a
     /// dataset-free spec (names the method).
     MissingData(&'static str),
+    /// The objective went non-finite at outer boundary `outer` — the
+    /// divergence regime of over-parallelized coordinate descent
+    /// (Bradley et al., arXiv 1105.5379). `last_good` is the newest
+    /// resume point taken *before* the bad boundary (divergence is
+    /// detected before probes see the boundary, so it is finite by
+    /// construction); resume from it with a smaller bundle size `P` —
+    /// the paper's knob for this regime — or inspect it post mortem.
+    /// `None` when divergence hit before the first boundary.
+    Diverged {
+        outer: usize,
+        last_good: Option<Box<Checkpoint>>,
+    },
 }
 
 impl std::fmt::Display for FitError {
@@ -200,6 +213,15 @@ impl std::fmt::Display for FitError {
             FitError::MissingData(m) => {
                 write!(f, "Fit::{m} needs a dataset — use Fit::on(&data), not Fit::spec()")
             }
+            FitError::Diverged { outer, last_good } => write!(
+                f,
+                "training diverged: non-finite objective at outer {outer}{} — resume from \
+                 the last-good checkpoint with a smaller bundle size P",
+                match last_good {
+                    Some(ck) => format!(" (last-good checkpoint at outer {})", ck.outer),
+                    None => " (no checkpoint taken before divergence)".to_string(),
+                }
+            ),
         }
     }
 }
@@ -230,6 +252,7 @@ pub struct Fit<'d> {
     probe: Option<ProbeHandle>,
     resume: Option<Arc<Checkpoint>>,
     checkpoint: Option<(usize, PathBuf)>,
+    checkpoint_keep: usize,
 }
 
 impl<'d> Fit<'d> {
@@ -269,6 +292,7 @@ impl<'d> Fit<'d> {
             probe: None,
             resume: None,
             checkpoint: None,
+            checkpoint_keep: 0,
         }
     }
 
@@ -416,6 +440,15 @@ impl<'d> Fit<'d> {
         self
     }
 
+    /// Retention policy for [`Fit::checkpoint_every`]: additionally keep
+    /// the newest `n` periodic checkpoints as `<path>.o<outer>` siblings,
+    /// pruned write-new-then-delete-old. `0` (the default) keeps only the
+    /// single overwritten file.
+    pub fn checkpoint_keep(mut self, n: usize) -> Self {
+        self.checkpoint_keep = n;
+        self
+    }
+
     // ---- terminals ----------------------------------------------------
 
     /// Validate everything and lower to the solver-internal
@@ -433,7 +466,9 @@ impl<'d> Fit<'d> {
             probes.push(p.clone());
         }
         if let Some((k, path)) = &self.checkpoint {
-            probes.push(ProbeHandle::new(CheckpointWriter::new(*k, path.clone())));
+            probes.push(ProbeHandle::new(
+                CheckpointWriter::new(*k, path.clone()).keep(self.checkpoint_keep),
+            ));
         }
         let probe = match probes.len() {
             0 => None,
@@ -469,7 +504,15 @@ impl<'d> Fit<'d> {
     /// Train and wrap the result as a first-class [`Model`] artifact.
     pub fn run(&self) -> Result<Fitted, FitError> {
         let data = self.data.ok_or(FitError::MissingData("run"))?;
-        let opts = self.options()?;
+        let mut opts = self.options()?;
+        // Shadow every resume point so a divergence abort can hand back the
+        // last-good checkpoint even when the caller configured no writer.
+        let last = std::sync::Arc::new(LastCheckpoint::new());
+        let last_handle = ProbeHandle(last.clone());
+        opts.probe = Some(match opts.probe.take() {
+            Some(existing) => ProbeHandle::fanout(vec![existing, last_handle]),
+            None => last_handle,
+        });
         let result = match self.solver {
             SolverSel::Pcdn { .. } => pcdn::Pcdn::new().train(data, self.objective, &opts),
             SolverSel::Cdn { .. } => cdn::Cdn::new().train(data, self.objective, &opts),
@@ -481,6 +524,12 @@ impl<'d> Fit<'d> {
             }
             SolverSel::Tron => tron::Tron::new().train(data, self.objective, &opts),
         };
+        if let Some((outer, _fval)) = result.diverged {
+            return Err(FitError::Diverged {
+                outer,
+                last_good: last.latest().map(Box::new),
+            });
+        }
         let model = Model::from_training(&result, self.objective, &opts, data);
         Ok(Fitted { model, result })
     }

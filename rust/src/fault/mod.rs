@@ -1,0 +1,472 @@
+//! # Deterministic fault injection
+//!
+//! A seeded, deterministic fault-injection layer used by the chaos test
+//! battery (`rust/tests/fault.rs`) to *prove* the serving and training
+//! stacks are failure-hardened, rather than hoping they are.
+//!
+//! ## Model
+//!
+//! A [`FaultPlan`] is a list of scheduled faults: *(site, hit, action)*
+//! triples. Each [`Site`] is a named hook point compiled into the
+//! production code (the daemon's request read/response write, the bundled
+//! client's connect/read/write, the registry's artifact load, the worker
+//! pool's region entry, the solver's outer-boundary monitor). Every time
+//! execution passes a hook it "hits" the site; the plan fires its
+//! [`FaultAction`] when the site's hit counter matches a scheduled hit
+//! index. Counters start at zero on [`install`], so a given plan replays
+//! the same faults at the same points of a deterministic execution.
+//!
+//! ## Zero cost when disarmed
+//!
+//! Hooks compile to a single relaxed atomic load when no plan is
+//! installed (the common case — production and every non-chaos test).
+//! The slow path behind it is `#[cold]` and only taken while a
+//! [`FaultGuard`] is alive.
+//!
+//! ## Seeds and replay
+//!
+//! Pinned plans are built with [`FaultPlan::new`] + [`FaultPlan::at`].
+//! Randomized sweeps derive a plan from a seed via
+//! [`FaultPlan::from_seed`]; the chaos battery prints the seed in every
+//! assertion message, so a nightly failure replays locally with
+//! `PCDN_PROP_SEED=<seed> cargo test --release --test fault`.
+//!
+//! ```no_run
+//! use pcdn::fault::{self, FaultAction, FaultPlan, Site};
+//!
+//! let plan = FaultPlan::new().at(Site::ServerWrite, 0, FaultAction::Disconnect);
+//! let guard = fault::install(plan);
+//! // ... drive the system; the first daemon response is cut mid-stream ...
+//! assert!(guard.hits(Site::ServerWrite) > 0, "fault never reached");
+//! drop(guard); // disarm
+//! ```
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Pcg64;
+
+/// A hook point in the production code where faults can fire.
+///
+/// The numeric values index the per-site hit counters; keep `COUNT` last.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Site {
+    /// Bundled HTTP client: establishing a TCP connection.
+    ClientConnect = 0,
+    /// Bundled HTTP client: writing a request.
+    ClientWrite = 1,
+    /// Bundled HTTP client: reading a response.
+    ClientRead = 2,
+    /// Daemon: reading a request from an accepted connection.
+    ServerRead = 3,
+    /// Daemon: writing a response back to the client.
+    ServerWrite = 4,
+    /// Registry: loading a model artifact from disk (reload / watch).
+    ArtifactRead = 5,
+    /// Worker pool: a worker entering a parallel region.
+    PoolWorker = 6,
+    /// Solver: the outer-boundary objective check in `RunMonitor`.
+    SolverOuter = 7,
+    /// Reserved for the crate's own unit tests (never fired by
+    /// production code, so in-process tests can't cross-talk).
+    #[doc(hidden)]
+    TestOnly = 8,
+}
+
+const SITE_COUNT: usize = 9;
+
+const ALL_SITES: [Site; SITE_COUNT] = [
+    Site::ClientConnect,
+    Site::ClientWrite,
+    Site::ClientRead,
+    Site::ServerRead,
+    Site::ServerWrite,
+    Site::ArtifactRead,
+    Site::PoolWorker,
+    Site::SolverOuter,
+    Site::TestOnly,
+];
+
+impl fmt::Display for Site {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Site::ClientConnect => "client-connect",
+            Site::ClientWrite => "client-write",
+            Site::ClientRead => "client-read",
+            Site::ServerRead => "server-read",
+            Site::ServerWrite => "server-write",
+            Site::ArtifactRead => "artifact-read",
+            Site::PoolWorker => "pool-worker",
+            Site::SolverOuter => "solver-outer",
+            Site::TestOnly => "test-only",
+        };
+        f.write_str(s)
+    }
+}
+
+/// What happens when a scheduled fault fires.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Sleep for this many milliseconds before proceeding (a stalled
+    /// socket, a slow disk, a slow-loris peer).
+    Stall { millis: u64 },
+    /// Tear the connection down mid-stream (the hook site decides how:
+    /// the daemon writes a truncated response and closes; the client
+    /// drops its keep-alive stream).
+    Disconnect,
+    /// Fail the operation with an injected I/O error.
+    Fail,
+    /// Panic on the current thread (worker-pool containment testing).
+    Panic,
+    /// Poison a numeric value with NaN (solver divergence testing).
+    NonFinite,
+}
+
+impl fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultAction::Stall { millis } => write!(f, "stall({millis}ms)"),
+            FaultAction::Disconnect => f.write_str("disconnect"),
+            FaultAction::Fail => f.write_str("fail"),
+            FaultAction::Panic => f.write_str("panic"),
+            FaultAction::NonFinite => f.write_str("non-finite"),
+        }
+    }
+}
+
+/// One scheduled fault: fire `action` on the `hit`-th pass (0-based)
+/// through `site`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScheduledFault {
+    pub site: Site,
+    pub hit: u64,
+    pub action: FaultAction,
+}
+
+/// A deterministic schedule of faults. Build pinned plans with
+/// [`FaultPlan::at`], or derive a randomized one from a seed with
+/// [`FaultPlan::from_seed`]; arm with [`install`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The seed this plan was derived from, if any (for replay messages).
+    pub seed: Option<u64>,
+    pub faults: Vec<ScheduledFault>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults fire until some are scheduled).
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Schedule `action` for the `hit`-th pass (0-based) through `site`.
+    pub fn at(mut self, site: Site, hit: u64, action: FaultAction) -> Self {
+        self.faults.push(ScheduledFault { site, hit, action });
+        self
+    }
+
+    /// Derive a randomized serve-side plan from a seed: 1–3 faults over
+    /// the client/server/artifact sites, each with a site-appropriate
+    /// action and a small hit index. Used by the nightly chaos sweep;
+    /// the same seed always derives the same plan.
+    pub fn from_seed(seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let sites = [
+            Site::ClientConnect,
+            Site::ClientWrite,
+            Site::ClientRead,
+            Site::ServerRead,
+            Site::ServerWrite,
+            Site::ArtifactRead,
+        ];
+        let n = 1 + rng.index(3);
+        let mut plan = FaultPlan {
+            seed: Some(seed),
+            faults: Vec::with_capacity(n),
+        };
+        for _ in 0..n {
+            let site = sites[rng.index(sites.len())];
+            let hit = rng.below(3);
+            let action = match site {
+                Site::ClientConnect | Site::ClientRead | Site::ArtifactRead => {
+                    if rng.bernoulli(0.5) {
+                        FaultAction::Fail
+                    } else {
+                        FaultAction::Stall {
+                            millis: 20 + rng.below(80),
+                        }
+                    }
+                }
+                _ => {
+                    if rng.bernoulli(0.5) {
+                        FaultAction::Disconnect
+                    } else {
+                        FaultAction::Stall {
+                            millis: 20 + rng.below(80),
+                        }
+                    }
+                }
+            };
+            plan.faults.push(ScheduledFault { site, hit, action });
+        }
+        plan
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.seed {
+            Some(s) => write!(f, "fault plan (seed {s}):")?,
+            None => write!(f, "fault plan (pinned):")?,
+        }
+        if self.faults.is_empty() {
+            return write!(f, " empty");
+        }
+        for sf in &self.faults {
+            write!(f, " {}@{}={}", sf.site, sf.hit, sf.action)?;
+        }
+        Ok(())
+    }
+}
+
+/// The armed plan plus its per-site hit counters. Fresh on every
+/// [`install`], so schedules are relative to the install point.
+struct PlanRuntime {
+    plan: FaultPlan,
+    counters: [AtomicU64; SITE_COUNT],
+}
+
+impl PlanRuntime {
+    fn new(plan: FaultPlan) -> Self {
+        PlanRuntime {
+            plan,
+            counters: Default::default(),
+        }
+    }
+
+    fn fire(&self, site: Site) -> Option<FaultAction> {
+        let hit = self.counters[site as usize].fetch_add(1, Ordering::SeqCst);
+        self.plan
+            .faults
+            .iter()
+            .find(|sf| sf.site == site && sf.hit == hit)
+            .map(|sf| sf.action)
+    }
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<PlanRuntime>>> = Mutex::new(None);
+
+/// Arm a fault plan process-wide. The returned guard disarms it on drop.
+///
+/// Only one plan is active at a time (a new install replaces the old);
+/// chaos tests serialize installs behind a mutex. Hit counters start at
+/// zero.
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    let rt = Arc::new(PlanRuntime::new(plan));
+    *PLAN.lock().unwrap_or_else(|p| p.into_inner()) = Some(rt.clone());
+    ACTIVE.store(true, Ordering::SeqCst);
+    FaultGuard { rt }
+}
+
+/// RAII handle for an installed plan: disarms on drop and exposes the
+/// hit counters so tests can assert a fault actually fired.
+pub struct FaultGuard {
+    rt: Arc<PlanRuntime>,
+}
+
+impl FaultGuard {
+    /// How many times `site` has been passed since install.
+    pub fn hits(&self, site: Site) -> u64 {
+        self.rt.counters[site as usize].load(Ordering::SeqCst)
+    }
+
+    /// The installed plan (for replay messages).
+    pub fn plan(&self) -> &FaultPlan {
+        &self.rt.plan
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        let mut slot = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+        // Only disarm if this guard's plan is still the active one
+        // (a replacing install keeps its own plan armed).
+        if slot
+            .as_ref()
+            .is_some_and(|cur| Arc::ptr_eq(cur, &self.rt))
+        {
+            *slot = None;
+            ACTIVE.store(false, Ordering::SeqCst);
+        }
+    }
+}
+
+/// The hook: returns the scheduled action for this pass through `site`,
+/// or `None`. Compiles to one relaxed load when nothing is installed.
+#[inline]
+pub fn fire(site: Site) -> Option<FaultAction> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    fire_armed(site)
+}
+
+#[cold]
+fn fire_armed(site: Site) -> Option<FaultAction> {
+    let rt = PLAN.lock().unwrap_or_else(|p| p.into_inner()).clone()?;
+    rt.fire(site)
+}
+
+/// Sleep helper for `Stall` actions.
+pub fn stall(millis: u64) {
+    std::thread::sleep(Duration::from_millis(millis));
+}
+
+/// Pool hook: panic here if a worker panic is scheduled for this pass.
+#[inline]
+pub fn maybe_panic(site: Site) {
+    if let Some(FaultAction::Panic) = fire(site) {
+        panic!("injected fault: {site} panic");
+    }
+}
+
+/// Solver hook: poison `value` with NaN if a non-finite fault is
+/// scheduled for this pass; stalls are honored too (a slow boundary is
+/// harmless but keeps the site uniform). Any other action is ignored —
+/// the monitor has nothing to disconnect or fail.
+#[inline]
+pub fn poison(site: Site, value: f64) -> f64 {
+    match fire(site) {
+        Some(FaultAction::NonFinite) => f64::NAN,
+        Some(FaultAction::Stall { millis }) => {
+            stall(millis);
+            value
+        }
+        _ => value,
+    }
+}
+
+/// I/O hook for `Fail`/`Stall` sites: stalls inline, and maps `Fail`
+/// (or `Disconnect`) to an injected `io::Error` the call site can
+/// propagate. Returns `Ok(())` when nothing fires.
+#[inline]
+pub fn io_gate(site: Site) -> std::io::Result<()> {
+    match fire(site) {
+        None => Ok(()),
+        Some(FaultAction::Stall { millis }) => {
+            stall(millis);
+            Ok(())
+        }
+        Some(FaultAction::Fail) | Some(FaultAction::Disconnect) => Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("injected fault: {site}"),
+        )),
+        Some(FaultAction::Panic) => panic!("injected fault: {site} panic"),
+        Some(FaultAction::NonFinite) => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The plan slot is process-global; unit tests here use the reserved
+    // TestOnly site (production code never fires it) and serialize
+    // installs so they can't race each other.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disarmed_hook_is_silent() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        for _ in 0..100 {
+            assert_eq!(fire(Site::TestOnly), None);
+        }
+    }
+
+    #[test]
+    fn fires_at_exact_hit_then_stays_quiet() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let plan = FaultPlan::new().at(Site::TestOnly, 2, FaultAction::Fail);
+        let guard = install(plan);
+        assert_eq!(fire(Site::TestOnly), None);
+        assert_eq!(fire(Site::TestOnly), None);
+        assert_eq!(fire(Site::TestOnly), Some(FaultAction::Fail));
+        assert_eq!(fire(Site::TestOnly), None);
+        assert_eq!(guard.hits(Site::TestOnly), 4);
+    }
+
+    #[test]
+    fn guard_drop_disarms() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let guard = install(FaultPlan::new().at(Site::TestOnly, 0, FaultAction::Fail));
+        drop(guard);
+        assert_eq!(fire(Site::TestOnly), None);
+        assert!(!ACTIVE.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn reinstall_resets_counters() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let g1 = install(FaultPlan::new().at(Site::TestOnly, 0, FaultAction::Fail));
+        assert_eq!(fire(Site::TestOnly), Some(FaultAction::Fail));
+        let g2 = install(FaultPlan::new().at(Site::TestOnly, 0, FaultAction::Disconnect));
+        assert_eq!(fire(Site::TestOnly), Some(FaultAction::Disconnect));
+        // Dropping the superseded guard must not disarm g2's plan.
+        drop(g1);
+        assert!(ACTIVE.load(Ordering::SeqCst));
+        assert_eq!(g2.hits(Site::TestOnly), 1);
+        drop(g2);
+        assert!(!ACTIVE.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn io_gate_maps_actions() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let plan = FaultPlan::new()
+            .at(Site::TestOnly, 0, FaultAction::Fail)
+            .at(Site::TestOnly, 1, FaultAction::Stall { millis: 1 });
+        let _g = install(plan);
+        let err = io_gate(Site::TestOnly).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert!(io_gate(Site::TestOnly).is_ok()); // stall, then proceed
+        assert!(io_gate(Site::TestOnly).is_ok()); // nothing scheduled
+    }
+
+    #[test]
+    fn poison_injects_nan_once() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let _g = install(FaultPlan::new().at(Site::TestOnly, 1, FaultAction::NonFinite));
+        assert_eq!(poison(Site::TestOnly, 3.5), 3.5);
+        assert!(poison(Site::TestOnly, 3.5).is_nan());
+        assert_eq!(poison(Site::TestOnly, 3.5), 3.5);
+    }
+
+    #[test]
+    fn from_seed_is_deterministic_and_bounded() {
+        let a = FaultPlan::from_seed(42);
+        let b = FaultPlan::from_seed(42);
+        assert_eq!(a, b);
+        assert!(!a.faults.is_empty() && a.faults.len() <= 3);
+        assert!(a.to_string().contains("seed 42"), "{a}");
+        let c = FaultPlan::from_seed(43);
+        assert!(a != c || a.faults == c.faults); // different seeds usually differ
+        for sf in &a.faults {
+            assert!(ALL_SITES.contains(&sf.site));
+            assert!(sf.hit < 3);
+        }
+    }
+
+    #[test]
+    fn display_lists_faults() {
+        let p = FaultPlan::new()
+            .at(Site::ServerWrite, 0, FaultAction::Disconnect)
+            .at(Site::PoolWorker, 2, FaultAction::Panic);
+        let s = p.to_string();
+        assert!(s.contains("server-write@0=disconnect"), "{s}");
+        assert!(s.contains("pool-worker@2=panic"), "{s}");
+    }
+}

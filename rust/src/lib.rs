@@ -49,6 +49,7 @@ pub mod api;
 pub mod coordinator;
 pub mod data;
 pub mod distributed;
+pub mod fault;
 pub mod linalg;
 pub mod loss;
 pub mod oracle;

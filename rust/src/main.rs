@@ -31,7 +31,7 @@ use pcdn::loss::Objective;
 use pcdn::path::{cv_path, fit_path, CvOptions, PathOptions};
 use pcdn::runtime::PjrtRuntime;
 use pcdn::serve::{protocol, ModelRegistry, ServeOptions, Server};
-use pcdn::solver::checkpoint::{Checkpoint, CheckpointWriter};
+use pcdn::solver::checkpoint::{retained_siblings, Checkpoint, CheckpointWriter};
 use pcdn::solver::{ProbeHandle, StopRule};
 use pcdn::util::cli::Cli;
 
@@ -140,15 +140,32 @@ fn cmd_train(args: Vec<String>) -> i32 {
             "write a resume checkpoint every K outer iterations (0 = off)",
         )
         .opt(
+            "checkpoint-keep",
+            Some("0"),
+            "also retain the last N per-outer checkpoint siblings (<path>.o<outer>)",
+        )
+        .opt(
             "resume",
             None,
             "continue from this checkpoint (restores solver + options; bitwise)",
+        )
+        .opt(
+            "on-divergence",
+            Some("halt"),
+            "halt | rollback-halve: on a non-finite objective, stop, or roll back \
+             to the last-good checkpoint and retry with bundle size P halved",
         )
         .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt solver)");
     let a = cli.parse_from(args).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
     });
+
+    let on_div = a.get("on-divergence").unwrap_or("halt").to_string();
+    if !matches!(on_div.as_str(), "halt" | "rollback-halve") {
+        eprintln!("--on-divergence: expected halt|rollback-halve (got '{on_div}')");
+        return 2;
+    }
 
     let mut cfg = if let Some(path) = a.get("config") {
         match std::fs::read_to_string(path)
@@ -262,6 +279,7 @@ fn cmd_train(args: Vec<String>) -> i32 {
                 }
             },
         };
+        let ck_rollback = ck.clone();
         let mut fit = match Fit::resume(&data, ck) {
             Ok(f) => f,
             Err(e) => {
@@ -270,10 +288,11 @@ fn cmd_train(args: Vec<String>) -> i32 {
             }
         };
         let every = flag_or_exit!(a.usize("checkpoint-every"));
+        let keep = flag_or_exit!(a.usize("checkpoint-keep"));
         let mut resume_writer: Option<Arc<CheckpointWriter>> = None;
         if every > 0 {
             let path = a.get("checkpoint").unwrap().to_string();
-            let writer = Arc::new(CheckpointWriter::new(every, path.clone()));
+            let writer = Arc::new(CheckpointWriter::new(every, path.clone()).keep(keep));
             resume_writer = Some(writer.clone());
             fit = fit.probe(ProbeHandle(writer));
             println!("checkpointing every {every} outer iteration(s) to {path}");
@@ -303,6 +322,18 @@ fn cmd_train(args: Vec<String>) -> i32 {
                 }
                 0
             }
+            Err(api::FitError::Diverged { outer, last_good }) => {
+                eprintln!("--resume: training diverged: non-finite objective at outer {outer}");
+                if on_div == "rollback-halve" {
+                    let ck = last_good.map_or(ck_rollback, |b| *b);
+                    rollback_halve(&data, ck, a.get("save-model"))
+                } else {
+                    eprintln!(
+                        "(hint: retry with --on-divergence rollback-halve, or a smaller --p)"
+                    );
+                    1
+                }
+            }
             Err(e) => {
                 eprintln!(
                     "--resume: {e}\n(hint: pass --dataset {ck_dataset} — the checkpoint \
@@ -317,10 +348,11 @@ fn cmd_train(args: Vec<String>) -> i32 {
     // observer. Keep a handle so IO failures (non-fatal by design) are
     // reported after the run instead of vanishing.
     let every = flag_or_exit!(a.usize("checkpoint-every"));
+    let keep = flag_or_exit!(a.usize("checkpoint-keep"));
     let mut ckpt_writer: Option<Arc<CheckpointWriter>> = None;
     if every > 0 {
         let path = a.get("checkpoint").unwrap().to_string();
-        let writer = Arc::new(CheckpointWriter::new(every, path.clone()));
+        let writer = Arc::new(CheckpointWriter::new(every, path.clone()).keep(keep));
         ckpt_writer = Some(writer.clone());
         let handle = ProbeHandle(writer);
         cfg.train.probe = Some(match cfg.train.probe.take() {
@@ -337,39 +369,168 @@ fn cmd_train(args: Vec<String>) -> i32 {
             return 1;
         }
     };
-    match run_on(&data, &cfg) {
-        Ok(r) => {
-            println!("{}", summarize(&r));
-            if let Some(w) = &ckpt_writer {
-                if let Some(e) = w.last_error.lock().unwrap().as_ref() {
-                    eprintln!("warning: checkpoint write(s) failed: {e}");
-                }
+
+    // Success epilogue shared by the first run and divergence retries.
+    let finish = |r: &pcdn::solver::TrainResult, cfg: &RunConfig| -> i32 {
+        println!("{}", summarize(r));
+        if let Some(w) = &ckpt_writer {
+            if let Some(e) = w.last_error.lock().unwrap().as_ref() {
+                eprintln!("warning: checkpoint write(s) failed: {e}");
             }
-            if let Some(tp) = r.trace.last() {
-                println!(
-                    "final trace point: outer {} F = {:.6} nnz = {}",
-                    tp.outer_iter, tp.objective, tp.nnz
-                );
-            }
-            if let Some(model_path) = a.get("save-model") {
-                let model = Model::from_training(&r, cfg.objective, &cfg.train, &data);
-                match model.save(Path::new(model_path)) {
-                    Ok(()) => println!(
-                        "model saved to {model_path} ({} features, {} nnz)",
-                        model.w.len(),
-                        model.nnz()
-                    ),
-                    Err(e) => {
-                        eprintln!("--save-model: {model_path}: {e}");
-                        return 1;
-                    }
-                }
-            }
-            0
         }
+        if let Some(tp) = r.trace.last() {
+            println!(
+                "final trace point: outer {} F = {:.6} nnz = {}",
+                tp.outer_iter, tp.objective, tp.nnz
+            );
+        }
+        if let Some(model_path) = a.get("save-model") {
+            let model = Model::from_training(r, cfg.objective, &cfg.train, &data);
+            match model.save(Path::new(model_path)) {
+                Ok(()) => println!(
+                    "model saved to {model_path} ({} features, {} nnz)",
+                    model.w.len(),
+                    model.nnz()
+                ),
+                Err(e) => {
+                    eprintln!("--save-model: {model_path}: {e}");
+                    return 1;
+                }
+            }
+        }
+        0
+    };
+
+    let r = match run_on(&data, &cfg) {
+        Ok(r) => r,
         Err(e) => {
             eprintln!("training failed: {e:#}");
-            1
+            return 1;
+        }
+    };
+    let Some((outer, _)) = r.diverged else {
+        return finish(&r, &cfg);
+    };
+
+    eprintln!(
+        "training diverged: non-finite objective at outer {outer} — the paper's \
+         high-parallelism divergence regime (Bradley et al.); the fix is a smaller bundle size P"
+    );
+    if on_div != "rollback-halve" {
+        eprintln!("(hint: retry with --on-divergence rollback-halve, or a smaller --p)");
+        return 1;
+    }
+    if matches!(cfg.solver, SolverKind::Cdn | SolverKind::Tron) {
+        eprintln!("on-divergence: rollback-halve needs a bundled solver (pcdn/scdn); halting");
+        return 1;
+    }
+
+    // Roll back to the last-good checkpoint when one was written; a run
+    // without --checkpoint-every restarts from scratch with P halved.
+    let ckpt_path = a.get("checkpoint").unwrap();
+    if every > 0 && Path::new(ckpt_path).is_file() {
+        match Checkpoint::load(Path::new(ckpt_path)) {
+            Ok(ck) => return rollback_halve(&data, ck, a.get("save-model")),
+            Err(e) => {
+                eprintln!("on-divergence: {ckpt_path}: {e}; restarting from scratch instead")
+            }
+        }
+    }
+    loop {
+        let p = cfg.train.bundle_size;
+        if p <= 1 {
+            eprintln!("on-divergence: still diverging at P = 1; giving up");
+            return 1;
+        }
+        cfg.train.bundle_size = (p / 2).max(1);
+        println!(
+            "on-divergence: restarting with bundle size P = {}",
+            cfg.train.bundle_size
+        );
+        match run_on(&data, &cfg) {
+            Ok(r2) => match r2.diverged {
+                None => return finish(&r2, &cfg),
+                Some((o2, _)) => eprintln!(
+                    "training diverged again at outer {o2} with P = {}",
+                    cfg.train.bundle_size
+                ),
+            },
+            Err(e) => {
+                eprintln!("training failed: {e:#}");
+                return 1;
+            }
+        }
+    }
+}
+
+/// `--on-divergence rollback-halve`: resume from the last-good
+/// checkpoint with the bundle size halved, repeating (and halving
+/// further) until the run completes or `P` bottoms out at 1 — the
+/// paper's own prescription for the divergence regime.
+fn rollback_halve(
+    data: &pcdn::data::Dataset,
+    mut ck: Checkpoint,
+    save_model: Option<&str>,
+) -> i32 {
+    if matches!(ck.solver.as_str(), "cdn" | "tron") {
+        eprintln!("on-divergence: rollback-halve needs a bundled solver (pcdn/scdn); halting");
+        return 1;
+    }
+    loop {
+        let p = ck.opts.bundle_size;
+        if p <= 1 {
+            eprintln!("on-divergence: still diverging at P = 1; giving up");
+            return 1;
+        }
+        ck.opts.bundle_size = (p / 2).max(1);
+        println!(
+            "on-divergence: rolling back to outer {} and retrying with P = {}",
+            ck.outer, ck.opts.bundle_size
+        );
+        let fit = match Fit::resume(data, ck.clone()) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("on-divergence: {e}");
+                return 1;
+            }
+        };
+        match fit.run() {
+            Ok(fitted) => {
+                println!("{}", summarize(&fitted.result));
+                if let Some(tp) = fitted.result.trace.last() {
+                    println!(
+                        "final trace point: outer {} F = {:.6} nnz = {}",
+                        tp.outer_iter, tp.objective, tp.nnz
+                    );
+                }
+                if let Some(path) = save_model {
+                    match fitted.model.save(Path::new(path)) {
+                        Ok(()) => println!("model saved to {path}"),
+                        Err(e) => {
+                            eprintln!("--save-model: {path}: {e}");
+                            return 1;
+                        }
+                    }
+                }
+                return 0;
+            }
+            Err(api::FitError::Diverged { outer, last_good }) => {
+                eprintln!(
+                    "training diverged again at outer {outer} with P = {}",
+                    ck.opts.bundle_size
+                );
+                // Roll forward to the newest last-good point, keeping
+                // the already-halved bundle size for the next halving.
+                if let Some(lg) = last_good {
+                    let p_now = ck.opts.bundle_size;
+                    ck = *lg;
+                    ck.opts.bundle_size = p_now;
+                }
+            }
+            Err(e) => {
+                eprintln!("on-divergence: {e}");
+                return 1;
+            }
         }
     }
 }
@@ -384,6 +545,16 @@ fn cmd_predict(args: Vec<String>) -> i32 {
             "via",
             None,
             "score over HTTP against a running `pcdn serve` at this address",
+        )
+        .opt(
+            "retries",
+            Some("2"),
+            "with --via: retry budget for transient failures (jittered backoff)",
+        )
+        .opt(
+            "timeout-ms",
+            Some("30000"),
+            "with --via: per-attempt socket timeout in milliseconds",
         )
         .switch("labels", "print predicted ±1 labels to stdout");
     let a = cli.parse_from(args).unwrap_or_else(|e| {
@@ -430,7 +601,9 @@ fn cmd_predict(args: Vec<String>) -> i32 {
     // --out file alike: locally through the pooled Scorer, or remotely
     // through a running daemon with --via.
     let z = if let Some(addr) = a.get("via") {
-        match score_via_daemon(addr, &data) {
+        let retries = flag_or_exit!(a.usize("retries"));
+        let timeout_ms = flag_or_exit!(a.usize("timeout-ms")) as u64;
+        match score_via_daemon(addr, &data, retries, timeout_ms) {
             Ok(z) => z,
             Err(e) => {
                 eprintln!("--via {addr}: {e}");
@@ -496,12 +669,21 @@ fn cmd_predict(args: Vec<String>) -> i32 {
 }
 
 /// Score every sample of `data` against a running daemon, chunking rows
-/// into `POST /score` requests. Chunk boundaries don't affect the bits
-/// (the coalescer's per-request split is exact), but a mid-run hot-swap
+/// into `POST /score` requests over one keep-alive connection with
+/// bounded retries. Chunk boundaries don't affect the bits (the
+/// coalescer's per-request split is exact), but a mid-run hot-swap
 /// changes the answering model — detect and warn.
-fn score_via_daemon(addr: &str, data: &pcdn::data::Dataset) -> Result<Vec<f64>, String> {
+fn score_via_daemon(
+    addr: &str,
+    data: &pcdn::data::Dataset,
+    retries: usize,
+    timeout_ms: u64,
+) -> Result<Vec<f64>, String> {
     const CHUNK: usize = 512;
     let csr = data.x.to_csr();
+    let mut client = protocol::HttpClient::new(addr)
+        .retries(retries)
+        .timeout(std::time::Duration::from_millis(timeout_ms.max(1)));
     let mut z = Vec::with_capacity(data.samples());
     let mut version: Option<u64> = None;
     let mut lo = 0usize;
@@ -516,7 +698,7 @@ fn score_via_daemon(addr: &str, data: &pcdn::data::Dataset) -> Result<Vec<f64>, 
                 }
             })
             .collect();
-        let batch = protocol::http_score(addr, &rows).map_err(|e| e.to_string())?;
+        let batch = client.score(&rows).map_err(|e| e.to_string())?;
         if let Some(v) = version {
             if v != batch.version {
                 eprintln!(
@@ -556,6 +738,26 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             "watch",
             Some("0"),
             "poll the model file and hot-swap on change, every N seconds (0 = off)",
+        )
+        .opt(
+            "read-timeout-ms",
+            Some("10000"),
+            "per-connection socket read timeout (0 = off); stalled requests get 408",
+        )
+        .opt(
+            "write-timeout-ms",
+            Some("10000"),
+            "per-connection socket write timeout (0 = off)",
+        )
+        .opt(
+            "deadline-ms",
+            Some("0"),
+            "per-request scoring deadline (0 = off); overruns get 408",
+        )
+        .opt(
+            "max-conns",
+            Some("256"),
+            "concurrent connection cap (beyond it: immediate 503; 0 = off)",
         );
     let a = cli.parse_from(args).unwrap_or_else(|e| {
         eprintln!("{e}");
@@ -589,6 +791,10 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         max_inflight: flag_or_exit!(a.usize("max-inflight")),
         retry_after_secs: flag_or_exit!(a.usize("retry-after")) as u64,
         watch_secs: flag_or_exit!(a.usize("watch")) as u64,
+        read_timeout_ms: flag_or_exit!(a.usize("read-timeout-ms")) as u64,
+        write_timeout_ms: flag_or_exit!(a.usize("write-timeout-ms")) as u64,
+        deadline_ms: flag_or_exit!(a.usize("deadline-ms")) as u64,
+        max_conns: flag_or_exit!(a.usize("max-conns")),
     };
     let server = match Server::bind(registry, opts) {
         Ok(s) => s,
@@ -864,6 +1070,13 @@ fn cmd_checkpoints(args: Vec<String>) -> i32 {
         Ok(ck) => {
             println!("checkpoint : {path}");
             print!("{}", ck.summary());
+            let retained = retained_siblings(Path::new(path));
+            if !retained.is_empty() {
+                println!("retained   : {} per-outer sibling(s)", retained.len());
+                for (outer, p) in &retained {
+                    println!("  outer {:>6}  {}", outer, p.display());
+                }
+            }
             0
         }
         Err(e) => {

@@ -16,5 +16,5 @@ pub mod pool;
 pub mod range;
 pub mod sim;
 
-pub use pool::{ThreadPool, WorkerPool};
+pub use pool::{PoolError, ThreadPool, WorkerPool};
 pub use range::SampleRanges;

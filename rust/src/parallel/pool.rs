@@ -45,6 +45,31 @@ use std::thread::JoinHandle;
 /// round-trip: spinning much longer than the latency it hides cannot pay.
 const DEFAULT_SPIN_ROUNDS: usize = 1 << 12;
 
+/// Typed failure of a parallel region. A panicking region poisons only
+/// itself: the pool answers the submitter with this error (or re-panics,
+/// for the legacy [`ThreadPool::parallel_for`] surface), respawns any
+/// worker thread the panic killed, and serves subsequent regions normally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolError {
+    /// One or more workers panicked while running the region body.
+    RegionPanicked {
+        /// How many workers panicked in this region.
+        workers: usize,
+    },
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::RegionPanicked { workers } => {
+                write!(f, "{workers} worker(s) panicked inside a parallel region")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
 /// Region body handed to the workers. The `'static` lifetime is a lie told
 /// under strict supervision: `parallel_for` blocks until every worker is
 /// done with the reference, so it never outlives the real closure.
@@ -58,7 +83,12 @@ struct Shared {
     cv: Condvar,
     done_cv: Condvar,
     shutdown: AtomicBool,
-    panicked: AtomicBool,
+    /// Workers that panicked in the current region (contained or not);
+    /// swapped to zero by the submitter at the barrier.
+    panicked: AtomicUsize,
+    /// Worker ids whose thread an escaped panic killed; drained by
+    /// `respawn_dead` under the submitter lock before the next region.
+    dead: Mutex<Vec<usize>>,
     active: AtomicUsize,
     /// Mirrors `RegionState::epoch` outside the lock so idle workers can
     /// spin on "new region?" without contending the mutex. Written under
@@ -116,8 +146,18 @@ pub struct ThreadPool {
     /// Serializes region submission from multiple threads: one region runs
     /// at a time, start to barrier.
     submit: Mutex<()>,
-    workers: Vec<JoinHandle<()>>,
+    /// Behind a mutex so the cold panicked path can swap dead handles for
+    /// fresh ones (`respawn_dead`) without `&mut self`.
+    workers: Mutex<Vec<JoinHandle<()>>>,
     n_threads: usize,
+}
+
+fn spawn_worker(shared: &Arc<Shared>, wid: usize, n_threads: usize) -> JoinHandle<()> {
+    let sh = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("pcdn-worker-{wid}"))
+        .spawn(move || worker_loop(sh, wid, n_threads))
+        .expect("spawn worker")
 }
 
 impl ThreadPool {
@@ -140,25 +180,20 @@ impl ThreadPool {
             cv: Condvar::new(),
             done_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            panicked: AtomicBool::new(false),
+            panicked: AtomicUsize::new(0),
+            dead: Mutex::new(Vec::new()),
             active: AtomicUsize::new(0),
             epoch_hint: AtomicU64::new(0),
             remaining_hint: AtomicUsize::new(0),
             spin_rounds,
         });
         let workers = (0..n_threads)
-            .map(|wid| {
-                let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("pcdn-worker-{wid}"))
-                    .spawn(move || worker_loop(sh, wid, n_threads))
-                    .expect("spawn worker")
-            })
+            .map(|wid| spawn_worker(&shared, wid, n_threads))
             .collect();
         ThreadPool {
             shared,
             submit: Mutex::new(()),
-            workers,
+            workers: Mutex::new(workers),
             n_threads,
         }
     }
@@ -193,20 +228,49 @@ impl ThreadPool {
             return;
         }
         if self.on_worker_thread() {
-            // Nested region: the team is already busy running us.
+            // Nested region: the team is already busy running us. Panics
+            // propagate as-is (no containment layer on the inline path).
             for i in 0..len {
                 body(i, 0);
             }
             return;
         }
-        let body_ref: &(dyn Fn(usize, usize) + Sync) = &body;
+        if self.run_region(len, &body).is_err() {
+            panic!("worker panicked inside parallel_for");
+        }
+    }
+
+    /// Like [`parallel_for`](Self::parallel_for), but a panicking region
+    /// comes back as a typed [`PoolError`] instead of re-panicking on the
+    /// calling thread. The region is poisoned (some indices may not have
+    /// run); the pool itself stays healthy — any worker thread the panic
+    /// killed is respawned before the next region runs.
+    pub fn try_parallel_for<F>(&self, len: usize, body: F) -> Result<(), PoolError>
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if len == 0 {
+            return Ok(());
+        }
+        if self.on_worker_thread() {
+            return catch_unwind(AssertUnwindSafe(|| {
+                for i in 0..len {
+                    body(i, 0);
+                }
+            }))
+            .map_err(|_| PoolError::RegionPanicked { workers: 1 });
+        }
+        self.run_region(len, &body)
+    }
+
+    fn run_region(&self, len: usize, body: &(dyn Fn(usize, usize) + Sync)) -> Result<(), PoolError> {
         // SAFETY: the region is strictly scoped — this call does not return
         // until every worker has decremented `remaining_workers`, after
         // which no worker touches the reference again (epoch gating), so
         // extending the lifetime cannot dangle.
         let body_static: &'static (dyn Fn(usize, usize) + Sync) =
-            unsafe { std::mem::transmute(body_ref) };
-        let worker_panicked = {
+            unsafe { std::mem::transmute(body) };
+        let n_panicked = {
             // Poison-tolerant: a submitter unwinding cannot happen while
             // holding this lock (the propagation panic below fires after
             // the guard drops), but stay robust anyway.
@@ -246,14 +310,51 @@ impl ThreadPool {
                 }
                 st.body = None;
             }
-            // Read the flag while still holding the submitter lock so a
-            // concurrent caller cannot steal this region's panic; the
-            // propagation panic itself fires only after both guards drop,
-            // so a panicking region never poisons the pool.
-            self.shared.panicked.swap(false, Ordering::SeqCst)
+            // Read the counter while still holding the submitter lock so a
+            // concurrent caller cannot steal this region's panic; error
+            // propagation happens only after both guards drop, so a
+            // panicking region never poisons the pool.
+            let n = self.shared.panicked.swap(0, Ordering::SeqCst);
+            if n > 0 {
+                // Replace any worker thread the panic killed before
+                // releasing the submitter lock, so the next region never
+                // blocks on a dead team member.
+                self.respawn_dead();
+            }
+            n
         };
-        if worker_panicked {
-            panic!("worker panicked inside parallel_for");
+        if n_panicked > 0 {
+            return Err(PoolError::RegionPanicked {
+                workers: n_panicked,
+            });
+        }
+        Ok(())
+    }
+
+    /// Respawn workers whose threads died to an escaped panic. Runs on the
+    /// cold panicked path only, under the submitter lock.
+    fn respawn_dead(&self) {
+        let dead: Vec<usize> = {
+            let mut d = self
+                .shared
+                .dead
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            std::mem::take(&mut *d)
+        };
+        if dead.is_empty() {
+            return;
+        }
+        let mut ws = self
+            .workers
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        for wid in dead {
+            let fresh = spawn_worker(&self.shared, wid, self.n_threads);
+            let old = std::mem::replace(&mut ws[wid], fresh);
+            // Joining is bounded: the dead thread has already passed its
+            // barrier bookkeeping and is merely finishing its unwind.
+            let _ = old.join();
         }
     }
 
@@ -330,6 +431,45 @@ fn worker_loop(sh: Arc<Shared>, wid: usize, n_threads: usize) {
         };
         seen_epoch = epoch;
         sh.active.fetch_add(1, Ordering::SeqCst);
+        // Barrier bookkeeping must run on EVERY exit path — including a
+        // panic escaping containment and killing this thread — or the
+        // submitter hangs forever. This guard is that guarantee: on an
+        // unwinding exit it also counts the panic and marks the worker
+        // dead so the submitter can respawn it.
+        struct RegionExit<'a> {
+            sh: &'a Shared,
+            wid: usize,
+        }
+        impl Drop for RegionExit<'_> {
+            fn drop(&mut self) {
+                let sh = self.sh;
+                if std::thread::panicking() {
+                    sh.panicked.fetch_add(1, Ordering::SeqCst);
+                    sh.dead
+                        .lock()
+                        .unwrap_or_else(|poisoned| poisoned.into_inner())
+                        .push(self.wid);
+                }
+                sh.active.fetch_sub(1, Ordering::SeqCst);
+                // Completion hint first (lock-free, feeds the submitter's
+                // spin), then the authoritative locked decrement + wake.
+                sh.remaining_hint.fetch_sub(1, Ordering::AcqRel);
+                let mut st = sh
+                    .region
+                    .lock()
+                    .unwrap_or_else(|poisoned| poisoned.into_inner());
+                st.remaining_workers -= 1;
+                if st.remaining_workers == 0 {
+                    sh.done_cv.notify_all();
+                }
+            }
+        }
+        let exit = RegionExit { sh: &sh, wid };
+        // Injected pool faults fire OUTSIDE the containment layer on
+        // purpose: they kill this worker thread, exercising the full
+        // died-then-respawned path end-to-end in the chaos battery. Real
+        // body panics below stay contained on this thread.
+        crate::fault::maybe_panic(crate::fault::Site::PoolWorker);
         // Static interleaved schedule: indices wid, wid+N, wid+2N, ...
         let result = catch_unwind(AssertUnwindSafe(|| {
             let mut i = wid;
@@ -339,17 +479,9 @@ fn worker_loop(sh: Arc<Shared>, wid: usize, n_threads: usize) {
             }
         }));
         if result.is_err() {
-            sh.panicked.store(true, Ordering::SeqCst);
+            sh.panicked.fetch_add(1, Ordering::SeqCst);
         }
-        sh.active.fetch_sub(1, Ordering::SeqCst);
-        // Completion hint first (lock-free, feeds the submitter's spin),
-        // then the authoritative locked decrement + wake.
-        sh.remaining_hint.fetch_sub(1, Ordering::AcqRel);
-        let mut st = sh.region.lock().unwrap();
-        st.remaining_workers -= 1;
-        if st.remaining_workers == 0 {
-            sh.done_cv.notify_all();
-        }
+        drop(exit);
     }
 }
 
@@ -360,7 +492,11 @@ impl Drop for ThreadPool {
             let _guard = self.shared.region.lock().unwrap();
             self.shared.cv.notify_all();
         }
-        for w in self.workers.drain(..) {
+        let mut ws = self
+            .workers
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        for w in ws.drain(..) {
             let _ = w.join();
         }
     }
@@ -412,6 +548,14 @@ impl WorkerPool {
         F: Fn(usize, usize) + Sync,
     {
         self.inner.parallel_for(len, body)
+    }
+
+    /// See [`ThreadPool::try_parallel_for`].
+    pub fn try_parallel_for<F>(&self, len: usize, body: F) -> Result<(), PoolError>
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        self.inner.try_parallel_for(len, body)
     }
 
     /// See [`ThreadPool::parallel_map`].
@@ -656,6 +800,48 @@ mod tests {
             total.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(total.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn try_parallel_for_returns_typed_error_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .try_parallel_for(4, |i, _| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            })
+            .unwrap_err();
+        let PoolError::RegionPanicked { workers } = err;
+        assert!(workers >= 1);
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // Subsequent regions run normally with exact coverage.
+        let total = AtomicU64::new(0);
+        pool.try_parallel_for(16, |_, _| {
+            total.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(total.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn try_parallel_for_nested_contains_panic() {
+        let pool = WorkerPool::new(2);
+        let outcome: Vec<AtomicU64> = (0..2).map(|_| AtomicU64::new(0)).collect();
+        let pool_ref = &pool;
+        let out_ref = &outcome;
+        pool.parallel_for(2, |slot, _| {
+            // Nested submit from a worker runs inline; its panic must come
+            // back typed rather than unwinding through the worker loop.
+            let r = pool_ref.try_parallel_for(3, |i, _| {
+                if slot == 0 && i == 2 {
+                    panic!("inner boom");
+                }
+            });
+            out_ref[slot].store(if r.is_err() { 1 } else { 2 }, Ordering::SeqCst);
+        });
+        assert_eq!(outcome[0].load(Ordering::SeqCst), 1);
+        assert_eq!(outcome[1].load(Ordering::SeqCst), 2);
     }
 
     #[test]

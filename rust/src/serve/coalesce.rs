@@ -23,9 +23,11 @@
 //! a hot-swap lands between batches, never inside one.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::protocol::SparseRow;
 use super::registry::ModelRegistry;
@@ -111,7 +113,7 @@ impl Coalescer {
     ) -> Result<mpsc::Receiver<Result<ScoredBatch, ServeError>>, ServeError> {
         let (tx, rx) = mpsc::channel();
         {
-            let mut q = self.inner.queue.lock().unwrap();
+            let mut q = lock_ok(&self.inner.queue);
             if q.closed {
                 return Err(ServeError::ChannelClosed);
             }
@@ -133,9 +135,32 @@ impl Coalescer {
         rx.recv().map_err(|_| ServeError::ChannelClosed)?
     }
 
+    /// Submit and block for the result, giving up after `deadline`
+    /// (`None` waits forever, like [`Coalescer::score`]). The request
+    /// stays queued and is still scored by the dispatcher — only this
+    /// caller stops waiting — so a deadline sheds latency, not work.
+    pub fn score_deadline(
+        &self,
+        rows: Vec<SparseRow>,
+        deadline: Option<Duration>,
+    ) -> Result<ScoredBatch, ServeError> {
+        let rx = self.submit(rows)?;
+        match deadline {
+            None => rx.recv().map_err(|_| ServeError::ChannelClosed)?,
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(r) => r,
+                Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::Timeout(format!(
+                    "request overran its {}ms deadline",
+                    d.as_millis()
+                ))),
+                Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::ChannelClosed),
+            },
+        }
+    }
+
     /// Pending requests not yet dispatched (for health reporting).
     pub fn queue_depth(&self) -> usize {
-        self.inner.queue.lock().unwrap().pending.len()
+        lock_ok(&self.inner.queue).pending.len()
     }
 
     /// Close the queue and join the dispatcher. Everything already
@@ -143,17 +168,24 @@ impl Coalescer {
     /// the drain half of graceful shutdown.
     pub fn shutdown(&self) {
         {
-            let mut q = self.inner.queue.lock().unwrap();
+            let mut q = lock_ok(&self.inner.queue);
             if q.closed {
                 return;
             }
             q.closed = true;
         }
         self.inner.cv.notify_all();
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        if let Some(h) = lock_ok(&self.worker).take() {
             let _ = h.join();
         }
     }
+}
+
+/// Lock tolerating poisoning: the coalescer must keep answering
+/// requests even after a panic elsewhere poisoned a mutex — the queue
+/// is structurally valid at every instruction boundary.
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 impl Drop for Coalescer {
@@ -167,9 +199,9 @@ impl Drop for Coalescer {
 fn dispatcher(inner: &Inner) {
     loop {
         let group = {
-            let mut q = inner.queue.lock().unwrap();
+            let mut q = lock_ok(&inner.queue);
             while q.pending.is_empty() && !q.closed {
-                q = inner.cv.wait(q).unwrap();
+                q = inner.cv.wait(q).unwrap_or_else(PoisonError::into_inner);
             }
             if q.pending.is_empty() && q.closed {
                 return;
@@ -192,7 +224,20 @@ fn dispatcher(inner: &Inner) {
             }
             group
         };
-        score_group(inner, group);
+        // Contain a scoring panic: answer the whole group with a typed
+        // error and keep the dispatcher alive for the next batch. A
+        // sender whose request was already answered just fails the
+        // second send harmlessly.
+        let senders: Vec<mpsc::Sender<Result<ScoredBatch, ServeError>>> =
+            group.iter().map(|p| p.tx.clone()).collect();
+        if catch_unwind(AssertUnwindSafe(|| score_group(inner, group))).is_err() {
+            for tx in senders {
+                let _ = tx.send(Err(ServeError::Io(
+                    "scoring panicked; the dispatcher recovered and the batch was dropped"
+                        .into(),
+                )));
+            }
+        }
     }
 }
 

@@ -19,10 +19,12 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
+
+use crate::fault::{self, FaultAction, Site};
 
 use super::admission::Admission;
 use super::coalesce::Coalescer;
@@ -50,6 +52,21 @@ pub struct ServeOptions {
     /// seconds; 0 disables the watcher (explicit `POST /reload` always
     /// works).
     pub watch_secs: u64,
+    /// Per-connection socket read timeout in milliseconds; 0 disables.
+    /// A connection idle between keep-alive requests past this is
+    /// closed silently; one stalled *inside* a request (slow loris)
+    /// gets `408` and is closed.
+    pub read_timeout_ms: u64,
+    /// Per-connection socket write timeout in milliseconds; 0 disables.
+    /// Protects the daemon from clients that stop draining responses.
+    pub write_timeout_ms: u64,
+    /// Per-request scoring deadline in milliseconds; 0 disables. A
+    /// `/score` request whose result is not ready by then answers
+    /// `408` (the work still completes; only the wait is bounded).
+    pub deadline_ms: u64,
+    /// Concurrent connection cap; beyond it new connections are shed
+    /// with an immediate `503 + Retry-After` and closed. 0 disables.
+    pub max_conns: usize,
 }
 
 impl Default for ServeOptions {
@@ -62,8 +79,17 @@ impl Default for ServeOptions {
             max_inflight: 64,
             retry_after_secs: 1,
             watch_secs: 0,
+            read_timeout_ms: 10_000,
+            write_timeout_ms: 10_000,
+            deadline_ms: 0,
+            max_conns: 256,
         }
     }
+}
+
+/// `0`-disables-it conversion shared by the timeout knobs.
+fn ms_opt(ms: u64) -> Option<Duration> {
+    (ms > 0).then(|| Duration::from_millis(ms))
 }
 
 struct Shared {
@@ -73,6 +99,23 @@ struct Shared {
     retry_after: String,
     stop: AtomicBool,
     addr: SocketAddr,
+    /// Live connection gauge (for `/healthz` and the `max_conns` cap).
+    conns: AtomicUsize,
+    max_conns: usize,
+    read_timeout: Option<Duration>,
+    write_timeout: Option<Duration>,
+    deadline: Option<Duration>,
+}
+
+/// RAII decrement for the connection gauge: every exit path of a
+/// connection thread — return, panic, injected fault — releases its
+/// slot, or the cap would leak shut.
+struct ConnSlot<'a>(&'a AtomicUsize);
+
+impl Drop for ConnSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 impl Shared {
@@ -122,6 +165,11 @@ impl Server {
             retry_after: opts.retry_after_secs.to_string(),
             stop: AtomicBool::new(false),
             addr,
+            conns: AtomicUsize::new(0),
+            max_conns: opts.max_conns,
+            read_timeout: ms_opt(opts.read_timeout_ms),
+            write_timeout: ms_opt(opts.write_timeout_ms),
+            deadline: ms_opt(opts.deadline_ms),
         });
 
         let accept_shared = Arc::clone(&shared);
@@ -189,11 +237,41 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
             return;
         }
         match stream {
-            Ok(stream) => {
+            Ok(mut stream) => {
+                // Shed connections beyond the cap with an immediate 503
+                // instead of accumulating blocked threads. The gauge is
+                // incremented here (not in the connection thread) so the
+                // cap can't be overrun by an accept burst.
+                let live = shared.conns.fetch_add(1, Ordering::AcqRel) + 1;
+                let slot = ConnSlot(&shared.conns);
+                if shared.max_conns > 0 && live > shared.max_conns {
+                    let e = ServeError::Overloaded {
+                        in_flight: live,
+                        cap: shared.max_conns,
+                    };
+                    let _ = http::write_response(
+                        &mut stream,
+                        503,
+                        http::reason(503),
+                        false,
+                        &[("Retry-After", shared.retry_after.clone())],
+                        &protocol::error_json(&e).dump(),
+                    );
+                    continue; // `slot` drops: gauge released.
+                }
+                std::mem::forget(slot); // transferred to the conn thread
+                let _ = stream.set_read_timeout(shared.read_timeout);
+                let _ = stream.set_write_timeout(shared.write_timeout);
                 let conn_shared = Arc::clone(shared);
-                let _ = std::thread::Builder::new()
+                let spawned = std::thread::Builder::new()
                     .name("pcdn-conn".into())
-                    .spawn(move || handle_conn(&conn_shared, stream));
+                    .spawn(move || {
+                        let _slot = ConnSlot(&conn_shared.conns);
+                        handle_conn(&conn_shared, stream);
+                    });
+                if spawned.is_err() {
+                    shared.conns.fetch_sub(1, Ordering::AcqRel);
+                }
             }
             Err(_) => {
                 // Transient accept failure (e.g. fd pressure): back off
@@ -205,6 +283,7 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
 }
 
 fn watch_loop(shared: &Arc<Shared>, interval: Duration) {
+    let mut last_err: Option<String> = None;
     while !shared.stop_requested() {
         // Sleep in short slices so shutdown isn't delayed by a long
         // watch interval.
@@ -217,9 +296,22 @@ fn watch_loop(shared: &Arc<Shared>, interval: Duration) {
         if shared.stop_requested() {
             return;
         }
-        // A failed reload keeps the old model; nothing to do here but
-        // try again next tick.
-        let _ = shared.registry.poll_changed();
+        // A failed reload keeps the old model installed; log it (once
+        // per distinct message, so a transiently unreadable file during
+        // an external writer's rename doesn't spam) and try again next
+        // tick. The watcher itself must never die.
+        match shared.registry.poll_changed() {
+            Ok(_) => last_err = None,
+            Err(e) => {
+                let msg = e.to_string();
+                if last_err.as_deref() != Some(msg.as_str()) {
+                    eprintln!(
+                        "pcdn serve: reload watcher: {msg} (keeping the installed model)"
+                    );
+                    last_err = Some(msg);
+                }
+            }
+        }
     }
 }
 
@@ -230,9 +322,37 @@ fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) {
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
     loop {
+        match fault::fire(Site::ServerRead) {
+            Some(FaultAction::Stall { millis }) => fault::stall(millis),
+            Some(_) => return, // injected server-side disconnect
+            None => {}
+        }
         let mut first = String::new();
         match reader.read_line(&mut first) {
-            Ok(0) | Err(_) => return,
+            Ok(0) => return,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Socket read timeout. An idle keep-alive connection
+                // (nothing read) closes silently; a stalled partial
+                // request line (slow loris) is told why first.
+                if !first.is_empty() {
+                    let e = ServeError::Timeout("request line stalled".into());
+                    let _ = http::write_response(
+                        &mut writer,
+                        408,
+                        http::reason(408),
+                        false,
+                        &[],
+                        &protocol::error_json(&e).dump(),
+                    );
+                }
+                return;
+            }
+            Err(_) => return,
             Ok(_) => {}
         }
         if first.trim().is_empty() {
@@ -261,11 +381,17 @@ fn handle_conn(shared: &Arc<Shared>, stream: TcpStream) {
                 }
             }
             Err(e) => {
+                // A timeout inside headers/body is the peer's slowness
+                // (408); everything else is a malformed request (400).
+                let status = match &e {
+                    ServeError::Timeout(_) => 408,
+                    _ => 400,
+                };
                 let body = protocol::error_json(&e).dump();
                 let _ = http::write_response(
                     &mut writer,
-                    400,
-                    http::reason(400),
+                    status,
+                    http::reason(status),
                     false,
                     &[],
                     &body,
@@ -284,6 +410,7 @@ fn status_of(e: &ServeError) -> u16 {
         | ServeError::Draining
         | ServeError::ChannelClosed => 503,
         ServeError::Score(_) | ServeError::BadRequest(_) => 400,
+        ServeError::Timeout(_) => 408,
         ServeError::Reload(_) | ServeError::Io(_) | ServeError::Remote { .. } => 500,
     }
 }
@@ -319,6 +446,10 @@ fn handle_http(shared: &Arc<Shared>, req: &http::Request, writer: &mut TcpStream
                     (
                         "queue_depth",
                         Json::Num(shared.coalescer.queue_depth() as f64),
+                    ),
+                    (
+                        "conns",
+                        Json::Num(shared.conns.load(Ordering::Acquire) as f64),
                     ),
                     ("draining", Json::Bool(shared.admission.is_draining())),
                 ]);
@@ -371,6 +502,18 @@ fn handle_http(shared: &Arc<Shared>, req: &http::Request, writer: &mut TcpStream
             }
         };
     let keep = keep && !shared.stop_requested();
+    match fault::fire(Site::ServerWrite) {
+        Some(FaultAction::Stall { millis }) => fault::stall(millis),
+        Some(FaultAction::Disconnect) => {
+            // Mid-stream disconnect: ship a truncated response prefix,
+            // then drop the connection, so clients exercise their
+            // reconnect-and-retry path deterministically.
+            let _ = writer.write_all(b"HTTP/1.1 200 OK\r\nContent-");
+            return false;
+        }
+        Some(_) => return false,
+        None => {}
+    }
     let ok = http::write_response(
         writer,
         status,
@@ -387,7 +530,7 @@ fn handle_http(shared: &Arc<Shared>, req: &http::Request, writer: &mut TcpStream
 fn score_via_http(shared: &Shared, body: &str) -> Result<Json, ServeError> {
     let _permit = shared.admission.try_acquire()?;
     let rows = protocol::parse_score_request(body)?;
-    let batch = shared.coalescer.score(rows)?;
+    let batch = shared.coalescer.score_deadline(rows, shared.deadline)?;
     Ok(protocol::score_response_json(batch.version, &batch.z))
 }
 

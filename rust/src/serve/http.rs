@@ -11,6 +11,18 @@ use std::io::{BufRead, Read, Write};
 
 use super::ServeError;
 
+/// Map an I/O error to the right [`ServeError`]: socket-timeout kinds
+/// become [`ServeError::Timeout`] (→ `408`), everything else
+/// [`ServeError::Io`].
+pub fn classify_io(context: &str, e: &std::io::Error) -> ServeError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            ServeError::Timeout(format!("{context}: {e}"))
+        }
+        _ => ServeError::Io(format!("{context}: {e}")),
+    }
+}
+
 /// Refuse request bodies larger than this (16 MiB) before buffering
 /// them — a `Content-Length` is attacker-controlled input.
 pub const MAX_BODY: usize = 16 << 20;
@@ -49,7 +61,7 @@ pub fn read_request(
         let mut header = String::new();
         let n = reader
             .read_line(&mut header)
-            .map_err(|e| ServeError::Io(e.to_string()))?;
+            .map_err(|e| classify_io("reading headers", &e))?;
         if n == 0 {
             return Err(ServeError::BadRequest("eof inside headers".into()));
         }
@@ -81,7 +93,7 @@ pub fn read_request(
     let mut raw = vec![0u8; content_length];
     reader
         .read_exact(&mut raw)
-        .map_err(|e| ServeError::Io(e.to_string()))?;
+        .map_err(|e| classify_io("reading body", &e))?;
     let body = String::from_utf8(raw)
         .map_err(|_| ServeError::BadRequest("non-UTF-8 body".into()))?;
     Ok(Some(Request {
@@ -125,6 +137,7 @@ pub fn reason(status: u16) -> &'static str {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        408 => "Request Timeout",
         405 => "Method Not Allowed",
         500 => "Internal Server Error",
         503 => "Service Unavailable",

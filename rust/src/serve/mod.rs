@@ -46,7 +46,7 @@ use std::fmt;
 pub use admission::{Admission, Permit};
 pub use coalesce::{Coalescer, ScoredBatch};
 pub use daemon::{ServeOptions, Server};
-pub use protocol::SparseRow;
+pub use protocol::{HttpClient, SparseRow};
 pub use registry::{ModelRegistry, ModelVersion};
 
 use crate::api::{ModelLoadError, ScoreError};
@@ -71,6 +71,9 @@ pub enum ServeError {
     BadRequest(String),
     /// Socket-level failure.
     Io(String),
+    /// The peer was too slow: a socket read/write timed out or a
+    /// request overran its deadline. Maps to `408 Request Timeout`.
+    Timeout(String),
     /// The scoring pipeline shut down underneath a waiting request.
     ChannelClosed,
     /// Client side: the server answered with a non-success status.
@@ -91,6 +94,7 @@ impl fmt::Display for ServeError {
             ServeError::Reload(e) => write!(f, "reload failed: {e}"),
             ServeError::BadRequest(d) => write!(f, "bad request: {d}"),
             ServeError::Io(d) => write!(f, "io error: {d}"),
+            ServeError::Timeout(d) => write!(f, "timed out: {d}"),
             ServeError::ChannelClosed => write!(f, "scoring pipeline closed"),
             ServeError::Remote { status, message } => {
                 write!(f, "server answered {status}: {message}")

@@ -18,9 +18,11 @@ use std::net::TcpStream;
 use std::time::Duration;
 
 use super::coalesce::ScoredBatch;
-use super::ServeError;
+use super::{http, ServeError};
 use crate::api::ScoreError;
+use crate::fault::{self, Site};
 use crate::util::json::Json;
+use crate::util::rng::Pcg64;
 
 /// One sparse sample as parallel `(feature index, value)` arrays — the
 /// unit both protocols move around.
@@ -235,31 +237,25 @@ pub struct HttpReply {
     pub body: String,
 }
 
-/// One blocking HTTP/1.1 exchange on a fresh connection (the client
-/// used by tests, CI smoke, and `pcdn predict --via`).
-pub fn http_request(
+/// Read one HTTP reply off `reader`. Returns the reply plus whether
+/// the connection may be reused (HTTP/1.1 keep-alive unless the server
+/// said `Connection: close` or the body length was unbounded). A
+/// connection dropped mid-reply — truncated status line or headers —
+/// is a typed [`ServeError::Io`], never a silently-short reply.
+fn read_reply(
     addr: &str,
-    method: &str,
-    path: &str,
-    body: &str,
-    timeout: Duration,
-) -> Result<HttpReply, ServeError> {
-    let io_err = |e: std::io::Error| ServeError::Io(format!("{addr}: {e}"));
-    let stream = TcpStream::connect(addr).map_err(io_err)?;
-    stream.set_read_timeout(Some(timeout)).map_err(io_err)?;
-    stream.set_write_timeout(Some(timeout)).map_err(io_err)?;
-    let mut reader = BufReader::new(stream);
-    let request = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-    reader
-        .get_mut()
-        .write_all(request.as_bytes())
-        .map_err(io_err)?;
-
+    reader: &mut BufReader<TcpStream>,
+) -> Result<(HttpReply, bool), ServeError> {
+    let io_err = |c: &str, e: &std::io::Error| http::classify_io(&format!("{addr}: {c}"), e);
     let mut status_line = String::new();
-    reader.read_line(&mut status_line).map_err(io_err)?;
+    let n = reader
+        .read_line(&mut status_line)
+        .map_err(|e| io_err("status line", &e))?;
+    if n == 0 {
+        return Err(ServeError::Io(format!(
+            "{addr}: connection closed before the status line"
+        )));
+    }
     let status = status_line
         .split_whitespace()
         .nth(1)
@@ -268,9 +264,17 @@ pub fn http_request(
 
     let mut retry_after = None;
     let mut content_length = None;
+    let mut keep = true;
     loop {
         let mut line = String::new();
-        reader.read_line(&mut line).map_err(io_err)?;
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| io_err("headers", &e))?;
+        if n == 0 {
+            return Err(ServeError::Io(format!(
+                "{addr}: connection closed inside the reply headers"
+            )));
+        }
         let line = line.trim_end();
         if line.is_empty() {
             break;
@@ -281,6 +285,10 @@ pub fn http_request(
                 retry_after = value.parse::<u64>().ok();
             } else if name.eq_ignore_ascii_case("content-length") {
                 content_length = value.parse::<usize>().ok();
+            } else if name.eq_ignore_ascii_case("connection")
+                && value.eq_ignore_ascii_case("close")
+            {
+                keep = false;
             }
         }
     }
@@ -288,19 +296,209 @@ pub fn http_request(
     match content_length {
         Some(n) => {
             raw.resize(n, 0);
-            reader.read_exact(&mut raw).map_err(io_err)?;
+            reader.read_exact(&mut raw).map_err(|e| io_err("body", &e))?;
         }
         None => {
-            reader.read_to_end(&mut raw).map_err(io_err)?;
+            reader.read_to_end(&mut raw).map_err(|e| io_err("body", &e))?;
+            keep = false;
         }
     }
     let body = String::from_utf8(raw)
         .map_err(|_| ServeError::Io("non-UTF-8 response body".into()))?;
-    Ok(HttpReply {
-        status,
-        retry_after,
-        body,
-    })
+    Ok((
+        HttpReply {
+            status,
+            retry_after,
+            body,
+        },
+        keep,
+    ))
+}
+
+/// Persistent HTTP/1.1 client: keep-alive connection reuse plus
+/// bounded retry with jittered exponential backoff. This is the client
+/// behind `pcdn predict --via`; [`http_request`] stays as the one-shot
+/// `Connection: close` variant for single exchanges.
+///
+/// Retry policy: connect failures, socket timeouts, and replies
+/// truncated mid-stream consume the retry budget with a backoff sleep
+/// of `base · 2^attempt`, jittered ±50% and capped at 1 s. A failure
+/// on a *reused* connection first gets one free immediate reconnect —
+/// a server restarting or idly closing a kept-alive socket is expected,
+/// not an error. `503` replies are retried the same way (scoring is
+/// idempotent); other statuses are returned to the caller as-is.
+pub struct HttpClient {
+    addr: String,
+    timeout: Duration,
+    retries: usize,
+    backoff_base_ms: u64,
+    conn: Option<BufReader<TcpStream>>,
+    connects: u64,
+    rng: Pcg64,
+}
+
+impl HttpClient {
+    pub fn new(addr: &str) -> HttpClient {
+        HttpClient {
+            addr: addr.to_string(),
+            timeout: Duration::from_secs(30),
+            retries: 2,
+            backoff_base_ms: 50,
+            conn: None,
+            connects: 0,
+            // Fixed stream: jitter only needs to decorrelate concurrent
+            // clients, and the seed keeps client behavior replayable.
+            rng: Pcg64::new(0x7063_646e_6874_7470),
+        }
+    }
+
+    /// Socket read/write timeout per attempt (default 30 s).
+    pub fn timeout(mut self, d: Duration) -> HttpClient {
+        self.timeout = d;
+        self
+    }
+
+    /// Retry budget beyond the first attempt (default 2).
+    pub fn retries(mut self, n: usize) -> HttpClient {
+        self.retries = n;
+        self
+    }
+
+    /// How many TCP connections this client has opened — the
+    /// observable proof of keep-alive reuse (and of reconnects).
+    pub fn connects(&self) -> u64 {
+        self.connects
+    }
+
+    /// One request with the full retry policy (see the type docs).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> Result<HttpReply, ServeError> {
+        let mut budget = self.retries;
+        let mut attempt = 0usize;
+        loop {
+            let reused = self.conn.is_some();
+            match self.try_once(method, path, body) {
+                Ok(reply) if reply.status == 503 && budget > 0 => {
+                    budget -= 1;
+                    self.backoff(attempt);
+                    attempt += 1;
+                }
+                Ok(reply) => return Ok(reply),
+                Err(e @ (ServeError::Io(_) | ServeError::Timeout(_))) => {
+                    self.conn = None;
+                    if reused {
+                        // Free immediate reconnect: a kept-alive socket
+                        // dying underneath us is normal server churn.
+                        continue;
+                    }
+                    if budget == 0 {
+                        return Err(e);
+                    }
+                    budget -= 1;
+                    self.backoff(attempt);
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Score rows with retries; non-200 final answers surface as
+    /// [`ServeError::Remote`], like [`http_score`].
+    pub fn score(&mut self, rows: &[SparseRow]) -> Result<ScoredBatch, ServeError> {
+        let body = rows_to_json(rows).dump();
+        let reply = self.request("POST", "/score", &body)?;
+        if reply.status != 200 {
+            let message = Json::parse(&reply.body)
+                .ok()
+                .and_then(|d| d.get("error").and_then(Json::as_str).map(str::to_string))
+                .unwrap_or(reply.body);
+            return Err(ServeError::Remote {
+                status: reply.status,
+                message,
+            });
+        }
+        parse_score_response(&reply.body)
+    }
+
+    fn try_once(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> Result<HttpReply, ServeError> {
+        let addr = self.addr.clone();
+        let io_err = |c: &str, e: &std::io::Error| http::classify_io(&format!("{addr}: {c}"), e);
+        if self.conn.is_none() {
+            fault::io_gate(Site::ClientConnect).map_err(|e| io_err("connect", &e))?;
+            let stream = TcpStream::connect(&self.addr).map_err(|e| io_err("connect", &e))?;
+            stream
+                .set_read_timeout(Some(self.timeout))
+                .map_err(|e| io_err("connect", &e))?;
+            stream
+                .set_write_timeout(Some(self.timeout))
+                .map_err(|e| io_err("connect", &e))?;
+            self.connects += 1;
+            self.conn = Some(BufReader::new(stream));
+        }
+        let reader = self.conn.as_mut().expect("connection just ensured");
+        // HTTP/1.1 defaults to keep-alive; no Connection header needed.
+        let request = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        fault::io_gate(Site::ClientWrite).map_err(|e| io_err("write", &e))?;
+        reader
+            .get_mut()
+            .write_all(request.as_bytes())
+            .map_err(|e| io_err("write", &e))?;
+        fault::io_gate(Site::ClientRead).map_err(|e| io_err("read", &e))?;
+        let (reply, keep) = read_reply(&addr, reader)?;
+        if !keep {
+            self.conn = None;
+        }
+        Ok(reply)
+    }
+
+    fn backoff(&mut self, attempt: usize) {
+        let exp = self.backoff_base_ms.saturating_mul(1 << attempt.min(4));
+        let jittered = (exp as f64 * self.rng.uniform(0.5, 1.5)) as u64;
+        std::thread::sleep(Duration::from_millis(jittered.min(1_000)));
+    }
+}
+
+/// One blocking HTTP/1.1 exchange on a fresh connection (the client
+/// used by tests, CI smoke, and `pcdn predict --via`).
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> Result<HttpReply, ServeError> {
+    let io_err = |c: &str, e: &std::io::Error| http::classify_io(&format!("{addr}: {c}"), e);
+    let stream = TcpStream::connect(addr).map_err(|e| io_err("connect", &e))?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| io_err("connect", &e))?;
+    stream
+        .set_write_timeout(Some(timeout))
+        .map_err(|e| io_err("connect", &e))?;
+    let mut reader = BufReader::new(stream);
+    let request = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    reader
+        .get_mut()
+        .write_all(request.as_bytes())
+        .map_err(|e| io_err("write", &e))?;
+    let (reply, _keep) = read_reply(addr, &mut reader)?;
+    Ok(reply)
 }
 
 /// Score `rows` against a running daemon over HTTP. Non-200 answers

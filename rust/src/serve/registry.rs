@@ -86,12 +86,12 @@ impl ModelRegistry {
     /// momentarily-held lock. The returned `Arc` keeps that version
     /// alive for the caller regardless of later swaps.
     pub fn current(&self) -> Arc<ModelVersion> {
-        Arc::clone(&self.current.lock().unwrap())
+        Arc::clone(&lock_ok(&self.current))
     }
 
     /// The epoch of the currently installed model.
     pub fn current_version(&self) -> u64 {
-        self.current.lock().unwrap().version
+        lock_ok(&self.current).version
     }
 
     /// Atomically install `model` as the next version and return its
@@ -100,7 +100,7 @@ impl ModelRegistry {
     pub fn swap(&self, model: Arc<Model>) -> u64 {
         let version = self.next_version.fetch_add(1, Ordering::Relaxed);
         let next = Arc::new(ModelVersion { version, model });
-        *self.current.lock().unwrap() = next;
+        *lock_ok(&self.current) = next;
         version
     }
 
@@ -110,10 +110,12 @@ impl ModelRegistry {
         let path = self.source.as_deref().ok_or_else(|| {
             ModelLoadError::Io("registry has no source path to reload from".into())
         })?;
+        crate::fault::io_gate(crate::fault::Site::ArtifactRead)
+            .map_err(|e| ModelLoadError::Io(e.to_string()))?;
         let new_stamp = stamp(path).ok();
         let model = Arc::new(Model::load(path)?);
         let version = self.swap(model);
-        *self.last_stamp.lock().unwrap() = new_stamp;
+        *lock_ok(&self.last_stamp) = new_stamp;
         Ok(version)
     }
 
@@ -130,7 +132,7 @@ impl ModelRegistry {
             // Mid-rename or deleted: keep serving the installed model.
             return Ok(None);
         };
-        if *self.last_stamp.lock().unwrap() == Some(now) {
+        if *lock_ok(&self.last_stamp) == Some(now) {
             return Ok(None);
         }
         self.reload().map(Some)
@@ -140,6 +142,13 @@ impl ModelRegistry {
     pub fn source(&self) -> Option<&Path> {
         self.source.as_deref()
     }
+}
+
+/// Lock tolerating poisoning: a panic elsewhere must not take the
+/// serving registry down with it — the guarded state (an `Arc` swap
+/// pointer / a stamp) is valid at every instruction boundary.
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 #[cfg(test)]

@@ -640,9 +640,18 @@ pub(crate) fn emit(
 /// overwritten — the file always holds the newest complete checkpoint).
 /// IO errors are recorded, not panicked: a failing disk should not kill a
 /// multi-hour fit, and the caller can inspect [`CheckpointWriter::last_error`].
+///
+/// With a retention count ([`CheckpointWriter::keep`]) each periodic
+/// checkpoint is *also* kept as a `<path>.o<outer>` sibling, and only the
+/// newest `N` siblings survive — the new sibling is written (atomically)
+/// before any old one is deleted, so a crash mid-prune can only leave
+/// extra history behind, never less.
 pub struct CheckpointWriter {
     every: usize,
     path: PathBuf,
+    /// Retained `<path>.o<outer>` siblings to keep (0 = no retention,
+    /// the single overwritten file only).
+    keep: usize,
     stamp: StampCache,
     pub last_error: Mutex<Option<String>>,
 }
@@ -652,10 +661,59 @@ impl CheckpointWriter {
         CheckpointWriter {
             every: every.max(1),
             path: path.into(),
+            keep: 0,
             stamp: StampCache::default(),
             last_error: Mutex::new(None),
         }
     }
+
+    /// Keep the newest `n` periodic checkpoints as `<path>.o<outer>`
+    /// siblings (pruned write-new-then-delete-old). `0` disables
+    /// retention.
+    pub fn keep(mut self, n: usize) -> CheckpointWriter {
+        self.keep = n;
+        self
+    }
+
+    fn record_error(&self, e: impl std::fmt::Display, path: &Path) {
+        *self
+            .last_error
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner()) =
+            Some(format!("{}: {e}", path.display()));
+    }
+}
+
+/// The retained periodic checkpoints next to `base` — files named
+/// `<base>.o<outer>` — sorted by outer iteration ascending. Used by the
+/// writer's pruning pass and by `pcdn checkpoints` to surface history.
+pub fn retained_siblings(base: &Path) -> Vec<(usize, PathBuf)> {
+    let Some(name) = base.file_name().and_then(|s| s.to_str()) else {
+        return Vec::new();
+    };
+    let dir = match base.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for entry in rd.flatten() {
+        let fname = entry.file_name();
+        let Some(fname) = fname.to_str() else { continue };
+        let Some(suffix) = fname.strip_prefix(name).and_then(|r| r.strip_prefix(".o"))
+        else {
+            continue;
+        };
+        if !suffix.is_empty() && suffix.bytes().all(|b| b.is_ascii_digit()) {
+            if let Ok(outer) = suffix.parse::<usize>() {
+                out.push((outer, entry.path()));
+            }
+        }
+    }
+    out.sort();
+    out
 }
 
 impl Probe for CheckpointWriter {
@@ -665,9 +723,65 @@ impl Probe for CheckpointWriter {
         }
         let ck = view.to_checkpoint_with(self.stamp.of(view.state.data()));
         if let Err(e) = ck.save(&self.path) {
-            *self.last_error.lock().unwrap() =
-                Some(format!("{}: {e}", self.path.display()));
+            self.record_error(e, &self.path);
+            return;
         }
+        if self.keep == 0 {
+            return;
+        }
+        let Some(name) = self.path.file_name().and_then(|s| s.to_str()) else {
+            return;
+        };
+        // Write the new retained sibling first, then prune the oldest —
+        // an interruption between the two only over-retains.
+        let retained = self.path.with_file_name(format!("{name}.o{}", view.outer));
+        if let Err(e) = ck.save(&retained) {
+            self.record_error(e, &retained);
+            return;
+        }
+        let sibs = retained_siblings(&self.path);
+        if sibs.len() > self.keep {
+            for (_, p) in &sibs[..sibs.len() - self.keep] {
+                if let Err(e) = std::fs::remove_file(p) {
+                    self.record_error(e, p);
+                }
+            }
+        }
+    }
+}
+
+/// Probe that keeps only the *newest* resume point, overwritten in place —
+/// the "last good state" the divergence path hands back through
+/// `FitError::Diverged`. The divergence guard stops a run *before* the bad
+/// boundary is emitted, so whatever this probe holds is finite by
+/// construction.
+#[derive(Default)]
+pub struct LastCheckpoint {
+    stamp: StampCache,
+    latest: Mutex<Option<Checkpoint>>,
+}
+
+impl LastCheckpoint {
+    pub fn new() -> LastCheckpoint {
+        LastCheckpoint::default()
+    }
+
+    /// The newest resume point seen, if any.
+    pub fn latest(&self) -> Option<Checkpoint> {
+        self.latest
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .clone()
+    }
+}
+
+impl Probe for LastCheckpoint {
+    fn on_resume_point(&self, view: &CheckpointView<'_, '_>) {
+        let ck = view.to_checkpoint_with(self.stamp.of(view.state.data()));
+        *self
+            .latest
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner()) = Some(ck);
     }
 }
 
@@ -918,6 +1032,22 @@ mod tests {
         assert!(text.contains(&format!("fingerprint {:#018x}", d.fingerprint())));
         assert!(text.contains("c = 0.7"));
         assert!(text.contains("cdn shrinking (6/8 active"));
+    }
+
+    #[test]
+    fn retained_siblings_parse_and_sort() {
+        let dir = std::env::temp_dir().join("pcdn_ckpt_retain_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("run.ckpt");
+        for n in [30, 10, 20] {
+            std::fs::write(dir.join(format!("run.ckpt.o{n}")), b"x").unwrap();
+        }
+        // Not retained siblings: malformed suffix, different base name.
+        std::fs::write(dir.join("run.ckpt.obad"), b"x").unwrap();
+        std::fs::write(dir.join("other.ckpt.o5"), b"x").unwrap();
+        let outers: Vec<usize> = retained_siblings(&base).iter().map(|(o, _)| *o).collect();
+        assert_eq!(outers, vec![10, 20, 30]);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -238,6 +238,12 @@ pub struct TrainResult {
     pub trace: Vec<TracePoint>,
     /// Per-inner-iteration cost records (when `record_iters`).
     pub iter_records: Vec<IterRecord>,
+    /// `Some((outer, value))` when the run was aborted because the
+    /// objective went non-finite at an outer boundary (the divergence
+    /// regime of naive parallel CD — Bradley et al., arXiv 1105.5379).
+    /// The boundary is never emitted to checkpoint probes, so the last
+    /// written checkpoint is the last *good* state.
+    pub diverged: Option<(usize, f64)>,
 }
 
 impl TrainResult {
@@ -313,6 +319,9 @@ pub(crate) struct RunMonitor {
     pub trace: Vec<TracePoint>,
     pub init_subgrad: Option<f64>,
     pub converged: bool,
+    /// Set when `observe` saw a non-finite objective (see
+    /// [`TrainResult::diverged`]).
+    pub diverged: Option<(usize, f64)>,
 }
 
 impl RunMonitor {
@@ -322,6 +331,7 @@ impl RunMonitor {
             trace: Vec::new(),
             init_subgrad: None,
             converged: false,
+            diverged: None,
         }
     }
 
@@ -337,7 +347,19 @@ impl RunMonitor {
         opts: &TrainOptions,
         ls_steps: usize,
     ) -> bool {
-        let fval = objective_value_l2(state, w, opts.l2_reg);
+        let fval = crate::fault::poison(
+            crate::fault::Site::SolverOuter,
+            objective_value_l2(state, w, opts.l2_reg),
+        );
+        // Divergence guard: a non-finite objective means the loss state is
+        // poisoned (naive parallel CD's failure regime; injected here by
+        // the chaos battery). Stop immediately WITHOUT notifying probes —
+        // checkpoint writers must never persist the bad boundary, so the
+        // last emitted checkpoint stays the last-good state.
+        if !fval.is_finite() {
+            self.diverged = Some((outer, fval));
+            return true;
+        }
         if let Some(p) = &opts.probe {
             p.0.on_outer(&probe::OuterInfo {
                 outer,

@@ -376,6 +376,7 @@ pub(crate) fn finish(
         wall_secs: monitor.sw.secs(),
         trace: monitor.trace,
         iter_records: records,
+        diverged: monitor.diverged,
     }
 }
 

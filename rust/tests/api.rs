@@ -16,7 +16,7 @@ use pcdn::api::{
 use pcdn::data::synthetic::{generate, SyntheticSpec};
 use pcdn::data::Dataset;
 use pcdn::loss::Objective;
-use pcdn::solver::checkpoint::Checkpoint;
+use pcdn::solver::checkpoint::{retained_siblings, Checkpoint};
 use pcdn::solver::{ProbeHandle, StopRule};
 
 fn toy(seed: u64) -> Dataset {
@@ -408,6 +408,119 @@ fn model_load_classifies_corrupt_files() {
     let e = Model::load(&p).unwrap_err();
     assert!(matches!(e, ModelLoadError::Io(_)));
     assert!(e.to_string().contains("missing.model"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- checkpoint robustness ------------------------------------------------
+
+#[test]
+fn checkpoint_load_classifies_corrupt_files() {
+    // The PCDNCKP1 mirror of `model_load_classifies_corrupt_files`:
+    // every corruption of a checkpoint file surfaces as a typed error
+    // string naming the file — never a panic, never a garbage resume.
+    let d = toy(76);
+    let rec = Arc::new(CheckpointRecorder::new(1));
+    Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::MaxOuter(5))
+        .max_outer(5)
+        .probe(ProbeHandle(rec.clone()))
+        .run()
+        .unwrap();
+    let ck = rec.latest().expect("run produced a checkpoint");
+    let good = ck.to_bytes();
+
+    let dir = std::env::temp_dir().join("pcdn_api_ckpt_err_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let write = |name: &str, bytes: &[u8]| {
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    };
+
+    // Truncated: the file ends mid-document.
+    let p = write("cut.ckpt", &good[..good.len() / 2]);
+    let e = Checkpoint::load(&p).unwrap_err();
+    assert!(e.contains("cut.ckpt"), "error should name the file: {e}");
+
+    // Bad magic: the leading bytes are not PCDNCKP1.
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    let p = write("magic.ckpt", &bad);
+    let e = Checkpoint::load(&p).unwrap_err();
+    assert!(e.contains("bad magic"), "{e}");
+
+    // Version skew: right magic, format version from the future.
+    let mut skew = good.clone();
+    skew[8..12].copy_from_slice(&99u32.to_le_bytes());
+    let p = write("skew.ckpt", &skew);
+    let e = Checkpoint::load(&p).unwrap_err();
+    assert!(e.contains("unsupported format version 99"), "{e}");
+
+    // Trailing bytes after the document.
+    let mut trailing = good.clone();
+    trailing.push(0);
+    let p = write("trailing.ckpt", &trailing);
+    let e = Checkpoint::load(&p).unwrap_err();
+    assert!(e.contains("trailing bytes"), "{e}");
+
+    // Missing file: an error naming the path.
+    let p = dir.join("missing.ckpt");
+    std::fs::remove_file(&p).ok();
+    let e = Checkpoint::load(&p).unwrap_err();
+    assert!(e.contains("missing.ckpt"), "{e}");
+
+    // A checkpoint that parses but names an unknown solver is refused by
+    // resume with a typed error, not a panic.
+    let mut bogus = ck.clone();
+    bogus.solver = "bogus".into();
+    assert!(Fit::resume(&d, bogus).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_keep_retains_newest_n_siblings_each_resumable() {
+    // `--checkpoint-keep N` (Fit::checkpoint_keep): the newest N periodic
+    // checkpoints survive as `<path>.o<outer>` siblings, sorted, each a
+    // valid resume point; the base file still holds the newest.
+    let d = toy(77);
+    let dir = std::env::temp_dir().join("pcdn_api_keep_test");
+    std::fs::remove_dir_all(&dir).ok(); // stale siblings would skew counts
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.ckpt");
+
+    let full = Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::MaxOuter(9))
+        .max_outer(9)
+        .checkpoint_every(1, path.clone())
+        .checkpoint_keep(3)
+        .run()
+        .unwrap();
+
+    let sibs = retained_siblings(&path);
+    assert_eq!(sibs.len(), 3, "retention should prune down to keep=3");
+    let outers: Vec<usize> = sibs.iter().map(|(o, _)| *o).collect();
+    let mut sorted = outers.clone();
+    sorted.sort_unstable();
+    assert_eq!(outers, sorted, "siblings sorted by outer ascending");
+    let newest = *outers.last().unwrap();
+    assert_eq!(
+        Checkpoint::load(&path).unwrap().outer,
+        newest,
+        "base file holds the newest resume point"
+    );
+
+    // Every retained sibling loads and the oldest resumes bitwise into
+    // the uninterrupted trajectory.
+    for (o, p) in &sibs {
+        assert_eq!(Checkpoint::load(p).unwrap().outer, *o);
+    }
+    let ck = Checkpoint::load(&sibs[0].1).unwrap();
+    let resumed = Fit::resume(&d, ck).unwrap().run().unwrap();
+    assert_eq!(full.result.w, resumed.result.w);
 
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -1,0 +1,516 @@
+//! Seeded chaos battery: drives the serving and training stacks through
+//! the deterministic fault-injection layer (`pcdn::fault`) and asserts
+//! the hardening actually holds — stalled peers get `408`, connection
+//! caps shed with `503`, mid-stream disconnects are retried by the
+//! bundled client, worker panics are contained and respawned, a
+//! poisoned objective surfaces as a typed divergence carrying the
+//! last-good checkpoint, and a failed artifact reload keeps the old
+//! model serving.
+//!
+//! Every assertion message embeds the armed [`FaultPlan`] (which prints
+//! its seed when derived from one), so any failure — including the
+//! randomized nightly sweep — replays locally by pinning the same plan.
+//!
+//! The fault plan slot is process-global, so every test here serializes
+//! behind one mutex; this battery is its own test binary, so it cannot
+//! cross-talk with the other integration suites.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use pcdn::api::{Fit, FitError, Model, Pcdn, Scorer};
+use pcdn::data::synthetic::{generate, SyntheticSpec};
+use pcdn::data::{CscMat, Dataset};
+use pcdn::fault::{self, FaultAction, FaultPlan, Site};
+use pcdn::parallel::pool::{PoolError, WorkerPool};
+use pcdn::serve::protocol::{self, SparseRow};
+use pcdn::serve::{ModelRegistry, ServeOptions, Server};
+use pcdn::solver::checkpoint::Checkpoint;
+use pcdn::solver::StopRule;
+use pcdn::testutil::tiny_model;
+
+/// One armed plan at a time: every test takes this first.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ---- helpers shared with tests/serve.rs (same shapes, same reasons) ----
+
+fn rows_of(width: usize, seed: u64, n: usize) -> Vec<SparseRow> {
+    (0..n)
+        .map(|i| {
+            let k = 1 + ((seed as usize + i) % 3);
+            let mut idx: Vec<u32> = (0..k)
+                .map(|t| (((i + seed as usize * 7) % width + t * 5) % width) as u32)
+                .collect();
+            idx.sort_unstable();
+            idx.dedup();
+            let vals: Vec<f64> = (0..idx.len())
+                .map(|t| 0.5 + (i + t) as f64 / 3.0 + seed as f64 / 7.0)
+                .collect();
+            SparseRow { idx, vals }
+        })
+        .collect()
+}
+
+fn rows_to_csc(rows: &[SparseRow], width: usize) -> CscMat {
+    let mut trip = Vec::new();
+    for (i, r) in rows.iter().enumerate() {
+        for (&j, &v) in r.idx.iter().zip(&r.vals) {
+            trip.push((i, j as usize, v));
+        }
+    }
+    CscMat::from_triplets(rows.len(), width, &trip)
+}
+
+fn expected(model: &Arc<Model>, rows: &[SparseRow]) -> Vec<f64> {
+    Scorer::for_model(model)
+        .build()
+        .unwrap()
+        .decision_values(&rows_to_csc(rows, model.w.len()))
+        .unwrap()
+}
+
+fn assert_bitwise(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    for (a, b) in got.iter().zip(want) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: decision values diverged");
+    }
+}
+
+fn serve_on_free_port(opts: ServeOptions, model: &Arc<Model>) -> (Server, String) {
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(model)));
+    let server = Server::bind(registry, opts).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+fn free_port_opts() -> ServeOptions {
+    ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        ..ServeOptions::default()
+    }
+}
+
+fn shutdown_via_http(addr: &str, server: &Server) {
+    let reply = protocol::http_request(addr, "POST", "/shutdown", "", Duration::from_secs(10))
+        .expect("shutdown request");
+    assert_eq!(reply.status, 200);
+    server.wait();
+}
+
+fn toy(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            samples: 90,
+            features: 36,
+            nnz_per_row: 6,
+            label_noise: 0.05,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+// ---- serving: timeouts and connection caps -----------------------------
+
+#[test]
+fn slow_loris_gets_408_while_healthy_clients_stay_bitwise_correct() {
+    let _s = serial();
+    let width = 16;
+    let model = Arc::new(tiny_model(width));
+    let want = expected(&model, &rows_of(width, 3, 4));
+    let opts = ServeOptions {
+        read_timeout_ms: 150,
+        ..free_port_opts()
+    };
+    let (server, addr) = serve_on_free_port(opts, &model);
+
+    // A peer that opens a request line and then stops: the daemon must
+    // answer 408 after the read timeout instead of pinning the thread.
+    let mut loris = TcpStream::connect(&addr).unwrap();
+    loris.write_all(b"POST /sco").unwrap();
+    loris.flush().unwrap();
+
+    // Healthy traffic is unaffected while the loris stalls.
+    let got = protocol::http_score(&addr, &rows_of(width, 3, 4)).unwrap();
+    assert_bitwise(&got.z, &want, "healthy client during slow loris");
+
+    loris
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut reply = String::new();
+    loris.read_to_string(&mut reply).unwrap();
+    assert!(
+        reply.starts_with("HTTP/1.1 408"),
+        "slow loris expected 408, got: {reply:?}"
+    );
+    assert!(reply.contains("request line stalled"), "body: {reply:?}");
+
+    shutdown_via_http(&addr, &server);
+}
+
+#[test]
+fn connection_cap_sheds_immediately_with_503() {
+    let _s = serial();
+    let width = 8;
+    let model = Arc::new(tiny_model(width));
+    let want = expected(&model, &rows_of(width, 1, 2));
+    let opts = ServeOptions {
+        max_conns: 2,
+        retry_after_secs: 3,
+        ..free_port_opts()
+    };
+    let (server, addr) = serve_on_free_port(opts, &model);
+
+    // Two half-open connections occupy the whole cap.
+    let holders: Vec<TcpStream> = (0..2).map(|_| TcpStream::connect(&addr).unwrap()).collect();
+    std::thread::sleep(Duration::from_millis(30)); // let the gauge settle
+
+    // The third connection is shed at accept time: 503 + Retry-After,
+    // before any request bytes are even sent.
+    let mut shed = TcpStream::connect(&addr).unwrap();
+    shed.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reply = String::new();
+    shed.read_to_string(&mut reply).unwrap();
+    assert!(
+        reply.starts_with("HTTP/1.1 503"),
+        "over-cap connect expected 503, got: {reply:?}"
+    );
+    assert!(reply.contains("Retry-After: 3"), "headers: {reply:?}");
+    assert!(reply.contains("overloaded"), "body: {reply:?}");
+
+    // Releasing the holders frees the slots; service recovers.
+    drop(holders);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let got = loop {
+        match protocol::http_score(&addr, &rows_of(width, 1, 2)) {
+            Ok(got) => break got,
+            Err(e) => assert!(
+                Instant::now() < deadline,
+                "service never recovered after holders dropped: {e}"
+            ),
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_bitwise(&got.z, &want, "post-recovery request");
+    shutdown_via_http(&addr, &server);
+}
+
+#[test]
+fn injected_server_read_stall_delays_but_does_not_corrupt() {
+    let _s = serial();
+    let width = 12;
+    let model = Arc::new(tiny_model(width));
+    let rows = rows_of(width, 5, 3);
+    let want = expected(&model, &rows);
+    let (server, addr) = serve_on_free_port(free_port_opts(), &model);
+
+    let plan = FaultPlan::new().at(Site::ServerRead, 0, FaultAction::Stall { millis: 120 });
+    let guard = fault::install(plan);
+    let t0 = Instant::now();
+    let got = protocol::http_score(&addr, &rows)
+        .unwrap_or_else(|e| panic!("{}: stalled request failed: {e}", guard.plan()));
+    let elapsed = t0.elapsed();
+    assert_bitwise(&got.z, &want, &format!("{}", guard.plan()));
+    assert!(
+        elapsed >= Duration::from_millis(120),
+        "{}: stall did not delay (took {elapsed:?})",
+        guard.plan()
+    );
+    assert!(guard.hits(Site::ServerRead) >= 1, "{}: fault never reached", guard.plan());
+    drop(guard);
+    shutdown_via_http(&addr, &server);
+}
+
+// ---- serving: the bundled client's retry path --------------------------
+
+#[test]
+fn mid_stream_disconnect_is_retried_over_a_fresh_connection() {
+    let _s = serial();
+    let width = 20;
+    let model = Arc::new(tiny_model(width));
+    let rows_a = rows_of(width, 7, 4);
+    let rows_b = rows_of(width, 8, 5);
+    let want_a = expected(&model, &rows_a);
+    let want_b = expected(&model, &rows_b);
+    let (server, addr) = serve_on_free_port(free_port_opts(), &model);
+
+    // First response is clean; the second is cut mid-headers, so the
+    // keep-alive client must detect the truncation, reconnect, and
+    // resend — transparently to the caller.
+    let plan = FaultPlan::new().at(Site::ServerWrite, 1, FaultAction::Disconnect);
+    let guard = fault::install(plan);
+
+    let mut client = protocol::HttpClient::new(&addr).timeout(Duration::from_secs(10));
+    let got = client
+        .score(&rows_a)
+        .unwrap_or_else(|e| panic!("{}: request 1 failed: {e}", guard.plan()));
+    assert_bitwise(&got.z, &want_a, &format!("{} request 1", guard.plan()));
+    let got = client
+        .score(&rows_b)
+        .unwrap_or_else(|e| panic!("{}: request 2 not retried: {e}", guard.plan()));
+    assert_bitwise(&got.z, &want_b, &format!("{} request 2", guard.plan()));
+
+    assert_eq!(
+        client.connects(),
+        2,
+        "{}: expected exactly one reconnect after the cut reply",
+        guard.plan()
+    );
+    assert!(guard.hits(Site::ServerWrite) >= 2, "{}: fault never reached", guard.plan());
+    drop(guard);
+    shutdown_via_http(&addr, &server);
+}
+
+#[test]
+fn connect_fault_is_retried_with_backoff() {
+    let _s = serial();
+    let width = 10;
+    let model = Arc::new(tiny_model(width));
+    let rows = rows_of(width, 9, 3);
+    let want = expected(&model, &rows);
+    let (server, addr) = serve_on_free_port(free_port_opts(), &model);
+
+    let plan = FaultPlan::new().at(Site::ClientConnect, 0, FaultAction::Fail);
+    let guard = fault::install(plan);
+    let mut client = protocol::HttpClient::new(&addr).timeout(Duration::from_secs(10));
+    let got = client
+        .score(&rows)
+        .unwrap_or_else(|e| panic!("{}: connect fault not retried: {e}", guard.plan()));
+    assert_bitwise(&got.z, &want, &format!("{}", guard.plan()));
+    // The faulted attempt died before the TCP connect, so exactly one
+    // real connection was ever made.
+    assert_eq!(client.connects(), 1, "{}", guard.plan());
+    assert!(guard.hits(Site::ClientConnect) >= 2, "{}: fault never reached", guard.plan());
+    drop(guard);
+    shutdown_via_http(&addr, &server);
+}
+
+// ---- worker pool: panic containment + respawn --------------------------
+
+#[test]
+fn injected_worker_panic_is_typed_and_the_pool_respawns() {
+    let _s = serial();
+    let pool = WorkerPool::new(2);
+    let plan = FaultPlan::new().at(Site::PoolWorker, 0, FaultAction::Panic);
+    let guard = fault::install(plan);
+
+    // The injected panic fires outside the containment layer, killing a
+    // worker thread: the submitter still gets a typed error (not a hang,
+    // not a propagated panic).
+    let err = pool
+        .try_parallel_for(8, |_, _| {})
+        .expect_err(&format!("{}: region should report the panic", guard.plan()));
+    let PoolError::RegionPanicked { workers } = err;
+    assert!(workers >= 1, "{}", guard.plan());
+
+    // The dead worker was respawned: the next region has full coverage.
+    let hits: Vec<std::sync::atomic::AtomicU64> = (0..32)
+        .map(|_| std::sync::atomic::AtomicU64::new(0))
+        .collect();
+    pool.try_parallel_for(32, |i, _| {
+        hits[i].fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    })
+    .unwrap_or_else(|e| panic!("{}: pool did not recover: {e}", guard.plan()));
+    assert!(
+        hits.iter().all(|c| c.load(std::sync::atomic::Ordering::SeqCst) == 1),
+        "{}: post-respawn region lost indices",
+        guard.plan()
+    );
+    drop(guard);
+}
+
+#[test]
+fn daemon_survives_a_scoring_panic_and_keeps_serving() {
+    let _s = serial();
+    let width = 14;
+    let model = Arc::new(tiny_model(width));
+    let rows = rows_of(width, 11, 4);
+    let want = expected(&model, &rows); // computed before arming: uses the pool
+    let (server, addr) = serve_on_free_port(free_port_opts(), &model);
+
+    // A worker panic inside the pooled scoring region must come back as
+    // a 500 on that request only — the dispatcher and the daemon live.
+    let plan = FaultPlan::new().at(Site::PoolWorker, 0, FaultAction::Panic);
+    let guard = fault::install(plan);
+    let body = protocol::rows_to_json(&rows).dump();
+    let reply = protocol::http_request(&addr, "POST", "/score", &body, Duration::from_secs(10))
+        .unwrap_or_else(|e| panic!("{}: daemon hung on scoring panic: {e}", guard.plan()));
+    assert_eq!(reply.status, 500, "{}: body {}", guard.plan(), reply.body);
+    assert!(
+        reply.body.contains("panicked"),
+        "{}: body {}",
+        guard.plan(),
+        reply.body
+    );
+    drop(guard);
+
+    // Disarmed, the same request scores bitwise-correct and /healthz is
+    // still alive: the panic was contained to one batch.
+    let got = protocol::http_score(&addr, &rows).unwrap();
+    assert_bitwise(&got.z, &want, "post-panic request");
+    let reply =
+        protocol::http_request(&addr, "GET", "/healthz", "", Duration::from_secs(10)).unwrap();
+    assert_eq!(reply.status, 200);
+    shutdown_via_http(&addr, &server);
+}
+
+// ---- registry: artifact faults keep the old model serving --------------
+
+#[test]
+fn artifact_read_fault_keeps_old_model_then_recovers() {
+    let _s = serial();
+    let width = 6;
+    let dir = std::env::temp_dir().join("pcdn_fault_artifact_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("served.model");
+
+    let model_a = tiny_model(width);
+    model_a.save(&path).unwrap();
+    let registry = ModelRegistry::from_path(&path).unwrap();
+    assert_eq!(registry.current_version(), 1);
+
+    // Replace the artifact on disk, then fail the first reload attempt.
+    let mut model_b = tiny_model(width);
+    for x in model_b.w.iter_mut() {
+        *x += 2.0;
+    }
+    model_b.save(&path).unwrap();
+
+    let plan = FaultPlan::new().at(Site::ArtifactRead, 0, FaultAction::Fail);
+    let guard = fault::install(plan);
+    let err = registry
+        .reload()
+        .expect_err(&format!("{}: reload should fail", guard.plan()));
+    assert!(
+        err.to_string().contains("injected fault"),
+        "{}: got {err}",
+        guard.plan()
+    );
+    // The failure left the old model installed, still serving.
+    assert_eq!(registry.current_version(), 1, "{}", guard.plan());
+    for (a, b) in registry.current().model.w.iter().zip(&model_a.w) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{}: old model corrupted", guard.plan());
+    }
+
+    // The next attempt (fault exhausted) installs the new artifact.
+    let v = registry
+        .reload()
+        .unwrap_or_else(|e| panic!("{}: recovery reload failed: {e}", guard.plan()));
+    assert_eq!(v, 2, "{}", guard.plan());
+    for (a, b) in registry.current().model.w.iter().zip(&model_b.w) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{}: new model torn", guard.plan());
+    }
+    drop(guard);
+    std::fs::remove_file(&path).ok();
+}
+
+// ---- training: divergence rollback -------------------------------------
+
+#[test]
+fn injected_divergence_yields_last_good_checkpoint_and_bitwise_resume() {
+    let _s = serial();
+    let d = toy(90);
+
+    // Reference: the same configuration with no fault.
+    let full = Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::MaxOuter(9))
+        .max_outer(9)
+        .run()
+        .unwrap();
+
+    // Poison the objective at the fifth outer boundary: the run must
+    // stop with a typed divergence carrying the last finite checkpoint.
+    let plan = FaultPlan::new().at(Site::SolverOuter, 4, FaultAction::NonFinite);
+    let guard = fault::install(plan);
+    let err = match Fit::on(&d)
+        .solver(Pcdn { p: 8 })
+        .stop(StopRule::MaxOuter(9))
+        .max_outer(9)
+        .run()
+    {
+        Err(e) => e,
+        Ok(_) => panic!("{}: poisoned run should diverge", guard.plan()),
+    };
+    let (outer, last_good) = match err {
+        FitError::Diverged { outer, last_good } => (outer, last_good),
+        other => panic!("{}: expected Diverged, got {other:?}", guard.plan()),
+    };
+    let ck: Checkpoint = *last_good
+        .unwrap_or_else(|| panic!("{}: no last-good checkpoint attached", guard.plan()));
+    assert!(
+        ck.outer < outer,
+        "{}: last-good outer {} not before divergence outer {outer}",
+        guard.plan(),
+        ck.outer
+    );
+    assert!(guard.hits(Site::SolverOuter) >= 5, "{}: fault never reached", guard.plan());
+    drop(guard);
+
+    // The checkpoint is genuinely last-GOOD: resuming it replays the
+    // remainder bitwise-identically to the run that never diverged.
+    let resumed = Fit::resume(&d, ck).unwrap().run().unwrap();
+    assert_eq!(
+        full.result.w, resumed.result.w,
+        "resume from last-good checkpoint diverged from the unfaulted reference"
+    );
+    assert_eq!(full.result.outer_iters, resumed.result.outer_iters);
+}
+
+// ---- randomized sweep ---------------------------------------------------
+
+/// Nightly knob: `PCDN_PROP_CASES` scales the number of derived plans,
+/// `PCDN_PROP_SEED` pins the base seed for replay. Each case prints its
+/// plan (with seed) before driving traffic, so a red nightly run is a
+/// copy-paste away from a local reproduction.
+#[test]
+fn randomized_fault_sweep_never_hangs_and_recovers_bitwise() {
+    let _s = serial();
+    let cases: u64 = std::env::var("PCDN_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let base: u64 = std::env::var("PCDN_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_FA17);
+
+    let width = 18;
+    let model = Arc::new(tiny_model(width));
+    let all_rows: Vec<Vec<SparseRow>> = (0..4u64).map(|r| rows_of(width, r, 2 + r as usize)).collect();
+    let all_want: Vec<Vec<f64>> = all_rows.iter().map(|r| expected(&model, r)).collect();
+    let (server, addr) = serve_on_free_port(free_port_opts(), &model);
+
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let plan = FaultPlan::from_seed(seed);
+        println!("chaos case {case}: {plan}");
+        let guard = fault::install(plan);
+
+        // Generous retry budget: a derived plan schedules at most three
+        // faults, each of which can cost the client at most one attempt.
+        let mut client = protocol::HttpClient::new(&addr)
+            .timeout(Duration::from_secs(5))
+            .retries(6);
+        for (rows, want) in all_rows.iter().zip(&all_want) {
+            let got = client
+                .score(rows)
+                .unwrap_or_else(|e| panic!("{}: request failed past retries: {e}", guard.plan()));
+            assert_bitwise(&got.z, want, &format!("{}", guard.plan()));
+        }
+        drop(guard);
+
+        // Disarmed epilogue: the same client (possibly holding a torn
+        // keep-alive stream from the faulted phase) still converges to a
+        // clean bitwise answer.
+        let got = client.score(&all_rows[0]).unwrap();
+        assert_bitwise(&got.z, &all_want[0], "disarmed epilogue");
+    }
+    shutdown_via_http(&addr, &server);
+}

@@ -384,6 +384,33 @@ fn graceful_shutdown_drains_in_flight_work() {
 }
 
 #[test]
+fn keep_alive_client_reuses_one_connection() {
+    let width = 16;
+    let model = Arc::new(tiny_model(width));
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&model)));
+    let server = Server::bind(registry, opts_on_free_port()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut client = protocol::HttpClient::new(&addr).timeout(Duration::from_secs(10));
+    for seed in 0..6u64 {
+        let rows = rows_of(width, seed, 5);
+        let want = expected(&model, &rows);
+        let got = client.score(&rows).unwrap();
+        assert_eq!(got.z.len(), want.len());
+        for (a, b) in got.z.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} diverged over keep-alive");
+        }
+    }
+    // The observable proof of reuse: six requests, one TCP connection.
+    assert_eq!(
+        client.connects(),
+        1,
+        "keep-alive client should reuse a single connection across requests"
+    );
+    shutdown_via_http(&addr, &server);
+}
+
+#[test]
 fn reload_over_http_hot_swaps_the_artifact() {
     let width = 12;
     let dir = std::env::temp_dir().join("pcdn_serve_reload_test");
