@@ -122,6 +122,10 @@ fn main() {
         bench_serve(n_threads);
         return;
     }
+    if std::env::var("PCDN_BENCH").as_deref() == Ok("ablation") {
+        bench_ablation(n_threads);
+        return;
+    }
     let d = realsim_like();
     let nnz = d.x.nnz();
     println!(
@@ -452,6 +456,147 @@ fn bench_path(n_threads: usize, pool: &WorkerPool) {
     match std::fs::write("BENCH_path.json", doc.pretty()) {
         Ok(()) => println!("wrote BENCH_path.json"),
         Err(e) => println!("could not write BENCH_path.json: {e}"),
+    }
+}
+
+/// Parallelism ablation (emits BENCH_ablation.json;
+/// `PCDN_BENCH=ablation` runs just this section): sweep the bundle size
+/// P across the spectral safe-parallelism bound `P̄ = n/ρ(X̃ᵀX̃) + 1`
+/// (Bradley et al.) on deliberately correlated data, running the
+/// line-search-free Shotgun baseline and PCDN at every P. The expected —
+/// and CI-asserted — picture is the paper's: Shotgun degrades (non-finite
+/// objective, divergence flag, or a non-monotone trace) at some P above
+/// the bound, while PCDN's joint P-dimensional Armijo search keeps every
+/// trace monotone and finite at the *same* P.
+fn bench_ablation(n_threads: usize) {
+    use pcdn::linalg::power;
+    use pcdn::solver::{pcdn::Pcdn, shotgun::Shotgun, Solver, StopRule, TrainResult};
+    println!();
+    // Mirrors the dense_corr fixture the solver unit tests assert
+    // divergence on (same spec + seed), so the bench premise is covered
+    // by tier-1 tests rather than hoped for.
+    let d = generate(
+        &SyntheticSpec {
+            samples: 100,
+            features: 60,
+            nnz_per_row: 55,
+            corr_groups: 3,
+            corr_strength: 0.95,
+            row_normalize: true,
+            ..Default::default()
+        },
+        23,
+    );
+    let n = d.features();
+    let rho = power::spectral_radius_xtx(&d.x, 300, 1e-9);
+    let bound = power::scdn_parallelism_bound(&d.x);
+    let p_star = power::adaptive_bundle_size(&d.x, None);
+    println!(
+        "ablation dataset: {} × {n}, nnz = {} ({n_threads} threads)",
+        d.samples(),
+        d.x.nnz()
+    );
+    println!("rho = {rho:.4}, safe bound P̄ = {bound:.2}, auto P* = {p_star}");
+
+    let mut ps: Vec<usize> = vec![
+        1,
+        (bound / 2.0).ceil() as usize,
+        bound.ceil() as usize,
+        (2.0 * bound).ceil() as usize,
+        32,
+        n,
+    ];
+    ps.retain(|&p| (1..=n).contains(&p));
+    ps.sort_unstable();
+    ps.dedup();
+
+    // Monotone within FP slack: each traced objective may exceed the
+    // previous by at most 1e-9 of its scale.
+    let monotone = |r: &TrainResult| -> bool {
+        r.trace.windows(2).all(|w| {
+            let scale = w[0].objective.abs().max(1.0);
+            w[1].objective <= w[0].objective + 1e-9 * scale
+        })
+    };
+    let fit_with = |solver: &dyn Solver, p: usize| -> TrainResult {
+        let opts = pcdn::api::Fit::spec()
+            .c(1.0)
+            .solver(pcdn::api::Pcdn { p })
+            .stop(StopRule::MaxOuter(60))
+            .max_outer(60)
+            .threads(n_threads)
+            .trace_every(1)
+            .options()
+            .expect("valid ablation options");
+        solver.train(&d, Objective::Logistic, &opts)
+    };
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut shotgun_degrades_above = false;
+    let mut pcdn_clean_everywhere = true;
+    println!(
+        "{:>5} {:>6} {:>14} {:>9} {:>9} {:>14} {:>9}",
+        "P", "above", "shotgun F", "finite", "monotone", "pcdn F", "monotone"
+    );
+    for &p in &ps {
+        let above = (p as f64) > bound;
+        let sg = fit_with(&Shotgun::new(), p);
+        let pc = fit_with(&Pcdn::new(), p);
+        let sg_finite = sg.final_objective.is_finite() && sg.diverged.is_none();
+        let sg_monotone = sg_finite && monotone(&sg);
+        let pc_clean = pc.final_objective.is_finite() && pc.diverged.is_none() && monotone(&pc);
+        if above && !sg_monotone {
+            shotgun_degrades_above = true;
+        }
+        pcdn_clean_everywhere &= pc_clean;
+        println!(
+            "{p:>5} {above:>6} {:>14.6} {sg_finite:>9} {sg_monotone:>9} {:>14.6} {pc_clean:>9}",
+            sg.final_objective, pc.final_objective
+        );
+        // A diverged run's objective is ±inf/NaN, which has no JSON
+        // literal — encode it as null.
+        let num_or_null = |x: f64| if x.is_finite() { Json::Num(x) } else { Json::Null };
+        rows.push(Json::obj(vec![
+            ("p", Json::Num(p as f64)),
+            ("above_bound", Json::Bool(above)),
+            ("shotgun_objective", num_or_null(sg.final_objective)),
+            ("shotgun_finite", Json::Bool(sg_finite)),
+            ("shotgun_monotone", Json::Bool(sg_monotone)),
+            (
+                "shotgun_diverged_at",
+                sg.diverged
+                    .map(|(o, _)| Json::Num(o as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("pcdn_objective", num_or_null(pc.final_objective)),
+            ("pcdn_clean", Json::Bool(pc_clean)),
+        ]));
+    }
+    println!(
+        "shotgun degrades above the bound: {shotgun_degrades_above}; \
+         pcdn monotone+finite at every P: {pcdn_clean_everywhere}"
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("ablation".into())),
+        ("threads", Json::Num(n_threads as f64)),
+        ("samples", Json::Num(d.samples() as f64)),
+        ("features", Json::Num(n as f64)),
+        ("rho", Json::Num(rho)),
+        ("bound", Json::Num(bound)),
+        ("auto_p", Json::Num(p_star as f64)),
+        ("sweep", Json::Arr(rows)),
+        (
+            "shotgun_degrades_above_bound",
+            Json::Bool(shotgun_degrades_above),
+        ),
+        (
+            "pcdn_clean_at_all_p",
+            Json::Bool(pcdn_clean_everywhere),
+        ),
+    ]);
+    match std::fs::write("BENCH_ablation.json", doc.pretty()) {
+        Ok(()) => println!("wrote BENCH_ablation.json"),
+        Err(e) => println!("could not write BENCH_ablation.json: {e}"),
     }
 }
 

@@ -44,7 +44,7 @@ use crate::loss::Objective;
 use crate::parallel::pool::WorkerPool;
 use crate::solver::checkpoint::{Checkpoint, CheckpointWriter, LastCheckpoint};
 use crate::solver::{
-    cdn, pcdn, scdn, tron, ArmijoParams, ProbeHandle, Solver, StopRule, TrainOptions,
+    cdn, pcdn, scdn, shotgun, tron, ArmijoParams, ProbeHandle, Solver, StopRule, TrainOptions,
 };
 
 /// PCDN (Alg. 3, the paper's contribution): bundles of `p` coordinates,
@@ -88,6 +88,23 @@ impl Default for Scdn {
     }
 }
 
+/// Shotgun (Bradley et al., arXiv 1105.5379): naive synchronous parallel
+/// CDN — all `p` stale Newton directions applied at a fixed unit step,
+/// with no line search of any kind. Converges only below the spectral
+/// bound `P* ≈ n/ρ(X̃ᵀX̃)`; the divergence baseline PCDN is measured
+/// against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shotgun {
+    /// Parallel updates `P` per round.
+    pub p: usize,
+}
+
+impl Default for Shotgun {
+    fn default() -> Self {
+        Shotgun { p: 64 }
+    }
+}
+
 /// TRON: the trust-region Newton baseline (variable splitting).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub struct Tron;
@@ -98,6 +115,7 @@ pub enum SolverSel {
     Pcdn { p: usize },
     Cdn { shrinking: bool },
     Scdn { p: usize, atomic: bool },
+    Shotgun { p: usize },
     Tron,
 }
 
@@ -109,6 +127,7 @@ impl SolverSel {
             SolverSel::Cdn { .. } => "cdn",
             SolverSel::Scdn { atomic: false, .. } => "scdn",
             SolverSel::Scdn { atomic: true, .. } => "scdn-atomic",
+            SolverSel::Shotgun { .. } => "shotgun",
             SolverSel::Tron => "tron",
         }
     }
@@ -130,6 +149,9 @@ impl SolverSel {
             "scdn-atomic" => SolverSel::Scdn {
                 p: ck.opts.bundle_size,
                 atomic: true,
+            },
+            "shotgun" => SolverSel::Shotgun {
+                p: ck.opts.bundle_size,
             },
             "tron" => SolverSel::Tron,
             other => {
@@ -159,6 +181,11 @@ impl From<Scdn> for SolverSel {
             p: s.p,
             atomic: s.atomic,
         }
+    }
+}
+impl From<Shotgun> for SolverSel {
+    fn from(s: Shotgun) -> Self {
+        SolverSel::Shotgun { p: s.p }
     }
 }
 impl From<Tron> for SolverSel {
@@ -235,6 +262,7 @@ pub struct Fit<'d> {
     data: Option<&'d Dataset>,
     objective: Objective,
     solver: SolverSel,
+    bundle_auto: bool,
     c: f64,
     l2_reg: f64,
     stop: StopRule,
@@ -275,6 +303,7 @@ impl<'d> Fit<'d> {
             data: None,
             objective: Objective::Logistic,
             solver: SolverSel::Pcdn { p: d.bundle_size },
+            bundle_auto: false,
             c: d.c,
             l2_reg: d.l2_reg,
             stop: d.stop,
@@ -328,9 +357,28 @@ impl<'d> Fit<'d> {
     }
 
     /// Choose the solver via its typed config ([`Pcdn`], [`Cdn`],
-    /// [`Scdn`], [`Tron`] — or a prebuilt [`SolverSel`]).
+    /// [`Scdn`], [`Shotgun`], [`Tron`] — or a prebuilt [`SolverSel`]).
     pub fn solver(mut self, sel: impl Into<SolverSel>) -> Self {
         self.solver = sel.into();
+        self
+    }
+
+    /// Derive the bundle size adaptively from the data instead of the
+    /// typed config's `p`: `P* = clamp(⌈n/ρ⌉, 1, n)` where ρ is the
+    /// spectral radius of the column-normalized (and mask-restricted)
+    /// Gram matrix, estimated by [`crate::linalg::power`]. Applies to the
+    /// bundled solvers ([`Pcdn`], [`Scdn`], [`Shotgun`]); a no-op for
+    /// [`Cdn`]/[`Tron`].
+    ///
+    /// The estimate is serial and data-only, so the chosen `P*` (and the
+    /// whole trajectory) is bitwise deterministic at any thread count.
+    /// The *resolved* `P*` — not the auto flag — is what lowers into
+    /// `TrainOptions::bundle_size` and therefore into checkpoint
+    /// `SavedOptions`, so resumed runs replay bitwise without
+    /// re-estimating. Needs a dataset: on a dataset-free [`Fit::spec`]
+    /// the terminal returns [`FitError::MissingData`].
+    pub fn bundle_auto(mut self) -> Self {
+        self.bundle_auto = true;
         self
     }
 
@@ -456,11 +504,16 @@ impl<'d> Fit<'d> {
     /// this returns will be accepted by every solver.
     pub fn options(&self) -> Result<TrainOptions, FitError> {
         self.validate()?;
-        let (bundle_size, shrinking) = match self.solver {
-            SolverSel::Pcdn { p } | SolverSel::Scdn { p, .. } => (p, false),
+        let (mut bundle_size, shrinking) = match self.solver {
+            SolverSel::Pcdn { p }
+            | SolverSel::Scdn { p, .. }
+            | SolverSel::Shotgun { p } => (p, false),
             SolverSel::Cdn { shrinking } => (TrainOptions::default().bundle_size, shrinking),
             SolverSel::Tron => (TrainOptions::default().bundle_size, false),
         };
+        if self.bundle_auto && self.is_bundled() {
+            bundle_size = self.resolve_auto_bundle()?;
+        }
         let mut probes: Vec<ProbeHandle> = Vec::new();
         if let Some(p) = &self.probe {
             probes.push(p.clone());
@@ -522,6 +575,9 @@ impl<'d> Fit<'d> {
             SolverSel::Scdn { atomic: true, .. } => {
                 scdn::Scdn::atomic().train(data, self.objective, &opts)
             }
+            SolverSel::Shotgun { .. } => {
+                shotgun::Shotgun::new().train(data, self.objective, &opts)
+            }
             SolverSel::Tron => tron::Tron::new().train(data, self.objective, &opts),
         };
         if let Some((outer, _fval)) = result.diverged {
@@ -530,8 +586,26 @@ impl<'d> Fit<'d> {
                 last_good: last.latest().map(Box::new),
             });
         }
-        let model = Model::from_training(&result, self.objective, &opts, data);
+        let mut model = Model::from_training(&result, self.objective, &opts, data);
+        // `from_training` only sees the lowered options (the resolved P);
+        // record *how* that P was chosen here, where the builder knows.
+        model.provenance.bundle_auto = self.bundle_auto && self.is_bundled();
         Ok(Fitted { model, result })
+    }
+
+    /// Whether the selected solver consumes `TrainOptions::bundle_size`.
+    fn is_bundled(&self) -> bool {
+        matches!(
+            self.solver,
+            SolverSel::Pcdn { .. } | SolverSel::Scdn { .. } | SolverSel::Shotgun { .. }
+        )
+    }
+
+    /// Resolve `bundle_auto` to a concrete `P*` (see [`Fit::bundle_auto`]).
+    fn resolve_auto_bundle(&self) -> Result<usize, FitError> {
+        let data = self.data.ok_or(FitError::MissingData("bundle_auto"))?;
+        let mask = self.feature_mask.as_deref().map(|m| m.as_slice());
+        Ok(crate::linalg::power::adaptive_bundle_size(&data.x, mask))
     }
 
     fn validate(&self) -> Result<(), FitError> {
@@ -550,14 +624,23 @@ impl<'d> Fit<'d> {
             )));
         }
         match self.solver {
-            SolverSel::Pcdn { p } | SolverSel::Scdn { p, .. } => {
-                if p == 0 {
+            SolverSel::Pcdn { p } | SolverSel::Scdn { p, .. } | SolverSel::Shotgun { p } => {
+                // `bundle_auto` replaces the typed `p` wholesale, so the
+                // configured value is not range-checked under auto.
+                if p == 0 && !self.bundle_auto {
                     return Err(FitError::InvalidParam(
                         "bundle size p must be ≥ 1".to_string(),
                     ));
                 }
             }
             SolverSel::Cdn { .. } | SolverSel::Tron => {}
+        }
+        if self.bundle_auto && self.resume.is_some() {
+            return Err(FitError::InvalidParam(
+                "resume supersedes bundle_auto — the checkpoint already carries the \
+                 resolved bundle size"
+                    .to_string(),
+            ));
         }
         if self.n_threads == 0 {
             return Err(FitError::InvalidParam(
@@ -624,6 +707,27 @@ impl<'d> Fit<'d> {
                     return Err(FitError::Resume(
                         "the run's feature_mask differs from the checkpoint's".to_string(),
                     ));
+                }
+            }
+            // A bundle size beyond the feature count is a usage error, not
+            // something to silently reinterpret (the solvers' internal
+            // clamp stays as belt and braces for hand-built TrainOptions).
+            // Checked after the shape errors so a bad mask/warm-start is
+            // reported as itself, and skipped under `bundle_auto`, which
+            // replaces the typed `p` wholesale.
+            if !self.bundle_auto {
+                match self.solver {
+                    SolverSel::Pcdn { p }
+                    | SolverSel::Scdn { p, .. }
+                    | SolverSel::Shotgun { p } => {
+                        if p > n {
+                            return Err(FitError::InvalidParam(format!(
+                                "bundle size p = {p} exceeds the dataset's {n} features — \
+                                 pick p ≤ n or use bundle_auto"
+                            )));
+                        }
+                    }
+                    SolverSel::Cdn { .. } | SolverSel::Tron => {}
                 }
             }
         }
@@ -733,9 +837,140 @@ mod tests {
             SolverSel::Cdn { shrinking: true },
             SolverSel::Scdn { p: 4, atomic: false },
             SolverSel::Scdn { p: 4, atomic: true },
+            SolverSel::Shotgun { p: 4 },
             SolverSel::Tron,
         ] {
             assert!(!sel.name().is_empty());
         }
+        assert_eq!(SolverSel::from(Shotgun { p: 6 }).name(), "shotgun");
+    }
+
+    #[test]
+    fn shotgun_lowers_like_other_bundled_solvers() {
+        let d = toy();
+        let o = Fit::on(&d).solver(Shotgun { p: 6 }).options().unwrap();
+        assert_eq!(o.bundle_size, 6);
+        assert!(!o.shrinking);
+        assert!(matches!(
+            Fit::on(&d).solver(Shotgun { p: 0 }).options(),
+            Err(FitError::InvalidParam(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_bundle_larger_than_feature_count() {
+        let d = toy(); // 24 features
+        for sel in [
+            SolverSel::Pcdn { p: 25 },
+            SolverSel::Scdn {
+                p: 10_000,
+                atomic: false,
+            },
+            SolverSel::Shotgun { p: 25 },
+        ] {
+            assert!(
+                matches!(
+                    Fit::on(&d).solver(sel).options(),
+                    Err(FitError::InvalidParam(_))
+                ),
+                "{} with P > n must be a typed usage error",
+                sel.name()
+            );
+        }
+        // Boundary and dataset-free cases stay accepted (shape checks on a
+        // spec defer to the solver boundary, as documented).
+        assert!(Fit::on(&d).solver(Pcdn { p: 24 }).options().is_ok());
+        assert!(Fit::spec().solver(Pcdn { p: 10_000 }).options().is_ok());
+    }
+
+    #[test]
+    fn bundle_auto_needs_a_dataset() {
+        assert!(matches!(
+            Fit::spec().bundle_auto().options(),
+            Err(FitError::MissingData("bundle_auto"))
+        ));
+    }
+
+    #[test]
+    fn bundle_auto_resolution_is_thread_count_invariant() {
+        let d = toy();
+        let p1 = Fit::on(&d)
+            .bundle_auto()
+            .threads(1)
+            .options()
+            .unwrap()
+            .bundle_size;
+        let p3 = Fit::on(&d)
+            .bundle_auto()
+            .threads(3)
+            .options()
+            .unwrap()
+            .bundle_size;
+        assert_eq!(p1, p3, "P* must not depend on thread count");
+        assert!(p1 >= 1 && p1 <= d.features(), "P* = {p1} out of range");
+        // Auto overrides the typed p (even a nonsensical one) wholesale.
+        let o = Fit::on(&d)
+            .solver(Pcdn { p: 10_000 })
+            .bundle_auto()
+            .options()
+            .unwrap();
+        assert_eq!(o.bundle_size, p1);
+        // Masking shrinks the active set the estimate runs on.
+        let mask: Vec<bool> = (0..d.features()).map(|j| j < 4).collect();
+        let pm = Fit::on(&d)
+            .bundle_auto()
+            .mask(mask)
+            .options()
+            .unwrap()
+            .bundle_size;
+        assert!(pm <= 4, "masked P* = {pm} exceeds the active set");
+    }
+
+    #[test]
+    fn bundle_auto_trajectory_is_bitwise_across_thread_counts() {
+        // Round-mode solvers pin their chunking to `n_threads`-independent
+        // stale snapshots, so the whole auto-sized trajectory — not just
+        // the chosen P* — replays bitwise at any thread count.
+        let d = toy();
+        let lower = |threads: usize| {
+            Fit::on(&d)
+                .solver(Scdn {
+                    p: 1,
+                    atomic: false,
+                })
+                .bundle_auto()
+                .threads(threads)
+                .stop(StopRule::MaxOuter(15))
+                .max_outer(15)
+                .options()
+                .unwrap()
+        };
+        let o1 = lower(1);
+        let o3 = lower(3);
+        assert_eq!(o1.bundle_size, o3.bundle_size);
+        let a = scdn::Scdn::new().train(&d, Objective::Logistic, &o1);
+        let b = scdn::Scdn::new().train(&d, Objective::Logistic, &o3);
+        assert_eq!(a.w, b.w, "auto-sized trajectory must be bitwise");
+        assert_eq!(a.ls_steps, b.ls_steps);
+    }
+
+    #[test]
+    fn bundle_auto_stamps_provenance() {
+        let d = toy();
+        let fitted = Fit::on(&d)
+            .bundle_auto()
+            .stop(StopRule::SubgradRel(1e-3))
+            .run()
+            .unwrap();
+        assert!(fitted.model.provenance.bundle_auto);
+        let p = fitted.model.provenance.bundle_size;
+        assert!(p >= 1 && p <= d.features());
+        let manual = Fit::on(&d)
+            .solver(Pcdn { p: 8 })
+            .stop(StopRule::SubgradRel(1e-3))
+            .run()
+            .unwrap();
+        assert!(!manual.model.provenance.bundle_auto);
+        assert_eq!(manual.model.provenance.bundle_size, 8);
     }
 }

@@ -6,11 +6,13 @@
 //!
 //! * [`Fit`] — a typed builder over dataset + objective + solver.
 //!   Per-solver configuration is typed ([`Pcdn`]`{ p }`, [`Cdn`]
-//!   `{ shrinking }`, [`Scdn`]`{ p, atomic }`, [`Tron`]), so invalid
-//!   combinations don't compile; all runtime validation (mask lengths,
+//!   `{ shrinking }`, [`Scdn`]`{ p, atomic }`, [`Shotgun`]`{ p }`,
+//!   [`Tron`]), so invalid combinations don't compile; all runtime
+//!   validation (mask lengths, bundle sizes vs. the feature count,
 //!   Armijo ranges, resume compatibility) happens in one place before
-//!   anything runs. Lowers to the solver-internal
-//!   [`TrainOptions`](crate::solver::TrainOptions).
+//!   anything runs. [`Fit::bundle_auto`] derives the bundle size from
+//!   the data's spectral radius instead of a hand-picked `p`. Lowers to
+//!   the solver-internal [`TrainOptions`](crate::solver::TrainOptions).
 //! * [`Model`] — the first-class artifact a fit produces: weights +
 //!   objective + provenance, versioned save/load (JSON and bit-exact
 //!   binary), serial and single-sample scoring.
@@ -61,5 +63,5 @@ pub use crate::serve::{
 };
 pub use crate::solver::checkpoint::{Checkpoint, CheckpointRecorder, CheckpointWriter};
 pub use crate::solver::{ArmijoParams, StopRule, TrainResult};
-pub use fit::{Cdn, Fit, FitError, Pcdn, Scdn, SolverSel, Tron};
+pub use fit::{Cdn, Fit, FitError, Pcdn, Scdn, Shotgun, SolverSel, Tron};
 pub use model::{Fitted, Model, ModelLoadError, Provenance, ScoreError, Scorer, ScorerBuilder};

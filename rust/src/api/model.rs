@@ -38,7 +38,9 @@ use crate::util::codec::{ByteReader, ByteWriter};
 use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"PCDNMDL1";
-const VERSION: u32 = 1;
+// v2 appends bundle_size / bundle_auto to the provenance block; v1
+// documents decode with the pre-adaptive defaults (0 / false).
+const VERSION: u32 = 2;
 
 /// Where a model came from: enough to reproduce (solver, seed, stop) and
 /// to audit (dataset stamp, convergence) the fit that produced it.
@@ -56,6 +58,13 @@ pub struct Provenance {
     pub outer_iters: usize,
     pub converged: bool,
     pub final_objective: f64,
+    /// The bundle size the run actually used (0 in pre-v2 artifacts and
+    /// for unbundled solvers recorded before this field existed).
+    pub bundle_size: usize,
+    /// Whether that bundle size was derived from the data's spectral
+    /// radius ([`Fit::bundle_auto`](crate::api::Fit::bundle_auto))
+    /// rather than hand-picked.
+    pub bundle_auto: bool,
 }
 
 /// A trained model artifact. See the module docs.
@@ -171,6 +180,10 @@ impl Model {
                 outer_iters: result.outer_iters,
                 converged: result.converged,
                 final_objective: result.final_objective,
+                bundle_size: opts.bundle_size,
+                // `TrainOptions` only carries the resolved size; the
+                // `Fit` builder re-stamps this when auto-sizing was on.
+                bundle_auto: false,
             },
         }
     }
@@ -266,6 +279,8 @@ impl Model {
                     ("outer_iters", Json::Num(p.outer_iters as f64)),
                     ("converged", Json::Bool(p.converged)),
                     ("final_objective", Json::Num(p.final_objective)),
+                    ("bundle_size", Json::Num(p.bundle_size as f64)),
+                    ("bundle_auto", Json::Bool(p.bundle_auto)),
                 ]),
             ),
         ])
@@ -330,6 +345,11 @@ impl Model {
                     .get("final_objective")
                     .and_then(Json::as_f64)
                     .unwrap_or(f64::NAN),
+                bundle_size: p.get("bundle_size").and_then(Json::as_usize).unwrap_or(0),
+                bundle_auto: p
+                    .get("bundle_auto")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
             },
         })
     }
@@ -357,6 +377,9 @@ impl Model {
         w.put_usize(p.outer_iters);
         w.put_bool(p.converged);
         w.put_f64(p.final_objective);
+        // v2 tail — readers gate on the header version.
+        w.put_usize(p.bundle_size);
+        w.put_bool(p.bundle_auto);
         w.into_bytes()
     }
 
@@ -382,9 +405,9 @@ impl Model {
                 "format version {version} (reader supports 1..={VERSION})"
             )));
         }
-        let (mut r, _version) =
+        let (mut r, version) =
             ByteReader::open(bytes, MAGIC, VERSION).map_err(classify_codec)?;
-        let model = decode_model(&mut r).map_err(classify_codec)?;
+        let model = decode_model(&mut r, version).map_err(classify_codec)?;
         r.finish().map_err(classify_codec)?;
         Ok(model)
     }
@@ -435,6 +458,7 @@ impl Model {
 
 fn decode_model(
     r: &mut ByteReader<'_>,
+    version: u32,
 ) -> Result<Model, crate::util::codec::CodecError> {
     let objective = match r.get_u8()? {
         0 => Objective::Logistic,
@@ -450,7 +474,7 @@ fn decode_model(
     let c = r.get_f64()?;
     let l2_reg = r.get_f64()?;
     let w = r.get_f64_vec()?;
-    let provenance = Provenance {
+    let mut provenance = Provenance {
         solver: r.get_str()?,
         seed: r.get_u64()?,
         stop: r.get_str()?,
@@ -461,7 +485,13 @@ fn decode_model(
         outer_iters: r.get_usize()?,
         converged: r.get_bool()?,
         final_objective: r.get_f64()?,
+        bundle_size: 0,
+        bundle_auto: false,
     };
+    if version >= 2 {
+        provenance.bundle_size = r.get_usize()?;
+        provenance.bundle_auto = r.get_bool()?;
+    }
     Ok(Model {
         w,
         objective,
@@ -973,6 +1003,90 @@ mod tests {
         assert!(text.trim_start().starts_with('{'));
         std::fs::remove_file(&bin).ok();
         std::fs::remove_file(&json).ok();
+    }
+
+    #[test]
+    fn v1_binary_loads_with_default_bundle_fields() {
+        // Hand-write a version-1 document (no bundle tail): it must still
+        // decode, with the pre-adaptive defaults filled in.
+        let d = toy();
+        let m = trained(&d);
+        let mut w = ByteWriter::new(MAGIC, 1);
+        w.put_u8(0); // logistic
+        w.put_f64(m.c);
+        w.put_f64(m.l2_reg);
+        w.put_f64_slice(&m.w);
+        let p = &m.provenance;
+        w.put_str(&p.solver);
+        w.put_u64(p.seed);
+        w.put_str(&p.stop);
+        w.put_str(&p.dataset);
+        w.put_u64(p.fingerprint);
+        w.put_usize(p.samples);
+        w.put_usize(p.features);
+        w.put_usize(p.outer_iters);
+        w.put_bool(p.converged);
+        w.put_f64(p.final_objective);
+        let old = Model::from_bytes(&w.into_bytes()).unwrap();
+        assert_eq!(old.provenance.bundle_size, 0);
+        assert!(!old.provenance.bundle_auto);
+        assert_eq!(old.w, m.w);
+        assert_eq!(old.provenance.solver, m.provenance.solver);
+        // A v1 document with the v2 tail appended is trailing garbage.
+        let mut w2 = ByteWriter::new(MAGIC, 1);
+        w2.put_u8(0);
+        w2.put_f64(m.c);
+        w2.put_f64(m.l2_reg);
+        w2.put_f64_slice(&m.w);
+        w2.put_str(&p.solver);
+        w2.put_u64(p.seed);
+        w2.put_str(&p.stop);
+        w2.put_str(&p.dataset);
+        w2.put_u64(p.fingerprint);
+        w2.put_usize(p.samples);
+        w2.put_usize(p.features);
+        w2.put_usize(p.outer_iters);
+        w2.put_bool(p.converged);
+        w2.put_f64(p.final_objective);
+        w2.put_usize(p.bundle_size);
+        w2.put_bool(p.bundle_auto);
+        assert!(matches!(
+            Model::from_bytes(&w2.into_bytes()),
+            Err(ModelLoadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn v1_json_loads_with_default_bundle_fields() {
+        // A hand-built version-1 document (no bundle fields) must still
+        // decode, with the pre-adaptive defaults filled in.
+        let doc = Json::obj(vec![
+            ("format", Json::Str("pcdn-model".into())),
+            ("version", Json::Num(1.0)),
+            ("objective", Json::Str("logistic".into())),
+            ("c", Json::Num(0.5)),
+            ("l2_reg", Json::Num(0.0)),
+            ("w", Json::Arr(vec![Json::Num(1.5), Json::Num(-2.0)])),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("solver", Json::Str("pcdn".into())),
+                    ("seed", Json::Str("7".into())),
+                    ("stop", Json::Str("max_outer(3)".into())),
+                    ("dataset", Json::Str("toy".into())),
+                    ("fingerprint", Json::Str("0x0000000000000042".into())),
+                    ("samples", Json::Num(4.0)),
+                    ("features", Json::Num(2.0)),
+                    ("outer_iters", Json::Num(3.0)),
+                    ("converged", Json::Bool(true)),
+                    ("final_objective", Json::Num(0.25)),
+                ]),
+            ),
+        ]);
+        let old = Model::from_json(&doc).unwrap();
+        assert_eq!(old.provenance.bundle_size, 0);
+        assert!(!old.provenance.bundle_auto);
+        assert_eq!(old.w, vec![1.5, -2.0]);
     }
 
     #[test]

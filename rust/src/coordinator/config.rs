@@ -15,6 +15,9 @@ pub enum SolverKind {
     Cdn,
     Scdn,
     ScdnAtomic,
+    /// Naive synchronous parallel CDN (fixed unit step, no line search) —
+    /// the divergence baseline for the adaptive-bundle ablation.
+    Shotgun,
     Tron,
     /// PCDN over the PJRT dense path (three-layer stack).
     PcdnPjrt,
@@ -27,9 +30,12 @@ impl SolverKind {
             "cdn" => SolverKind::Cdn,
             "scdn" => SolverKind::Scdn,
             "scdn-atomic" => SolverKind::ScdnAtomic,
+            "shotgun" => SolverKind::Shotgun,
             "tron" => SolverKind::Tron,
             "pcdn-pjrt" => SolverKind::PcdnPjrt,
-            _ => bail!("unknown solver '{s}' (pcdn|cdn|scdn|scdn-atomic|tron|pcdn-pjrt)"),
+            _ => {
+                bail!("unknown solver '{s}' (pcdn|cdn|scdn|scdn-atomic|shotgun|tron|pcdn-pjrt)")
+            }
         })
     }
 }
@@ -119,6 +125,7 @@ impl RunConfig {
             SolverKind::Cdn => crate::api::SolverSel::Cdn { shrinking },
             SolverKind::Scdn => crate::api::SolverSel::Scdn { p, atomic: false },
             SolverKind::ScdnAtomic => crate::api::SolverSel::Scdn { p, atomic: true },
+            SolverKind::Shotgun => crate::api::SolverSel::Shotgun { p },
             SolverKind::Tron => crate::api::SolverSel::Tron,
         };
         let mut fit = crate::api::Fit::spec()
@@ -217,6 +224,16 @@ mod tests {
         assert_eq!(cfg.train.n_threads, 4);
         assert!(cfg.train.shrinking);
         assert_eq!(cfg.train.armijo.beta, 0.25);
+    }
+
+    #[test]
+    fn parse_shotgun() {
+        let cfg = RunConfig::from_json(
+            r#"{"dataset": "a9a", "solver": "shotgun", "bundle_size": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.solver, SolverKind::Shotgun);
+        assert_eq!(cfg.train.bundle_size, 3);
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod theory;
 
 use crate::loss::Objective;
 use crate::solver::{
-    cdn::Cdn, pcdn::Pcdn, scdn::Scdn, tron::Tron, Solver, TrainResult,
+    cdn::Cdn, pcdn::Pcdn, scdn::Scdn, shotgun::Shotgun, tron::Tron, Solver, TrainResult,
 };
 use anyhow::Result;
 use config::{RunConfig, SolverKind};
@@ -36,6 +36,7 @@ pub fn run_on(data: &crate::data::Dataset, cfg: &RunConfig) -> Result<TrainResul
         SolverKind::Cdn => Cdn::new().train(data, cfg.objective, &cfg.train),
         SolverKind::Scdn => Scdn::new().train(data, cfg.objective, &cfg.train),
         SolverKind::ScdnAtomic => Scdn::atomic().train(data, cfg.objective, &cfg.train),
+        SolverKind::Shotgun => Shotgun::new().train(data, cfg.objective, &cfg.train),
         SolverKind::Tron => Tron::new().train(data, cfg.objective, &cfg.train),
         SolverKind::PcdnPjrt => {
             let rt = crate::runtime::PjrtRuntime::cpu(&cfg.artifacts)?;
@@ -112,9 +113,14 @@ mod tests {
 
     #[test]
     fn run_all_native_solvers_one_dataset() {
-        for solver in ["pcdn", "cdn", "scdn", "tron"] {
+        // Shotgun rides along at p = 1, where its fixed-step update is the
+        // plain sequential CDN iteration — guaranteed finite; larger p is
+        // only safe below the data's spectral bound, which this smoke test
+        // doesn't compute.
+        for solver in ["pcdn", "cdn", "scdn", "shotgun", "tron"] {
+            let p = if solver == "shotgun" { 1 } else { 8 };
             let cfg = RunConfig::from_json(&format!(
-                r#"{{"solver": "{solver}", "dataset": "a9a", "bundle_size": 8,
+                r#"{{"solver": "{solver}", "dataset": "a9a", "bundle_size": {p},
                      "eps": 1e-2, "max_outer": 120}}"#
             ))
             .unwrap();

@@ -43,14 +43,139 @@ pub fn spectral_radius_xtx(x: &CscMat, max_iter: usize, tol: f64) -> f64 {
     lambda
 }
 
-/// The SCDN safe-parallelism bound `P̄ ≤ n/ρ + 1` (paper §2.2).
+/// The SCDN safe-parallelism bound `P̄ ≤ n/ρ + 1` (paper §2.2), clamped
+/// into `[1, n]`.
+///
+/// The clamp matters on both ends: near-orthogonal data can have ρ < 1
+/// (the raw formula then "allows" more parallel updates than there are
+/// coordinates — meaningless, since P̄ ≤ n by construction), and an
+/// all-zero matrix has ρ = 0 (every P is trivially safe; report n).
 pub fn scdn_parallelism_bound(x: &CscMat) -> f64 {
+    let n = x.cols as f64;
     let rho = spectral_radius_xtx(x, 300, 1e-9);
-    if rho <= 0.0 {
-        x.cols as f64
-    } else {
-        x.cols as f64 / rho + 1.0
+    let raw = if rho <= 0.0 { n } else { n / rho + 1.0 };
+    raw.clamp(1.0, n.max(1.0))
+}
+
+/// Spectral radius of the *column-normalized* (and optionally masked)
+/// Gram matrix `X̃ᵀX̃`, where `X̃` keeps only columns `j` with
+/// `mask[j] && ‖x_j‖ > 0` and rescales each to unit norm.
+///
+/// This is the quantity Bradley et al. (arXiv 1105.5379) bound Shotgun's
+/// safe parallelism with: after normalization the Gram diagonal is 1, so
+/// ρ ∈ [1, n_active] measures pure cross-column correlation rather than
+/// column scale. No submatrix is materialized — the iteration applies
+/// per-column scales `1/‖x_j‖` on the fly and skips inactive columns —
+/// and it is serial and data-only, so the estimate is bitwise
+/// deterministic at any thread count.
+pub fn spectral_radius_xtx_masked(
+    x: &CscMat,
+    mask: Option<&[bool]>,
+    max_iter: usize,
+    tol: f64,
+) -> f64 {
+    let n = x.cols;
+    if n == 0 || x.nnz() == 0 {
+        return 0.0;
     }
+    let active = |j: usize| mask.is_none_or(|m| m[j]);
+    // Per-column normalization scales; 0.0 doubles as the inactive marker.
+    let scales: Vec<f64> = (0..n)
+        .map(|j| {
+            if !active(j) {
+                return 0.0;
+            }
+            let sq = x.col_sq_norm(j);
+            if sq > 0.0 {
+                1.0 / sq.sqrt()
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    if scales.iter().all(|&s| s == 0.0) {
+        return 0.0;
+    }
+    let mut rng = Pcg64::new(0x5eed);
+    let mut v: Vec<f64> = (0..n)
+        .map(|j| if scales[j] > 0.0 { rng.normal() } else { 0.0 })
+        .collect();
+    scale_in_place_unit(&mut v);
+    let mut u = vec![0.0f64; x.rows];
+    let mut lambda = 0.0f64;
+    for _ in 0..max_iter {
+        // u = X̃ v  (scatter column-by-column; CSC has no masked matvec).
+        u.fill(0.0);
+        for (j, &s) in scales.iter().enumerate() {
+            if s == 0.0 {
+                continue;
+            }
+            let (ri, vals) = x.col(j);
+            let vj = v[j] * s;
+            for (&r, &val) in ri.iter().zip(vals) {
+                u[r as usize] += val * vj;
+            }
+        }
+        // w = X̃ᵀ u  (gather), then normalize as in the unmasked iteration.
+        let mut w: Vec<f64> = (0..n)
+            .map(|j| {
+                let s = scales[j];
+                if s == 0.0 {
+                    return 0.0;
+                }
+                let (ri, vals) = x.col(j);
+                let dot: f64 = ri
+                    .iter()
+                    .zip(vals)
+                    .map(|(&r, &val)| val * u[r as usize])
+                    .sum();
+                dot * s
+            })
+            .collect();
+        let new_lambda = norm2(&w);
+        if new_lambda == 0.0 {
+            return 0.0;
+        }
+        for wi in &mut w {
+            *wi /= new_lambda;
+        }
+        let delta = (new_lambda - lambda).abs() / new_lambda.max(1e-300);
+        v = w;
+        lambda = new_lambda;
+        if delta < tol {
+            break;
+        }
+    }
+    lambda
+}
+
+/// Derive the adaptive PCDN bundle size `P* = clamp(⌈n_active/ρ⌉, 1,
+/// n_active)` from the column-normalized (masked) spectral radius.
+///
+/// `n_active` counts mask-admitted columns with at least one nonzero.
+/// When ρ = 0 (no usable data) every P is equivalent; 1 is returned so
+/// the choice is still a valid bundle size. Power iteration is a *lower*
+/// bound on ρ when truncated, so the derived P* errs on the side of
+/// more parallelism — PCDN's line search keeps that safe; Shotgun's
+/// fixed step does not, which is exactly the ablation contrast.
+pub fn adaptive_bundle_size(x: &CscMat, mask: Option<&[bool]>) -> usize {
+    let n_active = (0..x.cols)
+        .filter(|&j| {
+            mask.is_none_or(|m| m[j]) && x.col_ptr[j + 1] > x.col_ptr[j]
+        })
+        .count();
+    if n_active == 0 {
+        return 1;
+    }
+    let rho = spectral_radius_xtx_masked(x, mask, 300, 1e-9);
+    if rho <= 0.0 {
+        return 1;
+    }
+    // 1e-6 slack before the ceiling so a ρ estimate a few ulps shy of an
+    // exact integer ratio (e.g. perfectly correlated columns, ρ → n) does
+    // not bump P* up a whole step.
+    let p = (n_active as f64 / rho - 1e-6).ceil() as usize;
+    p.clamp(1, n_active)
 }
 
 #[cfg(test)]
@@ -87,6 +212,95 @@ mod tests {
         let x = CscMat::from_triplets(2, 4, &[(0, 0, 1.0), (1, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0)]);
         let b = scdn_parallelism_bound(&x);
         assert!(b >= 1.0 && b <= 5.0, "bound {b}");
+    }
+
+    #[test]
+    fn bound_clamped_for_near_orthogonal_columns() {
+        // Scaled identity: ρ(XᵀX) = 0.25 < 1, so the raw `n/ρ + 1` formula
+        // would report P ≈ 25 on a 6-column matrix. The bound must clamp
+        // to n (regression for the unclamped formula).
+        let x = CscMat::from_triplets(
+            6,
+            6,
+            &(0..6).map(|j| (j, j, 0.5)).collect::<Vec<_>>(),
+        );
+        let b = scdn_parallelism_bound(&x);
+        assert!((b - 6.0).abs() < 1e-9, "bound {b} not clamped to n = 6");
+    }
+
+    #[test]
+    fn bound_is_n_for_all_zero_matrix() {
+        let x = CscMat::zeros(5, 4);
+        assert_eq!(scdn_parallelism_bound(&x), 4.0);
+    }
+
+    #[test]
+    fn non_convergence_at_max_iter_still_finite_lower_bound() {
+        // One iteration nowhere near convergence: the estimate must still
+        // be a finite, positive Rayleigh-style lower bound on ρ.
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        let x = CscMat::random(40, 25, 0.3, &mut rng);
+        let rough = spectral_radius_xtx(&x, 1, 0.0);
+        let tight = spectral_radius_xtx(&x, 500, 1e-12);
+        assert!(rough.is_finite() && rough > 0.0, "rough estimate {rough}");
+        assert!(
+            rough <= tight + 1e-8,
+            "truncated power iteration {rough} above the converged value {tight}"
+        );
+    }
+
+    #[test]
+    fn zero_tolerance_terminates() {
+        // tol = 0 never triggers the early break; the loop must still
+        // terminate at max_iter with a finite value.
+        let x = CscMat::from_triplets(3, 3, &[(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0)]);
+        let rho = spectral_radius_xtx(&x, 200, 0.0);
+        assert!(rho.is_finite());
+        assert_close(rho, 9.0, 1e-6);
+    }
+
+    #[test]
+    fn masked_spectral_radius_normalizes_and_masks() {
+        // Two duplicate columns (perfect correlation) plus one orthogonal:
+        // normalized ρ of the full set is 2 (the duplicate pair), and
+        // masking one duplicate out drops ρ to 1.
+        let x = CscMat::from_triplets(
+            2,
+            3,
+            &[(0, 0, 2.0), (0, 1, 5.0), (1, 2, 0.25)],
+        );
+        let full = spectral_radius_xtx_masked(&x, None, 500, 1e-12);
+        assert_close(full, 2.0, 1e-6);
+        let masked = spectral_radius_xtx_masked(&x, Some(&[true, false, true]), 500, 1e-12);
+        assert_close(masked, 1.0, 1e-6);
+    }
+
+    #[test]
+    fn adaptive_bundle_size_ranges() {
+        // Perfectly correlated trio: ρ = 3 ⇒ P* = ⌈3/3⌉ = 1.
+        let corr = CscMat::from_triplets(
+            1,
+            3,
+            &[(0, 0, 1.0), (0, 1, 2.0), (0, 2, 3.0)],
+        );
+        assert_eq!(adaptive_bundle_size(&corr, None), 1);
+        // Orthogonal columns: ρ = 1 ⇒ P* = n.
+        let orth = CscMat::from_triplets(
+            4,
+            4,
+            &(0..4).map(|j| (j, j, 0.5)).collect::<Vec<_>>(),
+        );
+        assert_eq!(adaptive_bundle_size(&orth, None), 4);
+        // Mask shrinks n_active (and the correlated pair disappears).
+        let x = CscMat::from_triplets(
+            2,
+            3,
+            &[(0, 0, 2.0), (0, 1, 5.0), (1, 2, 0.25)],
+        );
+        assert_eq!(adaptive_bundle_size(&x, Some(&[true, false, true])), 2);
+        // Degenerate inputs stay valid bundle sizes.
+        assert_eq!(adaptive_bundle_size(&CscMat::zeros(5, 4), None), 1);
+        assert_eq!(adaptive_bundle_size(&x, Some(&[false, false, false])), 1);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! pcdn train    --dataset real-sim --solver pcdn --p 256 --eps 1e-3
+//! pcdn train    --dataset real-sim --solver pcdn --bundle auto
 //! pcdn train    --config run.json --save-model model.bin --checkpoint-every 25
 //! pcdn train    --resume run.ckpt
 //! pcdn predict  --model model.bin --dataset real-sim --threads 8
@@ -122,11 +123,21 @@ fn cmd_train(args: Vec<String>) -> i32 {
     let cli = Cli::new("pcdn train", "train an l1-regularized linear model")
         .opt("config", None, "JSON config file (overrides other flags)")
         .opt("dataset", Some("real-sim"), "analog name or libsvm:<path>")
-        .opt("solver", Some("pcdn"), "pcdn|cdn|scdn|scdn-atomic|tron|pcdn-pjrt")
+        .opt(
+            "solver",
+            Some("pcdn"),
+            "pcdn|cdn|scdn|scdn-atomic|shotgun|tron|pcdn-pjrt",
+        )
         .opt("objective", Some("logistic"), "logistic|svm|lasso")
         .opt("c", None, "regularization parameter (default: dataset c*)")
         .opt("l2", Some("0"), "elastic-net l2 weight (0 = pure l1)")
         .opt("p", Some("64"), "bundle size P / SCDN parallelism")
+        .opt(
+            "bundle",
+            None,
+            "bundle size P, or 'auto' to derive P* = ceil(n/rho) from the data's \
+             spectral radius (supersedes --p; bundled solvers only)",
+        )
         .opt("eps", Some("1e-3"), "relative subgradient stopping tolerance")
         .opt("max-outer", Some("500"), "outer iteration cap")
         .opt("threads", Some("1"), "worker threads for parallel regions")
@@ -164,6 +175,29 @@ fn cmd_train(args: Vec<String>) -> i32 {
     let on_div = a.get("on-divergence").unwrap_or("halt").to_string();
     if !matches!(on_div.as_str(), "halt" | "rollback-halve") {
         eprintln!("--on-divergence: expected halt|rollback-halve (got '{on_div}')");
+        return 2;
+    }
+
+    // --bundle: 'auto' defers to the spectral-radius bound (resolved once
+    // the data is loaded, below); a number supersedes --p.
+    let mut bundle_auto = false;
+    let mut bundle_override: Option<usize> = None;
+    match a.get("bundle") {
+        None => {}
+        Some("auto") => bundle_auto = true,
+        Some(v) => match v.parse::<usize>() {
+            Ok(x) if x >= 1 => bundle_override = Some(x),
+            _ => {
+                eprintln!("--bundle: expected 'auto' or a positive integer (got '{v}')");
+                return 2;
+            }
+        },
+    }
+    if bundle_auto && a.get("resume").is_some() {
+        eprintln!(
+            "--bundle auto: --resume restores the checkpoint's resolved bundle size \
+             (the bitwise-continuation contract); drop one of the two flags"
+        );
         return 2;
     }
 
@@ -210,7 +244,7 @@ fn cmd_train(args: Vec<String>) -> i32 {
                 return 2;
             }
         };
-        let p = flag_or_exit!(a.usize("p"));
+        let p = bundle_override.unwrap_or(flag_or_exit!(a.usize("p")));
         let sel = match solver {
             SolverKind::Pcdn | SolverKind::PcdnPjrt => SolverSel::Pcdn { p },
             SolverKind::Cdn => SolverSel::Cdn {
@@ -218,6 +252,7 @@ fn cmd_train(args: Vec<String>) -> i32 {
             },
             SolverKind::Scdn => SolverSel::Scdn { p, atomic: false },
             SolverKind::ScdnAtomic => SolverSel::Scdn { p, atomic: true },
+            SolverKind::Shotgun => SolverSel::Shotgun { p },
             SolverKind::Tron => SolverSel::Tron,
         };
         let train = Fit::spec()
@@ -245,6 +280,10 @@ fn cmd_train(args: Vec<String>) -> i32 {
             artifacts: a.get("artifacts").unwrap_or("artifacts").to_string(),
         }
     };
+    if bundle_auto && matches!(cfg.solver, SolverKind::Cdn | SolverKind::Tron) {
+        eprintln!("--bundle auto: needs a bundled solver (pcdn/scdn/shotgun)");
+        return 2;
+    }
 
     // --resume: route through `api::Fit::resume`, the single place that
     // knows how to restore a checkpoint's solver + trajectory-determining
@@ -370,6 +409,21 @@ fn cmd_train(args: Vec<String>) -> i32 {
         }
     };
 
+    // --bundle auto needs the data, so it resolves here rather than in the
+    // dataset-free option lowering above. The estimate is serial and
+    // data-only, so a re-run resolves the same P* bitwise; the resolved
+    // size flows into the checkpoint's SavedOptions, so resumed runs
+    // replay it without re-estimating.
+    if bundle_auto {
+        let rho = power::spectral_radius_xtx(&data.x, 300, 1e-9);
+        let p_star = power::adaptive_bundle_size(&data.x, None);
+        println!(
+            "--bundle auto: rho(XtX) = {rho:.4} over {} features -> P* = {p_star}",
+            data.features()
+        );
+        cfg.train.bundle_size = p_star;
+    }
+
     // Success epilogue shared by the first run and divergence retries.
     let finish = |r: &pcdn::solver::TrainResult, cfg: &RunConfig| -> i32 {
         println!("{}", summarize(r));
@@ -385,7 +439,8 @@ fn cmd_train(args: Vec<String>) -> i32 {
             );
         }
         if let Some(model_path) = a.get("save-model") {
-            let model = Model::from_training(r, cfg.objective, &cfg.train, &data);
+            let mut model = Model::from_training(r, cfg.objective, &cfg.train, &data);
+            model.provenance.bundle_auto = bundle_auto;
             match model.save(Path::new(model_path)) {
                 Ok(()) => println!(
                     "model saved to {model_path} ({} features, {} nnz)",
@@ -1039,10 +1094,17 @@ fn cmd_inspect(args: Vec<String>) -> i32 {
             println!("pos rate  : {:.4}", d.positive_rate());
             println!("fingerprint: {:#018x}", d.fingerprint());
             println!("rho(XtX)  : {rho:.4}");
-            println!(
-                "SCDN bound: P <= {:.2}  (n/rho + 1, paper §2.2)",
-                d.features() as f64 / rho.max(1e-12) + 1.0
-            );
+            // One formula, one owner: `scdn_parallelism_bound` clamps into
+            // [1, n]. The old inline copy divided by max(rho, 1e-12) and
+            // printed "P <= ~1e12·n" for all-zero data.
+            if rho > 0.0 {
+                println!(
+                    "SCDN bound: P <= {:.2}  (n/rho + 1 clamped to [1, n], paper §2.2)",
+                    power::scdn_parallelism_bound(&d.x)
+                );
+            } else {
+                println!("SCDN bound: n/a (rho = 0: no nonzero columns to correlate)");
+            }
             0
         }
         Err(e) => {

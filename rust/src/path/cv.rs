@@ -179,6 +179,8 @@ pub fn cv_path(data: &Dataset, obj: Objective, opts: &CvOptions) -> CvResult {
                     outer_iters: p.outer_iters,
                     converged: p.converged,
                     final_objective: p.objective,
+                    bundle_size: p.bundle_size,
+                    bundle_auto: opts.path.bundle_auto,
                 },
             }
         })

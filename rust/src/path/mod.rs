@@ -15,8 +15,8 @@
 //!   solver pays only for the *change* in λ;
 //! * **strong-rule screening** ([`screen::strong_rule_mask`]) — discards
 //!   feature `j` at `λ_{k+1}` when `|∇_j L(ŵ(λ_k))| < 2λ_{k+1} − λ_k`,
-//!   enforced through [`TrainOptions::feature_mask`] (honored by all four
-//!   solvers' outer loops).
+//!   enforced through [`TrainOptions::feature_mask`] (honored by every
+//!   native solver's outer loop).
 //!
 //! The strong rule is a heuristic, so every screened solve ends with a
 //! dense KKT post-check
@@ -82,10 +82,18 @@ pub struct PathOptions {
     /// fixes the arithmetic independent of the physical pool, so the path
     /// replays bitwise at any pool width. `1` forces pure serial solves.
     pub degree: usize,
+    /// Re-derive the bundle size from the *screened* data before every
+    /// solve via [`crate::linalg::power::adaptive_bundle_size`]: screening
+    /// changes the active column set, which changes the spectral radius ρ
+    /// of the normalized Gram matrix, which moves the safe-parallelism
+    /// bound `P* = ⌈n_active/ρ⌉`. Off by default; when on,
+    /// `train.bundle_size` is ignored.
+    pub bundle_auto: bool,
     /// Base solver options. `c`, `stop`, `warm_start`, `feature_mask` and
-    /// `n_threads` are overridden per solve; `bundle_size`, `armijo`,
-    /// `max_outer`, `max_secs`, `seed`, `pool` and `probe` pass through.
-    /// `l2_reg` must be 0 (the strong rule is derived for pure ℓ1).
+    /// `n_threads` are overridden per solve; `bundle_size` (unless
+    /// [`PathOptions::bundle_auto`] is on), `armijo`, `max_outer`,
+    /// `max_secs`, `seed`, `pool` and `probe` pass through. `l2_reg` must
+    /// be 0 (the strong rule is derived for pure ℓ1).
     pub train: TrainOptions,
 }
 
@@ -99,6 +107,7 @@ impl Default for PathOptions {
             kkt_eps: 1e-5,
             max_rescreen_rounds: 4,
             degree: 4,
+            bundle_auto: false,
             // Solves are warm-started PCDN; the base options come through
             // the public builder so the path layer shares the single
             // validation point with every other caller.
@@ -136,6 +145,11 @@ pub struct PathPoint {
     pub outer_iters: usize,
     /// Every solve reported convergence under its stop rule.
     pub converged: bool,
+    /// Bundle size the final solve at this point used (the base
+    /// `train.bundle_size`, or the ρ-derived `P*` under
+    /// [`PathOptions::bundle_auto`]; echoes the base size for
+    /// short-circuited λ ≥ λ_max points, which need no solve).
+    pub bundle_size: usize,
     /// `kkt_rel ≤ kkt_eps` and zero un-re-admitted screening violations.
     pub certified: bool,
     /// The final active mask (`None` = all features active).
@@ -301,6 +315,7 @@ fn fit_path_impl(
                 solves: 0,
                 outer_iters: 0,
                 converged: true,
+                bundle_size: popts.train.bundle_size,
                 certified: true,
                 final_mask: mask,
                 w: zeros.clone(),
@@ -325,6 +340,7 @@ fn fit_path_impl(
         let mut solves = 0usize;
         let mut outer_iters = 0usize;
         let mut converged = true;
+        let mut bundle_size = popts.train.bundle_size;
         // The loop value is the outstanding screening-violation count at
         // the final w — 0 on the clean-exit path, the last (un-re-admitted)
         // violator count when the re-solve budget runs out.
@@ -335,6 +351,15 @@ fn fit_path_impl(
             o.stop = stop;
             o.warm_start = Some(w.clone());
             o.feature_mask = mask.clone().map(Arc::new);
+            // Screening froze part of the column set, so the spectral
+            // radius — and with it the safe bundle size — moved; re-derive
+            // it from the masked data before every (re-)solve. Serial and
+            // data-only, so the path stays bitwise reproducible.
+            if popts.bundle_auto {
+                bundle_size =
+                    crate::linalg::power::adaptive_bundle_size(&data.x, mask.as_deref());
+                o.bundle_size = bundle_size;
+            }
             o.n_threads = popts.degree;
             if popts.degree <= 1 {
                 // Pure serial pinning: never let an explicit pool widen
@@ -386,6 +411,7 @@ fn fit_path_impl(
             solves,
             outer_iters,
             converged,
+            bundle_size,
             certified,
             final_mask: mask,
             w: w.clone(),
@@ -544,6 +570,64 @@ mod tests {
         for obj in [Objective::Logistic, Objective::L2Svm, Objective::Lasso] {
             let r = fit_path(&d, obj, &o);
             assert!(r.certified, "{obj:?} path uncertified:\n{}", r.table());
+        }
+    }
+
+    #[test]
+    fn bundle_auto_path_certifies_and_tracks_the_screen() {
+        // Wide screened problem so the active column set (and hence ρ and
+        // P*) actually changes along the grid.
+        let d = generate(
+            &SyntheticSpec {
+                samples: 60,
+                features: 120,
+                nnz_per_row: 5,
+                true_density: 0.05,
+                ..Default::default()
+            },
+            7,
+        );
+        let mut auto = quick_opts();
+        auto.n_lambdas = 10;
+        auto.lambda_ratio = 0.1;
+        auto.bundle_auto = true;
+        let r = fit_path(&d, Objective::Logistic, &auto);
+        assert!(r.certified, "auto-bundled path uncertified:\n{}", r.table());
+        for p in &r.points {
+            assert!(
+                (1..=d.features()).contains(&p.bundle_size),
+                "λ = {}: bundle_size {} outside [1, {}]",
+                p.lambda,
+                p.bundle_size,
+                d.features()
+            );
+        }
+        // Optima agree with a fixed-bundle path: adaptive sizing changes
+        // the schedule, never the certified solution.
+        let mut fixed = quick_opts();
+        fixed.n_lambdas = 10;
+        fixed.lambda_ratio = 0.1;
+        let rf = fit_path(&d, Objective::Logistic, &fixed);
+        assert!(rf.certified);
+        for (a, b) in r.points.iter().zip(&rf.points) {
+            let tol = 1e-5 * a.objective.abs().max(1.0);
+            assert!(
+                (a.objective - b.objective).abs() <= tol,
+                "λ = {}: auto {} vs fixed {}",
+                a.lambda,
+                a.objective,
+                b.objective
+            );
+            assert_eq!(b.bundle_size, 16, "fixed path must echo train.bundle_size");
+        }
+        // Replaying the auto path is bitwise deterministic (the ρ estimate
+        // is serial and data-only).
+        let r2 = fit_path(&d, Objective::Logistic, &auto);
+        for (a, b) in r.points.iter().zip(&r2.points) {
+            assert_eq!(a.bundle_size, b.bundle_size);
+            for (x, y) in a.w.iter().zip(&b.w) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
     }
 

@@ -10,6 +10,7 @@ pub mod linesearch;
 pub mod pcdn;
 pub mod probe;
 pub mod scdn;
+pub mod shotgun;
 pub mod tron;
 
 pub use checkpoint::{Checkpoint, CheckpointRecorder, CheckpointView, CheckpointWriter};

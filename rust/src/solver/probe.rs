@@ -1,8 +1,8 @@
 //! Solver observer API: a [`Probe`] attached to
 //! [`TrainOptions`](super::TrainOptions) receives the trajectory of a
-//! training run — one [`OuterInfo`] per outer iteration (all four solvers)
-//! and one [`StepInfo`] per line-searched inner step (PCDN bundles, CDN
-//! features, SCDN rounds) — without forking any solver code.
+//! training run — one [`OuterInfo`] per outer iteration (all five native
+//! solvers) and one [`StepInfo`] per inner step (PCDN bundles, CDN
+//! features, SCDN and Shotgun rounds) — without forking any solver code.
 //!
 //! The probe exists so the paper's theorems can be checked *from outside*
 //! the solver: the [`oracle`](crate::oracle) layer implements

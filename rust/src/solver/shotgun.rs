@@ -1,0 +1,399 @@
+//! Shotgun — naive synchronous parallel CDN (Bradley et al. 2011,
+//! arXiv 1105.5379), the *fifth* solver and the ablation baseline PCDN is
+//! measured against.
+//!
+//! Each round draws `P` features uniformly at random, computes every
+//! coordinate's 1-D Newton direction against the same stale snapshot of
+//! the shared state, and applies **all `P` directions at a fixed unit
+//! step scaling — no line search of any kind**. This differs from both
+//! in-tree relatives:
+//!
+//! * [`super::scdn::Scdn`] guards each stale direction with its own 1-D
+//!   Armijo search, so single updates are individually safe and only
+//!   their *sum* can overshoot;
+//! * [`super::pcdn::Pcdn`] runs one joint P-dimensional Armijo search per
+//!   bundle, which makes any `P ∈ [1, n]` safe (the paper's point).
+//!
+//! Shotgun has neither guard. At `P = 1` it is plain coordinate descent
+//! Newton with full steps and converges on well-conditioned problems
+//! (the conformance campaign pins it to the dense CDN oracle there). As
+//! `P` grows past the spectral bound `P* ≈ n/ρ(X̃ᵀX̃)` the summed stale
+//! steps systematically overshoot and the objective diverges — exactly
+//! the regime the `PCDN_BENCH=ablation` sweep demonstrates, and the
+//! reason ESO-style analyses (Richtárik–Takáč, arXiv 1212.0873) must
+//! shrink the step with the parallelism degree. We deliberately do *not*
+//! shrink it: the fixed unit scaling is what makes the divergence
+//! visible.
+//!
+//! Execution is the deterministic stale-round emulation shared with
+//! SCDN's round mode: directions dispatch as one pooled region per round
+//! (chunking pinned to `n_threads`, so runs replay bitwise at any thread
+//! count), and the commit lands as a single range-sharded `apply_step`.
+//! Divergence is detected at the round boundary; the monitor's
+//! `diverged` marker is set so [`crate::api::Fit::run`] surfaces it as a
+//! typed [`crate::api::FitError::Diverged`] with the last-good
+//! checkpoint.
+
+use crate::data::Dataset;
+use crate::loss::{LossState, Objective};
+use crate::parallel::pool::SendPtr;
+use crate::parallel::range::SampleRanges;
+use crate::parallel::sim::IterRecord;
+use crate::solver::checkpoint::{self, ExtraView};
+use crate::solver::direction::newton_direction;
+use crate::solver::linesearch::{DxScratch, PARALLEL_EPILOGUE_MIN_TOUCHED};
+use crate::solver::pcdn::finish;
+use crate::solver::{RunMonitor, Solver, TrainOptions, TrainResult};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// The Shotgun solver (fixed-step synchronous parallel CDN).
+#[derive(Default)]
+pub struct Shotgun;
+
+impl Shotgun {
+    pub fn new() -> Self {
+        Shotgun
+    }
+}
+
+impl Solver for Shotgun {
+    fn name(&self) -> &'static str {
+        "shotgun"
+    }
+
+    fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult {
+        train_shotgun(self.name(), data, obj, opts)
+    }
+}
+
+/// One "outer iteration" = `⌈n/P⌉` rounds, so work per outer matches one
+/// CDN sweep (n feature updates) and objective-vs-outer curves compare
+/// directly across solvers.
+fn train_shotgun(
+    name: &'static str,
+    data: &Dataset,
+    obj: Objective,
+    opts: &TrainOptions,
+) -> TrainResult {
+    let n = data.features();
+    opts.check_mask(n);
+    let p = opts.bundle_size.clamp(1, n);
+    let mut state = LossState::new(obj, data, opts.c);
+    let mut w = vec![0.0f64; n];
+    let mut rng = Pcg64::new(opts.seed);
+    let mut monitor = RunMonitor::new();
+    let mut records: Vec<IterRecord> = Vec::new();
+    let mut inner_iters = 0usize;
+    let mut outer = 0usize;
+    let rounds_per_outer = n.div_ceil(p);
+
+    let resumed = checkpoint::apply_resume(opts, name, data, obj, &mut state, &mut w);
+    if let Some(rs) = resumed {
+        outer = rs.outer;
+        inner_iters = rs.inner_iters;
+        monitor.init_subgrad = rs.init_subgrad;
+        rng = rs.rng.expect("shotgun checkpoints carry an RNG state");
+    } else if monitor.observe(0, &state, &w, opts, 0) {
+        return finish(name, w, &state, monitor, 0, 0, 0, records);
+    }
+
+    // Persistent worker team: each round's P stale direction passes
+    // dispatch as ONE region on the shared pool.
+    let pool = opts.exec_pool();
+    let degree = match &pool {
+        Some(pl) => opts.parallel_degree(pl).max(1),
+        None => 1,
+    };
+    let mut feats: Vec<usize> = Vec::with_capacity(p);
+    // Per-drawn-feature Newton direction; 0.0 = frozen/zero direction.
+    let mut slots: Vec<f64> = vec![0.0; p];
+    let ranges = SampleRanges::new(data.samples(), degree);
+    let mut commit = DxScratch::with_ranges(ranges);
+    let mut touched_buf: Vec<u32> = Vec::new();
+    let mut dx_buf: Vec<f64> = Vec::new();
+    let mut offsets: Vec<usize> = Vec::new();
+
+    'outer: loop {
+        outer += 1;
+        for _ in 0..rounds_per_outer {
+            inner_iters += 1;
+            let t_dir = Stopwatch::start();
+            // Draw P features uniformly at random (independent draws, like
+            // the shotgun paper — collisions resolve by summing).
+            feats.clear();
+            feats.extend((0..p).map(|_| rng.index(n)));
+            // Stale snapshot: every direction is computed against the state
+            // at round start, independently of the others — bitwise
+            // identical at any thread count.
+            let stale_direction = |j: usize| -> f64 {
+                // A frozen feature's draw is a no-op (the draw stays in the
+                // schedule so replay is mask-independent).
+                if !opts.feature_active(j) {
+                    return 0.0;
+                }
+                let (mut g, mut h) = state.grad_hess_j(j);
+                g += opts.l2_reg * w[j];
+                h += opts.l2_reg;
+                newton_direction(g, h, w[j])
+            };
+            let n_chunks = degree.min(p);
+            if n_chunks > 1 {
+                let pl = pool.as_ref().expect("degree > 1 implies a pool");
+                let chunk = p.div_ceil(n_chunks);
+                let slots_ptr = SendPtr::new(slots.as_mut_ptr());
+                let feats_ref = &feats;
+                let dir = &stale_direction;
+                pl.parallel_for(n_chunks, move |ci, _wid| {
+                    let lo = ci * chunk;
+                    let hi = p.min(lo + chunk);
+                    for (k, &j) in feats_ref.iter().enumerate().take(hi).skip(lo) {
+                        // SAFETY: slot k is written only by its own chunk;
+                        // the region barrier precedes any main-thread read.
+                        unsafe { *slots_ptr.get().add(k) = dir(j) };
+                    }
+                });
+            } else {
+                for (k, &j) in feats.iter().enumerate() {
+                    slots[k] = stale_direction(j);
+                }
+            }
+            let mut updates: Vec<(usize, f64)> = Vec::with_capacity(p);
+            for (k, &j) in feats.iter().enumerate() {
+                if slots[k] != 0.0 {
+                    updates.push((j, slots[k]));
+                }
+            }
+            let t_direction_total = t_dir.secs();
+
+            // Apply ALL directions at the fixed unit step — the divergence
+            // mechanism: nothing checks that the sum still descends.
+            let t_apply = Stopwatch::start();
+            commit.reset();
+            for &(j, step) in &updates {
+                w[j] += step;
+                let (ri, vals) = data.x.col(j);
+                commit.accumulate(ri, vals, step);
+            }
+            let epi_pool = pool
+                .as_ref()
+                .filter(|_| commit.touched_len() >= PARALLEL_EPILOGUE_MIN_TOUCHED);
+            commit.pack_into(&mut touched_buf, &mut dx_buf, &mut offsets, epi_pool);
+            match epi_pool {
+                Some(pl) if offsets.len() > 2 => {
+                    state.apply_step_sharded(&touched_buf, &dx_buf, &offsets, 1.0, pl)
+                }
+                _ => state.apply_step(&touched_buf, &dx_buf, 1.0),
+            }
+            let t_ls_serial = t_apply.secs();
+
+            if opts.record_iters {
+                records.push(IterRecord {
+                    bundle_size: p,
+                    t_direction_total,
+                    t_ls_parallel_total: 0.0,
+                    t_ls_serial,
+                    q_steps: 0,
+                });
+            }
+
+            // Trajectory probe: one event per committed round. There is no
+            // line search at all, so `alpha = 1`, `delta = 0`, `q_steps = 0`
+            // — see `StepKind::Round`.
+            if let Some(pr) = &opts.probe {
+                pr.0.on_step(&crate::solver::probe::StepInfo {
+                    kind: crate::solver::probe::StepKind::Round,
+                    outer,
+                    inner: inner_iters,
+                    accepted: !updates.is_empty(),
+                    alpha: 1.0,
+                    delta: 0.0,
+                    q_steps: 0,
+                    objective: crate::solver::objective_value_l2(&state, &w, opts.l2_reg),
+                    w: &w,
+                    state: &state,
+                });
+            }
+
+            // Divergence guard at the round boundary. Flag the monitor
+            // directly (the boundary is never shown to checkpoint probes,
+            // so the last written checkpoint stays last-good).
+            if !state.loss_value().is_finite() {
+                monitor.diverged = Some((outer, f64::INFINITY));
+                break 'outer;
+            }
+        }
+        if monitor.observe(outer, &state, &w, opts, 0) {
+            break;
+        }
+        checkpoint::emit(
+            opts,
+            name,
+            outer,
+            inner_iters,
+            0,
+            monitor.init_subgrad,
+            &w,
+            &state,
+            Some(rng.snapshot()),
+            ExtraView::None,
+        );
+    }
+    finish(name, w, &state, monitor, outer, inner_iters, 0, records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::solver::StopRule;
+    use crate::testutil::assert_close;
+
+    fn sparse_indep(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 150,
+                features: 80,
+                nnz_per_row: 4,
+                corr_groups: 0,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn dense_corr(seed: u64) -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 100,
+                features: 60,
+                nnz_per_row: 55,
+                corr_groups: 3,
+                corr_strength: 0.95,
+                row_normalize: true,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    fn opts(p: usize) -> TrainOptions {
+        TrainOptions {
+            c: 1.0,
+            bundle_size: p,
+            stop: StopRule::SubgradRel(1e-4),
+            max_outer: 400,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn p1_matches_cdn_optimum() {
+        // At P = 1 shotgun is full-step CDN; on well-conditioned data it
+        // must land on the same optimum as line-searched CDN.
+        let d = sparse_indep(21);
+        let mut o = opts(1);
+        o.stop = StopRule::SubgradRel(1e-6);
+        o.max_outer = 3000;
+        let rs = Shotgun::new().train(&d, Objective::Logistic, &o);
+        let rc = crate::solver::cdn::Cdn::new().train(&d, Objective::Logistic, &o);
+        assert!(rs.converged && rc.converged);
+        assert_close(rs.final_objective, rc.final_objective, 1e-4);
+    }
+
+    #[test]
+    fn converges_below_spectral_bound() {
+        let d = sparse_indep(22);
+        let bound = crate::linalg::power::scdn_parallelism_bound(&d.x);
+        let p = (bound as usize).max(1).min(4);
+        let r = Shotgun::new().train(&d, Objective::Logistic, &opts(p));
+        assert!(r.converged, "shotgun P={p} ≤ bound {bound:.1} should converge");
+        assert!(r.diverged.is_none());
+    }
+
+    #[test]
+    fn diverges_above_spectral_bound_where_pcdn_converges() {
+        // The ablation contrast in miniature: on dense correlated data the
+        // bound is tiny; at P ≫ bound shotgun's summed full steps blow up
+        // while PCDN's joint line search stays monotone at the same P.
+        let d = dense_corr(23);
+        let bound = crate::linalg::power::scdn_parallelism_bound(&d.x);
+        assert!(bound < 8.0, "test premise: bound must be small, got {bound}");
+        let mut o = opts(32);
+        o.stop = StopRule::MaxOuter(40);
+        o.max_outer = 40;
+        let wild = Shotgun::new().train(&d, Objective::Logistic, &o);
+        let pcdn = crate::solver::pcdn::Pcdn::new().train(&d, Objective::Logistic, &o);
+        assert!(
+            !wild.final_objective.is_finite() || wild.diverged.is_some(),
+            "expected divergence at P = 32 ≫ bound {bound:.1}, got F = {}",
+            wild.final_objective
+        );
+        assert!(
+            pcdn.final_objective.is_finite(),
+            "PCDN must stay finite at the same P"
+        );
+    }
+
+    #[test]
+    fn deterministic_and_thread_count_invariant() {
+        let d = sparse_indep(24);
+        let mut o1 = opts(8);
+        o1.stop = StopRule::MaxOuter(25);
+        o1.max_outer = 25;
+        let mut o3 = o1.clone();
+        o3.n_threads = 3;
+        let a = Shotgun::new().train(&d, Objective::Logistic, &o1);
+        let b = Shotgun::new().train(&d, Objective::Logistic, &o1);
+        let c = Shotgun::new().train(&d, Objective::Logistic, &o3);
+        assert_eq!(a.w, b.w, "same options must replay bitwise");
+        assert_eq!(a.w, c.w, "stale rounds are thread-count invariant");
+    }
+
+    #[test]
+    fn feature_mask_honored() {
+        let d = sparse_indep(25);
+        let n = d.features();
+        let mask: Vec<bool> = (0..n).map(|j| j % 3 != 0).collect();
+        let mut o = opts(2);
+        o.feature_mask = Some(std::sync::Arc::new(mask.clone()));
+        o.max_outer = 800;
+        let r = Shotgun::new().train(&d, Objective::Logistic, &o);
+        assert!(r.converged, "masked shotgun did not converge");
+        for (j, &wj) in r.w.iter().enumerate() {
+            if !mask[j] {
+                assert_eq!(wj, 0.0, "frozen feature {j} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bitwise() {
+        let d = sparse_indep(26);
+        let dir = std::env::temp_dir().join("pcdn_shotgun_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let mut o = opts(4);
+        o.stop = StopRule::MaxOuter(20);
+        o.max_outer = 20;
+        let full = Shotgun::new().train(&d, Objective::Logistic, &o);
+        // First half, checkpointing every outer.
+        let mut o_half = o.clone();
+        o_half.stop = StopRule::MaxOuter(10);
+        o_half.max_outer = 10;
+        o_half.probe = Some(crate::solver::probe::ProbeHandle::new(
+            checkpoint::CheckpointWriter::new(1, path.clone()),
+        ));
+        let _ = Shotgun::new().train(&d, Objective::Logistic, &o_half);
+        let ck = checkpoint::Checkpoint::load(&path).expect("checkpoint written");
+        assert_eq!(ck.solver, "shotgun");
+        // emit runs only when the loop continues, so the newest resume
+        // point is the outer before the MaxOuter(10) stop.
+        assert_eq!(ck.outer, 9);
+        let mut o_resume = o.clone();
+        o_resume.resume = Some(std::sync::Arc::new(ck));
+        let resumed = Shotgun::new().train(&d, Objective::Logistic, &o_resume);
+        std::fs::remove_file(&path).ok();
+        assert_eq!(resumed.w, full.w, "resumed run must be bitwise identical");
+    }
+}

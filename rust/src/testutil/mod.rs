@@ -35,6 +35,8 @@ pub fn tiny_model(features: usize) -> crate::api::Model {
             outer_iters: 0,
             converged: true,
             final_objective: 0.0,
+            bundle_size: 0,
+            bundle_auto: false,
         },
     }
 }

@@ -4,8 +4,8 @@
 //!
 //! The headline property: a checkpoint-interrupted-then-resumed run is
 //! **bitwise identical** to one that never stopped — asserted across all
-//! four solvers × all three losses, on the final model and on every
-//! post-resume trace point.
+//! five native solvers × all three losses, on the final model and on
+//! every post-resume trace point.
 
 use std::sync::Arc;
 
@@ -137,6 +137,22 @@ fn resume_bitwise_scdn_all_losses() {
             },
             obj,
             &toy(40 + i as u64),
+            3,
+            9,
+        );
+    }
+}
+
+#[test]
+fn resume_bitwise_shotgun_all_losses() {
+    // The fixed-step solver checkpoints like SCDN (RNG state + weights);
+    // p = 4 on the near-orthogonal toy stays well under the spectral
+    // bound, so nine outers are finite.
+    for (i, obj) in ALL_LOSSES.into_iter().enumerate() {
+        assert_resume_bitwise(
+            SolverSel::Shotgun { p: 4 },
+            obj,
+            &toy(45 + i as u64),
             3,
             9,
         );

@@ -32,7 +32,7 @@ use pcdn::loss::Objective;
 use pcdn::oracle::invariant::InvariantSet;
 use pcdn::oracle::{dense, ista, kkt};
 use pcdn::solver::probe::ProbeHandle;
-use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, scdn::Scdn, Solver, StopRule};
+use pcdn::solver::{cdn::Cdn, pcdn::Pcdn, scdn::Scdn, shotgun::Shotgun, Solver, StopRule};
 use pcdn::testutil::prop::{prop_assert, prop_close, run_prop, Gen};
 use pcdn::testutil::shrink::shrink_dataset;
 
@@ -194,6 +194,51 @@ fn scdn_conforms_at_safe_parallelism() {
     });
 }
 
+/// Shotgun at P = 1: the fixed-unit-step update degenerates to the plain
+/// sequential CDN iteration (every stale snapshot is exact), so it must
+/// land on the dense CDN oracle's optimum and pass the dense KKT residual
+/// like any line-searched solver.
+fn check_shotgun(d: &Dataset, cfg: CaseCfg) -> Result<(), String> {
+    let opts = pcdn::api::Fit::spec()
+        .c(cfg.c)
+        .solver(pcdn::api::Shotgun { p: cfg.p })
+        .threads(cfg.threads)
+        .stop(StopRule::SubgradRel(1e-6))
+        .max_outer(6000)
+        .options()
+        .expect("valid case options");
+    let r = Shotgun::new().train(d, cfg.obj, &opts);
+    prop_assert(
+        r.converged,
+        &format!("Shotgun {cfg:?} did not converge in {} outers", r.outer_iters),
+    )?;
+    let rel = kkt::kkt_rel(d, cfg.obj, cfg.c, &r.w, 0.0);
+    prop_assert(
+        rel <= 1e-5,
+        &format!("dense KKT residual rel {rel:.3e} > 1e-5 for {cfg:?}"),
+    )?;
+    let oracle = dense::reference_cdn(d, cfg.obj, cfg.c, 0.0, 1e-6, 2000);
+    prop_assert(oracle.converged, "dense CDN oracle did not converge")?;
+    prop_close(
+        r.final_objective,
+        oracle.objective,
+        1e-4,
+        "Shotgun vs dense-CDN-oracle objective",
+    )
+}
+
+#[test]
+fn shotgun_conforms_at_p1() {
+    run_prop("shotgun (P = 1) vs dense CDN oracle + KKT", 48, |g: &mut Gen| {
+        let d = gen_dataset(g, false);
+        let mut cfg = gen_cfg(g, d.features());
+        cfg.p = 1; // sequential: the only P where no line search is provably safe
+        cfg.c = g.f64_in(0.05..1.5);
+        check_shotgun(&d, cfg)
+            .or_else(|msg| minimized_report(&d, msg, |d2| check_shotgun(d2, cfg).is_err()))
+    });
+}
+
 /// The proximal-gradient second opinion: ISTA descends monotonically, so
 /// its final objective upper-bounds `F*`; a converged PCDN must sit at or
 /// below it and within tolerance once both report KKT at target.
@@ -307,10 +352,11 @@ fn cdn_shrinking_trajectories_conform() {
     });
 }
 
-/// The probe mechanism itself: all four solvers emit outer trajectories;
-/// PCDN/SCDN/CDN additionally emit per-step events.
+/// The probe mechanism itself: all five native solvers emit outer
+/// trajectories; the CDN family (PCDN/CDN/SCDN/Shotgun) additionally
+/// emits per-step events.
 #[test]
-fn all_four_solvers_emit_probed_trajectories() {
+fn all_solvers_emit_probed_trajectories() {
     use pcdn::solver::probe::{StepKind, TrajectoryRecorder};
     use pcdn::solver::tron::Tron;
     let d = generate(
@@ -326,13 +372,17 @@ fn all_four_solvers_emit_probed_trajectories() {
         (Box::new(Pcdn::new()), Some(StepKind::Bundle)),
         (Box::new(Cdn::new()), Some(StepKind::Feature)),
         (Box::new(Scdn::new()), Some(StepKind::Round)),
+        (Box::new(Shotgun::new()), Some(StepKind::Round)),
         (Box::new(Tron::new()), None),
     ];
     for (solver, kind) in solvers {
         let rec = Arc::new(TrajectoryRecorder::new());
+        // Shotgun has no line search, so only P = 1 (plain sequential CDN)
+        // is finite on arbitrary data; the guarded solvers bundle at 4.
+        let p = if solver.name() == "shotgun" { 1 } else { 4 };
         let opts = pcdn::api::Fit::spec()
             .c(1.0)
-            .solver(pcdn::api::Pcdn { p: 4 })
+            .solver(pcdn::api::Pcdn { p })
             .stop(StopRule::MaxOuter(3))
             .max_outer(3)
             .probe(ProbeHandle(rec.clone()))
