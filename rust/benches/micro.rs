@@ -126,6 +126,10 @@ fn main() {
         bench_ablation(n_threads);
         return;
     }
+    if std::env::var("PCDN_BENCH").as_deref() == Ok("kernels") {
+        bench_kernels();
+        return;
+    }
     let d = realsim_like();
     let nnz = d.x.nnz();
     println!(
@@ -709,6 +713,161 @@ fn bench_epilogue(n_threads: usize, pool: &WorkerPool) {
         Err(e) => println!("could not write BENCH_epilogue.json: {e}"),
     }
 }
+/// Hot-kernel throughput (emits BENCH_kernels.json; `PCDN_BENCH=kernels`
+/// runs just this section): the shipped `linalg::kernels` variants
+/// against plain scalar reference folds, on the three shapes the solver
+/// and serving paths actually run — the full-matrix scatter (matvec),
+/// the Armijo probe reduction (delta_loss), and the fused
+/// gradient/Hessian gather. "scalar" times a naive bounds-checked
+/// reference loop (the pre-kernel code shape) or the default
+/// `KernelMode::Scalar` state; "unrolled" times the always-on unrolled
+/// scatter or the opt-in fast-math fold; "f32" (matvec only) times the
+/// mixed-precision serving product. `bench_check --metric kernels`
+/// gates CI on `min_unrolled_speedup` over the matvec and probe rows
+/// (the fused gather is reported but not gated: its runtime includes
+/// per-feature setup that dilutes the kernel's share).
+fn bench_kernels() {
+    println!();
+    let d = generate(
+        &SyntheticSpec {
+            samples: 20_000,
+            features: 512,
+            nnz_per_row: 40,
+            scale_sigma: 0.8,
+            ..Default::default()
+        },
+        13,
+    );
+    let s = d.samples();
+    println!(
+        "kernel dataset: {s} × {}, nnz = {} (single core)",
+        d.features(),
+        d.x.nnz()
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut gated = f64::INFINITY;
+
+    // --- matvec: naive per-column scatter vs unrolled kernel vs f32 ------
+    let w: Vec<f64> = (0..d.features())
+        .map(|j| 1e-2 * ((j % 13) as f64 - 6.0))
+        .collect();
+    let mut out = vec![0.0f64; s];
+    let (mv_scalar, _, _) = measure(2, 9, || {
+        out.fill(0.0);
+        for (j, &wj) in w.iter().enumerate() {
+            if wj == 0.0 {
+                continue;
+            }
+            let (ri, vals) = d.x.col(j);
+            for (r, v) in ri.iter().zip(vals) {
+                out[*r as usize] += wj * v;
+            }
+        }
+        black_box(out[0])
+    });
+    let (mv_unrolled, _, _) = measure(2, 9, || {
+        d.x.matvec_range(&w, 0, s, &mut out);
+        black_box(out[0])
+    });
+    let w32: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+    let mut out32 = vec![0.0f32; s];
+    let (mv_f32, _, _) = measure(2, 9, || {
+        d.x.matvec_range_f32(&w32, 0, s, &mut out32);
+        black_box(out32[0])
+    });
+    let mv_speedup = mv_scalar / mv_unrolled.max(1e-12);
+    gated = gated.min(mv_speedup);
+    println!(
+        "kernel matvec  scalar {:>10}  unrolled {:>10}  f32 {:>10}  speedup {mv_speedup:>5.2}x",
+        fmt_secs(mv_scalar),
+        fmt_secs(mv_unrolled),
+        fmt_secs(mv_f32)
+    );
+    rows.push(Json::obj(vec![
+        ("kernel", Json::Str("matvec".into())),
+        ("scalar_secs", Json::Num(mv_scalar)),
+        ("unrolled_secs", Json::Num(mv_unrolled)),
+        ("f32_secs", Json::Num(mv_f32)),
+        ("unrolled_speedup", Json::Num(mv_speedup)),
+    ]));
+
+    // --- Armijo probe reduction: default fold vs fast-math fold ----------
+    // Lasso has the cheapest per-sample arithmetic, so the fold's serial
+    // dependency chain (not transcendental evaluation) dominates — the
+    // shape where the multi-accumulator unroll actually shows.
+    let probe_scalar_state = LossState::new(Objective::Lasso, &d, 1.0);
+    let mut probe_fast_state = LossState::new(Objective::Lasso, &d, 1.0);
+    probe_fast_state.set_fast_math(true);
+    let touched: Vec<u32> = (0..s as u32).collect();
+    let mut rng = Pcg64::new(29);
+    let dx: Vec<f64> = (0..s)
+        .map(|_| 1e-3 * (rng.next_u64() % 1000) as f64)
+        .collect();
+    let (pr_scalar, _, _) = measure(2, 9, || {
+        black_box(probe_scalar_state.delta_loss(&touched, &dx, 0.5))
+    });
+    let (pr_fast, _, _) = measure(2, 9, || {
+        black_box(probe_fast_state.delta_loss(&touched, &dx, 0.5))
+    });
+    let pr_speedup = pr_scalar / pr_fast.max(1e-12);
+    gated = gated.min(pr_speedup);
+    println!(
+        "kernel probe   scalar {:>10}  unrolled {:>10}  {:>10}  speedup {pr_speedup:>5.2}x",
+        fmt_secs(pr_scalar),
+        fmt_secs(pr_fast),
+        "-"
+    );
+    rows.push(Json::obj(vec![
+        ("kernel", Json::Str("probe".into())),
+        ("scalar_secs", Json::Num(pr_scalar)),
+        ("unrolled_secs", Json::Num(pr_fast)),
+        ("unrolled_speedup", Json::Num(pr_speedup)),
+    ]));
+
+    // --- fused gradient/Hessian gather: default vs fast-math -------------
+    let fused_scalar_state = LossState::new(Objective::Logistic, &d, 2.0);
+    let mut fused_fast_state = LossState::new(Objective::Logistic, &d, 2.0);
+    fused_fast_state.set_fast_math(true);
+    let sweep = |state: &LossState<'_>| {
+        let mut acc = 0.0;
+        for j in 0..d.features() {
+            let (g, h) = state.grad_hess_j(j);
+            acc += g + h;
+        }
+        acc
+    };
+    let (fu_scalar, _, _) = measure(2, 9, || black_box(sweep(&fused_scalar_state)));
+    let (fu_fast, _, _) = measure(2, 9, || black_box(sweep(&fused_fast_state)));
+    let fu_speedup = fu_scalar / fu_fast.max(1e-12);
+    println!(
+        "kernel fused   scalar {:>10}  unrolled {:>10}  {:>10}  speedup {fu_speedup:>5.2}x",
+        fmt_secs(fu_scalar),
+        fmt_secs(fu_fast),
+        "-"
+    );
+    rows.push(Json::obj(vec![
+        ("kernel", Json::Str("fused".into())),
+        ("scalar_secs", Json::Num(fu_scalar)),
+        ("unrolled_secs", Json::Num(fu_fast)),
+        ("unrolled_speedup", Json::Num(fu_speedup)),
+    ]));
+
+    println!("min gated unrolled speedup (matvec, probe): {gated:.2}x");
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("kernels".into())),
+        ("samples", Json::Num(s as f64)),
+        ("features", Json::Num(d.features() as f64)),
+        ("nnz", Json::Num(d.x.nnz() as f64)),
+        ("gated_kernels", Json::arr_str(&["matvec", "probe"])),
+        ("kernels", Json::Arr(rows)),
+        ("min_unrolled_speedup", Json::Num(gated)),
+    ]);
+    match std::fs::write("BENCH_kernels.json", doc.pretty()) {
+        Ok(()) => println!("wrote BENCH_kernels.json"),
+        Err(e) => println!("could not write BENCH_kernels.json: {e}"),
+    }
+}
+
 /// Serving latency and throughput: a live daemon on a loopback port,
 /// N clients issuing single-sample requests over persistent
 /// line-protocol connections (the wire path `pcdn serve` exposes for

@@ -278,6 +278,7 @@ pub struct Fit<'d> {
     feature_mask: Option<Arc<Vec<bool>>>,
     warm_start: Option<Vec<f64>>,
     probe: Option<ProbeHandle>,
+    fast_math: bool,
     resume: Option<Arc<Checkpoint>>,
     checkpoint: Option<(usize, PathBuf)>,
     checkpoint_keep: usize,
@@ -319,6 +320,7 @@ impl<'d> Fit<'d> {
             feature_mask: None,
             warm_start: None,
             probe: None,
+            fast_math: d.fast_math,
             resume: None,
             checkpoint: None,
             checkpoint_keep: 0,
@@ -474,6 +476,21 @@ impl<'d> Fit<'d> {
         self
     }
 
+    /// Opt in to the reassociating (`fast_math`) hot-loop kernels: the
+    /// per-feature gradient/Hessian gathers and the Armijo probe
+    /// reductions run 4-wide unrolled (or via `std::simd` when the crate
+    /// is built with the `simd` feature) instead of as the strict
+    /// sequential fold. Off by default: the default fold is the bitwise
+    /// replay / conformance reference, while fast-math results agree to
+    /// ≤ 1e-10 relative (see `linalg::kernels` and
+    /// `TrainOptions::fast_math`). Not persisted in checkpoints — a
+    /// resumed run uses whatever this builder sets, and only `false`
+    /// resumes are bitwise-reproducible.
+    pub fn fast_math(mut self, on: bool) -> Self {
+        self.fast_math = on;
+        self
+    }
+
     /// Write a checkpoint to `path` every `k` outer iterations
     /// (atomically overwritten — the file always holds the newest
     /// complete resume point). Composes with [`Fit::probe`].
@@ -550,6 +567,7 @@ impl<'d> Fit<'d> {
             feature_mask: self.feature_mask.clone(),
             pool: self.pool.clone(),
             probe,
+            fast_math: self.fast_math,
             resume: self.resume.clone(),
         })
     }

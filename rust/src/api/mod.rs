@@ -64,4 +64,6 @@ pub use crate::serve::{
 pub use crate::solver::checkpoint::{Checkpoint, CheckpointRecorder, CheckpointWriter};
 pub use crate::solver::{ArmijoParams, StopRule, TrainResult};
 pub use fit::{Cdn, Fit, FitError, Pcdn, Scdn, Shotgun, SolverSel, Tron};
-pub use model::{Fitted, Model, ModelLoadError, Provenance, ScoreError, Scorer, ScorerBuilder};
+pub use model::{
+    Fitted, Model, ModelLoadError, Precision, Provenance, ScoreError, Scorer, ScorerBuilder,
+};

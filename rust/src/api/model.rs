@@ -562,6 +562,25 @@ impl fmt::Display for ScoreError {
 
 impl std::error::Error for ScoreError {}
 
+/// Arithmetic width of the batch-scoring path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full-width scoring over the model's f64 weights — the reference
+    /// path, bitwise reproducible at any sharding degree.
+    #[default]
+    F64,
+    /// Mixed-precision scoring: the `Arc<Model>` weights are quantized
+    /// to f32 **once at [`ScorerBuilder::build`]**, and minibatches are
+    /// scored through the f32 [`CscMat::matvec_range_f32`] (matrix
+    /// values narrow on the fly). Tolerance policy: decision values stay
+    /// within **1e-6 relative** of the f64 scorer (with a 1e-6 absolute
+    /// floor near zero) — documented here, asserted against the f64
+    /// scorer in `rust/tests/serve.rs`. The f64 path remains the
+    /// conformance reference; F32 is only ever what the caller asked
+    /// for, never a silent substitution.
+    F32,
+}
+
 /// Builder for [`Scorer`], mirroring the [`Fit`](crate::api::Fit)
 /// builder: chainable setters, one validation point in
 /// [`ScorerBuilder::build`]. Obtained from [`Scorer::for_model`].
@@ -572,6 +591,7 @@ pub struct ScorerBuilder {
     batch: Option<usize>,
     pool: Option<WorkerPool>,
     expect_fingerprint: Option<u64>,
+    precision: Precision,
 }
 
 impl ScorerBuilder {
@@ -605,6 +625,15 @@ impl ScorerBuilder {
         self
     }
 
+    /// Arithmetic width for batch scoring (see [`Precision`] for the f32
+    /// tolerance policy). Applies to [`Scorer::decision_values`] and
+    /// everything built on it (`predict`, `accuracy`); the single-sample
+    /// [`Scorer::score_sample`] path stays f64. Default: [`Precision::F64`].
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
     /// Validate the configuration and produce the scorer.
     pub fn build(self) -> Result<Scorer, ScoreError> {
         if self.threads == 0 {
@@ -619,11 +648,18 @@ impl ScorerBuilder {
                 return Err(ScoreError::FingerprintMismatch { expected, got });
             }
         }
+        // F32 quantizes the shared weights exactly once, here — scoring
+        // never re-converts the model.
+        let w32 = match self.precision {
+            Precision::F64 => None,
+            Precision::F32 => Some(self.model.w.iter().map(|&x| x as f32).collect()),
+        };
         Ok(Scorer {
             model: self.model,
             pool: self.pool,
             degree: self.threads,
             batch: self.batch,
+            w32,
         })
     }
 }
@@ -641,6 +677,9 @@ pub struct Scorer {
     pool: Option<WorkerPool>,
     degree: usize,
     batch: Option<usize>,
+    /// `Some` iff built with [`Precision::F32`]: the weights quantized
+    /// once at build time (see [`Precision`] for the tolerance policy).
+    w32: Option<Vec<f32>>,
 }
 
 impl Scorer {
@@ -653,6 +692,7 @@ impl Scorer {
             batch: None,
             pool: None,
             expect_fingerprint: None,
+            precision: Precision::F64,
         }
     }
 
@@ -669,6 +709,7 @@ impl Scorer {
             pool: None,
             degree: 1,
             batch: None,
+            w32: None,
         }
     }
 
@@ -724,14 +765,36 @@ impl Scorer {
         }
         let degree = self.effective_degree(s);
         if degree <= 1 {
+            if let Some(w32) = &self.w32 {
+                let mut z32 = vec![0.0f32; s];
+                x.matvec_range_f32(w32, 0, s, &mut z32);
+                return Ok(z32.iter().map(|&z| z as f64).collect());
+            }
             return Ok(x.matvec(&self.model.w));
         }
         let ranges = SampleRanges::new(s, degree);
-        let mut out = vec![0.0f64; s];
         let team = self
             .pool
             .clone()
             .unwrap_or_else(|| WorkerPool::global().clone());
+        if let Some(w32) = &self.w32 {
+            // Mixed-precision path: score each range through the f32
+            // matvec, widen once at the end (see `Precision::F32` for the
+            // tolerance policy).
+            let mut out32 = vec![0.0f32; s];
+            let out_ptr = SendPtr::new(out32.as_mut_ptr());
+            team.parallel_for(ranges.n_ranges(), move |r, _wid| {
+                let (lo, hi) = ranges.bounds(r);
+                // SAFETY: ranges partition [0, s) disjointly; each region
+                // item writes only its own out32[lo..hi], and the region
+                // barrier completes before `out32` is read.
+                let slice =
+                    unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(lo), hi - lo) };
+                x.matvec_range_f32(w32, lo, hi, slice);
+            });
+            return Ok(out32.iter().map(|&z| z as f64).collect());
+        }
+        let mut out = vec![0.0f64; s];
         let out_ptr = SendPtr::new(out.as_mut_ptr());
         let w = &self.model.w;
         team.parallel_for(ranges.n_ranges(), move |r, _wid| {

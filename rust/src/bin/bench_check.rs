@@ -10,7 +10,7 @@
 //! past the median of several runs is a real smell, drifting past a
 //! single lucky best run is not.
 //!
-//! Two gated metrics, selected with `--metric`:
+//! Three gated metrics, selected with `--metric`:
 //!
 //! * `epilogue` (default) — the P = 1024 sharded-epilogue speedup from
 //!   `BENCH_epilogue.json`; **higher is better**, so the gate fails when
@@ -18,6 +18,9 @@
 //! * `serve` — the p99 per-request serving latency from
 //!   `BENCH_serve.json`; **lower is better**, so the direction inverts
 //!   and the gate fails when `current > (1 + tolerance)·median`.
+//! * `kernels` — the minimum unrolled-vs-scalar speedup over the gated
+//!   hot kernels (matvec scatter and Armijo probe) from
+//!   `BENCH_kernels.json`; **higher is better**.
 //!
 //! ```sh
 //! # history/ holds bench JSON files from previous CI runs
@@ -48,6 +51,8 @@ enum Metric {
     EpilogueSpeedup,
     /// Serving p99 per-request latency; lower is better.
     ServeP99,
+    /// Minimum unrolled-vs-scalar hot-kernel speedup; higher is better.
+    KernelSpeedup,
 }
 
 impl Metric {
@@ -55,18 +60,20 @@ impl Metric {
         match s {
             "epilogue" => Ok(Metric::EpilogueSpeedup),
             "serve" => Ok(Metric::ServeP99),
-            other => Err(format!("unknown --metric '{other}' (epilogue|serve)")),
+            "kernels" => Ok(Metric::KernelSpeedup),
+            other => Err(format!("unknown --metric '{other}' (epilogue|serve|kernels)")),
         }
     }
 
     fn higher_is_better(self) -> bool {
-        matches!(self, Metric::EpilogueSpeedup)
+        matches!(self, Metric::EpilogueSpeedup | Metric::KernelSpeedup)
     }
 
     fn label(self) -> String {
         match self {
             Metric::EpilogueSpeedup => format!("P={GATE_P} sharded speedup"),
             Metric::ServeP99 => "serve p99 latency".into(),
+            Metric::KernelSpeedup => "min gated kernel unrolled speedup".into(),
         }
     }
 
@@ -81,6 +88,7 @@ impl Metric {
                 .get("speedup")?
                 .as_f64(),
             Metric::ServeP99 => doc.get("p99_secs")?.as_f64(),
+            Metric::KernelSpeedup => doc.get("min_unrolled_speedup")?.as_f64(),
         }
     }
 }
@@ -141,7 +149,11 @@ fn main() {
         "bench_check",
         "fail when the current bench regresses vs the CI artifact trajectory",
     )
-    .opt("metric", Some("epilogue"), "gated metric: epilogue (speedup) or serve (p99 latency)")
+    .opt(
+        "metric",
+        Some("epilogue"),
+        "gated metric: epilogue (speedup), serve (p99 latency), or kernels (min unrolled speedup)",
+    )
     .opt("current", Some("BENCH_epilogue.json"), "current bench output")
     .opt("history", Some("bench_history"), "directory of prior bench JSON files")
     .opt("tolerance", Some("0.2"), "allowed fractional drift past the history median")
@@ -274,6 +286,39 @@ mod tests {
             Metric::EpilogueSpeedup.extract(&Json::parse("{}").unwrap()),
             None
         );
+    }
+
+    const KERNELS_SAMPLE: &str = r#"{
+        "bench": "kernels",
+        "samples": 20000,
+        "features": 512,
+        "gated_kernels": ["matvec", "probe"],
+        "kernels": [
+            {"kernel": "matvec", "scalar_secs": 2.0e-4, "unrolled_secs": 1.2e-4,
+             "f32_secs": 1.0e-4, "unrolled_speedup": 1.67},
+            {"kernel": "probe", "scalar_secs": 5.0e-5, "unrolled_secs": 2.8e-5,
+             "unrolled_speedup": 1.79},
+            {"kernel": "fused", "scalar_secs": 9.0e-5, "unrolled_secs": 8.0e-5,
+             "unrolled_speedup": 1.12}
+        ],
+        "min_unrolled_speedup": 1.67
+    }"#;
+
+    #[test]
+    fn extracts_the_kernel_speedup() {
+        let doc = Json::parse(KERNELS_SAMPLE).unwrap();
+        assert_eq!(Metric::KernelSpeedup.extract(&doc), Some(1.67));
+        // Metrics don't cross-match other artifacts.
+        assert_eq!(Metric::KernelSpeedup.extract(&Json::parse(SAMPLE).unwrap()), None);
+        assert_eq!(
+            Metric::EpilogueSpeedup.extract(&Json::parse(KERNELS_SAMPLE).unwrap()),
+            None
+        );
+        // Higher is better: a faster-than-median kernel passes, a slower
+        // one regresses.
+        let hist = [1.6, 1.7, 1.8];
+        assert!(check(Metric::KernelSpeedup, 1.75, &hist, 0.2).is_ok());
+        assert!(check(Metric::KernelSpeedup, 1.2, &hist, 0.2).is_err());
     }
 
     #[test]

@@ -68,7 +68,9 @@ pub fn read<R: Read>(reader: R, n_features: Option<usize>) -> Result<Dataset> {
         }
         None => max_feat,
     };
-    let x = CscMat::from_triplets(y.len(), n, &triplets);
+    // Typed rejection (not a silent `as u32` wrap) for inputs with more
+    // rows than the CSC row-id storage can index.
+    let x = CscMat::try_from_triplets(y.len(), n, &triplets)?;
     Ok(Dataset::new("libsvm", x, y))
 }
 

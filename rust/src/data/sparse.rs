@@ -6,7 +6,35 @@
 //! primary layout. A CSR view is derivable for row-centric consumers
 //! (prediction over test rows, dense export for the PJRT path).
 
+use crate::linalg::kernels;
 use crate::util::rng::Pcg64;
+
+/// Typed rejection for datasets whose row count cannot be indexed by the
+/// `u32` row-id storage. Before this existed, construction paths wrapped
+/// row ids through `r as u32` silently — a dataset past 2³² samples would
+/// alias distant rows onto each other and corrupt every downstream
+/// gradient. `select_rows` additionally reserves `u32::MAX` as its remap
+/// sentinel, so `rows == u32::MAX` (largest stored id `u32::MAX − 1`) is
+/// the inclusive bound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowCountOverflow {
+    /// The offending row count.
+    pub rows: usize,
+}
+
+impl std::fmt::Display for RowCountOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dataset has {} rows, beyond the u32 row-index capacity ({}); \
+             row ids would silently wrap",
+            self.rows,
+            u32::MAX
+        )
+    }
+}
+
+impl std::error::Error for RowCountOverflow {}
 
 /// Sparse matrix in compressed sparse column format.
 ///
@@ -25,8 +53,21 @@ pub struct CscMat {
 }
 
 impl CscMat {
+    /// Reject row counts the `u32` row-id storage cannot represent.
+    /// Every construction path funnels through this check.
+    pub fn check_rows(rows: usize) -> Result<(), RowCountOverflow> {
+        if rows > u32::MAX as usize {
+            Err(RowCountOverflow { rows })
+        } else {
+            Ok(())
+        }
+    }
+
     /// An empty matrix with no stored entries.
     pub fn zeros(rows: usize, cols: usize) -> Self {
+        if let Err(e) = Self::check_rows(rows) {
+            panic!("{e}");
+        }
         CscMat {
             rows,
             cols,
@@ -37,12 +78,28 @@ impl CscMat {
     }
 
     /// Build from (row, col, value) triplets. Duplicates are summed;
-    /// explicit zeros are dropped.
+    /// explicit zeros are dropped. Panics on `rows > u32::MAX` (the
+    /// synthetic generators funnel through here); fallible callers —
+    /// LIBSVM ingest in particular — use [`Self::try_from_triplets`].
     pub fn from_triplets(
         rows: usize,
         cols: usize,
         triplets: &[(usize, usize, f64)],
     ) -> Self {
+        match Self::try_from_triplets(rows, cols, triplets) {
+            Ok(m) => m,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible [`Self::from_triplets`]: returns the typed
+    /// [`RowCountOverflow`] instead of wrapping row ids through `as u32`.
+    pub fn try_from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Result<Self, RowCountOverflow> {
+        Self::check_rows(rows)?;
         // Count entries per column.
         let mut count = vec![0usize; cols + 1];
         for &(r, c, _) in triplets {
@@ -92,13 +149,13 @@ impl CscMat {
             out_ptr[j + 1] = out_ri.len();
         }
         col_ptr = out_ptr;
-        CscMat {
+        Ok(CscMat {
             rows,
             cols,
             col_ptr,
             row_idx: out_ri,
             vals: out_v,
-        }
+        })
     }
 
     /// Number of stored entries.
@@ -134,26 +191,25 @@ impl CscMat {
     }
 
     /// y += a * x^j (sparse axpy of column `j` into a dense vector of
-    /// length `rows`).
+    /// length `rows`). Dispatches to [`kernels::scatter_axpy`], whose
+    /// unroll is bitwise identical to the sequential loop (scatters never
+    /// reassociate — see the module docs).
     #[inline]
     pub fn axpy_col(&self, j: usize, a: f64, y: &mut [f64]) {
         debug_assert_eq!(y.len(), self.rows);
         let (ri, v) = self.col(j);
-        for (r, x) in ri.iter().zip(v) {
-            y[*r as usize] += a * x;
-        }
+        kernels::scatter_axpy(ri, v, a, y);
     }
 
-    /// Dot product of column `j` with a dense vector.
+    /// Dot product of column `j` with a dense vector, as the strict
+    /// sequential fold ([`kernels::gather_dot`] in Scalar mode — the
+    /// bitwise-deterministic reference; fast-math consumers pass their
+    /// own mode to the kernel directly).
     #[inline]
     pub fn dot_col(&self, j: usize, y: &[f64]) -> f64 {
         debug_assert_eq!(y.len(), self.rows);
         let (ri, v) = self.col(j);
-        let mut acc = 0.0;
-        for (r, x) in ri.iter().zip(v) {
-            acc += y[*r as usize] * x;
-        }
-        acc
+        kernels::gather_dot(kernels::KernelMode::Scalar, ri, v, y)
     }
 
     /// Dense matrix-vector product `X w` (over columns; `w` has length `cols`).
@@ -182,15 +238,55 @@ impl CscMat {
         assert!(lo <= hi && hi <= self.rows, "bad row range [{lo}, {hi})");
         assert_eq!(out.len(), hi - lo);
         out.fill(0.0);
+        let full = lo == 0 && hi == self.rows;
         for (j, &wj) in w.iter().enumerate() {
             if wj == 0.0 {
                 continue;
             }
             let (ri, vals) = self.col(j);
+            if full {
+                // Full-range fast path: every entry is in range, so the
+                // two binary searches per nonzero column are pure
+                // overhead. Same ascending-`j` scatter as `matvec`, so
+                // the result stays bitwise identical to it.
+                kernels::scatter_axpy(ri, vals, wj, out);
+                continue;
+            }
             let a = ri.partition_point(|&r| (r as usize) < lo);
             let b = ri.partition_point(|&r| (r as usize) < hi);
             for (r, x) in ri[a..b].iter().zip(&vals[a..b]) {
                 out[*r as usize - lo] += wj * x;
+            }
+        }
+    }
+
+    /// f32 variant of [`Self::matvec_range`] for the mixed-precision
+    /// scoring path: `w32` is the weight vector pre-quantized once at
+    /// scorer build (`ScorerBuilder::precision(Precision::F32)`), matrix
+    /// values narrow to f32 on the fly, and accumulation is f32
+    /// throughout. Same range semantics and full-range fast path as the
+    /// f64 version. Tolerance policy: decision values stay within 1e-6
+    /// relative of the f64 scorer (documented in `api::model`, asserted
+    /// in `rust/tests/serve.rs`) — the f64 path remains the reference.
+    pub fn matvec_range_f32(&self, w32: &[f32], lo: usize, hi: usize, out: &mut [f32]) {
+        assert_eq!(w32.len(), self.cols);
+        assert!(lo <= hi && hi <= self.rows, "bad row range [{lo}, {hi})");
+        assert_eq!(out.len(), hi - lo);
+        out.fill(0.0);
+        let full = lo == 0 && hi == self.rows;
+        for (j, &wj) in w32.iter().enumerate() {
+            if wj == 0.0 {
+                continue;
+            }
+            let (ri, vals) = self.col(j);
+            if full {
+                kernels::scatter_axpy_f32(ri, vals, wj, out);
+                continue;
+            }
+            let a = ri.partition_point(|&r| (r as usize) < lo);
+            let b = ri.partition_point(|&r| (r as usize) < hi);
+            for (r, x) in ri[a..b].iter().zip(&vals[a..b]) {
+                out[*r as usize - lo] += wj * (*x as f32);
             }
         }
     }
@@ -296,6 +392,13 @@ impl CscMat {
     /// samples to scale data size while keeping feature correlation fixed).
     pub fn vstack_copies(&self, k: usize) -> CscMat {
         assert!(k >= 1);
+        let total = self
+            .rows
+            .checked_mul(k)
+            .expect("vstack_copies: row count overflows usize");
+        if let Err(e) = Self::check_rows(total) {
+            panic!("{e}");
+        }
         let mut col_ptr = vec![0usize; self.cols + 1];
         let mut row_idx = Vec::with_capacity(self.nnz() * k);
         let mut vals = Vec::with_capacity(self.nnz() * k);
@@ -356,6 +459,9 @@ impl CscMat {
 
     /// A random sparse matrix (tests/benches).
     pub fn random(rows: usize, cols: usize, density: f64, rng: &mut Pcg64) -> CscMat {
+        if let Err(e) = Self::check_rows(rows) {
+            panic!("{e}");
+        }
         let per_col = ((rows as f64 * density).round() as usize).clamp(1, rows);
         let mut col_ptr = vec![0usize; cols + 1];
         let mut row_idx = Vec::with_capacity(per_col * cols);
@@ -485,6 +591,65 @@ mod tests {
             }
             for (a, b) in full.iter().zip(&got) {
                 assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn row_count_boundary_is_enforced() {
+        // u32::MAX rows is the inclusive bound (largest stored id is
+        // rows − 1 = u32::MAX − 1, below the select_rows sentinel).
+        assert!(CscMat::check_rows(u32::MAX as usize).is_ok());
+        assert!(CscMat::try_from_triplets(u32::MAX as usize, 1, &[]).is_ok());
+        #[cfg(target_pointer_width = "64")]
+        {
+            let over = u32::MAX as usize + 1;
+            let err = CscMat::check_rows(over).unwrap_err();
+            assert_eq!(err.rows, over);
+            assert!(err.to_string().contains("row"));
+            assert!(CscMat::try_from_triplets(over, 1, &[]).is_err());
+        }
+    }
+
+    #[test]
+    #[cfg(target_pointer_width = "64")]
+    #[should_panic(expected = "u32 row-index capacity")]
+    fn from_triplets_panics_past_u32_rows() {
+        let _ = CscMat::from_triplets(u32::MAX as usize + 1, 1, &[]);
+    }
+
+    #[test]
+    fn matvec_range_full_range_bitwise_equals_matvec() {
+        // Regression for the lo == 0 && hi == rows fast path: skipping
+        // the per-column binary searches must not perturb a single bit.
+        let mut rng = crate::util::rng::Pcg64::new(7);
+        let m = CscMat::random(64, 17, 0.3, &mut rng);
+        let w: Vec<f64> = (0..17).map(|_| rng.normal()).collect();
+        let full = m.matvec(&w);
+        let mut got = vec![0.0f64; 64];
+        m.matvec_range(&w, 0, 64, &mut got);
+        for (a, b) in full.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn matvec_range_f32_tracks_f64_within_tolerance() {
+        let mut rng = crate::util::rng::Pcg64::new(11);
+        let m = CscMat::random(40, 12, 0.4, &mut rng);
+        let w: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let w32: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+        let full = m.matvec(&w);
+        for (lo, hi) in [(0usize, 40usize), (5, 31), (0, 0)] {
+            let mut got = vec![0.0f32; hi - lo];
+            m.matvec_range_f32(&w32, lo, hi, &mut got);
+            for (i, g) in got.iter().enumerate() {
+                let want = full[lo + i];
+                assert!(
+                    (*g as f64 - want).abs() <= 1e-6 * want.abs().max(1.0),
+                    "row {}: {g} vs {want}",
+                    lo + i
+                );
             }
         }
     }

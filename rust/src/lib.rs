@@ -1,3 +1,6 @@
+// `std::simd` is still nightly-gated; the `simd` cargo feature opts in
+// (see `linalg::kernels`). The default build stays on stable.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # PCDN — Parallel Coordinate Descent Newton for ℓ1-Regularized Minimization
 //!
 //! A production-quality reproduction of *Bian, Li, Liu, Yang — "Parallel

@@ -1,0 +1,503 @@
+//! Explicitly vectorized variants of the hot inner loops.
+//!
+//! Every per-coordinate / per-sample loop the solvers and the scorer touch
+//! — the column gather-dot behind [`CscMat::dot_col`], the column scatter
+//! behind [`CscMat::axpy_col`] / [`CscMat::matvec_range`], the fused
+//! gradient/Hessian gather behind [`LossState::grad_hess_j`], and the
+//! Armijo probe reductions behind `LossState::delta_loss` — funnels
+//! through this module, so there is exactly **one dispatch point** per
+//! kernel shape and the numerics policy is visible in one place:
+//!
+//! * [`KernelMode::Scalar`] (the default) is the strict sequential f64
+//!   fold. It is the bitwise-deterministic reference every conformance
+//!   test and every replay guarantee is stated against; the training
+//!   default never deviates from it.
+//! * [`KernelMode::Reassoc`] is the explicitly vectorized variant: a
+//!   4-wide unrolled fold with independent accumulators by default, or a
+//!   `std::simd` implementation when the crate is built with the `simd`
+//!   cargo feature (nightly only). Splitting the accumulator
+//!   **reassociates the floating-point sum**, so results differ from the
+//!   scalar fold at the ~1e-16-per-term level. It is therefore opt-in
+//!   only — [`TrainOptions::fast_math`] / `Fit::fast_math(true)` on the
+//!   training side — and conformance-tested to ≤ 1e-10 relative against
+//!   the scalar fold; nothing ever substitutes it silently.
+//!
+//! Scatter kernels ([`scatter_axpy`], [`scatter_axpy_f32`]) take no mode:
+//! unrolling a scatter only reorders *independent statements* (CSC column
+//! row ids are strictly increasing, so each target element is written
+//! once per call) and never reassociates any single element's sum — the
+//! unrolled form is bitwise identical to the sequential loop by
+//! construction and is always on.
+//!
+//! The f32 kernels serve the mixed-precision scoring path
+//! (`ScorerBuilder::precision(Precision::F32)`): weights are quantized
+//! once at scorer build, matrix values narrow on the fly, and the f64
+//! scorer remains the reference — the documented serving tolerance is
+//! ≤ 1e-6 relative on decision values (see `api::model`).
+//!
+//! `PCDN_BENCH=kernels cargo bench --bench micro` measures scalar vs
+//! unrolled vs f32 throughput on the matvec / probe / fused shapes and
+//! writes `BENCH_kernels.json`; CI gates the trajectory through
+//! `bench_check --metric kernels`.
+//!
+//! [`CscMat::dot_col`]: crate::data::CscMat::dot_col
+//! [`CscMat::axpy_col`]: crate::data::CscMat::axpy_col
+//! [`CscMat::matvec_range`]: crate::data::CscMat::matvec_range
+//! [`LossState::grad_hess_j`]: crate::loss::LossState::grad_hess_j
+//! [`TrainOptions::fast_math`]: crate::solver::TrainOptions
+
+/// How a reducing kernel folds its accumulator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Strict sequential f64 fold — the bitwise-deterministic reference
+    /// and the training default.
+    #[default]
+    Scalar,
+    /// 4-wide unrolled fold (or `std::simd` under the `simd` feature):
+    /// independent accumulators, reassociated sum, ≤ 1e-10 relative vs
+    /// [`KernelMode::Scalar`]. Opt-in via `fast_math`.
+    Reassoc,
+}
+
+impl KernelMode {
+    /// The mode a `fast_math` flag selects.
+    #[inline]
+    pub fn from_fast_math(on: bool) -> KernelMode {
+        if on {
+            KernelMode::Reassoc
+        } else {
+            KernelMode::Scalar
+        }
+    }
+}
+
+/// Indexed gather dot: `Σ_k x[ri[k]] · vals[k]` (the [`CscMat::dot_col`]
+/// shape — one sparse column against a dense vector).
+///
+/// [`CscMat::dot_col`]: crate::data::CscMat::dot_col
+#[inline]
+pub fn gather_dot(mode: KernelMode, ri: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    debug_assert_eq!(ri.len(), vals.len());
+    debug_assert!(ri.iter().all(|&r| (r as usize) < x.len()));
+    match mode {
+        KernelMode::Scalar => {
+            let mut acc = 0.0;
+            for (r, v) in ri.iter().zip(vals) {
+                acc += x[*r as usize] * v;
+            }
+            acc
+        }
+        KernelMode::Reassoc => {
+            #[cfg(feature = "simd")]
+            {
+                gather_dot_simd(ri, vals, x)
+            }
+            #[cfg(not(feature = "simd"))]
+            {
+                gather_dot_unrolled(ri, vals, x)
+            }
+        }
+    }
+}
+
+/// 4-accumulator unrolled gather dot. The independent accumulators break
+/// the sequential-add dependency chain (the whole point), which
+/// reassociates the sum — [`KernelMode::Reassoc`] only.
+#[cfg_attr(feature = "simd", allow(dead_code))]
+fn gather_dot_unrolled(ri: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    let n = ri.len();
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut k = 0;
+    while k + 4 <= n {
+        // SAFETY: k + 3 < n = ri.len() = vals.len(); every ri entry is a
+        // valid x index (CSC invariant, debug-asserted by the caller).
+        unsafe {
+            a0 += x.get_unchecked(*ri.get_unchecked(k) as usize) * vals.get_unchecked(k);
+            a1 += x.get_unchecked(*ri.get_unchecked(k + 1) as usize)
+                * vals.get_unchecked(k + 1);
+            a2 += x.get_unchecked(*ri.get_unchecked(k + 2) as usize)
+                * vals.get_unchecked(k + 2);
+            a3 += x.get_unchecked(*ri.get_unchecked(k + 3) as usize)
+                * vals.get_unchecked(k + 3);
+        }
+        k += 4;
+    }
+    let mut tail = 0.0;
+    for kk in k..n {
+        tail += x[ri[kk] as usize] * vals[kk];
+    }
+    ((a0 + a2) + (a1 + a3)) + tail
+}
+
+#[cfg(feature = "simd")]
+fn gather_dot_simd(ri: &[u32], vals: &[f64], x: &[f64]) -> f64 {
+    use std::simd::prelude::*;
+    let n = ri.len();
+    let mut acc = f64x4::splat(0.0);
+    let mut k = 0;
+    while k + 4 <= n {
+        let v = f64x4::from_slice(&vals[k..k + 4]);
+        let g = f64x4::from_array([
+            x[ri[k] as usize],
+            x[ri[k + 1] as usize],
+            x[ri[k + 2] as usize],
+            x[ri[k + 3] as usize],
+        ]);
+        acc += g * v;
+        k += 4;
+    }
+    let mut tail = 0.0;
+    for kk in k..n {
+        tail += x[ri[kk] as usize] * vals[kk];
+    }
+    acc.reduce_sum() + tail
+}
+
+/// Indexed scatter axpy: `y[ri[k]] += a · vals[k]` (the
+/// [`CscMat::axpy_col`] / `matvec` shape). Always unrolled — a scatter's
+/// unroll reorders independent statements without reassociating any
+/// element's sum, so this is bitwise identical to the sequential loop.
+///
+/// Requires every `ri` entry to be a valid `y` index (the CSC row-bound
+/// invariant; debug-asserted).
+///
+/// [`CscMat::axpy_col`]: crate::data::CscMat::axpy_col
+#[inline]
+pub fn scatter_axpy(ri: &[u32], vals: &[f64], a: f64, y: &mut [f64]) {
+    debug_assert_eq!(ri.len(), vals.len());
+    debug_assert!(ri.iter().all(|&r| (r as usize) < y.len()));
+    let n = ri.len();
+    let mut k = 0;
+    while k + 4 <= n {
+        // SAFETY: k + 3 < n and every ri entry indexes into y (CSC row
+        // bound, debug-asserted above).
+        unsafe {
+            *y.get_unchecked_mut(*ri.get_unchecked(k) as usize) += a * vals.get_unchecked(k);
+            *y.get_unchecked_mut(*ri.get_unchecked(k + 1) as usize) +=
+                a * vals.get_unchecked(k + 1);
+            *y.get_unchecked_mut(*ri.get_unchecked(k + 2) as usize) +=
+                a * vals.get_unchecked(k + 2);
+            *y.get_unchecked_mut(*ri.get_unchecked(k + 3) as usize) +=
+                a * vals.get_unchecked(k + 3);
+        }
+        k += 4;
+    }
+    for kk in k..n {
+        y[ri[kk] as usize] += a * vals[kk];
+    }
+}
+
+/// f32 scatter axpy for the mixed-precision scoring path:
+/// `y[ri[k]] += a · (vals[k] as f32)` — matrix values narrow on the fly,
+/// the weight is already quantized. Same always-on unroll as
+/// [`scatter_axpy`], bitwise identical to the sequential f32 loop.
+#[inline]
+pub fn scatter_axpy_f32(ri: &[u32], vals: &[f64], a: f32, y: &mut [f32]) {
+    debug_assert_eq!(ri.len(), vals.len());
+    debug_assert!(ri.iter().all(|&r| (r as usize) < y.len()));
+    let n = ri.len();
+    let mut k = 0;
+    while k + 4 <= n {
+        // SAFETY: k + 3 < n and every ri entry indexes into y.
+        unsafe {
+            *y.get_unchecked_mut(*ri.get_unchecked(k) as usize) +=
+                a * (*vals.get_unchecked(k) as f32);
+            *y.get_unchecked_mut(*ri.get_unchecked(k + 1) as usize) +=
+                a * (*vals.get_unchecked(k + 1) as f32);
+            *y.get_unchecked_mut(*ri.get_unchecked(k + 2) as usize) +=
+                a * (*vals.get_unchecked(k + 2) as f32);
+            *y.get_unchecked_mut(*ri.get_unchecked(k + 3) as usize) +=
+                a * (*vals.get_unchecked(k + 3) as f32);
+        }
+        k += 4;
+    }
+    for kk in k..n {
+        y[ri[kk] as usize] += a * (vals[kk] as f32);
+    }
+}
+
+/// Fused gradient/Hessian gather over one column (the
+/// [`LossState::grad_hess_j`] shape, Eq. 12):
+/// `g = Σ gf[ri[k]]·vals[k]`, `h = Σ hf[ri[k]]·vals[k]·vals[k]`.
+///
+/// The Scalar arm reproduces the historical sequential fold bit for bit
+/// (including its `(hf[i] · v) · v` association).
+///
+/// [`LossState::grad_hess_j`]: crate::loss::LossState::grad_hess_j
+#[inline]
+pub fn gather_grad_hess(
+    mode: KernelMode,
+    ri: &[u32],
+    vals: &[f64],
+    gf: &[f64],
+    hf: &[f64],
+) -> (f64, f64) {
+    debug_assert_eq!(ri.len(), vals.len());
+    debug_assert_eq!(gf.len(), hf.len());
+    debug_assert!(ri.iter().all(|&r| (r as usize) < gf.len()));
+    match mode {
+        KernelMode::Scalar => {
+            let mut g = 0.0;
+            let mut h = 0.0;
+            for (r, v) in ri.iter().zip(vals) {
+                let i = *r as usize;
+                // SAFETY: CSC row ids are < rows = gf.len() = hf.len()
+                // (debug-asserted above).
+                unsafe {
+                    g += gf.get_unchecked(i) * v;
+                    h += hf.get_unchecked(i) * v * v;
+                }
+            }
+            (g, h)
+        }
+        KernelMode::Reassoc => {
+            #[cfg(feature = "simd")]
+            {
+                gather_grad_hess_simd(ri, vals, gf, hf)
+            }
+            #[cfg(not(feature = "simd"))]
+            {
+                gather_grad_hess_unrolled(ri, vals, gf, hf)
+            }
+        }
+    }
+}
+
+#[cfg_attr(feature = "simd", allow(dead_code))]
+fn gather_grad_hess_unrolled(ri: &[u32], vals: &[f64], gf: &[f64], hf: &[f64]) -> (f64, f64) {
+    let n = ri.len();
+    let (mut g0, mut g1, mut g2, mut g3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let (mut h0, mut h1, mut h2, mut h3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut k = 0;
+    while k + 4 <= n {
+        // SAFETY: k + 3 < n; ri entries index gf/hf (CSC row bound).
+        unsafe {
+            let (i0, v0) = (*ri.get_unchecked(k) as usize, *vals.get_unchecked(k));
+            let (i1, v1) = (*ri.get_unchecked(k + 1) as usize, *vals.get_unchecked(k + 1));
+            let (i2, v2) = (*ri.get_unchecked(k + 2) as usize, *vals.get_unchecked(k + 2));
+            let (i3, v3) = (*ri.get_unchecked(k + 3) as usize, *vals.get_unchecked(k + 3));
+            g0 += gf.get_unchecked(i0) * v0;
+            g1 += gf.get_unchecked(i1) * v1;
+            g2 += gf.get_unchecked(i2) * v2;
+            g3 += gf.get_unchecked(i3) * v3;
+            h0 += hf.get_unchecked(i0) * v0 * v0;
+            h1 += hf.get_unchecked(i1) * v1 * v1;
+            h2 += hf.get_unchecked(i2) * v2 * v2;
+            h3 += hf.get_unchecked(i3) * v3 * v3;
+        }
+        k += 4;
+    }
+    let (mut gt, mut ht) = (0.0f64, 0.0f64);
+    for kk in k..n {
+        let i = ri[kk] as usize;
+        let v = vals[kk];
+        gt += gf[i] * v;
+        ht += hf[i] * v * v;
+    }
+    (
+        ((g0 + g2) + (g1 + g3)) + gt,
+        ((h0 + h2) + (h1 + h3)) + ht,
+    )
+}
+
+#[cfg(feature = "simd")]
+fn gather_grad_hess_simd(ri: &[u32], vals: &[f64], gf: &[f64], hf: &[f64]) -> (f64, f64) {
+    use std::simd::prelude::*;
+    let n = ri.len();
+    let mut g = f64x4::splat(0.0);
+    let mut h = f64x4::splat(0.0);
+    let mut k = 0;
+    while k + 4 <= n {
+        let v = f64x4::from_slice(&vals[k..k + 4]);
+        let (i0, i1, i2, i3) = (
+            ri[k] as usize,
+            ri[k + 1] as usize,
+            ri[k + 2] as usize,
+            ri[k + 3] as usize,
+        );
+        let gv = f64x4::from_array([gf[i0], gf[i1], gf[i2], gf[i3]]);
+        let hv = f64x4::from_array([hf[i0], hf[i1], hf[i2], hf[i3]]);
+        g += gv * v;
+        h += hv * v * v;
+        k += 4;
+    }
+    let (mut gt, mut ht) = (0.0f64, 0.0f64);
+    for kk in k..n {
+        let i = ri[kk] as usize;
+        let v = vals[kk];
+        gt += gf[i] * v;
+        ht += hf[i] * v * v;
+    }
+    (g.reduce_sum() + gt, h.reduce_sum() + ht)
+}
+
+/// Probe-fold reduction: `Σ_{k<n} f(k)`, the shape of every
+/// `LossState::delta_loss` Armijo probe. The per-element term is a
+/// closure (it differs per loss — `log1p_exp` margins, hinge squares,
+/// residual squares), so only the *fold* dispatches:
+/// [`KernelMode::Scalar`] is the strict sequential sum the probes have
+/// always used, [`KernelMode::Reassoc`] splits it across 4 independent
+/// accumulators.
+#[inline]
+pub fn sum_with(mode: KernelMode, n: usize, f: impl Fn(usize) -> f64) -> f64 {
+    match mode {
+        KernelMode::Scalar => {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += f(k);
+            }
+            acc
+        }
+        KernelMode::Reassoc => {
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            let mut k = 0;
+            while k + 4 <= n {
+                a0 += f(k);
+                a1 += f(k + 1);
+                a2 += f(k + 2);
+                a3 += f(k + 3);
+                k += 4;
+            }
+            let mut tail = 0.0;
+            for kk in k..n {
+                tail += f(kk);
+            }
+            ((a0 + a2) + (a1 + a3)) + tail
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// A deterministic sparse-column fixture: `len` strictly increasing
+    /// row ids below `rows`, matching values, and a dense vector.
+    fn fixture(len: usize, rows: usize, seed: u64) -> (Vec<u32>, Vec<f64>, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let mut ids: Vec<u32> = rng
+            .sample_indices(rows, len.min(rows))
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        ids.sort_unstable();
+        let vals: Vec<f64> = ids.iter().map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        (ids, vals, x)
+    }
+
+    fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn gather_dot_scalar_is_the_sequential_fold() {
+        for len in [0usize, 1, 3, 4, 5, 7, 8, 9, 33] {
+            let (ri, vals, x) = fixture(len, 64, len as u64 + 1);
+            let mut want = 0.0;
+            for (r, v) in ri.iter().zip(&vals) {
+                want += x[*r as usize] * v;
+            }
+            let got = gather_dot(KernelMode::Scalar, &ri, &vals, &x);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn gather_dot_reassoc_within_tolerance() {
+        for len in [0usize, 1, 4, 5, 9, 33, 200] {
+            let (ri, vals, x) = fixture(len, 256, len as u64 + 11);
+            let scalar = gather_dot(KernelMode::Scalar, &ri, &vals, &x);
+            let fast = gather_dot(KernelMode::Reassoc, &ri, &vals, &x);
+            assert!(
+                rel_close(scalar, fast, 1e-10),
+                "len {len}: {scalar} vs {fast}"
+            );
+        }
+    }
+
+    #[test]
+    fn scatter_axpy_bitwise_equals_sequential() {
+        for len in [0usize, 1, 3, 4, 5, 8, 9, 33] {
+            let (ri, vals, x) = fixture(len, 64, len as u64 + 21);
+            let mut want = x.clone();
+            for (r, v) in ri.iter().zip(&vals) {
+                want[*r as usize] += 1.75 * v;
+            }
+            let mut got = x.clone();
+            scatter_axpy(&ri, &vals, 1.75, &mut got);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_axpy_f32_bitwise_equals_sequential() {
+        for len in [0usize, 1, 4, 5, 9, 33] {
+            let (ri, vals, _) = fixture(len, 64, len as u64 + 31);
+            let mut want = vec![0.0f32; 64];
+            for (r, v) in ri.iter().zip(&vals) {
+                want[*r as usize] += 0.5f32 * (*v as f32);
+            }
+            let mut got = vec![0.0f32; 64];
+            scatter_axpy_f32(&ri, &vals, 0.5, &mut got);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_grad_hess_scalar_is_the_sequential_fold() {
+        for len in [0usize, 1, 4, 5, 9, 33] {
+            let (ri, vals, gf) = fixture(len, 64, len as u64 + 41);
+            let hf: Vec<f64> = gf.iter().map(|v| v.abs() + 0.25).collect();
+            let (mut wg, mut wh) = (0.0f64, 0.0f64);
+            for (r, v) in ri.iter().zip(&vals) {
+                let i = *r as usize;
+                wg += gf[i] * v;
+                wh += hf[i] * v * v;
+            }
+            let (g, h) = gather_grad_hess(KernelMode::Scalar, &ri, &vals, &gf, &hf);
+            assert_eq!(g.to_bits(), wg.to_bits(), "g len {len}");
+            assert_eq!(h.to_bits(), wh.to_bits(), "h len {len}");
+        }
+    }
+
+    #[test]
+    fn gather_grad_hess_reassoc_within_tolerance() {
+        for len in [0usize, 1, 4, 5, 9, 33, 200] {
+            let (ri, vals, gf) = fixture(len, 256, len as u64 + 51);
+            let hf: Vec<f64> = gf.iter().map(|v| v.abs() + 0.25).collect();
+            let (gs, hs) = gather_grad_hess(KernelMode::Scalar, &ri, &vals, &gf, &hf);
+            let (gr, hr) = gather_grad_hess(KernelMode::Reassoc, &ri, &vals, &gf, &hf);
+            assert!(rel_close(gs, gr, 1e-10), "g len {len}: {gs} vs {gr}");
+            assert!(rel_close(hs, hr, 1e-10), "h len {len}: {hs} vs {hr}");
+        }
+    }
+
+    #[test]
+    fn sum_with_scalar_is_sequential_and_reassoc_close() {
+        let mut rng = Pcg64::new(61);
+        let terms: Vec<f64> = (0..137).map(|_| rng.normal()).collect();
+        for n in [0usize, 1, 4, 5, 9, 137] {
+            let mut want = 0.0;
+            for t in &terms[..n] {
+                want += *t;
+            }
+            let scalar = sum_with(KernelMode::Scalar, n, |k| terms[k]);
+            assert_eq!(scalar.to_bits(), want.to_bits(), "n {n}");
+            let fast = sum_with(KernelMode::Reassoc, n, |k| terms[k]);
+            assert!(rel_close(scalar, fast, 1e-10), "n {n}: {scalar} vs {fast}");
+        }
+    }
+
+    #[test]
+    fn from_fast_math_maps_flag_to_mode() {
+        assert_eq!(KernelMode::from_fast_math(false), KernelMode::Scalar);
+        assert_eq!(KernelMode::from_fast_math(true), KernelMode::Reassoc);
+        assert_eq!(KernelMode::default(), KernelMode::Scalar);
+    }
+}

@@ -1,5 +1,6 @@
 //! Small dense linear-algebra helpers used on solver hot paths.
 
+pub mod kernels;
 pub mod power;
 
 /// 1-norm `‖v‖₁`.

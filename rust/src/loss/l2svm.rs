@@ -12,11 +12,15 @@
 //! feature `j`; the floor is applied centrally in `LossState::grad_hess_j`.
 
 use crate::data::Dataset;
+use crate::linalg::kernels::{self, KernelMode};
 use crate::parallel::pool::{SendPtr, WorkerPool};
 
 pub struct L2SvmState<'a> {
     pub data: &'a Dataset,
     pub c: f64,
+    /// Kernel dispatch for the hot reductions (`LossState::set_fast_math`);
+    /// Scalar — the bitwise-deterministic fold — is the default.
+    pub mode: KernelMode,
     /// Maintained `b_i = 1 − y_i wᵀx_i`.
     pub b: Vec<f64>,
     /// `−2·y_i·max(b_i, 0)`.
@@ -44,6 +48,7 @@ impl<'a> L2SvmState<'a> {
         let mut st = L2SvmState {
             data,
             c,
+            mode: KernelMode::Scalar,
             b: vec![1.0; s],
             grad_factor: vec![0.0; s],
             hess_factor: vec![0.0; s],
@@ -74,15 +79,16 @@ impl<'a> L2SvmState<'a> {
     /// `L(w + αd) − L(w)` on touched samples: `b_i` moves by `−y_i·α·dx_i`.
     pub fn delta_loss(&self, touched: &[u32], dx: &[f64], alpha: f64) -> f64 {
         debug_assert_eq!(touched.len(), dx.len());
-        let mut acc = 0.0;
-        for (&i, &dxi) in touched.iter().zip(dx) {
-            let i = i as usize;
+        // Fold dispatched through `sum_with`: Scalar is the historical
+        // sequential probe bit for bit, Reassoc is the fast_math opt-in.
+        let acc = kernels::sum_with(self.mode, touched.len(), |k| {
+            let i = touched[k] as usize;
             let old = self.b[i];
-            let new = old - self.data.y[i] * alpha * dxi;
+            let new = old - self.data.y[i] * alpha * dx[k];
             let o2 = if old > 0.0 { old * old } else { 0.0 };
             let n2 = if new > 0.0 { new * new } else { 0.0 };
-            acc += n2 - o2;
-        }
+            n2 - o2
+        });
         self.c * acc
     }
 

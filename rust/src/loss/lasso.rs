@@ -14,11 +14,15 @@
 //! clean setting for observing the paper's `E[q_t]` vs `P` behaviour.
 
 use crate::data::Dataset;
+use crate::linalg::kernels::{self, KernelMode};
 use crate::parallel::pool::{SendPtr, WorkerPool};
 
 pub struct LassoState<'a> {
     pub data: &'a Dataset,
     pub c: f64,
+    /// Kernel dispatch for the hot reductions (`LossState::set_fast_math`);
+    /// Scalar — the bitwise-deterministic fold — is the default.
+    pub mode: KernelMode,
     /// Maintained residuals `r_i = wᵀx_i − y_i`.
     pub r: Vec<f64>,
     /// `2·r_i`.
@@ -43,6 +47,7 @@ impl<'a> LassoState<'a> {
         LassoState {
             data,
             c,
+            mode: KernelMode::Scalar,
             r,
             grad_factor,
             hess_factor: vec![2.0; s],
@@ -57,12 +62,13 @@ impl<'a> LassoState<'a> {
     /// `L(w + αd) − L(w) = c·Σ_touched [(r + α·dx)² − r²]`.
     pub fn delta_loss(&self, touched: &[u32], dx: &[f64], alpha: f64) -> f64 {
         debug_assert_eq!(touched.len(), dx.len());
-        let mut acc = 0.0;
-        for (&i, &dxi) in touched.iter().zip(dx) {
-            let r = self.r[i as usize];
-            let n = r + alpha * dxi;
-            acc += n * n - r * r;
-        }
+        // Fold dispatched through `sum_with`: Scalar is the historical
+        // sequential probe bit for bit, Reassoc is the fast_math opt-in.
+        let acc = kernels::sum_with(self.mode, touched.len(), |k| {
+            let r = self.r[touched[k] as usize];
+            let n = r + alpha * dx[k];
+            n * n - r * r
+        });
         self.c * acc
     }
 

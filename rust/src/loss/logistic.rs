@@ -12,11 +12,15 @@
 //! feature column.
 
 use crate::data::Dataset;
+use crate::linalg::kernels::{self, KernelMode};
 use crate::parallel::pool::{SendPtr, WorkerPool};
 
 pub struct LogisticState<'a> {
     pub data: &'a Dataset,
     pub c: f64,
+    /// Kernel dispatch for the hot reductions (`LossState::set_fast_math`);
+    /// Scalar — the bitwise-deterministic fold — is the default.
+    pub mode: KernelMode,
     /// Maintained margins `wᵀx_i`.
     pub wx: Vec<f64>,
     /// `(τ(y_i wᵀx_i) − 1)·y_i` — multiply by `c·x_ij` and sum for `∇_j L`.
@@ -76,6 +80,7 @@ impl<'a> LogisticState<'a> {
         let mut st = LogisticState {
             data,
             c,
+            mode: KernelMode::Scalar,
             wx: vec![0.0; s],
             grad_factor: vec![0.0; s],
             hess_factor: vec![0.0; s],
@@ -106,21 +111,23 @@ impl<'a> LogisticState<'a> {
     /// the current loss comes from the `sp_loss` cache.
     pub fn delta_loss(&self, touched: &[u32], dx: &[f64], alpha: f64) -> f64 {
         debug_assert_eq!(touched.len(), dx.len());
-        let mut acc = 0.0;
-        for (&i, &dxi) in touched.iter().zip(dx) {
-            let i = i as usize;
-            debug_assert!(i < self.wx.len());
-            // SAFETY: touched indices come from CSC row ids < samples.
-            let (y, wx, sp) = unsafe {
-                (
-                    *self.data.y.get_unchecked(i),
-                    *self.wx.get_unchecked(i),
-                    *self.sp_loss.get_unchecked(i),
-                )
-            };
-            let new = -y * (wx + alpha * dxi);
-            acc += log1p_exp(new) - sp;
-        }
+        // The per-term arithmetic is fixed; only the fold dispatches
+        // (`sum_with`): Scalar is the historical sequential probe bit for
+        // bit, Reassoc splits the accumulator (fast_math opt-in).
+        let acc = kernels::sum_with(self.mode, touched.len(), |k| {
+            // SAFETY: k < touched.len() == dx.len(); touched indices come
+            // from CSC row ids < samples.
+            unsafe {
+                let i = *touched.get_unchecked(k) as usize;
+                debug_assert!(i < self.wx.len());
+                let dxi = *dx.get_unchecked(k);
+                let y = *self.data.y.get_unchecked(i);
+                let wx = *self.wx.get_unchecked(i);
+                let sp = *self.sp_loss.get_unchecked(i);
+                let new = -y * (wx + alpha * dxi);
+                log1p_exp(new) - sp
+            }
+        });
         self.c * acc
     }
 

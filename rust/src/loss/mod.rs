@@ -29,6 +29,7 @@ pub mod lasso;
 pub mod logistic;
 
 use crate::data::Dataset;
+use crate::linalg::kernels::{self, KernelMode};
 use crate::parallel::pool::WorkerPool;
 
 /// Which ℓ1-regularized objective to minimize (paper Eq. 1–3).
@@ -72,6 +73,31 @@ impl<'a> LossState<'a> {
             Objective::Logistic => LossState::Logistic(logistic::LogisticState::new(data, c)),
             Objective::L2Svm => LossState::L2Svm(l2svm::L2SvmState::new(data, c)),
             Objective::Lasso => LossState::Lasso(lasso::LassoState::new(data, c)),
+        }
+    }
+
+    /// Opt in to the reassociating (`fast_math`) kernels for this state's
+    /// hot reductions (`grad_hess_j`, the `delta_loss` probes). Off — the
+    /// strict sequential fold — is the default and the bitwise
+    /// conformance reference; on is conformance-tested to ≤ 1e-10
+    /// relative (see `linalg::kernels`). Orthogonal to the maintained
+    /// values, so it survives `reset_from` / `restore_maintained`.
+    pub fn set_fast_math(&mut self, on: bool) {
+        let mode = KernelMode::from_fast_math(on);
+        match self {
+            LossState::Logistic(s) => s.mode = mode,
+            LossState::L2Svm(s) => s.mode = mode,
+            LossState::Lasso(s) => s.mode = mode,
+        }
+    }
+
+    /// The kernel dispatch mode of this state's reductions.
+    #[inline]
+    pub fn kernel_mode(&self) -> KernelMode {
+        match self {
+            LossState::Logistic(s) => s.mode,
+            LossState::L2Svm(s) => s.mode,
+            LossState::Lasso(s) => s.mode,
         }
     }
 
@@ -137,22 +163,12 @@ impl<'a> LossState<'a> {
         let (ri, vals) = data.x.col(j);
         let gf = self.grad_factors();
         let hf = self.hess_factors();
-        let mut g = 0.0;
-        let mut h = 0.0;
         // §Perf: the hottest loop in the solver family (one gather pair per
-        // nonzero). Row indices are validated at matrix construction, so
-        // unchecked gathers are sound; this removed the bounds checks that
-        // dominated the per-nnz cost.
-        for (r, v) in ri.iter().zip(vals) {
-            let i = *r as usize;
-            debug_assert!(i < gf.len());
-            // SAFETY: CSC row indices are < rows == gf.len() == hf.len(),
-            // enforced by CscMat::from_triplets / libsvm::read.
-            unsafe {
-                g += gf.get_unchecked(i) * v;
-                h += hf.get_unchecked(i) * v * v;
-            }
-        }
+        // nonzero), dispatched through `linalg::kernels`. Scalar mode is the
+        // historical sequential fold bit for bit; Reassoc (`fast_math`) is
+        // the unrolled/`std::simd` variant. Row indices are validated at
+        // matrix construction, so the kernel's unchecked gathers are sound.
+        let (g, h) = kernels::gather_grad_hess(self.kernel_mode(), ri, vals, gf, hf);
         let c = self.c();
         (c * g, (c * h).max(crate::loss::NU))
     }

@@ -43,6 +43,7 @@ impl Solver for Cdn {
         let n = data.features();
         opts.check_mask(n);
         let mut state = LossState::new(obj, data, opts.c);
+        state.set_fast_math(opts.fast_math);
         let mut w = vec![0.0f64; n];
         if let Some(w0) = &opts.warm_start {
             assert_eq!(w0.len(), n, "warm_start length mismatch");

@@ -104,6 +104,12 @@ where
         }
         alpha *= params.beta;
     }
+    // Exhaustion contract: `alpha = 0.0` together with `accepted = false`
+    // means "no step" — never a usable step size. Every call site must gate
+    // its commit on this pair (audited): PCDN commits only when
+    // `accepted && alpha > 0.0`, CDN skips the coordinate when `!accepted`,
+    // SCDN's round mode drops zero steps and its atomic mode gates on
+    // `accepted`. Shotgun performs no line search.
     LineSearchOutcome {
         alpha: 0.0,
         steps: params.max_steps,
@@ -867,6 +873,40 @@ mod tests {
         );
         let serial_probe = state.delta_loss(&touched, &dx, serial.alpha);
         assert_close(pooled_probe, serial_probe, 1e-12);
+    }
+
+    #[test]
+    fn exhausted_search_reports_no_step() {
+        // The documented failure shape: when every probe fails the Armijo
+        // test, the search must report `{ accepted: false, alpha: 0.0,
+        // steps: max_steps }` — callers key their "skip the commit" path
+        // off exactly this triple, so pin it here.
+        let params = ArmijoParams {
+            max_steps: 7,
+            ..Default::default()
+        };
+        // A probe that always claims the objective went *up*: with
+        // Δ = −1.0 the acceptance RHS σ·α·Δ is negative at every α, so
+        // a constant positive loss delta can never pass.
+        let out = backtrack(&[], &[], -1.0, &params, 0.0, |_alpha| 1.0);
+        assert!(!out.accepted);
+        assert_eq!(out.alpha, 0.0, "failed search must not leak a step size");
+        assert_eq!(out.steps, params.max_steps, "must probe exactly max_steps times");
+
+        // Degenerate cap: max_steps = 0 exhausts without a single probe.
+        let none = ArmijoParams {
+            max_steps: 0,
+            ..Default::default()
+        };
+        let mut probes = 0usize;
+        let out0 = backtrack(&[], &[], -1.0, &none, 0.0, |_alpha| {
+            probes += 1;
+            1.0
+        });
+        assert!(!out0.accepted);
+        assert_eq!(out0.alpha, 0.0);
+        assert_eq!(out0.steps, 0);
+        assert_eq!(probes, 0, "max_steps = 0 must not evaluate the probe");
     }
 
     #[test]

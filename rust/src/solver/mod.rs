@@ -124,6 +124,19 @@ pub struct TrainOptions {
     /// line-searched inner step from PCDN/CDN/SCDN. `None` (the default)
     /// costs one branch per step.
     pub probe: Option<ProbeHandle>,
+    /// Opt in to the reassociating (`fast_math`) kernels for the loss
+    /// state's hot reductions — `grad_hess_j` gathers and `delta_loss`
+    /// Armijo probes dispatch to the 4-wide unrolled (or, under the
+    /// `simd` cargo feature, `std::simd`) fold instead of the strict
+    /// sequential one. `false` (the default) keeps the
+    /// bitwise-deterministic scalar fold that every replay and
+    /// conformance guarantee is stated against; `true` trades that for
+    /// throughput, with results conformance-tested to ≤ 1e-10 relative
+    /// (see `linalg::kernels`). Not persisted in checkpoints: a resumed
+    /// run uses whatever the caller sets here, and only `false` resumes
+    /// are bitwise-reproducible. Honored by PCDN/CDN/SCDN(round)/Shotgun;
+    /// TRON and the SCDN atomic mode keep their own folds.
+    pub fast_math: bool,
     /// Continue from a [`Checkpoint`] instead of starting fresh: restores
     /// `(w, maintained state, RNG, counters, solver extras)` so the run
     /// is bitwise identical to one that was never interrupted — the
@@ -155,6 +168,7 @@ impl Default for TrainOptions {
             feature_mask: None,
             pool: None,
             probe: None,
+            fast_math: false,
             resume: None,
         }
     }

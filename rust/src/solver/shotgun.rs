@@ -80,6 +80,7 @@ fn train_shotgun(
     opts.check_mask(n);
     let p = opts.bundle_size.clamp(1, n);
     let mut state = LossState::new(obj, data, opts.c);
+    state.set_fast_math(opts.fast_math);
     let mut w = vec![0.0f64; n];
     let mut rng = Pcg64::new(opts.seed);
     let mut monitor = RunMonitor::new();

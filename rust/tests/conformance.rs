@@ -657,6 +657,165 @@ fn pjrt_dense_trainer_conforms_when_artifacts_present() {
     }
 }
 
+// ====================================================================
+// Hot-kernel equivalence battery (`linalg::kernels`)
+// ====================================================================
+//
+// Contract under test (see the `linalg::kernels` module docs): the
+// default `KernelMode::Scalar` fold is the conformance reference and is
+// bitwise reproducible; the opt-in reassociating kernels (`fast_math`)
+// stay within 1e-10 relative of it per kernel invocation; the f32
+// scoring path stays within 1e-6 relative of the f64 scorer.
+
+/// Per-kernel agreement: on identical states, the fast-math fused
+/// gradient/Hessian gather and the Armijo probe reduction must stay
+/// within 1e-10 relative of the default scalar fold — for every loss.
+#[test]
+fn fast_math_kernels_match_scalar_fold_within_1e10() {
+    use pcdn::loss::LossState;
+    run_prop("fast-math kernels vs scalar fold", 64, |g: &mut Gen| {
+        let d = gen_dataset(g, true);
+        let obj = pick_obj(g);
+        let c = g.f64_in(0.05..3.0);
+        let w: Vec<f64> = (0..d.features())
+            .map(|_| if g.bool() { g.f64_in(-0.7..0.7) } else { 0.0 })
+            .collect();
+        let mut scalar = LossState::new(obj, &d, c);
+        scalar.reset_from(&w);
+        let mut fast = LossState::new(obj, &d, c);
+        fast.set_fast_math(true);
+        fast.reset_from(&w);
+        // Fused direction pass: ∇_j / ∇²_jj over every feature.
+        for j in 0..d.features() {
+            let (gs, hs) = scalar.grad_hess_j(j);
+            let (gf, hf) = fast.grad_hess_j(j);
+            prop_close(gs, gf, 1e-10, &format!("{obj:?} grad j={j}"))?;
+            prop_close(hs, hf, 1e-10, &format!("{obj:?} hess j={j}"))?;
+        }
+        // Armijo probe reduction over a random touched set.
+        let n = g.usize_in(1..d.samples() + 1);
+        let touched: Vec<u32> = g
+            .rng()
+            .sample_indices(d.samples(), n)
+            .iter()
+            .map(|&i| i as u32)
+            .collect();
+        let dx: Vec<f64> = (0..touched.len()).map(|_| g.f64_in(-0.3..0.3)).collect();
+        let alpha = g.f64_in(0.1..1.0);
+        prop_close(
+            scalar.delta_loss(&touched, &dx, alpha),
+            fast.delta_loss(&touched, &dx, alpha),
+            1e-10,
+            &format!("{obj:?} delta_loss probe"),
+        )
+    });
+}
+
+/// The default build's determinism contract survives the kernel
+/// dispatch: a default-mode fit is bitwise identical across thread
+/// counts (weights and final objective).
+#[test]
+fn default_kernel_fit_is_bitwise_thread_invariant() {
+    run_prop("default kernels bitwise across thread counts", 24, |g: &mut Gen| {
+        let d = gen_dataset(g, true);
+        let cfg = gen_cfg(g, d.features());
+        let run = |threads: usize| {
+            let opts = pcdn::api::Fit::spec()
+                .c(cfg.c)
+                .solver(pcdn::api::Pcdn { p: cfg.p })
+                .threads(threads)
+                .stop(StopRule::MaxOuter(40))
+                .max_outer(40)
+                .options()
+                .expect("valid case options");
+            Pcdn::new().train(&d, cfg.obj, &opts)
+        };
+        let a = run(1);
+        let b = run(3);
+        prop_assert(
+            a.final_objective.to_bits() == b.final_objective.to_bits(),
+            &format!(
+                "final objective diverged across thread counts: {} vs {}",
+                a.final_objective, b.final_objective
+            ),
+        )?;
+        for (j, (x, y)) in a.w.iter().zip(&b.w).enumerate() {
+            prop_assert(
+                x.to_bits() == y.to_bits(),
+                &format!("w[{j}] diverged bitwise: {x} vs {y}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end: a fast-math fit is a different but equally valid
+/// trajectory — it must still converge, pass the dense KKT residual,
+/// and land on the same optimum as the default fit (inter-solver
+/// tolerance; per-kernel agreement is the 1e-10 test above).
+#[test]
+fn fast_math_fit_lands_on_the_same_optimum() {
+    run_prop("fast-math fit vs default fit", 24, |g: &mut Gen| {
+        let d = gen_dataset(g, false);
+        let mut cfg = gen_cfg(g, d.features());
+        cfg.c = g.f64_in(0.05..1.5);
+        let run = |fm: bool| {
+            let opts = pcdn::api::Fit::spec()
+                .c(cfg.c)
+                .solver(pcdn::api::Pcdn { p: cfg.p })
+                .threads(cfg.threads)
+                .fast_math(fm)
+                .stop(StopRule::SubgradRel(1e-6))
+                .max_outer(5000)
+                .options()
+                .expect("valid case options");
+            Pcdn::new().train(&d, cfg.obj, &opts)
+        };
+        let base = run(false);
+        let fast = run(true);
+        prop_assert(base.converged, "default fit did not converge")?;
+        prop_assert(fast.converged, "fast-math fit did not converge")?;
+        let rel = kkt::kkt_rel(&d, cfg.obj, cfg.c, &fast.w, 0.0);
+        prop_assert(
+            rel <= 1e-5,
+            &format!("fast-math KKT residual rel {rel:.3e} > 1e-5 for {cfg:?}"),
+        )?;
+        prop_close(
+            base.final_objective,
+            fast.final_objective,
+            1e-6,
+            "fast-math vs default final objective",
+        )
+    });
+}
+
+/// The f32 serving path against the f64 reference scorer, on random
+/// sparse batches: within 1e-6 relative (1e-6 absolute floor near 0),
+/// per the tolerance policy documented on `api::Precision::F32`.
+#[test]
+fn f32_scoring_path_tracks_f64_within_1e6() {
+    use pcdn::api::{Precision, Scorer};
+    use pcdn::testutil::tiny_model;
+    run_prop("f32 scorer vs f64 scorer", 32, |g: &mut Gen| {
+        let d = gen_dataset(g, false);
+        let model = Arc::new(tiny_model(d.features()));
+        let reference = Scorer::for_model(&model).build().unwrap();
+        let quantized = Scorer::for_model(&model)
+            .precision(Precision::F32)
+            .build()
+            .unwrap();
+        let want = reference.decision_values(&d.x).unwrap();
+        let got = quantized.decision_values(&d.x).unwrap();
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            prop_assert(
+                (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                &format!("row {i}: f32 decision value {a} vs f64 {b}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
 /// SCDN atomic mode (real racing threads) also reports outer trajectories
 /// through the probe, from its snapshot loop.
 #[test]

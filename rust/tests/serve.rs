@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use pcdn::api::{Model, Scorer};
+use pcdn::api::{Model, Precision, Scorer};
 use pcdn::data::CscMat;
 use pcdn::parallel::pool::WorkerPool;
 use pcdn::serve::protocol::{self, SparseRow};
@@ -408,6 +408,57 @@ fn keep_alive_client_reuses_one_connection() {
         "keep-alive client should reuse a single connection across requests"
     );
     shutdown_via_http(&addr, &server);
+}
+
+#[test]
+fn f32_scorer_tracks_f64_within_documented_tolerance() {
+    // Tolerance policy (see `api::Precision::F32` docs): each decision
+    // value from the f32 scoring path must satisfy
+    // |z32 − z| ≤ 1e-6 · max(1, |z|) against the f64 reference scorer.
+    // Both the serial path and the pooled path must hold it.
+    let width = 24;
+    let model = Arc::new(tiny_model(width));
+    let reference = Scorer::for_model(&model).build().unwrap();
+    let serial32 = Scorer::for_model(&model)
+        .precision(Precision::F32)
+        .build()
+        .unwrap();
+    let pooled32 = Scorer::for_model(&model)
+        .precision(Precision::F32)
+        .threads(4)
+        .build()
+        .unwrap();
+
+    for seed in 0..3u64 {
+        // Enough rows that the pooled scorer actually shards the batch.
+        let rows = rows_of(width, seed, 300);
+        let x = rows_to_csc(&rows, width);
+        let want = reference.decision_values(&x).unwrap();
+        for (label, scorer) in [("serial", &serial32), ("pooled", &pooled32)] {
+            let got = scorer.decision_values(&x).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (i, (z32, z)) in got.iter().zip(&want).enumerate() {
+                let tol = 1e-6 * z.abs().max(1.0);
+                assert!(
+                    (z32 - z).abs() <= tol,
+                    "{label} f32 scorer, seed {seed}, row {i}: |{z32} - {z}| > {tol}"
+                );
+            }
+        }
+    }
+
+    // Explicit F64 precision is the default: bitwise identical output.
+    let explicit64 = Scorer::for_model(&model)
+        .precision(Precision::F64)
+        .build()
+        .unwrap();
+    let rows = rows_of(width, 9, 40);
+    let x = rows_to_csc(&rows, width);
+    let a = reference.decision_values(&x).unwrap();
+    let b = explicit64.decision_values(&x).unwrap();
+    for (p, q) in a.iter().zip(&b) {
+        assert_eq!(p.to_bits(), q.to_bits());
+    }
 }
 
 #[test]
