@@ -130,6 +130,10 @@ fn main() {
         bench_kernels();
         return;
     }
+    if std::env::var("PCDN_BENCH").as_deref() == Ok("store") {
+        bench_store();
+        return;
+    }
     let d = realsim_like();
     let nnz = d.x.nnz();
     println!(
@@ -866,6 +870,101 @@ fn bench_kernels() {
         Ok(()) => println!("wrote BENCH_kernels.json"),
         Err(e) => println!("could not write BENCH_kernels.json: {e}"),
     }
+}
+
+/// Out-of-core column throughput (emits BENCH_store.json;
+/// `PCDN_BENCH=store` runs just this section): full column sweeps over a
+/// `PCDNCOL1` block store, cold (cache dropped before every sweep, so
+/// each block pays a read + decode) vs cached (every block resident, so
+/// a sweep is pure cache lookups). The gated number is `cached_speedup`
+/// = cold/cached sweep time — the factor the bounded LRU cache is worth
+/// on a fully-resident working set, which `bench_check --metric store`
+/// regresses against the CI artifact trajectory.
+fn bench_store() {
+    use pcdn::store::{open_dataset, write_store, StoreOptions};
+    println!();
+    let d = generate(
+        &SyntheticSpec {
+            samples: 50_000,
+            features: 2048,
+            nnz_per_row: 24,
+            scale_sigma: 0.8,
+            ..Default::default()
+        },
+        17,
+    );
+    let dir = std::env::temp_dir().join("pcdn_bench_store");
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    let path = dir.join("bench.pcdncol");
+    let block = 256;
+    let meta = write_store(&d, &path, block).expect("write bench store");
+    println!(
+        "store dataset: {} × {}, nnz = {}, {} blocks of {block} (single core)",
+        d.samples(),
+        d.features(),
+        d.nnz(),
+        meta.n_blocks
+    );
+
+    // Cache wide enough for the whole file; prefetch off so every read
+    // is a demand read and the cold timing is honest.
+    let ds = open_dataset(
+        &path,
+        &StoreOptions {
+            cache_blocks: meta.n_blocks.max(1),
+            prefetch: false,
+        },
+    )
+    .expect("open bench store");
+    let store = ds.store.as_ref().expect("store-backed");
+    let n = ds.features();
+    let sweep = |ds: &Dataset| {
+        let mut acc = 0.0;
+        for j in 0..n {
+            let c = ds.col(j);
+            let (_, vals) = c.parts();
+            acc += vals.first().copied().unwrap_or(0.0);
+        }
+        acc
+    };
+
+    let (cold, _, _) = measure(2, 9, || {
+        store.drop_cache();
+        black_box(sweep(&ds))
+    });
+    // Warm pass, then measure pure cache hits.
+    black_box(sweep(&ds));
+    let (cached, _, _) = measure(2, 9, || black_box(sweep(&ds)));
+    let speedup = cold / cached.max(1e-12);
+    let cold_cps = n as f64 / cold.max(1e-12);
+    let cached_cps = n as f64 / cached.max(1e-12);
+    println!(
+        "store sweep    cold {:>10}  cached {:>10}  speedup {speedup:>6.2}x  \
+         ({:.0} vs {:.0} cols/s)",
+        fmt_secs(cold),
+        fmt_secs(cached),
+        cold_cps,
+        cached_cps
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("store".into())),
+        ("samples", Json::Num(d.samples() as f64)),
+        ("features", Json::Num(n as f64)),
+        ("nnz", Json::Num(d.nnz() as f64)),
+        ("block_size", Json::Num(block as f64)),
+        ("n_blocks", Json::Num(meta.n_blocks as f64)),
+        ("cold_secs", Json::Num(cold)),
+        ("cached_secs", Json::Num(cached)),
+        ("cold_cols_per_sec", Json::Num(cold_cps)),
+        ("cached_cols_per_sec", Json::Num(cached_cps)),
+        ("cached_speedup", Json::Num(speedup)),
+    ]);
+    match std::fs::write("BENCH_store.json", doc.pretty()) {
+        Ok(()) => println!("wrote BENCH_store.json"),
+        Err(e) => println!("could not write BENCH_store.json: {e}"),
+    }
+    std::fs::remove_file(&path).ok();
 }
 
 /// Serving latency and throughput: a live daemon on a loopback port,

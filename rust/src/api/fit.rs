@@ -222,6 +222,17 @@ pub enum FitError {
         outer: usize,
         last_good: Option<Box<Checkpoint>>,
     },
+    /// An out-of-core block read failed at outer boundary `outer` (disk
+    /// fault, truncated store, …). The run stops at the boundary where the
+    /// fault was observed; `last_good` is the newest resume point taken
+    /// *before* it (the monitor checks for read faults before any probe
+    /// sees the boundary, so checkpoints never capture post-fault state).
+    /// Resume from it once the store is readable again.
+    ReadFault {
+        outer: usize,
+        detail: String,
+        last_good: Option<Box<Checkpoint>>,
+    },
 }
 
 impl std::fmt::Display for FitError {
@@ -247,6 +258,18 @@ impl std::fmt::Display for FitError {
                 match last_good {
                     Some(ck) => format!(" (last-good checkpoint at outer {})", ck.outer),
                     None => " (no checkpoint taken before divergence)".to_string(),
+                }
+            ),
+            FitError::ReadFault {
+                outer,
+                detail,
+                last_good,
+            } => write!(
+                f,
+                "out-of-core read failed at outer {outer}: {detail}{}",
+                match last_good {
+                    Some(ck) => format!(" (last-good checkpoint at outer {})", ck.outer),
+                    None => " (no checkpoint taken before the fault)".to_string(),
                 }
             ),
         }
@@ -282,6 +305,8 @@ pub struct Fit<'d> {
     resume: Option<Arc<Checkpoint>>,
     checkpoint: Option<(usize, PathBuf)>,
     checkpoint_keep: usize,
+    checkpoint_keep_best: bool,
+    block_align: Option<usize>,
 }
 
 impl<'d> Fit<'d> {
@@ -324,6 +349,8 @@ impl<'d> Fit<'d> {
             resume: None,
             checkpoint: None,
             checkpoint_keep: 0,
+            checkpoint_keep_best: false,
+            block_align: None,
         }
     }
 
@@ -347,6 +374,7 @@ impl<'d> Fit<'d> {
         fit.max_outer = ck.opts.max_outer;
         fit.n_threads = ck.opts.n_threads;
         fit.feature_mask = ck.opts.feature_mask.clone().map(Arc::new);
+        fit.block_align = ck.opts.block_align;
         fit.resume = Some(Arc::new(ck));
         Ok(fit)
     }
@@ -514,6 +542,30 @@ impl<'d> Fit<'d> {
         self
     }
 
+    /// Also keep the lowest-objective periodic checkpoint as a
+    /// `<path>.best` sibling, orthogonal to the newest-N retention of
+    /// [`Fit::checkpoint_keep`] (which only looks at recency — relevant
+    /// for Shotgun, whose objective is not monotone).
+    pub fn checkpoint_keep_best(mut self, on: bool) -> Self {
+        self.checkpoint_keep_best = on;
+        self
+    }
+
+    /// Group permutations block-aligned with width `b`: the block visit
+    /// order is shuffled, then coordinates within each block — every
+    /// store block is touched in one contiguous stretch per epoch, so an
+    /// out-of-core run streams blocks instead of faulting them randomly.
+    /// Changes the coordinate visit order (a different but equally valid
+    /// uniform schedule), so it is trajectory-determining and persisted
+    /// in checkpoints. Off by default — the default order is the bitwise
+    /// conformance reference between in-memory and store-backed runs.
+    /// Applies to PCDN/CDN epoch permutations; Shotgun's iid draws are
+    /// unaffected.
+    pub fn block_align(mut self, b: usize) -> Self {
+        self.block_align = Some(b);
+        self
+    }
+
     // ---- terminals ----------------------------------------------------
 
     /// Validate everything and lower to the solver-internal
@@ -537,7 +589,9 @@ impl<'d> Fit<'d> {
         }
         if let Some((k, path)) = &self.checkpoint {
             probes.push(ProbeHandle::new(
-                CheckpointWriter::new(*k, path.clone()).keep(self.checkpoint_keep),
+                CheckpointWriter::new(*k, path.clone())
+                    .keep(self.checkpoint_keep)
+                    .keep_best(self.checkpoint_keep_best),
             ));
         }
         let probe = match probes.len() {
@@ -569,6 +623,7 @@ impl<'d> Fit<'d> {
             probe,
             fast_math: self.fast_math,
             resume: self.resume.clone(),
+            block_align: self.block_align,
         })
     }
 
@@ -601,6 +656,13 @@ impl<'d> Fit<'d> {
         if let Some((outer, _fval)) = result.diverged {
             return Err(FitError::Diverged {
                 outer,
+                last_good: last.latest().map(Box::new),
+            });
+        }
+        if let Some((outer, detail)) = result.read_fault.clone() {
+            return Err(FitError::ReadFault {
+                outer,
+                detail,
                 last_good: last.latest().map(Box::new),
             });
         }
@@ -660,6 +722,11 @@ impl<'d> Fit<'d> {
                     .to_string(),
             ));
         }
+        if self.block_align == Some(0) {
+            return Err(FitError::InvalidParam(
+                "block_align width must be ≥ 1".to_string(),
+            ));
+        }
         if self.n_threads == 0 {
             return Err(FitError::InvalidParam(
                 "threads must be ≥ 1 (1 = serial)".to_string(),
@@ -695,6 +762,32 @@ impl<'d> Fit<'d> {
         }
         if let Some(data) = self.data {
             let n = data.features();
+            if data.is_store_backed() {
+                // SCDN and TRON (and the runtime trainers behind them)
+                // address `data.x` wholesale — dense snapshots, Hessian
+                // products — which a store-backed dataset cannot serve
+                // column-by-column. The column-at-a-time solvers can.
+                match self.solver {
+                    SolverSel::Scdn { .. } | SolverSel::Tron => {
+                        return Err(FitError::InvalidParam(format!(
+                            "solver '{}' needs the dataset in memory — out-of-core \
+                             stores support pcdn, cdn and shotgun",
+                            self.solver.name()
+                        )));
+                    }
+                    SolverSel::Pcdn { .. }
+                    | SolverSel::Cdn { .. }
+                    | SolverSel::Shotgun { .. } => {}
+                }
+                if self.bundle_auto {
+                    return Err(FitError::InvalidParam(
+                        "bundle_auto estimates the Gram spectral radius from the \
+                         in-memory matrix — pass an explicit bundle size for \
+                         store-backed datasets"
+                            .to_string(),
+                    ));
+                }
+            }
             if let Some(m) = &self.feature_mask {
                 if m.len() != n {
                     return Err(FitError::MaskLength {
@@ -899,6 +992,19 @@ mod tests {
         // spec defer to the solver boundary, as documented).
         assert!(Fit::on(&d).solver(Pcdn { p: 24 }).options().is_ok());
         assert!(Fit::spec().solver(Pcdn { p: 10_000 }).options().is_ok());
+    }
+
+    #[test]
+    fn block_align_lowers_and_validates() {
+        let d = toy();
+        let o = Fit::on(&d).block_align(8).options().unwrap();
+        assert_eq!(o.block_align, Some(8));
+        let o = Fit::on(&d).options().unwrap();
+        assert_eq!(o.block_align, None);
+        assert!(matches!(
+            Fit::on(&d).block_align(0).options(),
+            Err(FitError::InvalidParam(_))
+        ));
     }
 
     #[test]

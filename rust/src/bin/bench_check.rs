@@ -21,6 +21,9 @@
 //! * `kernels` — the minimum unrolled-vs-scalar speedup over the gated
 //!   hot kernels (matvec scatter and Armijo probe) from
 //!   `BENCH_kernels.json`; **higher is better**.
+//! * `store` — the cached-vs-cold column-sweep speedup of the out-of-core
+//!   block store from `BENCH_store.json`; **higher is better** (the
+//!   bounded LRU cache must keep paying for itself).
 //!
 //! ```sh
 //! # history/ holds bench JSON files from previous CI runs
@@ -53,6 +56,8 @@ enum Metric {
     ServeP99,
     /// Minimum unrolled-vs-scalar hot-kernel speedup; higher is better.
     KernelSpeedup,
+    /// Out-of-core store cached-vs-cold sweep speedup; higher is better.
+    StoreCachedSpeedup,
 }
 
 impl Metric {
@@ -61,12 +66,18 @@ impl Metric {
             "epilogue" => Ok(Metric::EpilogueSpeedup),
             "serve" => Ok(Metric::ServeP99),
             "kernels" => Ok(Metric::KernelSpeedup),
-            other => Err(format!("unknown --metric '{other}' (epilogue|serve|kernels)")),
+            "store" => Ok(Metric::StoreCachedSpeedup),
+            other => Err(format!(
+                "unknown --metric '{other}' (epilogue|serve|kernels|store)"
+            )),
         }
     }
 
     fn higher_is_better(self) -> bool {
-        matches!(self, Metric::EpilogueSpeedup | Metric::KernelSpeedup)
+        matches!(
+            self,
+            Metric::EpilogueSpeedup | Metric::KernelSpeedup | Metric::StoreCachedSpeedup
+        )
     }
 
     fn label(self) -> String {
@@ -74,6 +85,7 @@ impl Metric {
             Metric::EpilogueSpeedup => format!("P={GATE_P} sharded speedup"),
             Metric::ServeP99 => "serve p99 latency".into(),
             Metric::KernelSpeedup => "min gated kernel unrolled speedup".into(),
+            Metric::StoreCachedSpeedup => "store cached-vs-cold speedup".into(),
         }
     }
 
@@ -89,6 +101,7 @@ impl Metric {
                 .as_f64(),
             Metric::ServeP99 => doc.get("p99_secs")?.as_f64(),
             Metric::KernelSpeedup => doc.get("min_unrolled_speedup")?.as_f64(),
+            Metric::StoreCachedSpeedup => doc.get("cached_speedup")?.as_f64(),
         }
     }
 }
@@ -152,7 +165,8 @@ fn main() {
     .opt(
         "metric",
         Some("epilogue"),
-        "gated metric: epilogue (speedup), serve (p99 latency), or kernels (min unrolled speedup)",
+        "gated metric: epilogue (speedup), serve (p99 latency), kernels (min unrolled \
+         speedup), or store (cached-vs-cold speedup)",
     )
     .opt("current", Some("BENCH_epilogue.json"), "current bench output")
     .opt("history", Some("bench_history"), "directory of prior bench JSON files")
@@ -319,6 +333,36 @@ mod tests {
         let hist = [1.6, 1.7, 1.8];
         assert!(check(Metric::KernelSpeedup, 1.75, &hist, 0.2).is_ok());
         assert!(check(Metric::KernelSpeedup, 1.2, &hist, 0.2).is_err());
+    }
+
+    const STORE_SAMPLE: &str = r#"{
+        "bench": "store",
+        "samples": 50000,
+        "features": 2048,
+        "block_size": 256,
+        "n_blocks": 8,
+        "cold_secs": 0.08,
+        "cached_secs": 0.002,
+        "cached_speedup": 40.0
+    }"#;
+
+    #[test]
+    fn extracts_the_store_speedup() {
+        let doc = Json::parse(STORE_SAMPLE).unwrap();
+        assert_eq!(Metric::StoreCachedSpeedup.extract(&doc), Some(40.0));
+        // Metrics don't cross-match other artifacts.
+        assert_eq!(
+            Metric::StoreCachedSpeedup.extract(&Json::parse(SAMPLE).unwrap()),
+            None
+        );
+        assert_eq!(
+            Metric::EpilogueSpeedup.extract(&Json::parse(STORE_SAMPLE).unwrap()),
+            None
+        );
+        // Higher is better: a faster cache passes, a slower one regresses.
+        let hist = [35.0, 40.0, 45.0];
+        assert!(check(Metric::StoreCachedSpeedup, 38.0, &hist, 0.2).is_ok());
+        assert!(check(Metric::StoreCachedSpeedup, 20.0, &hist, 0.2).is_err());
     }
 
     #[test]

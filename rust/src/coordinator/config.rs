@@ -47,6 +47,10 @@ pub enum DataSource {
     Analog(String),
     /// A LIBSVM text file on disk.
     LibsvmFile(String),
+    /// An out-of-core `PCDNCOL1` block store (see `crate::store`): only
+    /// labels and metadata are loaded up front; columns stream through a
+    /// bounded cache during training.
+    Store(String),
 }
 
 impl DataSource {
@@ -56,6 +60,11 @@ impl DataSource {
                 .map(|a| a.train())
                 .with_context(|| format!("unknown analog dataset '{name}'")),
             DataSource::LibsvmFile(path) => libsvm::read_file(path, None),
+            DataSource::Store(path) => crate::store::open_dataset(
+                std::path::Path::new(path),
+                &crate::store::StoreOptions::default(),
+            )
+            .map_err(|e| anyhow::anyhow!("store '{path}': {e}")),
         }
     }
 }
@@ -98,6 +107,9 @@ impl RunConfig {
             Some(Json::Str(name)) => DataSource::Analog(name.clone()),
             Some(obj) if obj.get("libsvm").is_some() => DataSource::LibsvmFile(
                 obj.get("libsvm").unwrap().as_str().context("libsvm path")?.to_string(),
+            ),
+            Some(obj) if obj.get("store").is_some() => DataSource::Store(
+                obj.get("store").unwrap().as_str().context("store path")?.to_string(),
             ),
             _ => bail!("config: missing dataset"),
         };
@@ -189,6 +201,18 @@ impl RunConfig {
         if t.l2_reg < 0.0 {
             bail!("l2_reg must be nonnegative");
         }
+        if matches!(self.data, DataSource::Store(_)) {
+            match self.solver {
+                SolverKind::Scdn
+                | SolverKind::ScdnAtomic
+                | SolverKind::Tron
+                | SolverKind::PcdnPjrt => bail!(
+                    "solver needs the dataset in memory — out-of-core stores support \
+                     pcdn, cdn and shotgun"
+                ),
+                SolverKind::Pcdn | SolverKind::Cdn | SolverKind::Shotgun => {}
+            }
+        }
         Ok(())
     }
 }
@@ -234,6 +258,24 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.solver, SolverKind::Shotgun);
         assert_eq!(cfg.train.bundle_size, 3);
+    }
+
+    #[test]
+    fn parse_store_source_and_solver_guard() {
+        let cfg = RunConfig::from_json(
+            r#"{"dataset": {"store": "/tmp/x.pcdncol"}, "solver": "pcdn"}"#,
+        )
+        .unwrap();
+        assert!(matches!(cfg.data, DataSource::Store(ref p) if p == "/tmp/x.pcdncol"));
+        for solver in ["scdn", "scdn-atomic", "tron", "pcdn-pjrt"] {
+            let text = format!(
+                r#"{{"dataset": {{"store": "/tmp/x.pcdncol"}}, "solver": "{solver}"}}"#
+            );
+            assert!(
+                RunConfig::from_json(&text).is_err(),
+                "{solver} must reject store-backed data"
+            );
+        }
     }
 
     #[test]

@@ -23,6 +23,22 @@ pub fn run(cfg: &RunConfig) -> Result<TrainResult> {
 /// Execute a run config on an already-loaded dataset (the CLI loads once
 /// and reuses the data for model saving / scoring afterwards).
 pub fn run_on(data: &crate::data::Dataset, cfg: &RunConfig) -> Result<TrainResult> {
+    // Belt-and-braces for hand-built configs: `RunConfig::validate` already
+    // rejects these pairings at parse time, but `run_on` accepts any
+    // dataset, including store-backed ones opened by the caller.
+    if data.is_store_backed() {
+        match cfg.solver {
+            SolverKind::Scdn
+            | SolverKind::ScdnAtomic
+            | SolverKind::Tron
+            | SolverKind::PcdnPjrt => anyhow::bail!(
+                "solver {:?} needs the dataset in memory — out-of-core stores support \
+                 pcdn, cdn and shotgun",
+                cfg.solver
+            ),
+            SolverKind::Pcdn | SolverKind::Cdn | SolverKind::Shotgun => {}
+        }
+    }
     crate::log_info!(
         "training {:?} on {} (s={}, n={}, sparsity={:.2}%)",
         cfg.solver,

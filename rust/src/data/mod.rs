@@ -10,13 +10,27 @@ pub mod synthetic;
 
 pub use sparse::{CscMat, CsrMat};
 
+use crate::linalg::kernels;
+use crate::store::block::{BlockStore, ColRef, ColumnSource};
+
 /// A supervised binary-classification dataset: design matrix `X ∈ R^{s×n}`
 /// (CSC) and labels `y ∈ {−1, +1}^s`.
+///
+/// The matrix lives either fully in RAM (`x`, the common case) or in an
+/// out-of-core [`BlockStore`] (`store`, opened via
+/// [`crate::store::open_dataset`]); when store-backed, `x` is a
+/// shape-correct empty placeholder and column access must go through the
+/// routing accessors ([`Dataset::col`], [`Dataset::dot_col`],
+/// [`Dataset::matvec`], [`Dataset::nnz`]), which dispatch to whichever
+/// backing is present with bit-identical arithmetic.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub name: String,
     pub x: CscMat,
     pub y: Vec<f64>,
+    /// Out-of-core backing, if any. `None` for every in-memory
+    /// construction path.
+    pub store: Option<BlockStore>,
 }
 
 impl Dataset {
@@ -30,6 +44,7 @@ impl Dataset {
             name: name.into(),
             x,
             y,
+            store: None,
         }
     }
 
@@ -43,12 +58,13 @@ impl Dataset {
             name: name.into(),
             x,
             y,
+            store: None,
         }
     }
 
     /// Mean squared error of a linear model (regression datasets).
     pub fn mse(&self, w: &[f64]) -> f64 {
-        let z = self.x.matvec(w);
+        let z = self.matvec(w);
         z.iter()
             .zip(&self.y)
             .map(|(zi, yi)| (zi - yi).powi(2))
@@ -68,7 +84,89 @@ impl Dataset {
 
     /// Fraction of *zero* entries (paper Table 2 "train Spa.").
     pub fn sparsity(&self) -> f64 {
-        1.0 - self.x.density()
+        if self.samples() == 0 || self.features() == 0 {
+            return 1.0;
+        }
+        1.0 - self.nnz() as f64 / (self.samples() as f64 * self.features() as f64)
+    }
+
+    /// Total nonzeros, whichever backing holds them.
+    pub fn nnz(&self) -> usize {
+        match &self.store {
+            Some(s) => ColumnSource::nnz(s),
+            None => self.x.nnz(),
+        }
+    }
+
+    /// Whether the matrix lives in an out-of-core [`BlockStore`] rather
+    /// than RAM. Store-backed datasets support exactly the column-at-a-
+    /// time access pattern coordinate descent needs; dense/row-major
+    /// consumers (TRON's Hessian-vector products, the PJRT dense path,
+    /// spectral bundle sizing) must reject them up front.
+    pub fn is_store_backed(&self) -> bool {
+        self.store.is_some()
+    }
+
+    /// The first block-read failure recorded by the backing store, if
+    /// any. Solvers poll this at outer boundaries to turn a mid-training
+    /// I/O fault into a typed abort instead of silently training on
+    /// empty columns.
+    pub fn store_read_error(&self) -> Option<String> {
+        self.store.as_ref().and_then(|s| s.read_error())
+    }
+
+    /// Column `j` as (sorted row indices, values), from whichever
+    /// backing holds it. Borrowed straight out of the matrix in memory;
+    /// a cache-pinning handle when store-backed.
+    #[inline]
+    pub fn col(&self, j: usize) -> ColRef<'_> {
+        match &self.store {
+            Some(s) => ColumnSource::col(s, j),
+            None => {
+                let (ri, vals) = self.x.col(j);
+                ColRef::Borrowed { ri, vals }
+            }
+        }
+    }
+
+    /// Dot product of column `j` with a dense vector — the same strict
+    /// sequential fold as [`CscMat::dot_col`], so in-memory and
+    /// store-backed runs agree bitwise.
+    #[inline]
+    pub fn dot_col(&self, j: usize, y: &[f64]) -> f64 {
+        debug_assert_eq!(y.len(), self.samples());
+        let c = self.col(j);
+        let (ri, v) = c.parts();
+        kernels::gather_dot(kernels::KernelMode::Scalar, ri, v, y)
+    }
+
+    /// Dense product `X w`, routed through whichever backing holds the
+    /// columns. The store-backed loop replicates [`CscMat::matvec`]
+    /// exactly (ascending `j`, skip zero weights, the same scatter
+    /// kernel) so the two paths are bitwise identical.
+    pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
+        if self.store.is_none() {
+            return self.x.matvec(w);
+        }
+        assert_eq!(w.len(), self.features());
+        let mut out = vec![0.0; self.samples()];
+        for (j, &wj) in w.iter().enumerate() {
+            if wj != 0.0 {
+                let c = self.col(j);
+                let (ri, v) = c.parts();
+                kernels::scatter_axpy(ri, v, wj, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Hint the backing store to start loading these columns' blocks in
+    /// the background. No-op in memory.
+    #[inline]
+    pub fn prefetch(&self, cols: &[usize]) {
+        if let Some(s) = &self.store {
+            ColumnSource::prefetch(s, cols);
+        }
     }
 
     /// Fraction of positive labels.
@@ -78,7 +176,7 @@ impl Dataset {
 
     /// Classification accuracy of a linear model `w` on this dataset.
     pub fn accuracy(&self, w: &[f64]) -> f64 {
-        let z = self.x.matvec(w);
+        let z = self.matvec(w);
         accuracy_of(&z, &self.y)
     }
 
@@ -89,29 +187,28 @@ impl Dataset {
     /// garbage. O(nnz) — called once per artifact write, never on a hot
     /// path.
     pub fn fingerprint(&self) -> u64 {
-        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-        const PRIME: u64 = 0x0000_0100_0000_01b3;
-        let mut h = OFFSET;
-        let mut eat = |bytes: &[u8]| {
-            for &b in bytes {
-                h ^= b as u64;
-                h = h.wrapping_mul(PRIME);
-            }
-        };
-        eat(&(self.samples() as u64).to_le_bytes());
-        eat(&(self.features() as u64).to_le_bytes());
+        // Store-backed: the stamp was computed over the same byte stream
+        // at ingest/write time and lives in the header — reading every
+        // block back just to rehash it would defeat the point of the
+        // store.
+        if let Some(s) = &self.store {
+            return s.fingerprint();
+        }
+        let mut h = Fnv1a::new();
+        h.eat(&(self.samples() as u64).to_le_bytes());
+        h.eat(&(self.features() as u64).to_le_bytes());
         for &yi in &self.y {
-            eat(&yi.to_bits().to_le_bytes());
+            h.eat(&yi.to_bits().to_le_bytes());
         }
         for j in 0..self.features() {
             let (ri, vals) = self.x.col(j);
-            eat(&(ri.len() as u64).to_le_bytes());
+            h.eat(&(ri.len() as u64).to_le_bytes());
             for (r, v) in ri.iter().zip(vals) {
-                eat(&r.to_le_bytes());
-                eat(&v.to_bits().to_le_bytes());
+                h.eat(&r.to_le_bytes());
+                h.eat(&v.to_bits().to_le_bytes());
             }
         }
-        h
+        h.finish()
     }
 
     /// Duplicate all samples `k` times (paper §5.4.1 data-size scaling).
@@ -125,7 +222,39 @@ impl Dataset {
             name: format!("{}x{}", self.name, k),
             x,
             y,
+            store: None,
         }
+    }
+}
+
+/// The incremental FNV-1a hasher behind [`Dataset::fingerprint`], shared
+/// with the streaming store ingest (`store::ingest`) so a store header
+/// carries the *same* stamp the in-memory loader would compute — without
+/// either side materializing the other's representation.
+#[derive(Clone, Debug)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    pub fn eat(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
     }
 }
 

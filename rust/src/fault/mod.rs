@@ -70,13 +70,18 @@ pub enum Site {
     PoolWorker = 6,
     /// Solver: the outer-boundary objective check in `RunMonitor`.
     SolverOuter = 7,
+    /// Out-of-core store: a demand block read from a `PCDNCOL1` file.
+    /// (Background prefetch reads bypass the hook — they retry on the
+    /// demand path anyway, and firing them would make hit counts depend
+    /// on prefetch-thread timing.)
+    BlockRead = 8,
     /// Reserved for the crate's own unit tests (never fired by
     /// production code, so in-process tests can't cross-talk).
     #[doc(hidden)]
-    TestOnly = 8,
+    TestOnly = 9,
 }
 
-const SITE_COUNT: usize = 9;
+const SITE_COUNT: usize = 10;
 
 const ALL_SITES: [Site; SITE_COUNT] = [
     Site::ClientConnect,
@@ -87,6 +92,7 @@ const ALL_SITES: [Site; SITE_COUNT] = [
     Site::ArtifactRead,
     Site::PoolWorker,
     Site::SolverOuter,
+    Site::BlockRead,
     Site::TestOnly,
 ];
 
@@ -101,6 +107,7 @@ impl fmt::Display for Site {
             Site::ArtifactRead => "artifact-read",
             Site::PoolWorker => "pool-worker",
             Site::SolverOuter => "solver-outer",
+            Site::BlockRead => "block-read",
             Site::TestOnly => "test-only",
         };
         f.write_str(s)

@@ -61,5 +61,6 @@ pub mod path;
 pub mod runtime;
 pub mod serve;
 pub mod solver;
+pub mod store;
 pub mod testutil;
 pub mod util;

@@ -162,7 +162,7 @@ impl<'a> L2SvmState<'a> {
 
     /// Rebuild from an explicit model.
     pub fn reset_from(&mut self, w: &[f64]) {
-        let z = self.data.x.matvec(w);
+        let z = self.data.matvec(w);
         for i in 0..self.data.samples() {
             self.b[i] = 1.0 - self.data.y[i] * z[i];
             self.refresh_sample(i);

@@ -137,7 +137,7 @@ impl<'a> LassoState<'a> {
 
     /// Rebuild from an explicit model.
     pub fn reset_from(&mut self, w: &[f64]) {
-        let z = self.data.x.matvec(w);
+        let z = self.data.matvec(w);
         for i in 0..self.data.samples() {
             self.r[i] = z[i] - self.data.y[i];
             self.grad_factor[i] = grad_factor_of(self.r[i]);

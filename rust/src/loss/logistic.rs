@@ -208,7 +208,7 @@ impl<'a> LogisticState<'a> {
 
     /// Rebuild all maintained quantities from an explicit model `w`.
     pub fn reset_from(&mut self, w: &[f64]) {
-        self.wx = self.data.x.matvec(w);
+        self.wx = self.data.matvec(w);
         for i in 0..self.data.samples() {
             self.refresh_sample(i);
         }

@@ -160,7 +160,8 @@ impl<'a> LossState<'a> {
     /// (needed for ℓ2-SVM where it can vanish; harmless for logistic).
     pub fn grad_hess_j(&self, j: usize) -> (f64, f64) {
         let data = self.data();
-        let (ri, vals) = data.x.col(j);
+        let col = data.col(j);
+        let (ri, vals) = col.parts();
         let gf = self.grad_factors();
         let hf = self.hess_factors();
         // §Perf: the hottest loop in the solver family (one gather pair per
@@ -238,7 +239,7 @@ impl<'a> LossState<'a> {
         let gf = self.grad_factors();
         let c = self.c();
         (0..data.features())
-            .map(|j| c * data.x.dot_col(j, gf))
+            .map(|j| c * data.dot_col(j, gf))
             .collect()
     }
 

@@ -10,7 +10,10 @@
 //! pcdn serve    --model model.bin --addr 127.0.0.1:8077 --threads 8 --watch 5
 //! pcdn path     --dataset a9a --n-lambdas 20 --ratio 0.01 [--cv 5]
 //! pcdn bench    --exp fig1 [--full] [--out bench_out]
+//! pcdn ingest   --dataset libsvm:train.svm --out train.pcdncol --block 4096
+//! pcdn train    --dataset store:train.pcdncol --store-cache 64 --block-align auto
 //! pcdn inspect  --dataset gisette
+//! pcdn inspect  --dataset store:train.pcdncol
 //! pcdn checkpoints run.ckpt
 //! pcdn artifacts [--dir artifacts]
 //! ```
@@ -40,8 +43,8 @@ fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         eprintln!(
-            "usage: pcdn <train|predict|serve|path|bench|inspect|checkpoints|artifacts> [flags]; \
-             --help for details"
+            "usage: pcdn <train|predict|serve|path|bench|ingest|inspect|checkpoints|artifacts> \
+             [flags]; --help for details"
         );
         std::process::exit(2);
     }
@@ -52,13 +55,14 @@ fn main() {
         "serve" => cmd_serve(args),
         "path" => cmd_path(args),
         "bench" => cmd_bench(args),
+        "ingest" => cmd_ingest(args),
         "inspect" => cmd_inspect(args),
         "checkpoints" => cmd_checkpoints(args),
         "artifacts" => cmd_artifacts(args),
         other => {
             eprintln!(
                 "unknown subcommand '{other}' \
-                 (train|predict|serve|path|bench|inspect|checkpoints|artifacts)"
+                 (train|predict|serve|path|bench|ingest|inspect|checkpoints|artifacts)"
             );
             2
         }
@@ -94,8 +98,25 @@ fn parse_objective(name: Option<&str>) -> Result<Objective, String> {
 fn parse_source(name: &str) -> DataSource {
     if let Some(p) = name.strip_prefix("libsvm:") {
         DataSource::LibsvmFile(p.to_string())
+    } else if let Some(p) = name.strip_prefix("store:") {
+        DataSource::Store(p.to_string())
     } else {
         DataSource::Analog(name.to_string())
+    }
+}
+
+/// Load a data source, honoring the CLI's store cache knobs when it is an
+/// out-of-core store (other sources ignore them).
+fn load_source(
+    src: &DataSource,
+    store_opts: &pcdn::store::StoreOptions,
+) -> anyhow::Result<pcdn::data::Dataset> {
+    match src {
+        DataSource::Store(path) => {
+            pcdn::store::open_dataset(Path::new(path), store_opts)
+                .map_err(|e| anyhow::anyhow!("store '{path}': {e}"))
+        }
+        other => other.load(),
     }
 }
 
@@ -155,10 +176,30 @@ fn cmd_train(args: Vec<String>) -> i32 {
             Some("0"),
             "also retain the last N per-outer checkpoint siblings (<path>.o<outer>)",
         )
+        .switch(
+            "checkpoint-keep-best",
+            "also retain the lowest-objective checkpoint (<path>.best)",
+        )
         .opt(
             "resume",
             None,
             "continue from this checkpoint (restores solver + options; bitwise)",
+        )
+        .opt(
+            "store-cache",
+            Some("64"),
+            "out-of-core stores: resident block cache capacity (blocks)",
+        )
+        .switch(
+            "no-prefetch",
+            "out-of-core stores: disable the background sequential prefetch thread",
+        )
+        .opt(
+            "block-align",
+            None,
+            "group epoch permutations block-contiguously: a width, or 'auto' \
+             (= the store's block size; changes the visit order, persisted in \
+             checkpoints; pcdn/cdn only)",
         )
         .opt(
             "on-divergence",
@@ -177,6 +218,17 @@ fn cmd_train(args: Vec<String>) -> i32 {
         eprintln!("--on-divergence: expected halt|rollback-halve (got '{on_div}')");
         return 2;
     }
+
+    // Out-of-core store knobs (ignored by in-memory sources).
+    let store_cache = flag_or_exit!(a.usize("store-cache"));
+    if store_cache == 0 {
+        eprintln!("--store-cache: capacity must be >= 1 block");
+        return 2;
+    }
+    let store_opts = pcdn::store::StoreOptions {
+        cache_blocks: store_cache,
+        prefetch: !a.flag("no-prefetch"),
+    };
 
     // --bundle: 'auto' defers to the spectral-radius bound (resolved once
     // the data is loaded, below); a number supersedes --p.
@@ -310,7 +362,7 @@ fn cmd_train(args: Vec<String>) -> i32 {
                 println!("dataset '{}' resolved from the checkpoint stamp", d.name);
                 d
             }
-            None => match cfg.data.load() {
+            None => match load_source(&cfg.data, &store_opts) {
                 Ok(d) => d,
                 Err(e) => {
                     eprintln!("{e:#}");
@@ -331,7 +383,11 @@ fn cmd_train(args: Vec<String>) -> i32 {
         let mut resume_writer: Option<Arc<CheckpointWriter>> = None;
         if every > 0 {
             let path = a.get("checkpoint").unwrap().to_string();
-            let writer = Arc::new(CheckpointWriter::new(every, path.clone()).keep(keep));
+            let writer = Arc::new(
+                CheckpointWriter::new(every, path.clone())
+                    .keep(keep)
+                    .keep_best(a.flag("checkpoint-keep-best")),
+            );
             resume_writer = Some(writer.clone());
             fit = fit.probe(ProbeHandle(writer));
             println!("checkpointing every {every} outer iteration(s) to {path}");
@@ -391,7 +447,11 @@ fn cmd_train(args: Vec<String>) -> i32 {
     let mut ckpt_writer: Option<Arc<CheckpointWriter>> = None;
     if every > 0 {
         let path = a.get("checkpoint").unwrap().to_string();
-        let writer = Arc::new(CheckpointWriter::new(every, path.clone()).keep(keep));
+        let writer = Arc::new(
+            CheckpointWriter::new(every, path.clone())
+                .keep(keep)
+                .keep_best(a.flag("checkpoint-keep-best")),
+        );
         ckpt_writer = Some(writer.clone());
         let handle = ProbeHandle(writer);
         cfg.train.probe = Some(match cfg.train.probe.take() {
@@ -401,7 +461,7 @@ fn cmd_train(args: Vec<String>) -> i32 {
         println!("checkpointing every {every} outer iteration(s) to {path}");
     }
 
-    let data = match cfg.data.load() {
+    let data = match load_source(&cfg.data, &store_opts) {
         Ok(d) => d,
         Err(e) => {
             eprintln!("{e:#}");
@@ -409,12 +469,43 @@ fn cmd_train(args: Vec<String>) -> i32 {
         }
     };
 
+    // --block-align: resolved after loading so 'auto' can read the store's
+    // block size. Resume ignores it — the checkpoint carries its own.
+    match a.get("block-align") {
+        None => {}
+        Some("auto") => match data.store.as_ref() {
+            Some(s) => {
+                let b = pcdn::store::ColumnSource::block_size(s);
+                println!("--block-align auto: using store block size {b}");
+                cfg.train.block_align = Some(b);
+            }
+            None => {
+                eprintln!("--block-align auto: needs a store-backed dataset (store:<path>)");
+                return 2;
+            }
+        },
+        Some(v) => match v.parse::<usize>() {
+            Ok(x) if x >= 1 => cfg.train.block_align = Some(x),
+            _ => {
+                eprintln!("--block-align: expected 'auto' or a positive integer (got '{v}')");
+                return 2;
+            }
+        },
+    }
+
     // --bundle auto needs the data, so it resolves here rather than in the
     // dataset-free option lowering above. The estimate is serial and
     // data-only, so a re-run resolves the same P* bitwise; the resolved
     // size flows into the checkpoint's SavedOptions, so resumed runs
     // replay it without re-estimating.
     if bundle_auto {
+        if data.is_store_backed() {
+            eprintln!(
+                "--bundle auto: estimates rho(XtX) from the in-memory matrix — pass an \
+                 explicit bundle size for store-backed data"
+            );
+            return 2;
+        }
         let rho = power::spectral_radius_xtx(&data.x, 300, 1e-9);
         let p_star = power::adaptive_bundle_size(&data.x, None);
         println!(
@@ -427,6 +518,10 @@ fn cmd_train(args: Vec<String>) -> i32 {
     // Success epilogue shared by the first run and divergence retries.
     let finish = |r: &pcdn::solver::TrainResult, cfg: &RunConfig| -> i32 {
         println!("{}", summarize(r));
+        if let Some(s) = &data.store {
+            let (hits, misses) = s.cache_stats();
+            println!("store cache: {hits} hit(s), {misses} miss(es)");
+        }
         if let Some(w) = &ckpt_writer {
             if let Some(e) = w.last_error.lock().unwrap().as_ref() {
                 eprintln!("warning: checkpoint write(s) failed: {e}");
@@ -463,6 +558,16 @@ fn cmd_train(args: Vec<String>) -> i32 {
             return 1;
         }
     };
+    if let Some((outer, detail)) = &r.read_fault {
+        eprintln!("training aborted: out-of-core read failed at outer {outer}: {detail}");
+        if every > 0 {
+            eprintln!(
+                "(the checkpoint file holds the last state written before the fault; \
+                 resume with --resume once the store is readable again)"
+            );
+        }
+        return 1;
+    }
     let Some((outer, _)) = r.diverged else {
         return finish(&r, &cfg);
     };
@@ -1076,20 +1181,147 @@ fn cmd_bench(args: Vec<String>) -> i32 {
     0
 }
 
-fn cmd_inspect(args: Vec<String>) -> i32 {
-    let cli = Cli::new("pcdn inspect", "dataset statistics")
-        .opt("dataset", Some("real-sim"), "analog name or libsvm:<path>");
+fn cmd_ingest(args: Vec<String>) -> i32 {
+    let cli = Cli::new(
+        "pcdn ingest",
+        "convert a dataset to an out-of-core PCDNCOL1 block store",
+    )
+    .opt(
+        "dataset",
+        None,
+        "libsvm:<path> (two-pass streaming, bounded memory) or an analog name",
+    )
+    .opt("out", None, "output store path (required)")
+    .opt("block", Some("4096"), "features per block B")
+    .opt(
+        "budget-mb",
+        Some("256"),
+        "write-pass memory budget in MiB (libsvm source only)",
+    )
+    .opt("name", None, "dataset name stamped in the header");
     let a = cli.parse_from(args).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
     });
-    match parse_source(a.get("dataset").unwrap()).load() {
+    let Some(out) = a.get("out") else {
+        eprintln!("--out is required");
+        return 2;
+    };
+    let Some(src) = a.get("dataset") else {
+        eprintln!("--dataset is required");
+        return 2;
+    };
+    let block = flag_or_exit!(a.usize("block"));
+    if block == 0 {
+        eprintln!("--block: features per block must be >= 1");
+        return 2;
+    }
+    if let Some(path) = src.strip_prefix("libsvm:") {
+        let budget_mb = flag_or_exit!(a.usize("budget-mb"));
+        let opts = pcdn::store::IngestOptions {
+            block_size: block,
+            budget_bytes: budget_mb.max(1) << 20,
+            name: a.get("name").map(String::from),
+        };
+        match pcdn::store::ingest_libsvm(Path::new(path), Path::new(out), &opts) {
+            Ok(rep) => {
+                println!("ingested {path} -> {out}");
+                println!(
+                    "rows {}  features {}  nnz {}  ({} block(s) of {}, {} write group(s))",
+                    rep.rows, rep.cols, rep.nnz, rep.n_blocks, rep.block_size, rep.groups
+                );
+                println!("fingerprint: {:#018x}", rep.fingerprint);
+                0
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                1
+            }
+        }
+    } else {
+        // In-memory sources (analogs, or anything the loader accepts) go
+        // through the non-streaming writer.
+        let mut d = match parse_source(src).load() {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 1;
+            }
+        };
+        if let Some(n) = a.get("name") {
+            d.name = n.to_string();
+        }
+        match pcdn::store::write_store(&d, Path::new(out), block) {
+            Ok(m) => {
+                println!("wrote {out}");
+                println!(
+                    "rows {}  features {}  nnz {}  ({} block(s) of {})",
+                    m.rows, m.cols, m.nnz, m.n_blocks, m.block_size
+                );
+                println!("fingerprint: {:#018x}", m.fingerprint);
+                0
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                1
+            }
+        }
+    }
+}
+
+fn cmd_inspect(args: Vec<String>) -> i32 {
+    let cli = Cli::new("pcdn inspect", "dataset statistics")
+        .opt(
+            "dataset",
+            Some("real-sim"),
+            "analog name, libsvm:<path>, or store:<path>",
+        );
+    let a = cli.parse_from(args).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let src = a.get("dataset").unwrap();
+    // Stores are inspected from the header alone — no block is read, so
+    // this works instantly on stores far larger than RAM, and a truncated
+    // or corrupt file surfaces as a typed error, not a panic.
+    if let Some(path) = src.strip_prefix("store:") {
+        return match pcdn::store::read_meta(Path::new(path)) {
+            Ok(m) => {
+                let pos = m.y.iter().filter(|&&v| v > 0.0).count();
+                println!("store     : {path}");
+                println!("dataset   : {}", m.name);
+                println!("samples   : {}", m.rows);
+                println!("features  : {}", m.cols);
+                println!("nnz       : {}", m.nnz);
+                println!(
+                    "sparsity  : {:.4}%",
+                    if m.rows == 0 || m.cols == 0 {
+                        0.0
+                    } else {
+                        100.0 * (1.0 - m.nnz as f64 / (m.rows as f64 * m.cols as f64))
+                    }
+                );
+                println!(
+                    "pos rate  : {:.4}",
+                    if m.rows == 0 { 0.0 } else { pos as f64 / m.rows as f64 }
+                );
+                println!("blocks    : {} of {} feature(s)", m.n_blocks, m.block_size);
+                println!("fingerprint: {:#018x}", m.fingerprint);
+                0
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                1
+            }
+        };
+    }
+    match parse_source(src).load() {
         Ok(d) => {
             let rho = power::spectral_radius_xtx(&d.x, 300, 1e-9);
             println!("dataset   : {}", d.name);
             println!("samples   : {}", d.samples());
             println!("features  : {}", d.features());
-            println!("nnz       : {}", d.x.nnz());
+            println!("nnz       : {}", d.nnz());
             println!("sparsity  : {:.4}%", d.sparsity() * 100.0);
             println!("pos rate  : {:.4}", d.positive_rate());
             println!("fingerprint: {:#018x}", d.fingerprint());
@@ -1137,6 +1369,13 @@ fn cmd_checkpoints(args: Vec<String>) -> i32 {
                 println!("retained   : {} per-outer sibling(s)", retained.len());
                 for (outer, p) in &retained {
                     println!("  outer {:>6}  {}", outer, p.display());
+                }
+            }
+            let best_path = format!("{path}.best");
+            if Path::new(&best_path).is_file() {
+                match Checkpoint::load(Path::new(&best_path)) {
+                    Ok(b) => println!("best       : outer {} ({best_path})", b.outer),
+                    Err(e) => eprintln!("warning: {best_path}: {e}"),
                 }
             }
             0

@@ -73,7 +73,8 @@ pub fn margins(data: &Dataset, w: &[f64]) -> Vec<f64> {
         if wj == 0.0 {
             continue;
         }
-        let (ri, vals) = data.x.col(j);
+        let col = data.col(j);
+        let (ri, vals) = col.parts();
         for (r, v) in ri.iter().zip(vals) {
             z[*r as usize] += wj * v;
         }
@@ -107,7 +108,8 @@ pub fn dense_gradient(data: &Dataset, obj: Objective, c: f64, w: &[f64], l2: f64
         .collect();
     (0..data.features())
         .map(|j| {
-            let (ri, vals) = data.x.col(j);
+            let col = data.col(j);
+            let (ri, vals) = col.parts();
             let mut g = 0.0;
             for (r, v) in ri.iter().zip(vals) {
                 g += gf[*r as usize] * v;
@@ -128,7 +130,8 @@ pub fn dense_grad_hess_j(
     j: usize,
 ) -> (f64, f64) {
     let z = margins(data, w);
-    let (ri, vals) = data.x.col(j);
+    let col = data.col(j);
+    let (ri, vals) = col.parts();
     let mut g = 0.0;
     let mut h = 0.0;
     for (r, v) in ri.iter().zip(vals) {

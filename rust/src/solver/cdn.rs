@@ -96,7 +96,7 @@ impl Solver for Cdn {
 
         loop {
             outer += 1;
-            let perm = rng.permutation(n);
+            let perm = crate::solver::draw_permutation(&mut rng, n, opts.block_align);
             let mut m_this = 0.0f64;
 
             for &j in &perm {
@@ -150,7 +150,10 @@ impl Solver for Cdn {
                 // 1-D line search: dᵀx_i = d·x_ij on the column support, so
                 // probe at α by scaling the *column* with α·d — no scratch.
                 let t_ls = Stopwatch::start();
-                let (ri, vals) = data.x.col(j);
+                // The column handle stays alive through the probes and the
+                // commit (it may pin a cached store block).
+                let col = data.col(j);
+                let (ri, vals) = col.parts();
                 let mut alpha = 1.0f64;
                 let mut accepted = false;
                 let mut steps = 0usize;

@@ -52,8 +52,12 @@ use crate::util::codec::{ByteReader, ByteWriter, CodecError};
 use crate::util::rng::{Pcg64, RngState};
 
 /// On-disk magic + newest writer version.
+///
+/// Version history: v1 is the original layout; v2 appends an optional
+/// `block_align` tail (see [`SavedOptions::block_align`]). v1 documents
+/// remain readable — the tail is simply absent.
 const MAGIC: &[u8; 8] = b"PCDNCKP1";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// The subset of [`TrainOptions`] that determines a run's trajectory.
 /// Stored in the checkpoint and restored by `api::Fit::resume` so a
@@ -72,6 +76,10 @@ pub struct SavedOptions {
     pub armijo: ArmijoParams,
     /// The active-feature mask, when the run was screened (`path` driver).
     pub feature_mask: Option<Vec<bool>>,
+    /// Block-aligned permutation width (out-of-core runs). Changes the
+    /// coordinate visit order, so it is trajectory-determining. Stored as
+    /// a v2 tail; v1 checkpoints read back as `None`.
+    pub block_align: Option<usize>,
 }
 
 impl SavedOptions {
@@ -87,6 +95,7 @@ impl SavedOptions {
             stop: opts.stop,
             armijo: opts.armijo,
             feature_mask: opts.feature_mask.as_ref().map(|m| (**m).clone()),
+            block_align: opts.block_align,
         }
     }
 }
@@ -108,7 +117,7 @@ impl DataStamp {
             name: data.name.clone(),
             samples: data.samples(),
             features: data.features(),
-            nnz: data.x.nnz(),
+            nnz: data.nnz(),
             fingerprint: data.fingerprint(),
         }
     }
@@ -302,6 +311,9 @@ impl Checkpoint {
             o.max_outer,
             if o.shrinking { ", shrinking" } else { "" }
         ));
+        if let Some(b) = o.block_align {
+            s.push_str(&format!("align      : block-aligned permutations, B = {b}\n"));
+        }
         s.push_str(&format!(
             "stop       : {}\n",
             crate::api::model::stop_rule_string(o.stop)
@@ -427,11 +439,21 @@ impl Checkpoint {
                 w.put_f64(*pg0);
             }
         }
+        // v2 tail: block-aligned permutation width. Appended last so v1
+        // readers (which would reject version 2 anyway) and the v1 layout
+        // stay byte-identical up to this point.
+        match self.opts.block_align {
+            Some(b) => {
+                w.put_bool(true);
+                w.put_usize(b);
+            }
+            None => w.put_bool(false),
+        }
         w.into_bytes()
     }
 
     pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, CodecError> {
-        let (mut r, _version) = ByteReader::open(bytes, MAGIC, VERSION)?;
+        let (mut r, version) = ByteReader::open(bytes, MAGIC, VERSION)?;
         let solver = r.get_str()?;
         let objective = objective_of_tag(r.get_u8()?)?;
         let c = r.get_f64()?;
@@ -495,6 +517,16 @@ impl Checkpoint {
                 })
             }
         };
+        // v2 tail — absent from v1 documents, which decode as `None`.
+        let block_align = if version >= 2 {
+            if r.get_bool()? {
+                Some(r.get_usize()?)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
         r.finish()?;
         Ok(Checkpoint {
             solver,
@@ -510,6 +542,7 @@ impl Checkpoint {
                 stop,
                 armijo,
                 feature_mask,
+                block_align,
             },
             data,
             outer,
@@ -646,12 +679,24 @@ pub(crate) fn emit(
 /// newest `N` siblings survive — the new sibling is written (atomically)
 /// before any old one is deleted, so a crash mid-prune can only leave
 /// extra history behind, never less.
+///
+/// With [`CheckpointWriter::keep_best`] the writer additionally maintains
+/// a `<path>.best` sibling holding the lowest-objective periodic
+/// checkpoint seen so far — orthogonal to the newest-N policy, which only
+/// looks at recency. For monotone solvers (PCDN/CDN line search descends
+/// every accepted step) best ≈ newest; for stochastic Shotgun the
+/// objective can fluctuate and the best point may be long gone from the
+/// newest-N window.
 pub struct CheckpointWriter {
     every: usize,
     path: PathBuf,
     /// Retained `<path>.o<outer>` siblings to keep (0 = no retention,
     /// the single overwritten file only).
     keep: usize,
+    /// Maintain a `<path>.best` sibling with the lowest objective seen.
+    keep_best: bool,
+    /// The best (lowest) objective persisted to `<path>.best` so far.
+    best: Mutex<Option<f64>>,
     stamp: StampCache,
     pub last_error: Mutex<Option<String>>,
 }
@@ -662,6 +707,8 @@ impl CheckpointWriter {
             every: every.max(1),
             path: path.into(),
             keep: 0,
+            keep_best: false,
+            best: Mutex::new(None),
             stamp: StampCache::default(),
             last_error: Mutex::new(None),
         }
@@ -672,6 +719,15 @@ impl CheckpointWriter {
     /// retention.
     pub fn keep(mut self, n: usize) -> CheckpointWriter {
         self.keep = n;
+        self
+    }
+
+    /// Also keep the lowest-objective periodic checkpoint as a
+    /// `<path>.best` sibling (atomically overwritten on strict
+    /// improvement). Evaluated at the same `every`-th cadence as the main
+    /// file, using the full elastic-net objective `F_c(w) + λ₂/2·‖w‖²`.
+    pub fn keep_best(mut self, on: bool) -> CheckpointWriter {
+        self.keep_best = on;
         self
     }
 
@@ -725,6 +781,24 @@ impl Probe for CheckpointWriter {
         if let Err(e) = ck.save(&self.path) {
             self.record_error(e, &self.path);
             return;
+        }
+        if self.keep_best {
+            let obj =
+                crate::solver::objective_value_l2(view.state, view.w, view.opts.l2_reg);
+            let mut best = self
+                .best
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            if best.map_or(true, |b| obj < b) {
+                let Some(name) = self.path.file_name().and_then(|s| s.to_str()) else {
+                    return;
+                };
+                let best_path = self.path.with_file_name(format!("{name}.best"));
+                match ck.save(&best_path) {
+                    Ok(()) => *best = Some(obj),
+                    Err(e) => self.record_error(e, &best_path),
+                }
+            }
         }
         if self.keep == 0 {
             return;
@@ -800,7 +874,7 @@ impl StampCache {
                 if s.name == data.name
                     && s.samples == data.samples()
                     && s.features == data.features()
-                    && s.nnz == data.x.nnz() =>
+                    && s.nnz == data.nnz() =>
             {
                 s.clone()
             }
@@ -1047,6 +1121,83 @@ mod tests {
         std::fs::write(dir.join("other.ckpt.o5"), b"x").unwrap();
         let outers: Vec<usize> = retained_siblings(&base).iter().map(|(o, _)| *o).collect();
         assert_eq!(outers, vec![10, 20, 30]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn block_align_roundtrips_and_v1_reads_as_none() {
+        let d = toy();
+        let mut ck = sample_checkpoint(&d);
+        ck.opts.block_align = Some(4096);
+        let rt = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(rt.opts.block_align, Some(4096));
+        assert_eq!(ck, rt);
+        assert!(rt.summary().contains("block-aligned permutations, B = 4096"));
+        // A v1 document is the v2 bytes minus the one-byte absent tail,
+        // with version = 1 in the header (u32 LE after the 8-byte magic).
+        ck.opts.block_align = None;
+        let mut bytes = ck.to_bytes();
+        assert_eq!(&bytes[8..12], &2u32.to_le_bytes());
+        bytes[8..12].copy_from_slice(&1u32.to_le_bytes());
+        bytes.truncate(bytes.len() - 1);
+        let v1 = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(v1.opts.block_align, None);
+        assert_eq!(v1.outer, ck.outer);
+        assert_eq!(v1.w, ck.w);
+    }
+
+    #[test]
+    fn keep_best_tracks_lowest_objective_sibling() {
+        let d = toy();
+        let dir = std::env::temp_dir().join("pcdn_ckpt_keep_best_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("run.ckpt");
+        let best_path = dir.join("run.ckpt.best");
+        std::fs::remove_file(&best_path).ok();
+        let writer = CheckpointWriter::new(1, &base).keep_best(true);
+        let opts = TrainOptions::default();
+        let mut state = LossState::new(Objective::Logistic, &d, 1.0);
+
+        // Outer 1 at w = 0: objective = c·s·ln 2 ≈ 13.9, finite.
+        let w0 = vec![0.0; d.features()];
+        writer.on_resume_point(&CheckpointView {
+            solver: "pcdn",
+            outer: 1,
+            inner_iters: 0,
+            ls_steps: 0,
+            init_subgrad: None,
+            w: &w0,
+            state: &state,
+            opts: &opts,
+            rng: None,
+            extra: ExtraView::None,
+        });
+        // Outer 2 at a much worse point: ‖w‖₁ = 1e6 dominates any loss
+        // decrease, so the objective is strictly higher than at w = 0.
+        let mut w1 = vec![0.0; d.features()];
+        w1[0] = 1e6;
+        state.reset_from(&w1);
+        writer.on_resume_point(&CheckpointView {
+            solver: "pcdn",
+            outer: 2,
+            inner_iters: 0,
+            ls_steps: 0,
+            init_subgrad: None,
+            w: &w1,
+            state: &state,
+            opts: &opts,
+            rng: None,
+            extra: ExtraView::None,
+        });
+
+        // The main file always holds the newest point; the .best sibling
+        // stays pinned to the lower-objective outer 1.
+        let main = Checkpoint::load(&base).unwrap();
+        assert_eq!(main.outer, 2);
+        let best = Checkpoint::load(&best_path).unwrap();
+        assert_eq!(best.outer, 1);
+        assert_eq!(best.w, w0);
+        assert!(writer.last_error.lock().unwrap().is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -146,6 +146,17 @@ pub struct TrainOptions {
     /// fingerprint and `feature_mask` (validated before any state moves;
     /// `api::Fit::resume` surfaces mismatches as typed errors).
     pub resume: Option<std::sync::Arc<Checkpoint>>,
+    /// Group PCDN/CDN feature permutations by blocks of this many
+    /// consecutive features: the *block order* is drawn first, then each
+    /// block is shuffled internally, so a bundle touches few distinct
+    /// store blocks instead of scattering across the whole file.
+    /// `None` (the default) keeps the historical flat Fisher–Yates
+    /// permutation — and therefore the exact RNG stream every existing
+    /// replay is stated against. Typically set to the store's block size
+    /// (`--block-align auto`); valid, if pointless, in memory too.
+    /// Shotgun's i.i.d. draws are unaffected. Persisted in checkpoints
+    /// (v2) so a resume replays the same permutations.
+    pub block_align: Option<usize>,
 }
 
 impl Default for TrainOptions {
@@ -170,6 +181,7 @@ impl Default for TrainOptions {
             probe: None,
             fast_math: false,
             resume: None,
+            block_align: None,
         }
     }
 }
@@ -259,6 +271,12 @@ pub struct TrainResult {
     /// The boundary is never emitted to checkpoint probes, so the last
     /// written checkpoint is the last *good* state.
     pub diverged: Option<(usize, f64)>,
+    /// `Some((outer, detail))` when the run was aborted because the
+    /// out-of-core backing store recorded a block-read failure
+    /// (`Dataset::store_read_error`). Like divergence, the boundary is
+    /// never emitted to checkpoint probes — the last written checkpoint
+    /// is the last state computed entirely from real data.
+    pub read_fault: Option<(usize, String)>,
 }
 
 impl TrainResult {
@@ -271,6 +289,40 @@ impl TrainResult {
 pub trait Solver {
     fn name(&self) -> &'static str;
     fn train(&self, data: &Dataset, obj: Objective, opts: &TrainOptions) -> TrainResult;
+}
+
+/// Draw the outer-iteration feature permutation for PCDN/CDN, honouring
+/// [`TrainOptions::block_align`].
+///
+/// `None` is the historical flat `rng.permutation(n)` — same RNG
+/// consumption, same stream, so existing replays are untouched. With
+/// `Some(b)`, features are grouped into `⌈n/b⌉` consecutive blocks; the
+/// block *order* is drawn first, then each block's features are shuffled
+/// internally and concatenated. Still a uniform amount of shuffling work
+/// per outer, still seeded — but a bundle of `P` consecutive permutation
+/// entries now spans ~`⌈P/b⌉` store blocks instead of ~`P`.
+pub(crate) fn draw_permutation(
+    rng: &mut crate::util::rng::Pcg64,
+    n: usize,
+    block_align: Option<usize>,
+) -> Vec<usize> {
+    let b = match block_align {
+        None => return rng.permutation(n),
+        Some(b) => b.max(1),
+    };
+    if b >= n {
+        return rng.permutation(n);
+    }
+    let n_blocks = n.div_ceil(b);
+    let block_order = rng.permutation(n_blocks);
+    let mut out = Vec::with_capacity(n);
+    for blk in block_order {
+        let lo = blk * b;
+        let hi = (lo + b).min(n);
+        let within = rng.permutation(hi - lo);
+        out.extend(within.into_iter().map(|k| lo + k));
+    }
+    out
 }
 
 /// `F_c(w)` from a loss state and model (loss part is maintained; the ℓ1
@@ -337,6 +389,9 @@ pub(crate) struct RunMonitor {
     /// Set when `observe` saw a non-finite objective (see
     /// [`TrainResult::diverged`]).
     pub diverged: Option<(usize, f64)>,
+    /// Set when `observe` found a recorded block-read failure (see
+    /// [`TrainResult::read_fault`]).
+    pub read_fault: Option<(usize, String)>,
 }
 
 impl RunMonitor {
@@ -347,6 +402,7 @@ impl RunMonitor {
             init_subgrad: None,
             converged: false,
             diverged: None,
+            read_fault: None,
         }
     }
 
@@ -362,6 +418,15 @@ impl RunMonitor {
         opts: &TrainOptions,
         ls_steps: usize,
     ) -> bool {
+        // Out-of-core read-fault guard: a failed demand block read leaves
+        // a sticky error on the store and an empty column behind it, so
+        // everything computed since is suspect. Abort at this boundary
+        // WITHOUT notifying probes — the last emitted checkpoint stays
+        // the last state computed entirely from real data.
+        if let Some(detail) = state.data().store_read_error() {
+            self.read_fault = Some((outer, detail));
+            return true;
+        }
         let fval = crate::fault::poison(
             crate::fault::Site::SolverOuter,
             objective_value_l2(state, w, opts.l2_reg),
@@ -552,5 +617,48 @@ mod tests {
         assert!(!m.observe(1, &st, &w, &opts, 0));
         assert!(m.observe(2, &st, &w, &opts, 0));
         assert!(!m.converged);
+    }
+
+    #[test]
+    fn draw_permutation_none_is_the_historical_stream() {
+        use crate::util::rng::Pcg64;
+        for n in [0usize, 1, 7, 64] {
+            let mut a = Pcg64::new(11);
+            let mut b = Pcg64::new(11);
+            assert_eq!(draw_permutation(&mut a, n, None), b.permutation(n));
+            // And the RNGs stay in lockstep afterwards.
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn draw_permutation_block_aligned_is_valid_and_grouped() {
+        use crate::util::rng::Pcg64;
+        for (n, blk) in [(10usize, 3usize), (12, 4), (7, 1), (5, 8), (64, 16)] {
+            let mut rng = Pcg64::new(5);
+            let perm = draw_permutation(&mut rng, n, Some(blk));
+            let mut seen = vec![false; n];
+            for &j in &perm {
+                assert!(!seen[j], "duplicate {j} (n={n}, blk={blk})");
+                seen[j] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "not a permutation");
+            // Each block's features form one contiguous run: collapsing
+            // consecutive equal block ids visits every block exactly once.
+            let mut runs: Vec<usize> = Vec::new();
+            for &j in &perm {
+                if runs.last() != Some(&(j / blk)) {
+                    runs.push(j / blk);
+                }
+            }
+            let mut sorted = runs.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(
+                runs.len(),
+                sorted.len(),
+                "a block appears in two runs: {runs:?} (n={n}, blk={blk})"
+            );
+        }
     }
 }

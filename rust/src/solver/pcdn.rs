@@ -167,12 +167,19 @@ impl Solver for Pcdn {
             // feature mask, the permutation is drawn over the full set (so
             // the draw schedule — and hence replay — does not depend on the
             // mask) and frozen features are filtered out before bundling.
-            let mut perm = rng.permutation(n);
+            let mut perm = crate::solver::draw_permutation(&mut rng, n, opts.block_align);
             if opts.feature_mask.is_some() {
                 perm.retain(|&j| opts.feature_active(j));
             }
-            for bundle in perm.chunks(p) {
+            data.prefetch(&perm[..p.min(perm.len())]);
+            for (bi, bundle) in perm.chunks(p).enumerate() {
                 inner_iters += 1;
+                // Warm the next bundle's store blocks while this one
+                // computes (no-op in memory).
+                let next_lo = (bi + 1) * p;
+                if next_lo < perm.len() {
+                    data.prefetch(&perm[next_lo..perm.len().min(next_lo + p)]);
+                }
                 let bp = bundle.len();
                 let n_chunks = degree.min(bp);
 
@@ -201,7 +208,8 @@ impl Solver for Pcdn {
                             let (d, delta) = feature_direction(st, wref, j, gamma, l2);
                             unsafe { *slots_ptr.get().add(k) = DirSlot { d, delta } };
                             if d != 0.0 {
-                                let (ri, v) = st.data().x.col(j);
+                                let col = st.data().col(j);
+                                let (ri, v) = col.parts();
                                 arena.accumulate(ri, v, d);
                             }
                         }
@@ -212,7 +220,8 @@ impl Solver for Pcdn {
                             feature_direction(&state, &w, j, opts.armijo.gamma, opts.l2_reg);
                         slots[k] = DirSlot { d, delta };
                         if d != 0.0 {
-                            let (ri, v) = data.x.col(j);
+                            let col = data.col(j);
+                            let (ri, v) = col.parts();
                             scratch.accumulate(ri, v, d);
                         }
                     }
@@ -378,6 +387,7 @@ pub(crate) fn finish(
         trace: monitor.trace,
         iter_records: records,
         diverged: monitor.diverged,
+        read_fault: monitor.read_fault,
     }
 }
 

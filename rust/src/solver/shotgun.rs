@@ -173,7 +173,8 @@ fn train_shotgun(
             commit.reset();
             for &(j, step) in &updates {
                 w[j] += step;
-                let (ri, vals) = data.x.col(j);
+                let col = data.col(j);
+                let (ri, vals) = col.parts();
                 commit.accumulate(ri, vals, step);
             }
             let epi_pool = pool

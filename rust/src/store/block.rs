@@ -1,0 +1,613 @@
+//! Block-resident column access: the [`ColumnSource`] abstraction, the
+//! [`BlockStore`] out-of-core implementation (bounded LRU block cache +
+//! background prefetch), and the [`ColRef`] column handle both the
+//! in-memory and on-disk paths hand to the solvers.
+//!
+//! ## Determinism contract
+//!
+//! A decoded block contains exactly the bytes the writer serialized from
+//! the equivalent `CscMat` columns, so every column read returns slices
+//! bitwise identical to `CscMat::col` — cache capacity, eviction order
+//! and prefetch timing can change *when* a block is read but never *what*
+//! a column contains. Training through a `BlockStore` is therefore
+//! bitwise identical to training in memory (asserted by the conformance
+//! battery in `rust/tests/store.rs`).
+//!
+//! ## Fault injection
+//!
+//! Demand reads (a solver thread missing the cache) pass
+//! [`fault::io_gate`] at [`Site::BlockRead`], so the chaos battery can
+//! fail a mid-training block read deterministically. The prefetch thread
+//! does *not* pass the hook — its reads race the demand path
+//! nondeterministically, and a prefetch failure is harmless (the demand
+//! read retries and surfaces the error). A failed demand read parks a
+//! sticky error on the store and returns an empty column; the solver's
+//! outer-boundary monitor checks the sticky slot and aborts the run with
+//! a typed error before emitting any further checkpoint, so the
+//! last-good checkpoint on disk stays intact.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::data::{CscMat, Dataset};
+use crate::fault::{self, Site};
+
+use super::format::{self, StoreError, StoreMeta};
+
+/// One decoded on-disk block: a CSC fragment covering columns
+/// `[first_col, first_col + col_ptr.len() - 1)`.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub first_col: usize,
+    /// Length `ncols + 1`; column `first_col + k` occupies
+    /// `col_ptr[k]..col_ptr[k + 1]`.
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Block {
+    /// Column `j` (absolute index) as (row ids, values).
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let k = j - self.first_col;
+        let (a, b) = (self.col_ptr[k], self.col_ptr[k + 1]);
+        (&self.row_idx[a..b], &self.vals[a..b])
+    }
+
+    /// Number of columns this block covers.
+    pub fn ncols(&self) -> usize {
+        self.col_ptr.len() - 1
+    }
+}
+
+/// A borrowed or cache-pinned column. `Cached` holds an `Arc` to its
+/// block, so a column stays valid even if the LRU evicts the block from
+/// the cache map while the solver is still using it.
+pub enum ColRef<'a> {
+    /// A plain slice borrow (the in-memory `CscMat` path).
+    Borrowed { ri: &'a [u32], vals: &'a [f64] },
+    /// A column inside a pinned decoded block (the `BlockStore` path).
+    Cached { blk: Arc<Block>, col: usize },
+}
+
+impl ColRef<'_> {
+    /// The column as (row ids, values) slices.
+    #[inline]
+    pub fn parts(&self) -> (&[u32], &[f64]) {
+        match self {
+            ColRef::Borrowed { ri, vals } => (ri, vals),
+            ColRef::Cached { blk, col } => blk.col(*col),
+        }
+    }
+
+    /// An empty column (the failed-read placeholder; see the module docs).
+    #[inline]
+    pub fn empty() -> ColRef<'static> {
+        ColRef::Borrowed { ri: &[], vals: &[] }
+    }
+}
+
+/// "Give me column `j`" — the seam the solvers train through. `CscMat`
+/// implements it trivially; [`BlockStore`] implements it with the block
+/// cache. `Dataset` routes its column accessors over whichever is
+/// present.
+pub trait ColumnSource {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn nnz(&self) -> usize;
+    /// Natural column-grouping granularity: bundle permutations aligned
+    /// to this stride touch the fewest blocks. In-memory sources report
+    /// their full width (one "block").
+    fn block_size(&self) -> usize;
+    fn col(&self, j: usize) -> ColRef<'_>;
+    /// Hint that `cols` will be read soon; no-op by default.
+    fn prefetch(&self, _cols: &[usize]) {}
+}
+
+impl ColumnSource for CscMat {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn nnz(&self) -> usize {
+        self.nnz()
+    }
+    fn block_size(&self) -> usize {
+        self.cols.max(1)
+    }
+    #[inline]
+    fn col(&self, j: usize) -> ColRef<'_> {
+        let (ri, vals) = CscMat::col(self, j);
+        ColRef::Borrowed { ri, vals }
+    }
+}
+
+/// Knobs for opening a [`BlockStore`].
+#[derive(Clone, Debug)]
+pub struct StoreOptions {
+    /// Maximum resident decoded blocks (clamped to ≥ 1). Peak column
+    /// memory is roughly `cache_blocks × block bytes` plus whatever the
+    /// solver currently pins.
+    pub cache_blocks: usize,
+    /// Run a background thread that decodes hinted blocks ahead of the
+    /// demand path (`ColumnSource::prefetch`).
+    pub prefetch: bool,
+}
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        StoreOptions {
+            cache_blocks: 64,
+            prefetch: true,
+        }
+    }
+}
+
+/// Bounded LRU over decoded blocks. Scan-min eviction: capacities are
+/// small (tens of blocks), so a scan beats maintaining an intrusive
+/// list.
+struct CacheState {
+    capacity: usize,
+    tick: u64,
+    map: HashMap<usize, (Arc<Block>, u64)>,
+}
+
+impl CacheState {
+    fn get(&mut self, id: usize) -> Option<Arc<Block>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(&id).map(|e| {
+            e.1 = tick;
+            e.0.clone()
+        })
+    }
+
+    fn contains(&self, id: usize) -> bool {
+        self.map.contains_key(&id)
+    }
+
+    fn insert(&mut self, id: usize, blk: Arc<Block>) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.map.get_mut(&id) {
+            e.1 = tick;
+            return;
+        }
+        while self.map.len() >= self.capacity {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    self.map.remove(&k);
+                }
+                None => break,
+            }
+        }
+        self.map.insert(id, (blk, tick));
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+fn lock<'m, T>(m: &'m Mutex<T>) -> std::sync::MutexGuard<'m, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// State shared with the prefetch thread. The thread holds an
+/// `Arc<Shared>` (not the whole store), so dropping the last
+/// [`BlockStore`] clone closes the request channel and the thread
+/// exits.
+struct Shared {
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    block_size: usize,
+    n_blocks: usize,
+    offsets: Vec<u64>,
+    cache: Mutex<CacheState>,
+}
+
+impl Shared {
+    fn block_cols(&self, id: usize) -> (usize, usize) {
+        format::block_cols(self.cols, self.block_size, id)
+    }
+
+    /// Read + decode block `id` through the given file handle (the
+    /// demand path and the prefetch thread each own one).
+    fn read_block_with(&self, f: &mut File, id: usize) -> Result<Arc<Block>, StoreError> {
+        let off = self.offsets[id];
+        let len = (self.offsets[id + 1] - off) as usize;
+        f.seek(SeekFrom::Start(off))
+            .map_err(|e| format::io_err(&self.path, e))?;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf)
+            .map_err(|e| format::io_err(&self.path, e))?;
+        let (lo, hi) = self.block_cols(id);
+        let blk = format::decode_block(&buf, lo, hi - lo, self.rows, &self.path)?;
+        Ok(Arc::new(blk))
+    }
+}
+
+struct StoreInner {
+    name: String,
+    nnz: usize,
+    fingerprint: u64,
+    shared: Arc<Shared>,
+    /// Demand-path file handle.
+    file: Mutex<File>,
+    /// Open request channel to the prefetch thread (None when prefetch
+    /// is disabled). Dropping it stops the thread.
+    prefetch_tx: Option<mpsc::Sender<Vec<usize>>>,
+    /// First demand-read failure, sticky until taken. The solver's
+    /// outer-boundary monitor polls this.
+    read_error: Mutex<Option<String>>,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+}
+
+/// Out-of-core column source over a `PCDNCOL1` file. Cheap to clone
+/// (`Arc` inside); clones share the cache, the sticky error slot and the
+/// prefetch thread.
+#[derive(Clone)]
+pub struct BlockStore {
+    inner: Arc<StoreInner>,
+}
+
+impl fmt::Debug for BlockStore {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "BlockStore({}: {}x{}, {} nnz, {} blocks of {})",
+            self.inner.shared.path.display(),
+            self.inner.shared.rows,
+            self.inner.shared.cols,
+            self.inner.nnz,
+            self.inner.shared.n_blocks,
+            self.inner.shared.block_size,
+        )
+    }
+}
+
+impl BlockStore {
+    /// Open a store. Returns the store and the decoded labels (which the
+    /// caller — usually [`open_dataset`] — owns).
+    pub fn open(path: &Path, opts: &StoreOptions) -> Result<(BlockStore, Vec<f64>), StoreError> {
+        let (mut meta, offsets) = format::read_store(path)?;
+        let y = std::mem::take(&mut meta.y);
+        let shared = Arc::new(Shared {
+            path: path.to_path_buf(),
+            rows: meta.rows,
+            cols: meta.cols,
+            block_size: meta.block_size,
+            n_blocks: meta.n_blocks,
+            offsets,
+            cache: Mutex::new(CacheState {
+                capacity: opts.cache_blocks.max(1),
+                tick: 0,
+                map: HashMap::new(),
+            }),
+        });
+        let file = File::open(path).map_err(|e| format::io_err(path, e))?;
+        let prefetch_tx = if opts.prefetch && meta.n_blocks > 0 {
+            let sh = shared.clone();
+            let mut pf = File::open(path).map_err(|e| format::io_err(path, e))?;
+            let (tx, rx) = mpsc::channel::<Vec<usize>>();
+            let spawned = std::thread::Builder::new()
+                .name("pcdn-store-prefetch".into())
+                .spawn(move || {
+                    while let Ok(ids) = rx.recv() {
+                        for id in ids {
+                            if id >= sh.n_blocks || lock(&sh.cache).contains(id) {
+                                continue;
+                            }
+                            // Prefetch failures are ignored: the demand
+                            // path retries the read and owns error
+                            // surfacing (and the fault hook).
+                            if let Ok(blk) = sh.read_block_with(&mut pf, id) {
+                                lock(&sh.cache).insert(id, blk);
+                            }
+                        }
+                    }
+                });
+            spawned.ok().map(|_| tx)
+        } else {
+            None
+        };
+        let store = BlockStore {
+            inner: Arc::new(StoreInner {
+                name: meta.name,
+                nnz: meta.nnz,
+                fingerprint: meta.fingerprint,
+                shared,
+                file: Mutex::new(file),
+                prefetch_tx,
+                read_error: Mutex::new(None),
+                cache_hits: AtomicU64::new(0),
+                cache_misses: AtomicU64::new(0),
+            }),
+        };
+        Ok((store, y))
+    }
+
+    /// Dataset name recorded at ingest.
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Path of the backing file.
+    pub fn path(&self) -> &Path {
+        &self.inner.shared.path
+    }
+
+    /// The header's content fingerprint (equal to
+    /// [`Dataset::fingerprint`] of the equivalent in-memory dataset).
+    pub fn fingerprint(&self) -> u64 {
+        self.inner.fingerprint
+    }
+
+    /// Number of on-disk blocks.
+    pub fn n_blocks(&self) -> usize {
+        self.inner.shared.n_blocks
+    }
+
+    /// `(cache hits, cache misses)` on the demand path since open.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (
+            self.inner.cache_hits.load(Ordering::Relaxed),
+            self.inner.cache_misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Drop every cached block (benchmarks: measure cold reads).
+    pub fn drop_cache(&self) {
+        lock(&self.inner.shared.cache).clear();
+    }
+
+    /// The sticky first demand-read failure, if any.
+    pub fn read_error(&self) -> Option<String> {
+        lock(&self.inner.read_error).clone()
+    }
+
+    /// Block `id` via cache, else a demand read (which passes the
+    /// [`Site::BlockRead`] fault hook).
+    fn demand_block(&self, id: usize) -> Result<Arc<Block>, StoreError> {
+        if let Some(blk) = lock(&self.inner.shared.cache).get(id) {
+            self.inner.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(blk);
+        }
+        self.inner.cache_misses.fetch_add(1, Ordering::Relaxed);
+        fault::io_gate(Site::BlockRead)
+            .map_err(|e| format::io_err(&self.inner.shared.path, e))?;
+        let blk = {
+            let mut f = lock(&self.inner.file);
+            self.inner.shared.read_block_with(&mut f, id)?
+        };
+        lock(&self.inner.shared.cache).insert(id, blk.clone());
+        Ok(blk)
+    }
+}
+
+impl ColumnSource for BlockStore {
+    fn rows(&self) -> usize {
+        self.inner.shared.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.inner.shared.cols
+    }
+
+    fn nnz(&self) -> usize {
+        self.inner.nnz
+    }
+
+    fn block_size(&self) -> usize {
+        self.inner.shared.block_size
+    }
+
+    fn col(&self, j: usize) -> ColRef<'_> {
+        debug_assert!(j < self.inner.shared.cols, "column {j} out of range");
+        let id = j / self.inner.shared.block_size;
+        match self.demand_block(id) {
+            Ok(blk) => ColRef::Cached { blk, col: j },
+            Err(e) => {
+                let mut slot = lock(&self.inner.read_error);
+                if slot.is_none() {
+                    *slot = Some(e.to_string());
+                }
+                // An empty column yields a finite no-op direction; the
+                // monitor aborts the run at the next outer boundary.
+                ColRef::empty()
+            }
+        }
+    }
+
+    fn prefetch(&self, cols: &[usize]) {
+        let Some(tx) = &self.inner.prefetch_tx else {
+            return;
+        };
+        let b = self.inner.shared.block_size;
+        let mut ids: Vec<usize> = Vec::new();
+        for &j in cols {
+            let id = j / b;
+            if !ids.contains(&id) {
+                ids.push(id);
+            }
+        }
+        if !ids.is_empty() {
+            let _ = tx.send(ids); // thread gone ⇒ hint dropped, harmless
+        }
+    }
+}
+
+/// Open a store as a [`Dataset`]: labels in memory, design matrix
+/// block-resident behind the store. The embedded `x` is an empty
+/// shape-correct `CscMat`, so shape accessors keep working; column
+/// access routes through [`Dataset::col`].
+pub fn open_dataset(path: &Path, opts: &StoreOptions) -> Result<Dataset, StoreError> {
+    let (store, y) = BlockStore::open(path, opts)?;
+    Ok(Dataset {
+        name: store.name().to_string(),
+        x: CscMat::zeros(store.rows(), ColumnSource::cols(&store)),
+        y,
+        store: Some(store),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::store::format::write_store;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pcdn_store_block_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn toy() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 40,
+                features: 17,
+                nnz_per_row: 5,
+                ..Default::default()
+            },
+            9,
+        )
+    }
+
+    fn assert_cols_bitwise(d: &Dataset, s: &BlockStore) {
+        for j in 0..d.features() {
+            let (ri, v) = d.x.col(j);
+            let c = ColumnSource::col(s, j);
+            let (sri, sv) = c.parts();
+            assert_eq!(ri, sri, "col {j} rows");
+            assert_eq!(
+                v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                sv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "col {j} values"
+            );
+        }
+    }
+
+    #[test]
+    fn columns_bitwise_across_block_sizes_and_caches() {
+        let d = toy();
+        for block in [1usize, 3, 8, 17, 64] {
+            let p = tmp(&format!("cols_b{block}.pcol"));
+            write_store(&d, &p, block).unwrap();
+            for cache in [1usize, 2, 1024] {
+                let (s, y) = BlockStore::open(
+                    &p,
+                    &StoreOptions {
+                        cache_blocks: cache,
+                        prefetch: false,
+                    },
+                )
+                .unwrap();
+                assert_eq!(y, d.y);
+                assert_cols_bitwise(&d, &s);
+                // Second pass exercises cache hits + eviction churn.
+                assert_cols_bitwise(&d, &s);
+                let (hits, misses) = s.cache_stats();
+                assert!(misses >= s.n_blocks() as u64);
+                if cache >= s.n_blocks() {
+                    assert!(hits > 0, "block {block} cache {cache}: no hits");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let d = toy();
+        let p = tmp("lru.pcol");
+        write_store(&d, &p, 2).unwrap(); // 9 blocks
+        let (s, _y) = BlockStore::open(
+            &p,
+            &StoreOptions {
+                cache_blocks: 2,
+                prefetch: false,
+            },
+        )
+        .unwrap();
+        let _ = ColumnSource::col(&s, 0); // block 0
+        let _ = ColumnSource::col(&s, 2); // block 1
+        let _ = ColumnSource::col(&s, 1); // block 0 again (hit, refreshes)
+        let _ = ColumnSource::col(&s, 4); // block 2: evicts block 1
+        let (hits0, _) = s.cache_stats();
+        let _ = ColumnSource::col(&s, 0); // block 0 should still be cached
+        let (hits1, _) = s.cache_stats();
+        assert_eq!(hits1, hits0 + 1, "block 0 was evicted out of LRU order");
+        let (_, miss0) = s.cache_stats();
+        let _ = ColumnSource::col(&s, 2); // block 1 was evicted: miss
+        let (_, miss1) = s.cache_stats();
+        assert_eq!(miss1, miss0 + 1);
+    }
+
+    #[test]
+    fn prefetch_warms_the_cache() {
+        let d = toy();
+        let p = tmp("prefetch.pcol");
+        write_store(&d, &p, 4).unwrap();
+        let (s, _y) = BlockStore::open(
+            &p,
+            &StoreOptions {
+                cache_blocks: 16,
+                prefetch: true,
+            },
+        )
+        .unwrap();
+        ColumnSource::prefetch(&s, &[0, 5, 9]);
+        // The hint is async; poll briefly for the blocks to land.
+        let want = 3u64;
+        for _ in 0..200 {
+            let _ = ColumnSource::col(&s, 0);
+            let _ = ColumnSource::col(&s, 5);
+            let _ = ColumnSource::col(&s, 9);
+            let (hits, _) = s.cache_stats();
+            if hits >= want {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_cols_bitwise(&d, &s);
+    }
+
+    #[test]
+    fn open_dataset_matches_source() {
+        let d = toy();
+        let p = tmp("open_dataset.pcol");
+        write_store(&d, &p, 5).unwrap();
+        let ds = open_dataset(&p, &StoreOptions::default()).unwrap();
+        assert_eq!(ds.samples(), d.samples());
+        assert_eq!(ds.features(), d.features());
+        assert_eq!(ds.nnz(), d.x.nnz());
+        assert_eq!(ds.y, d.y);
+        assert!(ds.is_store_backed());
+        assert_eq!(ds.fingerprint(), d.fingerprint());
+        // Column routing + matvec are bitwise.
+        let w: Vec<f64> = (0..d.features()).map(|j| (j as f64) * 0.1 - 0.5).collect();
+        let a = d.matvec(&w);
+        let b = ds.matvec(&w);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

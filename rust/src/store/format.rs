@@ -1,0 +1,536 @@
+//! The `PCDNCOL1` on-disk column-store format.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! ┌────────────────────────────────────────────────────────────┐
+//! │ header   magic "PCDNCOL1" + u32 version, then name, rows,  │
+//! │          cols, nnz, block_size, n_blocks, fingerprint, y   │
+//! ├────────────────────────────────────────────────────────────┤
+//! │ block 0  per column: u32 nnz, nnz×u32 row ids (sorted),    │
+//! │ block 1  nnz×u64 f64 bit patterns                          │
+//! │ ...      (block b covers columns [b·B, min((b+1)·B, n)))   │
+//! ├────────────────────────────────────────────────────────────┤
+//! │ footer   (n_blocks + 1) × u64 absolute byte offsets:       │
+//! │          offsets[b] = start of block b, offsets[n_blocks]  │
+//! │          = start of the footer itself                      │
+//! ├────────────────────────────────────────────────────────────┤
+//! │ trailer  u64 footer offset + magic "PCDNIDX1" (16 bytes)   │
+//! └────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! The trailer is fixed-size at the end of the file, so a reader finds
+//! the footer without scanning, and the footer locates every block and
+//! the header (`offsets[0]` is the header length) — opening a store is
+//! O(header + footer), never O(nnz). The header carries the same FNV-1a
+//! content fingerprint as [`crate::data::Dataset::fingerprint`], so
+//! model/checkpoint `DataStamp` validation works identically for
+//! store-backed and in-memory datasets.
+//!
+//! Values are stored as raw IEEE-754 bit patterns and row ids verbatim,
+//! which is what makes store-backed training *bitwise identical* to the
+//! in-memory path: a decoded block hands the solver exactly the slices
+//! `CscMat::col` would.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::data::sparse::RowCountOverflow;
+use crate::data::{CscMat, Dataset};
+use crate::util::codec::{ByteReader, ByteWriter};
+
+use super::block::Block;
+
+/// Store document magic.
+pub const MAGIC: &[u8; 8] = b"PCDNCOL1";
+/// Trailer magic marking the footer pointer at the end of the file.
+pub const INDEX_MAGIC: &[u8; 8] = b"PCDNIDX1";
+/// Newest format version this build writes.
+pub const VERSION: u32 = 1;
+/// Fixed trailer size: u64 footer offset + 8-byte index magic.
+pub const TRAILER_LEN: u64 = 16;
+
+/// Typed error for every store operation (open, block read, ingest).
+/// Corruption and truncation surface here — never as a panic.
+#[derive(Debug)]
+pub enum StoreError {
+    /// An OS-level I/O failure (open/seek/read/write).
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    /// Structurally invalid store content: bad magic, truncated region,
+    /// inconsistent index, out-of-range row ids.
+    Corrupt { path: PathBuf, detail: String },
+    /// LIBSVM text that does not parse (ingest), with a 1-based line.
+    Parse { line: usize, msg: String },
+    /// More rows than the u32 row-id storage can index (shared with the
+    /// in-memory construction paths).
+    Rows(RowCountOverflow),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io { path, source } => {
+                write!(f, "store i/o error on {}: {source}", path.display())
+            }
+            StoreError::Corrupt { path, detail } => {
+                write!(f, "corrupt store {}: {detail}", path.display())
+            }
+            StoreError::Parse { line, msg } => write!(f, "ingest: line {line}: {msg}"),
+            StoreError::Rows(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            StoreError::Rows(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<RowCountOverflow> for StoreError {
+    fn from(e: RowCountOverflow) -> Self {
+        StoreError::Rows(e)
+    }
+}
+
+pub(crate) fn io_err(path: &Path, source: std::io::Error) -> StoreError {
+    StoreError::Io {
+        path: path.to_path_buf(),
+        source,
+    }
+}
+
+pub(crate) fn corrupt(path: &Path, detail: impl Into<String>) -> StoreError {
+    StoreError::Corrupt {
+        path: path.to_path_buf(),
+        detail: detail.into(),
+    }
+}
+
+/// Decoded store header: everything `pcdn inspect` reports, plus the
+/// labels (which are O(rows) and must be RAM-resident for training
+/// anyway — the maintained per-sample loss quantities are the same
+/// size).
+#[derive(Clone, Debug)]
+pub struct StoreMeta {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Features per block `B` (the last block may be short).
+    pub block_size: usize,
+    pub n_blocks: usize,
+    /// FNV-1a content fingerprint, identical to what
+    /// [`Dataset::fingerprint`] computes over the equivalent in-memory
+    /// dataset.
+    pub fingerprint: u64,
+    pub y: Vec<f64>,
+}
+
+impl StoreMeta {
+    /// Column range `[lo, hi)` covered by block `id`.
+    pub fn block_cols(&self, id: usize) -> (usize, usize) {
+        block_cols(self.cols, self.block_size, id)
+    }
+}
+
+/// Number of blocks needed for `cols` features at `block_size` each.
+pub fn n_blocks_for(cols: usize, block_size: usize) -> usize {
+    assert!(block_size >= 1, "block size must be >= 1");
+    cols.div_ceil(block_size)
+}
+
+/// Column range `[lo, hi)` of block `id`.
+pub(crate) fn block_cols(cols: usize, block_size: usize, id: usize) -> (usize, usize) {
+    let lo = id * block_size;
+    let hi = ((id + 1) * block_size).min(cols);
+    (lo, hi)
+}
+
+/// Encode the header document. The encoding is length-stable in every
+/// field except `name`, so ingest can write a placeholder-fingerprint
+/// header first and rewrite it in place once the content hash is known.
+pub(crate) fn encode_header(meta: &StoreMeta) -> Vec<u8> {
+    let mut w = ByteWriter::new(MAGIC, VERSION);
+    w.put_str(&meta.name);
+    w.put_usize(meta.rows);
+    w.put_usize(meta.cols);
+    w.put_usize(meta.nnz);
+    w.put_usize(meta.block_size);
+    w.put_usize(meta.n_blocks);
+    w.put_u64(meta.fingerprint);
+    w.put_f64_slice(&meta.y);
+    w.into_bytes()
+}
+
+fn decode_header(bytes: &[u8], path: &Path) -> Result<StoreMeta, StoreError> {
+    let (mut r, _version) = ByteReader::open(bytes, MAGIC, VERSION)
+        .map_err(|e| corrupt(path, e.to_string()))?;
+    let mut field = || -> Result<StoreMeta, crate::util::codec::CodecError> {
+        let name = r.get_str()?;
+        let rows = r.get_usize()?;
+        let cols = r.get_usize()?;
+        let nnz = r.get_usize()?;
+        let block_size = r.get_usize()?;
+        let n_blocks = r.get_usize()?;
+        let fingerprint = r.get_u64()?;
+        let y = r.get_f64_vec()?;
+        Ok(StoreMeta {
+            name,
+            rows,
+            cols,
+            nnz,
+            block_size,
+            n_blocks,
+            fingerprint,
+            y,
+        })
+    };
+    let meta = field().map_err(|e| corrupt(path, e.to_string()))?;
+    r.finish().map_err(|e| corrupt(path, e.to_string()))?;
+    CscMat::check_rows(meta.rows)?;
+    if meta.block_size == 0 {
+        return Err(corrupt(path, "block size 0"));
+    }
+    if meta.n_blocks != n_blocks_for(meta.cols, meta.block_size) {
+        return Err(corrupt(
+            path,
+            format!(
+                "header claims {} blocks for {} columns at block size {}",
+                meta.n_blocks, meta.cols, meta.block_size
+            ),
+        ));
+    }
+    if meta.y.len() != meta.rows {
+        return Err(corrupt(
+            path,
+            format!("{} labels for {} rows", meta.y.len(), meta.rows),
+        ));
+    }
+    Ok(meta)
+}
+
+/// Open a store file and decode header + footer index (no block data is
+/// read). Returns the metadata and the `n_blocks + 1` absolute block
+/// offsets.
+pub fn read_store(path: &Path) -> Result<(StoreMeta, Vec<u64>), StoreError> {
+    let mut f = File::open(path).map_err(|e| io_err(path, e))?;
+    let len = f.metadata().map_err(|e| io_err(path, e)).map(|m| m.len())?;
+    if len < TRAILER_LEN {
+        return Err(corrupt(path, format!("file is {len} bytes, no room for a trailer")));
+    }
+    f.seek(SeekFrom::End(-(TRAILER_LEN as i64)))
+        .map_err(|e| io_err(path, e))?;
+    let mut trailer = [0u8; TRAILER_LEN as usize];
+    f.read_exact(&mut trailer).map_err(|e| io_err(path, e))?;
+    if &trailer[8..16] != INDEX_MAGIC {
+        return Err(corrupt(path, "bad trailer magic (truncated or not a PCDNCOL1 store)"));
+    }
+    let footer_off = u64::from_le_bytes(trailer[0..8].try_into().unwrap());
+    if footer_off > len - TRAILER_LEN {
+        return Err(corrupt(
+            path,
+            format!("footer offset {footer_off} beyond file end"),
+        ));
+    }
+    let footer_len = len - TRAILER_LEN - footer_off;
+    if footer_len % 8 != 0 || footer_len == 0 {
+        return Err(corrupt(path, format!("footer length {footer_len} is not a multiple of 8")));
+    }
+    let k = (footer_len / 8) as usize;
+    f.seek(SeekFrom::Start(footer_off))
+        .map_err(|e| io_err(path, e))?;
+    let mut raw = vec![0u8; footer_len as usize];
+    f.read_exact(&mut raw).map_err(|e| io_err(path, e))?;
+    let offsets: Vec<u64> = raw
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if offsets.windows(2).any(|w| w[0] > w[1]) {
+        return Err(corrupt(path, "block offsets are not ascending"));
+    }
+    if *offsets.last().unwrap() != footer_off {
+        return Err(corrupt(path, "footer self-offset does not match the trailer"));
+    }
+    let header_len = offsets[0];
+    if header_len > footer_off {
+        return Err(corrupt(path, "header extends past the footer"));
+    }
+    f.seek(SeekFrom::Start(0)).map_err(|e| io_err(path, e))?;
+    let mut header = vec![0u8; header_len as usize];
+    f.read_exact(&mut header).map_err(|e| io_err(path, e))?;
+    let meta = decode_header(&header, path)?;
+    if meta.n_blocks != k - 1 {
+        return Err(corrupt(
+            path,
+            format!("header claims {} blocks, footer indexes {}", meta.n_blocks, k - 1),
+        ));
+    }
+    Ok((meta, offsets))
+}
+
+/// Header-only open for `pcdn inspect`: metadata without touching any
+/// block bytes.
+pub fn read_meta(path: &Path) -> Result<StoreMeta, StoreError> {
+    read_store(path).map(|(m, _)| m)
+}
+
+/// Append one encoded column to a block buffer.
+pub(crate) fn encode_col(buf: &mut Vec<u8>, ri: &[u32], vals: &[f64]) {
+    debug_assert_eq!(ri.len(), vals.len());
+    buf.extend_from_slice(&(ri.len() as u32).to_le_bytes());
+    for r in ri {
+        buf.extend_from_slice(&r.to_le_bytes());
+    }
+    for v in vals {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Decode a block covering columns `[first_col, first_col + ncols)`.
+/// Validates lengths and the sorted-row invariant so a corrupt block
+/// surfaces as a typed error before the solver can index out of range.
+pub(crate) fn decode_block(
+    bytes: &[u8],
+    first_col: usize,
+    ncols: usize,
+    rows: usize,
+    path: &Path,
+) -> Result<Block, StoreError> {
+    let mut col_ptr = Vec::with_capacity(ncols + 1);
+    col_ptr.push(0usize);
+    let mut row_idx: Vec<u32> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    let mut pos = 0usize;
+    for k in 0..ncols {
+        if pos + 4 > bytes.len() {
+            return Err(corrupt(
+                path,
+                format!("block truncated at column {}", first_col + k),
+            ));
+        }
+        let nnz = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        let need = nnz.checked_mul(12);
+        if need.map(|n| pos + n > bytes.len()).unwrap_or(true) {
+            return Err(corrupt(
+                path,
+                format!("column {} claims {nnz} entries past block end", first_col + k),
+            ));
+        }
+        let mut prev: Option<u32> = None;
+        for c in bytes[pos..pos + 4 * nnz].chunks_exact(4) {
+            let r = u32::from_le_bytes(c.try_into().unwrap());
+            if (r as usize) >= rows || prev.is_some_and(|p| p >= r) {
+                return Err(corrupt(
+                    path,
+                    format!("column {}: row ids not sorted within [0, {rows})", first_col + k),
+                ));
+            }
+            prev = Some(r);
+            row_idx.push(r);
+        }
+        pos += 4 * nnz;
+        for c in bytes[pos..pos + 8 * nnz].chunks_exact(8) {
+            vals.push(f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())));
+        }
+        pos += 8 * nnz;
+        col_ptr.push(row_idx.len());
+    }
+    if pos != bytes.len() {
+        return Err(corrupt(
+            path,
+            format!("{} trailing bytes after block at column {first_col}", bytes.len() - pos),
+        ));
+    }
+    Ok(Block {
+        first_col,
+        col_ptr,
+        row_idx,
+        vals,
+    })
+}
+
+/// Write an in-memory dataset out as a `PCDNCOL1` store (the non-streaming
+/// writer: analog ingest, test fixtures; text files stream through
+/// [`super::ingest::ingest_libsvm`] instead). Routes column access through
+/// [`Dataset::col`], so re-blocking an already store-backed dataset works
+/// too. Returns the written metadata.
+pub fn write_store(
+    data: &Dataset,
+    path: &Path,
+    block_size: usize,
+) -> Result<StoreMeta, StoreError> {
+    assert!(block_size >= 1, "block size must be >= 1");
+    CscMat::check_rows(data.samples())?;
+    let cols = data.features();
+    let n_blocks = n_blocks_for(cols, block_size);
+    let meta = StoreMeta {
+        name: data.name.clone(),
+        rows: data.samples(),
+        cols,
+        nnz: data.nnz(),
+        block_size,
+        n_blocks,
+        fingerprint: data.fingerprint(),
+        y: data.y.clone(),
+    };
+    let header = encode_header(&meta);
+    let mut out =
+        std::io::BufWriter::new(File::create(path).map_err(|e| io_err(path, e))?);
+    out.write_all(&header).map_err(|e| io_err(path, e))?;
+    let mut offsets: Vec<u64> = Vec::with_capacity(n_blocks + 2);
+    offsets.push(header.len() as u64);
+    let mut buf = Vec::new();
+    for b in 0..n_blocks {
+        let (lo, hi) = block_cols(cols, block_size, b);
+        buf.clear();
+        for j in lo..hi {
+            let c = data.col(j);
+            let (ri, v) = c.parts();
+            encode_col(&mut buf, ri, v);
+        }
+        out.write_all(&buf).map_err(|e| io_err(path, e))?;
+        offsets.push(offsets.last().unwrap() + buf.len() as u64);
+    }
+    let footer_off = *offsets.last().unwrap();
+    for &o in &offsets {
+        out.write_all(&o.to_le_bytes()).map_err(|e| io_err(path, e))?;
+    }
+    out.write_all(&footer_off.to_le_bytes())
+        .map_err(|e| io_err(path, e))?;
+    out.write_all(INDEX_MAGIC).map_err(|e| io_err(path, e))?;
+    out.flush().map_err(|e| io_err(path, e))?;
+    Ok(meta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pcdn_store_format_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn toy() -> Dataset {
+        generate(
+            &SyntheticSpec {
+                samples: 30,
+                features: 13,
+                nnz_per_row: 4,
+                ..Default::default()
+            },
+            5,
+        )
+    }
+
+    #[test]
+    fn write_read_roundtrip_meta() {
+        let d = toy();
+        let p = tmp("roundtrip.pcol");
+        let meta = write_store(&d, &p, 4).unwrap();
+        let (got, offsets) = read_store(&p).unwrap();
+        assert_eq!(got.rows, d.samples());
+        assert_eq!(got.cols, d.features());
+        assert_eq!(got.nnz, d.x.nnz());
+        assert_eq!(got.block_size, 4);
+        assert_eq!(got.n_blocks, 4); // ceil(13 / 4)
+        assert_eq!(got.fingerprint, d.fingerprint());
+        assert_eq!(got.fingerprint, meta.fingerprint);
+        assert_eq!(got.y, d.y);
+        assert_eq!(offsets.len(), got.n_blocks + 1);
+        assert!(offsets.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn truncated_store_is_a_typed_error() {
+        let d = toy();
+        let p = tmp("truncated.pcol");
+        write_store(&d, &p, 4).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        for cut in [0, 8, 15, bytes.len() / 2, bytes.len() - 1] {
+            let pc = tmp("truncated_cut.pcol");
+            std::fs::write(&pc, &bytes[..cut]).unwrap();
+            let err = read_store(&pc).unwrap_err();
+            assert!(
+                matches!(err, StoreError::Corrupt { .. } | StoreError::Io { .. }),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_trailer_and_footer_rejected() {
+        let d = toy();
+        let p = tmp("corrupt.pcol");
+        write_store(&d, &p, 64).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Flip the index magic.
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff;
+        let pc = tmp("corrupt_magic.pcol");
+        std::fs::write(&pc, &bytes).unwrap();
+        assert!(matches!(
+            read_store(&pc).unwrap_err(),
+            StoreError::Corrupt { .. }
+        ));
+        // Point the footer offset past the end.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 16..n - 8].copy_from_slice(&(u64::MAX).to_le_bytes());
+        let pc = tmp("corrupt_footer.pcol");
+        std::fs::write(&pc, &bytes).unwrap();
+        assert!(matches!(
+            read_store(&pc).unwrap_err(),
+            StoreError::Corrupt { .. }
+        ));
+    }
+
+    #[test]
+    fn block_encode_decode_roundtrip() {
+        let d = toy();
+        let mut buf = Vec::new();
+        for j in 3..7 {
+            let (ri, v) = d.x.col(j);
+            encode_col(&mut buf, ri, v);
+        }
+        let blk = decode_block(&buf, 3, 4, d.samples(), Path::new("mem")).unwrap();
+        for j in 3..7 {
+            let (ri, v) = d.x.col(j);
+            let (bri, bv) = blk.col(j);
+            assert_eq!(ri, bri);
+            assert_eq!(
+                v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                bv.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_rows() {
+        // Row id out of range.
+        let mut buf = Vec::new();
+        encode_col(&mut buf, &[5], &[1.0]);
+        assert!(decode_block(&buf, 0, 1, 3, Path::new("mem")).is_err());
+        // Unsorted rows.
+        let mut buf = Vec::new();
+        encode_col(&mut buf, &[2, 1], &[1.0, 2.0]);
+        assert!(decode_block(&buf, 0, 1, 10, Path::new("mem")).is_err());
+        // Truncated payload.
+        let mut buf = Vec::new();
+        encode_col(&mut buf, &[1, 2], &[1.0, 2.0]);
+        buf.truncate(buf.len() - 3);
+        assert!(decode_block(&buf, 0, 1, 10, Path::new("mem")).is_err());
+    }
+}

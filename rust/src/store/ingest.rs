@@ -1,0 +1,456 @@
+//! Streaming LIBSVM → `PCDNCOL1` ingest in bounded memory.
+//!
+//! Text arrives row-major; the store is column-major. Rather than
+//! materialize the whole matrix (the thing the store exists to avoid),
+//! ingest runs a classic two-pass pipeline:
+//!
+//! 1. **Count pass** — stream the text once, validating every line with
+//!    the same rules as [`crate::data::libsvm::read`] (1-based strictly
+//!    increasing indices, zero values widen the feature space but store
+//!    nothing), collecting the labels and the per-column nonzero counts.
+//!    Row counts beyond the u32 row-id capacity surface as the typed
+//!    [`RowCountOverflow`](crate::data::sparse::RowCountOverflow) here.
+//! 2. **Write pass(es)** — group consecutive blocks under a memory
+//!    budget, and for each group rescan the text, scattering entries
+//!    into exactly-sized per-group CSC arrays (the count pass already
+//!    fixed every column's extent; rows arrive in ascending order, so
+//!    columns come out sorted with no post-sort). Each group's blocks
+//!    are encoded and appended, and the content fingerprint is folded
+//!    incrementally in the exact order of [`Dataset::fingerprint`]
+//!    (dims, label bits, then columns left to right) — so the stamp in
+//!    the store header equals what the in-memory loader would compute,
+//!    without ever holding the full matrix.
+//!
+//! Peak memory is `O(rows + cols + budget)`: labels + column counts +
+//! one group of columns. A wide-enough budget makes it one write pass;
+//! a tiny budget degrades gracefully to more text rescans.
+//!
+//! The header is written first with a zero fingerprint, then rewritten
+//! in place (same byte length) once the final hash is known.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::data::{CscMat, Fnv1a};
+
+use super::format::{self, StoreError, StoreMeta};
+
+/// Ingest knobs.
+#[derive(Clone, Debug)]
+pub struct IngestOptions {
+    /// Features per block `B`.
+    pub block_size: usize,
+    /// Approximate in-memory bytes for one write-pass group of columns.
+    pub budget_bytes: usize,
+    /// Dataset name stamped in the header (default: the source file stem).
+    pub name: Option<String>,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions {
+            block_size: 4096,
+            budget_bytes: 256 << 20,
+            name: None,
+        }
+    }
+}
+
+/// What ingest did (for the CLI report and tests).
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub block_size: usize,
+    pub n_blocks: usize,
+    /// Write-pass groups (= number of text rescans after the count pass).
+    pub groups: usize,
+    pub fingerprint: u64,
+}
+
+fn parse_err(line: usize, msg: impl Into<String>) -> StoreError {
+    StoreError::Parse {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Iterate the `idx:val` tokens of one LIBSVM line, applying the same
+/// validation as `data::libsvm::read`. Calls `entry(col0, val)` for each
+/// token (including explicit zeros — the caller decides storage).
+fn parse_line(
+    line: &str,
+    lineno: usize,
+    mut entry: impl FnMut(usize, f64),
+) -> Result<(), StoreError> {
+    let mut parts = line.split_whitespace();
+    let label_tok = parts.next().unwrap();
+    label_tok
+        .parse::<f64>()
+        .map_err(|_| parse_err(lineno, format!("bad label '{label_tok}'")))?;
+    let mut prev_idx = 0usize;
+    for tok in parts {
+        let (idx_s, val_s) = tok
+            .split_once(':')
+            .ok_or_else(|| parse_err(lineno, format!("expected idx:val, got '{tok}'")))?;
+        let idx: usize = idx_s
+            .parse()
+            .map_err(|_| parse_err(lineno, format!("bad index '{idx_s}'")))?;
+        if idx == 0 {
+            return Err(parse_err(lineno, "LIBSVM indices are 1-based, got 0"));
+        }
+        if idx <= prev_idx {
+            return Err(parse_err(
+                lineno,
+                format!("indices must be strictly increasing ({idx} after {prev_idx})"),
+            ));
+        }
+        prev_idx = idx;
+        let val: f64 = val_s
+            .parse()
+            .map_err(|_| parse_err(lineno, format!("bad value '{val_s}'")))?;
+        entry(idx - 1, val);
+    }
+    Ok(())
+}
+
+/// Stream the data lines of `src`, skipping blanks/comments, calling
+/// `row(lineno, line)` per data line.
+fn scan_lines(
+    src: &Path,
+    mut row: impl FnMut(usize, &str) -> Result<(), StoreError>,
+) -> Result<(), StoreError> {
+    let f = File::open(src).map_err(|e| format::io_err(src, e))?;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line.map_err(|e| format::io_err(src, e))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        row(lineno + 1, line)?;
+    }
+    Ok(())
+}
+
+/// Convert a LIBSVM text file to a `PCDNCOL1` store in bounded memory.
+pub fn ingest_libsvm(
+    src: &Path,
+    dst: &Path,
+    opts: &IngestOptions,
+) -> Result<IngestReport, StoreError> {
+    let block_size = opts.block_size.max(1);
+
+    // Pass 1: labels, per-column counts, full validation.
+    let mut y: Vec<f64> = Vec::new();
+    let mut col_nnz: Vec<usize> = Vec::new();
+    let mut nnz = 0usize;
+    scan_lines(src, |lineno, line| {
+        let label_tok = line.split_whitespace().next().unwrap();
+        let label: f64 = label_tok
+            .parse()
+            .map_err(|_| parse_err(lineno, format!("bad label '{label_tok}'")))?;
+        y.push(if label > 0.0 { 1.0 } else { -1.0 });
+        parse_line(line, lineno, |c, v| {
+            if c >= col_nnz.len() {
+                col_nnz.resize(c + 1, 0);
+            }
+            if v != 0.0 {
+                col_nnz[c] += 1;
+                nnz += 1;
+            }
+        })
+    })?;
+    CscMat::check_rows(y.len())?;
+    let rows = y.len();
+    let cols = col_nnz.len();
+    let n_blocks = format::n_blocks_for(cols, block_size);
+
+    // Fold the fingerprint prefix (dims + labels); columns fold as they
+    // are written, in order, across groups.
+    let mut fp = Fnv1a::new();
+    fp.eat(&(rows as u64).to_le_bytes());
+    fp.eat(&(cols as u64).to_le_bytes());
+    for &yi in &y {
+        fp.eat(&yi.to_bits().to_le_bytes());
+    }
+
+    let name = opts.name.clone().unwrap_or_else(|| {
+        src.file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "libsvm".into())
+    });
+    let mut meta = StoreMeta {
+        name,
+        rows,
+        cols,
+        nnz,
+        block_size,
+        n_blocks,
+        fingerprint: 0, // placeholder; rewritten in place below
+        y,
+    };
+    let header = format::encode_header(&meta);
+    let mut out =
+        std::io::BufWriter::new(File::create(dst).map_err(|e| format::io_err(dst, e))?);
+    out.write_all(&header).map_err(|e| format::io_err(dst, e))?;
+    let mut offsets: Vec<u64> = Vec::with_capacity(n_blocks + 1);
+    offsets.push(header.len() as u64);
+
+    // Pass 2: consecutive blocks grouped under the memory budget; one
+    // text rescan per group.
+    let mut groups = 0usize;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut b0 = 0usize;
+    while b0 < n_blocks {
+        // Grow the group while it fits (always take at least one block).
+        let mut b1 = b0;
+        let mut est = 0usize;
+        while b1 < n_blocks {
+            let (lo, hi) = format::block_cols(cols, block_size, b1);
+            let blk_bytes: usize = col_nnz[lo..hi]
+                .iter()
+                .map(|&c| 16 * c + 32)
+                .sum();
+            if b1 > b0 && est + blk_bytes > opts.budget_bytes {
+                break;
+            }
+            est += blk_bytes;
+            b1 += 1;
+        }
+        groups += 1;
+        let glo = format::block_cols(cols, block_size, b0).0;
+        let ghi = format::block_cols(cols, block_size, b1 - 1).1;
+
+        // Exact-size group CSC from the counts; rows arrive ascending,
+        // so columns come out sorted without a sort.
+        let mut col_ptr = vec![0usize; ghi - glo + 1];
+        for (k, &c) in col_nnz[glo..ghi].iter().enumerate() {
+            col_ptr[k + 1] = col_ptr[k] + c;
+        }
+        let group_nnz = col_ptr[ghi - glo];
+        let mut row_idx = vec![0u32; group_nnz];
+        let mut vals = vec![0f64; group_nnz];
+        let mut next = col_ptr.clone();
+        let mut row = 0usize;
+        scan_lines(src, |lineno, line| {
+            if row >= rows {
+                return Err(format::corrupt(src, "input grew between ingest passes"));
+            }
+            let r = row as u32;
+            let mut overflow = false;
+            parse_line(line, lineno, |c, v| {
+                if v != 0.0 && c >= glo && c < ghi {
+                    let k = next[c - glo];
+                    if k >= col_ptr[c - glo + 1] {
+                        overflow = true;
+                        return;
+                    }
+                    row_idx[k] = r;
+                    vals[k] = v;
+                    next[c - glo] = k + 1;
+                }
+            })?;
+            if overflow {
+                return Err(format::corrupt(src, "input changed between ingest passes"));
+            }
+            row += 1;
+            Ok(())
+        })?;
+        if row != rows || next[..] != col_ptr[1..] {
+            return Err(format::corrupt(src, "input changed between ingest passes"));
+        }
+
+        // Encode + fingerprint the group's blocks in column order.
+        for b in b0..b1 {
+            let (lo, hi) = format::block_cols(cols, block_size, b);
+            buf.clear();
+            for j in lo..hi {
+                let (a, e) = (col_ptr[j - glo], col_ptr[j - glo + 1]);
+                let ri = &row_idx[a..e];
+                let v = &vals[a..e];
+                fp.eat(&(ri.len() as u64).to_le_bytes());
+                for (r, x) in ri.iter().zip(v) {
+                    fp.eat(&r.to_le_bytes());
+                    fp.eat(&x.to_bits().to_le_bytes());
+                }
+                format::encode_col(&mut buf, ri, v);
+            }
+            out.write_all(&buf).map_err(|e| format::io_err(dst, e))?;
+            offsets.push(offsets.last().unwrap() + buf.len() as u64);
+        }
+        b0 = b1;
+    }
+
+    // Footer + trailer.
+    let footer_off = *offsets.last().unwrap();
+    for &o in &offsets {
+        out.write_all(&o.to_le_bytes())
+            .map_err(|e| format::io_err(dst, e))?;
+    }
+    out.write_all(&footer_off.to_le_bytes())
+        .map_err(|e| format::io_err(dst, e))?;
+    out.write_all(format::INDEX_MAGIC)
+        .map_err(|e| format::io_err(dst, e))?;
+    let mut file = out
+        .into_inner()
+        .map_err(|e| format::io_err(dst, e.into_error()))?;
+
+    // Rewrite the header in place with the real fingerprint (identical
+    // length: only the fixed-width fingerprint field changed).
+    meta.fingerprint = fp.finish();
+    let final_header = format::encode_header(&meta);
+    debug_assert_eq!(final_header.len(), header.len());
+    file.seek(SeekFrom::Start(0))
+        .map_err(|e| format::io_err(dst, e))?;
+    file.write_all(&final_header)
+        .map_err(|e| format::io_err(dst, e))?;
+    file.flush().map_err(|e| format::io_err(dst, e))?;
+
+    Ok(IngestReport {
+        rows,
+        cols,
+        nnz,
+        block_size,
+        n_blocks,
+        groups,
+        fingerprint: meta.fingerprint,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::libsvm;
+    use crate::store::block::{open_dataset, StoreOptions};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pcdn_store_ingest_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    const DOC: &str = "+1 1:0.5 3:2.0\n\
+                       -1 2:1.5 4:-0.25\n\
+                       # a comment line\n\
+                       \n\
+                       1 1:1.0 4:3.5\n\
+                       0 3:0.0 5:1.25\n";
+
+    #[test]
+    fn ingest_matches_in_memory_loader() {
+        let src = tmp("basic.svm");
+        std::fs::write(&src, DOC).unwrap();
+        let reference = libsvm::read_file(&src, None).unwrap();
+        for (block, budget) in [(2usize, usize::MAX), (1, 1), (64, 128), (3, 0)] {
+            let dst = tmp(&format!("basic_b{block}_m{budget}.pcol"));
+            let rep = ingest_libsvm(
+                &src,
+                &dst,
+                &IngestOptions {
+                    block_size: block,
+                    budget_bytes: budget,
+                    name: None,
+                },
+            )
+            .unwrap();
+            assert_eq!(rep.rows, reference.samples());
+            assert_eq!(rep.cols, reference.features());
+            assert_eq!(rep.nnz, reference.x.nnz());
+            assert_eq!(rep.fingerprint, reference.fingerprint());
+            let ds = open_dataset(&dst, &StoreOptions::default()).unwrap();
+            assert_eq!(ds.y, reference.y);
+            assert_eq!(ds.fingerprint(), reference.fingerprint());
+            for j in 0..reference.features() {
+                let (ri, v) = reference.x.col(j);
+                let c = ds.col(j);
+                let (sri, sv) = c.parts();
+                assert_eq!(ri, sri, "col {j}");
+                assert_eq!(
+                    v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    sv.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "col {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_budget_means_many_groups_same_bytes() {
+        let src = tmp("groups.svm");
+        std::fs::write(&src, DOC).unwrap();
+        let one = tmp("groups_one.pcol");
+        let many = tmp("groups_many.pcol");
+        let r1 = ingest_libsvm(
+            &src,
+            &one,
+            &IngestOptions {
+                block_size: 2,
+                budget_bytes: usize::MAX,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let r2 = ingest_libsvm(
+            &src,
+            &many,
+            &IngestOptions {
+                block_size: 2,
+                budget_bytes: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(r1.groups, 1);
+        assert_eq!(r2.groups, r2.n_blocks, "budget 1 should rescan per block");
+        assert_eq!(
+            std::fs::read(&one).unwrap(),
+            std::fs::read(&many).unwrap(),
+            "group boundaries must not change the bytes"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_with_line_numbers() {
+        for (doc, needle) in [
+            ("x 1:1\n", "bad label"),
+            ("+1 0:1\n", "1-based"),
+            ("+1 2:1 1:1\n", "strictly increasing"),
+            ("+1 1:abc\n", "bad value"),
+            ("+1 11\n", "expected idx:val"),
+        ] {
+            let src = tmp("bad.svm");
+            std::fs::write(&src, doc).unwrap();
+            let dst = tmp("bad.pcol");
+            let err = ingest_libsvm(&src, &dst, &IngestOptions::default()).unwrap_err();
+            match err {
+                StoreError::Parse { line, msg } => {
+                    assert_eq!(line, 1);
+                    assert!(msg.contains(needle), "{msg} vs {needle}");
+                }
+                other => panic!("expected Parse error, got {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_only_inputs() {
+        // Zero values widen the feature space but store nothing — same
+        // as the in-memory loader.
+        let src = tmp("zeros.svm");
+        std::fs::write(&src, "+1 7:0.0\n").unwrap();
+        let dst = tmp("zeros.pcol");
+        let rep = ingest_libsvm(&src, &dst, &IngestOptions::default()).unwrap();
+        assert_eq!((rep.rows, rep.cols, rep.nnz), (1, 7, 0));
+        let reference = libsvm::read_file(&src, None).unwrap();
+        assert_eq!(rep.fingerprint, reference.fingerprint());
+
+        let src = tmp("empty.svm");
+        std::fs::write(&src, "# nothing\n").unwrap();
+        let dst = tmp("empty.pcol");
+        let rep = ingest_libsvm(&src, &dst, &IngestOptions::default()).unwrap();
+        assert_eq!((rep.rows, rep.cols, rep.nnz, rep.n_blocks), (0, 0, 0, 0));
+    }
+}

@@ -1,0 +1,32 @@
+//! Out-of-core block column store: train on datasets larger than RAM.
+//!
+//! Coordinate-descent methods touch data one column (bundle) at a time,
+//! so only the columns of the *current* bundle need to be resident. This
+//! module exploits that access pattern to push the dataset to disk:
+//!
+//! * [`format`] — the versioned `PCDNCOL1` binary layout: a header
+//!   (dims, labels, content fingerprint), column-major blocks of `B`
+//!   features each (sorted-row CSC within a block), and a footer index
+//!   of per-block byte offsets so any block is one seek away.
+//! * [`ingest`] — streaming LIBSVM → store conversion in bounded memory
+//!   (two-pass: count, then write), exposed as `pcdn ingest`.
+//! * [`block`] — the [`ColumnSource`] trait ("give me column `j`"),
+//!   implemented trivially by the in-memory `CscMat` and by
+//!   [`BlockStore`], which backs it with a bounded LRU block cache and
+//!   a background prefetch thread that warms the next bundle's blocks.
+//!
+//! The conformance contract is **bitwise identity**: a store-backed run
+//! must produce exactly the same model bytes as the in-memory run,
+//! because the store preserves raw IEEE-754 value bits and the solvers
+//! perform arithmetic in the same order regardless of where a column's
+//! bytes came from. The header fingerprint is the same FNV-1a stamp
+//! `Dataset::fingerprint` computes, so checkpoint resume verification
+//! works unchanged across the in-memory/out-of-core boundary.
+
+pub mod block;
+pub mod format;
+pub mod ingest;
+
+pub use block::{open_dataset, Block, BlockStore, ColRef, ColumnSource, StoreOptions};
+pub use format::{n_blocks_for, read_meta, read_store, write_store, StoreError, StoreMeta};
+pub use ingest::{ingest_libsvm, IngestOptions, IngestReport};

@@ -463,6 +463,114 @@ fn injected_divergence_yields_last_good_checkpoint_and_bitwise_resume() {
     assert_eq!(full.result.outer_iters, resumed.result.outer_iters);
 }
 
+// ---- training: out-of-core read faults ----------------------------------
+
+#[test]
+fn injected_block_read_fault_aborts_typed_with_last_good_checkpoint() {
+    let _s = serial();
+    let d = toy(91);
+    let dir = std::env::temp_dir().join("pcdn_fault_store_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("chaos.pcdncol");
+    pcdn::store::write_store(&d, &path, 4).unwrap();
+    // Single-block cache, no prefetch: every block transition is a demand
+    // read through the `Site::BlockRead` gate, in a deterministic order
+    // (the gate only fires on cache misses, so its hit counter IS the
+    // miss counter).
+    let sopts = pcdn::store::StoreOptions {
+        cache_blocks: 1,
+        prefetch: false,
+    };
+
+    // Reference: the same configuration, in memory, no fault.
+    let full = Fit::on(&d)
+        .solver(Pcdn { p: 4 })
+        .threads(1)
+        .stop(StopRule::MaxOuter(12))
+        .max_outer(12)
+        .run()
+        .unwrap();
+
+    // Probe run: one outer through the store counts the demand misses up
+    // to (and including) the first checkpoint boundary. Scheduling the
+    // fault one miss past that provably lands it after outer 1's
+    // checkpoint but long before the 12-outer run finishes.
+    let first_outer_misses = {
+        let probe = pcdn::store::open_dataset(&path, &sopts).unwrap();
+        Fit::on(&probe)
+            .solver(Pcdn { p: 4 })
+            .threads(1)
+            .stop(StopRule::MaxOuter(1))
+            .max_outer(1)
+            .run()
+            .unwrap();
+        let (_, misses) = probe.store.as_ref().unwrap().cache_stats();
+        misses
+    };
+
+    let stored = pcdn::store::open_dataset(&path, &sopts).unwrap();
+    let plan = FaultPlan::new().at(
+        Site::BlockRead,
+        first_outer_misses + 1,
+        FaultAction::Fail,
+    );
+    let guard = fault::install(plan);
+    let err = match Fit::on(&stored)
+        .solver(Pcdn { p: 4 })
+        .threads(1)
+        .stop(StopRule::MaxOuter(12))
+        .max_outer(12)
+        .run()
+    {
+        Err(e) => e,
+        Ok(_) => panic!("{}: faulted store run should abort", guard.plan()),
+    };
+    let (outer, detail, last_good) = match err {
+        FitError::ReadFault {
+            outer,
+            detail,
+            last_good,
+        } => (outer, detail, last_good),
+        other => panic!("{}: expected ReadFault, got {other:?}", guard.plan()),
+    };
+    assert!(
+        detail.contains("injected fault"),
+        "{}: detail {detail:?} does not carry the read error",
+        guard.plan()
+    );
+    let ck: Checkpoint = *last_good
+        .unwrap_or_else(|| panic!("{}: no last-good checkpoint attached", guard.plan()));
+    assert!(
+        ck.outer >= 1 && ck.outer < outer,
+        "{}: last-good outer {} not in [1, {outer})",
+        guard.plan(),
+        ck.outer
+    );
+    assert!(
+        guard.hits(Site::BlockRead) > first_outer_misses + 1,
+        "{}: fault never reached",
+        guard.plan()
+    );
+    drop(guard);
+
+    // The faulted dataset carries the sticky read error; a fresh open of
+    // the same store is clean, and resuming the last-good checkpoint on
+    // it replays the remainder bitwise-identically to the in-memory run
+    // that was never interrupted.
+    assert!(
+        stored.store_read_error().is_some(),
+        "sticky read error missing after abort"
+    );
+    let fresh = pcdn::store::open_dataset(&path, &sopts).unwrap();
+    assert!(fresh.store_read_error().is_none());
+    let resumed = Fit::resume(&fresh, ck).unwrap().run().unwrap();
+    assert_eq!(
+        full.result.w, resumed.result.w,
+        "resume from last-good checkpoint diverged from the unfaulted reference"
+    );
+    assert_eq!(full.result.outer_iters, resumed.result.outer_iters);
+}
+
 // ---- randomized sweep ---------------------------------------------------
 
 /// Nightly knob: `PCDN_PROP_CASES` scales the number of derived plans,
